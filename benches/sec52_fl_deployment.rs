@@ -1,0 +1,66 @@
+//! §5.2 — Federated Learning Workflow deployment: the use-case trace. The
+//! coordinator must deploy `train` on each of the 8 Pis where its data
+//! lives (privacy=1), `firstaggregation` on the two edge servers (closest
+//! per set), and `secondaggregation` once on the cloud (reduce: 1).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use edgefaas::bench_harness::{measure, Stats, Table};
+use edgefaas::coordinator::appconfig::federated_learning_yaml;
+use edgefaas::simnet::RealClock;
+use edgefaas::testbed::paper_testbed;
+
+fn main() {
+    let bed = paper_testbed(Arc::new(RealClock::new()));
+    let faas = Arc::clone(&bed.faas);
+    let mut data = HashMap::new();
+    data.insert("train".to_string(), bed.iot.clone());
+    let plan = faas.configure_application(federated_learning_yaml(), &data).unwrap();
+
+    let mut t = Table::new(
+        "Sec. 5.2: FL workflow deployment trace",
+        &["function", "paper placement", "EdgeFaaS placement"],
+    );
+    t.row(&[
+        "train".into(),
+        "each of the 8 Pis (privacy, data locality)".into(),
+        format!("{:?}", plan["train"]),
+    ]);
+    t.row(&[
+        "firstaggregation".into(),
+        "the 2 edge servers (closest per set)".into(),
+        format!("{:?}", plan["firstaggregation"]),
+    ]);
+    t.row(&[
+        "secondaggregation".into(),
+        "the cloud (reduce: 1)".into(),
+        format!("{:?}", plan["secondaggregation"]),
+    ]);
+    t.print();
+    assert_eq!(plan["train"], bed.iot);
+    assert_eq!(plan["firstaggregation"], bed.edges);
+    assert_eq!(plan["secondaggregation"], vec![bed.cloud]);
+
+    // Verify the privacy filter is what pinned `train` to the Pis: the
+    // phase-1 candidate set for train must contain no edge/cloud resource.
+    let app = faas.app("federatedlearning").unwrap();
+    let train = app.config.function("train").unwrap().clone();
+    let req = edgefaas::coordinator::FunctionCreation {
+        app: "federatedlearning".into(),
+        function: train,
+        data_locations: bed.iot.clone(),
+        dep_locations: vec![],
+    };
+    let survivors = faas.phase1_filter(&req);
+    assert_eq!(survivors.len(), 8, "privacy leaves exactly the data-holding Pis");
+    println!("\nphase-1 privacy filter: {} candidates (all IoT) — paper §3.2.3 behaviour", survivors.len());
+
+    let stats = measure(3, 20, || {
+        let bed = paper_testbed(Arc::new(RealClock::new()));
+        let mut data = HashMap::new();
+        data.insert("train".to_string(), bed.iot.clone());
+        bed.faas.configure_application(federated_learning_yaml(), &data).unwrap();
+    });
+    println!("configure_application (FL, 3 functions): p50 {}", Stats::fmt(stats.p50));
+}

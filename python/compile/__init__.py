@@ -1,0 +1,3 @@
+"""Build-time python: JAX models (L2) over Pallas kernels (L1), AOT-lowered
+to HLO-text artifacts executed by the rust coordinator via PJRT. Never
+imported at runtime."""

@@ -1,0 +1,194 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+Each entry in :data:`ENTRIES` is lowered once, converted to an
+XlaComputation, and dumped as HLO *text* (NOT a serialized HloModuleProto:
+jax >= 0.5 emits 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md).
+
+A ``manifest.json`` records every artifact's input/output shapes and dtypes
+so the rust runtime can validate tensors before execution.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed AOT batch geometry. The rust side pads to these shapes.
+TRAIN_BATCH = 32
+DETECT_BATCH = 8
+GOP_FRAMES = 24
+FRAME_H = 96
+FRAME_W = 160
+GALLERY = 32
+
+P = model.LENET_PARAMS
+f32 = jnp.float32
+i32 = jnp.int32
+
+
+def _spec(shape, dtype=f32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _entries():
+    """entry name -> (callable, example specs)."""
+    consts = model.video_constants()
+    templates = consts["templates"]
+    w1, w2, wd = consts["embedder"]
+
+    return {
+        # ---- federated learning ----
+        "lenet_train_step": (
+            model.lenet_train_step,
+            [
+                _spec((P,)),
+                _spec((TRAIN_BATCH, 1, 28, 28)),
+                _spec((TRAIN_BATCH,), i32),
+                _spec(()),
+            ],
+        ),
+        "lenet_predict": (
+            model.lenet_predict,
+            [_spec((P,)), _spec((TRAIN_BATCH, 1, 28, 28))],
+        ),
+        # Two-level aggregation (Fig. 3): 4 IoT workers per edge set, then
+        # 2 edge aggregates at the cloud.
+        "fedavg_k4": (
+            model.fedavg,
+            [_spec((4, P)), _spec((4,))],
+        ),
+        "fedavg_k2": (
+            model.fedavg,
+            [_spec((2, P)), _spec((2,))],
+        ),
+        # ---- video analytics ----
+        "motion_scores": (
+            model.motion_scores,
+            [_spec((GOP_FRAMES, FRAME_H, FRAME_W))],
+        ),
+        "face_detect": (
+            lambda images: model.face_detect(images, templates),
+            [_spec((DETECT_BATCH, FRAME_H, FRAME_W))],
+        ),
+        "face_extract": (
+            model.face_extract,
+            [_spec((DETECT_BATCH, FRAME_H, FRAME_W)), _spec((DETECT_BATCH,), i32)],
+        ),
+        "face_embed": (
+            lambda patches: model.face_embed(patches, w1, w2, wd),
+            [_spec((DETECT_BATCH, model.WIN, model.WIN))],
+        ),
+        "knn_classify": (
+            model.knn_classify,
+            [
+                _spec((DETECT_BATCH, model.EMBED_DIM)),
+                _spec((GALLERY, model.EMBED_DIM)),
+                _spec((GALLERY,), i32),
+            ],
+        ),
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    Printed with ``print_large_constants=True``: the default printer elides
+    big literals as ``constant({...})``, which the target XLA's text parser
+    silently reads back as zeros — the face templates / embedder weights /
+    any baked model constant would vanish. (Found the hard way; covered by
+    ``test_no_elided_constants``.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The target parser predates `source_end_line`-style metadata: strip it.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint8": "u8"}.get(str(dt), str(dt))
+
+
+def _describe(avals):
+    out = []
+    for a in avals:
+        out.append({"shape": [int(d) for d in a.shape], "dtype": _dtype_name(a.dtype)})
+    return out
+
+
+def _source_fingerprint() -> str:
+    """Hash of every .py under compile/ — drives the no-op rebuild check."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def build(out_dir: str, force: bool = False) -> bool:
+    """Lower every entry into ``out_dir``. Returns True if work was done."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    fingerprint = _source_fingerprint()
+    if not force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fingerprint and all(
+            os.path.exists(os.path.join(out_dir, e["file"])) for e in old["entries"].values()
+        ):
+            print(f"artifacts up to date in {out_dir} (fingerprint {fingerprint[:12]})")
+            return False
+
+    manifest = {"fingerprint": fingerprint, "entries": {}}
+    for name, (fn, specs) in _entries().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *specs)
+        out_list = out_avals if isinstance(out_avals, (tuple, list)) else [out_avals]
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": _describe(specs),
+            "outputs": _describe(out_list),
+        }
+        print(f"lowered {name}: {len(text)} chars, "
+              f"{len(specs)} inputs -> {len(out_list)} outputs")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path}")
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    args = ap.parse_args()
+    build(args.out_dir, force=args.force)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

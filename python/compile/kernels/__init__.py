@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels for the EdgeFaaS workflows.
+
+Every kernel runs with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, so interpret mode lowers the kernels to plain HLO that
+any backend runs. The *structure* (BlockSpec tiling, VMEM-sized blocks, MXU-
+shaped matmuls) is written for TPU; DESIGN.md §Hardware-Adaptation estimates
+real-TPU efficiency from the chosen block shapes.
+"""
+
+from . import fedavg, knn, matmul, motion, ref  # noqa: F401

@@ -1,0 +1,58 @@
+"""Pairwise squared-L2 Pallas kernel for k-NN face classification.
+
+Face recognition "uses k-nearest neighbors (k-NN) to classify the faces"
+(§4.1) over ResNet-style embeddings. The distance matrix is the hot part:
+``d[i,j] = ||a_i||^2 + ||b_j||^2 - 2 a_i . b_j``. The cross term is a
+matmul — exactly what the MXU wants — so the kernel computes, per (bm, bn)
+output tile:
+
+* the -2ab cross term as an MXU matmul over the full D axis (embedding
+  dims are small: 64-512, so D fits in VMEM untiled);
+* the row/column squared norms inline on the VPU;
+* a fused clamp at zero (float rounding can drive tiny distances negative).
+
+Working set per program: bm*D + bn*D + bm*bn f32 — for bm=bn=128, D=64
+that is 128 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _l2_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    cross = jnp.matmul(a, b.T, preferred_element_type=jnp.float32)
+    a2 = jnp.sum(a * a, axis=1, dtype=jnp.float32)[:, None]
+    b2 = jnp.sum(b * b, axis=1, dtype=jnp.float32)[None, :]
+    o_ref[...] = jnp.maximum(a2 + b2 - 2.0 * cross, 0.0).astype(o_ref.dtype)
+
+
+def _block(dim: int, want: int) -> int:
+    b = min(dim, want)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def pairwise_l2_pallas(a, b, bm: int = 128, bn: int = 128):
+    """Squared L2 distances. a: [N, D], b: [M, D] -> [N, M]."""
+    n, d = a.shape
+    m, d2 = b.shape
+    assert d == d2, f"dim mismatch: {a.shape} vs {b.shape}"
+    bm, bn = _block(n, bm), _block(m, bn)
+    return pl.pallas_call(
+        _l2_kernel,
+        grid=(n // bm, m // bn),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,101 @@
+"""Tiled matmul Pallas kernel — the hot primitive of the whole stack.
+
+Dense layers, im2col convolutions, face embedding and the k-NN cross term
+all reduce to this kernel. The GPU paper ran these stages on an RTX 2080 Ti
+with cuDNN/WMMA; the TPU rethink is a classic MXU-shaped blocked matmul:
+
+* 3-D grid ``(M/bm, N/bn, K/bk)`` with K innermost: each output tile is
+  revisited across the K steps and accumulated in place — the BlockSpec
+  index maps express the HBM->VMEM schedule the CUDA code did with
+  threadblocks + shared-memory staging;
+* block sizes default to 512x512x512. Roofline analysis (kernels/
+  roofline.py) drove this up from an initial 128^3: a square f32 block of
+  edge b has arithmetic intensity b/4 FLOP/byte, and the reference core's
+  ridge sits at ~114 FLOP/byte — so 128^3 (32 FLOP/B) is HBM-bound at ~28%
+  of peak while 512^3 (128 FLOP/B) crosses into the compute-bound regime.
+  The (A, B, f32 acc) working set at 512^3 is 3 MiB, 19% of a ~16 MiB VMEM,
+  leaving double-buffer headroom; smaller problems shrink blocks to exact
+  divisors automatically;
+* accumulation is f32 (the out ref is f32 regardless of input dtype),
+  matching MXU semantics for bf16 inputs.
+
+A ``jax.custom_vjp`` wrapper routes the backward pass through the same
+kernel (dA = dC @ B^T, dB = A^T @ dC) so the LeNet training step lowers to
+Pallas end-to-end — pallas_call has no native autodiff rule.
+
+The kernel runs ``interpret=True`` (see package docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Accumulate one (bm, bn) f32 tile over the K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.matmul(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= want (keeps the grid exact)."""
+    b = min(dim, want)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas(a, b, bm: int = 512, bn: int = 512, bk: int = 512):
+    """``a @ b`` via the tiled Pallas kernel.
+
+    a: [M, K], b: [K, N] -> [M, N] in ``a.dtype`` (f32 accumulation inside).
+    Any M/N/K; block sizes shrink to exact divisors so the grid tiles the
+    problem exactly.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out.astype(a.dtype)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Differentiable Pallas matmul (backward pass is also Pallas)."""
+    return matmul_pallas(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_pallas(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    return matmul_pallas(g, b.T), matmul_pallas(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm: int = 512, bn: int = 512, bk: int = 512, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency per program: A, B and f32 accumulator tiles."""
+    return dtype_bytes * (bm * bk + bk * bn) + 4 * bm * bn

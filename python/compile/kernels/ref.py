@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels match these references to float
+tolerance. They are also the "what the GPU paper code would have computed"
+baselines used when estimating kernel efficiency.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """Plain matrix multiply with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def motion_scores(frames):
+    """Per-frame inter-frame mean absolute difference.
+
+    frames: [T, H, W]. Returns [T] where score[0] = 1.0 (the first frame of a
+    GoP seeds the motion decision) and score[t] = mean |frames[t] -
+    frames[t-1]| for t >= 1.
+    """
+    diffs = jnp.abs(frames[1:] - frames[:-1]).mean(axis=(1, 2))
+    return jnp.concatenate([jnp.ones((1,), frames.dtype), diffs.astype(frames.dtype)])
+
+
+def fedavg(stacked, weights):
+    """Federated averaging (McMahan et al. 2017).
+
+    stacked: [K, P] worker parameter vectors; weights: [K] per-worker sample
+    counts (or any non-negative importance). Returns the weighted average
+    [P] with weights normalized to sum 1.
+    """
+    w = weights / jnp.sum(weights)
+    return jnp.einsum("k,kp->p", w, stacked).astype(stacked.dtype)
+
+
+def pairwise_l2(a, b):
+    """Squared L2 distance matrix.
+
+    a: [N, D], b: [M, D] -> [N, M] with d[i,j] = ||a_i - b_j||^2, computed as
+    ||a||^2 + ||b||^2 - 2 a.b (clamped at 0 against rounding).
+    """
+    a2 = jnp.sum(a * a, axis=1, keepdims=True)
+    b2 = jnp.sum(b * b, axis=1, keepdims=True).T
+    cross = jnp.matmul(a, b.T, preferred_element_type=jnp.float32)
+    return jnp.maximum(a2 + b2 - 2.0 * cross, 0.0).astype(a.dtype)

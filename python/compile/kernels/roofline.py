@@ -1,0 +1,111 @@
+"""Static roofline / VMEM analysis of the Pallas kernels.
+
+Interpret mode gives CPU-numpy timings, which say nothing about TPU
+performance — so the perf story for L1 is *structural*: per kernel, compute
+the VMEM working set per program, the FLOPs and HBM bytes per grid step,
+the arithmetic intensity, and which roofline regime (MXU-compute-bound vs
+HBM-bandwidth-bound) the kernel lands in on a reference TPU core.
+
+Reference core (v4-lite-ish, used only for ratios): 16 MiB VMEM,
+275 TFLOP/s bf16 MXU (~half for f32), 1.2 TB/s HBM.
+"""
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 << 20
+PEAK_FLOPS_F32 = 137e12
+PEAK_HBM = 1.2e12
+
+#: Intensity above which an f32 kernel is compute-bound on the reference core.
+RIDGE_INTENSITY = PEAK_FLOPS_F32 / PEAK_HBM  # ~114 FLOP/byte
+
+
+@dataclass
+class KernelProfile:
+    name: str
+    vmem_bytes: int
+    flops_per_step: float
+    hbm_bytes_per_step: float
+
+    @property
+    def intensity(self) -> float:
+        return self.flops_per_step / max(self.hbm_bytes_per_step, 1.0)
+
+    @property
+    def compute_bound(self) -> bool:
+        return self.intensity >= RIDGE_INTENSITY
+
+    @property
+    def vmem_fraction(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    @property
+    def est_utilization(self) -> float:
+        """Roofline-attainable fraction of MXU peak (f32)."""
+        attainable = min(PEAK_FLOPS_F32, self.intensity * PEAK_HBM)
+        return attainable / PEAK_FLOPS_F32
+
+
+def matmul_profile(bm=512, bn=512, bk=512, dtype_bytes=4) -> KernelProfile:
+    """One (bm, bn, bk) grid step of the tiled matmul."""
+    return KernelProfile(
+        name="matmul",
+        vmem_bytes=dtype_bytes * (bm * bk + bk * bn) + 4 * bm * bn,
+        flops_per_step=2.0 * bm * bn * bk,
+        # A and B tiles stream from HBM each step; the accumulator tile is
+        # VMEM-resident across the K axis (written once per (i, j)).
+        hbm_bytes_per_step=dtype_bytes * (bm * bk + bk * bn),
+    )
+
+
+def motion_profile(bh=16, w=160, dtype_bytes=4) -> KernelProfile:
+    """One (frame, row-strip) step of the motion kernel."""
+    elems = bh * w
+    return KernelProfile(
+        name="motion",
+        vmem_bytes=2 * dtype_bytes * elems + 4,
+        flops_per_step=2.0 * elems,  # sub + abs (+ reduce adds ~1x)
+        hbm_bytes_per_step=2.0 * dtype_bytes * elems,
+    )
+
+
+def fedavg_profile(k=8, bp=8192, dtype_bytes=4) -> KernelProfile:
+    """One bp-wide tile of the weighted average."""
+    return KernelProfile(
+        name="fedavg",
+        vmem_bytes=dtype_bytes * (k * bp + k + bp),
+        flops_per_step=2.0 * k * bp,
+        hbm_bytes_per_step=dtype_bytes * (k * bp + bp),
+    )
+
+
+def pairwise_l2_profile(bm=128, bn=128, d=64, dtype_bytes=4) -> KernelProfile:
+    """One (bm, bn) distance tile."""
+    return KernelProfile(
+        name="pairwise_l2",
+        vmem_bytes=dtype_bytes * (bm * d + bn * d + bm * bn),
+        flops_per_step=2.0 * bm * bn * d + 2.0 * (bm + bn) * d + 3.0 * bm * bn,
+        hbm_bytes_per_step=dtype_bytes * (bm * d + bn * d + bm * bn),
+    )
+
+
+ALL_PROFILES = [matmul_profile, motion_profile, fedavg_profile, pairwise_l2_profile]
+
+
+def report() -> str:
+    lines = [
+        f"{'kernel':<12} {'VMEM/prog':>10} {'%VMEM':>6} {'FLOP/B':>8} "
+        f"{'regime':<14} {'est. MXU util':>13}"
+    ]
+    for factory in ALL_PROFILES:
+        p = factory()
+        regime = "compute-bound" if p.compute_bound else "HBM-bound"
+        lines.append(
+            f"{p.name:<12} {p.vmem_bytes / 1024:>8.0f}KB {p.vmem_fraction * 100:>5.1f}% "
+            f"{p.intensity:>8.1f} {regime:<14} {p.est_utilization * 100:>12.1f}%"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

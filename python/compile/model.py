@@ -1,0 +1,324 @@
+"""Layer-2: the EdgeFaaS workflows' compute graphs, in JAX over Pallas.
+
+Everything the two paper workflows execute at a function's core lives here:
+
+Video analytics (§4.1)
+    * :func:`motion_scores`       — inter-frame comparison (OpenCV stand-in)
+    * :func:`face_detect`         — sliding-window template correlation
+                                     (SSD stand-in; windows x templates is an
+                                     im2col matmul on the Pallas kernel)
+    * :func:`face_embed`          — small CNN encoder (ResNet-34 stand-in)
+    * :func:`knn_classify`        — 1-NN over gallery embeddings
+
+Federated learning (§4.2)
+    * LeNet-5 (LeCun et al.): :func:`lenet_init`, :func:`lenet_predict`,
+      :func:`lenet_train_step` (fwd + bwd + SGD, flat parameter vector in
+      and out so models cross the rust boundary as one tensor)
+    * :func:`fedavg`              — weighted model averaging
+
+All dense contractions route through the Pallas matmul
+(:mod:`compile.kernels.matmul`), so the AOT-lowered HLO exercises the L1
+kernels end to end. Shapes are fixed at lowering time by `aot.py`; the rust
+coordinator pads batches to match.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fedavg as fedavg_kernel
+from .kernels import knn as knn_kernel
+from .kernels import matmul as matmul_kernel
+from .kernels import motion as motion_kernel
+
+# ----------------------------------------------------------------- LeNet-5 --
+
+#: (name, shape) of every LeNet-5 parameter, in flat-vector order.
+LENET_SHAPES = [
+    ("conv1_w", (6, 1, 5, 5)),
+    ("conv1_b", (6,)),
+    ("conv2_w", (16, 6, 5, 5)),
+    ("conv2_b", (16,)),
+    ("fc1_w", (400, 120)),
+    ("fc1_b", (120,)),
+    ("fc2_w", (120, 84)),
+    ("fc2_b", (84,)),
+    ("fc3_w", (84, 10)),
+    ("fc3_b", (10,)),
+]
+
+#: Total parameter count (61,706 for the classic LeNet-5).
+LENET_PARAMS = int(sum(np.prod(s) for _, s in LENET_SHAPES))
+
+
+def lenet_unflatten(flat):
+    """Split a flat [P] vector into the LeNet parameter pytree."""
+    params = {}
+    off = 0
+    for name, shape in LENET_SHAPES:
+        size = int(np.prod(shape))
+        params[name] = flat[off : off + size].reshape(shape)
+        off += size
+    assert off == LENET_PARAMS
+    return params
+
+
+def lenet_flatten(params):
+    """Inverse of :func:`lenet_unflatten`."""
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in LENET_SHAPES])
+
+
+def lenet_init(seed: int = 0):
+    """He-initialized flat parameter vector."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in LENET_SHAPES:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            parts.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = int(np.prod(shape[1:])) if len(shape) == 4 else shape[0]
+            scale = jnp.sqrt(2.0 / fan_in)
+            parts.append(scale * jax.random.normal(sub, shape, jnp.float32).reshape(-1))
+    return jnp.concatenate([p.reshape(-1) for p in parts])
+
+
+def _conv2d(x, w, b, padding):
+    """NCHW conv via im2col + the Pallas matmul.
+
+    x: [B, C, H, W], w: [O, C, kh, kw] -> [B, O, H', W'].
+    """
+    o, c, kh, kw = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (1, 1), padding, dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )  # [B, C*kh*kw, H', W']
+    bsz, ck, hh, ww = patches.shape
+    cols = patches.transpose(0, 2, 3, 1).reshape(bsz * hh * ww, ck)
+    out = matmul_kernel.matmul(cols, w.reshape(o, ck).T)  # [B*H'*W', O]
+    out = out.reshape(bsz, hh, ww, o).transpose(0, 3, 1, 2)
+    return out + b[None, :, None, None]
+
+
+def _avgpool2(x):
+    """2x2 average pool, NCHW."""
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).mean(axis=(3, 5))
+
+
+def lenet_logits(flat_params, images):
+    """LeNet-5 forward pass. images: [B, 1, 28, 28] -> logits [B, 10]."""
+    p = lenet_unflatten(flat_params)
+    x = _conv2d(images, p["conv1_w"], p["conv1_b"], "SAME")  # [B, 6, 28, 28]
+    x = jnp.tanh(x)
+    x = _avgpool2(x)  # [B, 6, 14, 14]
+    x = _conv2d(x, p["conv2_w"], p["conv2_b"], "VALID")  # [B, 16, 10, 10]
+    x = jnp.tanh(x)
+    x = _avgpool2(x)  # [B, 16, 5, 5]
+    x = x.reshape(x.shape[0], 400)
+    x = jnp.tanh(matmul_kernel.matmul(x, p["fc1_w"]) + p["fc1_b"])
+    x = jnp.tanh(matmul_kernel.matmul(x, p["fc2_w"]) + p["fc2_b"])
+    return matmul_kernel.matmul(x, p["fc3_w"]) + p["fc3_b"]
+
+
+def lenet_loss(flat_params, images, labels):
+    """Mean softmax cross-entropy. labels: [B] int32."""
+    logits = lenet_logits(flat_params, images)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return nll.mean()
+
+
+def lenet_train_step(flat_params, images, labels, lr):
+    """One SGD step. Returns (new_flat_params, loss).
+
+    This is the function each IoT `train` sandbox runs repeatedly; params
+    stay flat so the rust side treats the model as a single [P] tensor.
+    """
+    loss, grads = jax.value_and_grad(lenet_loss)(flat_params, images, labels)
+    return flat_params - lr * grads, loss
+
+
+def lenet_predict(flat_params, images):
+    """Predicted class per image: [B] int32."""
+    return jnp.argmax(lenet_logits(flat_params, images), axis=-1).astype(jnp.int32)
+
+
+def lenet_accuracy(flat_params, images, labels):
+    """Mean accuracy over a batch."""
+    return (lenet_predict(flat_params, images) == labels).mean()
+
+
+# ------------------------------------------------------------------ FedAvg --
+
+
+def fedavg(stacked, weights):
+    """Weighted model average over K workers. stacked: [K, P] -> [P]."""
+    return fedavg_kernel.fedavg_pallas(stacked, weights)
+
+
+# -------------------------------------------------------- video: motion -----
+
+
+def motion_scores(frames):
+    """Per-frame motion scores for a GoP. frames: [T, H, W] -> [T]."""
+    return motion_kernel.motion_scores_pallas(frames)
+
+
+# -------------------------------------------------- video: face detection ---
+
+#: Face-detection sliding window geometry.
+WIN = 32
+STRIDE = 16
+N_TEMPLATES = 8
+
+
+def face_templates(seed: int = 7):
+    """The detector's correlation bank: N_TEMPLATES unit-norm [WIN, WIN]
+    patterns built around the synthetic "face" blob family the video
+    generator draws (bright ellipse + dark eye dots at several scales).
+    A stand-in for SSD's learned filters with the same pipeline role."""
+    rng = np.random.RandomState(seed)
+    ys, xs = np.mgrid[0:WIN, 0:WIN].astype(np.float32)
+    temps = []
+    for i in range(N_TEMPLATES):
+        cy, cx = WIN / 2 + rng.uniform(-3, 3), WIN / 2 + rng.uniform(-3, 3)
+        ry, rx = rng.uniform(8, 13), rng.uniform(7, 11)
+        face = np.exp(-(((ys - cy) / ry) ** 2 + ((xs - cx) / rx) ** 2))
+        for dy, dx in [(-4, -4), (-4, 4)]:
+            face -= 0.8 * np.exp(-(((ys - cy - dy) ** 2 + (xs - cx - dx) ** 2) / 6.0))
+        face -= face.mean()
+        face /= np.linalg.norm(face) + 1e-8
+        temps.append(face)
+    return jnp.asarray(np.stack(temps))  # [N_TEMPLATES, WIN, WIN]
+
+
+def _windows(images):
+    """Extract sliding windows. images: [B, H, W] ->
+    (cols [B*nwin, WIN*WIN], nwin, grid shape)."""
+    b, h, w = images.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        images[:, None],
+        (WIN, WIN),
+        (STRIDE, STRIDE),
+        "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # [B, WIN*WIN, gh, gw]
+    _, ck, gh, gw = patches.shape
+    cols = patches.transpose(0, 2, 3, 1).reshape(b * gh * gw, ck)
+    return cols, gh * gw, (gh, gw)
+
+
+def face_detect(images, templates):
+    """Sliding-window template correlation.
+
+    images: [B, H, W], templates: [K, WIN, WIN].
+    Returns (best_score [B], best_window [B] int32): the maximum normalized
+    correlation over windows and templates, and the argmax window index.
+    """
+    b = images.shape[0]
+    cols, nwin, _ = _windows(images)
+    # Zero-mean, unit-norm each window so correlation is contrast-invariant.
+    cols = cols - cols.mean(axis=1, keepdims=True)
+    norms = jnp.linalg.norm(cols, axis=1, keepdims=True)
+    cols = cols / (norms + 1e-6)
+    k = templates.shape[0]
+    scores = matmul_kernel.matmul(cols, templates.reshape(k, WIN * WIN).T)  # [B*nwin, K]
+    scores = scores.max(axis=1).reshape(b, nwin)
+    return scores.max(axis=1), jnp.argmax(scores, axis=1).astype(jnp.int32)
+
+
+def extract_window(image, window_idx, grid_w):
+    """Crop the detected [WIN, WIN] patch given a window index."""
+    gy = window_idx // grid_w
+    gx = window_idx % grid_w
+    return jax.lax.dynamic_slice(image, (gy * STRIDE, gx * STRIDE), (WIN, WIN))
+
+
+def face_extract(images, window_idx):
+    """Crop the best window from each image.
+
+    images: [B, H, W], window_idx: [B] int32 -> patches [B, WIN, WIN].
+    """
+    _, _, w = images.shape
+    grid_w = (w - WIN) // STRIDE + 1
+    return jax.vmap(lambda img, wi: extract_window(img, wi, grid_w))(images, window_idx)
+
+
+# -------------------------------------------------- video: face embedding ---
+
+#: Embedding dimension of the face encoder.
+EMBED_DIM = 64
+
+
+def embedder_params(seed: int = 11):
+    """Fixed random-projection CNN weights (the ResNet-34 encoder stand-in).
+
+    conv 5x5 x8 /2 -> tanh -> conv 3x3 x16 /2 -> tanh -> flatten -> dense 64.
+    Deterministic per seed; "pre-trained" in the paper's sense of arriving
+    frozen at the function.
+    """
+    rng = np.random.RandomState(seed)
+    w1 = rng.randn(8, 1, 5, 5).astype(np.float32) * np.sqrt(2.0 / 25)
+    w2 = rng.randn(16, 8, 3, 3).astype(np.float32) * np.sqrt(2.0 / (8 * 9))
+    wd = rng.randn(16 * 8 * 8, EMBED_DIM).astype(np.float32) * np.sqrt(1.0 / (16 * 64))
+    return jnp.asarray(w1), jnp.asarray(w2), jnp.asarray(wd)
+
+
+def face_embed(patches, w1, w2, wd):
+    """Encode [B, WIN, WIN] face patches into unit-norm [B, EMBED_DIM]."""
+    x = patches[:, None]  # [B, 1, 32, 32]
+    x = jnp.tanh(_conv_stride2(x, w1))  # [B, 8, 16, 16]
+    x = jnp.tanh(_conv_stride2(x, w2))  # [B, 16, 8, 8]
+    x = x.reshape(x.shape[0], -1)
+    emb = matmul_kernel.matmul(x, wd)
+    return emb / (jnp.linalg.norm(emb, axis=1, keepdims=True) + 1e-6)
+
+
+def _conv_stride2(x, w):
+    """Stride-2 SAME conv via im2col + Pallas matmul."""
+    o, c, kh, kw = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (2, 2), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+    b, ck, hh, ww = patches.shape
+    cols = patches.transpose(0, 2, 3, 1).reshape(b * hh * ww, ck)
+    out = matmul_kernel.matmul(cols, w.reshape(o, ck).T)
+    return out.reshape(b, hh, ww, o).transpose(0, 3, 1, 2)
+
+
+# ------------------------------------------------------ video: recognition --
+
+
+def knn_classify(embeddings, gallery, gallery_labels):
+    """1-NN classification over the gallery.
+
+    embeddings: [B, D], gallery: [G, D], gallery_labels: [G] int32.
+    Returns (labels [B] int32, distances [B]).
+    """
+    d = knn_kernel.pairwise_l2_pallas(embeddings, gallery)
+    idx = jnp.argmin(d, axis=1)
+    return gallery_labels[idx].astype(jnp.int32), jnp.min(d, axis=1)
+
+
+# ----------------------------------------------------------------- jit fns --
+# Jitted entry points with the AOT-export signatures (aot.py lowers these).
+
+lenet_train_step_jit = jax.jit(lenet_train_step)
+lenet_predict_jit = jax.jit(lenet_predict)
+fedavg_jit = jax.jit(fedavg)
+motion_scores_jit = jax.jit(motion_scores)
+face_detect_jit = jax.jit(face_detect)
+face_extract_jit = jax.jit(face_extract)
+face_embed_jit = jax.jit(face_embed)
+knn_classify_jit = jax.jit(knn_classify)
+
+
+@functools.lru_cache(maxsize=None)
+def video_constants():
+    """The frozen tensors baked into the video pipeline artifacts."""
+    return {
+        "templates": face_templates(),
+        "embedder": embedder_params(),
+    }

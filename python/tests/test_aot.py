@@ -1,0 +1,85 @@
+"""AOT pipeline: manifest consistency and HLO-text loadability."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        aot.build(ART)
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_entries(manifest):
+    assert set(manifest["entries"]) == set(aot._entries())
+
+
+def test_artifact_files_exist_and_are_hlo_text(manifest):
+    for name, e in manifest["entries"].items():
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_manifest_shapes_match_lowering_specs(manifest):
+    e = manifest["entries"]["lenet_train_step"]
+    assert e["inputs"][0] == {"shape": [model.LENET_PARAMS], "dtype": "f32"}
+    assert e["inputs"][1] == {"shape": [aot.TRAIN_BATCH, 1, 28, 28], "dtype": "f32"}
+    assert e["inputs"][2] == {"shape": [aot.TRAIN_BATCH], "dtype": "i32"}
+    assert e["outputs"][0] == {"shape": [model.LENET_PARAMS], "dtype": "f32"}
+    assert e["outputs"][1] == {"shape": [], "dtype": "f32"}
+
+
+def test_rebuild_is_noop_when_fresh(manifest, capsys):
+    did_work = aot.build(ART)
+    assert not did_work, "fresh artifacts must not be rebuilt"
+
+
+def test_every_artifact_has_expected_entry_signature(manifest):
+    """Input/output arity in the manifest matches jax.eval_shape on the
+    live entry functions — guards against manifest drift."""
+    for name, (fn, specs) in aot._entries().items():
+        e = manifest["entries"][name]
+        assert len(e["inputs"]) == len(specs), name
+        out = jax.eval_shape(fn, *specs)
+        n_out = len(out) if isinstance(out, (tuple, list)) else 1
+        assert len(e["outputs"]) == n_out, name
+
+
+def test_lowered_hlo_declares_matching_parameters():
+    """The HLO text's ENTRY parameter shapes must match the manifest —
+    this is exactly the contract the rust runtime validates against."""
+    path = os.path.join(ART, "fedavg_k4.hlo.txt")
+    if not os.path.exists(path):
+        aot.build(ART)
+    with open(path) as f:
+        text = f.read()
+    assert "f32[4,61706]" in text, "stacked params parameter"
+    assert "f32[4]" in text, "weights parameter"
+
+
+def test_no_elided_constants():
+    """The HLO text must never contain `constant({...})` — the target XLA
+    parses elided literals as zeros (silently!). Regression guard for the
+    print_large_constants option in to_hlo_text."""
+    for name in os.listdir(ART):
+        if not name.endswith(".hlo.txt") or name.startswith("probe_"):
+            continue
+        with open(os.path.join(ART, name)) as f:
+            text = f.read()
+        assert "{...}" not in text, f"{name} has an elided constant"

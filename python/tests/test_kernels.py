@@ -1,0 +1,206 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and block sizes, which must never change results)
+so the kernels are validated over the whole geometry space the models use,
+not just the AOT shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fedavg, knn, matmul, motion, ref
+
+DIMS = st.integers(min_value=1, max_value=96)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ------------------------------------------------------------------ matmul --
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = matmul.matmul_pallas(a, b)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.integers(1, 64),
+    bn=st.integers(1, 64),
+    bk=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_block_size_invariance(bm, bn, bk, seed):
+    """Tiling is an implementation detail: results must not depend on it."""
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, 48, 56), rand(rng, 56, 40)
+    got = matmul.matmul_pallas(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_mismatched_inner_dims():
+    a = jnp.zeros((4, 5))
+    b = jnp.zeros((6, 3))
+    with pytest.raises(AssertionError):
+        matmul.matmul_pallas(a, b)
+
+
+def test_matmul_identity():
+    rng = np.random.default_rng(0)
+    a = rand(rng, 32, 32)
+    np.testing.assert_allclose(matmul.matmul_pallas(a, jnp.eye(32)), a, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_vjp_matches_ref_grads():
+    rng = np.random.default_rng(3)
+    a, b = rand(rng, 40, 30), rand(rng, 30, 20)
+
+    def loss_pallas(a, b):
+        return jnp.sum(matmul.matmul(a, b) ** 2)
+
+    def loss_ref(a, b):
+        return jnp.sum(ref.matmul(a, b) ** 2)
+
+    ga = jax.grad(loss_pallas, argnums=(0, 1))(a, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga[0], gr[0], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(ga[1], gr[1], rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_vmem_estimate_fits_tpu_core():
+    # The default 128^3 tiling must leave headroom under a 16 MiB VMEM.
+    assert matmul.vmem_bytes() < (16 << 20) // 4
+
+
+# ------------------------------------------------------------------ motion --
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(2, 12),
+    h=st.integers(2, 48),
+    w=st.integers(2, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_motion_matches_ref(t, h, w, seed):
+    rng = np.random.default_rng(seed)
+    frames = jnp.asarray(rng.random((t, h, w), dtype=np.float32))
+    got = motion.motion_scores_pallas(frames)
+    np.testing.assert_allclose(got, ref.motion_scores(frames), rtol=1e-5, atol=1e-6)
+
+
+def test_motion_static_scene_scores_zero():
+    frames = jnp.ones((6, 32, 32), jnp.float32) * 0.5
+    scores = motion.motion_scores_pallas(frames)
+    assert scores[0] == 1.0, "keyframe always flagged"
+    np.testing.assert_allclose(scores[1:], 0.0, atol=1e-7)
+
+
+def test_motion_detects_single_moving_block():
+    frames = np.zeros((3, 32, 32), np.float32)
+    frames[1, 10:20, 10:20] = 1.0  # object appears in frame 1
+    frames[2] = frames[1]  # then holds still
+    scores = motion.motion_scores_pallas(jnp.asarray(frames))
+    assert scores[1] > 0.05
+    assert scores[2] < 1e-6
+
+
+@settings(max_examples=8, deadline=None)
+@given(bh=st.integers(1, 48), seed=st.integers(0, 2**31 - 1))
+def test_motion_block_size_invariance(bh, seed):
+    rng = np.random.default_rng(seed)
+    frames = jnp.asarray(rng.random((5, 48, 40), dtype=np.float32))
+    got = motion.motion_scores_pallas(frames, bh=bh)
+    np.testing.assert_allclose(got, ref.motion_scores(frames), rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------ fedavg --
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(1, 10),
+    p=st.integers(1, 4096),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fedavg_matches_ref(k, p, seed):
+    rng = np.random.default_rng(seed)
+    stacked = rand(rng, k, p)
+    weights = jnp.asarray(rng.random(k, dtype=np.float32) + 0.1)
+    got = fedavg.fedavg_pallas(stacked, weights)
+    np.testing.assert_allclose(got, ref.fedavg(stacked, weights), rtol=1e-4, atol=1e-5)
+
+
+def test_fedavg_equal_weights_is_mean():
+    rng = np.random.default_rng(1)
+    stacked = rand(rng, 4, 1000)
+    got = fedavg.fedavg_pallas(stacked, jnp.ones(4))
+    np.testing.assert_allclose(got, stacked.mean(axis=0), rtol=1e-5, atol=1e-6)
+
+
+def test_fedavg_single_worker_is_identity():
+    rng = np.random.default_rng(2)
+    stacked = rand(rng, 1, 512)
+    got = fedavg.fedavg_pallas(stacked, jnp.asarray([3.0]))
+    np.testing.assert_allclose(got, stacked[0], rtol=1e-6, atol=1e-7)
+
+
+def test_fedavg_weight_normalization_invariance():
+    """Scaling all weights by a constant must not change the average."""
+    rng = np.random.default_rng(3)
+    stacked = rand(rng, 5, 777)
+    w = jnp.asarray(rng.random(5, dtype=np.float32) + 0.5)
+    a = fedavg.fedavg_pallas(stacked, w)
+    b = fedavg.fedavg_pallas(stacked, w * 100.0)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_fedavg_convexity_property():
+    """The average must lie within the per-coordinate envelope."""
+    rng = np.random.default_rng(4)
+    stacked = rand(rng, 6, 2048)
+    w = jnp.asarray(rng.random(6, dtype=np.float32) + 0.1)
+    avg = np.asarray(fedavg.fedavg_pallas(stacked, w))
+    lo, hi = np.asarray(stacked).min(0), np.asarray(stacked).max(0)
+    assert (avg >= lo - 1e-5).all() and (avg <= hi + 1e-5).all()
+
+
+# --------------------------------------------------------------------- knn --
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 48),
+    m=st.integers(1, 48),
+    d=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_l2_matches_ref(n, m, d, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, n, d), rand(rng, m, d)
+    got = knn.pairwise_l2_pallas(a, b)
+    np.testing.assert_allclose(got, ref.pairwise_l2(a, b), rtol=1e-3, atol=1e-3)
+
+
+def test_pairwise_l2_self_distance_zero_diagonal():
+    rng = np.random.default_rng(5)
+    a = rand(rng, 16, 32)
+    d = np.asarray(knn.pairwise_l2_pallas(a, a))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)
+    assert (d >= 0).all(), "clamped at zero"
+
+
+def test_pairwise_l2_known_values():
+    a = jnp.asarray([[0.0, 0.0], [1.0, 1.0]])
+    b = jnp.asarray([[3.0, 4.0]])
+    d = knn.pairwise_l2_pallas(a, b)
+    np.testing.assert_allclose(d, [[25.0], [13.0]], rtol=1e-6)

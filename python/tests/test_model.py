@@ -1,0 +1,203 @@
+"""L2 correctness: the workflow compute graphs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def synthetic_digits(rng, n):
+    """Class-dependent blob images: learnable 10-class toy problem matching
+    the rust-side generator's structure (see workflows/fedlearn)."""
+    labels = rng.integers(0, 10, n)
+    images = np.zeros((n, 1, 28, 28), np.float32)
+    for i, lbl in enumerate(labels):
+        ys, xs = np.mgrid[0:28, 0:28]
+        cy = 6 + 2 * (lbl % 5) + rng.integers(-1, 2)
+        cx = 6 + 4 * (lbl // 5) + rng.integers(-1, 2)
+        images[i, 0] = np.exp(-(((ys - cy) ** 2 + (xs - cx) ** 2) / (6.0 + lbl)))
+    images += rng.standard_normal(images.shape).astype(np.float32) * 0.05
+    return jnp.asarray(images), jnp.asarray(labels, jnp.int32)
+
+
+# ----------------------------------------------------------------- LeNet-5 --
+
+
+def test_param_count_is_classic_lenet():
+    assert model.LENET_PARAMS == 61706
+
+
+def test_flatten_unflatten_roundtrip():
+    flat = model.lenet_init(0)
+    assert flat.shape == (model.LENET_PARAMS,)
+    params = model.lenet_unflatten(flat)
+    assert params["conv2_w"].shape == (16, 6, 5, 5)
+    back = model.lenet_flatten(params)
+    np.testing.assert_array_equal(flat, back)
+
+
+def test_logits_shape_and_finiteness():
+    flat = model.lenet_init(1)
+    images = jnp.zeros((8, 1, 28, 28), jnp.float32)
+    logits = model.lenet_logits(flat, images)
+    assert logits.shape == (8, 10)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_initial_loss_near_log10():
+    rng = np.random.default_rng(0)
+    images, labels = synthetic_digits(rng, 32)
+    loss = model.lenet_loss(model.lenet_init(0), images, labels)
+    assert abs(float(loss) - np.log(10.0)) < 0.5
+
+
+def test_train_step_reduces_loss():
+    rng = np.random.default_rng(1)
+    images, labels = synthetic_digits(rng, 32)
+    flat = model.lenet_init(2)
+    losses = []
+    for _ in range(15):
+        flat, loss = model.lenet_train_step_jit(flat, images, labels, jnp.float32(0.1))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, f"no learning: {losses[0]:.3f} -> {losses[-1]:.3f}"
+
+
+def test_training_improves_accuracy():
+    rng = np.random.default_rng(2)
+    images, labels = synthetic_digits(rng, 32)
+    flat = model.lenet_init(3)
+    acc0 = float(model.lenet_accuracy(flat, images, labels))
+    for _ in range(40):
+        flat, _ = model.lenet_train_step_jit(flat, images, labels, jnp.float32(0.2))
+    acc1 = float(model.lenet_accuracy(flat, images, labels))
+    assert acc1 > max(acc0, 0.5), f"accuracy {acc0:.2f} -> {acc1:.2f}"
+
+
+def test_predict_matches_argmax_of_logits():
+    flat = model.lenet_init(4)
+    rng = np.random.default_rng(3)
+    images, _ = synthetic_digits(rng, 8)
+    preds = model.lenet_predict(flat, images)
+    logits = model.lenet_logits(flat, images)
+    np.testing.assert_array_equal(preds, jnp.argmax(logits, axis=1).astype(jnp.int32))
+
+
+# ------------------------------------------------------------------ FedAvg --
+
+
+def test_fedavg_of_identical_models_is_identity():
+    flat = model.lenet_init(5)
+    stacked = jnp.stack([flat] * 4)
+    avg = model.fedavg(stacked, jnp.ones(4))
+    np.testing.assert_allclose(avg, flat, rtol=1e-5, atol=1e-6)
+
+
+def test_two_level_aggregation_equals_flat_average():
+    """Aggregating 4+4 workers per edge then 2 edges at the cloud must equal
+    a flat 8-worker average when weights carry the sample counts."""
+    rng = np.random.default_rng(6)
+    workers = jnp.asarray(rng.standard_normal((8, 1024), dtype=np.float32))
+    counts = jnp.asarray(rng.integers(10, 100, 8).astype(np.float32))
+    # Flat average.
+    flat_avg = model.fedavg(workers, counts)
+    # Two-level: edges aggregate 4 workers each, cloud aggregates the 2
+    # edge models weighted by their total counts.
+    e1 = model.fedavg(workers[:4], counts[:4])
+    e2 = model.fedavg(workers[4:], counts[4:])
+    cloud = model.fedavg(jnp.stack([e1, e2]), jnp.asarray([counts[:4].sum(), counts[4:].sum()]))
+    np.testing.assert_allclose(cloud, flat_avg, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------- video pipeline --
+
+
+def synth_frame(rng, h=96, w=160, face_at=None):
+    """Textured background; optionally draw the generator's face blob."""
+    img = rng.random((h, w)).astype(np.float32) * 0.1
+    if face_at is not None:
+        cy, cx = face_at
+        ys, xs = np.mgrid[0:h, 0:w].astype(np.float32)
+        img += np.exp(-(((ys - cy) / 10.0) ** 2 + ((xs - cx) / 9.0) ** 2))
+        for dy, dx in [(-4, -4), (-4, 4)]:
+            img -= 0.8 * np.exp(-(((ys - cy - dy) ** 2 + (xs - cx - dx) ** 2) / 6.0))
+    return np.clip(img, 0.0, 1.0)
+
+
+def test_face_detect_prefers_frame_with_face():
+    rng = np.random.default_rng(7)
+    with_face = synth_frame(rng, face_at=(48, 80))
+    without = synth_frame(rng)
+    images = jnp.asarray(np.stack([with_face, without]))
+    templates = model.face_templates()
+    scores, _ = model.face_detect(images, templates)
+    assert float(scores[0]) > float(scores[1]) + 0.1, f"scores={scores}"
+
+
+def test_face_detect_window_localizes_face():
+    rng = np.random.default_rng(8)
+    img = synth_frame(rng, face_at=(48, 80))
+    images = jnp.asarray(img[None])
+    templates = model.face_templates()
+    _, idx = model.face_detect(images, templates)
+    grid_w = (160 - model.WIN) // model.STRIDE + 1
+    gy, gx = int(idx[0]) // grid_w, int(idx[0]) % grid_w
+    # Window top-left must be within one window of the face center.
+    assert abs(gy * model.STRIDE + model.WIN // 2 - 48) <= model.WIN
+    assert abs(gx * model.STRIDE + model.WIN // 2 - 80) <= model.WIN
+
+
+def test_face_extract_shape_and_bounds():
+    rng = np.random.default_rng(9)
+    images = jnp.asarray(np.stack([synth_frame(rng) for _ in range(4)]))
+    idx = jnp.asarray([0, 5, 10, 50], jnp.int32)
+    patches = model.face_extract(images, idx)
+    assert patches.shape == (4, model.WIN, model.WIN)
+    assert bool(jnp.isfinite(patches).all())
+
+
+def test_face_embed_unit_norm():
+    rng = np.random.default_rng(10)
+    patches = jnp.asarray(rng.random((6, 32, 32), dtype=np.float32))
+    w1, w2, wd = model.embedder_params()
+    emb = model.face_embed(patches, w1, w2, wd)
+    assert emb.shape == (6, model.EMBED_DIM)
+    np.testing.assert_allclose(jnp.linalg.norm(emb, axis=1), 1.0, rtol=1e-3)
+
+
+def test_embedding_separates_identities():
+    """Same-face crops must embed closer than different-face crops."""
+    rng = np.random.default_rng(11)
+    w1, w2, wd = model.embedder_params()
+
+    def crop(face_seed):
+        r = np.random.default_rng(face_seed)
+        img = synth_frame(r, h=32, w=32, face_at=(16 + r.integers(-2, 3), 16 + r.integers(-2, 3)))
+        return img
+
+    a1, a2 = crop(100), crop(100)  # same identity, jittered
+    b = crop(200)  # different identity
+    emb = model.face_embed(jnp.asarray(np.stack([a1, a2, b])), w1, w2, wd)
+    d_same = float(jnp.sum((emb[0] - emb[1]) ** 2))
+    d_diff = float(jnp.sum((emb[0] - emb[2]) ** 2))
+    assert d_same < d_diff, f"same={d_same:.4f} diff={d_diff:.4f}"
+
+
+def test_knn_classify_exact_match():
+    rng = np.random.default_rng(12)
+    gallery = jnp.asarray(rng.standard_normal((32, 64), dtype=np.float32))
+    labels = jnp.asarray(rng.integers(0, 8, 32), jnp.int32)
+    # Queries = gallery rows 3 and 17: 1-NN must return their labels.
+    queries = gallery[jnp.asarray([3, 17])]
+    pred, dist = model.knn_classify(queries, gallery, labels)
+    np.testing.assert_array_equal(pred, labels[jnp.asarray([3, 17])])
+    np.testing.assert_allclose(dist, 0.0, atol=1e-3)
+
+
+def test_motion_gates_pipeline():
+    """GoPs without motion must score ~0 beyond the keyframe."""
+    rng = np.random.default_rng(13)
+    still = np.repeat(synth_frame(rng)[None], 6, axis=0)
+    scores = model.motion_scores(jnp.asarray(still))
+    assert float(scores[1:].max()) < 1e-5

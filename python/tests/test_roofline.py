@@ -1,0 +1,57 @@
+"""Structural perf checks on the L1 kernels (the TPU side of §Perf)."""
+
+from compile.kernels import roofline
+
+
+def test_all_kernels_fit_vmem_with_double_buffer_headroom():
+    # Every kernel must leave >= 2x headroom so Mosaic can double-buffer.
+    for factory in roofline.ALL_PROFILES:
+        p = factory()
+        assert p.vmem_fraction < 0.5, f"{p.name} uses {p.vmem_fraction:.0%} of VMEM"
+
+
+def test_matmul_is_compute_bound_at_512_tiling():
+    p = roofline.matmul_profile(bm=512, bn=512, bk=512)
+    assert p.compute_bound, f"intensity {p.intensity:.1f} < ridge {roofline.RIDGE_INTENSITY:.1f}"
+    assert p.est_utilization > 0.9
+    # The original 128^3 tiling is NOT compute-bound for f32 — the finding
+    # that drove the L1 perf iteration (EXPERIMENTS.md §Perf).
+    assert not roofline.matmul_profile(bm=128, bn=128, bk=128).compute_bound
+
+
+def test_elementwise_kernels_are_bandwidth_bound():
+    # Motion diff and FedAvg stream from HBM by nature; their roofline
+    # position must reflect that (matching the GPU originals').
+    assert not roofline.motion_profile().compute_bound
+    assert not roofline.fedavg_profile().compute_bound
+
+
+def test_pairwise_l2_intensity_scales_with_d():
+    small = roofline.pairwise_l2_profile(d=16)
+    big = roofline.pairwise_l2_profile(d=512)
+    assert big.intensity > small.intensity
+
+
+def test_matmul_intensity_grows_with_block_size():
+    # The classic blocked-matmul result: intensity ~ block edge.
+    i64 = roofline.matmul_profile(bm=64, bn=64, bk=64).intensity
+    i128 = roofline.matmul_profile(bm=128, bn=128, bk=128).intensity
+    i256 = roofline.matmul_profile(bm=256, bn=256, bk=256).intensity
+    assert i64 < i128 < i256
+    # 256^3 f32 would still fit VMEM but with less pipeline headroom.
+    assert roofline.matmul_profile(bm=256, bn=256, bk=256).vmem_fraction < 0.5
+
+
+def test_report_renders():
+    text = roofline.report()
+    assert "matmul" in text and "HBM-bound" in text
+
+
+def test_default_tiling_matches_kernel_default():
+    # kernels/matmul.py defaults were chosen from this analysis: keep the
+    # two in sync (b/4 >= ridge => b >= 456 => 512).
+    from compile.kernels import matmul
+    import inspect
+    sig = inspect.signature(matmul.matmul_pallas)
+    b = sig.parameters["bm"].default
+    assert roofline.matmul_profile(bm=b, bn=b, bk=b).compute_bound

@@ -1,0 +1,278 @@
+//! Durable key-value store with namespaces.
+//!
+//! Model: `namespace` ≈ the paper's mapping name (resource mapping, bucket
+//! map, application_bucket mapping, candidate_resource mapping); within a
+//! namespace, `key -> Json value`. Writes append a JSONL record
+//! (`{"ns":..,"k":..,"v":..}` or a tombstone) and fsync; `open` replays the
+//! log; `compact` rewrites it to the live set. This gives the
+//! crash-recoverable behaviour the paper gets from DynamoDB/S3: "EdgeFaaS
+//! can still get the mappings from DynamoDB and continue scheduling without
+//! losing important information."
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::json::{parse, Json};
+
+#[derive(Debug, Default)]
+struct Inner {
+    data: BTreeMap<String, BTreeMap<String, Json>>,
+    file: Option<File>,
+    records: u64,
+}
+
+/// Durable, thread-safe, namespaced KV store.
+pub struct DurableKv {
+    path: PathBuf,
+    inner: Mutex<Inner>,
+}
+
+impl DurableKv {
+    /// Open (or create) a store at `path`, replaying any existing log.
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<DurableKv> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut data: BTreeMap<String, BTreeMap<String, Json>> = BTreeMap::new();
+        let mut records = 0;
+        if path.exists() {
+            let reader = BufReader::new(File::open(&path)?);
+            for line in reader.lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                records += 1;
+                let rec = parse(&line)
+                    .map_err(|e| anyhow::anyhow!("corrupt log record {records}: {e}"))?;
+                let ns = rec.req_str("ns")?.to_string();
+                let k = rec.req_str("k")?.to_string();
+                match rec.get("v") {
+                    Some(v) => {
+                        data.entry(ns).or_default().insert(k, v.clone());
+                    }
+                    None => {
+                        // Tombstone.
+                        if let Some(m) = data.get_mut(&ns) {
+                            m.remove(&k);
+                        }
+                    }
+                }
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(DurableKv { path, inner: Mutex::new(Inner { data, file: Some(file), records }) })
+    }
+
+    /// In-memory store (tests / ephemeral benches): no durability.
+    pub fn ephemeral() -> DurableKv {
+        DurableKv {
+            path: PathBuf::new(),
+            inner: Mutex::new(Inner { data: BTreeMap::new(), file: None, records: 0 }),
+        }
+    }
+
+    fn append(inner: &mut Inner, rec: &Json) -> anyhow::Result<()> {
+        if let Some(f) = inner.file.as_mut() {
+            writeln!(f, "{rec}")?;
+            f.sync_data()?;
+        }
+        inner.records += 1;
+        Ok(())
+    }
+
+    /// Put a value.
+    pub fn put(&self, ns: &str, key: &str, value: Json) -> anyhow::Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut rec = Json::obj();
+        rec.set("ns", ns.into()).set("k", key.into()).set("v", value.clone());
+        Self::append(&mut inner, &rec)?;
+        inner.data.entry(ns.to_string()).or_default().insert(key.to_string(), value);
+        Ok(())
+    }
+
+    /// Get a value.
+    pub fn get(&self, ns: &str, key: &str) -> Option<Json> {
+        self.inner.lock().unwrap().data.get(ns).and_then(|m| m.get(key)).cloned()
+    }
+
+    /// Delete a key (idempotent).
+    pub fn delete(&self, ns: &str, key: &str) -> anyhow::Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let existed = inner.data.get_mut(ns).map(|m| m.remove(key).is_some()).unwrap_or(false);
+        if existed {
+            let mut rec = Json::obj();
+            rec.set("ns", ns.into()).set("k", key.into());
+            Self::append(&mut inner, &rec)?;
+        }
+        Ok(())
+    }
+
+    /// All keys in a namespace (sorted).
+    pub fn keys(&self, ns: &str) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .data
+            .get(ns)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// All `(key, value)` pairs in a namespace.
+    pub fn entries(&self, ns: &str) -> Vec<(String, Json)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .data
+            .get(ns)
+            .map(|m| m.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+            .unwrap_or_default()
+    }
+
+    /// Number of log records written since open (compaction trigger).
+    pub fn log_records(&self) -> u64 {
+        self.inner.lock().unwrap().records
+    }
+
+    /// Rewrite the log to contain only live entries.
+    pub fn compact(&self) -> anyhow::Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.file.is_none() {
+            return Ok(());
+        }
+        let tmp = self.path.with_extension("tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            for (ns, m) in &inner.data {
+                for (k, v) in m {
+                    let mut rec = Json::obj();
+                    rec.set("ns", ns.as_str().into())
+                        .set("k", k.as_str().into())
+                        .set("v", v.clone());
+                    writeln!(f, "{rec}")?;
+                }
+            }
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &self.path)?;
+        inner.file = Some(OpenOptions::new().append(true).open(&self.path)?);
+        inner.records = inner.data.values().map(|m| m.len() as u64).sum();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("edgefaas-kv-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("{name}-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn put_get_delete() {
+        let kv = DurableKv::ephemeral();
+        kv.put("resmap", "0", Json::Str("cloud".into())).unwrap();
+        assert_eq!(kv.get("resmap", "0"), Some(Json::Str("cloud".into())));
+        kv.delete("resmap", "0").unwrap();
+        assert_eq!(kv.get("resmap", "0"), None);
+        kv.delete("resmap", "0").unwrap(); // idempotent
+    }
+
+    #[test]
+    fn namespaces_isolated() {
+        let kv = DurableKv::ephemeral();
+        kv.put("a", "k", Json::Num(1.0)).unwrap();
+        kv.put("b", "k", Json::Num(2.0)).unwrap();
+        assert_eq!(kv.get("a", "k"), Some(Json::Num(1.0)));
+        assert_eq!(kv.get("b", "k"), Some(Json::Num(2.0)));
+        assert_eq!(kv.keys("a"), vec!["k".to_string()]);
+    }
+
+    #[test]
+    fn survives_reopen() {
+        let path = tmpfile("reopen");
+        {
+            let kv = DurableKv::open(&path).unwrap();
+            kv.put("m", "x", Json::Str("1".into())).unwrap();
+            kv.put("m", "y", Json::Str("2".into())).unwrap();
+            kv.delete("m", "x").unwrap();
+            kv.put("m", "z", Json::Str("3".into())).unwrap();
+        }
+        let kv = DurableKv::open(&path).unwrap();
+        assert_eq!(kv.get("m", "x"), None, "tombstone replayed");
+        assert_eq!(kv.get("m", "y"), Some(Json::Str("2".into())));
+        assert_eq!(kv.keys("m"), vec!["y".to_string(), "z".to_string()]);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn compaction_preserves_state_and_shrinks_log() {
+        let path = tmpfile("compact");
+        let kv = DurableKv::open(&path).unwrap();
+        for i in 0..50 {
+            kv.put("m", "hot", Json::Num(i as f64)).unwrap();
+        }
+        assert_eq!(kv.log_records(), 50);
+        kv.compact().unwrap();
+        assert_eq!(kv.log_records(), 1);
+        assert_eq!(kv.get("m", "hot"), Some(Json::Num(49.0)));
+        drop(kv);
+        let kv = DurableKv::open(&path).unwrap();
+        assert_eq!(kv.get("m", "hot"), Some(Json::Num(49.0)));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_corrupt_log() {
+        let path = tmpfile("corrupt");
+        std::fs::write(&path, "{\"ns\":\"m\",\"k\":\"x\",\"v\":1}\nGARBAGE\n").unwrap();
+        assert!(DurableKv::open(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn concurrent_puts() {
+        use std::sync::Arc;
+        let kv = Arc::new(DurableKv::ephemeral());
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let kv = Arc::clone(&kv);
+                std::thread::spawn(move || {
+                    for j in 0..50 {
+                        kv.put("ns", &format!("k{i}-{j}"), Json::Num(j as f64)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(kv.keys("ns").len(), 400);
+    }
+
+    #[test]
+    fn complex_values_roundtrip() {
+        let path = tmpfile("complex");
+        {
+            let kv = DurableKv::open(&path).unwrap();
+            let mut v = Json::obj();
+            v.set("candidates", vec![0u64, 2, 5].into())
+                .set("app", "videopipeline".into());
+            kv.put("candidate_resource", "videopipeline.face-detection", v).unwrap();
+        }
+        let kv = DurableKv::open(&path).unwrap();
+        let v = kv.get("candidate_resource", "videopipeline.face-detection").unwrap();
+        assert_eq!(v.get("candidates").unwrap().as_arr().unwrap().len(), 3);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,12 @@
+//! Durable mapping backup (the S3 + DynamoDB stand-in).
+//!
+//! "All the mappings that EdgeFaaS maintains are backed up in DynamoDB with
+//! the mapping-name as the key and content as the value. This is to ensure
+//! consistency in case of EdgeFaaS failure or crashes" (§3.1.1). [`kv`]
+//! provides that durability against the local filesystem: namespaced
+//! key→JSON maps persisted as append-only JSONL with compaction, reloadable
+//! after a crash.
+
+pub mod kv;
+
+pub use kv::DurableKv;

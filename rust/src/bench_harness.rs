@@ -1,0 +1,163 @@
+//! Measurement + reporting harness for the paper-figure benches.
+//!
+//! The offline build has no criterion, so `benches/*` (built with
+//! `harness = false`) use this: warmup + timed iterations with min / mean /
+//! p50 / p95 statistics, and an aligned-table printer so every bench emits
+//! the same rows/series the paper's figures report.
+
+use std::time::Instant;
+
+/// Latency statistics over a set of timed iterations, seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub min: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn of(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let pick = |q: f64| samples[((n as f64 - 1.0) * q).round() as usize];
+        Stats {
+            iters: n,
+            min: samples[0],
+            mean: samples.iter().sum::<f64>() / n as f64,
+            p50: pick(0.5),
+            p95: pick(0.95),
+            max: samples[n - 1],
+        }
+    }
+
+    /// Human-readable duration.
+    pub fn fmt(seconds: f64) -> String {
+        if seconds >= 1.0 {
+            format!("{seconds:.3} s")
+        } else if seconds >= 1e-3 {
+            format!("{:.3} ms", seconds * 1e3)
+        } else if seconds >= 1e-6 {
+            format!("{:.3} µs", seconds * 1e6)
+        } else {
+            format!("{:.0} ns", seconds * 1e9)
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Stats::of(samples)
+}
+
+/// An aligned text table (the benches' figure output format).
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n=== {} ===\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_quantiles() {
+        let s = Stats::of((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.0).abs() < 1.5);
+        assert!((s.p95 - 95.0).abs() < 1.5);
+    }
+
+    #[test]
+    fn measure_runs_the_closure() {
+        let mut count = 0;
+        let s = measure(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(Stats::fmt(2.5), "2.500 s");
+        assert_eq!(Stats::fmt(0.0025), "2.500 ms");
+        assert_eq!(Stats::fmt(2.5e-6), "2.500 µs");
+        assert_eq!(Stats::fmt(2.5e-8), "25 ns");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Fig. X", &["stage", "edge (s)", "cloud (s)"]);
+        t.row(&["video-generator".into(), "8.5".into(), "92.7".into()]);
+        t.row(&["face-recognition".into(), "0.05".into(), "0.5".into()]);
+        let s = t.to_string();
+        assert!(s.contains("=== Fig. X ==="));
+        assert!(s.contains("video-generator"));
+        let lines: Vec<&str> =
+            s.lines().filter(|l| l.contains("8.5") || l.contains("0.05")).collect();
+        assert_eq!(lines.len(), 2);
+    }
+}

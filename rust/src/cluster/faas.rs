@@ -1,0 +1,341 @@
+//! The FaaS backend proper — the per-resource OpenFaaS/faasd stand-in.
+//!
+//! EdgeFaaS "deploys functions on the resource to utilize the resource"
+//! through each resource's gateway (§3.1). This backend implements the verbs
+//! that gateway exposes: deploy, remove, describe, list, invoke — with the
+//! sandbox/capacity model of [`super::sandbox`] underneath and an
+//! [`Executor`] doing the actual compute.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::simnet::Clock;
+
+use super::sandbox::{Admission, SandboxDemand, SandboxManager};
+use super::spec::ResourceSpec;
+
+/// Deployment-time function specification (the paper's deployment package
+/// plus the Table 2 `requirements`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FunctionSpec {
+    pub name: String,
+    /// Image / package reference (the `.zip` code property in the paper).
+    pub image: String,
+    /// Required memory per sandbox, bytes.
+    pub memory: u64,
+    /// Required GPUs per sandbox.
+    pub gpus: u32,
+    /// Opaque labels (EdgeFaaS stores its application name here).
+    pub labels: HashMap<String, String>,
+}
+
+/// Runtime description of a deployed function (OpenFaaS `describe`).
+#[derive(Debug, Clone)]
+pub struct FunctionStatus {
+    pub spec: FunctionSpec,
+    pub replicas: u32,
+    pub invocations: u64,
+    /// URL path the function is invocable at on this gateway.
+    pub url: String,
+}
+
+/// Executes the body of a function. Implementations:
+/// [`NativeExecutor`] (rust closures → PJRT compute) for the real path, and
+/// the perf-model executor for virtual-time benches.
+pub trait Executor: Send + Sync {
+    /// Run `function` with `payload`, returning its output bytes.
+    fn execute(&self, function: &str, payload: &[u8]) -> anyhow::Result<Vec<u8>>;
+
+    /// Estimated execution seconds (virtual-time mode); `None` means "run
+    /// [`execute`](Executor::execute) for real and use wall time".
+    fn model_latency(&self, _function: &str, _payload_len: usize) -> Option<f64> {
+        None
+    }
+}
+
+/// Registry of rust closures keyed by function image name.
+#[derive(Default)]
+pub struct NativeExecutor {
+    handlers: Mutex<HashMap<String, Arc<dyn Fn(&[u8]) -> anyhow::Result<Vec<u8>> + Send + Sync>>>,
+}
+
+impl NativeExecutor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register the handler for a function image.
+    pub fn register<F>(&self, image: &str, f: F)
+    where
+        F: Fn(&[u8]) -> anyhow::Result<Vec<u8>> + Send + Sync + 'static,
+    {
+        self.handlers.lock().unwrap().insert(image.to_string(), Arc::new(f));
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn execute(&self, function: &str, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let handler = {
+            let map = self.handlers.lock().unwrap();
+            map.get(function).cloned()
+        };
+        match handler {
+            Some(h) => h(payload),
+            None => anyhow::bail!("no handler registered for image `{function}`"),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum FaasError {
+    #[error("function `{0}` already deployed")]
+    AlreadyDeployed(String),
+    #[error("function `{0}` not found")]
+    NotFound(String),
+    #[error("insufficient resources for `{0}`: {1}")]
+    Insufficient(String, String),
+}
+
+struct Inner {
+    functions: HashMap<String, FunctionStatus>,
+    sandboxes: SandboxManager,
+}
+
+/// One resource's FaaS backend (thread-safe).
+pub struct FaasBackend {
+    pub spec: ResourceSpec,
+    inner: Mutex<Inner>,
+    executor: Arc<dyn Executor>,
+    clock: Arc<dyn Clock>,
+}
+
+impl FaasBackend {
+    pub fn new(spec: ResourceSpec, executor: Arc<dyn Executor>, clock: Arc<dyn Clock>) -> Self {
+        let sandboxes = SandboxManager::new(spec.total_memory(), spec.total_gpus());
+        FaasBackend { spec, inner: Mutex::new(Inner { functions: HashMap::new(), sandboxes }), executor, clock }
+    }
+
+    /// Deploy a function. Fails if already present or if a single sandbox of
+    /// it could never fit this resource (the paper's phase-1 criterion
+    /// enforced locally too).
+    pub fn deploy(&self, spec: FunctionSpec) -> Result<(), FaasError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.functions.contains_key(&spec.name) {
+            return Err(FaasError::AlreadyDeployed(spec.name));
+        }
+        if spec.memory > self.spec.total_memory() {
+            return Err(FaasError::Insufficient(
+                spec.name.clone(),
+                format!("needs {}B memory, have {}B", spec.memory, self.spec.total_memory()),
+            ));
+        }
+        if spec.gpus > self.spec.total_gpus() {
+            return Err(FaasError::Insufficient(
+                spec.name.clone(),
+                format!("needs {} GPUs, have {}", spec.gpus, self.spec.total_gpus()),
+            ));
+        }
+        inner
+            .sandboxes
+            .register(&spec.name, SandboxDemand { memory: spec.memory, gpus: spec.gpus });
+        let url = format!("/function/{}", spec.name);
+        inner
+            .functions
+            .insert(spec.name.clone(), FunctionStatus { spec, replicas: 0, invocations: 0, url });
+        Ok(())
+    }
+
+    /// Remove a function and free its sandboxes.
+    pub fn remove(&self, name: &str) -> Result<(), FaasError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.functions.remove(name).is_none() {
+            return Err(FaasError::NotFound(name.to_string()));
+        }
+        inner.sandboxes.unregister(name);
+        Ok(())
+    }
+
+    /// Describe a deployed function.
+    pub fn describe(&self, name: &str) -> Result<FunctionStatus, FaasError> {
+        let inner = self.inner.lock().unwrap();
+        let mut st = inner
+            .functions
+            .get(name)
+            .cloned()
+            .ok_or_else(|| FaasError::NotFound(name.to_string()))?;
+        st.replicas = inner.sandboxes.replicas(name);
+        Ok(st)
+    }
+
+    /// List deployed function names (sorted, deterministic).
+    pub fn list(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        let mut names: Vec<String> = inner.functions.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Invoke a function synchronously. Applies sandbox admission (cold vs
+    /// warm), runs the executor, releases the sandbox, and returns
+    /// `(output, total_latency_s)`. In virtual-time mode the latency comes
+    /// from the executor's model and the clock is advanced instead of slept.
+    pub fn invoke(&self, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)> {
+        let image;
+        let admission;
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let st = inner
+                .functions
+                .get_mut(name)
+                .ok_or_else(|| FaasError::NotFound(name.to_string()))?;
+            st.invocations += 1;
+            image = st.spec.image.clone();
+            let now = self.clock.now();
+            admission = inner
+                .sandboxes
+                .admit(name, now)
+                .map_err(|e| FaasError::Insufficient(name.to_string(), e.to_string()))?;
+        }
+        let cold = matches!(admission, Admission::Cold);
+        let start = self.clock.now();
+        if cold {
+            self.clock.sleep(self.spec.cold_start_s());
+        }
+        let result = match self.executor.model_latency(&image, payload.len()) {
+            Some(model_s) => {
+                self.clock.sleep(model_s);
+                self.executor.execute(&image, payload)
+            }
+            None => self.executor.execute(&image, payload),
+        };
+        let elapsed = self.clock.now() - start;
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.sandboxes.release(name, self.clock.now());
+        }
+        let out = result?;
+        Ok((out, elapsed))
+    }
+
+    /// Memory utilization fraction (scraped by the monitoring substrate).
+    pub fn mem_utilization(&self) -> f64 {
+        self.inner.lock().unwrap().sandboxes.mem_utilization()
+    }
+
+    /// Reap idle sandboxes (OpenFaaS's scale-to-zero behaviour).
+    pub fn reap_idle(&self) -> u32 {
+        let now = self.clock.now();
+        self.inner.lock().unwrap().sandboxes.reap_idle(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::{RealClock, VirtualClock};
+
+    fn backend() -> (FaasBackend, Arc<NativeExecutor>) {
+        let exec = Arc::new(NativeExecutor::new());
+        exec.register("img/echo", |p: &[u8]| Ok(p.to_vec()));
+        exec.register("img/upper", |p: &[u8]| Ok(p.to_ascii_uppercase()));
+        let spec = ResourceSpec::paper_edge("127.0.0.1:0");
+        let b = FaasBackend::new(spec, exec.clone() as Arc<dyn Executor>, Arc::new(RealClock::new()));
+        (b, exec)
+    }
+
+    fn fspec(name: &str, image: &str) -> FunctionSpec {
+        FunctionSpec {
+            name: name.into(),
+            image: image.into(),
+            memory: 256 << 20,
+            gpus: 0,
+            labels: HashMap::new(),
+        }
+    }
+
+    #[test]
+    fn deploy_invoke_remove_cycle() {
+        let (b, _) = backend();
+        b.deploy(fspec("echo", "img/echo")).unwrap();
+        let (out, _lat) = b.invoke("echo", b"hello").unwrap();
+        assert_eq!(out, b"hello");
+        let st = b.describe("echo").unwrap();
+        assert_eq!(st.invocations, 1);
+        assert_eq!(st.replicas, 1, "sandbox stays warm after release");
+        b.remove("echo").unwrap();
+        assert!(b.invoke("echo", b"x").is_err());
+    }
+
+    #[test]
+    fn duplicate_deploy_rejected() {
+        let (b, _) = backend();
+        b.deploy(fspec("f", "img/echo")).unwrap();
+        assert!(matches!(b.deploy(fspec("f", "img/echo")), Err(FaasError::AlreadyDeployed(_))));
+    }
+
+    #[test]
+    fn oversized_function_rejected() {
+        let (b, _) = backend();
+        let mut f = fspec("big", "img/echo");
+        f.memory = 1 << 50;
+        assert!(matches!(b.deploy(f), Err(FaasError::Insufficient(..))));
+        let mut g = fspec("gpu", "img/echo");
+        g.gpus = 1;
+        assert!(matches!(b.deploy(g), Err(FaasError::Insufficient(..))), "edge has no GPU");
+    }
+
+    #[test]
+    fn list_is_sorted() {
+        let (b, _) = backend();
+        b.deploy(fspec("zeta", "img/echo")).unwrap();
+        b.deploy(fspec("alpha", "img/upper")).unwrap();
+        assert_eq!(b.list(), vec!["alpha".to_string(), "zeta".to_string()]);
+    }
+
+    #[test]
+    fn missing_image_errors_cleanly() {
+        let (b, _) = backend();
+        b.deploy(fspec("ghost", "img/none")).unwrap();
+        assert!(b.invoke("ghost", b"").is_err());
+        // Sandbox must have been released despite the error.
+        let st = b.describe("ghost").unwrap();
+        assert_eq!(st.replicas, 1);
+        assert!(b.invoke("ghost", b"").is_err(), "stays invocable (and failing)");
+    }
+
+    #[test]
+    fn virtual_clock_cold_start_accounting() {
+        let exec = Arc::new(NativeExecutor::new());
+        exec.register("img/echo", |p: &[u8]| Ok(p.to_vec()));
+        let clock = Arc::new(VirtualClock::new());
+        let spec = ResourceSpec::paper_iot("127.0.0.1:0");
+        let cold = spec.cold_start_s();
+        let b = FaasBackend::new(spec, exec as Arc<dyn Executor>, clock.clone());
+        b.deploy(fspec("echo", "img/echo")).unwrap();
+        let (_, lat1) = b.invoke("echo", b"x").unwrap();
+        assert!((lat1 - cold).abs() < 1e-6, "first call pays cold start: {lat1}");
+        let (_, lat2) = b.invoke("echo", b"x").unwrap();
+        assert!(lat2 < 1e-6, "warm call is instant in virtual time: {lat2}");
+    }
+
+    #[test]
+    fn concurrent_invocations() {
+        let (b, _) = backend();
+        b.deploy(fspec("echo", "img/echo")).unwrap();
+        let b = Arc::new(b);
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    let payload = format!("req{i}");
+                    let (out, _) = b.invoke("echo", payload.as_bytes()).unwrap();
+                    assert_eq!(out, payload.as_bytes());
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(b.describe("echo").unwrap().invocations, 8);
+    }
+}

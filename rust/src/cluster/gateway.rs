@@ -1,0 +1,318 @@
+//! Per-resource REST gateway (the OpenFaaS gateway stand-in).
+//!
+//! "Each OpenFaaS resource exposes a gateway (including Faasd) to EdgeFaaS
+//! through which EdgeFaaS deploys functions on the resource" (§3.1).
+//! Endpoints mirror the OpenFaaS shapes EdgeFaaS needs:
+//!
+//! ```text
+//! POST   /system/functions          deploy   {name, image, memory, gpus, labels}
+//! DELETE /system/functions          remove   {name}
+//! GET    /system/functions          list
+//! GET    /system/function/{name}    describe
+//! POST   /function/{name}           invoke (sync; body = payload)
+//! GET    /healthz
+//! ```
+//!
+//! Administrative verbs require the resource `pwd` in the `Authorization`
+//! header, mirroring the paper's "pwd is the password to authenticate the
+//! administrative API Gateway".
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::util::http::{Handler, Request, Response, Server};
+use crate::util::json::Json;
+
+use super::faas::{FaasBackend, FunctionSpec};
+
+/// HTTP facade over a [`FaasBackend`].
+pub struct FaasGateway {
+    backend: Arc<FaasBackend>,
+}
+
+impl FaasGateway {
+    pub fn new(backend: Arc<FaasBackend>) -> Self {
+        FaasGateway { backend }
+    }
+
+    /// Serve on an ephemeral local port; returns the server handle.
+    pub fn serve(backend: Arc<FaasBackend>, workers: usize) -> anyhow::Result<Server> {
+        let gw = Arc::new(FaasGateway::new(backend));
+        Server::bind(0, workers, gw as Arc<dyn Handler>)
+    }
+
+    fn authorized(&self, req: &Request) -> bool {
+        req.headers.get("authorization").map(|v| v.as_str())
+            == Some(self.backend.spec.pwd.as_str())
+    }
+
+    fn deploy(&self, req: &Request) -> Response {
+        if !self.authorized(req) {
+            return Response::text(401, "bad credentials");
+        }
+        let body = match req.json() {
+            Ok(v) => v,
+            Err(e) => return Response::bad_request(format!("bad json: {e}")),
+        };
+        let spec = match parse_function_spec(&body) {
+            Ok(s) => s,
+            Err(e) => return Response::bad_request(e.to_string()),
+        };
+        match self.backend.deploy(spec) {
+            Ok(()) => Response::text(201, "deployed"),
+            Err(e) => Response::text(409, e.to_string()),
+        }
+    }
+
+    fn remove(&self, req: &Request) -> Response {
+        if !self.authorized(req) {
+            return Response::text(401, "bad credentials");
+        }
+        let name = match req.json().and_then(|v| Ok(v.req_str("name")?.to_string())) {
+            Ok(n) => n,
+            Err(e) => return Response::bad_request(e.to_string()),
+        };
+        match self.backend.remove(&name) {
+            Ok(()) => Response::text(200, "removed"),
+            Err(e) => Response::text(404, e.to_string()),
+        }
+    }
+
+    fn describe(&self, name: &str) -> Response {
+        match self.backend.describe(name) {
+            Ok(st) => {
+                let mut o = Json::obj();
+                o.set("name", st.spec.name.as_str().into())
+                    .set("image", st.spec.image.as_str().into())
+                    .set("memory", st.spec.memory.into())
+                    .set("gpus", (st.spec.gpus as u64).into())
+                    .set("replicas", (st.replicas as u64).into())
+                    .set("invocations", st.invocations.into())
+                    .set("url", st.url.as_str().into());
+                let mut labels = Json::obj();
+                for (k, v) in &st.spec.labels {
+                    labels.set(k, v.as_str().into());
+                }
+                o.set("labels", labels);
+                Response::json(200, &o)
+            }
+            Err(e) => Response::text(404, e.to_string()),
+        }
+    }
+
+    fn invoke(&self, name: &str, req: &Request) -> Response {
+        match self.backend.invoke(name, &req.body) {
+            Ok((out, latency)) => {
+                let mut r = Response::bytes(200, out);
+                r.headers.insert("X-Duration-Seconds".into(), format!("{latency:.6}"));
+                r
+            }
+            Err(e) => Response::error(e.to_string()),
+        }
+    }
+}
+
+impl Handler for FaasGateway {
+    fn handle(&self, req: Request) -> Response {
+        let segs = req.segments();
+        match (req.method.as_str(), segs.as_slice()) {
+            ("GET", ["healthz"]) => Response::text(200, "ok"),
+            ("POST", ["system", "functions"]) => self.deploy(&req),
+            ("DELETE", ["system", "functions"]) => self.remove(&req),
+            ("GET", ["system", "functions"]) => {
+                let names = self.backend.list();
+                Response::json(200, &Json::from(names))
+            }
+            ("GET", ["system", "function", name]) => self.describe(name),
+            ("POST", ["function", name]) => self.invoke(name, &req),
+            _ => Response::not_found(),
+        }
+    }
+}
+
+fn parse_function_spec(v: &Json) -> anyhow::Result<FunctionSpec> {
+    let mut labels = HashMap::new();
+    if let Some(obj) = v.get("labels").and_then(Json::as_obj) {
+        for (k, lv) in obj {
+            if let Some(s) = lv.as_str() {
+                labels.insert(k.clone(), s.to_string());
+            }
+        }
+    }
+    Ok(FunctionSpec {
+        name: v.req_str("name")?.to_string(),
+        image: v.req_str("image")?.to_string(),
+        memory: v.get("memory").and_then(Json::as_u64).unwrap_or(128 << 20),
+        gpus: v.get("gpus").and_then(Json::as_u64).unwrap_or(0) as u32,
+        labels,
+    })
+}
+
+/// Client helpers for talking to a FaasGateway (used by the coordinator).
+pub mod client {
+    use crate::util::http;
+    use crate::util::json::Json;
+
+    /// Deploy a function through a resource gateway.
+    pub fn deploy(
+        addr: &str,
+        pwd: &str,
+        name: &str,
+        image: &str,
+        memory: u64,
+        gpus: u32,
+        labels: &[(String, String)],
+    ) -> anyhow::Result<()> {
+        let mut body = Json::obj();
+        body.set("name", name.into())
+            .set("image", image.into())
+            .set("memory", memory.into())
+            .set("gpus", (gpus as u64).into());
+        let mut l = Json::obj();
+        for (k, v) in labels {
+            l.set(k, v.as_str().into());
+        }
+        body.set("labels", l);
+        let resp = http::request(
+            addr,
+            "POST",
+            "/system/functions",
+            &[("Authorization", pwd), ("Content-Type", "application/json")],
+            body.to_string().as_bytes(),
+        )?;
+        if !resp.ok() {
+            anyhow::bail!("deploy {name} on {addr}: {} {}", resp.status, resp.body_str().unwrap_or(""));
+        }
+        Ok(())
+    }
+
+    /// Remove a function through a resource gateway.
+    pub fn remove(addr: &str, pwd: &str, name: &str) -> anyhow::Result<()> {
+        let mut body = Json::obj();
+        body.set("name", name.into());
+        let resp = http::request(
+            addr,
+            "DELETE",
+            "/system/functions",
+            &[("Authorization", pwd), ("Content-Type", "application/json")],
+            body.to_string().as_bytes(),
+        )?;
+        if !resp.ok() {
+            anyhow::bail!("remove {name} on {addr}: {}", resp.status);
+        }
+        Ok(())
+    }
+
+    /// Describe a function; returns the raw JSON document.
+    pub fn describe(addr: &str, name: &str) -> anyhow::Result<Json> {
+        let resp = http::get(addr, &format!("/system/function/{name}"))?;
+        if !resp.ok() {
+            anyhow::bail!("describe {name} on {addr}: {}", resp.status);
+        }
+        resp.json_body()
+    }
+
+    /// Invoke a function synchronously; returns (output, reported latency).
+    pub fn invoke(addr: &str, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)> {
+        let resp = http::post_bytes(addr, &format!("/function/{name}"), payload)?;
+        if !resp.ok() {
+            anyhow::bail!(
+                "invoke {name} on {addr}: {} {}",
+                resp.status,
+                resp.body_str().unwrap_or("")
+            );
+        }
+        let latency = resp
+            .headers
+            .get("x-duration-seconds")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.0);
+        Ok((resp.body, latency))
+    }
+
+    /// List deployed functions.
+    pub fn list(addr: &str) -> anyhow::Result<Vec<String>> {
+        let resp = http::get(addr, "/system/functions")?;
+        if !resp.ok() {
+            anyhow::bail!("list on {addr}: {}", resp.status);
+        }
+        let v = resp.json_body()?;
+        Ok(v.as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|x| x.as_str().map(String::from))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::faas::NativeExecutor;
+    use crate::cluster::spec::ResourceSpec;
+    use crate::simnet::RealClock;
+
+    fn gateway() -> (Server, Arc<FaasBackend>) {
+        let exec = Arc::new(NativeExecutor::new());
+        exec.register("img/echo", |p: &[u8]| Ok(p.to_vec()));
+        let spec = ResourceSpec::paper_edge("unused");
+        let backend = Arc::new(FaasBackend::new(
+            spec,
+            exec as Arc<dyn super::super::faas::Executor>,
+            Arc::new(RealClock::new()),
+        ));
+        let server = FaasGateway::serve(Arc::clone(&backend), 4).unwrap();
+        (server, backend)
+    }
+
+    #[test]
+    fn full_rest_lifecycle() {
+        let (server, _) = gateway();
+        let addr = server.addr();
+        let pwd = "edgepwd";
+        client::deploy(&addr, pwd, "echo", "img/echo", 128 << 20, 0, &[]).unwrap();
+        assert_eq!(client::list(&addr).unwrap(), vec!["echo".to_string()]);
+        let (out, lat) = client::invoke(&addr, "echo", b"ping").unwrap();
+        assert_eq!(out, b"ping");
+        assert!(lat >= 0.0);
+        let desc = client::describe(&addr, "echo").unwrap();
+        assert_eq!(desc.get("invocations").unwrap().as_u64(), Some(1));
+        client::remove(&addr, pwd, "echo").unwrap();
+        assert!(client::invoke(&addr, "echo", b"x").is_err());
+    }
+
+    #[test]
+    fn auth_required_for_admin_verbs() {
+        let (server, _) = gateway();
+        let addr = server.addr();
+        assert!(client::deploy(&addr, "wrongpwd", "f", "img/echo", 1 << 20, 0, &[]).is_err());
+        // Invoke needs no admin auth (matches OpenFaaS function path).
+        client::deploy(&addr, "edgepwd", "f", "img/echo", 1 << 20, 0, &[]).unwrap();
+        assert!(client::invoke(&addr, "f", b"x").is_ok());
+    }
+
+    #[test]
+    fn healthz() {
+        let (server, _) = gateway();
+        let resp = crate::util::http::get(&server.addr(), "/healthz").unwrap();
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        let (server, _) = gateway();
+        let addr = server.addr();
+        client::deploy(
+            &addr,
+            "edgepwd",
+            "f",
+            "img/echo",
+            1 << 20,
+            0,
+            &[("app".to_string(), "videopipeline".to_string())],
+        )
+        .unwrap();
+        let desc = client::describe(&addr, "f").unwrap();
+        assert_eq!(desc.get("labels").unwrap().get("app").unwrap().as_str(), Some("videopipeline"));
+    }
+}

@@ -1,0 +1,24 @@
+//! Cluster / FaaS-backend substrate (the OpenFaaS + faasd stand-in).
+//!
+//! The paper organizes every resource — a faasd Raspberry Pi, an edge
+//! Kubernetes cluster, the cloud cluster — as "an OpenFaaS resource which
+//! exposes a gateway to EdgeFaaS". This module is that resource:
+//!
+//! * [`spec`] — capability vectors from the registration YAML (Table 1) and
+//!   Table 3's testbed presets;
+//! * [`sandbox`] — function-sandbox lifecycle: cold start, warm pool,
+//!   scale-up/down, per-sandbox memory/GPU accounting;
+//! * [`faas`] — the FaaS backend proper: deploy / remove / describe / list /
+//!   invoke over an [`Executor`](faas::Executor) that either runs real
+//!   compute (PJRT) or a modeled latency (virtual-time benches);
+//! * [`gateway`] — the per-resource REST gateway speaking OpenFaaS-shaped
+//!   verbs (`/system/functions`, `/function/{name}`), with the `pwd`
+//!   credential check from the registration file.
+
+pub mod faas;
+pub mod gateway;
+pub mod sandbox;
+pub mod spec;
+
+pub use faas::{Executor, FaasBackend, FunctionSpec, NativeExecutor};
+pub use spec::ResourceSpec;

@@ -1,0 +1,285 @@
+//! Function sandbox lifecycle.
+//!
+//! FaaS platforms "quickly and dynamically scale up and down the number of
+//! function sandboxes on demand. As soon as a request finishes, its function
+//! sandboxes can be shut down to release resources" (§2.2). This module
+//! models exactly that: per-function warm pools with cold-start cost,
+//! capacity accounting against the resource's memory/GPU budget, and an idle
+//! reaper policy.
+
+use std::collections::HashMap;
+
+/// Resource demands of one sandbox instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SandboxDemand {
+    pub memory: u64,
+    pub gpus: u32,
+}
+
+/// State of a warm pool for one function.
+#[derive(Debug, Default)]
+struct Pool {
+    /// Idle warm sandboxes ready to serve.
+    warm: u32,
+    /// Sandboxes currently serving a request.
+    busy: u32,
+    /// Virtual/real timestamp of last use (for the idle reaper).
+    last_used: f64,
+    demand: Option<SandboxDemand>,
+}
+
+/// Outcome of admitting a request into the pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Admission {
+    /// A warm sandbox served the request: no startup cost.
+    Warm,
+    /// A new sandbox was started: pay the cold-start latency.
+    Cold,
+}
+
+/// Per-resource sandbox manager with capacity accounting.
+#[derive(Debug)]
+pub struct SandboxManager {
+    pools: HashMap<String, Pool>,
+    mem_capacity: u64,
+    gpu_capacity: u32,
+    mem_used: u64,
+    gpus_used: u32,
+    /// Sandboxes idle longer than this are reaped, seconds.
+    pub idle_timeout: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum SandboxError {
+    #[error("function `{0}` is not deployed")]
+    NotDeployed(String),
+    #[error("resource exhausted: need {need_mem}B mem / {need_gpu} gpu, free {free_mem}B / {free_gpu}")]
+    Exhausted { need_mem: u64, need_gpu: u32, free_mem: u64, free_gpu: u32 },
+}
+
+impl SandboxManager {
+    pub fn new(mem_capacity: u64, gpu_capacity: u32) -> Self {
+        SandboxManager {
+            pools: HashMap::new(),
+            mem_capacity,
+            gpu_capacity,
+            mem_used: 0,
+            gpus_used: 0,
+            idle_timeout: 300.0,
+        }
+    }
+
+    /// Register a function's sandbox demand (at deploy time).
+    pub fn register(&mut self, function: &str, demand: SandboxDemand) {
+        let pool = self.pools.entry(function.to_string()).or_default();
+        pool.demand = Some(demand);
+    }
+
+    /// Remove a function and release all its sandboxes.
+    pub fn unregister(&mut self, function: &str) {
+        if let Some(pool) = self.pools.remove(function) {
+            if let Some(d) = pool.demand {
+                let n = (pool.warm + pool.busy) as u64;
+                self.mem_used = self.mem_used.saturating_sub(d.memory * n);
+                self.gpus_used = self.gpus_used.saturating_sub(d.gpus * n as u32);
+            }
+        }
+    }
+
+    /// Admit one request: reuse a warm sandbox or cold-start a new one,
+    /// enforcing capacity. `now` is the clock reading (for the reaper).
+    pub fn admit(&mut self, function: &str, now: f64) -> Result<Admission, SandboxError> {
+        let pool = self
+            .pools
+            .get_mut(function)
+            .ok_or_else(|| SandboxError::NotDeployed(function.to_string()))?;
+        let demand = pool.demand.expect("registered pool has demand");
+        pool.last_used = now;
+        if pool.warm > 0 {
+            pool.warm -= 1;
+            pool.busy += 1;
+            return Ok(Admission::Warm);
+        }
+        let free_mem = self.mem_capacity - self.mem_used;
+        let free_gpu = self.gpu_capacity - self.gpus_used;
+        if demand.memory > free_mem || demand.gpus > free_gpu {
+            return Err(SandboxError::Exhausted {
+                need_mem: demand.memory,
+                need_gpu: demand.gpus,
+                free_mem,
+                free_gpu,
+            });
+        }
+        self.mem_used += demand.memory;
+        self.gpus_used += demand.gpus;
+        pool.busy += 1;
+        Ok(Admission::Cold)
+    }
+
+    /// Complete one request: the sandbox returns to the warm pool.
+    pub fn release(&mut self, function: &str, now: f64) {
+        if let Some(pool) = self.pools.get_mut(function) {
+            assert!(pool.busy > 0, "release without admit for `{function}`");
+            pool.busy -= 1;
+            pool.warm += 1;
+            pool.last_used = now;
+        }
+    }
+
+    /// Reap warm sandboxes idle past `idle_timeout`; returns reaped count.
+    pub fn reap_idle(&mut self, now: f64) -> u32 {
+        let timeout = self.idle_timeout;
+        let mut reaped = 0;
+        for pool in self.pools.values_mut() {
+            if pool.warm > 0 && now - pool.last_used > timeout {
+                if let Some(d) = pool.demand {
+                    self.mem_used = self.mem_used.saturating_sub(d.memory * pool.warm as u64);
+                    self.gpus_used = self.gpus_used.saturating_sub(d.gpus * pool.warm);
+                }
+                reaped += pool.warm;
+                pool.warm = 0;
+            }
+        }
+        reaped
+    }
+
+    /// Current replica count (warm + busy) for a function.
+    pub fn replicas(&self, function: &str) -> u32 {
+        self.pools.get(function).map(|p| p.warm + p.busy).unwrap_or(0)
+    }
+
+    pub fn mem_used(&self) -> u64 {
+        self.mem_used
+    }
+
+    pub fn gpus_used(&self) -> u32 {
+        self.gpus_used
+    }
+
+    /// Fraction of memory capacity in use (feeds the Prometheus stand-in).
+    pub fn mem_utilization(&self) -> f64 {
+        if self.mem_capacity == 0 {
+            0.0
+        } else {
+            self.mem_used as f64 / self.mem_capacity as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 1 << 20;
+
+    fn mgr() -> SandboxManager {
+        let mut m = SandboxManager::new(1024 * MB, 2);
+        m.register("f", SandboxDemand { memory: 256 * MB, gpus: 0 });
+        m
+    }
+
+    #[test]
+    fn first_request_is_cold_then_warm() {
+        let mut m = mgr();
+        assert_eq!(m.admit("f", 0.0).unwrap(), Admission::Cold);
+        m.release("f", 1.0);
+        assert_eq!(m.admit("f", 2.0).unwrap(), Admission::Warm);
+        assert_eq!(m.replicas("f"), 1);
+    }
+
+    #[test]
+    fn concurrency_scales_out() {
+        let mut m = mgr();
+        for _ in 0..4 {
+            assert_eq!(m.admit("f", 0.0).unwrap(), Admission::Cold);
+        }
+        assert_eq!(m.replicas("f"), 4);
+        assert_eq!(m.mem_used(), 1024 * MB);
+        // Capacity is now exhausted.
+        assert!(matches!(m.admit("f", 0.0), Err(SandboxError::Exhausted { .. })));
+    }
+
+    #[test]
+    fn gpu_accounting() {
+        let mut m = SandboxManager::new(1 << 40, 2);
+        m.register("g", SandboxDemand { memory: MB, gpus: 1 });
+        m.admit("g", 0.0).unwrap();
+        m.admit("g", 0.0).unwrap();
+        assert_eq!(m.gpus_used(), 2);
+        assert!(m.admit("g", 0.0).is_err(), "only 2 GPUs");
+        m.unregister("g");
+        assert_eq!(m.gpus_used(), 0);
+    }
+
+    #[test]
+    fn undeployed_function_rejected() {
+        let mut m = mgr();
+        assert!(matches!(m.admit("nope", 0.0), Err(SandboxError::NotDeployed(_))));
+    }
+
+    #[test]
+    fn reaper_frees_idle_sandboxes() {
+        let mut m = mgr();
+        m.idle_timeout = 10.0;
+        m.admit("f", 0.0).unwrap();
+        m.release("f", 1.0);
+        assert_eq!(m.reap_idle(5.0), 0, "not idle long enough");
+        assert_eq!(m.reap_idle(12.0), 1);
+        assert_eq!(m.replicas("f"), 0);
+        assert_eq!(m.mem_used(), 0);
+        // Next request cold-starts again.
+        assert_eq!(m.admit("f", 13.0).unwrap(), Admission::Cold);
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        let mut m = mgr();
+        assert_eq!(m.mem_utilization(), 0.0);
+        m.admit("f", 0.0).unwrap();
+        assert!((m.mem_utilization() - 0.25).abs() < 1e-9);
+    }
+
+    /// Property: after any interleaving of admit/release/reap, accounting
+    /// never goes negative and never exceeds capacity.
+    #[test]
+    fn prop_accounting_invariants() {
+        let mut rng = crate::util::rng::Pcg32::seeded(99);
+        let mut m = SandboxManager::new(512 * MB, 4);
+        m.idle_timeout = 5.0;
+        for f in ["a", "b", "c"] {
+            m.register(
+                f,
+                SandboxDemand {
+                    memory: (64 + 64 * rng.next_below(3) as u64) * MB,
+                    gpus: rng.next_below(2),
+                },
+            );
+        }
+        let funcs = ["a", "b", "c"];
+        let mut outstanding: Vec<&str> = Vec::new();
+        let mut now = 0.0;
+        for _ in 0..2000 {
+            now += rng.next_f64();
+            match rng.next_below(4) {
+                0 | 1 => {
+                    let f = *rng.choose(&funcs);
+                    if m.admit(f, now).is_ok() {
+                        outstanding.push(f);
+                    }
+                }
+                2 => {
+                    if !outstanding.is_empty() {
+                        let i = rng.range(0, outstanding.len());
+                        let f = outstanding.swap_remove(i);
+                        m.release(f, now);
+                    }
+                }
+                _ => {
+                    m.reap_idle(now);
+                }
+            }
+            assert!(m.mem_used() <= 512 * MB, "mem within capacity");
+            assert!(m.gpus_used() <= 4, "gpus within capacity");
+        }
+    }
+}

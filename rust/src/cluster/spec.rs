@@ -1,0 +1,283 @@
+//! Resource capability specifications.
+//!
+//! Mirrors the paper's registration YAML (Table 1) and the testbed's
+//! specifications (Table 3). The scheduler's phase-1 filter consumes these
+//! capability vectors; the sandbox pool enforces them as capacities.
+
+use crate::simnet::Tier;
+use crate::util::bytes::parse_size;
+use crate::util::yaml::Yaml;
+
+/// A resource's registered capability (Table 1 fields).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceSpec {
+    /// The paper's `name` field "illustrates the resource's nature":
+    /// iot, edge or cloud.
+    pub tier: Tier,
+    /// Number of physical nodes.
+    pub nodes: u32,
+    /// Per-node memory in bytes.
+    pub memory: u64,
+    /// Per-node logical CPU cores.
+    pub cpu: u32,
+    /// Per-node disk in bytes.
+    pub storage: u64,
+    /// Number of nodes with GPUs installed.
+    pub gpu_nodes: u32,
+    /// GPUs per GPU node.
+    pub gpus_per_node: u32,
+    /// OpenFaaS gateway endpoint (host:port).
+    pub gateway: String,
+    /// Gateway admin password.
+    pub pwd: String,
+    /// Prometheus endpoint.
+    pub prometheus: String,
+    /// MinIO endpoint + credentials.
+    pub minio: String,
+    pub minio_access_key: String,
+    pub minio_secret_key: String,
+}
+
+impl ResourceSpec {
+    /// Parse a registration YAML document (Table 1 schema).
+    pub fn from_yaml(y: &Yaml) -> anyhow::Result<ResourceSpec> {
+        let tier = Tier::parse(y.req_str("name")?)?;
+        let nodes = y.req_i64("node")? as u32;
+        if nodes == 0 {
+            anyhow::bail!("resource must have at least one node");
+        }
+        let memory = parse_size(y.req_str("memory")?)?;
+        let cpu = y.req_i64("cpu")? as u32;
+        let storage = parse_size(y.req_str("storage")?)?;
+        let gpu_nodes = y.get("gpunode").and_then(Yaml::as_i64).unwrap_or(0) as u32;
+        let gpus_per_node = y.get("gpu").and_then(Yaml::as_i64).unwrap_or(0) as u32;
+        if gpu_nodes > nodes {
+            anyhow::bail!("gpunode ({gpu_nodes}) exceeds node count ({nodes})");
+        }
+        Ok(ResourceSpec {
+            tier,
+            nodes,
+            memory,
+            cpu,
+            storage,
+            gpu_nodes,
+            gpus_per_node,
+            gateway: y.req_str("gateway")?.to_string(),
+            pwd: y.req_str("pwd")?.to_string(),
+            prometheus: y.get("prometheus").and_then(Yaml::as_str).unwrap_or("").to_string(),
+            minio: y.get("minio").and_then(Yaml::as_str).unwrap_or("").to_string(),
+            minio_access_key: y
+                .get("minioakey")
+                .and_then(Yaml::as_str)
+                .unwrap_or("")
+                .to_string(),
+            minio_secret_key: y
+                .get("minioskey")
+                .and_then(Yaml::as_str)
+                .unwrap_or("")
+                .to_string(),
+        })
+    }
+
+    /// Serialize back to the Table 1 YAML layout.
+    pub fn to_yaml(&self) -> String {
+        format!(
+            "name: {}\nnode: {}\nmemory: {}MB\ncpu: {}\nstorage: {}MB\ngpunode: {}\ngpu: {}\n\
+             gateway: {}\npwd: {}\nprometheus: {}\nminio: {}\nminioakey: {}\nminioskey: {}\n",
+            self.tier.name(),
+            self.nodes,
+            self.memory >> 20,
+            self.cpu,
+            self.storage >> 20,
+            self.gpu_nodes,
+            self.gpus_per_node,
+            self.gateway,
+            self.pwd,
+            self.prometheus,
+            self.minio,
+            self.minio_access_key,
+            self.minio_secret_key,
+        )
+    }
+
+    /// Total memory across nodes.
+    pub fn total_memory(&self) -> u64 {
+        self.memory * self.nodes as u64
+    }
+
+    /// Total GPUs across nodes.
+    pub fn total_gpus(&self) -> u32 {
+        self.gpu_nodes * self.gpus_per_node
+    }
+
+    /// Total logical cores across nodes.
+    pub fn total_cpus(&self) -> u32 {
+        self.cpu * self.nodes
+    }
+
+    /// Cold-start latency for a function sandbox on this tier, seconds.
+    /// Calibrated to typical faasd-on-Pi vs Kubernetes-on-server numbers.
+    pub fn cold_start_s(&self) -> f64 {
+        match self.tier {
+            Tier::Iot => 1.8,   // faasd + containerd on a Pi 4
+            Tier::Edge => 0.9,  // OpenFaaS on a 32-core Xeon
+            Tier::Cloud => 0.6, // warm registry, fast NVMe
+        }
+    }
+
+    /// Relative compute speed factor vs the edge tier for CPU work, and the
+    /// GPU acceleration factor for GPU-capable work. Calibrated from the
+    /// paper's Fig. 7 (e.g. face detection: 0.433 s on edge vs 0.113 s on
+    /// cloud GPU ≈ 3.8×) and from Pi-vs-Xeon single-core ratios.
+    pub fn compute_speed(&self, wants_gpu: bool) -> f64 {
+        match (self.tier, wants_gpu && self.total_gpus() > 0) {
+            (Tier::Iot, _) => 0.08,     // Cortex-A72 vs Xeon
+            (Tier::Edge, _) => 1.0,     // reference
+            (Tier::Cloud, false) => 1.15,
+            (Tier::Cloud, true) => 3.83, // 0.433/0.113 from Fig. 7
+        }
+    }
+
+    // -------------------------------------------------- Table 3 presets --
+
+    /// The paper's cloud cluster: 10 nodes, 32-core Xeon Silver 4215R,
+    /// 512 GB RAM, 512 GB EBS NVMe, 4× RTX 2080 Ti on 8 nodes.
+    pub fn paper_cloud(gateway: &str) -> ResourceSpec {
+        ResourceSpec {
+            tier: Tier::Cloud,
+            nodes: 10,
+            memory: 512 << 30,
+            cpu: 32,
+            storage: 512 << 30,
+            gpu_nodes: 8,
+            gpus_per_node: 4,
+            gateway: gateway.to_string(),
+            pwd: "cloudpwd".into(),
+            prometheus: String::new(),
+            minio: String::new(),
+            minio_access_key: "minioadmin".into(),
+            minio_secret_key: "minioadmin".into(),
+        }
+    }
+
+    /// The paper's edge cluster: 1 node, 32-core Xeon E5-2630 v3, 64 GB RAM,
+    /// 400 GB NVMe, no GPU.
+    pub fn paper_edge(gateway: &str) -> ResourceSpec {
+        ResourceSpec {
+            tier: Tier::Edge,
+            nodes: 1,
+            memory: 64 << 30,
+            cpu: 32,
+            storage: 400 << 30,
+            gpu_nodes: 0,
+            gpus_per_node: 0,
+            gateway: gateway.to_string(),
+            pwd: "edgepwd".into(),
+            prometheus: String::new(),
+            minio: String::new(),
+            minio_access_key: "minioadmin".into(),
+            minio_secret_key: "minioadmin".into(),
+        }
+    }
+
+    /// A paper IoT device: Raspberry Pi 4B, quad Cortex-A72, 4 GB RAM,
+    /// 64 GB SD card, running faasd.
+    pub fn paper_iot(gateway: &str) -> ResourceSpec {
+        ResourceSpec {
+            tier: Tier::Iot,
+            nodes: 1,
+            memory: 4 << 30,
+            cpu: 4,
+            storage: 64 << 30,
+            gpu_nodes: 0,
+            gpus_per_node: 0,
+            gateway: gateway.to_string(),
+            pwd: "iotpwd".into(),
+            prometheus: String::new(),
+            minio: String::new(),
+            minio_access_key: "minioadmin".into(),
+            minio_secret_key: "minioadmin".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::yaml;
+
+    const TABLE1: &str = "\
+name: cloud
+node: 10
+memory: 64GB
+cpu: 32
+storage: 512GB
+gpunode: 8
+gpu: 4
+gateway: 10.107.30.249:8080
+pwd: s2TsHbDfGi
+prometheus: 10.107.30.112:30090
+minio: 10.107.30.112:9000
+minioakey: minioadmin
+minioskey: minioadmin
+";
+
+    #[test]
+    fn parses_table1_sample() {
+        let y = yaml::parse(TABLE1).unwrap();
+        let spec = ResourceSpec::from_yaml(&y).unwrap();
+        assert_eq!(spec.tier, Tier::Cloud);
+        assert_eq!(spec.nodes, 10);
+        assert_eq!(spec.memory, 64 << 30);
+        assert_eq!(spec.total_gpus(), 32);
+        assert_eq!(spec.gateway, "10.107.30.249:8080");
+        assert_eq!(spec.pwd, "s2TsHbDfGi");
+    }
+
+    #[test]
+    fn yaml_roundtrip() {
+        let y = yaml::parse(TABLE1).unwrap();
+        let spec = ResourceSpec::from_yaml(&y).unwrap();
+        let text = spec.to_yaml();
+        let spec2 = ResourceSpec::from_yaml(&yaml::parse(&text).unwrap()).unwrap();
+        assert_eq!(spec, spec2);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        // zero nodes
+        let bad = TABLE1.replace("node: 10", "node: 0");
+        assert!(ResourceSpec::from_yaml(&yaml::parse(&bad).unwrap()).is_err());
+        // gpunode > node
+        let bad = TABLE1.replace("gpunode: 8", "gpunode: 20");
+        assert!(ResourceSpec::from_yaml(&yaml::parse(&bad).unwrap()).is_err());
+        // unknown tier
+        let bad = TABLE1.replace("name: cloud", "name: fog");
+        assert!(ResourceSpec::from_yaml(&yaml::parse(&bad).unwrap()).is_err());
+        // missing gateway
+        let bad = TABLE1.replace("gateway: 10.107.30.249:8080\n", "");
+        assert!(ResourceSpec::from_yaml(&yaml::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn presets_match_table3() {
+        let cloud = ResourceSpec::paper_cloud("c:8080");
+        assert_eq!(cloud.nodes, 10);
+        assert_eq!(cloud.total_gpus(), 32);
+        let edge = ResourceSpec::paper_edge("e:8080");
+        assert_eq!(edge.memory, 64 << 30);
+        assert_eq!(edge.total_gpus(), 0);
+        let iot = ResourceSpec::paper_iot("i:8080");
+        assert_eq!(iot.cpu, 4);
+        assert_eq!(iot.memory, 4 << 30);
+    }
+
+    #[test]
+    fn gpu_speedup_only_with_gpus() {
+        let cloud = ResourceSpec::paper_cloud("c");
+        let edge = ResourceSpec::paper_edge("e");
+        assert!(cloud.compute_speed(true) > 3.0);
+        assert!((edge.compute_speed(true) - 1.0).abs() < 1e-9, "no GPU on edge");
+        assert!(ResourceSpec::paper_iot("i").compute_speed(false) < 0.2);
+    }
+}

@@ -1,0 +1,454 @@
+//! Application configuration (the paper's Table 2 YAML schema).
+//!
+//! "Before the functions are created, the user needs to configure the
+//! application first. A YAML file with the application's configuration is
+//! provided" (§3.2). The schema:
+//!
+//! ```yaml
+//! application: federatedlearning
+//! entrypoint: train            # or a list of entrypoints
+//! dag:
+//!   - name: train
+//!     dependencies:            # previous functions (empty for sources)
+//!     requirements:
+//!       memory: 1024MB
+//!       gpu: 0
+//!       privacy: 0             # 1 => IoT-only, where the data is generated
+//!     affinity:
+//!       nodetype: iot          # iot | edge | cloud
+//!       affinitytype: data     # data | function (paper also spells this
+//!                              #   field `nodelocation`; both accepted)
+//!     reduce: auto             # 1 | auto
+//! ```
+
+use crate::simnet::Tier;
+use crate::util::bytes::parse_size;
+use crate::util::yaml::Yaml;
+
+/// `affinitytype`: deploy relative to input data or to the dependency
+/// function's placements (§3.2.2 point 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AffinityType {
+    Data,
+    Function,
+}
+
+/// `reduce`: how many instances of the function to deploy (§3.2.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reduce {
+    /// One instance, closest to *all* upstream locations.
+    One,
+    /// One instance per upstream location ("EdgeFaaS automatically finds the
+    /// closest resource to each IoT device of the previous function").
+    Auto,
+}
+
+/// Placement constraint (§3.2.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Affinity {
+    pub nodetype: Tier,
+    pub affinitytype: AffinityType,
+}
+
+/// Resource requirements (§3.2.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Requirements {
+    /// Required memory per sandbox, bytes.
+    pub memory: u64,
+    /// Required GPU count.
+    pub gpu: u32,
+    /// 1 => may only run on the IoT devices where the input data is
+    /// generated (privacy preservation by never moving the data).
+    pub privacy: bool,
+}
+
+impl Default for Requirements {
+    fn default() -> Self {
+        Requirements { memory: 128 << 20, gpu: 0, privacy: false }
+    }
+}
+
+/// One function's configuration within the application DAG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FunctionConfig {
+    pub name: String,
+    pub dependencies: Vec<String>,
+    pub requirements: Requirements,
+    pub affinity: Affinity,
+    pub reduce: Reduce,
+}
+
+/// A parsed application configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppConfig {
+    pub application: String,
+    pub entrypoints: Vec<String>,
+    pub functions: Vec<FunctionConfig>,
+}
+
+impl AppConfig {
+    /// Parse and validate a Table-2 YAML document.
+    pub fn from_yaml(y: &Yaml) -> anyhow::Result<AppConfig> {
+        let application = y.req_str("application")?.to_string();
+        if application.is_empty() || application.contains('.') || application.contains('/') {
+            anyhow::bail!("invalid application name `{application}`");
+        }
+        // "If multiple entrypoints are given, all the entrypoints will be
+        // invoked at the same time."
+        let entrypoints: Vec<String> = match y.get("entrypoint") {
+            Some(Yaml::Scalar(s)) => vec![s.clone()],
+            Some(Yaml::Seq(items)) => items
+                .iter()
+                .map(|i| {
+                    i.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| anyhow::anyhow!("non-scalar entrypoint"))
+                })
+                .collect::<anyhow::Result<_>>()?,
+            _ => anyhow::bail!("missing entrypoint"),
+        };
+        let dag = y
+            .get("dag")
+            .and_then(Yaml::as_seq)
+            .ok_or_else(|| anyhow::anyhow!("missing dag"))?;
+        let functions = dag.iter().map(parse_function).collect::<anyhow::Result<Vec<_>>>()?;
+        let cfg = AppConfig { application, entrypoints, functions };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Structural validation: unique names, known dependencies, entrypoints
+    /// present, no dependency cycles (see [`super::dag`]).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.functions.is_empty() {
+            anyhow::bail!("dag has no functions");
+        }
+        let mut seen = std::collections::HashSet::new();
+        for f in &self.functions {
+            if f.name.is_empty() || f.name.contains('.') || f.name.contains('/') {
+                anyhow::bail!("invalid function name `{}`", f.name);
+            }
+            if !seen.insert(f.name.as_str()) {
+                anyhow::bail!("duplicate function `{}`", f.name);
+            }
+        }
+        for f in &self.functions {
+            for d in &f.dependencies {
+                if !seen.contains(d.as_str()) {
+                    anyhow::bail!("function `{}` depends on unknown `{d}`", f.name);
+                }
+            }
+        }
+        for e in &self.entrypoints {
+            if !seen.contains(e.as_str()) {
+                anyhow::bail!("entrypoint `{e}` is not in the dag");
+            }
+        }
+        super::dag::Dag::build(self)?; // cycle check + topo order
+        Ok(())
+    }
+
+    pub fn function(&self, name: &str) -> Option<&FunctionConfig> {
+        self.functions.iter().find(|f| f.name == name)
+    }
+
+    /// Functions that depend on `name`.
+    pub fn dependents(&self, name: &str) -> Vec<&FunctionConfig> {
+        self.functions.iter().filter(|f| f.dependencies.iter().any(|d| d == name)).collect()
+    }
+}
+
+fn parse_function(y: &Yaml) -> anyhow::Result<FunctionConfig> {
+    let name = y.req_str("name")?.to_string();
+    let dependencies = match y.get("dependencies") {
+        None | Some(Yaml::Null) => Vec::new(),
+        Some(Yaml::Scalar(s)) if s.trim().is_empty() => Vec::new(),
+        // The paper writes a single dependency as a scalar; also accept a
+        // comma list or a YAML sequence for fan-in.
+        Some(Yaml::Scalar(s)) => s.split(',').map(|p| p.trim().to_string()).collect(),
+        Some(Yaml::Seq(items)) => items
+            .iter()
+            .map(|i| {
+                i.as_str().map(String::from).ok_or_else(|| anyhow::anyhow!("bad dependency"))
+            })
+            .collect::<anyhow::Result<_>>()?,
+        Some(other) => anyhow::bail!("bad dependencies for `{name}`: {other:?}"),
+    };
+    let requirements = match y.get("requirements") {
+        Some(r) => Requirements {
+            memory: match r.get("memory").and_then(Yaml::as_str) {
+                Some(s) => parse_size(s)?,
+                None => Requirements::default().memory,
+            },
+            gpu: r.get("gpu").and_then(Yaml::as_i64).unwrap_or(0) as u32,
+            privacy: r.get("privacy").and_then(Yaml::as_i64).unwrap_or(0) == 1,
+        },
+        None => Requirements::default(),
+    };
+    let affinity = {
+        let a = y
+            .get("affinity")
+            .ok_or_else(|| anyhow::anyhow!("function `{name}` missing affinity"))?;
+        let nodetype = Tier::parse(a.req_str("nodetype")?)?;
+        // The paper's two YAML listings spell this field differently
+        // (`affinitytype` in source code 1, `nodelocation` in source code 2).
+        let at = a
+            .get("affinitytype")
+            .or_else(|| a.get("nodelocation"))
+            .and_then(Yaml::as_str)
+            .ok_or_else(|| anyhow::anyhow!("function `{name}` missing affinitytype"))?;
+        let affinitytype = match at {
+            "data" => AffinityType::Data,
+            "function" => AffinityType::Function,
+            other => anyhow::bail!("bad affinitytype `{other}` for `{name}`"),
+        };
+        Affinity { nodetype, affinitytype }
+    };
+    let reduce = match y.get("reduce").and_then(Yaml::as_str).unwrap_or("auto") {
+        "1" => Reduce::One,
+        "auto" => Reduce::Auto,
+        other => anyhow::bail!("bad reduce `{other}` for `{name}` (expected 1|auto)"),
+    };
+    Ok(FunctionConfig { name, dependencies, requirements, affinity, reduce })
+}
+
+/// The paper's video-analytics configuration (source code 1), with the
+/// placement tiers of Fig. 10 (the empirical optimum found in Fig. 9).
+pub fn video_pipeline_yaml() -> &'static str {
+    "\
+application: videopipeline
+entrypoint: video-generator
+dag:
+  - name: video-generator
+    affinity:
+      nodetype: iot
+      affinitytype: data
+    reduce: auto
+  - name: video-processing
+    dependencies: video-generator
+    affinity:
+      nodetype: edge
+      affinitytype: function
+    reduce: auto
+  - name: motion-detection
+    dependencies: video-processing
+    affinity:
+      nodetype: edge
+      affinitytype: function
+    reduce: auto
+  - name: face-detection
+    dependencies: motion-detection
+    affinity:
+      nodetype: edge
+      affinitytype: function
+    reduce: auto
+  - name: face-extraction
+    dependencies: face-detection
+    affinity:
+      nodetype: cloud
+      affinitytype: function
+    reduce: auto
+  - name: face-recognition
+    dependencies: face-extraction
+    affinity:
+      nodetype: cloud
+      affinitytype: function
+    reduce: auto
+"
+}
+
+/// The paper's federated-learning configuration (source code 2).
+pub fn federated_learning_yaml() -> &'static str {
+    "\
+application: federatedlearning
+entrypoint: train
+dag:
+  - name: train
+    dependencies:
+    requirements:
+      memory: 1024MB
+      gpu: 0
+      privacy: 1
+    affinity:
+      nodetype: iot
+      nodelocation: data
+    reduce: auto
+  - name: firstaggregation
+    dependencies: train
+    affinity:
+      nodetype: edge
+      nodelocation: function
+    reduce: auto
+  - name: secondaggregation
+    dependencies: firstaggregation
+    affinity:
+      nodetype: cloud
+      nodelocation: function
+    reduce: 1
+"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::yaml;
+
+    #[test]
+    fn parses_federated_learning_yaml() {
+        let cfg = AppConfig::from_yaml(&yaml::parse(federated_learning_yaml()).unwrap()).unwrap();
+        assert_eq!(cfg.application, "federatedlearning");
+        assert_eq!(cfg.entrypoints, vec!["train"]);
+        assert_eq!(cfg.functions.len(), 3);
+        let train = cfg.function("train").unwrap();
+        assert!(train.dependencies.is_empty());
+        assert!(train.requirements.privacy);
+        assert_eq!(train.requirements.memory, 1 << 30);
+        assert_eq!(train.affinity.nodetype, Tier::Iot);
+        assert_eq!(train.affinity.affinitytype, AffinityType::Data);
+        assert_eq!(train.reduce, Reduce::Auto);
+        let agg2 = cfg.function("secondaggregation").unwrap();
+        assert_eq!(agg2.reduce, Reduce::One);
+        assert_eq!(agg2.dependencies, vec!["firstaggregation"]);
+    }
+
+    #[test]
+    fn parses_video_pipeline_yaml() {
+        let cfg = AppConfig::from_yaml(&yaml::parse(video_pipeline_yaml()).unwrap()).unwrap();
+        assert_eq!(cfg.functions.len(), 6);
+        assert_eq!(cfg.function("video-generator").unwrap().affinity.affinitytype, AffinityType::Data);
+        assert_eq!(cfg.function("face-recognition").unwrap().affinity.nodetype, Tier::Cloud);
+        assert_eq!(cfg.dependents("motion-detection").len(), 1);
+    }
+
+    #[test]
+    fn multiple_entrypoints() {
+        let doc = "\
+application: multi
+entrypoint:
+  - a
+  - b
+dag:
+  - name: a
+    affinity: {nope: 0}
+";
+        // flow-style affinity is unsupported -> function parsing must fail
+        assert!(AppConfig::from_yaml(&yaml::parse(doc).unwrap()).is_err());
+        let doc = "\
+application: multi
+entrypoint:
+  - a
+  - b
+dag:
+  - name: a
+    affinity:
+      nodetype: iot
+      affinitytype: data
+  - name: b
+    affinity:
+      nodetype: edge
+      affinitytype: data
+";
+        let cfg = AppConfig::from_yaml(&yaml::parse(doc).unwrap()).unwrap();
+        assert_eq!(cfg.entrypoints, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn rejects_structural_errors() {
+        // Unknown dependency.
+        let doc = "\
+application: bad
+entrypoint: a
+dag:
+  - name: a
+    dependencies: ghost
+    affinity:
+      nodetype: iot
+      affinitytype: data
+";
+        assert!(AppConfig::from_yaml(&yaml::parse(doc).unwrap()).is_err());
+        // Duplicate function.
+        let doc = "\
+application: bad
+entrypoint: a
+dag:
+  - name: a
+    affinity:
+      nodetype: iot
+      affinitytype: data
+  - name: a
+    affinity:
+      nodetype: iot
+      affinitytype: data
+";
+        assert!(AppConfig::from_yaml(&yaml::parse(doc).unwrap()).is_err());
+        // Missing entrypoint in dag.
+        let doc = "\
+application: bad
+entrypoint: ghost
+dag:
+  - name: a
+    affinity:
+      nodetype: iot
+      affinitytype: data
+";
+        assert!(AppConfig::from_yaml(&yaml::parse(doc).unwrap()).is_err());
+        // Dependency cycle.
+        let doc = "\
+application: bad
+entrypoint: a
+dag:
+  - name: a
+    dependencies: b
+    affinity:
+      nodetype: iot
+      affinitytype: data
+  - name: b
+    dependencies: a
+    affinity:
+      nodetype: iot
+      affinitytype: data
+";
+        assert!(AppConfig::from_yaml(&yaml::parse(doc).unwrap()).is_err());
+    }
+
+    #[test]
+    fn fan_in_dependency_list() {
+        let doc = "\
+application: join
+entrypoint: a
+dag:
+  - name: a
+    affinity:
+      nodetype: iot
+      affinitytype: data
+  - name: b
+    affinity:
+      nodetype: iot
+      affinitytype: data
+  - name: j
+    dependencies: a, b
+    affinity:
+      nodetype: cloud
+      affinitytype: function
+";
+        let cfg = AppConfig::from_yaml(&yaml::parse(doc).unwrap()).unwrap();
+        assert_eq!(cfg.function("j").unwrap().dependencies, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let doc = "\
+application: app
+entrypoint: f
+dag:
+  - name: f
+    affinity:
+      nodetype: cloud
+      affinitytype: data
+";
+        let cfg = AppConfig::from_yaml(&yaml::parse(doc).unwrap()).unwrap();
+        let f = cfg.function("f").unwrap();
+        assert_eq!(f.requirements, Requirements::default());
+        assert_eq!(f.reduce, Reduce::Auto);
+    }
+}

@@ -1,0 +1,322 @@
+//! Asynchronous invocation + load-driven rescheduling.
+//!
+//! §3.2.1: "A function can be invoked synchronously (and wait for the
+//! response), or asynchronously. To invoke a function asynchronously, set
+//! Sync to False." — [`EdgeFaaS::invoke_async`] returns an invocation id
+//! immediately; results are polled (or awaited) through the tracker, the
+//! OpenFaaS async-function pattern.
+//!
+//! §3.1.2 + the NanoLambda comparison (§6: NanoLambda "does not follow the
+//! dynamic changes of system loads ... to reschedule functions" — implying
+//! EdgeFaaS does): [`EdgeFaaS::reschedule_function`] re-runs the two-phase
+//! scheduler against *current* monitoring data and migrates deployments
+//! whose placement changed.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::json::Json;
+
+use super::functions::FunctionPackage;
+use super::resource::{EdgeFaaS, ResourceId};
+use super::scheduler::FunctionCreation;
+
+/// Handle for one asynchronous invocation.
+pub type InvocationId = u64;
+
+/// Status of an async invocation.
+#[derive(Debug, Clone)]
+pub enum AsyncStatus {
+    Pending,
+    Done(Vec<(ResourceId, Vec<u8>, f64)>),
+    Failed(String),
+}
+
+/// Tracker for in-flight async invocations.
+#[derive(Default)]
+pub struct AsyncTracker {
+    next: AtomicU64,
+    state: Mutex<HashMap<InvocationId, AsyncStatus>>,
+    cv: Condvar,
+}
+
+impl AsyncTracker {
+    pub fn new() -> Arc<AsyncTracker> {
+        Arc::new(AsyncTracker::default())
+    }
+
+    fn begin(&self) -> InvocationId {
+        let id = self.next.fetch_add(1, Ordering::SeqCst);
+        self.state.lock().unwrap().insert(id, AsyncStatus::Pending);
+        id
+    }
+
+    fn finish(&self, id: InvocationId, status: AsyncStatus) {
+        self.state.lock().unwrap().insert(id, status);
+        self.cv.notify_all();
+    }
+
+    /// Non-blocking poll.
+    pub fn poll(&self, id: InvocationId) -> Option<AsyncStatus> {
+        self.state.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block until the invocation completes (or `timeout_s` elapses).
+    pub fn wait(&self, id: InvocationId, timeout_s: f64) -> anyhow::Result<AsyncStatus> {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs_f64(timeout_s);
+        let mut guard = self.state.lock().unwrap();
+        loop {
+            match guard.get(&id) {
+                None => anyhow::bail!("unknown invocation {id}"),
+                Some(AsyncStatus::Pending) => {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        anyhow::bail!("invocation {id} timed out");
+                    }
+                    let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+                    guard = g;
+                }
+                Some(done) => return Ok(done.clone()),
+            }
+        }
+    }
+
+    /// Drop a completed invocation's record.
+    pub fn forget(&self, id: InvocationId) {
+        self.state.lock().unwrap().remove(&id);
+    }
+}
+
+impl EdgeFaaS {
+    /// Invoke() with Sync=False: fire on a background thread, return the
+    /// invocation id immediately. Results land in `tracker`.
+    pub fn invoke_async(
+        self: &Arc<Self>,
+        tracker: &Arc<AsyncTracker>,
+        app: &str,
+        function: &str,
+        payload: &Json,
+        invoke_one: bool,
+    ) -> InvocationId {
+        let id = tracker.begin();
+        let faas = Arc::clone(self);
+        let tracker = Arc::clone(tracker);
+        let (app, function, payload) = (app.to_string(), function.to_string(), payload.clone());
+        std::thread::Builder::new()
+            .name(format!("async-{id}"))
+            .spawn(move || {
+                let status = match faas.invoke(&app, &function, &payload, invoke_one) {
+                    Ok(results) => AsyncStatus::Done(results),
+                    Err(e) => AsyncStatus::Failed(e.to_string()),
+                };
+                tracker.finish(id, status);
+            })
+            .expect("spawn async invocation");
+        id
+    }
+
+    /// Re-run two-phase scheduling for a deployed function against current
+    /// monitoring data; if the placement changed, deploy on the new
+    /// resources and remove from the abandoned ones. Returns
+    /// `(old, new)` placements.
+    pub fn reschedule_function(
+        &self,
+        app: &str,
+        function: &str,
+        package: &FunctionPackage,
+        data_locations: Vec<ResourceId>,
+    ) -> anyhow::Result<(Vec<ResourceId>, Vec<ResourceId>)> {
+        let application = self.app(app)?;
+        let cfg = application
+            .config
+            .function(function)
+            .ok_or_else(|| anyhow::anyhow!("no function `{function}` in `{app}`"))?
+            .clone();
+        let old = self.candidates_of(app, function)?;
+        // Dependency placements as currently recorded.
+        let mut dep_locations = Vec::new();
+        for d in &cfg.dependencies {
+            dep_locations.extend(self.candidates_of(app, d).unwrap_or_default());
+        }
+        let request = FunctionCreation {
+            app: app.to_string(),
+            function: cfg,
+            data_locations,
+            dep_locations,
+        };
+        let new = self.schedule_function(&request)?;
+        if new == old {
+            return Ok((old.clone(), new));
+        }
+        let qname = Self::qualified(app, function);
+        // Deploy on newly-chosen resources first (make-before-break), then
+        // remove from the abandoned ones.
+        let labels =
+            vec![("app".to_string(), app.to_string()), ("fn".to_string(), function.to_string())];
+        for &rid in new.iter().filter(|r| !old.contains(r)) {
+            let reg = self.resource(rid)?;
+            reg.handle.deploy(
+                &qname,
+                &package.code,
+                request_memory(self, app, function)?,
+                0,
+                &labels,
+            )?;
+        }
+        for &rid in old.iter().filter(|r| !new.contains(r)) {
+            if let Ok(reg) = self.resource(rid) {
+                let _ = reg.handle.remove(&qname);
+            }
+        }
+        log::info!("rescheduled {qname}: {old:?} -> {new:?}");
+        Ok((old, new))
+    }
+}
+
+fn request_memory(faas: &EdgeFaaS, app: &str, function: &str) -> anyhow::Result<u64> {
+    Ok(faas
+        .app(app)?
+        .config
+        .function(function)
+        .map(|f| f.requirements.memory)
+        .unwrap_or(128 << 20))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::appconfig::federated_learning_yaml;
+    use crate::simnet::RealClock;
+    use crate::testbed::paper_testbed;
+
+    fn configured() -> crate::testbed::TestBed {
+        let bed = paper_testbed(Arc::new(RealClock::new()));
+        let mut data = HashMap::new();
+        data.insert("train".to_string(), bed.iot.clone());
+        bed.faas.configure_application(federated_learning_yaml(), &data).unwrap();
+        bed
+    }
+
+    #[test]
+    fn async_invoke_completes_and_is_pollable() {
+        let bed = configured();
+        bed.executor.register("img/slow", |p: &[u8]| {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            Ok(p.to_vec())
+        });
+        bed.faas
+            .deploy_function(
+                "federatedlearning",
+                "secondaggregation",
+                &FunctionPackage { code: "img/slow".into() },
+            )
+            .unwrap();
+        let tracker = AsyncTracker::new();
+        let id = bed.faas.invoke_async(
+            &tracker,
+            "federatedlearning",
+            "secondaggregation",
+            &Json::obj(),
+            true,
+        );
+        // Immediately pending (the handler sleeps 50 ms).
+        assert!(matches!(tracker.poll(id), Some(AsyncStatus::Pending)));
+        let status = tracker.wait(id, 5.0).unwrap();
+        match status {
+            AsyncStatus::Done(results) => assert_eq!(results.len(), 1),
+            other => panic!("unexpected status {other:?}"),
+        }
+        tracker.forget(id);
+        assert!(tracker.poll(id).is_none());
+    }
+
+    #[test]
+    fn async_failure_is_reported() {
+        let bed = configured();
+        bed.executor.register("img/fail", |_: &[u8]| anyhow::bail!("boom"));
+        bed.faas
+            .deploy_function(
+                "federatedlearning",
+                "secondaggregation",
+                &FunctionPackage { code: "img/fail".into() },
+            )
+            .unwrap();
+        let tracker = AsyncTracker::new();
+        let id = bed.faas.invoke_async(
+            &tracker,
+            "federatedlearning",
+            "secondaggregation",
+            &Json::obj(),
+            true,
+        );
+        match tracker.wait(id, 5.0).unwrap() {
+            AsyncStatus::Failed(msg) => assert!(msg.contains("boom"), "{msg}"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_times_out_and_unknown_id_errors() {
+        let tracker = AsyncTracker::new();
+        assert!(tracker.wait(999, 0.05).is_err(), "unknown id");
+        let id = tracker.begin();
+        assert!(tracker.wait(id, 0.05).is_err(), "times out while pending");
+    }
+
+    #[test]
+    fn reschedule_is_stable_without_load_change() {
+        let bed = configured();
+        bed.executor.register("img/noop", |_: &[u8]| Ok(vec![]));
+        let pkg = FunctionPackage { code: "img/noop".into() };
+        bed.faas.deploy_function("federatedlearning", "train", &pkg).unwrap();
+        let (old, new) = bed
+            .faas
+            .reschedule_function("federatedlearning", "train", &pkg, bed.iot.clone())
+            .unwrap();
+        assert_eq!(old, new, "same load, same placement");
+    }
+
+    #[test]
+    fn reschedule_migrates_away_from_saturated_resource() {
+        let bed = configured();
+        bed.executor.register("img/noop", |_: &[u8]| Ok(vec![]));
+        let pkg = FunctionPackage { code: "img/noop".into() };
+        // A single-placement edge function anchored near set 1.
+        let yaml = "\
+application: mono
+entrypoint: f
+dag:
+  - name: f
+    requirements:
+      memory: 1024MB
+    affinity:
+      nodetype: edge
+      affinitytype: data
+    reduce: 1
+";
+        let mut data = HashMap::new();
+        data.insert("f".to_string(), vec![bed.iot[0]]);
+        let plan = bed.faas.configure_application(yaml, &data).unwrap();
+        assert_eq!(plan["f"], vec![bed.edges[0]], "closest edge first");
+        bed.faas.deploy_function("mono", "f", &pkg).unwrap();
+        // Saturate edge 0's memory: a hog leaves only 0.5 GB free (< f's 1 GB) and
+        // invoke it so sandboxes are admitted.
+        let hog_backend = {
+            let reg = bed.faas.resource(bed.edges[0]).unwrap();
+            reg.handle.deploy("hog", "img/noop", 127 << 29, 0, &[]).unwrap(); // 63.5 GB of 64
+            reg
+        };
+        hog_backend.handle.invoke("hog", b"").unwrap();
+        // Rescheduling must now move `f` to the other edge.
+        let (old, new) =
+            bed.faas.reschedule_function("mono", "f", &pkg, vec![bed.iot[0]]).unwrap();
+        assert_eq!(old, vec![bed.edges[0]]);
+        assert_eq!(new, vec![bed.edges[1]], "migrated to the unloaded edge");
+        // Old deployment removed, new one live.
+        let reg0 = bed.faas.resource(bed.edges[0]).unwrap();
+        assert!(!reg0.handle.list().unwrap().contains(&"mono.f".to_string()));
+        let reg1 = bed.faas.resource(bed.edges[1]).unwrap();
+        assert!(reg1.handle.list().unwrap().contains(&"mono.f".to_string()));
+    }
+}

@@ -1,0 +1,226 @@
+//! DAG construction over an application configuration (§3.2.2).
+//!
+//! "EdgeFaaS stores the application specifications in a Directed acyclic
+//! graph (DAG). The functions are the nodes and the dependencies are the
+//! edges." The DAG provides the topological order the deployer walks (a
+//! function's placement depends on its dependencies' placements) and the
+//! readiness bookkeeping the invoker uses for workflow chaining.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use super::appconfig::AppConfig;
+
+/// A validated DAG with topological order.
+#[derive(Debug, Clone)]
+pub struct Dag {
+    /// Function names in a valid topological order (dependencies first).
+    pub topo_order: Vec<String>,
+    /// name -> indices of dependent functions (edges out).
+    pub dependents: HashMap<String, Vec<String>>,
+    /// name -> dependency names (edges in).
+    pub dependencies: HashMap<String, Vec<String>>,
+}
+
+impl Dag {
+    /// Build and cycle-check the DAG (Kahn's algorithm).
+    pub fn build(cfg: &AppConfig) -> anyhow::Result<Dag> {
+        let mut indeg: HashMap<&str, usize> = HashMap::new();
+        let mut dependents: HashMap<String, Vec<String>> = HashMap::new();
+        let mut dependencies: HashMap<String, Vec<String>> = HashMap::new();
+        for f in &cfg.functions {
+            indeg.entry(f.name.as_str()).or_insert(0);
+            dependencies.insert(f.name.clone(), f.dependencies.clone());
+            for d in &f.dependencies {
+                *indeg.entry(f.name.as_str()).or_insert(0) += 1;
+                dependents.entry(d.clone()).or_default().push(f.name.clone());
+            }
+        }
+        let mut queue: VecDeque<&str> = cfg
+            .functions
+            .iter()
+            .filter(|f| indeg[f.name.as_str()] == 0)
+            .map(|f| f.name.as_str())
+            .collect();
+        let mut topo = Vec::with_capacity(cfg.functions.len());
+        while let Some(n) = queue.pop_front() {
+            topo.push(n.to_string());
+            if let Some(deps) = dependents.get(n) {
+                for d in deps.clone() {
+                    let e = indeg.get_mut(d.as_str()).unwrap();
+                    *e -= 1;
+                    if *e == 0 {
+                        queue.push_back(cfg.function(&d).unwrap().name.as_str());
+                    }
+                }
+            }
+        }
+        if topo.len() != cfg.functions.len() {
+            let stuck: Vec<&str> = cfg
+                .functions
+                .iter()
+                .map(|f| f.name.as_str())
+                .filter(|n| !topo.iter().any(|t| t == n))
+                .collect();
+            anyhow::bail!("dependency cycle involving {stuck:?}");
+        }
+        Ok(Dag { topo_order: topo, dependents, dependencies })
+    }
+
+    /// Source functions (no dependencies).
+    pub fn sources(&self) -> Vec<&str> {
+        self.topo_order
+            .iter()
+            .filter(|n| self.dependencies.get(*n).map(|d| d.is_empty()).unwrap_or(true))
+            .map(String::as_str)
+            .collect()
+    }
+
+    /// Sink functions (no dependents).
+    pub fn sinks(&self) -> Vec<&str> {
+        self.topo_order
+            .iter()
+            .filter(|n| self.dependents.get(*n).map(|d| d.is_empty()).unwrap_or(true))
+            .map(String::as_str)
+            .collect()
+    }
+
+    /// All transitive dependencies of `name` (not including itself).
+    pub fn ancestors(&self, name: &str) -> HashSet<String> {
+        let mut out = HashSet::new();
+        let mut stack: Vec<&str> = self
+            .dependencies
+            .get(name)
+            .map(|d| d.iter().map(String::as_str).collect())
+            .unwrap_or_default();
+        while let Some(n) = stack.pop() {
+            if out.insert(n.to_string()) {
+                if let Some(deps) = self.dependencies.get(n) {
+                    stack.extend(deps.iter().map(String::as_str));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Readiness tracker for one workflow run: a function fires when all its
+/// dependencies have completed (the invoker's join logic).
+#[derive(Debug)]
+pub struct RunState {
+    remaining: HashMap<String, usize>,
+    done: HashSet<String>,
+}
+
+impl RunState {
+    pub fn new(dag: &Dag) -> RunState {
+        let remaining = dag
+            .dependencies
+            .iter()
+            .map(|(k, v)| (k.clone(), v.len()))
+            .collect();
+        RunState { remaining, done: HashSet::new() }
+    }
+
+    /// Mark `name` complete; returns the newly-ready dependents.
+    pub fn complete(&mut self, dag: &Dag, name: &str) -> Vec<String> {
+        if !self.done.insert(name.to_string()) {
+            return Vec::new(); // already completed
+        }
+        let mut ready = Vec::new();
+        if let Some(deps) = dag.dependents.get(name) {
+            for d in deps {
+                let r = self.remaining.get_mut(d).expect("known function");
+                *r -= 1;
+                if *r == 0 {
+                    ready.push(d.clone());
+                }
+            }
+        }
+        ready
+    }
+
+    pub fn is_done(&self, name: &str) -> bool {
+        self.done.contains(name)
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.done.len() == self.remaining.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::appconfig::{federated_learning_yaml, video_pipeline_yaml};
+    use crate::util::yaml;
+
+    fn fl() -> (AppConfig, Dag) {
+        let cfg = AppConfig::from_yaml(&yaml::parse(federated_learning_yaml()).unwrap()).unwrap();
+        let dag = Dag::build(&cfg).unwrap();
+        (cfg, dag)
+    }
+
+    #[test]
+    fn topo_order_respects_dependencies() {
+        let (_, dag) = fl();
+        let pos = |n: &str| dag.topo_order.iter().position(|x| x == n).unwrap();
+        assert!(pos("train") < pos("firstaggregation"));
+        assert!(pos("firstaggregation") < pos("secondaggregation"));
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let (_, dag) = fl();
+        assert_eq!(dag.sources(), vec!["train"]);
+        assert_eq!(dag.sinks(), vec!["secondaggregation"]);
+    }
+
+    #[test]
+    fn video_pipeline_is_a_chain() {
+        let cfg = AppConfig::from_yaml(&yaml::parse(video_pipeline_yaml()).unwrap()).unwrap();
+        let dag = Dag::build(&cfg).unwrap();
+        assert_eq!(
+            dag.topo_order,
+            vec![
+                "video-generator",
+                "video-processing",
+                "motion-detection",
+                "face-detection",
+                "face-extraction",
+                "face-recognition"
+            ]
+        );
+        assert_eq!(dag.ancestors("face-recognition").len(), 5);
+        assert_eq!(dag.ancestors("video-generator").len(), 0);
+    }
+
+    #[test]
+    fn run_state_joins_fan_in() {
+        let doc = "\
+application: join
+entrypoint: a
+dag:
+  - name: a
+    affinity:
+      nodetype: iot
+      affinitytype: data
+  - name: b
+    affinity:
+      nodetype: iot
+      affinitytype: data
+  - name: j
+    dependencies: a, b
+    affinity:
+      nodetype: cloud
+      affinitytype: function
+";
+        let cfg = AppConfig::from_yaml(&yaml::parse(doc).unwrap()).unwrap();
+        let dag = Dag::build(&cfg).unwrap();
+        let mut rs = RunState::new(&dag);
+        assert!(rs.complete(&dag, "a").is_empty(), "j not ready after a alone");
+        assert_eq!(rs.complete(&dag, "b"), vec!["j"], "j ready after both");
+        assert!(rs.complete(&dag, "b").is_empty(), "idempotent completion");
+        rs.complete(&dag, "j");
+        assert!(rs.all_done());
+    }
+}

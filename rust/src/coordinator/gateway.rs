@@ -1,0 +1,309 @@
+//! The unified EdgeFaaS REST gateway.
+//!
+//! "EdgeFaaS provides a unified gateway... It implements the same interfaces
+//! as OpenFaaS but allows users to run applications using different
+//! resources." Everything a user can do goes through here; resource
+//! gateways, data locations and cluster credentials stay hidden (§3.2.1's
+//! virtualization argument).
+//!
+//! ```text
+//! POST   /apps                         configure (body: Table-2 YAML; query
+//!                                       data_<fn>=<rid,rid> seeds data anchors)
+//! GET    /apps/{app}/functions          list_functions
+//! GET    /apps/{app}/functions/{fn}     get_function
+//! POST   /apps/{app}/functions/{fn}     deploy_function  {code}
+//! DELETE /apps/{app}/functions/{fn}     delete_function
+//! POST   /apps/{app}/invoke/{fn}        invoke  (JSON body; ?one=true)
+//! POST   /apps/{app}/run                run_workflow {entry_inputs}
+//! PUT    /apps/{app}/buckets/{bucket}   create_bucket (?locality=<rid>)
+//! DELETE /apps/{app}/buckets/{bucket}   delete_bucket
+//! GET    /apps/{app}/buckets            list_buckets
+//! PUT    /apps/{app}/objects/{bucket}/{obj...}   put_object -> {url}
+//! GET    /objects?url=...               get_object
+//! DELETE /apps/{app}/objects/{bucket}/{obj...}   delete_object
+//! GET    /apps/{app}/objects/{bucket}   list_objects
+//! GET    /resources                     resource ids
+//! GET    /healthz
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::util::http::{Handler, Request, Response, Server};
+use crate::util::json::Json;
+
+use super::functions::FunctionPackage;
+use super::resource::EdgeFaaS;
+use super::storage::ObjectUrl;
+
+/// HTTP facade over the coordinator.
+pub struct EdgeFaasGateway {
+    faas: Arc<EdgeFaaS>,
+}
+
+impl EdgeFaasGateway {
+    pub fn new(faas: Arc<EdgeFaaS>) -> Self {
+        EdgeFaasGateway { faas }
+    }
+
+    /// Serve on an ephemeral local port.
+    pub fn serve(faas: Arc<EdgeFaaS>, workers: usize) -> anyhow::Result<Server> {
+        Server::bind(0, workers, Arc::new(EdgeFaasGateway::new(faas)) as Arc<dyn Handler>)
+    }
+
+    fn configure(&self, req: &Request) -> Response {
+        let yaml = match req.body_str() {
+            Ok(s) => s,
+            Err(e) => return Response::bad_request(e.to_string()),
+        };
+        // Data anchors arrive as query params: data_train=0,1,2
+        let mut data_locations: HashMap<String, Vec<u32>> = HashMap::new();
+        for (k, v) in &req.query {
+            if let Some(fname) = k.strip_prefix("data_") {
+                let ids: Vec<u32> = v.split(',').filter_map(|x| x.parse().ok()).collect();
+                data_locations.insert(fname.to_string(), ids);
+            }
+        }
+        match self.faas.configure_application(yaml, &data_locations) {
+            Ok(plan) => {
+                let mut o = Json::obj();
+                for (f, ids) in plan {
+                    o.set(&f, Json::Arr(ids.into_iter().map(|i| Json::Num(i as f64)).collect()));
+                }
+                Response::json(201, &o)
+            }
+            Err(e) => Response::bad_request(e.to_string()),
+        }
+    }
+
+    fn ok_or_500(r: anyhow::Result<Response>) -> Response {
+        r.unwrap_or_else(|e| Response::error(e.to_string()))
+    }
+}
+
+impl Handler for EdgeFaasGateway {
+    fn handle(&self, req: Request) -> Response {
+        let segs: Vec<String> = req.segments().iter().map(|s| s.to_string()).collect();
+        let segs_ref: Vec<&str> = segs.iter().map(String::as_str).collect();
+        match (req.method.as_str(), segs_ref.as_slice()) {
+            ("GET", ["healthz"]) => Response::text(200, "ok"),
+            ("GET", ["resources"]) => {
+                let ids = self.faas.resource_ids();
+                Response::json(
+                    200,
+                    &Json::Arr(ids.into_iter().map(|i| Json::Num(i as f64)).collect()),
+                )
+            }
+            ("POST", ["apps"]) => self.configure(&req),
+            ("GET", ["apps", app, "functions"]) => {
+                Self::ok_or_500(self.faas.list_functions(app).map(|v| Response::json(200, &v)))
+            }
+            ("GET", ["apps", app, "functions", f]) => {
+                Self::ok_or_500(self.faas.get_function(app, f).map(|v| Response::json(200, &v)))
+            }
+            ("POST", ["apps", app, "functions", f]) => Self::ok_or_500((|| {
+                let body = req.json()?;
+                let pkg = FunctionPackage { code: body.req_str("code")?.to_string() };
+                self.faas.deploy_function(app, f, &pkg)?;
+                Ok(Response::text(201, "deployed"))
+            })()),
+            ("DELETE", ["apps", app, "functions", f]) => Self::ok_or_500(
+                self.faas.delete_function(app, f).map(|()| Response::text(200, "deleted")),
+            ),
+            ("POST", ["apps", app, "invoke", f]) => Self::ok_or_500((|| {
+                let payload = if req.body.is_empty() { Json::obj() } else { req.json()? };
+                let one = req.query.get("one").map(|v| v == "true").unwrap_or(false);
+                let results = self.faas.invoke(app, f, &payload, one)?;
+                let mut arr = Vec::new();
+                for (rid, out, lat) in results {
+                    let mut o = Json::obj();
+                    o.set("resource", (rid as u64).into())
+                        .set("latency", lat.into())
+                        .set("output", String::from_utf8_lossy(&out).to_string().into());
+                    arr.push(o);
+                }
+                Ok(Response::json(200, &Json::Arr(arr)))
+            })()),
+            ("POST", ["apps", app, "run"]) => Self::ok_or_500((|| {
+                let mut entry_inputs: HashMap<String, Vec<String>> = HashMap::new();
+                if !req.body.is_empty() {
+                    let body = req.json()?;
+                    if let Some(obj) = body.get("entry_inputs").and_then(Json::as_obj) {
+                        for (f, urls) in obj {
+                            entry_inputs.insert(
+                                f.clone(),
+                                urls.as_arr()
+                                    .unwrap_or(&[])
+                                    .iter()
+                                    .filter_map(|u| u.as_str().map(String::from))
+                                    .collect(),
+                            );
+                        }
+                    }
+                }
+                let result = self.faas.run_workflow(app, &entry_inputs)?;
+                let mut o = Json::obj();
+                o.set("duration", result.duration.into());
+                let mut fns = Json::obj();
+                for (f, instances) in &result.functions {
+                    let mut arr = Vec::new();
+                    for i in instances {
+                        let mut io = Json::obj();
+                        io.set("resource", (i.resource as u64).into())
+                            .set("latency", i.latency.into())
+                            .set(
+                                "outputs",
+                                Json::Arr(
+                                    i.outputs.iter().map(|u| Json::Str(u.clone())).collect(),
+                                ),
+                            );
+                        arr.push(io);
+                    }
+                    fns.set(f, Json::Arr(arr));
+                }
+                o.set("functions", fns);
+                Ok(Response::json(200, &o))
+            })()),
+            ("PUT", ["apps", app, "buckets", bucket]) => Self::ok_or_500((|| {
+                let locality = req.query.get("locality").and_then(|v| v.parse().ok());
+                self.faas.create_bucket(app, bucket, locality)?;
+                Ok(Response::text(201, "created"))
+            })()),
+            ("DELETE", ["apps", app, "buckets", bucket]) => Self::ok_or_500(
+                self.faas.delete_bucket(app, bucket).map(|()| Response::text(200, "deleted")),
+            ),
+            ("GET", ["apps", app, "buckets"]) => {
+                Response::json(200, &Json::from(self.faas.list_buckets(app)))
+            }
+            ("PUT", ["apps", app, "objects", bucket, rest @ ..]) if !rest.is_empty() => {
+                Self::ok_or_500((|| {
+                    let object = rest.join("/");
+                    let url = self.faas.put_object(app, bucket, &object, &req.body)?;
+                    let mut o = Json::obj();
+                    o.set("url", url.to_string().as_str().into());
+                    Ok(Response::json(201, &o))
+                })())
+            }
+            ("GET", ["objects"]) => Self::ok_or_500((|| {
+                let url = req
+                    .query
+                    .get("url")
+                    .ok_or_else(|| anyhow::anyhow!("missing url parameter"))?;
+                let data = self.faas.get_object(&ObjectUrl::parse(url)?)?;
+                Ok(Response::bytes(200, data))
+            })()),
+            ("DELETE", ["apps", app, "objects", bucket, rest @ ..]) if !rest.is_empty() => {
+                let object = rest.join("/");
+                Self::ok_or_500(
+                    self.faas
+                        .delete_object(app, bucket, &object)
+                        .map(|()| Response::text(200, "deleted")),
+                )
+            }
+            ("GET", ["apps", app, "objects", bucket]) => Self::ok_or_500(
+                self.faas
+                    .list_objects(app, bucket)
+                    .map(|names| Response::json(200, &Json::from(names))),
+            ),
+            _ => Response::not_found(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::resource::testkit::paper_testbed;
+    use crate::simnet::RealClock;
+    use crate::util::http;
+
+    fn served() -> (Server, crate::coordinator::resource::testkit::TestBed) {
+        let bed = paper_testbed(Arc::new(RealClock::new()));
+        let server = EdgeFaasGateway::serve(Arc::clone(&bed.faas), 4).unwrap();
+        (server, bed)
+    }
+
+    #[test]
+    fn healthz_and_resources() {
+        let (server, _bed) = served();
+        let addr = server.addr();
+        assert_eq!(http::get(&addr, "/healthz").unwrap().status, 200);
+        let v = http::get(&addr, "/resources").unwrap().json_body().unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), 11);
+    }
+
+    #[test]
+    fn configure_deploy_invoke_over_rest() {
+        let (server, bed) = served();
+        let addr = server.addr();
+        // Configure the FL app with data anchors on all 8 Pis.
+        let anchors: String =
+            bed.iot.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(",");
+        let resp = http::request(
+            &addr,
+            "POST",
+            &format!("/apps?data_train={anchors}"),
+            &[("Content-Type", "application/x-yaml")],
+            crate::coordinator::appconfig::federated_learning_yaml().as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 201, "{}", resp.body_str().unwrap_or(""));
+        let plan = resp.json_body().unwrap();
+        assert_eq!(plan.get("train").unwrap().as_arr().unwrap().len(), 8);
+        assert_eq!(plan.get("secondaggregation").unwrap().as_arr().unwrap().len(), 1);
+
+        // Register a handler + deploy one function over REST.
+        bed.executor.register("img/echo", |p: &[u8]| Ok(p.to_vec()));
+        let mut body = Json::obj();
+        body.set("code", "img/echo".into());
+        let resp =
+            http::post_json(&addr, "/apps/federatedlearning/functions/train", &body).unwrap();
+        assert_eq!(resp.status, 201, "{}", resp.body_str().unwrap_or(""));
+
+        // Invoke one.
+        let resp = http::post_json(
+            &addr,
+            "/apps/federatedlearning/invoke/train?one=true",
+            &Json::obj(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200);
+        let arr = resp.json_body().unwrap();
+        assert_eq!(arr.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn storage_verbs_over_rest() {
+        let (server, bed) = served();
+        let addr = server.addr();
+        let resp = http::request(
+            &addr,
+            "PUT",
+            &format!("/apps/demo/buckets/data?locality={}", bed.cloud),
+            &[],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(resp.status, 201);
+        let resp =
+            http::request(&addr, "PUT", "/apps/demo/objects/data/hello.bin", &[], b"payload")
+                .unwrap();
+        assert_eq!(resp.status, 201);
+        let url = resp.json_body().unwrap().req_str("url").unwrap().to_string();
+        assert!(url.starts_with("demo/data/"));
+        let resp = http::get(
+            &addr,
+            &format!("/objects?url={}", crate::util::http::url_encode(&url)),
+        )
+        .unwrap();
+        assert_eq!(resp.body, b"payload");
+        // Listing + deletion.
+        let names = http::get(&addr, "/apps/demo/objects/data").unwrap().json_body().unwrap();
+        assert_eq!(names.as_arr().unwrap().len(), 1);
+        assert_eq!(
+            http::delete(&addr, "/apps/demo/objects/data/hello.bin").unwrap().status,
+            200
+        );
+        assert_eq!(http::delete(&addr, "/apps/demo/buckets/data").unwrap().status, 200);
+    }
+}

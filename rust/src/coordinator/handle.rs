@@ -1,0 +1,257 @@
+//! The coordinator's view of a registered resource.
+//!
+//! EdgeFaaS only ever touches resources through their gateways — "EdgeFaaS
+//! uses HTTP to request the RESTful APIs provided by the FaaS framework and
+//! object store" (§3.1) — so the coordinator is written against this trait.
+//! Two implementations:
+//!
+//! * [`LocalHandle`] — direct in-process calls into the cluster/objstore/
+//!   monitor substrates. Used by the virtual-time benches (no sockets in the
+//!   simulated hot loop) and by tests.
+//! * [`HttpHandle`] — real loopback HTTP against the per-resource gateways,
+//!   exactly the wire path the paper describes. Used by the examples.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cluster::faas::{FaasBackend, FunctionSpec};
+use crate::cluster::gateway::client as faas_client;
+use crate::monitor::metrics::ResourceUsage;
+use crate::objstore::gateway::client as store_client;
+use crate::objstore::ObjectStore;
+
+/// Abstract per-resource operations the coordinator needs.
+pub trait ResourceHandle: Send + Sync {
+    // ---- FaaS verbs (OpenFaaS gateway) ----
+    fn deploy(
+        &self,
+        name: &str,
+        image: &str,
+        memory: u64,
+        gpus: u32,
+        labels: &[(String, String)],
+    ) -> anyhow::Result<()>;
+    fn remove(&self, name: &str) -> anyhow::Result<()>;
+    fn invoke(&self, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)>;
+    fn list(&self) -> anyhow::Result<Vec<String>>;
+    fn describe(&self, name: &str) -> anyhow::Result<crate::util::json::Json>;
+
+    // ---- monitoring (Prometheus) ----
+    fn usage(&self) -> anyhow::Result<ResourceUsage>;
+
+    // ---- storage verbs (MinIO) ----
+    fn make_bucket(&self, bucket: &str) -> anyhow::Result<()>;
+    fn remove_bucket(&self, bucket: &str) -> anyhow::Result<()>;
+    fn put_object(&self, bucket: &str, object: &str, data: &[u8]) -> anyhow::Result<()>;
+    fn get_object(&self, bucket: &str, object: &str) -> anyhow::Result<Vec<u8>>;
+    fn remove_object(&self, bucket: &str, object: &str) -> anyhow::Result<()>;
+    fn list_objects(&self, bucket: &str) -> anyhow::Result<Vec<String>>;
+    /// Total bytes stored (unregistration requires zero).
+    fn stored_bytes(&self) -> anyhow::Result<u64>;
+}
+
+/// Direct in-process handle.
+pub struct LocalHandle {
+    pub backend: Arc<FaasBackend>,
+    pub store: Arc<ObjectStore>,
+}
+
+impl LocalHandle {
+    pub fn new(backend: Arc<FaasBackend>, store: Arc<ObjectStore>) -> Self {
+        LocalHandle { backend, store }
+    }
+}
+
+impl ResourceHandle for LocalHandle {
+    fn deploy(
+        &self,
+        name: &str,
+        image: &str,
+        memory: u64,
+        gpus: u32,
+        labels: &[(String, String)],
+    ) -> anyhow::Result<()> {
+        let labels: HashMap<String, String> = labels.iter().cloned().collect();
+        self.backend
+            .deploy(FunctionSpec { name: name.into(), image: image.into(), memory, gpus, labels })
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    fn remove(&self, name: &str) -> anyhow::Result<()> {
+        self.backend.remove(name).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    fn invoke(&self, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)> {
+        self.backend.invoke(name, payload)
+    }
+
+    fn list(&self) -> anyhow::Result<Vec<String>> {
+        Ok(self.backend.list())
+    }
+
+    fn describe(&self, name: &str) -> anyhow::Result<crate::util::json::Json> {
+        let st = self.backend.describe(name).map_err(|e| anyhow::anyhow!(e))?;
+        let mut o = crate::util::json::Json::obj();
+        o.set("name", st.spec.name.as_str().into())
+            .set("image", st.spec.image.as_str().into())
+            .set("replicas", (st.replicas as u64).into())
+            .set("invocations", st.invocations.into())
+            .set("url", st.url.as_str().into());
+        Ok(o)
+    }
+
+    fn usage(&self) -> anyhow::Result<ResourceUsage> {
+        let spec = &self.backend.spec;
+        Ok(ResourceUsage {
+            cpu_frac: 0.0,
+            mem_used: (self.backend.mem_utilization() * spec.total_memory() as f64) as u64,
+            mem_total: spec.total_memory(),
+            io_bytes_per_s: 0.0,
+            gpu_frac: 0.0,
+            gpus_used: 0,
+            gpus_total: spec.total_gpus(),
+        })
+    }
+
+    fn make_bucket(&self, bucket: &str) -> anyhow::Result<()> {
+        self.store.make_bucket(bucket).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    fn remove_bucket(&self, bucket: &str) -> anyhow::Result<()> {
+        self.store.remove_bucket(bucket).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    fn put_object(&self, bucket: &str, object: &str, data: &[u8]) -> anyhow::Result<()> {
+        self.store.put_object(bucket, object, data.to_vec()).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    fn get_object(&self, bucket: &str, object: &str) -> anyhow::Result<Vec<u8>> {
+        self.store.get_object(bucket, object).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    fn remove_object(&self, bucket: &str, object: &str) -> anyhow::Result<()> {
+        self.store.remove_object(bucket, object).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    fn list_objects(&self, bucket: &str) -> anyhow::Result<Vec<String>> {
+        self.store.list_objects(bucket).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    fn stored_bytes(&self) -> anyhow::Result<u64> {
+        Ok(self.store.used())
+    }
+}
+
+/// Loopback-HTTP handle: the full REST wire path.
+pub struct HttpHandle {
+    /// OpenFaaS-style gateway address (host:port).
+    pub faas_addr: String,
+    pub pwd: String,
+    /// MinIO-style endpoint.
+    pub minio_addr: String,
+    pub access_key: String,
+    pub secret_key: String,
+    /// Prometheus endpoint ("" = no monitoring; usage() returns default).
+    pub prometheus_addr: String,
+}
+
+impl ResourceHandle for HttpHandle {
+    fn deploy(
+        &self,
+        name: &str,
+        image: &str,
+        memory: u64,
+        gpus: u32,
+        labels: &[(String, String)],
+    ) -> anyhow::Result<()> {
+        faas_client::deploy(&self.faas_addr, &self.pwd, name, image, memory, gpus, labels)
+    }
+
+    fn remove(&self, name: &str) -> anyhow::Result<()> {
+        faas_client::remove(&self.faas_addr, &self.pwd, name)
+    }
+
+    fn invoke(&self, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)> {
+        faas_client::invoke(&self.faas_addr, name, payload)
+    }
+
+    fn list(&self) -> anyhow::Result<Vec<String>> {
+        faas_client::list(&self.faas_addr)
+    }
+
+    fn describe(&self, name: &str) -> anyhow::Result<crate::util::json::Json> {
+        faas_client::describe(&self.faas_addr, name)
+    }
+
+    fn usage(&self) -> anyhow::Result<ResourceUsage> {
+        if self.prometheus_addr.is_empty() {
+            return Ok(ResourceUsage::default());
+        }
+        crate::monitor::scrape::scrape(&self.prometheus_addr)
+    }
+
+    fn make_bucket(&self, bucket: &str) -> anyhow::Result<()> {
+        store_client::make_bucket(&self.minio_addr, &self.access_key, &self.secret_key, bucket)
+    }
+
+    fn remove_bucket(&self, bucket: &str) -> anyhow::Result<()> {
+        store_client::remove_bucket(&self.minio_addr, &self.access_key, &self.secret_key, bucket)
+    }
+
+    fn put_object(&self, bucket: &str, object: &str, data: &[u8]) -> anyhow::Result<()> {
+        store_client::put_object(
+            &self.minio_addr,
+            &self.access_key,
+            &self.secret_key,
+            bucket,
+            object,
+            data,
+        )
+    }
+
+    fn get_object(&self, bucket: &str, object: &str) -> anyhow::Result<Vec<u8>> {
+        store_client::get_object(&self.minio_addr, &self.access_key, &self.secret_key, bucket, object)
+    }
+
+    fn remove_object(&self, bucket: &str, object: &str) -> anyhow::Result<()> {
+        store_client::remove_object(
+            &self.minio_addr,
+            &self.access_key,
+            &self.secret_key,
+            bucket,
+            object,
+        )
+    }
+
+    fn list_objects(&self, bucket: &str) -> anyhow::Result<Vec<String>> {
+        store_client::list_objects(&self.minio_addr, &self.access_key, &self.secret_key, bucket)
+    }
+
+    fn stored_bytes(&self) -> anyhow::Result<u64> {
+        // Sum object sizes across buckets via the REST interface.
+        let mut total = 0u64;
+        let resp = crate::util::http::request(
+            &self.minio_addr,
+            "GET",
+            "/buckets",
+            &[("X-Access-Key", &self.access_key), ("X-Secret-Key", &self.secret_key)],
+            &[],
+        )?;
+        if !resp.ok() {
+            anyhow::bail!("list buckets: {}", resp.status);
+        }
+        let buckets: Vec<String> = resp
+            .json_body()?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|b| b.as_str().map(String::from))
+            .collect();
+        for b in buckets {
+            for o in self.list_objects(&b)? {
+                total += self.get_object(&b, &o)?.len() as u64;
+            }
+        }
+        Ok(total)
+    }
+}

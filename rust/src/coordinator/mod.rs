@@ -1,0 +1,43 @@
+//! The EdgeFaaS coordinator — the paper's contribution (§3).
+//!
+//! EdgeFaaS "provides a unified gateway which could target different
+//! platforms using a scheduling mechanism of user's choice... whenever an
+//! invocation is made or a deployment requested, EdgeFaaS is in the
+//! critical-path and acts like a router, picking some most suitable
+//! resources for function execution."
+//!
+//! Module map (each section of §3 has a module):
+//!
+//! | paper section                | module        |
+//! |------------------------------|---------------|
+//! | 3.1 resource management      | [`resource`]  |
+//! | 3.1.2 resource monitoring    | [`handle`] (usage scrape per resource) |
+//! | 3.2.1 function virtualization| [`functions`] |
+//! | 3.2.2 DAG creation           | [`appconfig`], [`dag`] |
+//! | 3.2.3 function scheduling    | [`scheduler`] |
+//! | 3.3.1 storage virtualization | [`storage`]   |
+//! | 3.3.2 data placement         | [`placement`] |
+//! | workflow chaining            | [`invoker`]   |
+//! | unified REST gateway         | [`gateway`]   |
+//!
+//! The coordinator sees resources only through the [`handle::ResourceHandle`]
+//! trait, so the same scheduling/placement code runs against in-process
+//! backends (virtual-time benches) and loopback-HTTP gateways (examples).
+
+pub mod appconfig;
+pub mod asyncinvoke;
+pub mod dag;
+pub mod functions;
+pub mod gateway;
+pub mod handle;
+pub mod invoker;
+pub mod placement;
+pub mod resource;
+pub mod scheduler;
+pub mod storage;
+
+pub use asyncinvoke::{AsyncStatus, AsyncTracker, InvocationId};
+pub use appconfig::{Affinity, AffinityType, AppConfig, FunctionConfig, Reduce, Requirements};
+pub use handle::{LocalHandle, ResourceHandle};
+pub use resource::{EdgeFaaS, ResourceId};
+pub use scheduler::{FunctionCreation, LocalityScheduler, Schedule};

@@ -1,0 +1,87 @@
+//! Data placement (§3.3.2).
+//!
+//! "EdgeFaaS uses function locality to decide where the data is placed...
+//! when data is generated from IoT devices, the data is stored on IoT
+//! devices based on data locality. For other intermediate data, if the data
+//! volume is large, it is stored where the data is generated to save the
+//! data transfer latency."
+//!
+//! The producing function's resource is therefore the *first choice* for
+//! every object it writes; this module provides that decision plus the
+//! fallback used when no producer is known (most free storage wins).
+
+use super::resource::{EdgeFaaS, ResourceId};
+
+/// Threshold above which intermediate data is pinned to its producer
+/// ("if the data volume is large, it is stored where the data is
+/// generated"). Below it, the consumer-side placement is allowed when a
+/// consumer hint exists.
+pub const LARGE_DATA_BYTES: u64 = 4 << 20;
+
+/// Decide where a producing function's output object should live.
+///
+/// * large payloads → the producer's resource (save the transfer);
+/// * small payloads with a known single consumer → the consumer's resource
+///   (ship early, it is cheap);
+/// * otherwise → the producer.
+pub fn place_output(
+    producer: ResourceId,
+    consumer: Option<ResourceId>,
+    bytes: u64,
+) -> ResourceId {
+    if bytes >= LARGE_DATA_BYTES {
+        return producer;
+    }
+    consumer.unwrap_or(producer)
+}
+
+/// Fallback bucket placement when the caller gives no locality hint: the
+/// registered resource with the most free storage (ties to smallest id for
+/// determinism).
+pub fn pick_bucket_resource(faas: &EdgeFaaS) -> anyhow::Result<ResourceId> {
+    let mut best: Option<(u64, ResourceId)> = None;
+    for id in faas.resource_ids() {
+        let reg = faas.resource(id)?;
+        let capacity = reg.spec.storage * reg.spec.nodes as u64;
+        let used = reg.handle.stored_bytes().unwrap_or(0);
+        let free = capacity.saturating_sub(used);
+        best = match best {
+            None => Some((free, id)),
+            Some((bf, bi)) => {
+                if free > bf || (free == bf && id < bi) {
+                    Some((free, id))
+                } else {
+                    Some((bf, bi))
+                }
+            }
+        };
+    }
+    best.map(|(_, id)| id).ok_or_else(|| anyhow::anyhow!("no resources registered"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::resource::testkit::paper_testbed;
+    use crate::simnet::RealClock;
+    use std::sync::Arc;
+
+    #[test]
+    fn large_outputs_stay_at_producer() {
+        assert_eq!(place_output(3, Some(7), 92_000_000), 3, "92 MB video stays put");
+        assert_eq!(place_output(3, Some(7), LARGE_DATA_BYTES), 3);
+    }
+
+    #[test]
+    fn small_outputs_ship_to_consumer() {
+        assert_eq!(place_output(3, Some(7), 1024), 7, "single picture ships ahead");
+        assert_eq!(place_output(3, None, 1024), 3, "no consumer -> stay");
+    }
+
+    #[test]
+    fn fallback_prefers_most_free_storage() {
+        let b = paper_testbed(Arc::new(RealClock::new()));
+        // Cloud has 10 nodes x 512 GB — by far the most storage.
+        assert_eq!(pick_bucket_resource(&b.faas).unwrap(), b.cloud);
+    }
+}

@@ -1,0 +1,405 @@
+//! Resource management (§3.1): registration, the resource mapping, and the
+//! central [`EdgeFaaS`] state shared by every coordinator verb.
+//!
+//! "Each resource is registered through a YAML file containing the resource
+//! capability and gateway... Each registered resource is assigned a unique
+//! resource ID... Once it is unregistered, the resource ID is reused for
+//! other resources." Mappings are backed up through [`crate::backup`] (the
+//! paper uses S3 + DynamoDB) so a restarted coordinator resumes scheduling
+//! without losing state.
+
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
+use std::cmp::Reverse;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::backup::DurableKv;
+use crate::cluster::spec::ResourceSpec;
+use crate::simnet::{Clock, NodeId, RealClock, Tier, Topology, TransferModel};
+use crate::util::json::Json;
+use crate::util::yaml;
+
+use super::appconfig::AppConfig;
+use super::dag::Dag;
+use super::handle::ResourceHandle;
+use super::scheduler::{LocalityScheduler, Schedule};
+
+/// Unique id assigned at registration (reused after unregistration).
+pub type ResourceId = u32;
+
+/// A registered resource: capability + gateway handle + network position.
+pub struct RegisteredResource {
+    pub id: ResourceId,
+    pub spec: ResourceSpec,
+    /// Node in the network topology (locality decisions).
+    pub net_node: NodeId,
+    pub handle: Arc<dyn ResourceHandle>,
+}
+
+/// An application known to the coordinator.
+pub struct Application {
+    pub config: AppConfig,
+    pub dag: Dag,
+}
+
+/// The EdgeFaaS coordinator state.
+pub struct EdgeFaaS {
+    pub(super) resources: RwLock<BTreeMap<ResourceId, Arc<RegisteredResource>>>,
+    free_ids: Mutex<BinaryHeap<Reverse<ResourceId>>>,
+    next_id: Mutex<ResourceId>,
+    pub(super) topology: RwLock<Topology>,
+    pub(super) kv: DurableKv,
+    pub(super) apps: RwLock<HashMap<String, Arc<Application>>>,
+    /// candidate_resource mapping: "app.function" -> resource ids
+    /// ("with the application name plus the function name as the key").
+    pub(super) candidates: RwLock<HashMap<String, Vec<ResourceId>>>,
+    /// bucket map: EdgeFaaS bucket name ("app.bucket") -> resource id.
+    pub(super) buckets: RwLock<HashMap<String, ResourceId>>,
+    /// application -> original (user-visible) bucket names.
+    pub(super) app_buckets: RwLock<HashMap<String, Vec<String>>>,
+    pub(super) scheduler: RwLock<Arc<dyn Schedule>>,
+    pub(super) transfer: TransferModel,
+    pub(super) clock: Arc<dyn Clock>,
+}
+
+impl EdgeFaaS {
+    /// A coordinator with an ephemeral backup store and real clock.
+    pub fn new(topology: Topology) -> EdgeFaaS {
+        Self::with_parts(topology, DurableKv::ephemeral(), Arc::new(RealClock::new()))
+    }
+
+    /// Full constructor.
+    pub fn with_parts(topology: Topology, kv: DurableKv, clock: Arc<dyn Clock>) -> EdgeFaaS {
+        EdgeFaaS {
+            resources: RwLock::new(BTreeMap::new()),
+            free_ids: Mutex::new(BinaryHeap::new()),
+            next_id: Mutex::new(0),
+            topology: RwLock::new(topology),
+            kv,
+            apps: RwLock::new(HashMap::new()),
+            candidates: RwLock::new(HashMap::new()),
+            buckets: RwLock::new(HashMap::new()),
+            app_buckets: RwLock::new(HashMap::new()),
+            scheduler: RwLock::new(Arc::new(LocalityScheduler)),
+            transfer: TransferModel::default(),
+            clock,
+        }
+    }
+
+    /// Swap in a user scheduling policy ("EdgeFaaS also offers easy to use
+    /// interface for users to implement their own scheduling policies").
+    pub fn set_scheduler(&self, s: Arc<dyn Schedule>) {
+        *self.scheduler.write().unwrap() = s;
+    }
+
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
+    pub fn transfer_model(&self) -> &TransferModel {
+        &self.transfer
+    }
+
+    // ------------------------------------------------------ registration --
+
+    /// Register a resource from its Table-1 YAML plus a gateway handle and a
+    /// position in the network topology. Returns the assigned resource ID.
+    pub fn register_yaml(
+        &self,
+        yaml_text: &str,
+        handle: Arc<dyn ResourceHandle>,
+        net_node: NodeId,
+    ) -> anyhow::Result<ResourceId> {
+        let spec = ResourceSpec::from_yaml(&yaml::parse(yaml_text)?)?;
+        self.register(spec, handle, net_node)
+    }
+
+    /// Register a resource from a parsed spec.
+    pub fn register(
+        &self,
+        spec: ResourceSpec,
+        handle: Arc<dyn ResourceHandle>,
+        net_node: NodeId,
+    ) -> anyhow::Result<ResourceId> {
+        {
+            let topo = self.topology.read().unwrap();
+            if net_node >= topo.len() {
+                anyhow::bail!("net node {net_node} not in topology");
+            }
+            if topo.node(net_node).tier != spec.tier {
+                anyhow::bail!(
+                    "tier mismatch: spec says {}, topology node is {}",
+                    spec.tier.name(),
+                    topo.node(net_node).tier.name()
+                );
+            }
+        }
+        let id = {
+            let mut free = self.free_ids.lock().unwrap();
+            match free.pop() {
+                Some(Reverse(id)) => id,
+                None => {
+                    let mut next = self.next_id.lock().unwrap();
+                    let id = *next;
+                    *next += 1;
+                    id
+                }
+            }
+        };
+        let mut rec = Json::obj();
+        rec.set("tier", spec.tier.name().into())
+            .set("gateway", spec.gateway.as_str().into())
+            .set("net_node", net_node.into())
+            .set("nodes", (spec.nodes as u64).into());
+        self.kv.put("resource_map", &id.to_string(), rec)?;
+        let reg = Arc::new(RegisteredResource { id, spec, net_node, handle });
+        self.resources.write().unwrap().insert(id, reg);
+        log::info!("registered resource {id} ({})", self.describe_resource(id));
+        Ok(id)
+    }
+
+    fn describe_resource(&self, id: ResourceId) -> String {
+        self.resources
+            .read()
+            .unwrap()
+            .get(&id)
+            .map(|r| format!("{} gw={}", r.spec.tier.name(), r.spec.gateway))
+            .unwrap_or_else(|| "?".into())
+    }
+
+    /// Unregister a resource. Fails while functions are deployed or data is
+    /// stored on it ("The user has to delete all the functions deployed on
+    /// the resource and remove all the data stored in the resource").
+    pub fn unregister(&self, id: ResourceId) -> anyhow::Result<()> {
+        let reg = self
+            .resources
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no resource {id}"))?;
+        let deployed = reg.handle.list()?;
+        if !deployed.is_empty() {
+            anyhow::bail!("resource {id} still has functions deployed: {deployed:?}");
+        }
+        let stored = reg.handle.stored_bytes()?;
+        if stored > 0 {
+            anyhow::bail!("resource {id} still stores {stored} bytes");
+        }
+        self.resources.write().unwrap().remove(&id);
+        self.kv.delete("resource_map", &id.to_string())?;
+        self.free_ids.lock().unwrap().push(Reverse(id));
+        log::info!("unregistered resource {id}");
+        Ok(())
+    }
+
+    pub fn resource(&self, id: ResourceId) -> anyhow::Result<Arc<RegisteredResource>> {
+        self.resources
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no resource {id}"))
+    }
+
+    /// Snapshot of registered resource ids (sorted).
+    pub fn resource_ids(&self) -> Vec<ResourceId> {
+        self.resources.read().unwrap().keys().copied().collect()
+    }
+
+    /// Resources of a tier.
+    pub fn tier_resources(&self, tier: Tier) -> Vec<ResourceId> {
+        self.resources
+            .read()
+            .unwrap()
+            .values()
+            .filter(|r| r.spec.tier == tier)
+            .map(|r| r.id)
+            .collect()
+    }
+
+    /// One-way network latency between two registered resources.
+    pub fn latency(&self, a: ResourceId, b: ResourceId) -> anyhow::Result<f64> {
+        let (na, nb) = {
+            let res = self.resources.read().unwrap();
+            let ra = res.get(&a).ok_or_else(|| anyhow::anyhow!("no resource {a}"))?;
+            let rb = res.get(&b).ok_or_else(|| anyhow::anyhow!("no resource {b}"))?;
+            (ra.net_node, rb.net_node)
+        };
+        Ok(self.topology.read().unwrap().latency(na, nb))
+    }
+
+    /// Modeled transfer time for `bytes` between two resources.
+    pub fn transfer_time(&self, from: ResourceId, to: ResourceId, bytes: u64) -> anyhow::Result<f64> {
+        let (nf, nt) = {
+            let res = self.resources.read().unwrap();
+            let rf = res.get(&from).ok_or_else(|| anyhow::anyhow!("no resource {from}"))?;
+            let rt = res.get(&to).ok_or_else(|| anyhow::anyhow!("no resource {to}"))?;
+            (rf.net_node, rt.net_node)
+        };
+        Ok(self.transfer.time(&self.topology.read().unwrap(), nf, nt, bytes))
+    }
+
+    // ------------------------------------------------------ applications --
+
+    /// Store a validated application (its DAG is built here). Scheduling
+    /// happens separately in `configure_application` (functions.rs).
+    pub(super) fn put_app(&self, config: AppConfig) -> anyhow::Result<Arc<Application>> {
+        let dag = Dag::build(&config)?;
+        let app = Arc::new(Application { config, dag });
+        let name = app.config.application.clone();
+        // Persist the DAG skeleton for crash recovery.
+        let mut rec = Json::obj();
+        rec.set(
+            "functions",
+            Json::Arr(
+                app.config
+                    .functions
+                    .iter()
+                    .map(|f| Json::Str(f.name.clone()))
+                    .collect(),
+            ),
+        );
+        self.kv.put("dag_store", &name, rec)?;
+        self.apps.write().unwrap().insert(name, Arc::clone(&app));
+        Ok(app)
+    }
+
+    pub fn app(&self, name: &str) -> anyhow::Result<Arc<Application>> {
+        self.apps
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("unknown application `{name}`"))
+    }
+
+    /// The EdgeFaaS function name: "ApplicationName.FunctionName" (§3.2.1).
+    pub fn qualified(app: &str, function: &str) -> String {
+        format!("{app}.{function}")
+    }
+
+    /// Candidate resources for a function (set at configure time).
+    pub fn candidates_of(&self, app: &str, function: &str) -> anyhow::Result<Vec<ResourceId>> {
+        self.candidates
+            .read()
+            .unwrap()
+            .get(&Self::qualified(app, function))
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("function `{app}.{function}` has no candidates (configure the application first)"))
+    }
+
+    pub(super) fn set_candidates(
+        &self,
+        app: &str,
+        function: &str,
+        ids: Vec<ResourceId>,
+    ) -> anyhow::Result<()> {
+        let key = Self::qualified(app, function);
+        let rec = Json::Arr(ids.iter().map(|&i| Json::Num(i as f64)).collect());
+        self.kv.put("candidate_resource", &key, rec)?;
+        self.candidates.write().unwrap().insert(key, ids);
+        Ok(())
+    }
+
+    pub(super) fn remove_candidate(
+        &self,
+        app: &str,
+        function: &str,
+        id: ResourceId,
+    ) -> anyhow::Result<()> {
+        let key = Self::qualified(app, function);
+        let mut map = self.candidates.write().unwrap();
+        if let Some(ids) = map.get_mut(&key) {
+            ids.retain(|&x| x != id);
+            let rec = Json::Arr(ids.iter().map(|&i| Json::Num(i as f64)).collect());
+            self.kv.put("candidate_resource", &key, rec)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testkit {
+    //! Test alias for the public paper testbed fixture.
+    pub use crate::testbed::{paper_testbed, TestBed};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testkit::paper_testbed;
+    use super::*;
+
+    fn bed() -> testkit::TestBed {
+        paper_testbed(Arc::new(RealClock::new()))
+    }
+
+    #[test]
+    fn registers_the_paper_testbed() {
+        let b = bed();
+        assert_eq!(b.faas.resource_ids().len(), 11);
+        assert_eq!(b.faas.tier_resources(Tier::Iot).len(), 8);
+        assert_eq!(b.faas.tier_resources(Tier::Edge).len(), 2);
+        assert_eq!(b.faas.tier_resources(Tier::Cloud), vec![b.cloud]);
+    }
+
+    #[test]
+    fn latency_reflects_fig4() {
+        let b = bed();
+        // Pi set 1 -> edge 0 one-way ≈ 2.85 ms.
+        let l = b.faas.latency(b.iot[0], b.edges[0]).unwrap();
+        assert!((l - 0.00285).abs() < 1e-5, "{l}");
+        // Pi set 2 -> edge 1 ≈ 0.3 ms.
+        let l2 = b.faas.latency(b.iot[4], b.edges[1]).unwrap();
+        assert!((l2 - 0.0003).abs() < 1e-5);
+        // Set-2 path to cloud is much faster than set-1's.
+        let c1 = b.faas.latency(b.iot[0], b.cloud).unwrap();
+        let c2 = b.faas.latency(b.iot[4], b.cloud).unwrap();
+        assert!(c2 < c1);
+    }
+
+    #[test]
+    fn register_rejects_tier_mismatch() {
+        let b = bed();
+        let spec = ResourceSpec::paper_cloud("x:1");
+        let handle = b.faas.resource(b.cloud).unwrap().handle.clone();
+        // Net node 0 is an IoT node; claiming it's a cloud must fail.
+        assert!(b.faas.register(spec, handle, 0).is_err());
+    }
+
+    #[test]
+    fn unregister_blocks_until_clean_then_reuses_id() {
+        let b = bed();
+        let id = b.iot[7];
+        let reg = b.faas.resource(id).unwrap();
+        // Deploy a function -> unregister must fail.
+        b.executor.register("img/x", |p: &[u8]| Ok(p.to_vec()));
+        reg.handle.deploy("app.f", "img/x", 1 << 20, 0, &[]).unwrap();
+        assert!(b.faas.unregister(id).is_err());
+        reg.handle.remove("app.f").unwrap();
+        // Store data -> unregister must fail.
+        reg.handle.make_bucket("app.data").unwrap();
+        reg.handle.put_object("app.data", "o", b"x").unwrap();
+        assert!(b.faas.unregister(id).is_err());
+        reg.handle.remove_object("app.data", "o").unwrap();
+        reg.handle.remove_bucket("app.data").unwrap();
+        b.faas.unregister(id).unwrap();
+        assert!(b.faas.resource(id).is_err());
+        // The freed id is reused for the next registration.
+        let spec = ResourceSpec::paper_iot("pi-new:8080");
+        let new_id = b.faas.register(spec, reg.handle.clone(), reg.net_node).unwrap();
+        assert_eq!(new_id, id, "resource ID is reused");
+    }
+
+    #[test]
+    fn resource_map_backed_up() {
+        let b = bed();
+        assert_eq!(b.faas.kv.keys("resource_map").len(), 11);
+        let rec = b.faas.kv.get("resource_map", &b.cloud.to_string()).unwrap();
+        assert_eq!(rec.req_str("tier").unwrap(), "cloud");
+    }
+
+    #[test]
+    fn qualified_names() {
+        assert_eq!(EdgeFaaS::qualified("app", "fn"), "app.fn");
+    }
+}

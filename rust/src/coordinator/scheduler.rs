@@ -1,0 +1,388 @@
+//! Two-phase function scheduling (§3.2.3).
+//!
+//! Phase 1 — *filter*: drop resources that violate the privacy requirement
+//! (privacy=1 ⇒ only the IoT devices where the input data is generated) or
+//! lack free memory/GPUs per the monitoring scrape.
+//!
+//! Phase 2 — *placement policy*: the default [`LocalityScheduler`] places by
+//! data locality / dependency-function locality with the `reduce: 1|auto`
+//! fan-in rule; users can plug any policy through the [`Schedule`] trait
+//! ("EdgeFaaS also offers easy to use interface for users to implement
+//! their own scheduling policies").
+
+use std::sync::Arc;
+
+use crate::simnet::{Tier, Topology};
+
+use super::appconfig::{AffinityType, FunctionConfig, Reduce};
+use super::resource::{EdgeFaaS, RegisteredResource, ResourceId};
+
+/// "FunctionCreation struct is the input which contains the essential
+/// information used to create a function" (§3.2.3).
+#[derive(Debug, Clone)]
+pub struct FunctionCreation {
+    pub app: String,
+    pub function: FunctionConfig,
+    /// Resources where this function's input data resides (data affinity,
+    /// e.g. the IoT devices whose cameras feed it).
+    pub data_locations: Vec<ResourceId>,
+    /// Placements of the dependency functions (function affinity); one entry
+    /// per deployed upstream instance, duplicates meaningful.
+    pub dep_locations: Vec<ResourceId>,
+}
+
+/// What a policy may look at when placing a function.
+pub struct ScheduleCtx<'a> {
+    /// Phase-1 survivors, with their capability records.
+    pub candidates: Vec<Arc<RegisteredResource>>,
+    /// Topology positions of the function's upstream anchors (input data for
+    /// `affinitytype: data`, dependency placements for `: function`), in
+    /// upstream order, duplicates preserved.
+    pub upstream_nodes: Vec<usize>,
+    pub topology: &'a Topology,
+}
+
+impl<'a> ScheduleCtx<'a> {
+    /// Candidates restricted to a tier.
+    pub fn of_tier(&self, tier: Tier) -> Vec<&Arc<RegisteredResource>> {
+        self.candidates.iter().filter(|r| r.spec.tier == tier).collect()
+    }
+
+    /// The candidate of `tier` with the lowest latency from `from_node`.
+    pub fn closest(&self, from_node: usize, tier: Tier) -> Option<ResourceId> {
+        self.of_tier(tier)
+            .into_iter()
+            .min_by(|a, b| {
+                let la = self.topology.latency(from_node, a.net_node);
+                let lb = self.topology.latency(from_node, b.net_node);
+                la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|r| r.id)
+    }
+
+    /// The candidate of `tier` minimizing summed latency from all nodes.
+    pub fn closest_to_all(&self, from_nodes: &[usize], tier: Tier) -> Option<ResourceId> {
+        self.of_tier(tier)
+            .into_iter()
+            .min_by(|a, b| {
+                let sa: f64 =
+                    from_nodes.iter().map(|&n| self.topology.latency(n, a.net_node)).sum();
+                let sb: f64 =
+                    from_nodes.iter().map(|&n| self.topology.latency(n, b.net_node)).sum();
+                sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|r| r.id)
+    }
+}
+
+/// A phase-2 scheduling policy. "Schedule() is the interface to implement
+/// the scheduling policy... The returned array is an array of resource IDs
+/// that gets the function created."
+pub trait Schedule: Send + Sync {
+    fn schedule(
+        &self,
+        request: &FunctionCreation,
+        ctx: &ScheduleCtx<'_>,
+    ) -> anyhow::Result<Vec<ResourceId>>;
+}
+
+/// The paper's default policy: scheduling based on data locality.
+///
+/// * `affinitytype: data` — "EdgeFaaS schedules the functions to be created
+///   on the closest user-defined resource to the input data".
+/// * `affinitytype: function` — "EdgeFaaS deploys the function based on
+///   where the dependencies function is deployed".
+/// * `reduce: auto` — one instance per upstream location, deduplicated
+///   (several upstreams sharing a closest resource share the instance);
+/// * `reduce: 1` — a single instance closest to *all* upstream locations.
+pub struct LocalityScheduler;
+
+impl Schedule for LocalityScheduler {
+    fn schedule(
+        &self,
+        request: &FunctionCreation,
+        ctx: &ScheduleCtx<'_>,
+    ) -> anyhow::Result<Vec<ResourceId>> {
+        let f = &request.function;
+        if ctx.of_tier(f.affinity.nodetype).is_empty() {
+            anyhow::bail!(
+                "no candidate {} resources for `{}` after phase-1 filtering",
+                f.affinity.nodetype.name(),
+                f.name
+            );
+        }
+        if ctx.upstream_nodes.is_empty() {
+            // No locality anchor (e.g. a source with unknown data homes):
+            // any candidate of the tier, deterministic order.
+            let mut of_tier: Vec<ResourceId> =
+                ctx.of_tier(f.affinity.nodetype).iter().map(|r| r.id).collect();
+            of_tier.sort();
+            let take = match f.reduce {
+                Reduce::One => 1,
+                Reduce::Auto => of_tier.len(),
+            };
+            return Ok(of_tier.into_iter().take(take).collect());
+        }
+        match f.reduce {
+            Reduce::One => {
+                let id = ctx
+                    .closest_to_all(&ctx.upstream_nodes, f.affinity.nodetype)
+                    .ok_or_else(|| anyhow::anyhow!("no placement for `{}`", f.name))?;
+                Ok(vec![id])
+            }
+            Reduce::Auto => {
+                // Closest per upstream, deduplicated but order-preserving.
+                let mut out: Vec<ResourceId> = Vec::new();
+                for &n in &ctx.upstream_nodes {
+                    let id = ctx
+                        .closest(n, f.affinity.nodetype)
+                        .ok_or_else(|| anyhow::anyhow!("no placement for `{}`", f.name))?;
+                    if !out.contains(&id) {
+                        out.push(id);
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+impl EdgeFaaS {
+    /// Phase 1: filter resources by privacy and capacity requirements.
+    pub fn phase1_filter(&self, request: &FunctionCreation) -> Vec<Arc<RegisteredResource>> {
+        let resources = self.resources.read().unwrap();
+        resources
+            .values()
+            .filter(|r| {
+                // Privacy: "the function can only be created on the IoT
+                // devices where the input data is generated".
+                if request.function.requirements.privacy {
+                    if r.spec.tier != Tier::Iot {
+                        return false;
+                    }
+                    if !request.data_locations.is_empty()
+                        && !request.data_locations.contains(&r.id)
+                    {
+                        return false;
+                    }
+                }
+                // Capacity: scrape the monitoring stand-in (§3.1.2).
+                match r.handle.usage() {
+                    Ok(u) => {
+                        let mem_total =
+                            if u.mem_total > 0 { u.mem_total } else { r.spec.total_memory() };
+                        let mem_free = mem_total.saturating_sub(u.mem_used);
+                        if request.function.requirements.memory > mem_free {
+                            return false;
+                        }
+                        let gpus_total =
+                            if u.gpus_total > 0 { u.gpus_total } else { r.spec.total_gpus() };
+                        let gpus_free = gpus_total.saturating_sub(u.gpus_used);
+                        request.function.requirements.gpu <= gpus_free
+                    }
+                    Err(e) => {
+                        log::warn!("scrape of resource {} failed: {e}; filtering out", r.id);
+                        false
+                    }
+                }
+            })
+            .cloned()
+            .collect()
+    }
+
+    /// Full two-phase scheduling for one function. Returns the chosen
+    /// resource ids and records them in the candidate_resource mapping.
+    pub fn schedule_function(&self, request: &FunctionCreation) -> anyhow::Result<Vec<ResourceId>> {
+        let candidates = self.phase1_filter(request);
+        if candidates.is_empty() {
+            anyhow::bail!(
+                "no resource passes phase-1 filtering for `{}.{}`",
+                request.app,
+                request.function.name
+            );
+        }
+        // Resolve upstream anchors to topology nodes via the full registry
+        // (upstream tiers are usually not candidates themselves).
+        let upstream_ids: &[ResourceId] = match request.function.affinity.affinitytype {
+            AffinityType::Data => &request.data_locations,
+            AffinityType::Function => &request.dep_locations,
+        };
+        let upstream_nodes: Vec<usize> = {
+            let res = self.resources.read().unwrap();
+            upstream_ids.iter().filter_map(|id| res.get(id).map(|r| r.net_node)).collect()
+        };
+        let sched = self.scheduler.read().unwrap().clone();
+        let chosen = {
+            let topo = self.topology.read().unwrap();
+            let ctx = ScheduleCtx { candidates, upstream_nodes, topology: &topo };
+            sched.schedule(request, &ctx)?
+        };
+        if chosen.is_empty() {
+            anyhow::bail!("scheduler returned no placement for `{}`", request.function.name);
+        }
+        self.set_candidates(&request.app, &request.function.name, chosen.clone())?;
+        log::info!(
+            "scheduled {}.{} -> resources {:?}",
+            request.app,
+            request.function.name,
+            chosen
+        );
+        Ok(chosen)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::appconfig::{Affinity, Requirements};
+    use crate::coordinator::resource::testkit::paper_testbed;
+    use crate::simnet::RealClock;
+
+    fn fc(name: &str, tier: Tier, at: AffinityType, reduce: Reduce) -> FunctionConfig {
+        FunctionConfig {
+            name: name.into(),
+            dependencies: vec![],
+            requirements: Requirements::default(),
+            affinity: Affinity { nodetype: tier, affinitytype: at },
+            reduce,
+        }
+    }
+
+    fn req(function: FunctionConfig, data: Vec<ResourceId>, deps: Vec<ResourceId>) -> FunctionCreation {
+        FunctionCreation { app: "t".into(), function, data_locations: data, dep_locations: deps }
+    }
+
+    #[test]
+    fn data_affinity_auto_colocates_with_each_source() {
+        let b = paper_testbed(std::sync::Arc::new(RealClock::new()));
+        let r = req(
+            fc("gen", Tier::Iot, AffinityType::Data, Reduce::Auto),
+            b.iot.clone(),
+            vec![],
+        );
+        let placed = b.faas.schedule_function(&r).unwrap();
+        assert_eq!(placed, b.iot, "one instance per camera, on the camera");
+    }
+
+    #[test]
+    fn function_affinity_auto_picks_closest_edge_per_set() {
+        let b = paper_testbed(std::sync::Arc::new(RealClock::new()));
+        // §5.2: "firstAggregation gets deployed on the two sets of edge
+        // servers" — 8 train placements reduce to the 2 closest edges.
+        let r = req(
+            fc("agg1", Tier::Edge, AffinityType::Function, Reduce::Auto),
+            vec![],
+            b.iot.clone(),
+        );
+        let placed = b.faas.schedule_function(&r).unwrap();
+        assert_eq!(placed, b.edges);
+    }
+
+    #[test]
+    fn reduce_one_picks_single_closest_to_all() {
+        let b = paper_testbed(std::sync::Arc::new(RealClock::new()));
+        // §5.2: secondAggregation with reduce=1 -> the one cloud resource.
+        let r = req(
+            fc("agg2", Tier::Cloud, AffinityType::Function, Reduce::One),
+            vec![],
+            b.edges.clone(),
+        );
+        let placed = b.faas.schedule_function(&r).unwrap();
+        assert_eq!(placed, vec![b.cloud]);
+    }
+
+    #[test]
+    fn privacy_restricts_to_data_generating_iot_devices() {
+        let b = paper_testbed(std::sync::Arc::new(RealClock::new()));
+        let mut f = fc("train", Tier::Iot, AffinityType::Data, Reduce::Auto);
+        f.requirements.privacy = true;
+        let data = vec![b.iot[0], b.iot[3]];
+        let r = req(f, data.clone(), vec![]);
+        let survivors = b.faas.phase1_filter(&r);
+        let ids: Vec<ResourceId> = survivors.iter().map(|r| r.id).collect();
+        assert_eq!(ids, data, "only the devices holding the data survive");
+        let placed = b.faas.schedule_function(&r).unwrap();
+        assert_eq!(placed, data);
+    }
+
+    #[test]
+    fn capacity_filter_drops_small_devices() {
+        let b = paper_testbed(std::sync::Arc::new(RealClock::new()));
+        // 8 GB per sandbox cannot fit a 4 GB Pi.
+        let mut f = fc("big", Tier::Edge, AffinityType::Function, Reduce::Auto);
+        f.requirements.memory = 8 << 30;
+        let r = req(f, vec![], vec![b.iot[0]]);
+        let survivors = b.faas.phase1_filter(&r);
+        assert!(survivors.iter().all(|r| r.spec.tier != Tier::Iot));
+        // Edges (64 GB) and cloud survive.
+        assert!(survivors.iter().any(|r| r.spec.tier == Tier::Edge));
+    }
+
+    #[test]
+    fn gpu_requirement_only_cloud_survives() {
+        let b = paper_testbed(std::sync::Arc::new(RealClock::new()));
+        let mut f = fc("gpu-fn", Tier::Cloud, AffinityType::Function, Reduce::One);
+        f.requirements.gpu = 1;
+        let r = req(f, vec![], vec![b.edges[0]]);
+        let survivors = b.faas.phase1_filter(&r);
+        let ids: Vec<ResourceId> = survivors.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![b.cloud]);
+    }
+
+    #[test]
+    fn unsatisfiable_tier_errors() {
+        let b = paper_testbed(std::sync::Arc::new(RealClock::new()));
+        // GPU required but nodetype=edge: phase 1 leaves only cloud, which
+        // is not of the requested tier -> scheduling must fail loudly.
+        let mut f = fc("bad", Tier::Edge, AffinityType::Function, Reduce::One);
+        f.requirements.gpu = 1;
+        let r = req(f, vec![], vec![b.edges[0]]);
+        assert!(b.faas.schedule_function(&r).is_err());
+    }
+
+    #[test]
+    fn candidates_recorded_in_mapping_and_kv() {
+        let b = paper_testbed(std::sync::Arc::new(RealClock::new()));
+        let r = req(
+            fc("gen", Tier::Iot, AffinityType::Data, Reduce::Auto),
+            vec![b.iot[0]],
+            vec![],
+        );
+        b.faas.schedule_function(&r).unwrap();
+        assert_eq!(b.faas.candidates_of("t", "gen").unwrap(), vec![b.iot[0]]);
+        let rec = b.faas.kv.get("candidate_resource", "t.gen").unwrap();
+        assert_eq!(rec.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn custom_scheduler_is_honored() {
+        struct Pin(ResourceId);
+        impl Schedule for Pin {
+            fn schedule(
+                &self,
+                _r: &FunctionCreation,
+                _c: &ScheduleCtx<'_>,
+            ) -> anyhow::Result<Vec<ResourceId>> {
+                Ok(vec![self.0])
+            }
+        }
+        let b = paper_testbed(std::sync::Arc::new(RealClock::new()));
+        b.faas.set_scheduler(std::sync::Arc::new(Pin(b.cloud)));
+        let r = req(
+            fc("gen", Tier::Iot, AffinityType::Data, Reduce::Auto),
+            vec![b.iot[0]],
+            vec![],
+        );
+        assert_eq!(b.faas.schedule_function(&r).unwrap(), vec![b.cloud]);
+    }
+
+    #[test]
+    fn dedup_preserves_upstream_order() {
+        let b = paper_testbed(std::sync::Arc::new(RealClock::new()));
+        // Upstreams from set 2 first: edge order must follow.
+        let deps = vec![b.iot[4], b.iot[5], b.iot[0], b.iot[1]];
+        let r = req(fc("agg", Tier::Edge, AffinityType::Function, Reduce::Auto), vec![], deps);
+        let placed = b.faas.schedule_function(&r).unwrap();
+        assert_eq!(placed, vec![b.edges[1], b.edges[0]]);
+    }
+}

@@ -1,0 +1,269 @@
+//! Storage virtualization (§3.3.1).
+//!
+//! "EdgeFaaS virtualizes all the resources' storage and provide a unified
+//! interface for users to access different storage resources." Users (and
+//! functions) see only EdgeFaaS bucket names and opaque object URLs of the
+//! form `application_name/bucket_name/resource_ID/object_name`; the
+//! coordinator routes each verb to the owning resource's MinIO stand-in via
+//! the bucket map.
+
+use crate::objstore::store::valid_bucket_name;
+
+use super::placement;
+use super::resource::{EdgeFaaS, ResourceId};
+use crate::util::json::Json;
+
+/// A parsed EdgeFaaS object URL:
+/// `application_name/bucket_name/resource_ID/object_name`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ObjectUrl {
+    pub application: String,
+    pub bucket: String,
+    pub resource: ResourceId,
+    pub object: String,
+}
+
+impl ObjectUrl {
+    pub fn parse(url: &str) -> anyhow::Result<ObjectUrl> {
+        let parts: Vec<&str> = url.splitn(4, '/').collect();
+        if parts.len() != 4 {
+            anyhow::bail!("bad object url `{url}` (want app/bucket/resource/object)");
+        }
+        Ok(ObjectUrl {
+            application: parts[0].to_string(),
+            bucket: parts[1].to_string(),
+            resource: parts[2]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad resource id in url `{url}`"))?,
+            object: parts[3].to_string(),
+        })
+    }
+
+    pub fn to_string(&self) -> String {
+        format!("{}/{}/{}/{}", self.application, self.bucket, self.resource, self.object)
+    }
+}
+
+impl std::fmt::Display for ObjectUrl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.to_string())
+    }
+}
+
+impl EdgeFaaS {
+    /// The EdgeFaaS bucket name: "ApplicationName + BucketName" namespacing
+    /// keeps different applications' datasets isolated.
+    pub fn qualified_bucket(app: &str, bucket: &str) -> String {
+        format!("{app}.{bucket}")
+    }
+
+    /// Create an EdgeFaaS storage bucket. `locality` pins the backing
+    /// resource (the data-placement hint — e.g. "store where generated");
+    /// without it the placement policy picks a resource (§3.3.2).
+    pub fn create_bucket(
+        &self,
+        app: &str,
+        bucket: &str,
+        locality: Option<ResourceId>,
+    ) -> anyhow::Result<()> {
+        if !valid_bucket_name(bucket) {
+            anyhow::bail!("bucket name `{bucket}` violates the S3 naming rules");
+        }
+        let qb = Self::qualified_bucket(app, bucket);
+        if self.buckets.read().unwrap().contains_key(&qb) {
+            anyhow::bail!("bucket `{bucket}` already exists for `{app}`");
+        }
+        let rid = match locality {
+            Some(id) => id,
+            None => placement::pick_bucket_resource(self)?,
+        };
+        let reg = self.resource(rid)?;
+        reg.handle.make_bucket(&qb)?;
+        // bucket map: EdgeFaaS BucketName -> resourceID, backed up.
+        self.kv.put("bucket_map", &qb, Json::Num(rid as f64))?;
+        self.buckets.write().unwrap().insert(qb, rid);
+        // application_bucket mapping tracks original user names.
+        let mut ab = self.app_buckets.write().unwrap();
+        let list = ab.entry(app.to_string()).or_default();
+        list.push(bucket.to_string());
+        let rec = Json::Arr(list.iter().map(|b| Json::Str(b.clone())).collect());
+        self.kv.put("application_bucket", app, rec)?;
+        Ok(())
+    }
+
+    /// Delete an EdgeFaaS bucket (must be empty, mirroring MinIO).
+    pub fn delete_bucket(&self, app: &str, bucket: &str) -> anyhow::Result<()> {
+        let qb = Self::qualified_bucket(app, bucket);
+        let rid = self.bucket_resource(app, bucket)?;
+        let reg = self.resource(rid)?;
+        reg.handle.remove_bucket(&qb)?;
+        self.buckets.write().unwrap().remove(&qb);
+        self.kv.delete("bucket_map", &qb)?;
+        let mut ab = self.app_buckets.write().unwrap();
+        if let Some(list) = ab.get_mut(app) {
+            list.retain(|b| b != bucket);
+            let rec = Json::Arr(list.iter().map(|b| Json::Str(b.clone())).collect());
+            self.kv.put("application_bucket", app, rec)?;
+        }
+        Ok(())
+    }
+
+    /// All buckets created for an application (original user names).
+    pub fn list_buckets(&self, app: &str) -> Vec<String> {
+        self.app_buckets.read().unwrap().get(app).cloned().unwrap_or_default()
+    }
+
+    /// Which resource backs a bucket.
+    pub fn bucket_resource(&self, app: &str, bucket: &str) -> anyhow::Result<ResourceId> {
+        let qb = Self::qualified_bucket(app, bucket);
+        self.buckets
+            .read()
+            .unwrap()
+            .get(&qb)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("no bucket `{bucket}` for `{app}`"))
+    }
+
+    /// Add an object; returns its URL ("Each successfully uploaded object is
+    /// given a url to user where user can use to access the data").
+    pub fn put_object(
+        &self,
+        app: &str,
+        bucket: &str,
+        object: &str,
+        data: &[u8],
+    ) -> anyhow::Result<ObjectUrl> {
+        if object.is_empty() {
+            anyhow::bail!("empty object name");
+        }
+        let rid = self.bucket_resource(app, bucket)?;
+        let reg = self.resource(rid)?;
+        let qb = Self::qualified_bucket(app, bucket);
+        reg.handle.put_object(&qb, object, data)?;
+        Ok(ObjectUrl {
+            application: app.to_string(),
+            bucket: bucket.to_string(),
+            resource: rid,
+            object: object.to_string(),
+        })
+    }
+
+    /// Retrieve an object by URL.
+    pub fn get_object(&self, url: &ObjectUrl) -> anyhow::Result<Vec<u8>> {
+        let reg = self.resource(url.resource)?;
+        let qb = Self::qualified_bucket(&url.application, &url.bucket);
+        reg.handle.get_object(&qb, &url.object)
+    }
+
+    /// Retrieve an object by URL string.
+    pub fn get_object_url(&self, url: &str) -> anyhow::Result<Vec<u8>> {
+        self.get_object(&ObjectUrl::parse(url)?)
+    }
+
+    /// Delete an object.
+    pub fn delete_object(&self, app: &str, bucket: &str, object: &str) -> anyhow::Result<()> {
+        let rid = self.bucket_resource(app, bucket)?;
+        let reg = self.resource(rid)?;
+        let qb = Self::qualified_bucket(app, bucket);
+        reg.handle.remove_object(&qb, object)
+    }
+
+    /// List objects in a bucket.
+    pub fn list_objects(&self, app: &str, bucket: &str) -> anyhow::Result<Vec<String>> {
+        let rid = self.bucket_resource(app, bucket)?;
+        let reg = self.resource(rid)?;
+        let qb = Self::qualified_bucket(app, bucket);
+        reg.handle.list_objects(&qb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::resource::testkit::paper_testbed;
+    use crate::simnet::RealClock;
+    use std::sync::Arc;
+
+    #[test]
+    fn object_url_roundtrip() {
+        let u = ObjectUrl::parse("videopipeline/frames/3/gop/0.zip").unwrap();
+        assert_eq!(u.application, "videopipeline");
+        assert_eq!(u.bucket, "frames");
+        assert_eq!(u.resource, 3);
+        assert_eq!(u.object, "gop/0.zip", "object names may contain slashes");
+        assert_eq!(u.to_string(), "videopipeline/frames/3/gop/0.zip");
+        assert!(ObjectUrl::parse("too/short/2").is_err());
+        assert!(ObjectUrl::parse("a/b/notanid/o").is_err());
+    }
+
+    #[test]
+    fn bucket_lifecycle_with_locality() {
+        let b = paper_testbed(Arc::new(RealClock::new()));
+        let app = "videopipeline";
+        b.faas.create_bucket(app, "frames", Some(b.iot[2])).unwrap();
+        assert_eq!(b.faas.bucket_resource(app, "frames").unwrap(), b.iot[2]);
+        assert_eq!(b.faas.list_buckets(app), vec!["frames"]);
+        // Data actually lives on the chosen resource.
+        let url = b.faas.put_object(app, "frames", "f0.bin", b"framedata").unwrap();
+        assert_eq!(url.resource, b.iot[2]);
+        assert_eq!(b.faas.get_object(&url).unwrap(), b"framedata");
+        let reg = b.faas.resource(b.iot[2]).unwrap();
+        assert_eq!(reg.handle.stored_bytes().unwrap(), 9);
+        // Cleanup ordering enforced.
+        assert!(b.faas.delete_bucket(app, "frames").is_err(), "bucket not empty");
+        b.faas.delete_object(app, "frames", "f0.bin").unwrap();
+        b.faas.delete_bucket(app, "frames").unwrap();
+        assert!(b.faas.list_buckets(app).is_empty());
+    }
+
+    #[test]
+    fn namespaces_isolate_applications() {
+        let b = paper_testbed(Arc::new(RealClock::new()));
+        b.faas.create_bucket("app1", "data", Some(b.cloud)).unwrap();
+        b.faas.create_bucket("app2", "data", Some(b.cloud)).unwrap();
+        b.faas.put_object("app1", "data", "o", b"one").unwrap();
+        b.faas.put_object("app2", "data", "o", b"two").unwrap();
+        let u1 = ObjectUrl::parse(&format!("app1/data/{}/o", b.cloud)).unwrap();
+        let u2 = ObjectUrl::parse(&format!("app2/data/{}/o", b.cloud)).unwrap();
+        assert_eq!(b.faas.get_object(&u1).unwrap(), b"one");
+        assert_eq!(b.faas.get_object(&u2).unwrap(), b"two");
+    }
+
+    #[test]
+    fn duplicate_and_invalid_buckets_rejected() {
+        let b = paper_testbed(Arc::new(RealClock::new()));
+        b.faas.create_bucket("app", "data", Some(b.cloud)).unwrap();
+        assert!(b.faas.create_bucket("app", "data", Some(b.cloud)).is_err());
+        assert!(b.faas.create_bucket("app", "BAD_NAME", Some(b.cloud)).is_err());
+        assert!(b.faas.create_bucket("app", "xy", Some(b.cloud)).is_err(), "too short");
+    }
+
+    #[test]
+    fn mappings_are_backed_up() {
+        let b = paper_testbed(Arc::new(RealClock::new()));
+        b.faas.create_bucket("fl", "models", Some(b.edges[0])).unwrap();
+        assert_eq!(
+            b.faas.kv.get("bucket_map", "fl.models").unwrap().as_u64(),
+            Some(b.edges[0] as u64)
+        );
+        let rec = b.faas.kv.get("application_bucket", "fl").unwrap();
+        assert_eq!(rec.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn default_placement_picks_some_resource() {
+        let b = paper_testbed(Arc::new(RealClock::new()));
+        b.faas.create_bucket("app", "anywhere", None).unwrap();
+        let rid = b.faas.bucket_resource("app", "anywhere").unwrap();
+        assert!(b.faas.resource(rid).is_ok());
+    }
+
+    #[test]
+    fn missing_objects_error() {
+        let b = paper_testbed(Arc::new(RealClock::new()));
+        b.faas.create_bucket("app", "data", Some(b.cloud)).unwrap();
+        let u = ObjectUrl::parse(&format!("app/data/{}/nope", b.cloud)).unwrap();
+        assert!(b.faas.get_object(&u).is_err());
+        assert!(b.faas.bucket_resource("app", "ghost").is_err());
+    }
+}

@@ -1,0 +1,36 @@
+//! # EdgeFaaS
+//!
+//! A reproduction of *EdgeFaaS: A Function-based Framework for Edge
+//! Computing* (Jin & Yang, CS.DC 2022) as a three-layer rust + JAX/Pallas
+//! system:
+//!
+//! * **Layer 3 (this crate)** — the EdgeFaaS coordinator: resource
+//!   registration, two-phase function scheduling, virtual function and
+//!   virtual storage interfaces, and the unified REST gateway
+//!   ([`coordinator`]).
+//! * **Layer 2/1 (build-time python)** — the workflows' compute (LeNet-5
+//!   training, FedAvg, motion detection, face embedding, k-NN) written in JAX
+//!   over Pallas kernels, AOT-lowered to HLO text in `artifacts/` and
+//!   executed from rust via the PJRT CPU client ([`runtime`]).
+//!
+//! Everything the paper's testbed provided is built in-repo as a substrate:
+//! the cluster/FaaS backends ([`cluster`]), the object stores ([`objstore`]),
+//! monitoring ([`monitor`]), durable mapping backup ([`backup`]), the network
+//! ([`simnet`]), and even YAML/JSON/HTTP ([`util`]) since the build
+//! environment is offline. See `DESIGN.md` for the substitution table.
+
+pub mod util;
+pub mod simnet;
+pub mod cluster;
+pub mod objstore;
+pub mod monitor;
+pub mod backup;
+pub mod coordinator;
+pub mod runtime;
+pub mod workflows;
+pub mod perfmodel;
+pub mod bench_harness;
+pub mod testbed;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,125 @@
+//! EdgeFaaS leader entrypoint.
+//!
+//! Subcommands (hand-rolled arg parsing; clap is unavailable offline):
+//!
+//! ```text
+//! edgefaas serve [--port P]               run the unified gateway over the
+//!                                         Fig. 4 testbed (REST control plane)
+//! edgefaas plan <app.yaml> [fn=rid,rid..] parse + schedule an application
+//!                                         YAML, print the placement plan
+//! edgefaas figures                        print the paper-figure summaries
+//! edgefaas artifacts                      list the AOT artifact manifest
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use edgefaas::coordinator::gateway::EdgeFaasGateway;
+use edgefaas::perfmodel::{analytic, PaperCalib, STAGES};
+use edgefaas::simnet::RealClock;
+use edgefaas::testbed::{artifacts_dir, paper_testbed};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: edgefaas <serve [--port P]|plan <app.yaml> [fn=rids..]|figures|artifacts>"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    edgefaas::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("serve") => serve(&args[1..]),
+        Some("plan") => plan(&args[1..]),
+        Some("figures") => figures(),
+        Some("artifacts") => artifacts(),
+        _ => usage(),
+    }
+}
+
+fn serve(args: &[String]) -> anyhow::Result<()> {
+    let mut port = 7070u16;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--port" => {
+                port = args.get(i + 1).and_then(|p| p.parse().ok()).unwrap_or_else(|| usage());
+                i += 2;
+            }
+            _ => usage(),
+        }
+    }
+    let bed = paper_testbed(Arc::new(RealClock::new()));
+    let server = {
+        let gw = Arc::new(EdgeFaasGateway::new(Arc::clone(&bed.faas)));
+        edgefaas::util::http::Server::bind(port, 8, gw as Arc<dyn edgefaas::util::http::Handler>)?
+    };
+    println!("EdgeFaaS gateway on http://{}", server.addr());
+    println!("resources: {:?} (8 IoT + 2 edge + 1 cloud, Fig. 4 testbed)", bed.faas.resource_ids());
+    println!("try: curl http://{}/resources", server.addr());
+    // Serve until interrupted.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn plan(args: &[String]) -> anyhow::Result<()> {
+    let path = args.first().unwrap_or_else(|| usage());
+    let yaml = std::fs::read_to_string(path)?;
+    let mut data: HashMap<String, Vec<u32>> = HashMap::new();
+    for spec in &args[1..] {
+        let (f, rids) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad data anchor `{spec}` (want fn=rid,rid)"))?;
+        data.insert(
+            f.to_string(),
+            rids.split(',').filter_map(|r| r.parse().ok()).collect(),
+        );
+    }
+    let bed = paper_testbed(Arc::new(RealClock::new()));
+    let plan = bed.faas.configure_application(&yaml, &data)?;
+    println!("placement plan over the Fig. 4 testbed:");
+    let mut names: Vec<&String> = plan.keys().collect();
+    names.sort();
+    for f in names {
+        let tiers: Vec<&str> = plan[f]
+            .iter()
+            .map(|&r| bed.faas.resource(r).map(|x| x.spec.tier.name()).unwrap_or("?"))
+            .collect();
+        println!("  {f:<20} -> {:?} ({})", plan[f], tiers.join(","));
+    }
+    Ok(())
+}
+
+fn figures() -> anyhow::Result<()> {
+    let calib = PaperCalib::default();
+    println!(
+        "Fig. 8 end-to-end: cloud-only {:.1} s, edge-only {:.1} s",
+        analytic::end_to_end(&calib, 0),
+        analytic::end_to_end(&calib, 5)
+    );
+    println!("\nFig. 9 partition sweep:");
+    for (p, t) in analytic::partition_sweep(&calib) {
+        println!("  {:<18} {t:>7.2} s", STAGES[p].name());
+    }
+    let (best, t) = analytic::best_partition(&calib);
+    println!(
+        "best: {} at {t:.2} s ({:.1}x vs cloud-only)",
+        STAGES[best].name(),
+        (analytic::end_to_end(&calib, 0) - t) / t
+    );
+    println!("\n(full tables: `cargo bench`)");
+    Ok(())
+}
+
+fn artifacts() -> anyhow::Result<()> {
+    let manifest = edgefaas::runtime::Manifest::load(artifacts_dir())?;
+    println!("artifact manifest (fingerprint {}):", &manifest.fingerprint[..12]);
+    for (name, e) in &manifest.entries {
+        let ins: Vec<String> = e.inputs.iter().map(|s| s.describe()).collect();
+        let outs: Vec<String> = e.outputs.iter().map(|s| s.describe()).collect();
+        println!("  {name:<18} ({}) -> ({})", ins.join(", "), outs.join(", "));
+    }
+    Ok(())
+}

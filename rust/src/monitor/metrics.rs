@@ -1,0 +1,162 @@
+//! Gauge/counter registry per resource.
+//!
+//! The phase-1 scheduler "fetches the Prometheus resource metrics from each
+//! resource and picks out resources that can meet the minimum resource
+//! requirement of the function" (§3.1.2). The registry tracks exactly the
+//! usage vector that decision needs, plus per-node load distribution.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Point-in-time usage of one resource (fractions in [0,1], bytes for mem).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ResourceUsage {
+    pub cpu_frac: f64,
+    pub mem_used: u64,
+    pub mem_total: u64,
+    pub io_bytes_per_s: f64,
+    pub gpu_frac: f64,
+    pub gpus_used: u32,
+    pub gpus_total: u32,
+}
+
+impl ResourceUsage {
+    pub fn mem_free(&self) -> u64 {
+        self.mem_total.saturating_sub(self.mem_used)
+    }
+
+    pub fn gpus_free(&self) -> u32 {
+        self.gpus_total.saturating_sub(self.gpus_used)
+    }
+}
+
+/// Thread-safe metrics registry: named gauges/counters plus per-node load.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    gauges: BTreeMap<String, f64>,
+    counters: BTreeMap<String, u64>,
+    /// Per-node CPU load (the paper: "Prometheus also monitors the load
+    /// distribution of all the nodes that belong to one resource").
+    node_load: BTreeMap<String, f64>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    pub fn inc_counter(&self, name: &str, by: u64) {
+        *self.inner.lock().unwrap().counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_node_load(&self, node: &str, load: f64) {
+        self.inner.lock().unwrap().node_load.insert(node.to_string(), load);
+    }
+
+    /// Record the standard usage vector.
+    pub fn record_usage(&self, u: &ResourceUsage) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.gauges.insert("node_cpu_usage".into(), u.cpu_frac);
+        inner.gauges.insert("node_memory_used_bytes".into(), u.mem_used as f64);
+        inner.gauges.insert("node_memory_total_bytes".into(), u.mem_total as f64);
+        inner.gauges.insert("node_io_bytes_per_second".into(), u.io_bytes_per_s);
+        inner.gauges.insert("node_gpu_usage".into(), u.gpu_frac);
+        inner.gauges.insert("node_gpus_used".into(), u.gpus_used as f64);
+        inner.gauges.insert("node_gpus_total".into(), u.gpus_total as f64);
+    }
+
+    /// Read back the standard usage vector.
+    pub fn usage(&self) -> ResourceUsage {
+        let inner = self.inner.lock().unwrap();
+        let g = |name: &str| inner.gauges.get(name).copied().unwrap_or(0.0);
+        ResourceUsage {
+            cpu_frac: g("node_cpu_usage"),
+            mem_used: g("node_memory_used_bytes") as u64,
+            mem_total: g("node_memory_total_bytes") as u64,
+            io_bytes_per_s: g("node_io_bytes_per_second"),
+            gpu_frac: g("node_gpu_usage"),
+            gpus_used: g("node_gpus_used") as u32,
+            gpus_total: g("node_gpus_total") as u32,
+        }
+    }
+
+    /// Prometheus text exposition of every metric.
+    pub fn exposition(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &inner.gauges {
+            out.push_str(&format!("# TYPE edgefaas_{k} gauge\nedgefaas_{k} {v}\n"));
+        }
+        for (k, v) in &inner.counters {
+            out.push_str(&format!("# TYPE edgefaas_{k} counter\nedgefaas_{k} {v}\n"));
+        }
+        for (node, load) in &inner.node_load {
+            out.push_str(&format!("edgefaas_node_load{{node=\"{node}\"}} {load}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauges_and_counters() {
+        let m = MetricsRegistry::new();
+        m.set_gauge("node_cpu_usage", 0.42);
+        assert_eq!(m.gauge("node_cpu_usage"), Some(0.42));
+        m.inc_counter("invocations_total", 3);
+        m.inc_counter("invocations_total", 2);
+        assert_eq!(m.counter("invocations_total"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn usage_roundtrip() {
+        let m = MetricsRegistry::new();
+        let u = ResourceUsage {
+            cpu_frac: 0.3,
+            mem_used: 1 << 30,
+            mem_total: 4 << 30,
+            io_bytes_per_s: 1e6,
+            gpu_frac: 0.5,
+            gpus_used: 2,
+            gpus_total: 4,
+        };
+        m.record_usage(&u);
+        assert_eq!(m.usage(), u);
+        assert_eq!(u.mem_free(), 3 << 30);
+        assert_eq!(u.gpus_free(), 2);
+    }
+
+    #[test]
+    fn exposition_format() {
+        let m = MetricsRegistry::new();
+        m.set_gauge("node_cpu_usage", 0.25);
+        m.inc_counter("requests_total", 7);
+        m.set_node_load("node-1", 0.8);
+        let text = m.exposition();
+        assert!(text.contains("edgefaas_node_cpu_usage 0.25"));
+        assert!(text.contains("edgefaas_requests_total 7"));
+        assert!(text.contains("edgefaas_node_load{node=\"node-1\"} 0.8"));
+        assert!(text.contains("# TYPE edgefaas_node_cpu_usage gauge"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Monitoring substrate (the Prometheus stand-in).
+//!
+//! "Each resource has a Prometheus service deployed to monitor the resource
+//! usages... CPU usage, memory usage, I/O bandwidth and GPU usage" (§3.1.2).
+//! [`metrics`] is the per-resource gauge/counter registry, [`scrape`] is the
+//! text exposition endpoint plus the scraper client EdgeFaaS uses during
+//! phase-1 scheduling.
+
+pub mod metrics;
+pub mod scrape;
+
+pub use metrics::{MetricsRegistry, ResourceUsage};

@@ -1,0 +1,109 @@
+//! Prometheus scrape endpoint + scraper client.
+//!
+//! Each resource serves `GET /metrics` in the Prometheus text exposition
+//! format; "EdgeFaaS fetches the Prometheus resource metrics from each
+//! resource" (§3.1.2) with [`scrape`].
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::util::http::{get, Handler, Request, Response, Server};
+
+use super::metrics::{MetricsRegistry, ResourceUsage};
+
+/// HTTP facade exposing one registry at `/metrics`.
+pub struct MetricsGateway {
+    registry: Arc<MetricsRegistry>,
+}
+
+impl MetricsGateway {
+    pub fn serve(registry: Arc<MetricsRegistry>) -> anyhow::Result<Server> {
+        let gw = Arc::new(MetricsGateway { registry });
+        Server::bind(0, 2, gw as Arc<dyn Handler>)
+    }
+}
+
+impl Handler for MetricsGateway {
+    fn handle(&self, req: Request) -> Response {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/metrics") => Response::text(200, self.registry.exposition()),
+            ("GET", "/healthz") => Response::text(200, "ok"),
+            _ => Response::not_found(),
+        }
+    }
+}
+
+/// Parse a Prometheus text exposition into name → value. Labelled series are
+/// keyed as `name{labels}`.
+pub fn parse_exposition(text: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((name, value)) = line.rsplit_once(' ') {
+            if let Ok(v) = value.parse::<f64>() {
+                out.insert(name.to_string(), v);
+            }
+        }
+    }
+    out
+}
+
+/// Scrape a resource's `/metrics` endpoint and decode the standard usage
+/// vector.
+pub fn scrape(addr: &str) -> anyhow::Result<ResourceUsage> {
+    let resp = get(addr, "/metrics")?;
+    if !resp.ok() {
+        anyhow::bail!("scrape {addr}: {}", resp.status);
+    }
+    let series = parse_exposition(resp.body_str()?);
+    let g = |name: &str| series.get(&format!("edgefaas_{name}")).copied().unwrap_or(0.0);
+    Ok(ResourceUsage {
+        cpu_frac: g("node_cpu_usage"),
+        mem_used: g("node_memory_used_bytes") as u64,
+        mem_total: g("node_memory_total_bytes") as u64,
+        io_bytes_per_s: g("node_io_bytes_per_second"),
+        gpu_frac: g("node_gpu_usage"),
+        gpus_used: g("node_gpus_used") as u32,
+        gpus_total: g("node_gpus_total") as u32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrape_roundtrip() {
+        let registry = Arc::new(MetricsRegistry::new());
+        let usage = ResourceUsage {
+            cpu_frac: 0.6,
+            mem_used: 2 << 30,
+            mem_total: 64 << 30,
+            io_bytes_per_s: 5e6,
+            gpu_frac: 0.0,
+            gpus_used: 0,
+            gpus_total: 0,
+        };
+        registry.record_usage(&usage);
+        let server = MetricsGateway::serve(registry).unwrap();
+        let scraped = scrape(&server.addr()).unwrap();
+        assert_eq!(scraped, usage);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_junk() {
+        let text = "# HELP x y\n# TYPE a gauge\na 1.5\nbad line without value x\nb{l=\"v\"} 2\n\n";
+        let m = parse_exposition(text);
+        assert_eq!(m.get("a"), Some(&1.5));
+        assert_eq!(m.get("b{l=\"v\"}"), Some(&2.0));
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn missing_endpoint_is_error() {
+        assert!(scrape("127.0.0.1:1").is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! REST gateway for the object store (the MinIO endpoint stand-in).
+//!
+//! "EdgeFaaS uses HTTP to request the RESTful APIs provided by the FaaS
+//! framework and object store" (§3.1). Verbs:
+//!
+//! ```text
+//! PUT    /bucket/{bucket}                 MakeBucket
+//! DELETE /bucket/{bucket}                 RemoveBucket
+//! GET    /buckets                         ListBuckets
+//! PUT    /object/{bucket}/{object...}     FPutObject (body = data)
+//! GET    /object/{bucket}/{object...}     FGetObject
+//! DELETE /object/{bucket}/{object...}     RemoveObject
+//! GET    /objects/{bucket}                ListObjects
+//! ```
+//!
+//! Requests carry the MinIO access/secret keys in headers — the paper's
+//! "the user should at least have the read and write privileges enabled".
+
+use std::sync::Arc;
+
+use crate::util::http::{Handler, Request, Response, Server};
+use crate::util::json::Json;
+
+use super::store::{ObjectStore, StoreError};
+
+pub struct StoreGateway {
+    store: Arc<ObjectStore>,
+}
+
+impl StoreGateway {
+    pub fn new(store: Arc<ObjectStore>) -> Self {
+        StoreGateway { store }
+    }
+
+    pub fn serve(store: Arc<ObjectStore>, workers: usize) -> anyhow::Result<Server> {
+        let gw = Arc::new(StoreGateway::new(store));
+        Server::bind(0, workers, gw as Arc<dyn Handler>)
+    }
+
+    fn authorized(&self, req: &Request) -> bool {
+        req.headers.get("x-access-key").map(String::as_str) == Some(&self.store.access_key)
+            && req.headers.get("x-secret-key").map(String::as_str) == Some(&self.store.secret_key)
+    }
+}
+
+fn status_of(e: &StoreError) -> u16 {
+    match e {
+        StoreError::BadBucketName(_) => 400,
+        StoreError::BucketExists(_) | StoreError::BucketNotEmpty(_) => 409,
+        StoreError::NoBucket(_) | StoreError::NoObject(_) => 404,
+        StoreError::Full { .. } => 507,
+    }
+}
+
+impl Handler for StoreGateway {
+    fn handle(&self, req: Request) -> Response {
+        if !self.authorized(&req) {
+            return Response::text(401, "bad credentials");
+        }
+        let segs = req.segments();
+        let result: Result<Response, StoreError> = match (req.method.as_str(), segs.as_slice()) {
+            ("PUT", ["bucket", bucket]) => {
+                self.store.make_bucket(bucket).map(|()| Response::text(201, "created"))
+            }
+            ("DELETE", ["bucket", bucket]) => {
+                self.store.remove_bucket(bucket).map(|()| Response::text(200, "removed"))
+            }
+            ("GET", ["buckets"]) => Ok(Response::json(200, &Json::from(self.store.list_buckets()))),
+            ("PUT", ["object", bucket, rest @ ..]) if !rest.is_empty() => {
+                let object = rest.join("/");
+                self.store
+                    .put_object(bucket, &object, req.body.clone())
+                    .map(|()| Response::text(201, "stored"))
+            }
+            ("GET", ["object", bucket, rest @ ..]) if !rest.is_empty() => {
+                let object = rest.join("/");
+                self.store.get_object(bucket, &object).map(|data| Response::bytes(200, data))
+            }
+            ("DELETE", ["object", bucket, rest @ ..]) if !rest.is_empty() => {
+                let object = rest.join("/");
+                self.store.remove_object(bucket, &object).map(|()| Response::text(200, "removed"))
+            }
+            ("GET", ["objects", bucket]) => {
+                self.store.list_objects(bucket).map(|names| Response::json(200, &Json::from(names)))
+            }
+            ("GET", ["healthz"]) => Ok(Response::text(200, "ok")),
+            _ => Ok(Response::not_found()),
+        };
+        result.unwrap_or_else(|e| Response::text(status_of(&e), e.to_string()))
+    }
+}
+
+/// Client helpers (used by the coordinator's storage virtualization).
+pub mod client {
+    use crate::util::http;
+
+    fn auth<'a>(ak: &'a str, sk: &'a str) -> [(&'a str, &'a str); 2] {
+        [("X-Access-Key", ak), ("X-Secret-Key", sk)]
+    }
+
+    pub fn make_bucket(addr: &str, ak: &str, sk: &str, bucket: &str) -> anyhow::Result<()> {
+        let resp = http::request(addr, "PUT", &format!("/bucket/{bucket}"), &auth(ak, sk), &[])?;
+        if !resp.ok() {
+            anyhow::bail!("make_bucket {bucket}: {} {}", resp.status, resp.body_str().unwrap_or(""));
+        }
+        Ok(())
+    }
+
+    pub fn remove_bucket(addr: &str, ak: &str, sk: &str, bucket: &str) -> anyhow::Result<()> {
+        let resp = http::request(addr, "DELETE", &format!("/bucket/{bucket}"), &auth(ak, sk), &[])?;
+        if !resp.ok() {
+            anyhow::bail!("remove_bucket {bucket}: {} {}", resp.status, resp.body_str().unwrap_or(""));
+        }
+        Ok(())
+    }
+
+    pub fn put_object(
+        addr: &str,
+        ak: &str,
+        sk: &str,
+        bucket: &str,
+        object: &str,
+        data: &[u8],
+    ) -> anyhow::Result<()> {
+        let resp =
+            http::request(addr, "PUT", &format!("/object/{bucket}/{object}"), &auth(ak, sk), data)?;
+        if !resp.ok() {
+            anyhow::bail!("put_object {bucket}/{object}: {}", resp.status);
+        }
+        Ok(())
+    }
+
+    pub fn get_object(
+        addr: &str,
+        ak: &str,
+        sk: &str,
+        bucket: &str,
+        object: &str,
+    ) -> anyhow::Result<Vec<u8>> {
+        let resp =
+            http::request(addr, "GET", &format!("/object/{bucket}/{object}"), &auth(ak, sk), &[])?;
+        if !resp.ok() {
+            anyhow::bail!("get_object {bucket}/{object}: {}", resp.status);
+        }
+        Ok(resp.body)
+    }
+
+    pub fn remove_object(
+        addr: &str,
+        ak: &str,
+        sk: &str,
+        bucket: &str,
+        object: &str,
+    ) -> anyhow::Result<()> {
+        let resp = http::request(
+            addr,
+            "DELETE",
+            &format!("/object/{bucket}/{object}"),
+            &auth(ak, sk),
+            &[],
+        )?;
+        if !resp.ok() {
+            anyhow::bail!("remove_object {bucket}/{object}: {}", resp.status);
+        }
+        Ok(())
+    }
+
+    pub fn list_objects(
+        addr: &str,
+        ak: &str,
+        sk: &str,
+        bucket: &str,
+    ) -> anyhow::Result<Vec<String>> {
+        let resp = http::request(addr, "GET", &format!("/objects/{bucket}"), &auth(ak, sk), &[])?;
+        if !resp.ok() {
+            anyhow::bail!("list_objects {bucket}: {}", resp.status);
+        }
+        Ok(resp
+            .json_body()?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|x| x.as_str().map(String::from))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gw() -> (Server, Arc<ObjectStore>) {
+        let store = Arc::new(ObjectStore::new(1 << 24, "ak", "sk"));
+        let server = StoreGateway::serve(Arc::clone(&store), 4).unwrap();
+        (server, store)
+    }
+
+    #[test]
+    fn rest_object_lifecycle() {
+        let (server, _) = gw();
+        let addr = server.addr();
+        client::make_bucket(&addr, "ak", "sk", "frames").unwrap();
+        client::put_object(&addr, "ak", "sk", "frames", "gop/0.zip", b"zipdata").unwrap();
+        let data = client::get_object(&addr, "ak", "sk", "frames", "gop/0.zip").unwrap();
+        assert_eq!(data, b"zipdata");
+        assert_eq!(
+            client::list_objects(&addr, "ak", "sk", "frames").unwrap(),
+            vec!["gop/0.zip".to_string()]
+        );
+        client::remove_object(&addr, "ak", "sk", "frames", "gop/0.zip").unwrap();
+        client::remove_bucket(&addr, "ak", "sk", "frames").unwrap();
+    }
+
+    #[test]
+    fn auth_rejected() {
+        let (server, _) = gw();
+        let addr = server.addr();
+        assert!(client::make_bucket(&addr, "ak", "WRONG", "frames").is_err());
+        assert!(client::make_bucket(&addr, "WRONG", "sk", "frames").is_err());
+    }
+
+    #[test]
+    fn missing_object_404() {
+        let (server, _) = gw();
+        let addr = server.addr();
+        client::make_bucket(&addr, "ak", "sk", "data").unwrap();
+        assert!(client::get_object(&addr, "ak", "sk", "data", "nope").is_err());
+    }
+
+    #[test]
+    fn binary_payload_roundtrip() {
+        let (server, _) = gw();
+        let addr = server.addr();
+        client::make_bucket(&addr, "ak", "sk", "bin").unwrap();
+        let mut payload = Vec::with_capacity(100_000);
+        let mut rng = crate::util::rng::Pcg32::seeded(1);
+        for _ in 0..100_000 {
+            payload.push(rng.next_u32() as u8);
+        }
+        client::put_object(&addr, "ak", "sk", "bin", "blob", &payload).unwrap();
+        assert_eq!(client::get_object(&addr, "ak", "sk", "bin", "blob").unwrap(), payload);
+    }
+}

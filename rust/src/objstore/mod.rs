@@ -1,0 +1,14 @@
+//! Object storage substrate (the MinIO stand-in).
+//!
+//! "Each resource provides its local storage as the EdgeFaaS storage. It is
+//! using MinIO by default to organize the local storage" (§3.3.1). This
+//! module is that per-resource store: [`store`] implements the MinIO verbs
+//! EdgeFaaS calls (MakeBucket, RemoveBucket, FPutObject, FGetObject,
+//! RemoveObject, ListObjects) with capacity accounting against the
+//! resource's disk, and [`gateway`] exposes them over REST with
+//! access/secret-key authentication.
+
+pub mod gateway;
+pub mod store;
+
+pub use store::ObjectStore;

@@ -1,0 +1,287 @@
+//! Bucket/object store with MinIO-shaped verbs.
+//!
+//! Semantics follow the paper and MinIO:
+//! * bucket names must satisfy (a subset of) the S3 naming rules the paper
+//!   references in §3.3.1;
+//! * concurrent writes to one object are last-writer-wins ("If EdgeFaaS
+//!   receives multiple write requests for the same object simultaneously, it
+//!   overwrites all but the last object written");
+//! * a bucket must be empty before it can be removed;
+//! * capacity is bounded by the resource's registered `storage` size.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum StoreError {
+    #[error("invalid bucket name `{0}`")]
+    BadBucketName(String),
+    #[error("bucket `{0}` already exists")]
+    BucketExists(String),
+    #[error("bucket `{0}` not found")]
+    NoBucket(String),
+    #[error("bucket `{0}` is not empty")]
+    BucketNotEmpty(String),
+    #[error("object `{0}` not found")]
+    NoObject(String),
+    #[error("store full: need {need} bytes, {free} free")]
+    Full { need: u64, free: u64 },
+}
+
+/// Validate an S3-style bucket name (§3.3.1 points at the AWS rules):
+/// 3-63 chars, lowercase letters / digits / hyphens, must start and end with
+/// a letter or digit.
+pub fn valid_bucket_name(name: &str) -> bool {
+    let n = name.len();
+    if !(3..=63).contains(&n) {
+        return false;
+    }
+    let bytes = name.as_bytes();
+    let ok_edge = |b: u8| b.is_ascii_lowercase() || b.is_ascii_digit();
+    if !ok_edge(bytes[0]) || !ok_edge(bytes[n - 1]) {
+        return false;
+    }
+    bytes.iter().all(|&b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-' || b == b'.')
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    buckets: BTreeMap<String, BTreeMap<String, Vec<u8>>>,
+    used: u64,
+}
+
+/// A thread-safe in-memory object store with a capacity bound.
+#[derive(Debug)]
+pub struct ObjectStore {
+    inner: Mutex<Inner>,
+    capacity: u64,
+    /// Access credentials checked by the gateway.
+    pub access_key: String,
+    pub secret_key: String,
+}
+
+impl ObjectStore {
+    pub fn new(capacity: u64, access_key: &str, secret_key: &str) -> Self {
+        ObjectStore {
+            inner: Mutex::new(Inner::default()),
+            capacity,
+            access_key: access_key.to_string(),
+            secret_key: secret_key.to_string(),
+        }
+    }
+
+    /// MinIO MakeBucket.
+    pub fn make_bucket(&self, name: &str) -> Result<(), StoreError> {
+        if !valid_bucket_name(name) {
+            return Err(StoreError::BadBucketName(name.to_string()));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.buckets.contains_key(name) {
+            return Err(StoreError::BucketExists(name.to_string()));
+        }
+        inner.buckets.insert(name.to_string(), BTreeMap::new());
+        Ok(())
+    }
+
+    /// MinIO RemoveBucket — "All objects in the bucket must be deleted before
+    /// the bucket itself can be deleted."
+    pub fn remove_bucket(&self, name: &str) -> Result<(), StoreError> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.buckets.get(name) {
+            None => Err(StoreError::NoBucket(name.to_string())),
+            Some(objs) if !objs.is_empty() => Err(StoreError::BucketNotEmpty(name.to_string())),
+            Some(_) => {
+                inner.buckets.remove(name);
+                Ok(())
+            }
+        }
+    }
+
+    /// MinIO FPutObject (last-writer-wins on overwrite).
+    pub fn put_object(&self, bucket: &str, object: &str, data: Vec<u8>) -> Result<(), StoreError> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.buckets.contains_key(bucket) {
+            return Err(StoreError::NoBucket(bucket.to_string()));
+        }
+        let old = inner
+            .buckets
+            .get(bucket)
+            .and_then(|b| b.get(object))
+            .map(|v| v.len() as u64)
+            .unwrap_or(0);
+        let new_used = inner.used - old + data.len() as u64;
+        if new_used > self.capacity {
+            return Err(StoreError::Full {
+                need: data.len() as u64,
+                free: self.capacity - (inner.used - old),
+            });
+        }
+        inner.used = new_used;
+        inner.buckets.get_mut(bucket).unwrap().insert(object.to_string(), data);
+        Ok(())
+    }
+
+    /// MinIO FGetObject.
+    pub fn get_object(&self, bucket: &str, object: &str) -> Result<Vec<u8>, StoreError> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .buckets
+            .get(bucket)
+            .ok_or_else(|| StoreError::NoBucket(bucket.to_string()))?
+            .get(object)
+            .cloned()
+            .ok_or_else(|| StoreError::NoObject(format!("{bucket}/{object}")))
+    }
+
+    /// Object size without copying the payload.
+    pub fn stat_object(&self, bucket: &str, object: &str) -> Result<u64, StoreError> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .buckets
+            .get(bucket)
+            .ok_or_else(|| StoreError::NoBucket(bucket.to_string()))?
+            .get(object)
+            .map(|v| v.len() as u64)
+            .ok_or_else(|| StoreError::NoObject(format!("{bucket}/{object}")))
+    }
+
+    /// MinIO RemoveObject.
+    pub fn remove_object(&self, bucket: &str, object: &str) -> Result<(), StoreError> {
+        let mut inner = self.inner.lock().unwrap();
+        let objs = inner
+            .buckets
+            .get_mut(bucket)
+            .ok_or_else(|| StoreError::NoBucket(bucket.to_string()))?;
+        match objs.remove(object) {
+            Some(data) => {
+                inner.used -= data.len() as u64;
+                Ok(())
+            }
+            None => Err(StoreError::NoObject(format!("{bucket}/{object}"))),
+        }
+    }
+
+    /// MinIO ListObjects (recursive; sorted).
+    pub fn list_objects(&self, bucket: &str) -> Result<Vec<String>, StoreError> {
+        let inner = self.inner.lock().unwrap();
+        Ok(inner
+            .buckets
+            .get(bucket)
+            .ok_or_else(|| StoreError::NoBucket(bucket.to_string()))?
+            .keys()
+            .cloned()
+            .collect())
+    }
+
+    /// List bucket names (sorted).
+    pub fn list_buckets(&self) -> Vec<String> {
+        self.inner.lock().unwrap().buckets.keys().cloned().collect()
+    }
+
+    /// Bytes currently stored.
+    pub fn used(&self) -> u64 {
+        self.inner.lock().unwrap().used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ObjectStore {
+        ObjectStore::new(1 << 20, "ak", "sk")
+    }
+
+    #[test]
+    fn bucket_name_rules() {
+        assert!(valid_bucket_name("videopipeline-frames"));
+        assert!(valid_bucket_name("abc"));
+        assert!(valid_bucket_name("a.b-c1"));
+        assert!(!valid_bucket_name("ab"));
+        assert!(!valid_bucket_name("Uppercase"));
+        assert!(!valid_bucket_name("-leading"));
+        assert!(!valid_bucket_name("trailing-"));
+        assert!(!valid_bucket_name(&"x".repeat(64)));
+        assert!(!valid_bucket_name("under_score"));
+    }
+
+    #[test]
+    fn object_crud_cycle() {
+        let s = store();
+        s.make_bucket("data").unwrap();
+        s.put_object("data", "a.bin", vec![1, 2, 3]).unwrap();
+        assert_eq!(s.get_object("data", "a.bin").unwrap(), vec![1, 2, 3]);
+        assert_eq!(s.stat_object("data", "a.bin").unwrap(), 3);
+        assert_eq!(s.list_objects("data").unwrap(), vec!["a.bin".to_string()]);
+        s.remove_object("data", "a.bin").unwrap();
+        assert_eq!(s.get_object("data", "a.bin"), Err(StoreError::NoObject("data/a.bin".into())));
+        assert_eq!(s.used(), 0);
+    }
+
+    #[test]
+    fn overwrite_is_last_writer_wins() {
+        let s = store();
+        s.make_bucket("data").unwrap();
+        s.put_object("data", "o", vec![0; 100]).unwrap();
+        s.put_object("data", "o", vec![7; 10]).unwrap();
+        assert_eq!(s.get_object("data", "o").unwrap(), vec![7; 10]);
+        assert_eq!(s.used(), 10, "overwrite releases the old bytes");
+    }
+
+    #[test]
+    fn nonempty_bucket_cannot_be_removed() {
+        let s = store();
+        s.make_bucket("data").unwrap();
+        s.put_object("data", "o", vec![1]).unwrap();
+        assert_eq!(s.remove_bucket("data"), Err(StoreError::BucketNotEmpty("data".into())));
+        s.remove_object("data", "o").unwrap();
+        s.remove_bucket("data").unwrap();
+        assert!(s.list_buckets().is_empty());
+    }
+
+    #[test]
+    fn duplicate_and_missing_buckets() {
+        let s = store();
+        s.make_bucket("data").unwrap();
+        assert_eq!(s.make_bucket("data"), Err(StoreError::BucketExists("data".into())));
+        assert_eq!(s.put_object("nope", "o", vec![]), Err(StoreError::NoBucket("nope".into())));
+        assert_eq!(s.remove_bucket("nope"), Err(StoreError::NoBucket("nope".into())));
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let s = ObjectStore::new(100, "ak", "sk");
+        s.make_bucket("data").unwrap();
+        s.put_object("data", "a", vec![0; 60]).unwrap();
+        assert!(matches!(s.put_object("data", "b", vec![0; 60]), Err(StoreError::Full { .. })));
+        // Overwriting the existing object with something that fits is fine.
+        s.put_object("data", "a", vec![0; 90]).unwrap();
+        assert_eq!(s.used(), 90);
+    }
+
+    #[test]
+    fn concurrent_writers_one_wins() {
+        use std::sync::Arc;
+        let s = Arc::new(store());
+        s.make_bucket("data").unwrap();
+        let handles: Vec<_> = (0..8u8)
+            .map(|i| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    s.put_object("data", "contested", vec![i; 64]).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let v = s.get_object("data", "contested").unwrap();
+        assert_eq!(v.len(), 64);
+        assert!(v.iter().all(|&b| b == v[0]), "no torn write");
+        assert_eq!(s.used(), 64);
+    }
+}

@@ -1,0 +1,120 @@
+//! Analytic derivations of Figs. 6, 8 and 9 from the calibrated model.
+//!
+//! Semantics of a *partition point* follow §5.1.2: the video generator is
+//! always on IoT; stages up to and including the partition stage run on the
+//! edge tier; everything after runs on the cloud. Partition at
+//! `video-generator` (index 0) is therefore the cloud-only solution and at
+//! `face-recognition` (index 5) the edge-only solution.
+
+use super::calib::{PaperCalib, STAGES};
+
+/// Fig. 6 row: upload latency of stage `i`'s output to (edge, cloud).
+pub fn comm_latency(c: &PaperCalib, stage_idx: usize) -> (f64, f64) {
+    let bytes = c.out_bytes[stage_idx];
+    (c.to_edge(bytes), c.to_cloud(bytes))
+}
+
+/// End-to-end latency (from video-processing onward, matching Fig. 8's
+/// measurement window) for a given partition index in 0..=5.
+pub fn end_to_end(c: &PaperCalib, partition: usize) -> f64 {
+    assert!(partition < STAGES.len());
+    let mut t = 0.0;
+    // The generator's 92 MB output must reach the first compute tier.
+    if partition == 0 {
+        // Everything on cloud: the video goes straight up.
+        t += c.to_cloud(c.out_bytes[0]);
+    } else {
+        t += c.to_edge(c.out_bytes[0]);
+    }
+    // Stages 1..=5 run on edge (i <= partition) or cloud (i > partition).
+    for i in 1..STAGES.len() {
+        let on_cloud = i > partition;
+        t += c.compute(STAGES[i], on_cloud);
+        // Crossing the partition boundary ships stage `partition`'s output.
+        if i > 0 && i == partition + 1 && partition >= 1 {
+            t += c.to_cloud(c.out_bytes[partition]);
+        }
+    }
+    t
+}
+
+/// Fig. 9: the whole partition sweep.
+pub fn partition_sweep(c: &PaperCalib) -> Vec<(usize, f64)> {
+    (0..STAGES.len()).map(|p| (p, end_to_end(c, p))).collect()
+}
+
+/// The best partition point and its latency.
+pub fn best_partition(c: &PaperCalib) -> (usize, f64) {
+    partition_sweep(c)
+        .into_iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+}
+
+/// Breakdown of one partition's end-to-end latency into
+/// (ingest transfer, edge compute, cross transfer, cloud compute) — the
+/// stacked bars of Fig. 9.
+pub fn breakdown(c: &PaperCalib, partition: usize) -> (f64, f64, f64, f64) {
+    let ingest = if partition == 0 {
+        c.to_cloud(c.out_bytes[0])
+    } else {
+        c.to_edge(c.out_bytes[0])
+    };
+    let mut edge = 0.0;
+    let mut cloud = 0.0;
+    for i in 1..STAGES.len() {
+        if i <= partition {
+            edge += c.compute(STAGES[i], false);
+        } else {
+            cloud += c.compute(STAGES[i], true);
+        }
+    }
+    let cross = if (1..5).contains(&partition) { c.to_cloud(c.out_bytes[partition]) } else { 0.0 };
+    (ingest, edge, cross, cloud)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_is_u_shaped() {
+        // Fig. 9's shape: huge at the data-heavy early partitions, a basin
+        // in the middle, slightly rising at the pure-edge end.
+        let c = PaperCalib::default();
+        let sweep = partition_sweep(&c);
+        assert!(sweep[0].1 > 90.0, "cloud-only dominated by the 92 MB upload");
+        assert!(sweep[1].1 > 30.0, "partition at processing still ships 30 MB");
+        assert!(sweep[2].1 < 12.0, "after motion detection the data is small");
+        let best = best_partition(&c);
+        assert_eq!(best.0, 2);
+        // Every partition after the best is within a second (flat basin).
+        for p in 3..6 {
+            assert!(sweep[p].1 - best.1 < 1.0, "p={p}: {}", sweep[p].1);
+        }
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let c = PaperCalib::default();
+        for p in 0..6 {
+            let (a, b, x, d) = breakdown(&c, p);
+            let total = end_to_end(&c, p);
+            assert!((a + b + x + d - total).abs() < 1e-9, "p={p}");
+        }
+    }
+
+    #[test]
+    fn comm_latency_matches_fig6_ordering() {
+        let c = PaperCalib::default();
+        for i in 0..6 {
+            let (e, w) = comm_latency(&c, i);
+            assert!(w > e, "cloud upload always slower (stage {i})");
+        }
+        let (e0, w0) = comm_latency(&c, 0);
+        assert!((e0 - 8.5).abs() < 0.1);
+        assert!(w0 > 90.0);
+        let (_, w5) = comm_latency(&c, 5);
+        assert!(w5 < 1.0, "late-stage outputs are cheap to ship");
+    }
+}

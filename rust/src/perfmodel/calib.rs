@@ -1,0 +1,179 @@
+//! Calibrated constants for the video-analytics evaluation.
+//!
+//! Anchor points taken from the paper's text:
+//! * Fig. 5/6: the 30 s video is 92 MB; uploading it to the edge takes
+//!   8.5 s and to the cloud ~92.7 s.
+//! * Fig. 7: face detection takes 0.433 s on edge vs 0.113 s on cloud GPU.
+//! * Fig. 8: end-to-end (from video-processing) cloud-only 96.7 s,
+//!   edge-only 12.1 s.
+//! * Fig. 9: best partition at motion-detection, 11.5 s; improvements
+//!   7.4x over cloud-only and ~5% over edge-only.
+//!
+//! The remaining sizes/latencies are fitted so all anchors hold
+//! simultaneously under the transfer model `t = rtt + overhead + B/bw`
+//! (see the module tests, which assert each anchor).
+
+/// The six pipeline stages (§4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    VideoGenerator,
+    VideoProcessing,
+    MotionDetection,
+    FaceDetection,
+    FaceExtraction,
+    FaceRecognition,
+}
+
+pub const STAGES: [Stage; 6] = [
+    Stage::VideoGenerator,
+    Stage::VideoProcessing,
+    Stage::MotionDetection,
+    Stage::FaceDetection,
+    Stage::FaceExtraction,
+    Stage::FaceRecognition,
+];
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::VideoGenerator => "video-generator",
+            Stage::VideoProcessing => "video-processing",
+            Stage::MotionDetection => "motion-detection",
+            Stage::FaceDetection => "face-detection",
+            Stage::FaceExtraction => "face-extraction",
+            Stage::FaceRecognition => "face-recognition",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        STAGES.iter().position(|s| s == self).unwrap()
+    }
+}
+
+/// The calibrated evaluation model.
+#[derive(Debug, Clone)]
+pub struct PaperCalib {
+    /// Output data size per stage for the 30 s window, bytes (Fig. 5).
+    pub out_bytes: [u64; 6],
+    /// Compute latency per stage on the edge tier, seconds (Fig. 7).
+    pub edge_compute: [f64; 6],
+    /// Compute latency per stage on the cloud tier (GPU where the paper
+    /// used it), seconds (Fig. 7).
+    pub cloud_compute: [f64; 6],
+    /// IoT->edge LAN bandwidth, bytes/s.
+    pub lan_bw: f64,
+    /// Edge/IoT->cloud uplink bandwidth, bytes/s.
+    pub wan_bw: f64,
+    /// IoT->edge RTT, seconds (set 1 of Fig. 4).
+    pub lan_rtt: f64,
+    /// Edge->cloud RTT, seconds (set 1 of Fig. 4).
+    pub wan_rtt: f64,
+}
+
+
+impl Default for PaperCalib {
+    fn default() -> Self {
+        PaperCalib {
+            out_bytes: [
+                92_000_000, // 30 s of 1080p video (Fig. 5's 92 MB)
+                30_000_000, // zipped GoPs: "also generated at a large size"
+                550_000,    // only the motion-bearing pictures survive
+                300_000,    // pictures containing faces
+                120_000,    // extracted face features
+                50_000,     // identity-tagged pictures
+            ],
+            edge_compute: [0.0, 1.300, 0.390, 0.433, 0.450, 1.027],
+            cloud_compute: [0.0, 0.950, 0.220, 0.113, 0.160, 0.470],
+            lan_bw: 92_000_000.0 / 8.5,  // 92 MB in 8.5 s (Fig. 6)
+            wan_bw: 7.765e6 / 8.0,       // fitted: cloud-only e2e = 96.7 s
+            lan_rtt: 0.0057,
+            wan_rtt: 0.0434,
+        }
+    }
+}
+
+impl PaperCalib {
+    /// Transfer time of `bytes` from the IoT/edge LAN to the edge tier.
+    pub fn to_edge(&self, bytes: u64) -> f64 {
+        self.lan_rtt / 2.0 + bytes as f64 / self.lan_bw
+    }
+
+    /// Transfer time of `bytes` up to the cloud tier.
+    pub fn to_cloud(&self, bytes: u64) -> f64 {
+        (self.lan_rtt + self.wan_rtt) / 2.0 + bytes as f64 / self.wan_bw
+    }
+
+    /// Compute latency of a stage on a tier ("edge" or "cloud").
+    pub fn compute(&self, stage: Stage, on_cloud: bool) -> f64 {
+        if on_cloud {
+            self.cloud_compute[stage.index()]
+        } else {
+            self.edge_compute[stage.index()]
+        }
+    }
+
+    /// IoT-tier compute estimate (Fig. 7's third series): the Pi's
+    /// Cortex-A72 runs the CPU stages ~12x slower than the edge Xeon.
+    pub fn iot_compute(&self, stage: Stage) -> f64 {
+        self.edge_compute[stage.index()] / 0.08
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::analytic;
+
+    #[test]
+    fn anchor_video_upload_times() {
+        let c = PaperCalib::default();
+        // Fig. 6: 92 MB to edge 8.5 s, to cloud ≈ 92.7-95 s.
+        let e = c.to_edge(c.out_bytes[0]);
+        assert!((e - 8.5).abs() < 0.1, "to edge: {e}");
+        let w = c.to_cloud(c.out_bytes[0]);
+        assert!((w - 94.8).abs() < 1.0, "to cloud: {w}");
+    }
+
+    #[test]
+    fn anchor_face_detection_speedup() {
+        let c = PaperCalib::default();
+        // Fig. 7: 0.433 s edge vs 0.113 s cloud GPU.
+        assert_eq!(c.compute(Stage::FaceDetection, false), 0.433);
+        assert_eq!(c.compute(Stage::FaceDetection, true), 0.113);
+    }
+
+    #[test]
+    fn anchor_fig8_end_to_end() {
+        let c = PaperCalib::default();
+        let cloud_only = analytic::end_to_end(&c, 0);
+        let edge_only = analytic::end_to_end(&c, 5);
+        assert!((cloud_only - 96.7).abs() < 0.5, "cloud-only: {cloud_only}");
+        assert!((edge_only - 12.1).abs() < 0.15, "edge-only: {edge_only}");
+    }
+
+    #[test]
+    fn anchor_fig9_best_partition() {
+        let c = PaperCalib::default();
+        let (best_idx, best) = analytic::best_partition(&c);
+        assert_eq!(STAGES[best_idx], Stage::MotionDetection, "best at motion detection");
+        assert!((best - 11.5).abs() < 0.2, "best: {best}");
+        // Headline improvements.
+        let cloud_only = analytic::end_to_end(&c, 0);
+        let edge_only = analytic::end_to_end(&c, 5);
+        let x = (cloud_only - best) / best;
+        assert!((x - 7.4).abs() < 0.3, "7.4x over cloud-only, got {x:.2}");
+        let pct = (edge_only - best) / best * 100.0;
+        assert!((2.0..10.0).contains(&pct), "~5% over edge-only, got {pct:.1}%");
+    }
+
+    #[test]
+    fn sizes_monotone_after_processing() {
+        // Fig. 5's shape: big, big, then small and shrinking.
+        let c = PaperCalib::default();
+        assert!(c.out_bytes[0] > c.out_bytes[1]);
+        for i in 1..5 {
+            assert!(c.out_bytes[i] > c.out_bytes[i + 1], "stage {i}");
+        }
+        assert!(c.out_bytes[1] > 10 * c.out_bytes[2], "processing -> motion cliff");
+    }
+}

@@ -1,0 +1,14 @@
+//! Performance model for the paper's evaluation (§5.1).
+//!
+//! The paper measured its figures on a physical testbed; we reproduce them
+//! from a calibrated analytic model layered on the [`crate::simnet`]
+//! substrate. [`calib`] holds the per-stage data sizes and compute
+//! latencies fitted to the paper's reported anchor points; [`analytic`]
+//! derives every figure (6, 8, 9) from those plus the topology, so the
+//! *shape* of each result — who wins, by what factor, where the crossover
+//! falls — is a computation, not a transcription.
+
+pub mod analytic;
+pub mod calib;
+
+pub use calib::{PaperCalib, Stage, STAGES};

@@ -1,0 +1,205 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! `artifacts/manifest.json` records, for every AOT-lowered entry, the HLO
+//! file plus input/output shapes and dtypes. The runtime validates every
+//! execution against this contract so shape bugs surface as errors at the
+//! boundary, not as garbage numerics.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+use super::tensor::{DType, Tensor};
+
+/// Shape + dtype of one tensor in an entry signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> anyhow::Result<TensorSpec> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().map(|x| x as usize).ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let dtype = DType::parse(v.req_str("dtype")?)?;
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    /// Does a tensor match this spec?
+    pub fn matches(&self, t: &Tensor) -> bool {
+        t.shape == self.shape && t.dtype() == self.dtype
+    }
+
+    pub fn describe(&self) -> String {
+        format!("{}{:?}", self.dtype.name(), self.shape)
+    }
+}
+
+/// One AOT entry.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {path:?}: {e} (run `make artifacts` first)"))?;
+        Self::parse_text(&text, dir)
+    }
+
+    fn parse_text(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let v = parse(text)?;
+        let fingerprint = v.req_str("fingerprint")?.to_string();
+        let mut entries = BTreeMap::new();
+        let obj = v
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing entries"))?;
+        for (name, e) in obj {
+            let file = dir.join(e.req_str("file")?);
+            let parse_specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("entry {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                Entry { name: name.clone(), file, inputs: parse_specs("inputs")?, outputs: parse_specs("outputs")? },
+            );
+        }
+        Ok(Manifest { dir, fingerprint, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> anyhow::Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact entry `{name}` (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    /// Validate a set of inputs against an entry's signature.
+    pub fn validate_inputs(&self, name: &str, inputs: &[Tensor]) -> anyhow::Result<()> {
+        let entry = self.entry(name)?;
+        if inputs.len() != entry.inputs.len() {
+            anyhow::bail!("{name}: expected {} inputs, got {}", entry.inputs.len(), inputs.len());
+        }
+        for (i, (spec, t)) in entry.inputs.iter().zip(inputs).enumerate() {
+            if !spec.matches(t) {
+                anyhow::bail!(
+                    "{name}: input {i} expected {}, got {}{:?}",
+                    spec.describe(),
+                    t.dtype().name(),
+                    t.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "fingerprint": "abc123",
+      "entries": {
+        "fedavg_k4": {
+          "file": "fedavg_k4.hlo.txt",
+          "inputs": [
+            {"shape": [4, 61706], "dtype": "f32"},
+            {"shape": [4], "dtype": "f32"}
+          ],
+          "outputs": [{"shape": [61706], "dtype": "f32"}]
+        },
+        "lenet_predict": {
+          "file": "lenet_predict.hlo.txt",
+          "inputs": [
+            {"shape": [61706], "dtype": "f32"},
+            {"shape": [32, 1, 28, 28], "dtype": "f32"}
+          ],
+          "outputs": [{"shape": [32], "dtype": "i32"}]
+        }
+      }
+    }"#;
+
+    fn sample() -> Manifest {
+        Manifest::parse_text(SAMPLE, PathBuf::from("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = sample();
+        assert_eq!(m.fingerprint, "abc123");
+        assert_eq!(m.names(), vec!["fedavg_k4", "lenet_predict"]);
+        let e = m.entry("fedavg_k4").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![4, 61706]);
+        assert_eq!(e.outputs[0].dtype, DType::F32);
+        assert!(e.file.ends_with("fedavg_k4.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_entry_lists_alternatives() {
+        let err = sample().entry("nope").unwrap_err().to_string();
+        assert!(err.contains("fedavg_k4"), "{err}");
+    }
+
+    #[test]
+    fn validate_inputs_checks_arity_shape_dtype() {
+        let m = sample();
+        let good = vec![
+            Tensor::zeros(vec![4, 61706]),
+            Tensor::zeros(vec![4]),
+        ];
+        m.validate_inputs("fedavg_k4", &good).unwrap();
+        // Wrong arity.
+        assert!(m.validate_inputs("fedavg_k4", &good[..1].to_vec()).is_err());
+        // Wrong shape.
+        let bad = vec![Tensor::zeros(vec![4, 10]), Tensor::zeros(vec![4])];
+        assert!(m.validate_inputs("fedavg_k4", &bad).is_err());
+        // Wrong dtype.
+        let bad = vec![Tensor::zeros(vec![4, 61706]), Tensor::i32(vec![4], vec![0; 4]).unwrap()];
+        assert!(m.validate_inputs("fedavg_k4", &bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Integration-lite: if `make artifacts` has run, the real manifest
+        // must parse and contain the expected entries.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for name in ["lenet_train_step", "fedavg_k4", "motion_scores", "knn_classify"] {
+                assert!(m.entries.contains_key(name), "missing {name}");
+            }
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute
+//! from the coordinator's request path.
+//!
+//! This is the runtime half of the AOT bridge (see `python/compile/aot.py`):
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile` -> `execute`. Executables are compiled lazily on
+//! first use and cached for the life of the engine; the request path then
+//! pays only literal conversion + execution.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use super::artifacts::Manifest;
+use super::tensor::Tensor;
+
+/// The PJRT-backed execution engine for all AOT artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create an engine over the artifact directory (expects manifest.json).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        log::info!(
+            "PJRT engine up: platform={} devices={} entries={:?}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.names()
+        );
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for an entry.
+    fn executable(&self, name: &str) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let entry = self.manifest.entry(name)?;
+        let start = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .map_err(|e| anyhow::anyhow!("parse {:?}: {e}", entry.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        log::info!("compiled `{name}` in {:.2}s", start.elapsed().as_secs_f64());
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of entries (warm-up before serving).
+    pub fn warm_up(&self, names: &[&str]) -> anyhow::Result<()> {
+        for name in names {
+            self.executable(name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an entry. Inputs are validated against the manifest; outputs
+    /// come back as host tensors (the AOT lowering wraps results in a tuple,
+    /// which is unpacked here).
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.manifest.validate_inputs(name, inputs)?;
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<anyhow::Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+        let buffer = &result[0][0];
+        let root = buffer
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result of {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e}"))?;
+        let entry = self.manifest.entry(name)?;
+        if parts.len() != entry.outputs.len() {
+            anyhow::bail!("{name}: expected {} outputs, got {}", entry.outputs.len(), parts.len());
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (i, (part, spec)) in parts.iter().zip(&entry.outputs).enumerate() {
+            let t = Tensor::from_literal(part)?;
+            if !spec.matches(&t) {
+                anyhow::bail!(
+                    "{name}: output {i} expected {}, got {}{:?}",
+                    spec.describe(),
+                    t.dtype().name(),
+                    t.shape
+                );
+            }
+            outs.push(t);
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    fn engine() -> Option<Engine> {
+        artifacts_dir().map(|d| Engine::new(d).unwrap())
+    }
+
+    #[test]
+    fn fedavg_numerics_match_reference() {
+        let Some(eng) = engine() else { return };
+        let p = 61706;
+        // Workers: constant vectors 1, 2, 3, 4 with weights 1, 1, 1, 1 -> 2.5.
+        let mut stacked = Vec::with_capacity(4 * p);
+        for k in 0..4 {
+            stacked.extend(std::iter::repeat((k + 1) as f32).take(p));
+        }
+        let inputs = vec![
+            Tensor::f32(vec![4, p], stacked).unwrap(),
+            Tensor::f32(vec![4], vec![1.0; 4]).unwrap(),
+        ];
+        let out = eng.execute("fedavg_k4", &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let avg = out[0].as_f32().unwrap();
+        assert!(avg.iter().all(|&x| (x - 2.5).abs() < 1e-6), "fedavg mean");
+    }
+
+    #[test]
+    fn motion_scores_flag_keyframe_and_still_scene() {
+        let Some(eng) = engine() else { return };
+        let (t, h, w) = (24, 96, 160);
+        let frames = Tensor::f32(vec![t, h, w], vec![0.5; t * h * w]).unwrap();
+        let out = eng.execute("motion_scores", &[frames]).unwrap();
+        let scores = out[0].as_f32().unwrap();
+        assert_eq!(scores.len(), t);
+        assert_eq!(scores[0], 1.0);
+        assert!(scores[1..].iter().all(|&s| s.abs() < 1e-6));
+    }
+
+    #[test]
+    fn lenet_predict_shape_contract() {
+        let Some(eng) = engine() else { return };
+        let p = 61706;
+        let params = Tensor::zeros(vec![p]);
+        let images = Tensor::zeros(vec![32, 1, 28, 28]);
+        let out = eng.execute("lenet_predict", &[params, images]).unwrap();
+        assert_eq!(out[0].shape, vec![32]);
+        // Zero params -> uniform logits -> argmax 0 everywhere.
+        assert!(out[0].as_i32().unwrap().iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn train_step_decreases_loss_on_separable_batch() {
+        let Some(eng) = engine() else { return };
+        let p = 61706;
+        // Deterministic "digits": class-dependent bright square.
+        let mut rng = crate::util::rng::Pcg32::seeded(42);
+        let mut images = vec![0.0f32; 32 * 28 * 28];
+        let mut labels = vec![0i32; 32];
+        for i in 0..32 {
+            let lbl = (i % 10) as i32;
+            labels[i] = lbl;
+            let cy = 4 + 2 * (lbl as usize % 5);
+            let cx = 4 + 4 * (lbl as usize / 5);
+            for dy in 0..6 {
+                for dx in 0..6 {
+                    images[i * 784 + (cy + dy) * 28 + cx + dx] = 1.0;
+                }
+            }
+        }
+        // He-scaled init per layer so gradients flow through the tanh stack
+        // (layout mirrors python/compile/model.py LENET_SHAPES).
+        let layers: [(usize, f32); 10] = [
+            (150, (2.0f32 / 25.0).sqrt()),   // conv1_w
+            (6, 0.0),                        // conv1_b
+            (2400, (2.0f32 / 150.0).sqrt()), // conv2_w
+            (16, 0.0),                       // conv2_b
+            (48000, (2.0f32 / 400.0).sqrt()),
+            (120, 0.0),
+            (10080, (2.0f32 / 120.0).sqrt()),
+            (84, 0.0),
+            (840, (2.0f32 / 84.0).sqrt()),
+            (10, 0.0),
+        ];
+        let mut params = Vec::with_capacity(p);
+        for (n, scale) in layers {
+            for _ in 0..n {
+                params.push(rng.next_gaussian() as f32 * scale);
+            }
+        }
+        assert_eq!(params.len(), p);
+        let mut params_t = Tensor::f32(vec![p], params).unwrap();
+        let images_t = Tensor::f32(vec![32, 1, 28, 28], images).unwrap();
+        let labels_t = Tensor::i32(vec![32], labels).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..10 {
+            let out = eng
+                .execute(
+                    "lenet_train_step",
+                    &[params_t.clone(), images_t.clone(), labels_t.clone(), Tensor::scalar(0.3)],
+                )
+                .unwrap();
+            params_t = out[0].clone();
+            losses.push(out[1].item().unwrap());
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.9),
+            "loss must fall: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn knn_classifies_gallery_rows_exactly() {
+        let Some(eng) = engine() else { return };
+        let (b, g, d) = (8, 32, 64);
+        let mut rng = crate::util::rng::Pcg32::seeded(7);
+        let gallery: Vec<f32> = (0..g * d).map(|_| rng.next_f32() - 0.5).collect();
+        let labels: Vec<i32> = (0..g as i32).collect();
+        // Queries = first 8 gallery rows.
+        let queries = gallery[..b * d].to_vec();
+        let out = eng
+            .execute(
+                "knn_classify",
+                &[
+                    Tensor::f32(vec![b, d], queries).unwrap(),
+                    Tensor::f32(vec![g, d], gallery).unwrap(),
+                    Tensor::i32(vec![g], labels).unwrap(),
+                ],
+            )
+            .unwrap();
+        let pred = out[0].as_i32().unwrap();
+        assert_eq!(pred, &(0..b as i32).collect::<Vec<_>>()[..]);
+        let dist = out[1].as_f32().unwrap();
+        assert!(dist.iter().all(|&x| x < 1e-3));
+    }
+
+    #[test]
+    fn input_validation_rejects_bad_shapes() {
+        let Some(eng) = engine() else { return };
+        let bad = vec![Tensor::zeros(vec![3, 61706]), Tensor::zeros(vec![4])];
+        let err = eng.execute("fedavg_k4", &bad).unwrap_err().to_string();
+        assert!(err.contains("input 0"), "{err}");
+    }
+
+    #[test]
+    fn executable_cache_returns_same_compilation() {
+        let Some(eng) = engine() else { return };
+        eng.warm_up(&["fedavg_k2"]).unwrap();
+        let a = eng.executable("fedavg_k2").unwrap();
+        let b = eng.executable("fedavg_k2").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: executes the AOT artifacts produced by `python/compile/`.
+//!
+//! * [`tensor`] — host tensors + the wire format function payloads use;
+//! * [`artifacts`] — the manifest contract written by `aot.py`;
+//! * [`client`] — the PJRT engine (HLO text -> compile -> execute, cached).
+//!
+//! Python never runs here: the rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/*.hlo.txt`.
+
+pub mod artifacts;
+pub mod client;
+pub mod service;
+pub mod tensor;
+
+pub use artifacts::Manifest;
+pub use client::Engine;
+pub use service::EngineService;
+pub use tensor::{DType, Tensor};

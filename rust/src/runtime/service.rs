@@ -1,0 +1,161 @@
+//! Thread-hosted engine service.
+//!
+//! The `xla` crate's PJRT client is `Rc`-based and therefore neither `Send`
+//! nor `Sync`; function handlers run on gateway worker threads. The service
+//! owns the [`Engine`] on a dedicated thread and serves execution requests
+//! over a channel — the standard actor pattern. PJRT CPU parallelizes
+//! inside a computation, so serializing at the request level costs little
+//! at this scale (and matches a single accelerator queue on real hardware).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use super::tensor::Tensor;
+
+enum Request {
+    Execute {
+        entry: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<anyhow::Result<Vec<Tensor>>>,
+    },
+    WarmUp {
+        entries: Vec<String>,
+        reply: mpsc::Sender<anyhow::Result<()>>,
+    },
+    Shutdown,
+}
+
+/// A `Send + Sync` handle to an engine thread.
+pub struct EngineService {
+    tx: Mutex<mpsc::Sender<Request>>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl EngineService {
+    /// Spawn the engine thread over an artifact directory. Fails fast if the
+    /// manifest is unreadable or the PJRT client cannot start.
+    pub fn start(artifacts_dir: impl Into<PathBuf>) -> anyhow::Result<EngineService> {
+        let dir = artifacts_dir.into();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let thread = std::thread::Builder::new().name("pjrt-engine".into()).spawn(move || {
+            let engine = match super::client::Engine::new(&dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Execute { entry, inputs, reply } => {
+                        let _ = reply.send(engine.execute(&entry, &inputs));
+                    }
+                    Request::WarmUp { entries, reply } => {
+                        let names: Vec<&str> = entries.iter().map(String::as_str).collect();
+                        let _ = reply.send(engine.warm_up(&names));
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        })?;
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        Ok(EngineService { tx: Mutex::new(tx), thread: Mutex::new(Some(thread)) })
+    }
+
+    /// Execute an artifact entry (see [`super::client::Engine::execute`]).
+    pub fn execute(&self, entry: &str, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Execute {
+                entry: entry.to_string(),
+                inputs: inputs.to_vec(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped request"))?
+    }
+
+    /// Pre-compile entries.
+    pub fn warm_up(&self, entries: &[&str]) -> anyhow::Result<()> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::WarmUp {
+                entries: entries.iter().map(|s| s.to_string()).collect(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped request"))?
+    }
+}
+
+impl Drop for EngineService {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn concurrent_clients_share_one_engine() {
+        let Some(dir) = artifacts_dir() else { return };
+        let svc = Arc::new(EngineService::start(dir).unwrap());
+        svc.warm_up(&["fedavg_k2"]).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|k| {
+                let svc = Arc::clone(&svc);
+                std::thread::spawn(move || {
+                    let p = 61706;
+                    let mut stacked = vec![k as f32; p];
+                    stacked.extend(vec![(k + 2) as f32; p]);
+                    let out = svc
+                        .execute(
+                            "fedavg_k2",
+                            &[
+                                Tensor::f32(vec![2, p], stacked).unwrap(),
+                                Tensor::f32(vec![2], vec![1.0, 1.0]).unwrap(),
+                            ],
+                        )
+                        .unwrap();
+                    let avg = out[0].as_f32().unwrap();
+                    assert!((avg[0] - (k as f32 + 1.0)).abs() < 1e-6);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn bad_entry_propagates_error() {
+        let Some(dir) = artifacts_dir() else { return };
+        let svc = EngineService::start(dir).unwrap();
+        assert!(svc.execute("nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn missing_artifacts_fail_fast() {
+        assert!(EngineService::start("/nonexistent/path").is_err());
+    }
+}

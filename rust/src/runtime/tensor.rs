@@ -1,0 +1,320 @@
+//! Host tensors crossing the rust <-> PJRT boundary.
+//!
+//! Function payloads inside EdgeFaaS are tensors (frames, model parameters,
+//! embeddings). [`Tensor`] is the host-side representation with a compact,
+//! self-describing binary wire format so tensors can travel through the
+//! object stores and HTTP gateways unchanged:
+//!
+//! ```text
+//! [magic "EFT1"][dtype u8][rank u8][dims u32 x rank][data little-endian]
+//! ```
+
+use anyhow::{bail, Context};
+
+/// Supported element types (the artifact entries only use these two).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype `{other}`"),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// Tensor payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> anyhow::Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape, data: Data::F32(data) })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> anyhow::Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape, data: Data::I32(data) })
+    }
+
+    /// Scalar f32.
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    /// All-zeros f32 tensor.
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: Data::F32(vec![0.0; n]) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// First element as f32 (scalars).
+    pub fn item(&self) -> anyhow::Result<f32> {
+        match &self.data {
+            Data::F32(v) => v.first().copied().context("empty tensor"),
+            Data::I32(v) => v.first().map(|&x| x as f32).context("empty tensor"),
+        }
+    }
+
+    // ------------------------------------------------------- wire format --
+
+    const MAGIC: &'static [u8; 4] = b"EFT1";
+
+    /// Serialize to the wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(6 + 4 * self.shape.len() + 4 * self.len());
+        out.extend_from_slice(Self::MAGIC);
+        out.push(match self.dtype() {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        });
+        out.push(self.shape.len() as u8);
+        for &d in &self.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        match &self.data {
+            Data::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Data::I32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    /// Deserialize from the wire format.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Tensor> {
+        if bytes.len() < 6 || &bytes[..4] != Self::MAGIC {
+            bail!("not a tensor payload (bad magic)");
+        }
+        let dtype = match bytes[4] {
+            0 => DType::F32,
+            1 => DType::I32,
+            other => bail!("bad dtype tag {other}"),
+        };
+        let rank = bytes[5] as usize;
+        let mut off = 6;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            if off + 4 > bytes.len() {
+                bail!("truncated tensor header");
+            }
+            shape.push(u32::from_le_bytes(bytes[off..off + 4].try_into()?) as usize);
+            off += 4;
+        }
+        let n: usize = shape.iter().product();
+        if bytes.len() != off + 4 * n {
+            bail!("tensor payload size mismatch: want {} data bytes, have {}", 4 * n, bytes.len() - off);
+        }
+        let data = match dtype {
+            DType::F32 => {
+                let mut v = Vec::with_capacity(n);
+                for i in 0..n {
+                    let b = &bytes[off + 4 * i..off + 4 * i + 4];
+                    v.push(f32::from_le_bytes(b.try_into()?));
+                }
+                Data::F32(v)
+            }
+            DType::I32 => {
+                let mut v = Vec::with_capacity(n);
+                for i in 0..n {
+                    let b = &bytes[off + 4 * i..off + 4 * i + 4];
+                    v.push(i32::from_le_bytes(b.try_into()?));
+                }
+                Data::I32(v)
+            }
+        };
+        Ok(Tensor { shape, data })
+    }
+
+    /// Byte length of the serialized form without serializing.
+    pub fn wire_len(&self) -> usize {
+        6 + 4 * self.shape.len() + 4 * self.len()
+    }
+
+    // --------------------------------------------------- XLA conversions --
+
+    /// Convert to an `xla::Literal`.
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let bytes: Vec<u8> = match &self.data {
+            Data::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Data::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        };
+        let ty = match self.dtype() {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &self.shape, &bytes)
+            .map_err(|e| anyhow::anyhow!("literal create: {e}"))
+    }
+
+    /// Convert from an `xla::Literal`.
+    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
+        let shape = lit.shape().map_err(|e| anyhow::anyhow!("literal shape: {e}"))?;
+        let array = match &shape {
+            xla::Shape::Array(a) => a,
+            other => bail!("expected array literal, got {other:?}"),
+        };
+        let dims: Vec<usize> = array.dims().iter().map(|&d| d as usize).collect();
+        match array.primitive_type() {
+            xla::PrimitiveType::F32 => {
+                let v = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+                Tensor::f32(dims, v)
+            }
+            xla::PrimitiveType::S32 => {
+                let v = lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+                Tensor::i32(dims, v)
+            }
+            other => bail!("unsupported literal type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_validate_shape() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn wire_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, -2.5, 3.25, 0.0]).unwrap();
+        let bytes = t.to_bytes();
+        assert_eq!(bytes.len(), t.wire_len());
+        assert_eq!(Tensor::from_bytes(&bytes).unwrap(), t);
+    }
+
+    #[test]
+    fn wire_roundtrip_i32_and_scalar() {
+        let t = Tensor::i32(vec![3], vec![-1, 0, 7]).unwrap();
+        assert_eq!(Tensor::from_bytes(&t.to_bytes()).unwrap(), t);
+        let s = Tensor::scalar(0.5);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(Tensor::from_bytes(&s.to_bytes()).unwrap(), s);
+        assert_eq!(s.item().unwrap(), 0.5);
+    }
+
+    #[test]
+    fn rejects_malformed_payloads() {
+        assert!(Tensor::from_bytes(b"nope").is_err());
+        assert!(Tensor::from_bytes(b"EFT1\x09\x00").is_err(), "bad dtype tag");
+        let t = Tensor::f32(vec![4], vec![0.0; 4]).unwrap();
+        let mut bytes = t.to_bytes();
+        bytes.truncate(bytes.len() - 1);
+        assert!(Tensor::from_bytes(&bytes).is_err(), "truncated data");
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+
+        let ti = Tensor::i32(vec![2], vec![7, -9]).unwrap();
+        let lit = ti.to_literal().unwrap();
+        assert_eq!(Tensor::from_literal(&lit).unwrap(), ti);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let t = Tensor::f32(vec![2], vec![1.0, 2.0]).unwrap();
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.dtype().name(), "f32");
+        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    /// Property: random tensors roundtrip through the wire format.
+    #[test]
+    fn prop_wire_roundtrip() {
+        let mut rng = crate::util::rng::Pcg32::seeded(21);
+        for _ in 0..100 {
+            let rank = rng.next_below(4) as usize;
+            let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.next_below(8) as usize).collect();
+            let n: usize = shape.iter().product();
+            let t = if rng.next_bool(0.5) {
+                Tensor::f32(shape, (0..n).map(|_| rng.next_f32() - 0.5).collect()).unwrap()
+            } else {
+                Tensor::i32(shape, (0..n).map(|_| rng.next_u32() as i32).collect()).unwrap()
+            };
+            assert_eq!(Tensor::from_bytes(&t.to_bytes()).unwrap(), t);
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Real vs virtual time.
+//!
+//! All latency-sensitive coordinator code takes a `&dyn Clock` so the same
+//! scheduling/placement logic runs under real time in the examples and under
+//! virtual time in the figure benches (where the paper's latencies are tens
+//! of seconds and must not be slept for real).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A monotonic clock measured in seconds.
+pub trait Clock: Send + Sync {
+    /// Seconds since the clock's epoch.
+    fn now(&self) -> f64;
+    /// Sleep (really or virtually) for `dur` seconds.
+    fn sleep(&self, dur: f64);
+}
+
+/// Wall-clock time via `std::time::Instant`.
+pub struct RealClock {
+    start: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        RealClock { start: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn sleep(&self, dur: f64) {
+        if dur > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(dur));
+        }
+    }
+}
+
+/// Virtual time: `sleep` advances the clock instantly. Stored as integer
+/// nanoseconds in an atomic so concurrent readers need no lock.
+pub struct VirtualClock {
+    nanos: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { nanos: AtomicU64::new(0) }
+    }
+
+    /// Advance the clock to `t` seconds if `t` is ahead (monotonic).
+    pub fn advance_to(&self, t: f64) {
+        let target = (t * 1e9) as u64;
+        self.nanos.fetch_max(target, Ordering::SeqCst);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.nanos.load(Ordering::SeqCst) as f64 / 1e9
+    }
+
+    fn sleep(&self, dur: f64) {
+        if dur > 0.0 {
+            let d = (dur * 1e9) as u64;
+            self.nanos.fetch_add(d, Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now();
+        c.sleep(0.005);
+        let b = c.now();
+        assert!(b >= a + 0.004, "a={a} b={b}");
+    }
+
+    #[test]
+    fn virtual_clock_sleep_is_instant() {
+        let c = VirtualClock::new();
+        let wall = Instant::now();
+        c.sleep(100.0); // "100 seconds"
+        assert!(wall.elapsed().as_millis() < 50);
+        assert!((c.now() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn virtual_advance_is_monotonic() {
+        let c = VirtualClock::new();
+        c.advance_to(5.0);
+        c.advance_to(3.0); // ignored: behind
+        assert!((c.now() - 5.0).abs() < 1e-6);
+        c.advance_to(7.5);
+        assert!((c.now() - 7.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,183 @@
+//! Discrete-event simulation engine.
+//!
+//! Drives the virtual-time workflow simulations behind Figs. 8 and 9: stage
+//! executions and data transfers are events on a priority queue keyed by
+//! virtual time. The engine is deliberately small — events are boxed
+//! closures that may schedule further events — but it is enough to model the
+//! paper's pipelines, including parallel fan-out (multiple cameras / FL
+//! workers) and fan-in barriers (FedAvg aggregation).
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::rc::Rc;
+
+type Event<'a> = Box<dyn FnOnce(&mut SimEngine<'a>) + 'a>;
+
+/// Ordered key: (time in ns, sequence number for FIFO tie-breaking).
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+struct Key(u64, u64);
+
+/// A discrete-event engine with virtual time in seconds.
+pub struct SimEngine<'a> {
+    now: f64,
+    seq: u64,
+    queue: BinaryHeap<(Reverse<Key>, usize)>,
+    /// Slab of pending events (heap stores indices to keep ordering cheap).
+    events: Vec<Option<Event<'a>>>,
+}
+
+impl<'a> SimEngine<'a> {
+    pub fn new() -> Self {
+        SimEngine { now: 0.0, seq: 0, queue: BinaryHeap::new(), events: Vec::new() }
+    }
+
+    /// Current virtual time in seconds.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `f` to run `delay` seconds from now.
+    pub fn schedule<F: FnOnce(&mut SimEngine<'a>) + 'a>(&mut self, delay: f64, f: F) {
+        assert!(delay >= 0.0 && delay.is_finite(), "bad delay {delay}");
+        let t = ((self.now + delay) * 1e9).round() as u64;
+        let idx = self.events.len();
+        self.events.push(Some(Box::new(f)));
+        self.queue.push((Reverse(Key(t, self.seq)), idx));
+        self.seq += 1;
+    }
+
+    /// Run events until the queue is empty; returns the final virtual time.
+    pub fn run(&mut self) -> f64 {
+        while let Some((Reverse(Key(t, _)), idx)) = self.queue.pop() {
+            self.now = t as f64 / 1e9;
+            let ev = self.events[idx].take().expect("event fired twice");
+            ev(self);
+        }
+        self.now
+    }
+}
+
+impl<'a> Default for SimEngine<'a> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A fan-in barrier: fires `on_done(engine, t)` once `n` arms have completed,
+/// at the time of the last arrival. Used for FedAvg aggregation and
+/// multi-camera joins.
+pub struct Barrier<'a> {
+    remaining: usize,
+    on_done: Option<Box<dyn FnOnce(&mut SimEngine<'a>) + 'a>>,
+}
+
+impl<'a> Barrier<'a> {
+    pub fn new(
+        n: usize,
+        on_done: impl FnOnce(&mut SimEngine<'a>) + 'a,
+    ) -> Rc<RefCell<Barrier<'a>>> {
+        assert!(n > 0);
+        Rc::new(RefCell::new(Barrier { remaining: n, on_done: Some(Box::new(on_done)) }))
+    }
+
+    /// Signal one arm's completion.
+    pub fn arrive(this: &Rc<RefCell<Barrier<'a>>>, engine: &mut SimEngine<'a>) {
+        let done = {
+            let mut b = this.borrow_mut();
+            assert!(b.remaining > 0, "barrier over-arrived");
+            b.remaining -= 1;
+            if b.remaining == 0 {
+                b.on_done.take()
+            } else {
+                None
+            }
+        };
+        if let Some(f) = done {
+            f(engine);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut eng = SimEngine::new();
+        for (delay, tag) in [(3.0, 'c'), (1.0, 'a'), (2.0, 'b')] {
+            let o = Rc::clone(&order);
+            eng.schedule(delay, move |e| {
+                o.borrow_mut().push((tag, e.now()));
+            });
+        }
+        let end = eng.run();
+        assert!((end - 3.0).abs() < 1e-9);
+        let o = order.borrow();
+        assert_eq!(o.iter().map(|(t, _)| *t).collect::<String>(), "abc");
+        assert!((o[0].1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ties_fire_fifo() {
+        let order = Rc::new(RefCell::new(Vec::new()));
+        let mut eng = SimEngine::new();
+        for i in 0..5 {
+            let o = Rc::clone(&order);
+            eng.schedule(1.0, move |_| o.borrow_mut().push(i));
+        }
+        eng.run();
+        assert_eq!(*order.borrow(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn chained_scheduling() {
+        // A 3-stage pipeline: each stage takes 2s.
+        let end_time = Rc::new(RefCell::new(0.0));
+        let mut eng = SimEngine::new();
+        let et = Rc::clone(&end_time);
+        eng.schedule(2.0, move |e| {
+            let et2 = Rc::clone(&et);
+            e.schedule(2.0, move |e| {
+                let et3 = Rc::clone(&et2);
+                e.schedule(2.0, move |e| {
+                    *et3.borrow_mut() = e.now();
+                });
+            });
+        });
+        eng.run();
+        assert!((*end_time.borrow() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn barrier_fires_at_last_arrival() {
+        let fired_at = Rc::new(RefCell::new(-1.0));
+        let mut eng = SimEngine::new();
+        let fa = Rc::clone(&fired_at);
+        let barrier = Barrier::new(3, move |e: &mut SimEngine| {
+            *fa.borrow_mut() = e.now();
+        });
+        for delay in [1.0, 5.0, 3.0] {
+            let b = Rc::clone(&barrier);
+            eng.schedule(delay, move |e| Barrier::arrive(&b, e));
+        }
+        eng.run();
+        assert!((*fired_at.borrow() - 5.0).abs() < 1e-9, "barrier at last arm");
+    }
+
+    #[test]
+    fn parallel_arms_overlap() {
+        // 4 parallel workers of 10s each => total 10s, not 40s.
+        let mut eng = SimEngine::new();
+        let done = Rc::new(RefCell::new(0));
+        for _ in 0..4 {
+            let d = Rc::clone(&done);
+            eng.schedule(10.0, move |_| *d.borrow_mut() += 1);
+        }
+        let end = eng.run();
+        assert_eq!(*done.borrow(), 4);
+        assert!((end - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,26 @@
+//! Network + time substrate.
+//!
+//! The paper's evaluation runs on a physical testbed (Fig. 4): two sets of
+//! {4 Raspberry Pis + 1 edge server} plus a remote cloud cluster, with
+//! measured RTTs (5.7 ms / 43.4 ms and 0.6 ms / 4.7 ms) and a ~7-8 Mbps
+//! uplink from the IoT LAN to the cloud. We replace the physical network
+//! with:
+//!
+//! * [`topology`] — a weighted graph of nodes and links with per-link RTT and
+//!   bandwidth, plus latency-routing (Dijkstra) for indirect pairs;
+//! * [`transfer`] — the transfer-time model `rtt + bytes / bottleneck_bw`
+//!   calibrated so that the paper's Fig. 6 numbers are reproduced;
+//! * [`clock`] — a `Clock` abstraction so that the same coordinator code runs
+//!   in real time (examples, loopback HTTP) or virtual time (benches);
+//! * [`engine`] — a discrete-event engine used by the workflow simulations
+//!   (Figs. 8/9) so a 96.7 s cloud-only pipeline simulates in microseconds.
+
+pub mod clock;
+pub mod engine;
+pub mod topology;
+pub mod transfer;
+
+pub use clock::{Clock, RealClock, VirtualClock};
+pub use engine::SimEngine;
+pub use topology::{LinkSpec, NodeId, Tier, Topology};
+pub use transfer::TransferModel;

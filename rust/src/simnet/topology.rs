@@ -1,0 +1,315 @@
+//! Network topology graph.
+//!
+//! Nodes are *resources* in the paper's sense (a faasd Raspberry Pi, an edge
+//! Kubernetes cluster, the cloud cluster). Links carry an RTT and a
+//! bandwidth. Indirect pairs are routed over the minimum-latency path and the
+//! path's bandwidth is the bottleneck link (standard fluid model).
+
+use std::collections::BinaryHeap;
+
+/// Index of a node within a [`Topology`].
+pub type NodeId = usize;
+
+/// The paper's three resource tiers (Table 3 / Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Tier {
+    Iot,
+    Edge,
+    Cloud,
+}
+
+impl Tier {
+    pub fn parse(s: &str) -> anyhow::Result<Tier> {
+        match s.to_ascii_lowercase().as_str() {
+            "iot" => Ok(Tier::Iot),
+            "edge" => Ok(Tier::Edge),
+            "cloud" => Ok(Tier::Cloud),
+            other => anyhow::bail!("unknown tier `{other}` (expected iot|edge|cloud)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Iot => "iot",
+            Tier::Edge => "edge",
+            Tier::Cloud => "cloud",
+        }
+    }
+}
+
+/// A network node.
+#[derive(Debug, Clone)]
+pub struct NetNode {
+    pub name: String,
+    pub tier: Tier,
+}
+
+/// A bidirectional link.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkSpec {
+    pub a: NodeId,
+    pub b: NodeId,
+    /// Round-trip time in seconds.
+    pub rtt: f64,
+    /// Bandwidth in bytes/second.
+    pub bw: f64,
+}
+
+/// A weighted network graph.
+#[derive(Debug, Clone, Default)]
+pub struct Topology {
+    nodes: Vec<NetNode>,
+    links: Vec<LinkSpec>,
+    /// adjacency[n] = (neighbor, link index)
+    adj: Vec<Vec<(NodeId, usize)>>,
+}
+
+/// A routed path between two nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Route {
+    /// Sum of one-way latencies (RTT/2 per hop) in seconds.
+    pub latency: f64,
+    /// Bottleneck bandwidth along the path, bytes/second.
+    pub bw: f64,
+    /// Node sequence including both endpoints.
+    pub hops: Vec<NodeId>,
+}
+
+impl Topology {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_node(&mut self, name: impl Into<String>, tier: Tier) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(NetNode { name: name.into(), tier });
+        self.adj.push(Vec::new());
+        id
+    }
+
+    pub fn add_link(&mut self, a: NodeId, b: NodeId, rtt: f64, bw: f64) {
+        assert!(a < self.nodes.len() && b < self.nodes.len(), "bad link endpoints");
+        assert!(rtt >= 0.0 && bw > 0.0, "bad link parameters");
+        let idx = self.links.len();
+        self.links.push(LinkSpec { a, b, rtt, bw });
+        self.adj[a].push((b, idx));
+        self.adj[b].push((a, idx));
+    }
+
+    pub fn node(&self, id: NodeId) -> &NetNode {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = (NodeId, &NetNode)> {
+        self.nodes.iter().enumerate()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<NodeId> {
+        self.nodes.iter().position(|n| n.name == name)
+    }
+
+    pub fn tier_nodes(&self, tier: Tier) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.tier == tier)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Minimum-latency route between two nodes (Dijkstra on one-way latency).
+    /// Returns `None` if disconnected. `from == to` yields a zero-latency,
+    /// infinite-bandwidth loopback route.
+    pub fn route(&self, from: NodeId, to: NodeId) -> Option<Route> {
+        if from == to {
+            return Some(Route { latency: 0.0, bw: f64::INFINITY, hops: vec![from] });
+        }
+        #[derive(PartialEq)]
+        struct Item(f64, NodeId);
+        impl Eq for Item {}
+        impl PartialOrd for Item {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for Item {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                // Min-heap on latency.
+                o.0.partial_cmp(&self.0).unwrap_or(std::cmp::Ordering::Equal)
+            }
+        }
+        let n = self.nodes.len();
+        let mut dist = vec![f64::INFINITY; n];
+        let mut prev: Vec<Option<(NodeId, usize)>> = vec![None; n];
+        let mut heap = BinaryHeap::new();
+        dist[from] = 0.0;
+        heap.push(Item(0.0, from));
+        while let Some(Item(d, u)) = heap.pop() {
+            if d > dist[u] {
+                continue;
+            }
+            if u == to {
+                break;
+            }
+            for &(v, li) in &self.adj[u] {
+                let nd = d + self.links[li].rtt / 2.0;
+                if nd < dist[v] {
+                    dist[v] = nd;
+                    prev[v] = Some((u, li));
+                    heap.push(Item(nd, v));
+                }
+            }
+        }
+        if dist[to].is_infinite() {
+            return None;
+        }
+        // Reconstruct and find bottleneck bandwidth.
+        let mut hops = vec![to];
+        let mut bw = f64::INFINITY;
+        let mut cur = to;
+        while let Some((p, li)) = prev[cur] {
+            bw = bw.min(self.links[li].bw);
+            hops.push(p);
+            cur = p;
+        }
+        hops.reverse();
+        Some(Route { latency: dist[to], bw, hops })
+    }
+
+    /// One-way latency between nodes in seconds (`INFINITY` if disconnected).
+    pub fn latency(&self, from: NodeId, to: NodeId) -> f64 {
+        self.route(from, to).map(|r| r.latency).unwrap_or(f64::INFINITY)
+    }
+
+    /// The node of `tier` with minimum latency from `from`.
+    pub fn closest(&self, from: NodeId, tier: Tier) -> Option<NodeId> {
+        self.tier_nodes(tier)
+            .into_iter()
+            .min_by(|&a, &b| {
+                self.latency(from, a)
+                    .partial_cmp(&self.latency(from, b))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+    }
+
+    /// The node of `tier` minimizing the *sum* of latencies from all `froms`
+    /// (used by `reduce: 1` fan-in placement).
+    pub fn closest_to_all(&self, froms: &[NodeId], tier: Tier) -> Option<NodeId> {
+        self.tier_nodes(tier).into_iter().min_by(|&a, &b| {
+            let sa: f64 = froms.iter().map(|&f| self.latency(f, a)).sum();
+            let sb: f64 = froms.iter().map(|&f| self.latency(f, b)).sum();
+            sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+}
+
+/// Megabits/second to bytes/second.
+pub fn mbps(v: f64) -> f64 {
+    v * 1e6 / 8.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line3() -> (Topology, NodeId, NodeId, NodeId) {
+        // iot --(1ms, 100MB/s)-- edge --(10ms, 10MB/s)-- cloud
+        let mut t = Topology::new();
+        let i = t.add_node("pi", Tier::Iot);
+        let e = t.add_node("edge", Tier::Edge);
+        let c = t.add_node("cloud", Tier::Cloud);
+        t.add_link(i, e, 0.001, 100e6);
+        t.add_link(e, c, 0.010, 10e6);
+        (t, i, e, c)
+    }
+
+    #[test]
+    fn direct_route() {
+        let (t, i, e, _) = line3();
+        let r = t.route(i, e).unwrap();
+        assert!((r.latency - 0.0005).abs() < 1e-12);
+        assert_eq!(r.bw, 100e6);
+        assert_eq!(r.hops, vec![i, e]);
+    }
+
+    #[test]
+    fn multi_hop_route_bottleneck() {
+        let (t, i, _, c) = line3();
+        let r = t.route(i, c).unwrap();
+        assert!((r.latency - 0.0055).abs() < 1e-12);
+        assert_eq!(r.bw, 10e6, "bottleneck is the WAN link");
+        assert_eq!(r.hops.len(), 3);
+    }
+
+    #[test]
+    fn loopback_route() {
+        let (t, i, _, _) = line3();
+        let r = t.route(i, i).unwrap();
+        assert_eq!(r.latency, 0.0);
+        assert!(r.bw.is_infinite());
+    }
+
+    #[test]
+    fn disconnected_is_none() {
+        let mut t = Topology::new();
+        let a = t.add_node("a", Tier::Iot);
+        let b = t.add_node("b", Tier::Cloud);
+        assert!(t.route(a, b).is_none());
+        assert!(t.latency(a, b).is_infinite());
+    }
+
+    #[test]
+    fn closest_picks_lower_latency() {
+        let mut t = Topology::new();
+        let i = t.add_node("pi", Tier::Iot);
+        let e1 = t.add_node("edge1", Tier::Edge);
+        let e2 = t.add_node("edge2", Tier::Edge);
+        t.add_link(i, e1, 0.0057, mbps(100.0));
+        t.add_link(i, e2, 0.050, mbps(100.0));
+        assert_eq!(t.closest(i, Tier::Edge), Some(e1));
+    }
+
+    #[test]
+    fn closest_to_all_minimizes_sum() {
+        let mut t = Topology::new();
+        let a = t.add_node("a", Tier::Iot);
+        let b = t.add_node("b", Tier::Iot);
+        let c1 = t.add_node("c1", Tier::Cloud);
+        let c2 = t.add_node("c2", Tier::Cloud);
+        t.add_link(a, c1, 0.010, mbps(10.0));
+        t.add_link(b, c1, 0.010, mbps(10.0));
+        t.add_link(a, c2, 0.001, mbps(10.0));
+        t.add_link(b, c2, 0.100, mbps(10.0));
+        // c1: 5ms+5ms = 10ms; c2: 0.5ms+50ms = 50.5ms → pick c1.
+        assert_eq!(t.closest_to_all(&[a, b], Tier::Cloud), Some(c1));
+    }
+
+    #[test]
+    fn dijkstra_prefers_low_latency_path() {
+        let mut t = Topology::new();
+        let a = t.add_node("a", Tier::Iot);
+        let m = t.add_node("m", Tier::Edge);
+        let b = t.add_node("b", Tier::Cloud);
+        t.add_link(a, b, 0.100, mbps(1000.0)); // direct but slow
+        t.add_link(a, m, 0.010, mbps(10.0));
+        t.add_link(m, b, 0.010, mbps(10.0));
+        let r = t.route(a, b).unwrap();
+        assert_eq!(r.hops, vec![a, m, b], "two fast hops beat one slow hop");
+        assert_eq!(r.bw, mbps(10.0));
+    }
+
+    #[test]
+    fn tier_parse() {
+        assert_eq!(Tier::parse("IoT").unwrap(), Tier::Iot);
+        assert_eq!(Tier::parse("edge").unwrap(), Tier::Edge);
+        assert!(Tier::parse("fog").is_err());
+    }
+}

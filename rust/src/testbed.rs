@@ -1,0 +1,111 @@
+//! The paper's Fig. 4 testbed, in-process.
+//!
+//! Two sets of {4 Raspberry Pis + 1 edge server} plus a 10-node GPU cloud
+//! cluster, with the measured RTTs (5.7 / 43.4 ms for set 1, 0.6 / 4.7 ms
+//! for set 2) and calibrated bandwidths. Every resource runs the full
+//! substrate stack — FaaS backend, object store, metrics — behind a
+//! [`LocalHandle`], registered with the coordinator exactly as a remote
+//! gateway would be. Used by the examples, the benches and the integration
+//! tests.
+
+use std::sync::Arc;
+
+use crate::backup::DurableKv;
+use crate::cluster::faas::{Executor, FaasBackend, NativeExecutor};
+use crate::cluster::spec::ResourceSpec;
+use crate::coordinator::handle::{LocalHandle, ResourceHandle};
+use crate::coordinator::resource::{EdgeFaaS, ResourceId};
+use crate::objstore::ObjectStore;
+use crate::simnet::topology::mbps;
+use crate::simnet::{Clock, Tier, Topology};
+
+/// A running paper testbed.
+pub struct TestBed {
+    pub faas: Arc<EdgeFaaS>,
+    /// Shared executor: register handler images here.
+    pub executor: Arc<NativeExecutor>,
+    /// The 8 Raspberry Pis (set 1 = indices 0..4, set 2 = 4..8).
+    pub iot: Vec<ResourceId>,
+    /// The two edge clusters.
+    pub edges: Vec<ResourceId>,
+    /// The cloud cluster.
+    pub cloud: ResourceId,
+}
+
+impl TestBed {
+    /// Every resource id, IoT first, then edges, then cloud.
+    pub fn all_resources(&self) -> Vec<ResourceId> {
+        let mut v = self.iot.clone();
+        v.extend(&self.edges);
+        v.push(self.cloud);
+        v
+    }
+}
+
+/// Build the Fig. 4 topology graph alone.
+pub fn paper_topology() -> (Topology, Vec<usize>, Vec<usize>, usize) {
+    let mut topo = Topology::new();
+    let mut pi_nodes = Vec::new();
+    for set in 0..2 {
+        for i in 0..4 {
+            pi_nodes.push(topo.add_node(format!("pi-{set}-{i}"), Tier::Iot));
+        }
+    }
+    let e0 = topo.add_node("edge-0", Tier::Edge);
+    let e1 = topo.add_node("edge-1", Tier::Edge);
+    let cl = topo.add_node("cloud", Tier::Cloud);
+    for i in 0..4 {
+        // LAN bandwidth calibrated from Fig. 6: 92 MB to the edge in 8.5 s.
+        topo.add_link(pi_nodes[i], e0, 0.0057, mbps(86.6));
+        topo.add_link(pi_nodes[4 + i], e1, 0.0006, mbps(86.6));
+    }
+    // Uplink bandwidth calibrated so the paper's Fig. 6/8 anchors hold
+    // (92 MB to the cloud in ~95 s).
+    topo.add_link(e0, cl, 0.0434, mbps(7.765));
+    topo.add_link(e1, cl, 0.0047, mbps(7.765));
+    (topo, pi_nodes, vec![e0, e1], cl)
+}
+
+/// Build the full in-process testbed against a clock.
+pub fn paper_testbed(clock: Arc<dyn Clock>) -> TestBed {
+    let (topo, pi_nodes, edge_nodes, cloud_node) = paper_topology();
+    let executor = Arc::new(NativeExecutor::new());
+    let faas = EdgeFaaS::with_parts(topo, DurableKv::ephemeral(), Arc::clone(&clock));
+
+    let mk_handle = |spec: &ResourceSpec| -> Arc<dyn ResourceHandle> {
+        let backend = Arc::new(FaasBackend::new(
+            spec.clone(),
+            Arc::clone(&executor) as Arc<dyn Executor>,
+            Arc::clone(&clock),
+        ));
+        let store = Arc::new(ObjectStore::new(
+            spec.storage * spec.nodes as u64,
+            &spec.minio_access_key,
+            &spec.minio_secret_key,
+        ));
+        Arc::new(LocalHandle::new(backend, store))
+    };
+
+    let mut iot = Vec::new();
+    for (i, &node) in pi_nodes.iter().enumerate() {
+        let spec = ResourceSpec::paper_iot(&format!("pi{i}:8080"));
+        let h = mk_handle(&spec);
+        iot.push(faas.register(spec, h, node).unwrap());
+    }
+    let mut edges = Vec::new();
+    for (i, node) in edge_nodes.into_iter().enumerate() {
+        let spec = ResourceSpec::paper_edge(&format!("edge{i}:8080"));
+        let h = mk_handle(&spec);
+        edges.push(faas.register(spec, h, node).unwrap());
+    }
+    let spec = ResourceSpec::paper_cloud("cloud:8080");
+    let h = mk_handle(&spec);
+    let cloud = faas.register(spec, h, cloud_node).unwrap();
+
+    TestBed { faas: Arc::new(faas), executor, iot, edges, cloud }
+}
+
+/// Locate the AOT artifact directory (`artifacts/` at the crate root).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

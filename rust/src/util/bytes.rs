@@ -1,0 +1,89 @@
+//! Byte-size parsing and formatting.
+//!
+//! The paper's registration YAML expresses capacities as `64GB`, `1024MB`,
+//! `512GB` (Tables 1-3); the data-size figures report MB. This module is the
+//! single place those units are interpreted.
+
+/// Parse a human size string (`64GB`, `1024MB`, `4 KB`, `92mb`, `1024`) into
+/// bytes. Decimal (SI, 1000-based) vs binary is a perennial ambiguity; the
+/// paper mixes them loosely, so we follow common systems convention and use
+/// 1024-based units, accepting `K/M/G/T` with optional `B`/`iB` suffixes.
+pub fn parse_size(s: &str) -> anyhow::Result<u64> {
+    let t = s.trim();
+    let split = t
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(t.len());
+    let (num, unit) = t.split_at(split);
+    let num: f64 = num
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad size number in `{s}`"))?;
+    let unit = unit.trim().trim_end_matches('B').trim_end_matches('b');
+    let unit = unit.trim_end_matches('i').trim_end_matches('I');
+    let mult: u64 = match unit.to_ascii_uppercase().as_str() {
+        "" => 1,
+        "K" => 1 << 10,
+        "M" => 1 << 20,
+        "G" => 1 << 30,
+        "T" => 1 << 40,
+        other => anyhow::bail!("unknown size unit `{other}` in `{s}`"),
+    };
+    Ok((num * mult as f64).round() as u64)
+}
+
+/// Format bytes with a binary unit, e.g. `92.0 MB`.
+pub fn fmt_size(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_paper_units() {
+        assert_eq!(parse_size("64GB").unwrap(), 64 << 30);
+        assert_eq!(parse_size("1024MB").unwrap(), 1 << 30);
+        assert_eq!(parse_size("512GB").unwrap(), 512 << 30);
+        assert_eq!(parse_size("4 KB").unwrap(), 4096);
+        assert_eq!(parse_size("100").unwrap(), 100);
+        assert_eq!(parse_size("1.5GiB").unwrap(), 3 << 29);
+    }
+
+    #[test]
+    fn rejects_junk() {
+        assert!(parse_size("abc").is_err());
+        assert!(parse_size("12XB").is_err());
+        assert!(parse_size("").is_err());
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_size(100), "100 B");
+        assert_eq!(fmt_size(92 << 20), "92.0 MB");
+        assert_eq!(fmt_size(4 << 30), "4.0 GB");
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        let mut rng = crate::util::rng::Pcg32::seeded(5);
+        for _ in 0..200 {
+            let n = (rng.next_u64() % (1 << 40)) & !0x3ff;
+            let s = fmt_size(n);
+            let back = parse_size(&s).unwrap();
+            // fmt rounds to 1 decimal; allow 5% slack.
+            let err = (back as f64 - n as f64).abs() / (n.max(1) as f64);
+            assert!(err < 0.05, "{n} -> {s} -> {back}");
+        }
+    }
+}

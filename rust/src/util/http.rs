@@ -1,0 +1,482 @@
+//! HTTP/1.1 server and client over `std::net::TcpStream`.
+//!
+//! The paper's whole control plane is RESTful: the unified EdgeFaaS gateway,
+//! the per-resource OpenFaaS/faasd gateways, the MinIO endpoints, and the
+//! Prometheus scrape endpoints all speak HTTP. The offline build has no
+//! hyper/tokio, so this module implements the needed subset: request/response
+//! framing with `Content-Length` bodies, a threadpool-backed listener, and a
+//! blocking client. Chunked transfer, TLS and keep-alive pipelining are out
+//! of scope (every exchange is one request/response on a fresh connection,
+//! which matches how OpenFaaS CLI-style clients behave).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::threadpool::ThreadPool;
+
+/// Maximum accepted body size (128 MiB — a 92 MB paper video fits).
+pub const MAX_BODY: usize = 128 << 20;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without query string.
+    pub path: String,
+    /// Decoded query parameters.
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn body_str(&self) -> anyhow::Result<&str> {
+        Ok(std::str::from_utf8(&self.body)?)
+    }
+
+    pub fn json(&self) -> anyhow::Result<super::json::Json> {
+        super::json::parse(self.body_str()?)
+    }
+
+    /// Path segments (split on '/', empty segments removed).
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Response {
+        Response { status, headers: BTreeMap::new(), body: Vec::new() }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        let mut r = Response::new(status);
+        r.headers.insert("Content-Type".into(), "text/plain".into());
+        r.body = body.into().into_bytes();
+        r
+    }
+
+    pub fn json(status: u16, v: &super::json::Json) -> Response {
+        let mut r = Response::new(status);
+        r.headers.insert("Content-Type".into(), "application/json".into());
+        r.body = v.to_string().into_bytes();
+        r
+    }
+
+    pub fn bytes(status: u16, body: Vec<u8>) -> Response {
+        let mut r = Response::new(status);
+        r.headers.insert("Content-Type".into(), "application/octet-stream".into());
+        r.body = body;
+        r
+    }
+
+    pub fn not_found() -> Response {
+        Response::text(404, "not found")
+    }
+
+    pub fn bad_request(msg: impl Into<String>) -> Response {
+        Response::text(400, msg)
+    }
+
+    pub fn error(msg: impl Into<String>) -> Response {
+        Response::text(500, msg)
+    }
+
+    pub fn ok(&self) -> bool {
+        (200..300).contains(&self.status)
+    }
+
+    pub fn body_str(&self) -> anyhow::Result<&str> {
+        Ok(std::str::from_utf8(&self.body)?)
+    }
+
+    pub fn json_body(&self) -> anyhow::Result<super::json::Json> {
+        super::json::parse(self.body_str()?)
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            202 => "Accepted",
+            204 => "No Content",
+            400 => "Bad Request",
+            401 => "Unauthorized",
+            403 => "Forbidden",
+            404 => "Not Found",
+            409 => "Conflict",
+            500 => "Internal Server Error",
+            502 => "Bad Gateway",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+}
+
+/// Request handler trait (object-safe so gateways can be trait objects).
+pub trait Handler: Send + Sync + 'static {
+    fn handle(&self, req: Request) -> Response;
+}
+
+impl<F> Handler for F
+where
+    F: Fn(Request) -> Response + Send + Sync + 'static,
+{
+    fn handle(&self, req: Request) -> Response {
+        self(req)
+    }
+}
+
+/// A running HTTP server; dropping it stops the accept loop.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind to `127.0.0.1:port` (0 = ephemeral) and serve `handler` on a
+    /// pool of `workers` threads.
+    pub fn bind(port: u16, workers: usize, handler: Arc<dyn Handler>) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("http-{}", addr.port()))
+            .spawn(move || {
+                let pool = ThreadPool::new(workers);
+                loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let h = Arc::clone(&handler);
+                            pool.execute(move || serve_conn(stream, h));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address, e.g. `127.0.0.1:43211`.
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    pub fn port(&self) -> u16 {
+        self.addr.port()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_conn(stream: TcpStream, handler: Arc<dyn Handler>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let peer = stream.peer_addr().ok();
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let resp = match read_request(&mut reader) {
+        Ok(req) => {
+            log::debug!("{} {} from {:?}", req.method, req.path, peer);
+            handler.handle(req)
+        }
+        Err(e) => Response::bad_request(format!("malformed request: {e}")),
+    };
+    let mut stream = stream;
+    let _ = write_response(&mut stream, &resp);
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Request> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow::anyhow!("empty request line"))?.to_string();
+    let target = parts.next().ok_or_else(|| anyhow::anyhow!("missing path"))?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    if !version.starts_with("HTTP/1") {
+        anyhow::bail!("unsupported version {version}");
+    }
+    let headers = read_headers(reader)?;
+    let body = read_body(reader, &headers)?;
+    let (path, query) = split_target(&target);
+    Ok(Request { method, path, query, headers, body })
+}
+
+fn read_headers(reader: &mut impl BufRead) -> anyhow::Result<BTreeMap<String, String>> {
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+}
+
+fn read_body(
+    reader: &mut impl BufRead,
+    headers: &BTreeMap<String, String>,
+) -> anyhow::Result<Vec<u8>> {
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse())
+        .transpose()
+        .map_err(|_| anyhow::anyhow!("bad content-length"))?
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        anyhow::bail!("body too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(body)
+}
+
+fn split_target(target: &str) -> (String, BTreeMap<String, String>) {
+    match target.split_once('?') {
+        Some((path, qs)) => {
+            let query = qs
+                .split('&')
+                .filter(|s| !s.is_empty())
+                .map(|kv| match kv.split_once('=') {
+                    Some((k, v)) => (url_decode(k), url_decode(v)),
+                    None => (url_decode(kv), String::new()),
+                })
+                .collect();
+            (path.to_string(), query)
+        }
+        None => (target.to_string(), BTreeMap::new()),
+    }
+}
+
+/// Percent-decode a URL component.
+pub fn url_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() + 1 && i + 2 <= bytes.len() - 1 + 1 => {
+                let hex = &s[i + 1..(i + 3).min(s.len())];
+                if hex.len() == 2 {
+                    if let Ok(b) = u8::from_str_radix(hex, 16) {
+                        out.push(b);
+                        i += 3;
+                        continue;
+                    }
+                }
+                out.push(b'%');
+                i += 1;
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Percent-encode a URL component.
+pub fn url_encode(s: &str) -> String {
+    let mut out = String::new();
+    for &b in s.as_bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' | b'/' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response) -> anyhow::Result<()> {
+    let mut head = format!("HTTP/1.1 {} {}\r\n", resp.status, resp.reason());
+    for (k, v) in &resp.headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("Content-Length: {}\r\nConnection: close\r\n\r\n", resp.body.len()));
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------- client --
+
+/// Issue a blocking HTTP request to `addr` (`host:port`).
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> anyhow::Result<Response> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(60)))?;
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\n");
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("Content-Length: {}\r\nConnection: close\r\n\r\n", body.len()));
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad status line {status_line:?}"))?;
+    let headers = read_headers(&mut reader)?;
+    let body = read_body(&mut reader, &headers)?;
+    Ok(Response { status, headers, body })
+}
+
+/// GET shorthand.
+pub fn get(addr: &str, path: &str) -> anyhow::Result<Response> {
+    request(addr, "GET", path, &[], &[])
+}
+
+/// POST shorthand with a JSON body.
+pub fn post_json(addr: &str, path: &str, v: &super::json::Json) -> anyhow::Result<Response> {
+    request(addr, "POST", path, &[("Content-Type", "application/json")], v.to_string().as_bytes())
+}
+
+/// POST shorthand with raw bytes.
+pub fn post_bytes(addr: &str, path: &str, body: &[u8]) -> anyhow::Result<Response> {
+    request(addr, "POST", path, &[("Content-Type", "application/octet-stream")], body)
+}
+
+/// DELETE shorthand.
+pub fn delete(addr: &str, path: &str) -> anyhow::Result<Response> {
+    request(addr, "DELETE", path, &[], &[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn echo_server() -> Server {
+        Server::bind(
+            0,
+            4,
+            Arc::new(|req: Request| {
+                let mut o = Json::obj();
+                o.set("method", req.method.as_str().into())
+                    .set("path", req.path.as_str().into())
+                    .set("len", req.body.len().into());
+                if let Some(q) = req.query.get("q") {
+                    o.set("q", q.as_str().into());
+                }
+                Response::json(200, &o)
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn get_roundtrip() {
+        let server = echo_server();
+        let resp = get(&server.addr(), "/hello/world?q=a+b%21").unwrap();
+        assert_eq!(resp.status, 200);
+        let v = resp.json_body().unwrap();
+        assert_eq!(v.req_str("method").unwrap(), "GET");
+        assert_eq!(v.req_str("path").unwrap(), "/hello/world");
+        assert_eq!(v.req_str("q").unwrap(), "a b!");
+    }
+
+    #[test]
+    fn post_body_roundtrip() {
+        let server = echo_server();
+        let body = vec![7u8; 100_000];
+        let resp = post_bytes(&server.addr(), "/upload", &body).unwrap();
+        assert_eq!(resp.json_body().unwrap().get("len").unwrap().as_u64(), Some(100_000));
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let server = echo_server();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let resp = get(&addr, &format!("/r/{i}")).unwrap();
+                    assert_eq!(resp.status, 200);
+                    assert_eq!(
+                        resp.json_body().unwrap().req_str("path").unwrap(),
+                        format!("/r/{i}")
+                    );
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn not_found_and_errors() {
+        let server = Server::bind(0, 2, Arc::new(|_req: Request| Response::not_found())).unwrap();
+        let resp = get(&server.addr(), "/whatever").unwrap();
+        assert_eq!(resp.status, 404);
+        assert!(!resp.ok());
+    }
+
+    #[test]
+    fn url_codec_roundtrip() {
+        for s in ["plain", "a b c", "x%y&z=1", "ünïcode/path", "100%"] {
+            assert_eq!(url_decode(&url_encode(s)), s, "roundtrip {s}");
+        }
+    }
+
+    #[test]
+    fn server_stops_on_drop() {
+        let server = echo_server();
+        let addr = server.addr();
+        drop(server);
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(TcpStream::connect(&addr).is_err() || get(&addr, "/").is_err());
+    }
+}

@@ -1,0 +1,518 @@
+//! Minimal JSON: a value type, a recursive-descent parser, and a serializer.
+//!
+//! Used for the durable mapping backup (the paper backs its mappings up in
+//! S3/DynamoDB as objects), REST request/response bodies on the gateways,
+//! and the artifact manifest emitted by `python/compile/aot.py`.
+//!
+//! Supports the full JSON grammar (RFC 8259) with the usual rust-side
+//! simplifications: numbers are `f64`, object keys keep insertion order.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Objects keep a sorted key map (deterministic serialization)
+/// plus an insertion-order side list is unnecessary for our use cases.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    /// Insert into an object; panics if `self` is not an object.
+    pub fn set(&mut self, key: &str, val: Json) -> &mut Self {
+        match self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), val);
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|f| {
+            if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
+                Some(f as u64)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Fetch a required string field, with a path-aware error.
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing or non-string field `{key}`"))
+    }
+
+    /// Fetch a required numeric field.
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing or non-numeric field `{key}`"))
+    }
+
+    /// Serialize to a compact string.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string())
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+impl From<f64> for Json {
+    fn from(n: f64) -> Json {
+        Json::Num(n)
+    }
+}
+impl From<u64> for Json {
+    fn from(n: u64) -> Json {
+        Json::Num(n as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(n: usize) -> Json {
+        Json::Num(n as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(v: Vec<T>) -> Json {
+        Json::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a JSON document. Returns an error with byte offset on malformed input.
+pub fn parse(input: &str) -> anyhow::Result<Json> {
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        anyhow::bail!("trailing characters at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+        if self.bump() == Some(b) {
+            Ok(())
+        } else {
+            anyhow::bail!("expected `{}` at byte {}", b as char, self.pos.saturating_sub(1))
+        }
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => anyhow::bail!("unexpected `{}` at byte {}", c as char, self.pos),
+            None => anyhow::bail!("unexpected end of input"),
+        }
+    }
+
+    fn lit(&mut self, word: &str, val: Json) -> anyhow::Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(val)
+        } else {
+            anyhow::bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let n: f64 = text.parse().map_err(|_| anyhow::anyhow!("bad number `{text}`"))?;
+        Ok(Json::Num(n))
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                Some(b'"') => return Ok(s),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => s.push('"'),
+                    Some(b'\\') => s.push('\\'),
+                    Some(b'/') => s.push('/'),
+                    Some(b'n') => s.push('\n'),
+                    Some(b't') => s.push('\t'),
+                    Some(b'r') => s.push('\r'),
+                    Some(b'b') => s.push('\u{8}'),
+                    Some(b'f') => s.push('\u{c}'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        // Surrogate pair handling.
+                        if (0xd800..0xdc00).contains(&cp) {
+                            self.expect(b'\\')?;
+                            self.expect(b'u')?;
+                            let lo = self.hex4()?;
+                            let c = 0x10000 + ((cp - 0xd800) << 10) + (lo - 0xdc00);
+                            s.push(char::from_u32(c).ok_or_else(|| {
+                                anyhow::anyhow!("bad surrogate pair at byte {}", self.pos)
+                            })?);
+                        } else {
+                            s.push(char::from_u32(cp).ok_or_else(|| {
+                                anyhow::anyhow!("bad \\u escape at byte {}", self.pos)
+                            })?);
+                        }
+                    }
+                    _ => anyhow::bail!("bad escape at byte {}", self.pos),
+                },
+                Some(c) if c < 0x80 => s.push(c as char),
+                Some(c) => {
+                    // Multi-byte UTF-8: find the sequence length and re-decode.
+                    let len = utf8_len(c);
+                    let start = self.pos - 1;
+                    self.pos = start + len;
+                    let chunk = self
+                        .bytes
+                        .get(start..self.pos)
+                        .ok_or_else(|| anyhow::anyhow!("truncated UTF-8 at byte {start}"))?;
+                    s.push_str(std::str::from_utf8(chunk)?);
+                }
+                None => anyhow::bail!("unterminated string"),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> anyhow::Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+            v = v * 16
+                + (c as char)
+                    .to_digit(16)
+                    .ok_or_else(|| anyhow::anyhow!("bad hex digit at byte {}", self.pos))?;
+        }
+        Ok(v)
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(items)),
+                _ => anyhow::bail!("expected `,` or `]` at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(map)),
+                _ => anyhow::bail!("expected `,` or `}}` at byte {}", self.pos),
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    if first >= 0xf0 {
+        4
+    } else if first >= 0xe0 {
+        3
+    } else {
+        2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn nested_structure() {
+        let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[2].get("b").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        let s = "line1\nline2\t\"quoted\" \\ slash \u{1f600} ünïcødé";
+        let v = Json::Str(s.to_string());
+        let text = v.to_string();
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn unicode_escape_parses() {
+        assert_eq!(parse(r#""A😀""#).unwrap(), Json::Str("A😀".into()));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in ["{", "[1,", "\"unterminated", "{\"a\" 1}", "tru", "01x", "[1] trailing"] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn integer_serialization_is_exact() {
+        assert_eq!(Json::Num(7.0).to_string(), "7");
+        assert_eq!(Json::Num(7.5).to_string(), "7.5");
+    }
+
+    #[test]
+    fn builder_accessors() {
+        let mut o = Json::obj();
+        o.set("name", "cloud".into()).set("nodes", 10u64.into()).set("up", true.into());
+        assert_eq!(o.req_str("name").unwrap(), "cloud");
+        assert_eq!(o.get("nodes").unwrap().as_u64(), Some(10));
+        assert_eq!(o.get("up").unwrap().as_bool(), Some(true));
+        assert!(o.req_str("missing").is_err());
+    }
+
+    /// Property: random JSON trees round-trip through serialize -> parse.
+    #[test]
+    fn prop_roundtrip_random_trees() {
+        fn gen(rng: &mut Pcg32, depth: usize) -> Json {
+            match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.next_bool(0.5)),
+                2 => Json::Num((rng.next_u32() as f64 / 64.0).floor() / 16.0),
+                3 => {
+                    let n = rng.next_below(8) as usize;
+                    Json::Str((0..n).map(|_| (b'a' + rng.next_below(26) as u8) as char).collect())
+                }
+                4 => {
+                    let n = rng.next_below(4) as usize;
+                    Json::Arr((0..n).map(|_| gen(rng, depth - 1)).collect())
+                }
+                _ => {
+                    let n = rng.next_below(4) as usize;
+                    let mut m = BTreeMap::new();
+                    for i in 0..n {
+                        m.insert(format!("k{i}"), gen(rng, depth - 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let mut rng = Pcg32::seeded(2024);
+        for _ in 0..200 {
+            let v = gen(&mut rng, 4);
+            let text = v.to_string();
+            let back = parse(&text).unwrap_or_else(|e| panic!("parse {text}: {e}"));
+            assert_eq!(back, v, "roundtrip of {text}");
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Minimal logger for the `log` facade.
+//!
+//! Level is selected by `EDGEFAAS_LOG` (error|warn|info|debug|trace),
+//! defaulting to `info`. Output goes to stderr with a monotonic timestamp so
+//! interleaved coordinator / gateway / sandbox logs are orderable.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct Logger {
+    start: Instant,
+    level: log::LevelFilter,
+}
+
+impl log::Log for Logger {
+    fn enabled(&self, meta: &log::Metadata) -> bool {
+        meta.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed();
+        eprintln!(
+            "[{:>9.3}s {:5} {}] {}",
+            t.as_secs_f64(),
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<Logger> = OnceLock::new();
+
+/// Install the global logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("EDGEFAAS_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| Logger { start: Instant::now(), level });
+    // set_logger fails if called twice; that's fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

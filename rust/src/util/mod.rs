@@ -1,0 +1,13 @@
+//! Foundation substrates built in-repo (the build environment is offline, so
+//! no serde/tokio/hyper): a YAML-subset parser for the paper's configuration
+//! files, a JSON value type for persistence and REST bodies, an HTTP/1.1
+//! server and client over `std::net`, a fixed threadpool, a PCG32 RNG, and a
+//! tiny logger for the `log` facade.
+
+pub mod yaml;
+pub mod json;
+pub mod http;
+pub mod threadpool;
+pub mod rng;
+pub mod logging;
+pub mod bytes;

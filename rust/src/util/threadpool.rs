@@ -1,0 +1,150 @@
+//! Fixed-size worker pool over `std::thread` + channels.
+//!
+//! Backs the HTTP gateways (one pool per listener) and the cluster
+//! substrate's sandbox executors. No tokio in the offline build — the
+//! coordinator's request path is thread-per-pool-slot, which for the scale
+//! of the paper's testbed (tens of concurrent invocations) is ample.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing queued jobs.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    sender: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (must be > 0).
+    pub fn new(size: usize) -> ThreadPool {
+        assert!(size > 0, "ThreadPool::new(0)");
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { workers, sender: Some(sender) }
+    }
+
+    /// Queue a job. Panics if the pool has been shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Close the channel, then join every worker.
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f` over `items` with up to `width` scoped threads, collecting results
+/// in input order. Used by fan-out paths (multi-resource deploys, FedAvg
+/// rounds) where the item count is small and bounded.
+pub fn scoped_map<T, R, F>(items: Vec<T>, width: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    assert!(width > 0);
+    let n = items.len();
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Mutex<std::vec::IntoIter<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
+    let results_mx = Mutex::new(&mut results);
+    thread::scope(|s| {
+        for _ in 0..width.min(n.max(1)) {
+            s.spawn(|| loop {
+                let next = { work.lock().unwrap().next() };
+                match next {
+                    Some((i, item)) => {
+                        let r = f(item);
+                        results_mx.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("worker finished")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn jobs_run_concurrently() {
+        let pool = ThreadPool::new(4);
+        let start = std::time::Instant::now();
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                thread::sleep(Duration::from_millis(50));
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+        // 4 × 50ms jobs on 4 workers should take ~50ms, not 200ms.
+        assert!(start.elapsed() < Duration::from_millis(180));
+    }
+
+    #[test]
+    fn scoped_map_preserves_order() {
+        let out = scoped_map((0..32).collect::<Vec<_>>(), 8, |x| x * x);
+        assert_eq!(out, (0..32).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_empty() {
+        let out: Vec<i32> = scoped_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+}

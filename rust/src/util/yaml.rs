@@ -1,0 +1,494 @@
+//! YAML-subset parser for EdgeFaaS configuration files.
+//!
+//! The paper drives everything through YAML: resource registration (Table 1)
+//! and application/DAG configuration (Table 2, source code 1 & 2). This
+//! module implements the block-style subset those files use:
+//!
+//! * block mappings (`key: value`, nesting by indentation)
+//! * block sequences (`- item`, including `- key: value` compact map entries)
+//! * plain / single-quoted / double-quoted scalars
+//! * `#` comments and blank lines
+//! * typed scalar views (string, i64, f64, bool) resolved on access, YAML
+//!   1.2-core style (`true/false`, integers, floats; everything else is a
+//!   string)
+//!
+//! Flow style (`{a: 1}` / `[1, 2]`), anchors, tags and multi-document streams
+//! are intentionally out of scope — the paper's configs never use them.
+
+use std::collections::BTreeMap;
+
+/// A parsed YAML node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Yaml {
+    /// Scalar, kept as raw text; typed views resolve on access.
+    Scalar(String),
+    /// Block sequence.
+    Seq(Vec<Yaml>),
+    /// Block mapping (insertion order preserved).
+    Map(Vec<(String, Yaml)>),
+    /// Empty value (key with nothing after the colon and no indented block).
+    Null,
+}
+
+impl Yaml {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Yaml::Scalar(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_str()?.parse().ok()
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        self.as_str()?.parse().ok()
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self.as_str()? {
+            "true" | "True" | "TRUE" => Some(true),
+            "false" | "False" | "FALSE" => Some(false),
+            _ => None,
+        }
+    }
+
+    pub fn as_seq(&self) -> Option<&[Yaml]> {
+        match self {
+            Yaml::Seq(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&[(String, Yaml)]> {
+        match self {
+            Yaml::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Look up a key in a mapping.
+    pub fn get(&self, key: &str) -> Option<&Yaml> {
+        match self {
+            Yaml::Map(m) => m.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Required string field with a descriptive error.
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .and_then(Yaml::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing or non-scalar field `{key}`"))
+    }
+
+    /// Required integer field.
+    pub fn req_i64(&self, key: &str) -> anyhow::Result<i64> {
+        self.get(key)
+            .and_then(Yaml::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("missing or non-integer field `{key}`"))
+    }
+
+    /// Map to `BTreeMap<String, String>` of scalar entries (for flat configs).
+    pub fn scalar_map(&self) -> BTreeMap<String, String> {
+        match self {
+            Yaml::Map(m) => m
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect(),
+            _ => BTreeMap::new(),
+        }
+    }
+}
+
+/// One significant (non-blank, non-comment) line.
+#[derive(Debug)]
+struct Line<'a> {
+    indent: usize,
+    /// Content with indentation stripped.
+    text: &'a str,
+    /// 1-based line number for errors.
+    no: usize,
+}
+
+/// Parse a YAML document into a [`Yaml`] tree.
+pub fn parse(input: &str) -> anyhow::Result<Yaml> {
+    let lines: Vec<Line> = input
+        .lines()
+        .enumerate()
+        .filter_map(|(i, raw)| {
+            let trimmed_end = strip_comment(raw);
+            let text = trimmed_end.trim_start();
+            if text.is_empty() {
+                return None;
+            }
+            let indent = trimmed_end.len() - text.len();
+            Some(Line { indent, text: text.trim_end(), no: i + 1 })
+        })
+        .collect();
+    if lines.is_empty() {
+        return Ok(Yaml::Null);
+    }
+    let mut pos = 0;
+    let root = parse_block(&lines, &mut pos, lines[0].indent)?;
+    if pos != lines.len() {
+        anyhow::bail!("unexpected content at line {}", lines[pos].no);
+    }
+    Ok(root)
+}
+
+/// Strip a trailing `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b'#' if !in_single && !in_double => {
+                // A comment must be at line start or preceded by whitespace.
+                if i == 0 || bytes[i - 1] == b' ' || bytes[i - 1] == b'\t' {
+                    return &line[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> anyhow::Result<Yaml> {
+    let first = &lines[*pos];
+    if first.text.starts_with("- ") || first.text == "-" {
+        parse_seq(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_seq(lines: &[Line], pos: &mut usize, indent: usize) -> anyhow::Result<Yaml> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            anyhow::bail!("bad indentation at line {}", line.no);
+        }
+        if !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let rest = line.text[1..].trim_start();
+        if rest.is_empty() {
+            // `-` alone: nested block on following lines.
+            *pos += 1;
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent)?);
+            } else {
+                items.push(Yaml::Null);
+            }
+        } else if let Some((key, val)) = split_key(rest) {
+            // Compact map entry: `- name: x` with possible continuation keys
+            // indented to the position after `- `.
+            let entry_indent = line.indent + (line.text.len() - rest.len());
+            let mut map = Vec::new();
+            *pos += 1;
+            let first_val = finish_value(val, lines, pos, entry_indent)?;
+            map.push((key, first_val));
+            while *pos < lines.len()
+                && lines[*pos].indent == entry_indent
+                && !lines[*pos].text.starts_with("- ")
+                && lines[*pos].text != "-"
+            {
+                let l = &lines[*pos];
+                let (k, v) = split_key(l.text)
+                    .ok_or_else(|| anyhow::anyhow!("expected `key:` at line {}", l.no))?;
+                *pos += 1;
+                let val = finish_value(v, lines, pos, entry_indent)?;
+                map.push((k, val));
+            }
+            items.push(Yaml::Map(map));
+        } else {
+            // Plain scalar item.
+            items.push(Yaml::Scalar(unquote(rest)));
+            *pos += 1;
+        }
+    }
+    Ok(Yaml::Seq(items))
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize) -> anyhow::Result<Yaml> {
+    let mut map: Vec<(String, Yaml)> = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            anyhow::bail!("bad indentation at line {}", line.no);
+        }
+        if line.text.starts_with("- ") || line.text == "-" {
+            break;
+        }
+        let (key, val) = split_key(line.text)
+            .ok_or_else(|| anyhow::anyhow!("expected `key: value` at line {}", line.no))?;
+        if map.iter().any(|(k, _)| *k == key) {
+            anyhow::bail!("duplicate key `{key}` at line {}", line.no);
+        }
+        *pos += 1;
+        let value = finish_value(val, lines, pos, indent)?;
+        map.push((key, value));
+    }
+    Ok(Yaml::Map(map))
+}
+
+/// After consuming a `key:` line, produce its value: an inline scalar, or a
+/// nested block (map/sequence) on the following more-indented lines. A
+/// sequence nested under a key may also sit at the *same* indent as the key
+/// (common YAML style, used by the paper's `dag:` listing).
+fn finish_value(
+    inline: Option<&str>,
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+) -> anyhow::Result<Yaml> {
+    if let Some(text) = inline {
+        return Ok(Yaml::Scalar(unquote(text)));
+    }
+    if *pos < lines.len() {
+        let next = &lines[*pos];
+        if next.indent > indent {
+            return parse_block(lines, pos, next.indent);
+        }
+        if next.indent == indent && (next.text.starts_with("- ") || next.text == "-") {
+            return parse_seq(lines, pos, indent);
+        }
+    }
+    Ok(Yaml::Null)
+}
+
+/// Split `key: value` / `key:`; returns `None` if the line has no key colon.
+fn split_key(text: &str) -> Option<(String, Option<&str>)> {
+    // Find the first `:` that is followed by space/EOL and not inside quotes.
+    let bytes = text.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b':' if !in_single && !in_double => {
+                if i + 1 == bytes.len() {
+                    return Some((unquote(text[..i].trim()), None));
+                }
+                if bytes[i + 1] == b' ' {
+                    let val = text[i + 1..].trim();
+                    let val = if val.is_empty() { None } else { Some(val) };
+                    return Some((unquote(text[..i].trim()), val));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if s.len() >= 2 {
+        let b = s.as_bytes();
+        if (b[0] == b'"' && b[s.len() - 1] == b'"') || (b[0] == b'\'' && b[s.len() - 1] == b'\'') {
+            return s[1..s.len() - 1].to_string();
+        }
+    }
+    s.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_map_table1() {
+        // The paper's resource-registration YAML (Table 1).
+        let doc = "\
+name: cloud
+node: 10
+memory: 64GB
+cpu: 32
+storage: 512GB
+gpunode: 8
+gpu: 4
+gateway: 10.107.30.249:8080
+pwd: s2TsHbDfGi
+prometheus: 10.107.30.112:30090
+minio: 10.107.30.112:9000
+minioakey: minioadmin
+minioskey: minioadmin
+";
+        let y = parse(doc).unwrap();
+        assert_eq!(y.req_str("name").unwrap(), "cloud");
+        assert_eq!(y.req_i64("node").unwrap(), 10);
+        assert_eq!(y.req_str("gateway").unwrap(), "10.107.30.249:8080");
+        assert_eq!(y.as_map().unwrap().len(), 13);
+    }
+
+    #[test]
+    fn nested_dag_source_code_2() {
+        // The paper's federated-learning application YAML (source code 2).
+        let doc = "\
+application: federatedlearning
+entrypoint: train
+dag:
+  - name: train
+    dependencies:
+    affinity:
+      nodetype: iot
+      nodelocation: data
+    reduce: auto
+  - name: firstaggregation
+    dependencies: train
+    affinity:
+      nodetype: edge
+      nodelocation: function
+    reduce: auto
+  - name: secondaggregation
+    dependencies: firstaggregation
+    affinity:
+      nodetype: cloud
+      nodelocation: function
+    reduce: 1
+";
+        let y = parse(doc).unwrap();
+        assert_eq!(y.req_str("application").unwrap(), "federatedlearning");
+        let dag = y.get("dag").unwrap().as_seq().unwrap();
+        assert_eq!(dag.len(), 3);
+        assert_eq!(dag[0].req_str("name").unwrap(), "train");
+        assert_eq!(dag[0].get("dependencies"), Some(&Yaml::Null));
+        assert_eq!(dag[0].get("affinity").unwrap().req_str("nodetype").unwrap(), "iot");
+        assert_eq!(dag[2].req_str("reduce").unwrap(), "1");
+        assert_eq!(dag[2].get("reduce").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn seq_at_same_indent_as_key() {
+        // `dag:` followed by `- ` items at the same indent (paper style).
+        let doc = "\
+dag:
+- name: a
+- name: b
+";
+        let y = parse(doc).unwrap();
+        let dag = y.get("dag").unwrap().as_seq().unwrap();
+        assert_eq!(dag.len(), 2);
+        assert_eq!(dag[1].req_str("name").unwrap(), "b");
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let doc = "\
+# resource file
+name: edge  # inline comment
+
+cpu: 32
+note: 'a # not comment'
+";
+        let y = parse(doc).unwrap();
+        assert_eq!(y.req_str("name").unwrap(), "edge");
+        assert_eq!(y.req_i64("cpu").unwrap(), 32);
+        assert_eq!(y.req_str("note").unwrap(), "a # not comment");
+    }
+
+    #[test]
+    fn quoted_scalars() {
+        let doc = "a: \"x: y\"\nb: 'hello world'\n";
+        let y = parse(doc).unwrap();
+        assert_eq!(y.req_str("a").unwrap(), "x: y");
+        assert_eq!(y.req_str("b").unwrap(), "hello world");
+    }
+
+    #[test]
+    fn plain_scalar_sequence() {
+        let doc = "deps:\n  - a\n  - b\n  - c\n";
+        let y = parse(doc).unwrap();
+        let deps = y.get("deps").unwrap().as_seq().unwrap();
+        let names: Vec<_> = deps.iter().map(|d| d.as_str().unwrap()).collect();
+        assert_eq!(names, ["a", "b", "c"]);
+    }
+
+    #[test]
+    fn typed_views() {
+        let doc = "i: 42\nf: 2.5\nt: true\nf2: false\ns: hello\n";
+        let y = parse(doc).unwrap();
+        assert_eq!(y.get("i").unwrap().as_i64(), Some(42));
+        assert_eq!(y.get("f").unwrap().as_f64(), Some(2.5));
+        assert_eq!(y.get("t").unwrap().as_bool(), Some(true));
+        assert_eq!(y.get("f2").unwrap().as_bool(), Some(false));
+        assert_eq!(y.get("s").unwrap().as_bool(), None);
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        assert!(parse("a: 1\na: 2\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_indent() {
+        assert!(parse("a: 1\n   b: 2\n c: 3\n").is_err());
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let doc = "\
+a:
+  b:
+    c:
+      d: leaf
+";
+        let y = parse(doc).unwrap();
+        let leaf = y.get("a").unwrap().get("b").unwrap().get("c").unwrap().req_str("d").unwrap();
+        assert_eq!(leaf, "leaf");
+    }
+
+    #[test]
+    fn empty_doc_is_null() {
+        assert_eq!(parse("\n# only a comment\n").unwrap(), Yaml::Null);
+    }
+
+    #[test]
+    fn video_pipeline_yaml_source_code_1() {
+        let doc = "\
+application: videopipeline
+entrypoint: video-generator
+dag:
+  - name: video-generator
+    affinity:
+      nodetype: iot
+      affinitytype: data
+    reduce: auto
+  - name: video-processing
+    dependencies: video-generator
+    affinity:
+      nodetype: edge
+      affinitytype: function
+    reduce: auto
+  - name: face-recognition
+    dependencies: face-extraction
+    affinity:
+      nodetype: cloud
+      affinitytype: function
+    reduce: auto
+";
+        let y = parse(doc).unwrap();
+        let dag = y.get("dag").unwrap().as_seq().unwrap();
+        assert_eq!(dag.len(), 3);
+        assert_eq!(
+            dag[0].get("affinity").unwrap().req_str("affinitytype").unwrap(),
+            "data"
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! Shared plumbing for workflow function handlers.
+
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+
+/// Pack several tensors into one object payload:
+/// `[count u32][len u32][tensor wire] x count`.
+pub fn pack_tensors(tensors: &[Tensor]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        let wire = t.to_bytes();
+        out.extend_from_slice(&(wire.len() as u32).to_le_bytes());
+        out.extend_from_slice(&wire);
+    }
+    out
+}
+
+/// Inverse of [`pack_tensors`].
+pub fn unpack_tensors(bytes: &[u8]) -> anyhow::Result<Vec<Tensor>> {
+    if bytes.len() < 4 {
+        anyhow::bail!("truncated tensor pack");
+    }
+    let count = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+    let mut off = 4;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        if off + 4 > bytes.len() {
+            anyhow::bail!("truncated tensor pack header");
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into()?) as usize;
+        off += 4;
+        if off + len > bytes.len() {
+            anyhow::bail!("truncated tensor pack body");
+        }
+        out.push(Tensor::from_bytes(&bytes[off..off + len])?);
+        off += len;
+    }
+    Ok(out)
+}
+
+/// Parse the invoker envelope common to all handlers.
+pub struct Envelope {
+    pub app: String,
+    pub function: String,
+    pub resource: u32,
+    pub inputs: Vec<String>,
+}
+
+pub fn parse_envelope(payload: &[u8]) -> anyhow::Result<Envelope> {
+    let v = crate::util::json::parse(std::str::from_utf8(payload)?)?;
+    Ok(Envelope {
+        app: v.req_str("app")?.to_string(),
+        function: v.req_str("function")?.to_string(),
+        resource: v.req_f64("resource")? as u32,
+        inputs: v
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|u| u.as_str().map(String::from)).collect())
+            .unwrap_or_default(),
+    })
+}
+
+/// Build the handler response envelope.
+pub fn outputs_json(urls: &[String]) -> Vec<u8> {
+    let mut out = Json::obj();
+    out.set("outputs", Json::Arr(urls.iter().map(|u| Json::Str(u.clone())).collect()));
+    out.to_string().into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_pack_roundtrip() {
+        let ts = vec![
+            Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]).unwrap(),
+            Tensor::i32(vec![3], vec![7, 8, 9]).unwrap(),
+            Tensor::scalar(0.5),
+        ];
+        let packed = pack_tensors(&ts);
+        assert_eq!(unpack_tensors(&packed).unwrap(), ts);
+    }
+
+    #[test]
+    fn empty_pack() {
+        assert_eq!(unpack_tensors(&pack_tensors(&[])).unwrap(), Vec::<Tensor>::new());
+        assert!(unpack_tensors(b"xx").is_err());
+    }
+
+    #[test]
+    fn envelope_roundtrip() {
+        let payload =
+            br#"{"app":"fl","function":"train","resource":3,"inputs":["fl/b/3/o"]}"#;
+        let e = parse_envelope(payload).unwrap();
+        assert_eq!(e.app, "fl");
+        assert_eq!(e.resource, 3);
+        assert_eq!(e.inputs, vec!["fl/b/3/o"]);
+        let out = outputs_json(&["a/b/1/c".to_string()]);
+        let v = crate::util::json::parse(std::str::from_utf8(&out).unwrap()).unwrap();
+        assert_eq!(v.get("outputs").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

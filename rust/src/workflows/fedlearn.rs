@@ -1,0 +1,374 @@
+//! Federated-learning workflow (§4.2): LeNet-5 on per-device digit shards
+//! with two-level FedAvg aggregation.
+//!
+//! "Each IoT device trains the model locally using the local generated
+//! data. It then passes the trained model to edge cluster for aggregation.
+//! The edge aggregated model is finally contributed to cloud for final
+//! aggregation." (§1)
+//!
+//! Functions (registered as executor images):
+//! * `fl/train` — load the local shard + incoming global model, run
+//!   `local_steps` SGD mini-batches through the `lenet_train_step` artifact,
+//!   publish the trained model (sample count encoded in the object name).
+//! * `fl/agg1` — stack ≤4 worker models, run `fedavg_k4`.
+//! * `fl/agg2` — stack the 2 edge aggregates, run `fedavg_k2`.
+//!
+//! The paper's MNIST is replaced by a deterministic synthetic digit corpus
+//! (see DESIGN.md §Substitutions): 8x8-bitmap digit glyphs upsampled to
+//! 28x28 with random shift + noise — a learnable 10-class problem with the
+//! same tensor geometry.
+
+use std::sync::Arc;
+
+use crate::cluster::NativeExecutor;
+use crate::coordinator::{EdgeFaaS, ResourceId};
+use crate::runtime::{EngineService, Tensor};
+use crate::util::rng::Pcg32;
+
+use super::common::{outputs_json, pack_tensors, parse_envelope, unpack_tensors};
+
+/// LeNet-5 flat parameter count (matches python/compile/model.py).
+pub const LENET_PARAMS: usize = 61706;
+
+/// Per-layer (size, He scale) of the flat layout — mirrors LENET_SHAPES.
+const LENET_LAYERS: [(usize, f32); 10] = [
+    (150, 0.283),   // conv1_w  sqrt(2/25)
+    (6, 0.0),       // conv1_b
+    (2400, 0.1155), // conv2_w  sqrt(2/150)
+    (16, 0.0),      // conv2_b
+    (48000, 0.0707),
+    (120, 0.0),
+    (10080, 0.1291),
+    (84, 0.0),
+    (840, 0.1543),
+    (10, 0.0),
+];
+
+/// He-initialized flat LeNet parameter vector (deterministic per seed).
+pub fn lenet_init(seed: u64) -> Tensor {
+    let mut rng = Pcg32::seeded(seed);
+    let mut params = Vec::with_capacity(LENET_PARAMS);
+    for (n, scale) in LENET_LAYERS {
+        for _ in 0..n {
+            params.push(rng.next_gaussian() as f32 * scale);
+        }
+    }
+    debug_assert_eq!(params.len(), LENET_PARAMS);
+    Tensor::f32(vec![LENET_PARAMS], params).unwrap()
+}
+
+// ------------------------------------------------------- synthetic digits --
+
+/// 8x8 bitmap glyphs for the digits 0-9 (classic console font subset).
+const GLYPHS: [u64; 10] = [
+    0x3c66666e76663c00, // 0
+    0x1818381818187e00, // 1
+    0x3c66060c30607e00, // 2
+    0x3c66061c06663c00, // 3
+    0x060e1e667f060600, // 4
+    0x7e607c0606663c00, // 5
+    0x3c66607c66663c00, // 6
+    0x7e66060c18181800, // 7
+    0x3c66663c66663c00, // 8
+    0x3c66663e06663c00, // 9
+];
+
+/// Render one digit as a 28x28 image with a random ±2px shift and noise.
+pub fn render_digit(digit: usize, rng: &mut Pcg32) -> Vec<f32> {
+    let glyph = GLYPHS[digit];
+    let mut img = vec![0.0f32; 28 * 28];
+    let dy = rng.range(0, 5) as i32 - 2;
+    let dx = rng.range(0, 5) as i32 - 2;
+    for gy in 0..8 {
+        for gx in 0..8 {
+            let bit = (glyph >> (63 - (gy * 8 + gx))) & 1;
+            if bit == 1 {
+                // Upsample each glyph pixel to a 3x3 block, centered.
+                for sy in 0..3 {
+                    for sx in 0..3 {
+                        let y = 2 + gy as i32 * 3 + sy + dy;
+                        let x = 2 + gx as i32 * 3 + sx + dx;
+                        if (0..28).contains(&y) && (0..28).contains(&x) {
+                            img[(y * 28 + x) as usize] = 1.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for p in img.iter_mut() {
+        *p = (*p + 0.08 * rng.next_gaussian() as f32).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// A labelled shard of `n` synthetic digits: (images [n,1,28,28], labels [n]).
+pub fn digit_shard(n: usize, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Pcg32::seeded(seed);
+    let mut images = Vec::with_capacity(n * 784);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let d = rng.next_below(10) as usize;
+        labels.push(d as i32);
+        images.extend(render_digit(d, &mut rng));
+    }
+    (
+        Tensor::f32(vec![n, 1, 28, 28], images).unwrap(),
+        Tensor::i32(vec![n], labels).unwrap(),
+    )
+}
+
+// ------------------------------------------------------------ the handlers --
+
+/// Configuration for the FL handlers.
+#[derive(Debug, Clone)]
+pub struct FlConfig {
+    /// Local SGD steps per round per worker.
+    pub local_steps: usize,
+    /// Mini-batch size (must equal the artifact's TRAIN_BATCH).
+    pub batch: usize,
+    pub lr: f32,
+    /// Samples per device shard.
+    pub shard_size: usize,
+}
+
+impl Default for FlConfig {
+    fn default() -> Self {
+        FlConfig { local_steps: 4, batch: 32, lr: 0.15, shard_size: 128 }
+    }
+}
+
+/// The application name used by all FL objects.
+pub const APP: &str = "federatedlearning";
+
+/// Bucket holding each device's local shard: `shard-<rid>`.
+pub fn shard_bucket(rid: ResourceId) -> String {
+    format!("shard-{rid}")
+}
+
+/// Bucket holding in-flight models: one per tier resource.
+pub fn model_bucket(rid: ResourceId) -> String {
+    format!("models-{rid}"            )
+}
+
+/// Seed every IoT device's shard into its local bucket (data locality:
+/// "when data is generated from IoT devices, the data is stored on IoT
+/// devices"). Returns the shard URLs.
+pub fn seed_shards(
+    faas: &EdgeFaaS,
+    iot: &[ResourceId],
+    cfg: &FlConfig,
+    seed: u64,
+) -> anyhow::Result<Vec<String>> {
+    let mut urls = Vec::new();
+    for (i, &rid) in iot.iter().enumerate() {
+        let bucket = shard_bucket(rid);
+        faas.create_bucket(APP, &bucket, Some(rid))?;
+        let (images, labels) = digit_shard(cfg.shard_size, seed.wrapping_add(i as u64 * 7919));
+        let url = faas.put_object(APP, &bucket, "shard.bin", &pack_tensors(&[images, labels]))?;
+        urls.push(url.to_string());
+    }
+    Ok(urls)
+}
+
+/// Create the per-resource model buckets (workers, edges, cloud).
+pub fn create_model_buckets(faas: &EdgeFaaS, resources: &[ResourceId]) -> anyhow::Result<()> {
+    for &rid in resources {
+        faas.create_bucket(APP, &model_bucket(rid), Some(rid))?;
+    }
+    Ok(())
+}
+
+/// Extract the sample-count weight encoded in a model object name
+/// (`model-...-n<count>.bin`).
+fn weight_of(url: &str) -> f32 {
+    url.rsplit_once("-n")
+        .and_then(|(_, tail)| tail.strip_suffix(".bin"))
+        .and_then(|n| n.parse::<f32>().ok())
+        .unwrap_or(1.0)
+}
+
+/// Register the three FL handlers on an executor.
+pub fn register_handlers(
+    executor: &NativeExecutor,
+    engine: Arc<EngineService>,
+    faas: Arc<EdgeFaaS>,
+    cfg: FlConfig,
+) {
+    // ---- fl/train ----
+    {
+        let engine = Arc::clone(&engine);
+        let faas = Arc::clone(&faas);
+        let cfg = cfg.clone();
+        executor.register("fl/train", move |payload: &[u8]| {
+            let env = parse_envelope(payload)?;
+            let rid = env.resource;
+            // Inputs: the incoming global model (routed to this worker).
+            // The local shard comes from the device's own bucket.
+            let model_url = env
+                .inputs
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("train: no incoming model url"))?;
+            let mut params = Tensor::from_bytes(&faas.get_object_url(model_url)?)?;
+            let shard_raw = faas.get_object_url(&format!(
+                "{APP}/{}/{rid}/shard.bin",
+                shard_bucket(rid)
+            ))?;
+            let shard = unpack_tensors(&shard_raw)?;
+            let (images, labels) = (&shard[0], &shard[1]);
+            let n = images.shape[0];
+            anyhow::ensure!(labels.shape == vec![n], "shard labels mismatch");
+            // Mini-batch SGD: deterministic batch starts per (rid, step).
+            let mut rng = Pcg32::seeded(rid as u64 * 31 + 17);
+            let mut last_loss = f32::NAN;
+            for _ in 0..cfg.local_steps {
+                let start = rng.range(0, n.saturating_sub(cfg.batch).max(1));
+                let img_slice = slice_batch(images, start, cfg.batch)?;
+                let lbl_slice = slice_labels(labels, start, cfg.batch)?;
+                let out = engine.execute(
+                    "lenet_train_step",
+                    &[params, img_slice, lbl_slice, Tensor::scalar(cfg.lr)],
+                )?;
+                params = out[0].clone();
+                last_loss = out[1].item()?;
+            }
+            log::debug!("train on {rid}: loss {last_loss:.4}");
+            let obj = format!("model-{rid}-n{}.bin", n);
+            let url = faas.put_object(APP, &model_bucket(rid), &obj, &params.to_bytes())?;
+            Ok(outputs_json(&[url.to_string()]))
+        });
+    }
+    // ---- fl/agg1 (edge, K<=4) and fl/agg2 (cloud, K<=2) ----
+    for (image, entry, k) in [("fl/agg1", "fedavg_k4", 4usize), ("fl/agg2", "fedavg_k2", 2usize)] {
+        let engine = Arc::clone(&engine);
+        let faas = Arc::clone(&faas);
+        executor.register(image, move |payload: &[u8]| {
+            let env = parse_envelope(payload)?;
+            anyhow::ensure!(!env.inputs.is_empty(), "aggregator got no models");
+            anyhow::ensure!(
+                env.inputs.len() <= k,
+                "aggregator got {} models, artifact takes {k}",
+                env.inputs.len()
+            );
+            let mut stacked = Vec::with_capacity(k * LENET_PARAMS);
+            let mut weights = vec![0.0f32; k];
+            let mut total_samples = 0f32;
+            for (i, url) in env.inputs.iter().enumerate() {
+                let t = Tensor::from_bytes(&faas.get_object_url(url)?)?;
+                anyhow::ensure!(t.shape == vec![LENET_PARAMS], "bad model shape {:?}", t.shape);
+                stacked.extend_from_slice(t.as_f32()?);
+                weights[i] = weight_of(url);
+                total_samples += weights[i];
+            }
+            // Pad missing workers with zero weight (their rows are zeros).
+            while stacked.len() < k * LENET_PARAMS {
+                stacked.extend(std::iter::repeat(0.0).take(LENET_PARAMS));
+            }
+            let out = engine.execute(
+                entry,
+                &[
+                    Tensor::f32(vec![k, LENET_PARAMS], stacked)?,
+                    Tensor::f32(vec![k], weights)?,
+                ],
+            )?;
+            let obj = format!("model-agg{}-n{}.bin", env.resource, total_samples as u64);
+            let url =
+                faas.put_object(APP, &model_bucket(env.resource), &obj, &out[0].to_bytes())?;
+            Ok(outputs_json(&[url.to_string()]))
+        });
+    }
+}
+
+/// Slice `count` images starting at `start` (clamped) from [N,1,28,28].
+fn slice_batch(images: &Tensor, start: usize, count: usize) -> anyhow::Result<Tensor> {
+    let n = images.shape[0];
+    let start = start.min(n.saturating_sub(count));
+    let data = images.as_f32()?;
+    let stride = 784;
+    Tensor::f32(
+        vec![count, 1, 28, 28],
+        data[start * stride..(start + count) * stride].to_vec(),
+    )
+}
+
+fn slice_labels(labels: &Tensor, start: usize, count: usize) -> anyhow::Result<Tensor> {
+    let n = labels.shape[0];
+    let start = start.min(n.saturating_sub(count));
+    let data = labels.as_i32()?;
+    Tensor::i32(vec![count], data[start..start + count].to_vec())
+}
+
+/// Evaluate a model's accuracy on a held-out shard via `lenet_predict`.
+pub fn evaluate(engine: &EngineService, params: &Tensor, seed: u64, batches: usize) -> anyhow::Result<f64> {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in 0..batches {
+        let (images, labels) = digit_shard(32, seed.wrapping_add(b as u64 * 131));
+        let out = engine.execute("lenet_predict", &[params.clone(), images])?;
+        let preds = out[0].as_i32()?;
+        let truth = labels.as_i32()?;
+        correct += preds.iter().zip(truth).filter(|(p, t)| p == t).count();
+        total += truth.len();
+    }
+    Ok(correct as f64 / total as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_init_layout() {
+        let t = lenet_init(0);
+        assert_eq!(t.shape, vec![LENET_PARAMS]);
+        let p = t.as_f32().unwrap();
+        // Biases (offsets 150..156) are zero; conv1 weights are not.
+        assert!(p[..150].iter().any(|&x| x != 0.0));
+        assert!(p[150..156].iter().all(|&x| x == 0.0));
+        // Deterministic per seed.
+        assert_eq!(lenet_init(1), lenet_init(1));
+        assert_ne!(lenet_init(1), lenet_init(2));
+    }
+
+    #[test]
+    fn digit_shard_is_deterministic_and_labelled() {
+        let (img_a, lbl_a) = digit_shard(64, 9);
+        let (img_b, lbl_b) = digit_shard(64, 9);
+        assert_eq!(img_a, img_b);
+        assert_eq!(lbl_a, lbl_b);
+        assert_eq!(img_a.shape, vec![64, 1, 28, 28]);
+        let labels = lbl_a.as_i32().unwrap();
+        assert!(labels.iter().all(|&l| (0..10).contains(&l)));
+        // All ten classes appear in 64 draws with overwhelming probability.
+        let classes: std::collections::HashSet<i32> = labels.iter().copied().collect();
+        assert!(classes.len() >= 8, "classes: {classes:?}");
+    }
+
+    #[test]
+    fn rendered_digits_differ_by_class() {
+        let mut rng = Pcg32::seeded(4);
+        let a = render_digit(0, &mut rng);
+        let mut rng = Pcg32::seeded(4);
+        let b = render_digit(1, &mut rng);
+        let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 10.0, "glyphs must differ: {diff}");
+    }
+
+    #[test]
+    fn weight_encoding_roundtrip() {
+        assert_eq!(weight_of("fl/models-3/3/model-3-n128.bin"), 128.0);
+        assert_eq!(weight_of("fl/models-9/9/model-agg9-n512.bin"), 512.0);
+        assert_eq!(weight_of("no-weight-here"), 1.0);
+    }
+
+    #[test]
+    fn batch_slicing_clamps() {
+        let (images, labels) = digit_shard(40, 0);
+        let b = slice_batch(&images, 38, 32).unwrap();
+        assert_eq!(b.shape, vec![32, 1, 28, 28]);
+        let l = slice_labels(&labels, 38, 32).unwrap();
+        assert_eq!(l.shape, vec![32]);
+        // Clamped window = rows 8..40.
+        assert_eq!(l.as_i32().unwrap(), &labels.as_i32().unwrap()[8..40]);
+    }
+}

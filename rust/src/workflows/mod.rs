@@ -1,0 +1,18 @@
+//! The paper's two representative edge workflows (§4), implemented as real
+//! EdgeFaaS functions whose compute runs through the PJRT artifacts.
+//!
+//! * [`video`] — the six-stage video-analytics pipeline (§4.1): synthetic
+//!   camera streams, GoP chunking, Pallas motion detection, template-bank
+//!   face detection, CNN embedding, k-NN recognition.
+//! * [`fedlearn`] — the two-level federated-learning workflow (§4.2):
+//!   LeNet-5 local training on per-device synthetic digit shards, edge-level
+//!   FedAvg, cloud-level FedAvg.
+//!
+//! Handlers are registered into a [`crate::cluster::NativeExecutor`] under
+//! image names (`video/motion-detection`, `fl/train`, ...) and speak the
+//! invoker's URL-envelope protocol, so the full coordinator path — deploy,
+//! schedule, invoke, chain, store — is exercised end to end.
+
+pub mod common;
+pub mod fedlearn;
+pub mod video;

@@ -1,0 +1,383 @@
+//! Video-analytics workflow (§4.1): the six-stage pipeline from camera to
+//! identity, with every ML stage running through the PJRT artifacts.
+//!
+//! Stage handlers (executor images):
+//! * `video/video-generator`  — synthesize a GoP from the device camera
+//!   (moving "face" blob over a textured background, deterministic per
+//!   device + GoP index), store it locally (data locality).
+//! * `video/video-processing` — FFmpeg stand-in: normalize + chunk into the
+//!   GoP tensor the downstream stages consume.
+//! * `video/motion-detection` — the Pallas `motion_scores` kernel; GoPs
+//!   whose every inter-frame score is below threshold are dropped.
+//! * `video/face-detection`   — `face_detect` template correlation; keeps
+//!   frames whose best window clears the detection threshold.
+//! * `video/face-extraction`  — `face_extract` crops the detected windows.
+//! * `video/face-recognition` — `face_embed` + `knn_classify` against the
+//!   enrolled gallery; outputs identity labels.
+
+use std::sync::Arc;
+
+use crate::cluster::NativeExecutor;
+use crate::coordinator::{EdgeFaaS, ResourceId};
+use crate::runtime::{EngineService, Tensor};
+use crate::util::rng::Pcg32;
+
+use super::common::{outputs_json, pack_tensors, parse_envelope, unpack_tensors};
+
+/// Frame geometry — must match python/compile/aot.py.
+pub const FRAME_H: usize = 96;
+pub const FRAME_W: usize = 160;
+pub const GOP: usize = 24;
+pub const DETECT_BATCH: usize = 8;
+pub const WIN: usize = 32;
+pub const EMBED_DIM: usize = 64;
+pub const GALLERY: usize = 32;
+
+/// The application name used by all video objects.
+pub const APP: &str = "videopipeline";
+
+/// Per-resource bucket for pipeline data.
+pub fn bucket(rid: ResourceId) -> String {
+    format!("video-{rid}")
+}
+
+// --------------------------------------------------------- synth "camera" --
+
+/// Draw the synthetic face blob (must match the python template family).
+fn draw_face(img: &mut [f32], cy: f32, cx: f32, identity_scale: f32) {
+    for y in 0..FRAME_H {
+        for x in 0..FRAME_W {
+            let dy = (y as f32 - cy) / (10.0 * identity_scale);
+            let dx = (x as f32 - cx) / (9.0 * identity_scale);
+            let face = (-(dy * dy + dx * dx)).exp();
+            let mut v = face;
+            for (ey, ex) in [(-4.0f32, -4.0f32), (-4.0, 4.0)] {
+                let ddy = y as f32 - cy - ey;
+                let ddx = x as f32 - cx - ex;
+                v -= 0.8 * (-(ddy * ddy + ddx * ddx) / 6.0).exp();
+            }
+            img[y * FRAME_W + x] = (img[y * FRAME_W + x] + v).clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Synthesize one GoP: a face with `identity` moving across a textured
+/// background. `motion=false` renders a static scene (motion-detection
+/// negative). Deterministic per (camera_seed, gop_index).
+pub fn synth_gop(camera_seed: u64, gop_index: u64, identity: usize, motion: bool) -> Tensor {
+    let mut rng = Pcg32::new(camera_seed, gop_index.wrapping_mul(2654435761).wrapping_add(1));
+    let mut frames = Vec::with_capacity(GOP * FRAME_H * FRAME_W);
+    let base_y = 24.0 + rng.next_f32() * 40.0;
+    let base_x = 24.0 + rng.next_f32() * 100.0;
+    let vy = if motion { (rng.next_f32() - 0.5) * 3.0 } else { 0.0 };
+    let vx = if motion { 1.0 + rng.next_f32() * 2.0 } else { 0.0 };
+    let identity_scale = 0.8 + 0.1 * (identity % 5) as f32;
+    // Shared static background texture.
+    let mut bg = vec![0.0f32; FRAME_H * FRAME_W];
+    for p in bg.iter_mut() {
+        *p = rng.next_f32() * 0.1;
+    }
+    for t in 0..GOP {
+        let mut img = bg.clone();
+        let cy = (base_y + vy * t as f32).clamp(18.0, FRAME_H as f32 - 18.0);
+        let cx = (base_x + vx * t as f32).clamp(18.0, FRAME_W as f32 - 18.0);
+        draw_face(&mut img, cy, cx, identity_scale);
+        frames.extend_from_slice(&img);
+    }
+    Tensor::f32(vec![GOP, FRAME_H, FRAME_W], frames).unwrap()
+}
+
+/// Enroll a gallery: `GALLERY` identity crops -> embeddings via the engine.
+/// Returns (embeddings [G, D], labels [G]).
+pub fn enroll_gallery(engine: &EngineService, seed: u64) -> anyhow::Result<(Tensor, Tensor)> {
+    let mut embeddings = Vec::with_capacity(GALLERY * EMBED_DIM);
+    let mut labels = Vec::with_capacity(GALLERY);
+    // Batch enrolment through the face_embed artifact (batch = 8).
+    let mut rng = Pcg32::seeded(seed);
+    for chunk in 0..(GALLERY / DETECT_BATCH) {
+        let mut patches = Vec::with_capacity(DETECT_BATCH * WIN * WIN);
+        for i in 0..DETECT_BATCH {
+            let identity = chunk * DETECT_BATCH + i;
+            let mut img = vec![0.0f32; WIN * WIN];
+            for p in img.iter_mut() {
+                *p = rng.next_f32() * 0.1;
+            }
+            // Crop-sized face with the identity's scale, centered.
+            let scale = 0.8 + 0.1 * (identity % 5) as f32;
+            for y in 0..WIN {
+                for x in 0..WIN {
+                    let dy = (y as f32 - 16.0) / (10.0 * scale);
+                    let dx = (x as f32 - 16.0) / (9.0 * scale);
+                    let mut v = (-(dy * dy + dx * dx)).exp();
+                    for (ey, ex) in [(-4.0f32, -4.0f32), (-4.0, 4.0)] {
+                        let ddy = y as f32 - 16.0 - ey;
+                        let ddx = x as f32 - 16.0 - ex;
+                        v -= 0.8 * (-(ddy * ddy + ddx * ddx) / 6.0).exp();
+                    }
+                    img[y * WIN + x] = (img[y * WIN + x] + v).clamp(0.0, 1.0);
+                }
+            }
+            patches.extend(img);
+            labels.push((identity % 10) as i32);
+        }
+        let out = engine.execute(
+            "face_embed",
+            &[Tensor::f32(vec![DETECT_BATCH, WIN, WIN], patches)?],
+        )?;
+        embeddings.extend_from_slice(out[0].as_f32()?);
+    }
+    Ok((
+        Tensor::f32(vec![GALLERY, EMBED_DIM], embeddings)?,
+        Tensor::i32(vec![GALLERY], labels)?,
+    ))
+}
+
+// ------------------------------------------------------------ the handlers --
+
+/// Configuration for the video handlers.
+#[derive(Debug, Clone)]
+pub struct VideoConfig {
+    /// Inter-frame mean-abs-diff threshold for "contains motion".
+    pub motion_threshold: f32,
+    /// Template-correlation threshold for "contains a face".
+    pub face_threshold: f32,
+    /// GoPs per camera per run.
+    pub gops_per_camera: u64,
+}
+
+impl Default for VideoConfig {
+    fn default() -> Self {
+        VideoConfig { motion_threshold: 1e-3, face_threshold: 0.25, gops_per_camera: 1 }
+    }
+}
+
+/// Register the six stage handlers on an executor. `gallery` is the
+/// enrolled (embeddings, labels) pair, baked into the recognition closure
+/// the way the paper bakes a pre-trained model into the function image.
+pub fn register_handlers(
+    executor: &NativeExecutor,
+    engine: Arc<EngineService>,
+    faas: Arc<EdgeFaaS>,
+    cfg: VideoConfig,
+    gallery: (Tensor, Tensor),
+) {
+    // ---- video-generator ----
+    {
+        let faas = Arc::clone(&faas);
+        let cfg = cfg.clone();
+        executor.register("video/video-generator", move |payload: &[u8]| {
+            let env = parse_envelope(payload)?;
+            let rid = env.resource;
+            let mut urls = Vec::new();
+            for g in 0..cfg.gops_per_camera {
+                // Camera rid films identity rid%10; ~1 in 4 GoPs is static.
+                let motion = (g + rid as u64) % 4 != 3;
+                let gop = synth_gop(rid as u64, g, rid as usize, motion);
+                let obj = format!("gop-{g}.bin");
+                let url =
+                    faas.put_object(APP, &bucket(rid), &obj, &pack_tensors(&[gop]))?;
+                urls.push(url.to_string());
+            }
+            Ok(outputs_json(&urls))
+        });
+    }
+    // ---- video-processing ----
+    {
+        let faas = Arc::clone(&faas);
+        executor.register("video/video-processing", move |payload: &[u8]| {
+            let env = parse_envelope(payload)?;
+            let mut urls = Vec::new();
+            for (i, input) in env.inputs.iter().enumerate() {
+                let tensors = unpack_tensors(&faas.get_object_url(input)?)?;
+                let gop = &tensors[0];
+                anyhow::ensure!(
+                    gop.shape == vec![GOP, FRAME_H, FRAME_W],
+                    "bad GoP shape {:?}",
+                    gop.shape
+                );
+                // FFmpeg stand-in: luma normalize to [0,1] (already the
+                // range, so this is an explicit clamp + passthrough chunk).
+                let data: Vec<f32> =
+                    gop.as_f32()?.iter().map(|&v| v.clamp(0.0, 1.0)).collect();
+                let out = Tensor::f32(gop.shape.clone(), data)?;
+                let obj = format!("proc-{}-{i}.bin", env.resource);
+                let url = faas.put_object(
+                    APP,
+                    &bucket(env.resource),
+                    &obj,
+                    &pack_tensors(&[out]),
+                )?;
+                urls.push(url.to_string());
+            }
+            Ok(outputs_json(&urls))
+        });
+    }
+    // ---- motion-detection ----
+    {
+        let engine = Arc::clone(&engine);
+        let faas = Arc::clone(&faas);
+        let cfg = cfg.clone();
+        executor.register("video/motion-detection", move |payload: &[u8]| {
+            let env = parse_envelope(payload)?;
+            let mut urls = Vec::new();
+            for (i, input) in env.inputs.iter().enumerate() {
+                let tensors = unpack_tensors(&faas.get_object_url(input)?)?;
+                let gop = &tensors[0];
+                let scores = engine.execute("motion_scores", &[gop.clone()])?;
+                let scores = scores[0].as_f32()?;
+                // "if a picture is detected with motion, all the following
+                // pictures are considered to contain motion" — a GoP passes
+                // if any inter-frame score clears the threshold.
+                let has_motion = scores[1..].iter().any(|&s| s > cfg.motion_threshold);
+                if !has_motion {
+                    continue; // the stage is a filter
+                }
+                // Downstream stages take DETECT_BATCH frames: stride-sample.
+                let data = gop.as_f32()?;
+                let stride = GOP / DETECT_BATCH;
+                let mut picked = Vec::with_capacity(DETECT_BATCH * FRAME_H * FRAME_W);
+                for k in 0..DETECT_BATCH {
+                    let f = k * stride;
+                    picked.extend_from_slice(
+                        &data[f * FRAME_H * FRAME_W..(f + 1) * FRAME_H * FRAME_W],
+                    );
+                }
+                let out = Tensor::f32(vec![DETECT_BATCH, FRAME_H, FRAME_W], picked)?;
+                let obj = format!("motion-{}-{i}.bin", env.resource);
+                let url = faas.put_object(
+                    APP,
+                    &bucket(env.resource),
+                    &obj,
+                    &pack_tensors(&[out]),
+                )?;
+                urls.push(url.to_string());
+            }
+            Ok(outputs_json(&urls))
+        });
+    }
+    // ---- face-detection ----
+    {
+        let engine = Arc::clone(&engine);
+        let faas = Arc::clone(&faas);
+        let cfg = cfg.clone();
+        executor.register("video/face-detection", move |payload: &[u8]| {
+            let env = parse_envelope(payload)?;
+            let mut urls = Vec::new();
+            for (i, input) in env.inputs.iter().enumerate() {
+                let tensors = unpack_tensors(&faas.get_object_url(input)?)?;
+                let frames = &tensors[0];
+                let out = engine.execute("face_detect", &[frames.clone()])?;
+                let scores = out[0].as_f32()?;
+                let any_face = scores.iter().any(|&s| s > cfg.face_threshold);
+                if !any_face {
+                    continue; // filter again
+                }
+                let obj = format!("detect-{}-{i}.bin", env.resource);
+                let url = faas.put_object(
+                    APP,
+                    &bucket(env.resource),
+                    &obj,
+                    // Frames + per-frame window indices travel together.
+                    &pack_tensors(&[frames.clone(), out[1].clone(), out[0].clone()]),
+                )?;
+                urls.push(url.to_string());
+            }
+            Ok(outputs_json(&urls))
+        });
+    }
+    // ---- face-extraction ----
+    {
+        let engine = Arc::clone(&engine);
+        let faas = Arc::clone(&faas);
+        executor.register("video/face-extraction", move |payload: &[u8]| {
+            let env = parse_envelope(payload)?;
+            let mut urls = Vec::new();
+            for (i, input) in env.inputs.iter().enumerate() {
+                let tensors = unpack_tensors(&faas.get_object_url(input)?)?;
+                let (frames, windows) = (&tensors[0], &tensors[1]);
+                let out = engine.execute("face_extract", &[frames.clone(), windows.clone()])?;
+                let obj = format!("faces-{}-{i}.bin", env.resource);
+                let url = faas.put_object(
+                    APP,
+                    &bucket(env.resource),
+                    &obj,
+                    &pack_tensors(&[out[0].clone()]),
+                )?;
+                urls.push(url.to_string());
+            }
+            Ok(outputs_json(&urls))
+        });
+    }
+    // ---- face-recognition ----
+    {
+        let engine = Arc::clone(&engine);
+        let faas = Arc::clone(&faas);
+        executor.register("video/face-recognition", move |payload: &[u8]| {
+            let env = parse_envelope(payload)?;
+            let (gal_emb, gal_labels) = (&gallery.0, &gallery.1);
+            let mut urls = Vec::new();
+            for (i, input) in env.inputs.iter().enumerate() {
+                let tensors = unpack_tensors(&faas.get_object_url(input)?)?;
+                let patches = &tensors[0];
+                let emb = engine.execute("face_embed", &[patches.clone()])?;
+                let cls = engine.execute(
+                    "knn_classify",
+                    &[emb[0].clone(), gal_emb.clone(), gal_labels.clone()],
+                )?;
+                let obj = format!("identities-{}-{i}.bin", env.resource);
+                let url = faas.put_object(
+                    APP,
+                    &bucket(env.resource),
+                    &obj,
+                    &pack_tensors(&[cls[0].clone(), cls[1].clone()]),
+                )?;
+                urls.push(url.to_string());
+            }
+            Ok(outputs_json(&urls))
+        });
+    }
+}
+
+/// Create the per-resource pipeline buckets.
+pub fn create_buckets(faas: &EdgeFaaS, resources: &[ResourceId]) -> anyhow::Result<()> {
+    for &rid in resources {
+        faas.create_bucket(APP, &bucket(rid), Some(rid))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_gop_geometry_and_determinism() {
+        let a = synth_gop(3, 0, 3, true);
+        let b = synth_gop(3, 0, 3, true);
+        assert_eq!(a, b);
+        assert_eq!(a.shape, vec![GOP, FRAME_H, FRAME_W]);
+        let c = synth_gop(3, 1, 3, true);
+        assert_ne!(a, c, "different GoPs differ");
+    }
+
+    #[test]
+    fn motion_flag_controls_frame_difference() {
+        let moving = synth_gop(1, 0, 1, true);
+        let still = synth_gop(1, 0, 1, false);
+        let diff_of = |t: &Tensor| {
+            let d = t.as_f32().unwrap();
+            let f0 = &d[..FRAME_H * FRAME_W];
+            let f12 = &d[12 * FRAME_H * FRAME_W..13 * FRAME_H * FRAME_W];
+            f0.iter().zip(f12).map(|(a, b)| (a - b).abs()).sum::<f32>()
+                / (FRAME_H * FRAME_W) as f32
+        };
+        assert!(diff_of(&moving) > 1e-3, "moving scene diff {}", diff_of(&moving));
+        assert!(diff_of(&still) < 1e-6, "static scene diff {}", diff_of(&still));
+    }
+
+    #[test]
+    fn frames_are_unit_range() {
+        let gop = synth_gop(5, 2, 5, true);
+        assert!(gop.as_f32().unwrap().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

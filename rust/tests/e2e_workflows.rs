@@ -1,0 +1,202 @@
+//! End-to-end integration: both paper workflows through the full stack —
+//! coordinator scheduling, per-resource FaaS backends, object stores, and
+//! the PJRT-executed AOT artifacts. Python never runs here.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use edgefaas::coordinator::appconfig::{federated_learning_yaml, video_pipeline_yaml};
+use edgefaas::coordinator::functions::FunctionPackage;
+use edgefaas::runtime::{EngineService, Tensor};
+use edgefaas::simnet::RealClock;
+use edgefaas::testbed::{artifacts_dir, paper_testbed};
+use edgefaas::workflows::{common, fedlearn, video};
+
+fn engine() -> Option<Arc<EngineService>> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(EngineService::start(dir).unwrap()))
+}
+
+#[test]
+fn federated_learning_end_to_end() {
+    let Some(engine) = engine() else { return };
+    let bed = paper_testbed(Arc::new(RealClock::new()));
+    let faas = Arc::clone(&bed.faas);
+    let cfg = fedlearn::FlConfig { local_steps: 2, batch: 32, lr: 0.2, shard_size: 64 };
+
+    fedlearn::seed_shards(&faas, &bed.iot, &cfg, 42).unwrap();
+    fedlearn::create_model_buckets(&faas, &bed.all_resources()).unwrap();
+    fedlearn::register_handlers(&bed.executor, Arc::clone(&engine), Arc::clone(&faas), cfg);
+
+    // Configure + deploy per the paper's YAML (source code 2).
+    let mut data = HashMap::new();
+    data.insert("train".to_string(), bed.iot.clone());
+    let plan = faas.configure_application(federated_learning_yaml(), &data).unwrap();
+    assert_eq!(plan["train"].len(), 8);
+    assert_eq!(plan["firstaggregation"], bed.edges);
+    assert_eq!(plan["secondaggregation"], vec![bed.cloud]);
+    let mut packages = HashMap::new();
+    packages.insert("train".into(), FunctionPackage { code: "fl/train".into() });
+    packages.insert("firstaggregation".into(), FunctionPackage { code: "fl/agg1".into() });
+    packages.insert("secondaggregation".into(), FunctionPackage { code: "fl/agg2".into() });
+    faas.deploy_application(fedlearn::APP, &packages).unwrap();
+
+    // Two federated rounds; the global model's eval accuracy must improve.
+    let mut global = fedlearn::lenet_init(7);
+    let acc_before = fedlearn::evaluate(&engine, &global, 999, 2).unwrap();
+    for round in 0..2 {
+        // Distribute the global model to every worker's bucket (the
+        // aggregator "sends the shared model back to each of the workers").
+        let mut entry = HashMap::new();
+        let mut urls = Vec::new();
+        for &rid in &bed.iot {
+            let url = faas
+                .put_object(
+                    fedlearn::APP,
+                    &fedlearn::model_bucket(rid),
+                    &format!("global-r{round}.bin"),
+                    &global.to_bytes(),
+                )
+                .unwrap();
+            urls.push(url.to_string());
+        }
+        entry.insert("train".to_string(), urls);
+        let result = faas.run_workflow(fedlearn::APP, &entry).unwrap();
+        let final_url = &result.functions["secondaggregation"][0].outputs[0];
+        global = Tensor::from_bytes(&faas.get_object_url(final_url).unwrap()).unwrap();
+        assert_eq!(global.shape, vec![fedlearn::LENET_PARAMS]);
+    }
+    let acc_after = fedlearn::evaluate(&engine, &global, 999, 2).unwrap();
+    assert!(
+        acc_after > acc_before + 0.1,
+        "federated training must help: {acc_before:.3} -> {acc_after:.3}"
+    );
+}
+
+#[test]
+fn video_pipeline_end_to_end() {
+    let Some(engine) = engine() else { return };
+    let bed = paper_testbed(Arc::new(RealClock::new()));
+    let faas = Arc::clone(&bed.faas);
+
+    video::create_buckets(&faas, &bed.all_resources()).unwrap();
+    let gallery = video::enroll_gallery(&engine, 5).unwrap();
+    let cfg = video::VideoConfig::default();
+    video::register_handlers(
+        &bed.executor,
+        Arc::clone(&engine),
+        Arc::clone(&faas),
+        cfg,
+        gallery,
+    );
+
+    // Use the first set's cameras only to keep CI time modest.
+    let cameras = vec![bed.iot[0], bed.iot[1]];
+    let mut data = HashMap::new();
+    data.insert("video-generator".to_string(), cameras.clone());
+    let plan = faas.configure_application(video_pipeline_yaml(), &data).unwrap();
+    assert_eq!(plan["video-generator"], cameras, "cameras co-locate with data");
+    assert_eq!(plan["video-processing"], vec![bed.edges[0]], "set-1 edge");
+    assert_eq!(plan["face-extraction"], vec![bed.cloud]);
+
+    let mut packages = HashMap::new();
+    for stage in [
+        "video-generator",
+        "video-processing",
+        "motion-detection",
+        "face-detection",
+        "face-extraction",
+        "face-recognition",
+    ] {
+        packages.insert(stage.to_string(), FunctionPackage { code: format!("video/{stage}") });
+    }
+    faas.deploy_application(video::APP, &packages).unwrap();
+
+    let result = faas.run_workflow(video::APP, &HashMap::new()).unwrap();
+
+    // The pipeline must produce identity outputs on the cloud.
+    let rec = &result.functions["face-recognition"];
+    assert_eq!(rec.len(), 1);
+    assert_eq!(rec[0].resource, bed.cloud);
+    assert!(!rec[0].outputs.is_empty(), "no identities produced");
+    // Decode one identities object: labels in 0..10 with finite distances.
+    let raw = faas.get_object_url(&rec[0].outputs[0]).unwrap();
+    let tensors = common::unpack_tensors(&raw).unwrap();
+    let labels = tensors[0].as_i32().unwrap();
+    assert!(!labels.is_empty());
+    assert!(labels.iter().all(|&l| (0..10).contains(&l)), "labels: {labels:?}");
+    let dists = tensors[1].as_f32().unwrap();
+    assert!(dists.iter().all(|d| d.is_finite()));
+}
+
+#[test]
+fn coordinator_recovers_mappings_from_backup() {
+    // Crash-recovery: a coordinator rebuilt over the same DurableKv sees
+    // the same candidate/bucket mappings (the paper's DynamoDB story).
+    let dir = std::env::temp_dir().join(format!("edgefaas-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let kv_path = dir.join("mappings.jsonl");
+    {
+        let kv = edgefaas::backup::DurableKv::open(&kv_path).unwrap();
+        kv.put("candidate_resource", "app.fn", edgefaas::util::json::Json::Num(3.0)).unwrap();
+        kv.put("bucket_map", "app.data", edgefaas::util::json::Json::Num(1.0)).unwrap();
+    }
+    let kv = edgefaas::backup::DurableKv::open(&kv_path).unwrap();
+    assert_eq!(
+        kv.get("candidate_resource", "app.fn"),
+        Some(edgefaas::util::json::Json::Num(3.0))
+    );
+    assert_eq!(kv.get("bucket_map", "app.data"), Some(edgefaas::util::json::Json::Num(1.0)));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rest_control_plane_end_to_end() {
+    // The unified gateway + per-resource REST path: configure and exercise
+    // storage verbs through loopback HTTP only.
+    let bed = paper_testbed(Arc::new(RealClock::new()));
+    let server =
+        edgefaas::coordinator::gateway::EdgeFaasGateway::serve(Arc::clone(&bed.faas), 4).unwrap();
+    let addr = server.addr();
+    let anchors: String = bed.iot.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(",");
+    let resp = edgefaas::util::http::request(
+        &addr,
+        "POST",
+        &format!("/apps?data_train={anchors}"),
+        &[],
+        federated_learning_yaml().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 201, "{}", resp.body_str().unwrap_or(""));
+    // Storage through the gateway.
+    let resp = edgefaas::util::http::request(
+        &addr,
+        "PUT",
+        &format!("/apps/federatedlearning/buckets/shared?locality={}", bed.cloud),
+        &[],
+        &[],
+    )
+    .unwrap();
+    assert_eq!(resp.status, 201);
+    let resp = edgefaas::util::http::request(
+        &addr,
+        "PUT",
+        "/apps/federatedlearning/objects/shared/model.bin",
+        &[],
+        &fedlearn::lenet_init(0).to_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 201);
+    let url = resp.json_body().unwrap().req_str("url").unwrap().to_string();
+    let resp = edgefaas::util::http::get(
+        &addr,
+        &format!("/objects?url={}", edgefaas::util::http::url_encode(&url)),
+    )
+    .unwrap();
+    let model = Tensor::from_bytes(&resp.body).unwrap();
+    assert_eq!(model.shape, vec![fedlearn::LENET_PARAMS]);
+}

@@ -1,0 +1,250 @@
+//! Failure injection: the coordinator's behaviour when resources misbehave
+//! — partial deploy failures, invocation errors, unreachable monitoring,
+//! capacity exhaustion mid-workflow. The paper specifies several of these
+//! behaviours explicitly (§3.2.1: failed resource IDs are returned and
+//! removed from the candidate mapping).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use edgefaas::coordinator::functions::FunctionPackage;
+use edgefaas::coordinator::handle::ResourceHandle;
+use edgefaas::monitor::metrics::ResourceUsage;
+use edgefaas::simnet::RealClock;
+use edgefaas::testbed::paper_testbed;
+use edgefaas::util::json::Json;
+
+/// A handle wrapper that can be told to fail specific verbs.
+struct FlakyHandle {
+    inner: Arc<dyn ResourceHandle>,
+    fail_deploy: AtomicBool,
+    fail_invoke: AtomicBool,
+    fail_usage: AtomicBool,
+    invokes: AtomicUsize,
+}
+
+impl FlakyHandle {
+    fn wrap(inner: Arc<dyn ResourceHandle>) -> Arc<FlakyHandle> {
+        Arc::new(FlakyHandle {
+            inner,
+            fail_deploy: AtomicBool::new(false),
+            fail_invoke: AtomicBool::new(false),
+            fail_usage: AtomicBool::new(false),
+            invokes: AtomicUsize::new(0),
+        })
+    }
+}
+
+impl ResourceHandle for FlakyHandle {
+    fn deploy(
+        &self,
+        name: &str,
+        image: &str,
+        memory: u64,
+        gpus: u32,
+        labels: &[(String, String)],
+    ) -> anyhow::Result<()> {
+        if self.fail_deploy.load(Ordering::SeqCst) {
+            anyhow::bail!("injected deploy failure");
+        }
+        self.inner.deploy(name, image, memory, gpus, labels)
+    }
+
+    fn remove(&self, name: &str) -> anyhow::Result<()> {
+        self.inner.remove(name)
+    }
+
+    fn invoke(&self, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)> {
+        self.invokes.fetch_add(1, Ordering::SeqCst);
+        if self.fail_invoke.load(Ordering::SeqCst) {
+            anyhow::bail!("injected invoke failure");
+        }
+        self.inner.invoke(name, payload)
+    }
+
+    fn list(&self) -> anyhow::Result<Vec<String>> {
+        self.inner.list()
+    }
+
+    fn describe(&self, name: &str) -> anyhow::Result<Json> {
+        self.inner.describe(name)
+    }
+
+    fn usage(&self) -> anyhow::Result<ResourceUsage> {
+        if self.fail_usage.load(Ordering::SeqCst) {
+            anyhow::bail!("injected scrape failure");
+        }
+        self.inner.usage()
+    }
+
+    fn make_bucket(&self, b: &str) -> anyhow::Result<()> {
+        self.inner.make_bucket(b)
+    }
+    fn remove_bucket(&self, b: &str) -> anyhow::Result<()> {
+        self.inner.remove_bucket(b)
+    }
+    fn put_object(&self, b: &str, o: &str, d: &[u8]) -> anyhow::Result<()> {
+        self.inner.put_object(b, o, d)
+    }
+    fn get_object(&self, b: &str, o: &str) -> anyhow::Result<Vec<u8>> {
+        self.inner.get_object(b, o)
+    }
+    fn remove_object(&self, b: &str, o: &str) -> anyhow::Result<()> {
+        self.inner.remove_object(b, o)
+    }
+    fn list_objects(&self, b: &str) -> anyhow::Result<Vec<String>> {
+        self.inner.list_objects(b)
+    }
+    fn stored_bytes(&self) -> anyhow::Result<u64> {
+        self.inner.stored_bytes()
+    }
+}
+
+/// Testbed where one IoT resource is wrapped in a FlakyHandle.
+fn flaky_bed() -> (edgefaas::testbed::TestBed, Arc<FlakyHandle>, u32) {
+    let bed = paper_testbed(Arc::new(RealClock::new()));
+    // Re-register pi 7 behind a flaky wrapper (unregister requires it to be
+    // clean, which a fresh testbed satisfies).
+    let victim = bed.iot[7];
+    let reg = bed.faas.resource(victim).unwrap();
+    let flaky = FlakyHandle::wrap(Arc::clone(&reg.handle));
+    let (spec, node) = (reg.spec.clone(), reg.net_node);
+    bed.faas.unregister(victim).unwrap();
+    let new_id = bed
+        .faas
+        .register(spec, Arc::clone(&flaky) as Arc<dyn ResourceHandle>, node)
+        .unwrap();
+    assert_eq!(new_id, victim, "id reuse keeps the testbed layout");
+    (bed, flaky, victim)
+}
+
+#[test]
+fn partial_deploy_failure_prunes_candidates_per_paper() {
+    let (bed, flaky, victim) = flaky_bed();
+    bed.executor.register("img/x", |p: &[u8]| Ok(p.to_vec()));
+    let yaml = edgefaas::coordinator::appconfig::federated_learning_yaml();
+    let mut data = HashMap::new();
+    data.insert("train".to_string(), bed.iot.clone());
+    bed.faas.configure_application(yaml, &data).unwrap();
+    flaky.fail_deploy.store(true, Ordering::SeqCst);
+    // "If the function fails to be created on some resources,
+    // create_function() returns error and the failed resource IDs...
+    // removed from the candidate resource mapping."
+    let err = bed
+        .faas
+        .deploy_function("federatedlearning", "train", &FunctionPackage { code: "img/x".into() })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains(&victim.to_string()), "error names the failed id: {err}");
+    let remaining = bed.faas.candidates_of("federatedlearning", "train").unwrap();
+    assert_eq!(remaining.len(), 7);
+    assert!(!remaining.contains(&victim), "failed id pruned from mapping");
+    // The other 7 deployments are live and invocable.
+    let results = bed.faas.invoke("federatedlearning", "train", &Json::obj(), false).unwrap();
+    assert_eq!(results.len(), 7);
+}
+
+#[test]
+fn invoke_failure_propagates_with_resource_id() {
+    let (bed, flaky, victim) = flaky_bed();
+    bed.executor.register("img/x", |p: &[u8]| Ok(p.to_vec()));
+    let yaml = edgefaas::coordinator::appconfig::federated_learning_yaml();
+    let mut data = HashMap::new();
+    data.insert("train".to_string(), bed.iot.clone());
+    bed.faas.configure_application(yaml, &data).unwrap();
+    bed.faas
+        .deploy_function("federatedlearning", "train", &FunctionPackage { code: "img/x".into() })
+        .unwrap();
+    flaky.fail_invoke.store(true, Ordering::SeqCst);
+    let err =
+        bed.faas.invoke("federatedlearning", "train", &Json::obj(), false).unwrap_err().to_string();
+    assert!(err.contains("injected invoke failure"), "{err}");
+    let _ = victim;
+}
+
+#[test]
+fn unreachable_monitoring_filters_resource_out() {
+    let (bed, flaky, victim) = flaky_bed();
+    flaky.fail_usage.store(true, Ordering::SeqCst);
+    // Schedule an IoT function over all Pis: the scrape-failing one must be
+    // dropped by phase 1 (fail-safe: no metrics, no placement).
+    let yaml = edgefaas::coordinator::appconfig::federated_learning_yaml();
+    let mut data = HashMap::new();
+    data.insert("train".to_string(), bed.iot.clone());
+    let plan = bed.faas.configure_application(yaml, &data).unwrap();
+    assert_eq!(plan["train"].len(), 7);
+    assert!(!plan["train"].contains(&victim));
+}
+
+#[test]
+fn workflow_fails_cleanly_when_a_stage_errors() {
+    let bed = paper_testbed(Arc::new(RealClock::new()));
+    let faas = Arc::clone(&bed.faas);
+    bed.executor.register("img/ok", |_: &[u8]| {
+        Ok(br#"{"outputs":[]}"#.to_vec())
+    });
+    bed.executor.register("img/boom", |_: &[u8]| anyhow::bail!("stage exploded"));
+    let yaml = "\
+application: fragile
+entrypoint: a
+dag:
+  - name: a
+    affinity:
+      nodetype: iot
+      affinitytype: data
+    reduce: auto
+  - name: b
+    dependencies: a
+    affinity:
+      nodetype: edge
+      affinitytype: function
+    reduce: 1
+";
+    let mut data = HashMap::new();
+    data.insert("a".to_string(), vec![bed.iot[0]]);
+    faas.configure_application(yaml, &data).unwrap();
+    faas.deploy_function("fragile", "a", &FunctionPackage { code: "img/ok".into() }).unwrap();
+    faas.deploy_function("fragile", "b", &FunctionPackage { code: "img/boom".into() }).unwrap();
+    let err = faas.run_workflow("fragile", &HashMap::new()).unwrap_err().to_string();
+    assert!(err.contains("stage exploded"), "{err}");
+}
+
+#[test]
+fn capacity_exhaustion_surfaces_as_invocation_error() {
+    let bed = paper_testbed(Arc::new(RealClock::new()));
+    // A function whose sandbox takes 3 GB on a 4 GB Pi: the second
+    // *concurrent* admission must fail (paper: resources are finite).
+    let reg = bed.faas.resource(bed.iot[0]).unwrap();
+    bed.executor.register("img/hold", |_: &[u8]| {
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        Ok(vec![])
+    });
+    reg.handle.deploy("big", "img/hold", 3 << 30, 0, &[]).unwrap();
+    let h = Arc::clone(&reg.handle);
+    let t = std::thread::spawn(move || h.invoke("big", b""));
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let second = reg.handle.invoke("big", b"");
+    assert!(second.is_err(), "no memory for a second sandbox");
+    assert!(t.join().unwrap().is_ok(), "first invocation unaffected");
+    // After the first completes, capacity is back (warm sandbox reused).
+    let third = reg.handle.invoke("big", b"");
+    assert!(third.is_ok());
+}
+
+#[test]
+fn store_full_surfaces_through_virtual_storage() {
+    let bed = paper_testbed(Arc::new(RealClock::new()));
+    let faas = Arc::clone(&bed.faas);
+    faas.create_bucket("fillme", "data", Some(bed.iot[0])).unwrap();
+    // A Pi's store is 64 GB; don't fill it — use a tiny custom resource
+    // instead: emulate by writing one object larger than free capacity.
+    let huge = vec![0u8; 1 << 20];
+    // 64 GB / 1 MiB = 65536 objects — too slow; instead assert the error
+    // path via the store's own capacity check with an oversized single
+    // object on a tiny ObjectStore.
+    let small = edgefaas::objstore::ObjectStore::new(512, "ak", "sk");
+    small.make_bucket("data").unwrap();
+    let err = small.put_object("data", "big", huge).unwrap_err();
+    assert!(matches!(err, edgefaas::objstore::store::StoreError::Full { .. }));
+}

@@ -1,0 +1,278 @@
+//! Property tests over coordinator invariants (hand-rolled, PCG-driven —
+//! proptest is unavailable offline). Each test sweeps hundreds of random
+//! topologies / applications / workloads and asserts structural invariants
+//! of routing, scheduling and storage state.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use edgefaas::backup::DurableKv;
+use edgefaas::cluster::faas::{Executor, FaasBackend, NativeExecutor};
+use edgefaas::cluster::spec::ResourceSpec;
+use edgefaas::coordinator::handle::LocalHandle;
+use edgefaas::coordinator::{
+    Affinity, AffinityType, EdgeFaaS, FunctionConfig, FunctionCreation, Reduce, Requirements,
+    ResourceId,
+};
+use edgefaas::objstore::ObjectStore;
+use edgefaas::simnet::topology::mbps;
+use edgefaas::simnet::{RealClock, Tier, Topology};
+use edgefaas::util::rng::Pcg32;
+
+/// A random 3-tier star-of-stars topology + coordinator.
+/// Returns (faas, iot ids, edge ids, cloud ids).
+fn random_bed(
+    rng: &mut Pcg32,
+) -> (Arc<EdgeFaaS>, Vec<ResourceId>, Vec<ResourceId>, Vec<ResourceId>) {
+    let n_edge = rng.range(1, 4);
+    let n_cloud = rng.range(1, 3);
+    let n_iot = rng.range(1, 10);
+    let mut topo = Topology::new();
+    let clock: Arc<dyn edgefaas::simnet::Clock> = Arc::new(RealClock::new());
+    let executor = Arc::new(NativeExecutor::new());
+
+    let edge_nodes: Vec<usize> =
+        (0..n_edge).map(|i| topo.add_node(format!("e{i}"), Tier::Edge)).collect();
+    let cloud_nodes: Vec<usize> =
+        (0..n_cloud).map(|i| topo.add_node(format!("c{i}"), Tier::Cloud)).collect();
+    let iot_nodes: Vec<usize> =
+        (0..n_iot).map(|i| topo.add_node(format!("p{i}"), Tier::Iot)).collect();
+    for (i, &p) in iot_nodes.iter().enumerate() {
+        let e = edge_nodes[i % n_edge];
+        topo.add_link(p, e, 0.0005 + rng.next_f64() * 0.02, mbps(50.0 + rng.next_f64() * 100.0));
+    }
+    for &e in &edge_nodes {
+        for &c in &cloud_nodes {
+            topo.add_link(e, c, 0.002 + rng.next_f64() * 0.08, mbps(5.0 + rng.next_f64() * 20.0));
+        }
+    }
+    let faas = Arc::new(EdgeFaaS::with_parts(topo, DurableKv::ephemeral(), Arc::clone(&clock)));
+    let mk = |spec: ResourceSpec, node: usize, faas: &EdgeFaaS| -> ResourceId {
+        let backend = Arc::new(FaasBackend::new(
+            spec.clone(),
+            Arc::clone(&executor) as Arc<dyn Executor>,
+            Arc::clone(&clock),
+        ));
+        let store = Arc::new(ObjectStore::new(spec.storage, "ak", "sk"));
+        faas.register(spec, Arc::new(LocalHandle::new(backend, store)), node).unwrap()
+    };
+    let iot: Vec<ResourceId> = iot_nodes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| mk(ResourceSpec::paper_iot(&format!("p{i}")), n, &faas))
+        .collect();
+    let edges: Vec<ResourceId> = edge_nodes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| mk(ResourceSpec::paper_edge(&format!("e{i}")), n, &faas))
+        .collect();
+    let clouds: Vec<ResourceId> = cloud_nodes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| mk(ResourceSpec::paper_cloud(&format!("c{i}")), n, &faas))
+        .collect();
+    (faas, iot, edges, clouds)
+}
+
+fn fc(tier: Tier, at: AffinityType, reduce: Reduce, privacy: bool) -> FunctionConfig {
+    FunctionConfig {
+        name: "f".into(),
+        dependencies: vec![],
+        requirements: Requirements { memory: 64 << 20, gpu: 0, privacy },
+        affinity: Affinity { nodetype: tier, affinitytype: at },
+        reduce,
+    }
+}
+
+/// Invariants of two-phase scheduling across random topologies:
+/// 1. every placement is a registered resource of the requested tier;
+/// 2. reduce=1 yields exactly one instance;
+/// 3. reduce=auto yields <= |upstream| deduplicated instances;
+/// 4. privacy=1 places only on data-holding IoT devices;
+/// 5. the candidate mapping equals the returned placement.
+#[test]
+fn prop_scheduling_invariants() {
+    let mut rng = Pcg32::seeded(0xC0FFEE);
+    for round in 0..150 {
+        let (faas, iot, edges, clouds) = random_bed(&mut rng);
+        let tier = *rng.choose(&[Tier::Iot, Tier::Edge, Tier::Cloud]);
+        let at = *rng.choose(&[AffinityType::Data, AffinityType::Function]);
+        let reduce = if rng.next_bool(0.5) { Reduce::One } else { Reduce::Auto };
+        let privacy = tier == Tier::Iot && rng.next_bool(0.3);
+        let n_up = rng.range(1, iot.len() + 1);
+        let mut upstream = iot.clone();
+        rng.shuffle(&mut upstream);
+        upstream.truncate(n_up);
+        let request = FunctionCreation {
+            app: format!("app{round}"),
+            function: fc(tier, at, reduce, privacy),
+            data_locations: upstream.clone(),
+            dep_locations: upstream.clone(),
+        };
+        let placed = faas.schedule_function(&request).unwrap();
+        let tier_set: HashSet<ResourceId> = match tier {
+            Tier::Iot => iot.iter().copied().collect(),
+            Tier::Edge => edges.iter().copied().collect(),
+            Tier::Cloud => clouds.iter().copied().collect(),
+        };
+        assert!(!placed.is_empty());
+        for &p in &placed {
+            assert!(tier_set.contains(&p), "round {round}: {p} not of tier {tier:?}");
+        }
+        match reduce {
+            Reduce::One => assert_eq!(placed.len(), 1, "round {round}"),
+            Reduce::Auto => {
+                assert!(placed.len() <= upstream.len(), "round {round}");
+                let uniq: HashSet<_> = placed.iter().collect();
+                assert_eq!(uniq.len(), placed.len(), "round {round}: duplicates");
+            }
+        }
+        if privacy {
+            let data_set: HashSet<_> = upstream.iter().collect();
+            for p in &placed {
+                assert!(data_set.contains(p), "round {round}: privacy violated");
+            }
+        }
+        assert_eq!(faas.candidates_of(&request.app, "f").unwrap(), placed);
+    }
+}
+
+/// The locality policy places each upstream's instance at its minimum-
+/// latency candidate (optimality of phase 2 under reduce=auto).
+#[test]
+fn prop_auto_placement_is_latency_optimal() {
+    let mut rng = Pcg32::seeded(0xBEEF);
+    for round in 0..100 {
+        let (faas, iot, edges, _clouds) = random_bed(&mut rng);
+        let anchor = *rng.choose(&iot);
+        let request = FunctionCreation {
+            app: format!("opt{round}"),
+            function: fc(Tier::Edge, AffinityType::Data, Reduce::Auto, false),
+            data_locations: vec![anchor],
+            dep_locations: vec![],
+        };
+        let placed = faas.schedule_function(&request).unwrap();
+        assert_eq!(placed.len(), 1);
+        let chosen_lat = faas.latency(anchor, placed[0]).unwrap();
+        for &e in &edges {
+            let lat = faas.latency(anchor, e).unwrap();
+            assert!(
+                chosen_lat <= lat + 1e-12,
+                "round {round}: chose {} ({chosen_lat}) but {e} is closer ({lat})",
+                placed[0]
+            );
+        }
+    }
+}
+
+/// Storage invariants under random verb sequences: URL-addressed reads
+/// always return the last write; bucket listings match a model map;
+/// deletions are exact.
+#[test]
+fn prop_storage_model_equivalence() {
+    let mut rng = Pcg32::seeded(0xD00D);
+    for round in 0..40 {
+        let (faas, iot, _edges, clouds) = random_bed(&mut rng);
+        let app = format!("s{round}");
+        let mut model: HashMap<(String, String), Vec<u8>> = HashMap::new();
+        let mut buckets: Vec<String> = Vec::new();
+        for step in 0..60 {
+            match rng.next_below(5) {
+                0 => {
+                    let name = format!("bucket-{step}");
+                    let home = if rng.next_bool(0.5) { *rng.choose(&iot) } else { clouds[0] };
+                    faas.create_bucket(&app, &name, Some(home)).unwrap();
+                    buckets.push(name);
+                }
+                1 | 2 if !buckets.is_empty() => {
+                    let b = rng.choose(&buckets).clone();
+                    let obj = format!("o{}", rng.next_below(5));
+                    let data: Vec<u8> = (0..rng.range(1, 64)).map(|_| rng.next_u32() as u8).collect();
+                    let url = faas.put_object(&app, &b, &obj, &data).unwrap();
+                    assert_eq!(url.application, app);
+                    model.insert((b, obj), data);
+                }
+                3 if !model.is_empty() => {
+                    let key = {
+                        let keys: Vec<_> = model.keys().cloned().collect();
+                        rng.choose(&keys).clone()
+                    };
+                    faas.delete_object(&app, &key.0, &key.1).unwrap();
+                    model.remove(&key);
+                }
+                _ if !model.is_empty() => {
+                    // Read-back check for a random live object.
+                    let key = {
+                        let keys: Vec<_> = model.keys().cloned().collect();
+                        rng.choose(&keys).clone()
+                    };
+                    let rid = faas.bucket_resource(&app, &key.0).unwrap();
+                    let url = edgefaas::coordinator::storage::ObjectUrl {
+                        application: app.clone(),
+                        bucket: key.0.clone(),
+                        resource: rid,
+                        object: key.1.clone(),
+                    };
+                    assert_eq!(&faas.get_object(&url).unwrap(), model.get(&key).unwrap());
+                }
+                _ => {}
+            }
+        }
+        // Final listing equivalence per bucket.
+        for b in &buckets {
+            let mut want: Vec<String> = model
+                .keys()
+                .filter(|(bb, _)| bb == b)
+                .map(|(_, o)| o.clone())
+                .collect();
+            want.sort();
+            assert_eq!(faas.list_objects(&app, b).unwrap(), want, "round {round} bucket {b}");
+        }
+        assert_eq!(faas.list_buckets(&app).len(), buckets.len());
+    }
+}
+
+/// Random linear applications: configure + schedule, then verify the plan
+/// respects the DAG (every function placed after its dependencies, on the
+/// declared tier) across random chain lengths and tier assignments.
+#[test]
+fn prop_random_chain_applications_schedule() {
+    let mut rng = Pcg32::seeded(0xFACE);
+    for round in 0..80 {
+        let (faas, iot, edges, clouds) = random_bed(&mut rng);
+        let len = rng.range(2, 6);
+        let mut yaml = format!("application: chain{round}\nentrypoint: f0\ndag:\n");
+        let mut tiers = Vec::new();
+        for i in 0..len {
+            // Monotone tiers iot -> edge -> cloud keep the chain realistic.
+            let tier = match (i, len) {
+                (0, _) => Tier::Iot,
+                (i, l) if i + 1 == l && rng.next_bool(0.7) => Tier::Cloud,
+                _ => *rng.choose(&[Tier::Edge, Tier::Cloud]),
+            };
+            tiers.push(tier);
+            yaml.push_str(&format!(
+                "  - name: f{i}\n{}    affinity:\n      nodetype: {}\n      affinitytype: {}\n    reduce: {}\n",
+                if i > 0 { format!("    dependencies: f{}\n", i - 1) } else { String::new() },
+                tier.name(),
+                if i == 0 { "data" } else { "function" },
+                if rng.next_bool(0.5) { "1" } else { "auto" },
+            ));
+        }
+        let mut data = HashMap::new();
+        let n_src = rng.range(1, iot.len() + 1);
+        data.insert("f0".to_string(), iot[..n_src].to_vec());
+        let plan = faas.configure_application(&yaml, &data).unwrap();
+        assert_eq!(plan.len(), len);
+        for (i, tier) in tiers.iter().enumerate() {
+            let set: &[ResourceId] = match tier {
+                Tier::Iot => &iot,
+                Tier::Edge => &edges,
+                Tier::Cloud => &clouds,
+            };
+            for p in &plan[&format!("f{i}")] {
+                assert!(set.contains(p), "round {round} f{i} placed off-tier");
+            }
+        }
+    }
+}
