@@ -11,7 +11,6 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use edgefaas::coordinator::appconfig::federated_learning_yaml;
-use edgefaas::coordinator::functions::FunctionPackage;
 use edgefaas::runtime::{EngineService, Tensor};
 use edgefaas::simnet::RealClock;
 use edgefaas::testbed::{artifacts_dir, paper_testbed};
@@ -41,11 +40,7 @@ fn main() -> anyhow::Result<()> {
     for f in ["train", "firstaggregation", "secondaggregation"] {
         println!("  {f:<18} -> resources {:?}", plan[f]);
     }
-    let mut packages = HashMap::new();
-    packages.insert("train".into(), FunctionPackage { code: "fl/train".into() });
-    packages.insert("firstaggregation".into(), FunctionPackage { code: "fl/agg1".into() });
-    packages.insert("secondaggregation".into(), FunctionPackage { code: "fl/agg2".into() });
-    faas.deploy_application(fedlearn::APP, &packages)?;
+    faas.deploy_application(fedlearn::APP, &fedlearn::fl_packages())?;
 
     // Federated rounds.
     let mut global = fedlearn::lenet_init(7);
@@ -55,16 +50,7 @@ fn main() -> anyhow::Result<()> {
     for round in 0..rounds {
         // The aggregator "sends the shared model back to each of the edge
         // workers": place the current global model in every worker bucket.
-        let mut urls = Vec::new();
-        for &rid in &bed.iot {
-            let url = faas.put_object(
-                fedlearn::APP,
-                &fedlearn::model_bucket(rid),
-                &format!("global-r{round}.bin"),
-                &global.to_bytes(),
-            )?;
-            urls.push(url.to_string());
-        }
+        let urls = fedlearn::distribute_global(&faas, &bed.iot, round, &global)?;
         let mut entry = HashMap::new();
         entry.insert("train".to_string(), urls);
         let result = faas.run_workflow(fedlearn::APP, &entry)?;

@@ -10,7 +10,6 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use edgefaas::coordinator::appconfig::video_pipeline_yaml;
-use edgefaas::coordinator::functions::FunctionPackage;
 use edgefaas::runtime::EngineService;
 use edgefaas::simnet::RealClock;
 use edgefaas::testbed::{artifacts_dir, paper_testbed};
@@ -51,11 +50,7 @@ fn main() -> anyhow::Result<()> {
         println!("  {stage:<18} -> {:?} ({})", plan[stage], tiers.join(","));
     }
 
-    let mut packages = HashMap::new();
-    for stage in plan.keys() {
-        packages.insert(stage.clone(), FunctionPackage { code: format!("video/{stage}") });
-    }
-    faas.deploy_application(video::APP, &packages)?;
+    faas.deploy_application(video::APP, &video::video_packages())?;
 
     let t0 = std::time::Instant::now();
     let result = faas.run_workflow(video::APP, &HashMap::new())?;

@@ -21,7 +21,7 @@ pub struct Stats {
 impl Stats {
     pub fn of(mut samples: Vec<f64>) -> Stats {
         assert!(!samples.is_empty());
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let n = samples.len();
         let pick = |q: f64| samples[((n as f64 - 1.0) * q).round() as usize];
         Stats {

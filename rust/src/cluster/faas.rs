@@ -86,15 +86,26 @@ impl Executor for NativeExecutor {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FaasError {
-    #[error("function `{0}` already deployed")]
     AlreadyDeployed(String),
-    #[error("function `{0}` not found")]
     NotFound(String),
-    #[error("insufficient resources for `{0}`: {1}")]
     Insufficient(String, String),
 }
+
+impl std::fmt::Display for FaasError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaasError::AlreadyDeployed(n) => write!(f, "function `{n}` already deployed"),
+            FaasError::NotFound(n) => write!(f, "function `{n}` not found"),
+            FaasError::Insufficient(n, why) => {
+                write!(f, "insufficient resources for `{n}`: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FaasError {}
 
 struct Inner {
     functions: HashMap<String, FunctionStatus>,

@@ -49,13 +49,26 @@ pub struct SandboxManager {
     pub idle_timeout: f64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SandboxError {
-    #[error("function `{0}` is not deployed")]
     NotDeployed(String),
-    #[error("resource exhausted: need {need_mem}B mem / {need_gpu} gpu, free {free_mem}B / {free_gpu}")]
     Exhausted { need_mem: u64, need_gpu: u32, free_mem: u64, free_gpu: u32 },
 }
+
+impl std::fmt::Display for SandboxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SandboxError::NotDeployed(n) => write!(f, "function `{n}` is not deployed"),
+            SandboxError::Exhausted { need_mem, need_gpu, free_mem, free_gpu } => write!(
+                f,
+                "resource exhausted: need {need_mem}B mem / {need_gpu} gpu, \
+                 free {free_mem}B / {free_gpu}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SandboxError {}
 
 impl SandboxManager {
     pub fn new(mem_capacity: u64, gpu_capacity: u32) -> Self {

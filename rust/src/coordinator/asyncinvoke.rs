@@ -1,10 +1,14 @@
-//! Asynchronous invocation + load-driven rescheduling.
+//! Asynchronous invocation + load-driven rescheduling — the asynchronous
+//! front-end over the event-driven execution engine.
 //!
 //! §3.2.1: "A function can be invoked synchronously (and wait for the
 //! response), or asynchronously. To invoke a function asynchronously, set
-//! Sync to False." — [`EdgeFaaS::invoke_async`] returns an invocation id
-//! immediately; results are polled (or awaited) through the tracker, the
-//! OpenFaaS async-function pattern.
+//! Sync to False." — [`EdgeFaaS::invoke_async`] submits a job to the
+//! engine's shared worker pool ([`EdgeFaaS::spawn_job`]) and returns an
+//! invocation id immediately; results are polled (or awaited) through the
+//! tracker, the OpenFaaS async-function pattern. Because the job runs on
+//! the same pool as workflow instances, async invocations are subject to
+//! the same worker cap and interleave fairly with in-flight workflow runs.
 //!
 //! §3.1.2 + the NanoLambda comparison (§6: NanoLambda "does not follow the
 //! dynamic changes of system loads ... to reschedule functions" — implying
@@ -89,8 +93,9 @@ impl AsyncTracker {
 }
 
 impl EdgeFaaS {
-    /// Invoke() with Sync=False: fire on a background thread, return the
-    /// invocation id immediately. Results land in `tracker`.
+    /// Invoke() with Sync=False: submit a job to the execution engine's
+    /// worker pool, return the invocation id immediately. Results land in
+    /// `tracker`.
     pub fn invoke_async(
         self: &Arc<Self>,
         tracker: &Arc<AsyncTracker>,
@@ -100,19 +105,15 @@ impl EdgeFaaS {
         invoke_one: bool,
     ) -> InvocationId {
         let id = tracker.begin();
-        let faas = Arc::clone(self);
         let tracker = Arc::clone(tracker);
         let (app, function, payload) = (app.to_string(), function.to_string(), payload.clone());
-        std::thread::Builder::new()
-            .name(format!("async-{id}"))
-            .spawn(move || {
-                let status = match faas.invoke(&app, &function, &payload, invoke_one) {
-                    Ok(results) => AsyncStatus::Done(results),
-                    Err(e) => AsyncStatus::Failed(e.to_string()),
-                };
-                tracker.finish(id, status);
-            })
-            .expect("spawn async invocation");
+        self.spawn_job(move |faas| {
+            let status = match faas.invoke(&app, &function, &payload, invoke_one) {
+                Ok(results) => AsyncStatus::Done(results),
+                Err(e) => AsyncStatus::Failed(e.to_string()),
+            };
+            tracker.finish(id, status);
+        });
         id
     }
 

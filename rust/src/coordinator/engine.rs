@@ -1,0 +1,947 @@
+//! The event-driven execution engine (the dispatch core behind every
+//! invocation front-end).
+//!
+//! The paper positions EdgeFaaS "in the critical-path, acting like a
+//! router" for every invocation (§3.2.1). This module is that router's
+//! execution core: a run queue of in-flight workflow runs whose DAG nodes
+//! fire as dependency-completion events, executed by a shared worker pool
+//! under per-resource admission limits. Both invocation front-ends sit on
+//! top of it:
+//!
+//! * synchronous [`EdgeFaaS::run_workflow`] = [`EdgeFaaS::submit_workflow`]
+//!   + [`EdgeFaaS::wait_workflow`];
+//! * asynchronous `invoke_async` = [`EdgeFaaS::spawn_job`] + tracker id
+//!   (see [`super::asyncinvoke`]).
+//!
+//! The engine is generic over the [`crate::simnet::Clock`] the coordinator
+//! was built with: under a `RealClock` the worker pool gives true wall-clock
+//! parallelism; under a `VirtualClock` the same code path advances virtual
+//! time (the benches' mode). Readiness is decided by dependency completion
+//! with ready sets sorted by topological index, so chain-shaped DAGs (both
+//! paper workflows) fire in the same order under either clock; independent
+//! parallel branches may interleave by completion timing.
+//!
+//! Scheduling decisions interleave across runs: N submitted workflows share
+//! the worker pool and the per-resource slots, so a long run does not
+//! head-of-line-block a short one. Every node/run completion is also
+//! published to [`EdgeFaaS::on_engine_event`] subscribers, which is the hook
+//! `reschedule_function` reacts through mid-run.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::json::Json;
+
+use super::dag::RunState;
+use super::invoker::{parse_outputs, InstanceResult, WorkflowResult};
+use super::resource::{Application, EdgeFaaS, ResourceId};
+
+/// Identifier of one submitted workflow run.
+pub type RunId = u64;
+
+/// Externally visible state of a run.
+#[derive(Debug, Clone)]
+pub enum RunStatus {
+    Running,
+    Done(WorkflowResult),
+    Failed(String),
+}
+
+/// A completion event published to [`EdgeFaaS::on_engine_event`] callbacks.
+#[derive(Debug, Clone)]
+pub enum EngineEvent {
+    /// Every instance of one DAG node finished.
+    NodeCompleted {
+        run: RunId,
+        app: String,
+        function: String,
+        /// Number of placement instances that executed.
+        instances: usize,
+        /// Slowest instance latency, seconds.
+        latency: f64,
+    },
+    /// A whole run drained (successfully or not).
+    RunCompleted { run: RunId, app: String, ok: bool, duration: f64 },
+}
+
+/// One schedulable unit: a single placement instance of a DAG node, or an
+/// opaque job (the async-invoke front-end).
+enum Task {
+    Instance(InstanceTask),
+    Job(Box<dyn FnOnce(&Arc<EdgeFaaS>) + Send + 'static>),
+}
+
+struct InstanceTask {
+    run: RunId,
+    app: String,
+    function: String,
+    /// Index into the node's placement list.
+    instance: usize,
+    resource: ResourceId,
+    inputs: Vec<String>,
+}
+
+/// Bookkeeping for one in-flight workflow run.
+struct RunEntry {
+    app_name: String,
+    app: Arc<Application>,
+    entry_inputs: HashMap<String, Vec<String>>,
+    state: RunState,
+    /// Nodes already fired (guards duplicate entrypoints).
+    fired: HashSet<String>,
+    /// Node -> instances still executing.
+    pending: HashMap<String, usize>,
+    /// Node -> per-instance results collected so far.
+    partial: HashMap<String, Vec<Option<InstanceResult>>>,
+    result: WorkflowResult,
+    /// Tasks enqueued but not yet finished (0 = run drained).
+    open_tasks: usize,
+    started: f64,
+    failed: Option<String>,
+    done: bool,
+}
+
+/// Queue + admission state, under a single lock so slot acquisition and
+/// release cannot deadlock against the pop path.
+struct QueueState {
+    ready: VecDeque<Task>,
+    /// Instances that were popped but found their resource at its admission
+    /// limit; re-scanned whenever a slot frees up.
+    deferred: VecDeque<InstanceTask>,
+    /// Resource -> instances currently executing on it.
+    in_use: HashMap<ResourceId, usize>,
+    /// Live worker threads.
+    workers: usize,
+    /// Workers currently executing a task (the rest are polling or about to
+    /// exit). `workers - busy` is the free capacity `ensure_workers`
+    /// compares against the backlog, so a long-running task never blocks a
+    /// short run from getting a fresh worker.
+    busy: usize,
+}
+
+/// Table of workflow runs plus the retention queue of completed ones.
+struct RunTable {
+    map: HashMap<RunId, RunEntry>,
+    /// Completed runs not yet consumed, oldest first. Bounded by
+    /// [`MAX_FINISHED_RUNS`] so submit-and-forget clients (e.g. a crashed
+    /// REST poller) cannot grow the coordinator's memory without bound.
+    finished: VecDeque<RunId>,
+}
+
+/// Completed-but-unconsumed runs retained before the oldest are evicted.
+pub const MAX_FINISHED_RUNS: usize = 1024;
+
+type EventCallback = Arc<dyn Fn(&EdgeFaaS, &EngineEvent) + Send + Sync>;
+
+/// The shared execution core owned by [`EdgeFaaS`].
+pub(super) struct EngineCore {
+    next_run: AtomicU64,
+    max_workers: AtomicUsize,
+    per_resource_slots: AtomicUsize,
+    queue: Mutex<QueueState>,
+    queue_cv: Condvar,
+    runs: Mutex<RunTable>,
+    done_cv: Condvar,
+    callbacks: Mutex<Vec<EventCallback>>,
+}
+
+/// Default cap on worker threads (lazily spawned, exit when idle).
+pub const DEFAULT_MAX_WORKERS: usize = 16;
+/// Default concurrently-executing instances admitted per resource.
+pub const DEFAULT_PER_RESOURCE_SLOTS: usize = 8;
+
+impl EngineCore {
+    pub(super) fn new() -> EngineCore {
+        EngineCore {
+            next_run: AtomicU64::new(0),
+            max_workers: AtomicUsize::new(DEFAULT_MAX_WORKERS),
+            per_resource_slots: AtomicUsize::new(DEFAULT_PER_RESOURCE_SLOTS),
+            queue: Mutex::new(QueueState {
+                ready: VecDeque::new(),
+                deferred: VecDeque::new(),
+                in_use: HashMap::new(),
+                workers: 0,
+                busy: 0,
+            }),
+            queue_cv: Condvar::new(),
+            runs: Mutex::new(RunTable { map: HashMap::new(), finished: VecDeque::new() }),
+            done_cv: Condvar::new(),
+            callbacks: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn enqueue(&self, tasks: Vec<Task>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let mut q = self.queue.lock().unwrap();
+        for t in tasks {
+            q.ready.push_back(t);
+        }
+        drop(q);
+        self.queue_cv.notify_all();
+    }
+}
+
+enum Popped {
+    Task(Task),
+    /// Nothing queued at all: the worker may exit.
+    Empty,
+    /// Only admission-blocked instances remain: wait for a slot release.
+    Blocked,
+}
+
+fn pop_task(q: &mut QueueState, limit: usize) -> Popped {
+    // Deferred instances first: a slot may have freed since they blocked.
+    for i in 0..q.deferred.len() {
+        let rid = q.deferred[i].resource;
+        if q.in_use.get(&rid).copied().unwrap_or(0) < limit {
+            let t = q.deferred.remove(i).expect("index in bounds");
+            *q.in_use.entry(rid).or_insert(0) += 1;
+            return Popped::Task(Task::Instance(t));
+        }
+    }
+    while let Some(task) = q.ready.pop_front() {
+        match task {
+            Task::Job(j) => return Popped::Task(Task::Job(j)),
+            Task::Instance(t) => {
+                let rid = t.resource;
+                if q.in_use.get(&rid).copied().unwrap_or(0) < limit {
+                    *q.in_use.entry(rid).or_insert(0) += 1;
+                    return Popped::Task(Task::Instance(t));
+                }
+                q.deferred.push_back(t);
+            }
+        }
+    }
+    if q.deferred.is_empty() {
+        Popped::Empty
+    } else {
+        Popped::Blocked
+    }
+}
+
+/// Execute one placement instance: build the invocation envelope, call the
+/// resource gateway, parse the outputs (the invoker's wire format).
+///
+/// A panicking function handler is caught and converted into an instance
+/// error: letting it unwind through the worker would leak the admission
+/// slot and busy/worker counts and leave the run's `open_tasks` stuck above
+/// zero — wedging a synchronous `run_workflow` caller forever.
+fn run_instance(faas: &EdgeFaaS, t: &InstanceTask) -> anyhow::Result<InstanceResult> {
+    let invoked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || -> anyhow::Result<InstanceResult> {
+            let mut envelope = Json::obj();
+            envelope
+                .set("app", t.app.as_str().into())
+                .set("function", t.function.as_str().into())
+                .set("resource", (t.resource as u64).into())
+                .set(
+                    "inputs",
+                    Json::Arr(t.inputs.iter().map(|u| Json::Str(u.clone())).collect()),
+                );
+            let reg = faas.resource(t.resource)?;
+            let qname = EdgeFaaS::qualified(&t.app, &t.function);
+            let (out, latency) = reg.handle.invoke(&qname, envelope.to_string().as_bytes())?;
+            let outputs = parse_outputs(&out)?;
+            Ok(InstanceResult { resource: t.resource, outputs, latency })
+        },
+    ));
+    match invoked {
+        Ok(result) => result,
+        Err(payload) => {
+            let what = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(anyhow::anyhow!("function handler panicked: {what}"))
+        }
+    }
+}
+
+fn engine_worker(faas: Arc<EdgeFaaS>) {
+    loop {
+        let task = {
+            let mut q = faas.engine.queue.lock().unwrap();
+            loop {
+                let limit = faas.engine.per_resource_slots.load(Ordering::Relaxed).max(1);
+                match pop_task(&mut q, limit) {
+                    Popped::Task(t) => {
+                        q.busy += 1;
+                        break Some(t);
+                    }
+                    Popped::Empty => {
+                        q.workers -= 1;
+                        break None;
+                    }
+                    Popped::Blocked => q = faas.engine.queue_cv.wait(q).unwrap(),
+                }
+            }
+        };
+        let Some(task) = task else { return };
+        match task {
+            Task::Job(job) => {
+                // Same containment as run_instance: a panicking job must
+                // not kill the worker and leak the busy/worker counts.
+                let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&faas)));
+                if ran.is_err() {
+                    log::warn!("engine job panicked; worker kept alive");
+                }
+                let mut q = faas.engine.queue.lock().unwrap();
+                q.busy = q.busy.saturating_sub(1);
+            }
+            Task::Instance(t) => {
+                // Fast-drain instances of runs that already failed.
+                let skip = {
+                    let runs = faas.engine.runs.lock().unwrap();
+                    runs.map.get(&t.run).map(|e| e.failed.is_some() || e.done).unwrap_or(true)
+                };
+                let outcome = if skip { None } else { Some(run_instance(&faas, &t)) };
+                faas.complete_instance(&t, outcome);
+                {
+                    let mut q = faas.engine.queue.lock().unwrap();
+                    q.busy = q.busy.saturating_sub(1);
+                    if let Some(n) = q.in_use.get_mut(&t.resource) {
+                        *n = n.saturating_sub(1);
+                        if *n == 0 {
+                            q.in_use.remove(&t.resource);
+                        }
+                    }
+                }
+                faas.engine.queue_cv.notify_all();
+            }
+        }
+    }
+}
+
+impl EdgeFaaS {
+    /// Submit a workflow run to the engine; returns immediately with its
+    /// [`RunId`]. Entry functions fire at once; dependents fire as their
+    /// dependencies complete, interleaved with every other in-flight run.
+    pub fn submit_workflow(
+        self: &Arc<Self>,
+        app: &str,
+        entry_inputs: &HashMap<String, Vec<String>>,
+    ) -> anyhow::Result<RunId> {
+        let application = self.app(app)?;
+        let run = self.engine.next_run.fetch_add(1, Ordering::SeqCst);
+        let mut events = Vec::new();
+        {
+            let mut runs = self.engine.runs.lock().unwrap();
+            let entry = RunEntry {
+                app_name: app.to_string(),
+                app: Arc::clone(&application),
+                entry_inputs: entry_inputs.clone(),
+                state: RunState::new(&application.dag),
+                fired: HashSet::new(),
+                pending: HashMap::new(),
+                partial: HashMap::new(),
+                result: WorkflowResult::default(),
+                open_tasks: 0,
+                started: self.clock.now(),
+                failed: None,
+                done: false,
+            };
+            // Insert before enqueueing so a fast worker finds the entry.
+            runs.map.insert(run, entry);
+            let completed = {
+                let entry = runs.map.get_mut(&run).expect("just inserted");
+                let entrypoints = application.config.entrypoints.clone();
+                let mut batch = Vec::new();
+                for f in &entrypoints {
+                    if let Err(e) = self.fire_node(run, entry, f, &mut batch) {
+                        entry.failed.get_or_insert(e.to_string());
+                        break;
+                    }
+                }
+                self.engine.enqueue(batch);
+                self.check_done(run, entry, &mut events)
+            };
+            if completed {
+                Self::retire_finished(&mut runs, run);
+            }
+        }
+        self.emit_events(&events);
+        self.ensure_workers();
+        Ok(run)
+    }
+
+    /// Block until a run completes (or `timeout_s` elapses; pass
+    /// `f64::INFINITY` to wait forever). Consumes the run's record.
+    pub fn wait_workflow(&self, run: RunId, timeout_s: f64) -> anyhow::Result<WorkflowResult> {
+        let deadline = if timeout_s.is_finite() {
+            Some(
+                std::time::Instant::now()
+                    + std::time::Duration::from_secs_f64(timeout_s.max(0.0)),
+            )
+        } else {
+            None
+        };
+        let mut runs = self.engine.runs.lock().unwrap();
+        loop {
+            let done = match runs.map.get(&run) {
+                None => anyhow::bail!("unknown workflow run {run}"),
+                Some(e) => e.done,
+            };
+            if done {
+                let entry = runs.map.remove(&run).expect("checked above");
+                return match entry.failed {
+                    Some(msg) => Err(anyhow::anyhow!(msg)),
+                    None => Ok(entry.result),
+                };
+            }
+            match deadline {
+                None => runs = self.engine.done_cv.wait(runs).unwrap(),
+                Some(d) => {
+                    let now = std::time::Instant::now();
+                    if now >= d {
+                        anyhow::bail!("workflow run {run} timed out");
+                    }
+                    let (g, _) = self.engine.done_cv.wait_timeout(runs, d - now).unwrap();
+                    runs = g;
+                }
+            }
+        }
+    }
+
+    /// Non-blocking peek at a run (None once consumed by `wait_workflow` /
+    /// `take_run`).
+    pub fn run_status(&self, run: RunId) -> Option<RunStatus> {
+        let runs = self.engine.runs.lock().unwrap();
+        runs.map.get(&run).map(|e| {
+            if !e.done {
+                RunStatus::Running
+            } else if let Some(msg) = &e.failed {
+                RunStatus::Failed(msg.clone())
+            } else {
+                RunStatus::Done(e.result.clone())
+            }
+        })
+    }
+
+    /// Like [`Self::run_status`], but removes the record once the run is
+    /// done (the REST gateway's poll-then-forget semantics).
+    pub fn take_run(&self, run: RunId) -> Option<RunStatus> {
+        let mut runs = self.engine.runs.lock().unwrap();
+        let done = runs.map.get(&run)?.done;
+        if !done {
+            return Some(RunStatus::Running);
+        }
+        let entry = runs.map.remove(&run).expect("checked above");
+        Some(match entry.failed {
+            Some(msg) => RunStatus::Failed(msg),
+            None => RunStatus::Done(entry.result),
+        })
+    }
+
+    /// Run an opaque job on the engine's worker pool (the async-invoke
+    /// front-end; also usable for background coordinator chores).
+    ///
+    /// Jobs may themselves block on further engine progress (a nested
+    /// `invoke_async`, a `run_workflow` issued from a background chore), so
+    /// unlike instances they are never allowed to deadlock against the
+    /// worker cap: when no free worker exists at submission time, one
+    /// worker is spawned past `max_workers` — bounded by one thread per
+    /// outstanding job, the same bound the old thread-per-async-invocation
+    /// design had.
+    pub fn spawn_job(self: &Arc<Self>, job: impl FnOnce(&Arc<EdgeFaaS>) + Send + 'static) {
+        self.engine.enqueue(vec![Task::Job(Box::new(job))]);
+        let overflow = {
+            let mut q = self.engine.queue.lock().unwrap();
+            if q.workers.saturating_sub(q.busy) == 0 {
+                q.workers += 1;
+                true
+            } else {
+                false
+            }
+        };
+        if overflow {
+            let faas = Arc::clone(self);
+            let spawned = std::thread::Builder::new()
+                .name("engine-worker".into())
+                .spawn(move || engine_worker(faas));
+            if spawned.is_err() {
+                self.engine.queue.lock().unwrap().workers -= 1;
+            }
+        } else {
+            self.ensure_workers();
+        }
+    }
+
+    /// Subscribe to engine completion events. Callbacks run on worker
+    /// threads after the engine's locks are released, so they may call back
+    /// into the coordinator (e.g. `reschedule_function` on load changes).
+    pub fn on_engine_event(&self, cb: impl Fn(&EdgeFaaS, &EngineEvent) + Send + Sync + 'static) {
+        self.engine.callbacks.lock().unwrap().push(Arc::new(cb));
+    }
+
+    /// Tune the engine: worker-thread cap and per-resource admission slots
+    /// (both clamped to >= 1). Takes effect for subsequent scheduling
+    /// decisions.
+    pub fn set_engine_limits(&self, max_workers: usize, per_resource_slots: usize) {
+        self.engine.max_workers.store(max_workers.max(1), Ordering::Relaxed);
+        self.engine.per_resource_slots.store(per_resource_slots.max(1), Ordering::Relaxed);
+        self.engine.queue_cv.notify_all();
+    }
+
+    // ------------------------------------------------------------ internal --
+
+    /// Fire one DAG node: route its inputs, record bookkeeping, and collect
+    /// one task per placement instance into `batch`.
+    fn fire_node(
+        &self,
+        run: RunId,
+        entry: &mut RunEntry,
+        fname: &str,
+        batch: &mut Vec<Task>,
+    ) -> anyhow::Result<()> {
+        if !entry.fired.insert(fname.to_string()) {
+            return Ok(());
+        }
+        let app = entry.app_name.clone();
+        let placements = self.candidates_of(&app, fname)?;
+        if placements.is_empty() {
+            anyhow::bail!("function `{app}.{fname}` has no placements");
+        }
+        let per_instance =
+            self.route_inputs(&app, fname, &placements, &entry.entry_inputs, &entry.result)?;
+        entry.result.firing_order.push(fname.to_string());
+        entry.pending.insert(fname.to_string(), placements.len());
+        entry.partial.insert(fname.to_string(), vec![None; placements.len()]);
+        entry.open_tasks += placements.len();
+        for (i, (rid, inputs)) in placements.into_iter().zip(per_instance).enumerate() {
+            batch.push(Task::Instance(InstanceTask {
+                run,
+                app: app.clone(),
+                function: fname.to_string(),
+                instance: i,
+                resource: rid,
+                inputs,
+            }));
+        }
+        Ok(())
+    }
+
+    /// Process one finished (or skipped) instance.
+    ///
+    /// Two lock phases with the node-completion event emitted *between*
+    /// them: subscribers observe `NodeCompleted` before the node's
+    /// dependents are scheduled, so a callback (e.g. one invoking
+    /// `reschedule_function` against fresh monitoring data) can still
+    /// influence where the next stage lands.
+    fn complete_instance(
+        self: &Arc<Self>,
+        task: &InstanceTask,
+        outcome: Option<anyhow::Result<InstanceResult>>,
+    ) {
+        // Phase 1: record the instance; detect node completion.
+        let mut node_events = Vec::new();
+        let mut node_done = false;
+        {
+            let mut runs = self.engine.runs.lock().unwrap();
+            let Some(entry) = runs.map.get_mut(&task.run) else { return };
+            entry.open_tasks = entry.open_tasks.saturating_sub(1);
+            match outcome {
+                None => {} // skipped: the run had already failed
+                Some(Ok(r)) => {
+                    if entry.failed.is_none() {
+                        if let Some(slots) = entry.partial.get_mut(&task.function) {
+                            slots[task.instance] = Some(r);
+                        }
+                        node_done = match entry.pending.get_mut(&task.function) {
+                            Some(p) => {
+                                *p -= 1;
+                                *p == 0
+                            }
+                            None => false,
+                        };
+                        if node_done {
+                            entry.pending.remove(&task.function);
+                            let slots = entry.partial.remove(&task.function).unwrap_or_default();
+                            let instances: Vec<InstanceResult> =
+                                slots.into_iter().flatten().collect();
+                            let latency =
+                                instances.iter().map(|i| i.latency).fold(0.0, f64::max);
+                            node_events.push(EngineEvent::NodeCompleted {
+                                run: task.run,
+                                app: entry.app_name.clone(),
+                                function: task.function.clone(),
+                                instances: instances.len(),
+                                latency,
+                            });
+                            entry.result.functions.insert(task.function.clone(), instances);
+                        }
+                    }
+                }
+                Some(Err(e)) => {
+                    let msg = format!(
+                        "workflow `{}` function `{}` on resource {}: {e}",
+                        entry.app_name, task.function, task.resource
+                    );
+                    log::warn!("{msg}");
+                    entry.failed.get_or_insert(msg);
+                    entry.pending.remove(&task.function);
+                    entry.partial.remove(&task.function);
+                }
+            }
+        }
+        self.emit_events(&node_events);
+
+        // Phase 2: fire newly-ready dependents (sorted by topological index
+        // for deterministic firing orders) and detect run completion.
+        let mut run_events = Vec::new();
+        {
+            let mut runs = self.engine.runs.lock().unwrap();
+            let completed = match runs.map.get_mut(&task.run) {
+                None => false,
+                Some(entry) => {
+                    if node_done && entry.failed.is_none() {
+                        let application = Arc::clone(&entry.app);
+                        let mut ready = entry.state.complete(&application.dag, &task.function);
+                        ready.sort_by_key(|n| {
+                            application
+                                .dag
+                                .topo_order
+                                .iter()
+                                .position(|x| x == n)
+                                .unwrap_or(usize::MAX)
+                        });
+                        let mut batch = Vec::new();
+                        for f in &ready {
+                            if let Err(e) = self.fire_node(task.run, entry, f, &mut batch) {
+                                entry.failed.get_or_insert(e.to_string());
+                                break;
+                            }
+                        }
+                        self.engine.enqueue(batch);
+                    }
+                    self.check_done(task.run, entry, &mut run_events)
+                }
+            };
+            if completed {
+                Self::retire_finished(&mut runs, task.run);
+            }
+        }
+        if run_events.iter().any(|e| matches!(e, EngineEvent::RunCompleted { .. })) {
+            self.engine.done_cv.notify_all();
+        }
+        self.emit_events(&run_events);
+        self.ensure_workers();
+    }
+
+    /// Mark a drained run done; returns true on the completing transition.
+    fn check_done(&self, run: RunId, entry: &mut RunEntry, events: &mut Vec<EngineEvent>) -> bool {
+        if !entry.done && entry.open_tasks == 0 {
+            entry.done = true;
+            entry.result.duration = self.clock.now() - entry.started;
+            events.push(EngineEvent::RunCompleted {
+                run,
+                app: entry.app_name.clone(),
+                ok: entry.failed.is_none(),
+                duration: entry.result.duration,
+            });
+            return true;
+        }
+        false
+    }
+
+    /// Record a just-completed run in the retention queue, evicting the
+    /// oldest completed-but-unconsumed runs beyond [`MAX_FINISHED_RUNS`].
+    /// (Runs consumed by `wait_workflow`/`take_run` leave stale ids behind;
+    /// those pop harmlessly here.)
+    fn retire_finished(runs: &mut RunTable, run: RunId) {
+        while runs.finished.len() >= MAX_FINISHED_RUNS {
+            let Some(old) = runs.finished.pop_front() else { break };
+            if runs.map.get(&old).map(|e| e.done).unwrap_or(false) {
+                runs.map.remove(&old);
+            }
+        }
+        runs.finished.push_back(run);
+    }
+
+    fn emit_events(&self, events: &[EngineEvent]) {
+        if events.is_empty() {
+            return;
+        }
+        let cbs: Vec<EventCallback> = self.engine.callbacks.lock().unwrap().clone();
+        for ev in events {
+            for cb in &cbs {
+                cb(self, ev);
+            }
+        }
+    }
+
+    /// Spawn worker threads up to the cap, one per pending task. Workers
+    /// exit when the queue drains, so an idle coordinator holds no threads.
+    fn ensure_workers(self: &Arc<Self>) {
+        loop {
+            {
+                let mut q = self.engine.queue.lock().unwrap();
+                let limit = self.engine.per_resource_slots.load(Ordering::Relaxed).max(1);
+                // Admission-blocked deferred instances are not runnable
+                // demand — a thread spawned for them could only park on the
+                // condvar until a slot frees (and an existing worker will
+                // pick them up then).
+                let admissible_deferred = q
+                    .deferred
+                    .iter()
+                    .filter(|t| q.in_use.get(&t.resource).copied().unwrap_or(0) < limit)
+                    .count();
+                let pending = q.ready.len() + admissible_deferred;
+                let max = self.engine.max_workers.load(Ordering::Relaxed).max(1);
+                // Compare the backlog against *free* capacity: workers stuck
+                // in a long task must not stop a short run from getting a
+                // fresh thread (no head-of-line blocking across runs).
+                let available = q.workers.saturating_sub(q.busy);
+                if q.workers >= max || available >= pending {
+                    return;
+                }
+                q.workers += 1;
+            }
+            let faas = Arc::clone(self);
+            let spawned = std::thread::Builder::new()
+                .name("engine-worker".into())
+                .spawn(move || engine_worker(faas));
+            if spawned.is_err() {
+                self.engine.queue.lock().unwrap().workers -= 1;
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::functions::FunctionPackage;
+    use crate::simnet::{RealClock, VirtualClock};
+    use crate::testbed::{paper_testbed, TestBed};
+    use std::sync::atomic::AtomicUsize;
+
+    /// A two-stage chain app: `gen` on the first two Pis -> `sum` on an
+    /// edge, with counting handlers that thread a run tag through object
+    /// URLs so concurrent runs are distinguishable.
+    fn chain_bed(clock: Arc<dyn crate::simnet::Clock>) -> TestBed {
+        let b = paper_testbed(clock);
+        let faas = Arc::clone(&b.faas);
+        let yaml = "\
+application: chain
+entrypoint: gen
+dag:
+  - name: gen
+    affinity:
+      nodetype: iot
+      affinitytype: data
+    reduce: auto
+  - name: sum
+    dependencies: gen
+    affinity:
+      nodetype: edge
+      affinitytype: function
+    reduce: 1
+";
+        let mut data = HashMap::new();
+        data.insert("gen".to_string(), vec![b.iot[0], b.iot[1]]);
+        faas.configure_application(yaml, &data).unwrap();
+        faas.create_bucket("chain", "work", Some(b.edges[0])).unwrap();
+        {
+            let faas = Arc::clone(&faas);
+            b.executor.register("img/gen", move |payload: &[u8]| {
+                let v = crate::util::json::parse(std::str::from_utf8(payload)?)?;
+                let rid = v.get("resource").unwrap().as_u64().unwrap();
+                // Entry inputs carry the run tag (one URL-ish string).
+                let tag = v
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .and_then(|a| a.first())
+                    .and_then(Json::as_str)
+                    .unwrap_or("r?")
+                    .rsplit('/')
+                    .next()
+                    .unwrap_or("r?")
+                    .to_string();
+                let obj = format!("{tag}-gen-{rid}.bin");
+                let url = faas.put_object("chain", "work", &obj, tag.as_bytes())?;
+                let mut out = Json::obj();
+                out.set("outputs", Json::Arr(vec![Json::Str(url.to_string())]));
+                Ok(out.to_string().into_bytes())
+            });
+        }
+        {
+            let faas = Arc::clone(&faas);
+            b.executor.register("img/sum", move |payload: &[u8]| {
+                let v = crate::util::json::parse(std::str::from_utf8(payload)?)?;
+                let inputs = v.get("inputs").and_then(Json::as_arr).unwrap_or(&[]).to_vec();
+                let mut tags: Vec<String> = Vec::new();
+                for u in &inputs {
+                    let data = faas.get_object_url(u.as_str().unwrap())?;
+                    tags.push(String::from_utf8_lossy(&data).to_string());
+                }
+                tags.sort();
+                tags.dedup();
+                anyhow::ensure!(tags.len() == 1, "inputs from mixed runs: {tags:?}");
+                let obj = format!("{}-sum-n{}.bin", tags[0], inputs.len());
+                let url = faas.put_object("chain", "work", &obj, tags[0].as_bytes())?;
+                let mut out = Json::obj();
+                out.set("outputs", Json::Arr(vec![Json::Str(url.to_string())]));
+                Ok(out.to_string().into_bytes())
+            });
+        }
+        faas.deploy_function("chain", "gen", &FunctionPackage { code: "img/gen".into() })
+            .unwrap();
+        faas.deploy_function("chain", "sum", &FunctionPackage { code: "img/sum".into() })
+            .unwrap();
+        b
+    }
+
+    fn entry_for(run_tag: &str) -> HashMap<String, Vec<String>> {
+        // Two pseudo-URL entry inputs; routing sends one to each gen
+        // instance (parsing requires app/bucket/rid/object shape).
+        let mut m = HashMap::new();
+        m.insert(
+            "gen".to_string(),
+            vec![format!("chain/work/0/{run_tag}"), format!("chain/work/1/{run_tag}")],
+        );
+        m
+    }
+
+    #[test]
+    fn submit_then_wait_runs_the_dag() {
+        let b = chain_bed(Arc::new(RealClock::new()));
+        let run = b.faas.submit_workflow("chain", &entry_for("r0")).unwrap();
+        let result = b.faas.wait_workflow(run, 10.0).unwrap();
+        assert_eq!(result.firing_order, vec!["gen", "sum"]);
+        assert_eq!(result.functions["gen"].len(), 2);
+        assert_eq!(result.functions["sum"].len(), 1);
+        assert!(result.functions["sum"][0].outputs[0].contains("r0-sum-n2"));
+        // The record was consumed.
+        assert!(b.faas.run_status(run).is_none());
+        assert!(b.faas.wait_workflow(run, 0.1).is_err());
+    }
+
+    #[test]
+    fn concurrent_runs_interleave_and_stay_isolated() {
+        for clock in [
+            Arc::new(RealClock::new()) as Arc<dyn crate::simnet::Clock>,
+            Arc::new(VirtualClock::new()) as Arc<dyn crate::simnet::Clock>,
+        ] {
+            let b = chain_bed(clock);
+            let runs: Vec<(String, RunId)> = (0..6)
+                .map(|i| {
+                    let tag = format!("r{i}");
+                    let id = b.faas.submit_workflow("chain", &entry_for(&tag)).unwrap();
+                    (tag, id)
+                })
+                .collect();
+            for (tag, id) in runs {
+                let result = b.faas.wait_workflow(id, 30.0).unwrap();
+                let out = &result.functions["sum"][0].outputs[0];
+                assert!(
+                    out.contains(&format!("{tag}-sum-n2")),
+                    "run {tag} got cross-contaminated: {out}"
+                );
+                assert_eq!(result.firing_order, vec!["gen", "sum"]);
+            }
+        }
+    }
+
+    #[test]
+    fn per_resource_admission_limit_is_enforced() {
+        let b = chain_bed(Arc::new(RealClock::new()));
+        b.faas.set_engine_limits(16, 1);
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        {
+            let (live, peak) = (Arc::clone(&live), Arc::clone(&peak));
+            b.executor.register("img/busy", move |_: &[u8]| {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                live.fetch_sub(1, Ordering::SeqCst);
+                Ok(br#"{"outputs":[]}"#.to_vec())
+            });
+        }
+        // A single-function app pinned to one Pi.
+        let yaml = "\
+application: busy
+entrypoint: f
+dag:
+  - name: f
+    affinity:
+      nodetype: iot
+      affinitytype: data
+    reduce: auto
+";
+        let mut data = HashMap::new();
+        data.insert("f".to_string(), vec![b.iot[0]]);
+        b.faas.configure_application(yaml, &data).unwrap();
+        b.faas.deploy_function("busy", "f", &FunctionPackage { code: "img/busy".into() }).unwrap();
+        let ids: Vec<RunId> = (0..5)
+            .map(|_| b.faas.submit_workflow("busy", &HashMap::new()).unwrap())
+            .collect();
+        for id in ids {
+            b.faas.wait_workflow(id, 30.0).unwrap();
+        }
+        assert_eq!(
+            peak.load(Ordering::SeqCst),
+            1,
+            "admission limit of 1 must serialize instances on the resource"
+        );
+    }
+
+    #[test]
+    fn events_fire_and_allow_midrun_rescheduling() {
+        let b = chain_bed(Arc::new(RealClock::new()));
+        let nodes = Arc::new(Mutex::new(Vec::<String>::new()));
+        let runs_done = Arc::new(AtomicUsize::new(0));
+        // Mid-run reaction: when `gen` completes, migrate `sum` to the other
+        // edge before it fires (the reschedule_function hook point).
+        let target = b.edges[1];
+        b.faas
+            .resource(target)
+            .unwrap()
+            .handle
+            .deploy("chain.sum", "img/sum", 128 << 20, 0, &[])
+            .unwrap();
+        {
+            let nodes = Arc::clone(&nodes);
+            let runs_done = Arc::clone(&runs_done);
+            b.faas.on_engine_event(move |faas, ev| match ev {
+                EngineEvent::NodeCompleted { function, .. } => {
+                    nodes.lock().unwrap().push(function.clone());
+                    if function == "gen" {
+                        faas.set_candidates("chain", "sum", vec![target]).unwrap();
+                    }
+                }
+                EngineEvent::RunCompleted { ok, .. } => {
+                    assert!(ok);
+                    runs_done.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+        }
+        let run = b.faas.submit_workflow("chain", &entry_for("ev")).unwrap();
+        let result = b.faas.wait_workflow(run, 10.0).unwrap();
+        assert_eq!(result.functions["sum"][0].resource, target, "sum moved mid-run");
+        assert_eq!(*nodes.lock().unwrap(), vec!["gen", "sum"]);
+        assert_eq!(runs_done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn failed_stage_surfaces_the_handler_error() {
+        let b = chain_bed(Arc::new(RealClock::new()));
+        b.executor.register("img/sum", |_: &[u8]| anyhow::bail!("sum exploded"));
+        let bad = b.faas.submit_workflow("chain", &entry_for("bad")).unwrap();
+        let err = b.faas.wait_workflow(bad, 10.0).unwrap_err().to_string();
+        assert!(err.contains("sum exploded"), "{err}");
+    }
+
+    #[test]
+    fn unknown_app_and_unknown_run_error() {
+        let b = chain_bed(Arc::new(RealClock::new()));
+        assert!(b.faas.submit_workflow("ghost", &HashMap::new()).is_err());
+        assert!(b.faas.wait_workflow(999_999, 0.05).is_err());
+        assert!(b.faas.run_status(999_999).is_none());
+    }
+}

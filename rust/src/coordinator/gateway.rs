@@ -15,6 +15,9 @@
 //! DELETE /apps/{app}/functions/{fn}     delete_function
 //! POST   /apps/{app}/invoke/{fn}        invoke  (JSON body; ?one=true)
 //! POST   /apps/{app}/run                run_workflow {entry_inputs}
+//!                                       (?async=true -> {run} id, poll below)
+//! GET    /runs/{id}                     run status; a finished run is
+//!                                       returned once, then forgotten
 //! PUT    /apps/{app}/buckets/{bucket}   create_bucket (?locality=<rid>)
 //! DELETE /apps/{app}/buckets/{bucket}   delete_bucket
 //! GET    /apps/{app}/buckets            list_buckets
@@ -26,24 +29,31 @@
 //! GET    /healthz
 //! ```
 
-use std::collections::HashMap;
-use std::sync::Arc;
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
 
 use crate::util::http::{Handler, Request, Response, Server};
 use crate::util::json::Json;
 
+use super::engine::RunStatus;
 use super::functions::FunctionPackage;
+use super::invoker::WorkflowResult;
 use super::resource::EdgeFaaS;
 use super::storage::ObjectUrl;
 
 /// HTTP facade over the coordinator.
 pub struct EdgeFaasGateway {
     faas: Arc<EdgeFaaS>,
+    /// Run ids submitted through `?async=true`. `GET /runs/{id}` serves
+    /// only these: engine run ids are a guessable global sequence also used
+    /// by synchronous `run_workflow` callers, and a stray poll must not be
+    /// able to consume (steal) a sync caller's pending result.
+    async_runs: Mutex<HashSet<u64>>,
 }
 
 impl EdgeFaasGateway {
     pub fn new(faas: Arc<EdgeFaaS>) -> Self {
-        EdgeFaasGateway { faas }
+        EdgeFaasGateway { faas, async_runs: Mutex::new(HashSet::new()) }
     }
 
     /// Serve on an ephemeral local port.
@@ -78,6 +88,33 @@ impl EdgeFaasGateway {
 
     fn ok_or_500(r: anyhow::Result<Response>) -> Response {
         r.unwrap_or_else(|e| Response::error(e.to_string()))
+    }
+
+    /// JSON shape shared by the sync `run` response and `GET /runs/{id}`.
+    fn workflow_result_json(result: &WorkflowResult) -> Json {
+        let mut o = Json::obj();
+        o.set("duration", result.duration.into());
+        o.set(
+            "firing_order",
+            Json::Arr(result.firing_order.iter().map(|f| Json::Str(f.clone())).collect()),
+        );
+        let mut fns = Json::obj();
+        for (f, instances) in &result.functions {
+            let mut arr = Vec::new();
+            for i in instances {
+                let mut io = Json::obj();
+                io.set("resource", (i.resource as u64).into())
+                    .set("latency", i.latency.into())
+                    .set(
+                        "outputs",
+                        Json::Arr(i.outputs.iter().map(|u| Json::Str(u.clone())).collect()),
+                    );
+                arr.push(io);
+            }
+            fns.set(f, Json::Arr(arr));
+        }
+        o.set("functions", fns);
+        o
     }
 }
 
@@ -141,28 +178,47 @@ impl Handler for EdgeFaasGateway {
                         }
                     }
                 }
-                let result = self.faas.run_workflow(app, &entry_inputs)?;
-                let mut o = Json::obj();
-                o.set("duration", result.duration.into());
-                let mut fns = Json::obj();
-                for (f, instances) in &result.functions {
-                    let mut arr = Vec::new();
-                    for i in instances {
-                        let mut io = Json::obj();
-                        io.set("resource", (i.resource as u64).into())
-                            .set("latency", i.latency.into())
-                            .set(
-                                "outputs",
-                                Json::Arr(
-                                    i.outputs.iter().map(|u| Json::Str(u.clone())).collect(),
-                                ),
-                            );
-                        arr.push(io);
-                    }
-                    fns.set(f, Json::Arr(arr));
+                // Async submission: hand back the engine run id immediately.
+                if req.query.get("async").map(|v| v == "true").unwrap_or(false) {
+                    let run = self.faas.submit_workflow(app, &entry_inputs)?;
+                    self.async_runs.lock().unwrap().insert(run);
+                    let mut o = Json::obj();
+                    o.set("run", run.into());
+                    return Ok(Response::json(202, &o));
                 }
-                o.set("functions", fns);
-                Ok(Response::json(200, &o))
+                let result = self.faas.run_workflow(app, &entry_inputs)?;
+                Ok(Response::json(200, &Self::workflow_result_json(&result)))
+            })()),
+            ("GET", ["runs", id]) => Self::ok_or_500((|| {
+                let run: u64 = id.parse().map_err(|_| anyhow::anyhow!("bad run id `{id}`"))?;
+                // Only runs this gateway submitted asynchronously are
+                // pollable (see the `async_runs` field).
+                if !self.async_runs.lock().unwrap().contains(&run) {
+                    return Ok(Response::not_found());
+                }
+                let status = self.faas.take_run(run);
+                if !matches!(&status, Some(RunStatus::Running)) {
+                    self.async_runs.lock().unwrap().remove(&run);
+                }
+                match status {
+                    None => Ok(Response::not_found()),
+                    Some(RunStatus::Running) => {
+                        let mut o = Json::obj();
+                        o.set("status", "running".into());
+                        Ok(Response::json(200, &o))
+                    }
+                    Some(RunStatus::Failed(msg)) => {
+                        let mut o = Json::obj();
+                        o.set("status", "failed".into()).set("error", msg.as_str().into());
+                        Ok(Response::json(200, &o))
+                    }
+                    Some(RunStatus::Done(result)) => {
+                        let mut o = Json::obj();
+                        o.set("status", "done".into())
+                            .set("result", Self::workflow_result_json(&result));
+                        Ok(Response::json(200, &o))
+                    }
+                }
             })()),
             ("PUT", ["apps", app, "buckets", bucket]) => Self::ok_or_500((|| {
                 let locality = req.query.get("locality").and_then(|v| v.parse().ok());
@@ -270,6 +326,52 @@ mod tests {
         assert_eq!(resp.status, 200);
         let arr = resp.json_body().unwrap();
         assert_eq!(arr.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn async_run_submits_and_polls_through_the_engine() {
+        let (server, bed) = served();
+        let addr = server.addr();
+        // A single-function app with a slow echo handler.
+        bed.executor.register("img/slow-echo", |_: &[u8]| {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            Ok(br#"{"outputs":[]}"#.to_vec())
+        });
+        let yaml = "\
+application: asyncdemo
+entrypoint: f
+dag:
+  - name: f
+    affinity:
+      nodetype: edge
+      affinitytype: data
+    reduce: 1
+";
+        let mut data = HashMap::new();
+        data.insert("f".to_string(), vec![bed.iot[0]]);
+        bed.faas.configure_application(yaml, &data).unwrap();
+        bed.faas
+            .deploy_function("asyncdemo", "f", &FunctionPackage { code: "img/slow-echo".into() })
+            .unwrap();
+
+        let resp =
+            http::request(&addr, "POST", "/apps/asyncdemo/run?async=true", &[], &[]).unwrap();
+        assert_eq!(resp.status, 202, "{}", resp.body_str().unwrap_or(""));
+        let run = resp.json_body().unwrap().get("run").unwrap().as_u64().unwrap();
+
+        // Poll until done; the finished record is consumed (next GET: 404).
+        let mut status = String::new();
+        for _ in 0..200 {
+            let resp = http::get(&addr, &format!("/runs/{run}")).unwrap();
+            assert_eq!(resp.status, 200);
+            status = resp.json_body().unwrap().req_str("status").unwrap().to_string();
+            if status != "running" {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(status, "done");
+        assert_eq!(http::get(&addr, &format!("/runs/{run}")).unwrap().status, 404);
     }
 
     #[test]

@@ -1,10 +1,14 @@
-//! Workflow invocation + chaining.
+//! Workflow invocation + chaining — the synchronous front-end over the
+//! event-driven execution engine.
 //!
 //! "One function invokes the next function in the application is done
 //! through the EdgeFaaS which has the information of the next function and
-//! invokes from there" (§3.2.1). The invoker walks the application DAG:
-//! entry functions fire on all their placements, and as instances complete
-//! (notify_finish), dependents whose dependencies are all done fire next.
+//! invokes from there" (§3.2.1). Entry functions fire on all their
+//! placements, and as instances complete (notify_finish), dependents whose
+//! dependencies are all done fire next. The DAG walk itself lives in
+//! [`super::engine`]; [`EdgeFaaS::run_workflow`] is submit + await, so a
+//! synchronous caller shares the run queue, worker pool and per-resource
+//! admission limits with every other in-flight run.
 //!
 //! Data flows by object URL: every function instance receives an envelope
 //!
@@ -20,9 +24,9 @@
 //! barrier of the FL workflow).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::util::json::Json;
-use crate::util::threadpool::scoped_map;
 
 use super::resource::{EdgeFaaS, ResourceId};
 
@@ -40,6 +44,12 @@ pub struct InstanceResult {
 pub struct WorkflowResult {
     /// function -> instance results, in placement order.
     pub functions: HashMap<String, Vec<InstanceResult>>,
+    /// DAG nodes in the order the engine fired them. Nodes fire on
+    /// dependency completion with ready sets sorted by topological index,
+    /// so chain-shaped DAGs (both paper workflows) yield a fully
+    /// deterministic order; DAGs with independent parallel branches may
+    /// interleave branches differently across runs under wall-clock time.
+    pub firing_order: Vec<String>,
     /// Wall-clock (or virtual) duration of the run, seconds.
     pub duration: f64,
 }
@@ -60,69 +70,28 @@ impl WorkflowResult {
 }
 
 impl EdgeFaaS {
-    /// Run a full workflow: invoke the entrypoints and chain the DAG until
-    /// every function has completed. `entry_inputs` provides initial object
-    /// URLs per entry function (empty when sources generate their own data).
+    /// Run a full workflow synchronously: invoke the entrypoints and chain
+    /// the DAG until every function has completed. `entry_inputs` provides
+    /// initial object URLs per entry function (empty when sources generate
+    /// their own data).
+    ///
+    /// Front-end over the engine: equivalent to
+    /// [`submit_workflow`](Self::submit_workflow) +
+    /// [`wait_workflow`](Self::wait_workflow), and therefore safe to call
+    /// from many threads at once — the runs interleave.
     pub fn run_workflow(
-        &self,
+        self: &Arc<Self>,
         app: &str,
         entry_inputs: &HashMap<String, Vec<String>>,
     ) -> anyhow::Result<WorkflowResult> {
-        let application = self.app(app)?;
-        let dag = &application.dag;
-        let start = self.clock.now();
-        let mut state = super::dag::RunState::new(dag);
-        let mut result = WorkflowResult::default();
-
-        // Entry functions: all entrypoints are invoked at the same time.
-        let mut ready: Vec<String> = application.config.entrypoints.clone();
-        while !ready.is_empty() {
-            let mut next_ready = Vec::new();
-            for fname in ready.drain(..) {
-                if state.is_done(&fname) {
-                    continue;
-                }
-                let placements = self.candidates_of(app, &fname)?;
-                // Gather inputs per instance by locality routing.
-                let per_instance =
-                    self.route_inputs(app, &fname, &placements, entry_inputs, &result)?;
-                let work: Vec<(ResourceId, Vec<String>)> =
-                    placements.iter().cloned().zip(per_instance).collect();
-                let qname_fn = fname.clone();
-                let instances: Vec<anyhow::Result<InstanceResult>> =
-                    scoped_map(work, 8, |(rid, inputs)| {
-                        let mut envelope = Json::obj();
-                        envelope
-                            .set("app", app.into())
-                            .set("function", qname_fn.as_str().into())
-                            .set("resource", (rid as u64).into())
-                            .set(
-                                "inputs",
-                                Json::Arr(inputs.iter().map(|u| Json::Str(u.clone())).collect()),
-                            );
-                        let reg = self.resource(rid)?;
-                        let qname = Self::qualified(app, &qname_fn);
-                        let (out, latency) =
-                            reg.handle.invoke(&qname, envelope.to_string().as_bytes())?;
-                        let outputs = parse_outputs(&out)?;
-                        Ok(InstanceResult { resource: rid, outputs, latency })
-                    });
-                let instances: Vec<InstanceResult> =
-                    instances.into_iter().collect::<anyhow::Result<_>>()?;
-                result.functions.insert(fname.clone(), instances);
-                // notify_finish: mark complete, collect newly-ready deps.
-                next_ready.extend(state.complete(dag, &fname));
-            }
-            ready = next_ready;
-        }
-        result.duration = self.clock.now() - start;
-        Ok(result)
+        let run = self.submit_workflow(app, entry_inputs)?;
+        self.wait_workflow(run, f64::INFINITY)
     }
 
     /// Compute each instance's input URLs: entry inputs are split by the
     /// bucket-owning resource when possible; dependency outputs flow to the
     /// network-closest dependent instance.
-    fn route_inputs(
+    pub(super) fn route_inputs(
         &self,
         app: &str,
         fname: &str,
@@ -185,7 +154,7 @@ impl EdgeFaaS {
 }
 
 /// Parse a function's response envelope: `{"outputs": ["url", ...]}`.
-fn parse_outputs(raw: &[u8]) -> anyhow::Result<Vec<String>> {
+pub(super) fn parse_outputs(raw: &[u8]) -> anyhow::Result<Vec<String>> {
     if raw.is_empty() {
         return Ok(Vec::new());
     }
@@ -261,6 +230,11 @@ mod tests {
         assert_eq!(result.functions["train"].len(), 8);
         assert_eq!(result.functions["firstaggregation"].len(), 2);
         assert_eq!(result.functions["secondaggregation"].len(), 1);
+        // The engine fired the chain in dependency order.
+        assert_eq!(
+            result.firing_order,
+            vec!["train", "firstaggregation", "secondaggregation"]
+        );
         // Locality routing: each edge aggregator got exactly its set's 4
         // models (encoded in the object name).
         for inst in &result.functions["firstaggregation"] {

@@ -17,8 +17,18 @@
 //! | 3.2.3 function scheduling    | [`scheduler`] |
 //! | 3.3.1 storage virtualization | [`storage`]   |
 //! | 3.3.2 data placement         | [`placement`] |
-//! | workflow chaining            | [`invoker`]   |
+//! | execution core               | [`engine`] (event-driven run queue, admission limits) |
+//! | sync workflow front-end      | [`invoker`] (`run_workflow` = submit + await) |
+//! | async front-end              | [`asyncinvoke`] (`invoke_async` = job + tracker id) |
 //! | unified REST gateway         | [`gateway`]   |
+//!
+//! Every invocation path — synchronous workflow runs, asynchronous function
+//! calls, and the REST gateway's `run`/`runs` endpoints — submits through
+//! the single [`engine`] core, which owns the run queue of in-flight
+//! workflows, fires DAG nodes as dependency-completion events, and enforces
+//! per-resource admission limits. The engine is clock-generic: the same
+//! dispatch code runs under wall-clock time (examples, gateways) and simnet
+//! virtual time (figure benches).
 //!
 //! The coordinator sees resources only through the [`handle::ResourceHandle`]
 //! trait, so the same scheduling/placement code runs against in-process
@@ -27,6 +37,7 @@
 pub mod appconfig;
 pub mod asyncinvoke;
 pub mod dag;
+pub mod engine;
 pub mod functions;
 pub mod gateway;
 pub mod handle;
@@ -38,6 +49,8 @@ pub mod storage;
 
 pub use asyncinvoke::{AsyncStatus, AsyncTracker, InvocationId};
 pub use appconfig::{Affinity, AffinityType, AppConfig, FunctionConfig, Reduce, Requirements};
+pub use engine::{EngineEvent, RunId, RunStatus};
 pub use handle::{LocalHandle, ResourceHandle};
+pub use invoker::{InstanceResult, WorkflowResult};
 pub use resource::{EdgeFaaS, ResourceId};
 pub use scheduler::{FunctionCreation, LocalityScheduler, Schedule};

@@ -38,6 +38,10 @@ pub fn place_output(
 /// Fallback bucket placement when the caller gives no locality hint: the
 /// registered resource with the most free storage (ties to smallest id for
 /// determinism).
+///
+/// NaN-audit note: unlike the scheduler's latency comparisons (now
+/// `f64::total_cmp`), this selection is over `u64` byte counts, so the
+/// ordering is already total.
 pub fn pick_bucket_resource(faas: &EdgeFaaS) -> anyhow::Result<ResourceId> {
     let mut best: Option<(u64, ResourceId)> = None;
     for id in faas.resource_ids() {

@@ -20,6 +20,7 @@ use crate::util::yaml;
 
 use super::appconfig::AppConfig;
 use super::dag::Dag;
+use super::engine::EngineCore;
 use super::handle::ResourceHandle;
 use super::scheduler::{LocalityScheduler, Schedule};
 
@@ -59,6 +60,9 @@ pub struct EdgeFaaS {
     pub(super) scheduler: RwLock<Arc<dyn Schedule>>,
     pub(super) transfer: TransferModel,
     pub(super) clock: Arc<dyn Clock>,
+    /// The event-driven execution core every invocation front-end submits
+    /// through (see [`super::engine`]).
+    pub(super) engine: EngineCore,
 }
 
 impl EdgeFaaS {
@@ -82,6 +86,7 @@ impl EdgeFaaS {
             scheduler: RwLock::new(Arc::new(LocalityScheduler)),
             transfer: TransferModel::default(),
             clock,
+            engine: EngineCore::new(),
         }
     }
 

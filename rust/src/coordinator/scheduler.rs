@@ -49,18 +49,24 @@ impl<'a> ScheduleCtx<'a> {
     }
 
     /// The candidate of `tier` with the lowest latency from `from_node`.
+    ///
+    /// Latencies are compared with `f64::total_cmp`: a NaN latency (e.g. a
+    /// poisoned monitoring sample) sorts *last* instead of silently
+    /// comparing `Equal` and letting `min_by`'s tie-breaking pick an
+    /// arbitrary resource.
     pub fn closest(&self, from_node: usize, tier: Tier) -> Option<ResourceId> {
         self.of_tier(tier)
             .into_iter()
             .min_by(|a, b| {
                 let la = self.topology.latency(from_node, a.net_node);
                 let lb = self.topology.latency(from_node, b.net_node);
-                la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
+                la.total_cmp(&lb)
             })
             .map(|r| r.id)
     }
 
-    /// The candidate of `tier` minimizing summed latency from all nodes.
+    /// The candidate of `tier` minimizing summed latency from all nodes
+    /// (NaN-safe, see [`Self::closest`]).
     pub fn closest_to_all(&self, from_nodes: &[usize], tier: Tier) -> Option<ResourceId> {
         self.of_tier(tier)
             .into_iter()
@@ -69,7 +75,7 @@ impl<'a> ScheduleCtx<'a> {
                     from_nodes.iter().map(|&n| self.topology.latency(n, a.net_node)).sum();
                 let sb: f64 =
                     from_nodes.iter().map(|&n| self.topology.latency(n, b.net_node)).sum();
-                sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+                sa.total_cmp(&sb)
             })
             .map(|r| r.id)
     }

@@ -12,21 +12,32 @@
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum StoreError {
-    #[error("invalid bucket name `{0}`")]
     BadBucketName(String),
-    #[error("bucket `{0}` already exists")]
     BucketExists(String),
-    #[error("bucket `{0}` not found")]
     NoBucket(String),
-    #[error("bucket `{0}` is not empty")]
     BucketNotEmpty(String),
-    #[error("object `{0}` not found")]
     NoObject(String),
-    #[error("store full: need {need} bytes, {free} free")]
     Full { need: u64, free: u64 },
 }
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::BadBucketName(n) => write!(f, "invalid bucket name `{n}`"),
+            StoreError::BucketExists(n) => write!(f, "bucket `{n}` already exists"),
+            StoreError::NoBucket(n) => write!(f, "bucket `{n}` not found"),
+            StoreError::BucketNotEmpty(n) => write!(f, "bucket `{n}` is not empty"),
+            StoreError::NoObject(n) => write!(f, "object `{n}` not found"),
+            StoreError::Full { need, free } => {
+                write!(f, "store full: need {need} bytes, {free} free")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
 
 /// Validate an S3-style bucket name (§3.3.1 points at the AWS rules):
 /// 3-63 chars, lowercase letters / digits / hyphens, must start and end with

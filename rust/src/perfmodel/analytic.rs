@@ -47,7 +47,7 @@ pub fn partition_sweep(c: &PaperCalib) -> Vec<(usize, f64)> {
 pub fn best_partition(c: &PaperCalib) -> (usize, f64) {
     partition_sweep(c)
         .into_iter()
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .unwrap()
 }
 

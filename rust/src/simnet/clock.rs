@@ -47,6 +47,13 @@ impl Clock for RealClock {
 
 /// Virtual time: `sleep` advances the clock instantly. Stored as integer
 /// nanoseconds in an atomic so concurrent readers need no lock.
+///
+/// Concurrency semantics (the execution engine's virtual-time mode): a
+/// sleeper advances the clock *to* `now + dur` monotonically (`fetch_max`),
+/// so concurrent sleeps overlap — four parallel 10 s stage executions end
+/// at t=10 s, not t=40 s — while sequential sleeps from one caller still
+/// accumulate. This mirrors how parallel function instances on distinct
+/// resources overlap on the real testbed.
 pub struct VirtualClock {
     nanos: AtomicU64,
 }
@@ -77,7 +84,8 @@ impl Clock for VirtualClock {
     fn sleep(&self, dur: f64) {
         if dur > 0.0 {
             let d = (dur * 1e9) as u64;
-            self.nanos.fetch_add(d, Ordering::SeqCst);
+            let now = self.nanos.load(Ordering::SeqCst);
+            self.nanos.fetch_max(now.saturating_add(d), Ordering::SeqCst);
         }
     }
 }
@@ -112,5 +120,36 @@ mod tests {
         assert!((c.now() - 5.0).abs() < 1e-6);
         c.advance_to(7.5);
         assert!((c.now() - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sequential_sleeps_accumulate() {
+        let c = VirtualClock::new();
+        c.sleep(2.0);
+        c.sleep(3.0);
+        assert!((c.now() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn concurrent_sleeps_overlap() {
+        // Two sleepers that both observed t=0 advance to max(d1, d2), the
+        // way two parallel stage executions on distinct resources would.
+        let c = std::sync::Arc::new(VirtualClock::new());
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(2));
+        let mut handles = Vec::new();
+        for d in [10.0f64, 4.0] {
+            let c = std::sync::Arc::clone(&c);
+            let b = std::sync::Arc::clone(&barrier);
+            handles.push(std::thread::spawn(move || {
+                b.wait(); // both read now=0 before either advances
+                c.sleep(d);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let t = c.now();
+        assert!(t <= 14.0 + 1e-6, "overlapping sleeps must not fully serialize: {t}");
+        assert!(t >= 10.0 - 1e-6, "the longest sleep bounds the end time: {t}");
     }
 }

@@ -10,8 +10,11 @@
 //!   bandwidth, plus latency-routing (Dijkstra) for indirect pairs;
 //! * [`transfer`] — the transfer-time model `rtt + bytes / bottleneck_bw`
 //!   calibrated so that the paper's Fig. 6 numbers are reproduced;
-//! * [`clock`] — a `Clock` abstraction so that the same coordinator code runs
-//!   in real time (examples, loopback HTTP) or virtual time (benches);
+//! * [`clock`] — a `Clock` abstraction so that the same coordinator code —
+//!   including the event-driven execution engine in
+//!   `crate::coordinator::engine` — runs in real time (examples, loopback
+//!   HTTP) or virtual time (benches), with concurrent virtual sleeps
+//!   overlapping the way parallel stage executions do on real hardware;
 //! * [`engine`] — a discrete-event engine used by the workflow simulations
 //!   (Figs. 8/9) so a 96.7 s cloud-only pipeline simulates in microseconds.
 

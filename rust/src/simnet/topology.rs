@@ -142,8 +142,8 @@ impl Topology {
         }
         impl Ord for Item {
             fn cmp(&self, o: &Self) -> std::cmp::Ordering {
-                // Min-heap on latency.
-                o.0.partial_cmp(&self.0).unwrap_or(std::cmp::Ordering::Equal)
+                // Min-heap on latency (total_cmp: NaN-safe total order).
+                o.0.total_cmp(&self.0)
             }
         }
         let n = self.nodes.len();
@@ -189,15 +189,12 @@ impl Topology {
         self.route(from, to).map(|r| r.latency).unwrap_or(f64::INFINITY)
     }
 
-    /// The node of `tier` with minimum latency from `from`.
+    /// The node of `tier` with minimum latency from `from` (NaN-safe:
+    /// `total_cmp` sorts NaN distances last instead of tying).
     pub fn closest(&self, from: NodeId, tier: Tier) -> Option<NodeId> {
         self.tier_nodes(tier)
             .into_iter()
-            .min_by(|&a, &b| {
-                self.latency(from, a)
-                    .partial_cmp(&self.latency(from, b))
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            })
+            .min_by(|&a, &b| self.latency(from, a).total_cmp(&self.latency(from, b)))
     }
 
     /// The node of `tier` minimizing the *sum* of latencies from all `froms`
@@ -206,7 +203,7 @@ impl Topology {
         self.tier_nodes(tier).into_iter().min_by(|&a, &b| {
             let sa: f64 = froms.iter().map(|&f| self.latency(f, a)).sum();
             let sb: f64 = froms.iter().map(|&f| self.latency(f, b)).sum();
-            sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+            sa.total_cmp(&sb)
         })
     }
 }

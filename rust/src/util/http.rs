@@ -166,7 +166,9 @@ impl Server {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let h = Arc::clone(&handler);
-                            pool.execute(move || serve_conn(stream, h));
+                            if pool.execute(move || serve_conn(stream, h)).is_err() {
+                                break; // workers gone: stop accepting
+                            }
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(2));

@@ -11,6 +11,19 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Error returned by [`ThreadPool::execute`] when the pool can no longer
+/// accept work (explicitly shut down, or every worker died).
+#[derive(Debug, PartialEq, Eq)]
+pub struct PoolShutDown;
+
+impl std::fmt::Display for PoolShutDown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("thread pool is shut down")
+    }
+}
+
+impl std::error::Error for PoolShutDown {}
+
 /// A fixed pool of worker threads executing queued jobs.
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
@@ -41,28 +54,34 @@ impl ThreadPool {
         ThreadPool { workers, sender: Some(sender) }
     }
 
-    /// Queue a job. Panics if the pool has been shut down.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.sender
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("pool workers gone");
+    /// Queue a job. Returns [`PoolShutDown`] (instead of panicking) if the
+    /// pool was shut down or its workers are gone.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), PoolShutDown> {
+        match &self.sender {
+            None => Err(PoolShutDown),
+            Some(s) => s.send(Box::new(f)).map_err(|_| PoolShutDown),
+        }
     }
 
     /// Number of workers.
     pub fn size(&self) -> usize {
         self.workers.len()
     }
-}
 
-impl Drop for ThreadPool {
-    fn drop(&mut self) {
+    /// Drain the queue and join every worker. Idempotent; called by `Drop`.
+    /// Jobs already queued still run to completion before this returns.
+    pub fn shutdown(&mut self) {
         // Close the channel, then join every worker.
         drop(self.sender.take());
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -112,7 +131,8 @@ mod tests {
             let c = Arc::clone(&counter);
             pool.execute(move || {
                 c.fetch_add(1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
         }
         drop(pool); // joins workers
         assert_eq!(counter.load(Ordering::SeqCst), 100);
@@ -128,12 +148,37 @@ mod tests {
             pool.execute(move || {
                 thread::sleep(Duration::from_millis(50));
                 d.fetch_add(1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
         }
         drop(pool);
         assert_eq!(done.load(Ordering::SeqCst), 4);
         // 4 × 50ms jobs on 4 workers should take ~50ms, not 200ms.
         assert!(start.elapsed() < Duration::from_millis(180));
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs_then_rejects_new_ones() {
+        let mut pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..16 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                thread::sleep(Duration::from_millis(2));
+                c.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        pool.shutdown();
+        // Drop/shutdown semantics: every queued job ran before the join
+        // returned, and the workers are gone.
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+        assert_eq!(pool.size(), 0);
+        // Execute after shutdown is an error, not a panic.
+        assert_eq!(pool.execute(|| {}), Err(PoolShutDown));
+        // Idempotent.
+        pool.shutdown();
+        assert_eq!(pool.execute(|| {}), Err(PoolShutDown));
     }
 
     #[test]

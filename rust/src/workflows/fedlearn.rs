@@ -18,9 +18,11 @@
 //! 28x28 with random shift + noise — a learnable 10-class problem with the
 //! same tensor geometry.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::cluster::NativeExecutor;
+use crate::coordinator::functions::FunctionPackage;
 use crate::coordinator::{EdgeFaaS, ResourceId};
 use crate::runtime::{EngineService, Tensor};
 use crate::util::rng::Pcg32;
@@ -177,6 +179,38 @@ pub fn create_model_buckets(faas: &EdgeFaaS, resources: &[ResourceId]) -> anyhow
         faas.create_bucket(APP, &model_bucket(rid), Some(rid))?;
     }
     Ok(())
+}
+
+/// The deployment packages of the three FL functions (shared by the
+/// example, the integration tests and the benches).
+pub fn fl_packages() -> HashMap<String, FunctionPackage> {
+    let mut packages = HashMap::new();
+    packages.insert("train".to_string(), FunctionPackage { code: "fl/train".into() });
+    packages.insert("firstaggregation".to_string(), FunctionPackage { code: "fl/agg1".into() });
+    packages.insert("secondaggregation".to_string(), FunctionPackage { code: "fl/agg2".into() });
+    packages
+}
+
+/// Start one federated round: place `global` into every worker's model
+/// bucket ("the aggregator sends the shared model back to each of the
+/// workers") and return the entry-input URLs for `train`.
+pub fn distribute_global(
+    faas: &EdgeFaaS,
+    iot: &[ResourceId],
+    round: usize,
+    global: &Tensor,
+) -> anyhow::Result<Vec<String>> {
+    let mut urls = Vec::new();
+    for &rid in iot {
+        let url = faas.put_object(
+            APP,
+            &model_bucket(rid),
+            &format!("global-r{round}.bin"),
+            &global.to_bytes(),
+        )?;
+        urls.push(url.to_string());
+    }
+    Ok(urls)
 }
 
 /// Extract the sample-count weight encoded in a model object name

@@ -15,9 +15,11 @@
 //! * `video/face-recognition` — `face_embed` + `knn_classify` against the
 //!   enrolled gallery; outputs identity labels.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::cluster::NativeExecutor;
+use crate::coordinator::functions::FunctionPackage;
 use crate::coordinator::{EdgeFaaS, ResourceId};
 use crate::runtime::{EngineService, Tensor};
 use crate::util::rng::Pcg32;
@@ -35,6 +37,25 @@ pub const GALLERY: usize = 32;
 
 /// The application name used by all video objects.
 pub const APP: &str = "videopipeline";
+
+/// The six pipeline stages, in DAG order.
+pub const STAGES: [&str; 6] = [
+    "video-generator",
+    "video-processing",
+    "motion-detection",
+    "face-detection",
+    "face-extraction",
+    "face-recognition",
+];
+
+/// The deployment packages of the six stages (shared by the example, the
+/// integration tests and the benches).
+pub fn video_packages() -> HashMap<String, FunctionPackage> {
+    STAGES
+        .iter()
+        .map(|s| (s.to_string(), FunctionPackage { code: format!("video/{s}") }))
+        .collect()
+}
 
 /// Per-resource bucket for pipeline data.
 pub fn bucket(rid: ResourceId) -> String {

@@ -6,7 +6,6 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use edgefaas::coordinator::appconfig::{federated_learning_yaml, video_pipeline_yaml};
-use edgefaas::coordinator::functions::FunctionPackage;
 use edgefaas::runtime::{EngineService, Tensor};
 use edgefaas::simnet::RealClock;
 use edgefaas::testbed::{artifacts_dir, paper_testbed};
@@ -39,11 +38,7 @@ fn federated_learning_end_to_end() {
     assert_eq!(plan["train"].len(), 8);
     assert_eq!(plan["firstaggregation"], bed.edges);
     assert_eq!(plan["secondaggregation"], vec![bed.cloud]);
-    let mut packages = HashMap::new();
-    packages.insert("train".into(), FunctionPackage { code: "fl/train".into() });
-    packages.insert("firstaggregation".into(), FunctionPackage { code: "fl/agg1".into() });
-    packages.insert("secondaggregation".into(), FunctionPackage { code: "fl/agg2".into() });
-    faas.deploy_application(fedlearn::APP, &packages).unwrap();
+    faas.deploy_application(fedlearn::APP, &fedlearn::fl_packages()).unwrap();
 
     // Two federated rounds; the global model's eval accuracy must improve.
     let mut global = fedlearn::lenet_init(7);
@@ -51,19 +46,8 @@ fn federated_learning_end_to_end() {
     for round in 0..2 {
         // Distribute the global model to every worker's bucket (the
         // aggregator "sends the shared model back to each of the workers").
+        let urls = fedlearn::distribute_global(&faas, &bed.iot, round, &global).unwrap();
         let mut entry = HashMap::new();
-        let mut urls = Vec::new();
-        for &rid in &bed.iot {
-            let url = faas
-                .put_object(
-                    fedlearn::APP,
-                    &fedlearn::model_bucket(rid),
-                    &format!("global-r{round}.bin"),
-                    &global.to_bytes(),
-                )
-                .unwrap();
-            urls.push(url.to_string());
-        }
         entry.insert("train".to_string(), urls);
         let result = faas.run_workflow(fedlearn::APP, &entry).unwrap();
         let final_url = &result.functions["secondaggregation"][0].outputs[0];
@@ -103,20 +87,10 @@ fn video_pipeline_end_to_end() {
     assert_eq!(plan["video-processing"], vec![bed.edges[0]], "set-1 edge");
     assert_eq!(plan["face-extraction"], vec![bed.cloud]);
 
-    let mut packages = HashMap::new();
-    for stage in [
-        "video-generator",
-        "video-processing",
-        "motion-detection",
-        "face-detection",
-        "face-extraction",
-        "face-recognition",
-    ] {
-        packages.insert(stage.to_string(), FunctionPackage { code: format!("video/{stage}") });
-    }
-    faas.deploy_application(video::APP, &packages).unwrap();
+    faas.deploy_application(video::APP, &video::video_packages()).unwrap();
 
     let result = faas.run_workflow(video::APP, &HashMap::new()).unwrap();
+    assert_eq!(result.firing_order, video::STAGES, "engine fires the chain in order");
 
     // The pipeline must produce identity outputs on the cloud.
     let rec = &result.functions["face-recognition"];

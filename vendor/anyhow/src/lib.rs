@@ -1,0 +1,169 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this workspace vendors
+//! the small slice of anyhow's surface it actually uses: a dynamic string
+//! backed [`Error`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, the
+//! [`Result`] alias, and the [`Context`] extension trait for `Option` and
+//! `Result`. Semantics match upstream for that slice; error sources are
+//! flattened into the message at conversion time instead of being kept as a
+//! cause chain.
+
+use std::fmt;
+
+/// A type-erased error: the formatted message of whatever was thrown.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error directly from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like upstream anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion coherent
+// and lets `?` lift any std error into an `anyhow::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result<T, anyhow::Error>`, with the error type overridable like upstream.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to `Option` / `Result` values, converting to [`Result`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_lifts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "disk on fire");
+    }
+
+    #[test]
+    fn macros_format_and_wrap() {
+        let x = 7;
+        let e = anyhow!("x = {x}");
+        assert_eq!(e.to_string(), "x = 7");
+        let e = anyhow!(io_err());
+        assert_eq!(e.to_string(), "disk on fire");
+        let e = anyhow!("{} and {}", 1, 2);
+        assert_eq!(e.to_string(), "1 and 2");
+
+        fn bails() -> Result<()> {
+            bail!("boom {}", 9);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "boom 9");
+
+        fn ensures(v: usize) -> Result<usize> {
+            ensure!(v < 10, "v too big: {v}");
+            ensure!(v != 5);
+            Ok(v)
+        }
+        assert_eq!(ensures(3).unwrap(), 3);
+        assert!(ensures(12).unwrap_err().to_string().contains("v too big"));
+        assert!(ensures(5).unwrap_err().to_string().contains("v != 5"));
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("empty").unwrap_err().to_string(), "empty");
+        assert_eq!(Some(4u8).context("empty").unwrap(), 4);
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("while reading").unwrap_err();
+        assert_eq!(e.to_string(), "while reading: disk on fire");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -1,0 +1,236 @@
+//! Offline stand-in for the `log` facade crate.
+//!
+//! Vendored because the build environment has no crates.io access. Provides
+//! the subset this workspace uses: the level/filter enums (with the
+//! cross-type ordering the real crate has), the [`Log`] trait with
+//! [`Record`]/[`Metadata`], the global logger registration, and the five
+//! level macros.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity level of a log record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let name = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.pad(name)
+    }
+}
+
+/// Maximum-verbosity filter installed with [`set_max_level`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata about a log record (just the level in this shim).
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+/// One log record, borrowed for the duration of the `Log::log` call.
+pub struct Record<'a> {
+    metadata: Metadata,
+    args: fmt::Arguments<'a>,
+    target: &'a str,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logger implementation, installed once with [`set_logger`].
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+
+/// Returned when [`set_logger`] is called twice.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+/// Install the global logger. Fails if one is already installed.
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum verbosity.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::SeqCst);
+}
+
+/// The current global maximum verbosity.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro back-end: dispatch one record to the installed logger.
+#[doc(hidden)]
+pub fn __private_log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if let Some(logger) = LOGGER.get() {
+        let record = Record { metadata: Metadata { level }, args, target };
+        if logger.enabled(&record.metadata) {
+            logger.log(&record);
+        }
+    }
+}
+
+/// Log at an explicit level.
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {{
+        let lvl = $lvl;
+        if (lvl as usize) <= ($crate::max_level() as usize) {
+            $crate::__private_log(lvl, ::std::module_path!(), ::std::format_args!($($arg)+));
+        }
+    }};
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Error, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Warn, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Info, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Debug, $($arg)+));
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => ($crate::log!($crate::Level::Trace, $($arg)+));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    struct Capture {
+        lines: Mutex<Vec<String>>,
+    }
+
+    impl Log for Capture {
+        fn enabled(&self, _: &Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &Record) {
+            self.lines.lock().unwrap().push(format!("{:5} {}", record.level(), record.args()));
+        }
+        fn flush(&self) {}
+    }
+
+    static CAPTURE: OnceLock<Capture> = OnceLock::new();
+
+    #[test]
+    fn levels_compare_with_filters() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(!(Level::Debug <= LevelFilter::Info));
+        assert!(!(Level::Error <= LevelFilter::Off));
+    }
+
+    #[test]
+    fn records_reach_the_installed_logger() {
+        let cap = CAPTURE.get_or_init(|| Capture { lines: Mutex::new(Vec::new()) });
+        let _ = set_logger(cap);
+        set_max_level(LevelFilter::Info);
+        info!("hello {}", 42);
+        debug!("filtered out");
+        let lines = cap.lines.lock().unwrap();
+        assert!(lines.iter().any(|l| l.contains("hello 42")), "{lines:?}");
+        assert!(!lines.iter().any(|l| l.contains("filtered out")));
+    }
+}
