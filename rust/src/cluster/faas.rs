@@ -10,6 +10,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::simnet::Clock;
+use crate::util::bytes::Bytes;
 
 use super::sandbox::{Admission, SandboxDemand, SandboxManager};
 use super::spec::ResourceSpec;
@@ -20,7 +21,9 @@ use super::spec::ResourceSpec;
 pub struct FunctionSpec {
     pub name: String,
     /// Image / package reference (the `.zip` code property in the paper).
-    pub image: String,
+    /// `Arc<str>` so the per-invocation hot path clones a refcount, not the
+    /// string.
+    pub image: Arc<str>,
     /// Required memory per sandbox, bytes.
     pub memory: u64,
     /// Required GPUs per sandbox.
@@ -42,9 +45,13 @@ pub struct FunctionStatus {
 /// Executes the body of a function. Implementations:
 /// [`NativeExecutor`] (rust closures → PJRT compute) for the real path, and
 /// the perf-model executor for virtual-time benches.
+///
+/// Payloads travel as shared [`Bytes`]: the engine hands every placement of
+/// a node the same envelope buffer, and handlers can return a shared buffer
+/// without the runtime re-materializing it.
 pub trait Executor: Send + Sync {
     /// Run `function` with `payload`, returning its output bytes.
-    fn execute(&self, function: &str, payload: &[u8]) -> anyhow::Result<Vec<u8>>;
+    fn execute(&self, function: &str, payload: &Bytes) -> anyhow::Result<Bytes>;
 
     /// Estimated execution seconds (virtual-time mode); `None` means "run
     /// [`execute`](Executor::execute) for real and use wall time".
@@ -53,10 +60,13 @@ pub trait Executor: Send + Sync {
     }
 }
 
+/// A registered handler body (zero-copy form).
+type BytesHandler = Arc<dyn Fn(&Bytes) -> anyhow::Result<Bytes> + Send + Sync>;
+
 /// Registry of rust closures keyed by function image name.
 #[derive(Default)]
 pub struct NativeExecutor {
-    handlers: Mutex<HashMap<String, Arc<dyn Fn(&[u8]) -> anyhow::Result<Vec<u8>> + Send + Sync>>>,
+    handlers: Mutex<HashMap<String, BytesHandler>>,
 }
 
 impl NativeExecutor {
@@ -64,17 +74,28 @@ impl NativeExecutor {
         Self::default()
     }
 
-    /// Register the handler for a function image.
+    /// Register a slice-based handler for a function image (the common
+    /// form: most handlers parse the envelope and build a fresh response).
     pub fn register<F>(&self, image: &str, f: F)
     where
         F: Fn(&[u8]) -> anyhow::Result<Vec<u8>> + Send + Sync + 'static,
+    {
+        self.register_bytes(image, move |p: &Bytes| f(p.as_slice()).map(Bytes::from));
+    }
+
+    /// Register a zero-copy handler: takes and returns shared [`Bytes`], so
+    /// a handler can hand back a precomputed or sliced buffer without
+    /// allocating per invocation (the hot-path benches use this).
+    pub fn register_bytes<F>(&self, image: &str, f: F)
+    where
+        F: Fn(&Bytes) -> anyhow::Result<Bytes> + Send + Sync + 'static,
     {
         self.handlers.lock().unwrap().insert(image.to_string(), Arc::new(f));
     }
 }
 
 impl Executor for NativeExecutor {
-    fn execute(&self, function: &str, payload: &[u8]) -> anyhow::Result<Vec<u8>> {
+    fn execute(&self, function: &str, payload: &Bytes) -> anyhow::Result<Bytes> {
         let handler = {
             let map = self.handlers.lock().unwrap();
             map.get(function).cloned()
@@ -190,8 +211,13 @@ impl FaasBackend {
     /// warm), runs the executor, releases the sandbox, and returns
     /// `(output, total_latency_s)`. In virtual-time mode the latency comes
     /// from the executor's model and the clock is advanced instead of slept.
-    pub fn invoke(&self, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)> {
-        let image;
+    ///
+    /// Hot-path note: the invocation bump and the image lookup happen in
+    /// one `get_mut` pass, and the image is an `Arc<str>` clone (refcount
+    /// bump) — nothing string-sized is copied while the status lock is
+    /// held.
+    pub fn invoke(&self, name: &str, payload: &Bytes) -> anyhow::Result<(Bytes, f64)> {
+        let image: Arc<str>;
         let admission;
         {
             let mut inner = self.inner.lock().unwrap();
@@ -200,7 +226,7 @@ impl FaasBackend {
                 .get_mut(name)
                 .ok_or_else(|| FaasError::NotFound(name.to_string()))?;
             st.invocations += 1;
-            image = st.spec.image.clone();
+            image = Arc::clone(&st.spec.image);
             let now = self.clock.now();
             admission = inner
                 .sandboxes
@@ -228,6 +254,36 @@ impl FaasBackend {
         Ok((out, elapsed))
     }
 
+    /// The backend protocol's `Batch` verb: invoke several functions in one
+    /// call, sequentially, returning one result per entry.
+    ///
+    /// Each call still goes through sandbox admission individually — a
+    /// batch executes one-at-a-time on the caller's thread, so it needs
+    /// exactly one live sandbox per function at any moment and cannot
+    /// spuriously exhaust capacity the way an up-front bulk admission
+    /// would. What the batch amortizes is everything around the calls: the
+    /// engine's admission slot and queue locking, and (through the gateway
+    /// endpoint) the per-invocation HTTP round trip.
+    ///
+    /// A panicking handler fails its own entry only; later entries still
+    /// run (the per-task containment the engine's single path has).
+    pub fn invoke_batch(&self, calls: &[(String, Bytes)]) -> Vec<anyhow::Result<(Bytes, f64)>> {
+        calls
+            .iter()
+            .map(|(name, payload)| {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.invoke(name, payload)
+                }))
+                .unwrap_or_else(|p| {
+                    Err(anyhow::anyhow!(
+                        "function handler panicked: {}",
+                        crate::util::panic_message(&*p)
+                    ))
+                })
+            })
+            .collect()
+    }
+
     /// Memory utilization fraction (scraped by the monitoring substrate).
     pub fn mem_utilization(&self) -> f64 {
         self.inner.lock().unwrap().sandboxes.mem_utilization()
@@ -244,6 +300,10 @@ impl FaasBackend {
 mod tests {
     use super::*;
     use crate::simnet::{RealClock, VirtualClock};
+
+    fn bp(p: &[u8]) -> Bytes {
+        Bytes::copy_from(p)
+    }
 
     fn backend() -> (FaasBackend, Arc<NativeExecutor>) {
         let exec = Arc::new(NativeExecutor::new());
@@ -268,13 +328,13 @@ mod tests {
     fn deploy_invoke_remove_cycle() {
         let (b, _) = backend();
         b.deploy(fspec("echo", "img/echo")).unwrap();
-        let (out, _lat) = b.invoke("echo", b"hello").unwrap();
-        assert_eq!(out, b"hello");
+        let (out, _lat) = b.invoke("echo", &bp(b"hello")).unwrap();
+        assert_eq!(out, &b"hello"[..]);
         let st = b.describe("echo").unwrap();
         assert_eq!(st.invocations, 1);
         assert_eq!(st.replicas, 1, "sandbox stays warm after release");
         b.remove("echo").unwrap();
-        assert!(b.invoke("echo", b"x").is_err());
+        assert!(b.invoke("echo", &bp(b"x")).is_err());
     }
 
     #[test]
@@ -307,11 +367,11 @@ mod tests {
     fn missing_image_errors_cleanly() {
         let (b, _) = backend();
         b.deploy(fspec("ghost", "img/none")).unwrap();
-        assert!(b.invoke("ghost", b"").is_err());
+        assert!(b.invoke("ghost", &bp(b"")).is_err());
         // Sandbox must have been released despite the error.
         let st = b.describe("ghost").unwrap();
         assert_eq!(st.replicas, 1);
-        assert!(b.invoke("ghost", b"").is_err(), "stays invocable (and failing)");
+        assert!(b.invoke("ghost", &bp(b"")).is_err(), "stays invocable (and failing)");
     }
 
     #[test]
@@ -323,10 +383,35 @@ mod tests {
         let cold = spec.cold_start_s();
         let b = FaasBackend::new(spec, exec as Arc<dyn Executor>, clock.clone());
         b.deploy(fspec("echo", "img/echo")).unwrap();
-        let (_, lat1) = b.invoke("echo", b"x").unwrap();
+        let (_, lat1) = b.invoke("echo", &bp(b"x")).unwrap();
         assert!((lat1 - cold).abs() < 1e-6, "first call pays cold start: {lat1}");
-        let (_, lat2) = b.invoke("echo", b"x").unwrap();
+        let (_, lat2) = b.invoke("echo", &bp(b"x")).unwrap();
         assert!(lat2 < 1e-6, "warm call is instant in virtual time: {lat2}");
+    }
+
+    #[test]
+    fn invoke_batch_matches_sequential_invokes() {
+        let (b, exec) = backend();
+        exec.register("img/boom", |_: &[u8]| -> anyhow::Result<Vec<u8>> { panic!("kapow") });
+        b.deploy(fspec("echo", "img/echo")).unwrap();
+        b.deploy(fspec("upper", "img/upper")).unwrap();
+        b.deploy(fspec("boom", "img/boom")).unwrap();
+        let calls = vec![
+            ("echo".to_string(), Bytes::from("one")),
+            ("upper".to_string(), Bytes::from("two")),
+            ("boom".to_string(), Bytes::new()),
+            ("missing".to_string(), Bytes::new()),
+            ("echo".to_string(), Bytes::from("three")),
+        ];
+        let results = b.invoke_batch(&calls);
+        assert_eq!(results.len(), 5);
+        assert_eq!(results[0].as_ref().unwrap().0, &b"one"[..]);
+        assert_eq!(results[1].as_ref().unwrap().0, &b"TWO"[..]);
+        let err = results[2].as_ref().unwrap_err().to_string();
+        assert!(err.contains("kapow"), "panic contained to its entry: {err}");
+        assert!(results[3].is_err(), "unknown function fails its own entry");
+        assert_eq!(results[4].as_ref().unwrap().0, &b"three"[..], "later entries still run");
+        assert_eq!(b.describe("echo").unwrap().invocations, 2);
     }
 
     #[test]
@@ -339,7 +424,7 @@ mod tests {
                 let b = Arc::clone(&b);
                 std::thread::spawn(move || {
                     let payload = format!("req{i}");
-                    let (out, _) = b.invoke("echo", payload.as_bytes()).unwrap();
+                    let (out, _) = b.invoke("echo", &bp(payload.as_bytes())).unwrap();
                     assert_eq!(out, payload.as_bytes());
                 })
             })

@@ -10,8 +10,19 @@
 //! GET    /system/functions          list
 //! GET    /system/function/{name}    describe
 //! POST   /function/{name}           invoke (sync; body = payload)
+//! POST   /function/_batch           invoke many in one round trip:
+//!                                   {calls:[{name, payload}, ...]} ->
+//!                                   {results:[{ok, output, latency}|{ok, error}]}
 //! GET    /healthz
 //! ```
+//!
+//! The `_batch` verb is the wire half of the engine's per-resource
+//! invocation batching: one HTTP round trip carries a whole batch, with
+//! per-entry results (a failing or panicking entry does not fail its
+//! siblings). Payloads/outputs on this path are JSON-embedded text — which
+//! the engine's envelopes and `{"outputs": [...]}` responses always are;
+//! binary payloads fall back to per-call `POST /function/{name}`. A
+//! function literally named `_batch` is shadowed by this verb.
 //!
 //! Administrative verbs require the resource `pwd` in the `Authorization`
 //! header, mirroring the paper's "pwd is the password to authenticate the
@@ -20,6 +31,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::util::bytes::Bytes;
 use crate::util::http::{Handler, Request, Response, Server};
 use crate::util::json::Json;
 
@@ -83,7 +95,7 @@ impl FaasGateway {
             Ok(st) => {
                 let mut o = Json::obj();
                 o.set("name", st.spec.name.as_str().into())
-                    .set("image", st.spec.image.as_str().into())
+                    .set("image", (&*st.spec.image).into())
                     .set("memory", st.spec.memory.into())
                     .set("gpus", (st.spec.gpus as u64).into())
                     .set("replicas", (st.replicas as u64).into())
@@ -101,14 +113,64 @@ impl FaasGateway {
     }
 
     fn invoke(&self, name: &str, req: &Request) -> Response {
-        match self.backend.invoke(name, &req.body) {
+        // Process boundary: copy the request body into a shared buffer once.
+        match self.backend.invoke(name, &Bytes::copy_from(&req.body)) {
             Ok((out, latency)) => {
-                let mut r = Response::bytes(200, out);
+                let mut r = Response::bytes(200, out.to_vec());
                 r.headers.insert("X-Duration-Seconds".into(), format!("{latency:.6}"));
                 r
             }
             Err(e) => Response::error(e.to_string()),
         }
+    }
+
+    /// The batch verb: parse `{calls: [{name, payload}, ...]}`, execute the
+    /// whole batch through [`FaasBackend::invoke_batch`] (per-entry failure
+    /// containment), and answer with one result per entry.
+    fn invoke_batch(&self, req: &Request) -> Response {
+        let body = match req.json() {
+            Ok(v) => v,
+            Err(e) => return Response::bad_request(format!("bad json: {e}")),
+        };
+        let Some(entries) = body.get("calls").and_then(Json::as_arr) else {
+            return Response::bad_request("missing `calls` array".to_string());
+        };
+        let mut calls: Vec<(String, Bytes)> = Vec::with_capacity(entries.len());
+        for entry in entries {
+            let parsed = entry
+                .req_str("name")
+                .map(String::from)
+                .and_then(|n| Ok((n, Bytes::from(entry.req_str("payload")?))));
+            match parsed {
+                Ok(call) => calls.push(call),
+                Err(e) => return Response::bad_request(format!("bad batch entry: {e}")),
+            }
+        }
+        let results = self.backend.invoke_batch(&calls);
+        let mut arr = Vec::with_capacity(results.len());
+        for result in results {
+            let mut o = Json::obj();
+            match result {
+                Ok((out, latency)) => {
+                    o.set("ok", true.into()).set("latency", latency.into());
+                    // Text outputs (the engine's `{"outputs": [...]}`
+                    // responses) travel as-is; binary outputs are
+                    // hex-encoded so the batch path is lossless — never
+                    // lossily transcoded.
+                    match std::str::from_utf8(&out) {
+                        Ok(text) => o.set("output", text.into()),
+                        Err(_) => o.set("output_hex", hex_encode(&out).as_str().into()),
+                    };
+                }
+                Err(e) => {
+                    o.set("ok", false.into()).set("error", e.to_string().as_str().into());
+                }
+            }
+            arr.push(o);
+        }
+        let mut resp = Json::obj();
+        resp.set("results", Json::Arr(arr));
+        Response::json(200, &resp)
     }
 }
 
@@ -124,10 +186,36 @@ impl Handler for FaasGateway {
                 Response::json(200, &Json::from(names))
             }
             ("GET", ["system", "function", name]) => self.describe(name),
+            // `_batch` must match before the single-invoke wildcard.
+            ("POST", ["function", "_batch"]) => self.invoke_batch(&req),
             ("POST", ["function", name]) => self.invoke(name, &req),
             _ => Response::not_found(),
         }
     }
+}
+
+/// Lowercase hex for binary outputs on the `_batch` wire (JSON strings
+/// cannot carry arbitrary bytes).
+fn hex_encode(data: &[u8]) -> String {
+    let mut s = String::with_capacity(data.len() * 2);
+    for b in data {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+fn hex_decode(s: &str) -> anyhow::Result<Vec<u8>> {
+    // ASCII guard first: byte-offset slicing below would panic on a
+    // multi-byte UTF-8 char boundary from a misbehaving peer.
+    anyhow::ensure!(s.is_ascii(), "non-ASCII hex string");
+    anyhow::ensure!(s.len() % 2 == 0, "odd-length hex string");
+    (0..s.len())
+        .step_by(2)
+        .map(|i| {
+            u8::from_str_radix(&s[i..i + 2], 16)
+                .map_err(|_| anyhow::anyhow!("bad hex byte `{}`", &s[i..i + 2]))
+        })
+        .collect()
 }
 
 fn parse_function_spec(v: &Json) -> anyhow::Result<FunctionSpec> {
@@ -141,7 +229,7 @@ fn parse_function_spec(v: &Json) -> anyhow::Result<FunctionSpec> {
     }
     Ok(FunctionSpec {
         name: v.req_str("name")?.to_string(),
-        image: v.req_str("image")?.to_string(),
+        image: v.req_str("image")?.into(),
         memory: v.get("memory").and_then(Json::as_u64).unwrap_or(128 << 20),
         gpus: v.get("gpus").and_then(Json::as_u64).unwrap_or(0) as u32,
         labels,
@@ -230,6 +318,83 @@ pub mod client {
         Ok((resp.body, latency))
     }
 
+    /// Invoke a batch of functions in one round trip via `_batch`.
+    ///
+    /// `Ok(Some(results))` carries one result per call. `Ok(None)` means
+    /// the gateway *refused before executing anything* (404/400 — e.g. an
+    /// older gateway without the verb), so the caller may safely fall back
+    /// to per-call invokes. Any other failure (transport error, non-OK
+    /// status, malformed or short response) returns `Err`: the gateway may
+    /// already have executed the batch, so retrying would double-execute.
+    /// Fails whole when a payload is not UTF-8 (the JSON wire format
+    /// carries payloads as text — the engine's envelopes always are).
+    #[allow(clippy::type_complexity)]
+    pub fn invoke_batch(
+        addr: &str,
+        calls: &[(String, crate::util::bytes::Bytes)],
+    ) -> anyhow::Result<Option<Vec<anyhow::Result<(crate::util::bytes::Bytes, f64)>>>> {
+        let mut entries = Vec::with_capacity(calls.len());
+        for (name, payload) in calls {
+            let text = std::str::from_utf8(payload)
+                .map_err(|_| anyhow::anyhow!("batch wire path requires UTF-8 payloads"))?;
+            let mut o = Json::obj();
+            o.set("name", name.as_str().into()).set("payload", text.into());
+            entries.push(o);
+        }
+        let mut body = Json::obj();
+        body.set("calls", Json::Arr(entries));
+        let resp = http::request(
+            addr,
+            "POST",
+            "/function/_batch",
+            &[("Content-Type", "application/json")],
+            body.to_string().as_bytes(),
+        )?;
+        if resp.status == 404 || resp.status == 400 {
+            // Refused before execution: the verb is unknown to this
+            // gateway (or the request was rejected at parse time).
+            return Ok(None);
+        }
+        if !resp.ok() {
+            anyhow::bail!(
+                "batch invoke on {addr}: {} {}",
+                resp.status,
+                resp.body_str().unwrap_or("")
+            );
+        }
+        let v = resp.json_body()?;
+        let results = v
+            .get("results")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("malformed batch response"))?;
+        anyhow::ensure!(
+            results.len() == calls.len(),
+            "batch response arity {} != {} calls",
+            results.len(),
+            calls.len()
+        );
+        let decoded = results
+            .iter()
+            .map(|r| {
+                if r.get("ok").and_then(Json::as_bool).unwrap_or(false) {
+                    let lat = r.get("latency").and_then(Json::as_f64).unwrap_or(0.0);
+                    let out = match r.get("output_hex").and_then(Json::as_str) {
+                        Some(hexed) => crate::util::bytes::Bytes::from(super::hex_decode(hexed)?),
+                        None => crate::util::bytes::Bytes::from(
+                            r.get("output").and_then(Json::as_str).unwrap_or(""),
+                        ),
+                    };
+                    Ok((out, lat))
+                } else {
+                    let msg =
+                        r.get("error").and_then(Json::as_str).unwrap_or("batch entry failed");
+                    Err(anyhow::anyhow!(msg.to_string()))
+                }
+            })
+            .collect();
+        Ok(Some(decoded))
+    }
+
     /// List deployed functions.
     pub fn list(addr: &str) -> anyhow::Result<Vec<String>> {
         let resp = http::get(addr, "/system/functions")?;
@@ -289,6 +454,49 @@ mod tests {
         // Invoke needs no admin auth (matches OpenFaaS function path).
         client::deploy(&addr, "edgepwd", "f", "img/echo", 1 << 20, 0, &[]).unwrap();
         assert!(client::invoke(&addr, "f", b"x").is_ok());
+    }
+
+    #[test]
+    fn batch_endpoint_invokes_many_in_one_round_trip() {
+        let (server, backend) = gateway();
+        let addr = server.addr();
+        client::deploy(&addr, "edgepwd", "echo", "img/echo", 128 << 20, 0, &[]).unwrap();
+        let calls = vec![
+            ("echo".to_string(), Bytes::from("a")),
+            ("ghost".to_string(), Bytes::from("x")),
+            ("echo".to_string(), Bytes::from("b")),
+        ];
+        let results = client::invoke_batch(&addr, &calls).unwrap().expect("verb supported");
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].as_ref().unwrap().0, &b"a"[..]);
+        assert!(results[1].is_err(), "unknown function fails its entry only");
+        assert_eq!(results[2].as_ref().unwrap().0, &b"b"[..]);
+        assert_eq!(backend.describe("echo").unwrap().invocations, 2);
+    }
+
+    #[test]
+    fn batch_endpoint_roundtrips_binary_outputs_losslessly() {
+        let exec = Arc::new(NativeExecutor::new());
+        exec.register("img/bin", |_: &[u8]| Ok(vec![0xff, 0x00, 0xfe, b'x']));
+        let spec = ResourceSpec::paper_edge("unused");
+        let backend = Arc::new(FaasBackend::new(
+            spec,
+            exec as Arc<dyn super::super::faas::Executor>,
+            Arc::new(RealClock::new()),
+        ));
+        let server = FaasGateway::serve(Arc::clone(&backend), 2).unwrap();
+        let addr = server.addr();
+        client::deploy(&addr, "edgepwd", "bin", "img/bin", 1 << 20, 0, &[]).unwrap();
+        let calls = vec![("bin".to_string(), Bytes::from("{}"))];
+        let results = client::invoke_batch(&addr, &calls).unwrap().expect("verb supported");
+        assert_eq!(
+            results[0].as_ref().unwrap().0,
+            &[0xff, 0x00, 0xfe, b'x'][..],
+            "binary output survives the hex leg of the batch wire format"
+        );
+        assert_eq!(hex_decode(&hex_encode(&[0xde, 0xad, 0x01])).unwrap(), vec![0xde, 0xad, 0x01]);
+        assert!(hex_decode("zz").is_err(), "non-hex characters rejected");
+        assert!(hex_decode("abc").is_err(), "odd length rejected");
     }
 
     #[test]

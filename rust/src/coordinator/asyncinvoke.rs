@@ -20,6 +20,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::util::bytes::Bytes;
 use crate::util::json::Json;
 
 use super::functions::FunctionPackage;
@@ -29,11 +30,12 @@ use super::scheduler::FunctionCreation;
 /// Handle for one asynchronous invocation.
 pub type InvocationId = u64;
 
-/// Status of an async invocation.
+/// Status of an async invocation. Outputs are shared [`Bytes`]: polling or
+/// cloning a completed status bumps refcounts instead of copying payloads.
 #[derive(Debug, Clone)]
 pub enum AsyncStatus {
     Pending,
-    Done(Vec<(ResourceId, Vec<u8>, f64)>),
+    Done(Vec<(ResourceId, Bytes, f64)>),
     Failed(String),
 }
 
@@ -308,7 +310,7 @@ dag:
             reg.handle.deploy("hog", "img/noop", 127 << 29, 0, &[]).unwrap(); // 63.5 GB of 64
             reg
         };
-        hog_backend.handle.invoke("hog", b"").unwrap();
+        hog_backend.handle.invoke("hog", &Bytes::new()).unwrap();
         // Rescheduling must now move `f` to the other edge.
         let (old, new) =
             bed.faas.reschedule_function("mono", "f", &pkg, vec![bed.iot[0]]).unwrap();

@@ -26,11 +26,45 @@
 //! head-of-line-block a short one. Every node/run completion is also
 //! published to [`EdgeFaaS::on_engine_event`] subscribers, which is the hook
 //! `reschedule_function` reacts through mid-run.
+//!
+//! # Hot path & batching
+//!
+//! The paper puts EdgeFaaS "in the critical-path, acting like a router"
+//! for every invocation, so per-invocation overhead bounds system
+//! throughput. Two optimizations keep that overhead flat:
+//!
+//! * **Zero-copy envelopes.** A node's invocation envelope is assembled at
+//!   fire time, once per instance, into a shared [`Bytes`] buffer: the
+//!   `{"app":...,"function":...` head is serialized exactly once per node
+//!   and shared across all placements, and only the per-instance
+//!   `inputs`/`resource` tail is appended per placement. Workers and the
+//!   batch protocol clone refcounts, never payload bytes, and handler
+//!   outputs travel back the same way.
+//!
+//! * **Per-resource invocation batching.** When a worker acquires a
+//!   resource's admission slot it opportunistically drains other queued
+//!   instances bound for the *same* resource — admission-deferred ones
+//!   always, ready-queue ones only while the resource is saturated
+//!   (draining below the admission limit would trade away parallelism an
+//!   idle worker could provide) — up to [`DEFAULT_MAX_BATCH`] — and
+//!   executes them as one batch: a single
+//!   admission-slot acquisition, one backend `Batch` round trip
+//!   ([`super::handle::ResourceHandle::invoke_batch`]; per-task fallback for
+//!   backends without the verb), and one amortized completion pass that
+//!   takes the run-table lock twice per *batch* instead of twice per task.
+//!   A batch executes sequentially on one worker, so the per-resource
+//!   concurrency bound is unchanged, and results fan back out to their runs
+//!   in pop order — the exact order a lone worker would have produced —
+//!   preserving the determinism guarantee (identical firing orders/outputs
+//!   under `RealClock` and `VirtualClock`, batching on or off). Toggle with
+//!   [`EdgeFaaS::set_batching`] / [`EdgeFaaS::set_max_batch`]; measured by
+//!   `benches/ablation_concurrency.rs` (`BENCH_hotpath.json`).
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::util::bytes::Bytes;
 use crate::util::json::Json;
 
 use super::dag::RunState;
@@ -79,7 +113,10 @@ struct InstanceTask {
     /// Index into the node's placement list.
     instance: usize,
     resource: ResourceId,
-    inputs: Vec<String>,
+    /// Fully-assembled invocation envelope, built once at fire time (the
+    /// node-common head is serialized once and shared across placements).
+    /// Shared `Bytes`: the batch protocol clones refcounts, not payloads.
+    envelope: Bytes,
 }
 
 /// Bookkeeping for one in-flight workflow run.
@@ -139,6 +176,9 @@ pub(super) struct EngineCore {
     next_run: AtomicU64,
     max_workers: AtomicUsize,
     per_resource_slots: AtomicUsize,
+    /// Largest per-resource invocation batch a worker may drain (1 =
+    /// batching off: every instance dispatches individually).
+    max_batch: AtomicUsize,
     queue: Mutex<QueueState>,
     queue_cv: Condvar,
     runs: Mutex<RunTable>,
@@ -150,6 +190,8 @@ pub(super) struct EngineCore {
 pub const DEFAULT_MAX_WORKERS: usize = 16;
 /// Default concurrently-executing instances admitted per resource.
 pub const DEFAULT_PER_RESOURCE_SLOTS: usize = 8;
+/// Default cap on a per-resource invocation batch (see the module docs).
+pub const DEFAULT_MAX_BATCH: usize = 16;
 
 impl EngineCore {
     pub(super) fn new() -> EngineCore {
@@ -157,6 +199,7 @@ impl EngineCore {
             next_run: AtomicU64::new(0),
             max_workers: AtomicUsize::new(DEFAULT_MAX_WORKERS),
             per_resource_slots: AtomicUsize::new(DEFAULT_PER_RESOURCE_SLOTS),
+            max_batch: AtomicUsize::new(DEFAULT_MAX_BATCH),
             queue: Mutex::new(QueueState {
                 ready: VecDeque::new(),
                 deferred: VecDeque::new(),
@@ -222,8 +265,8 @@ fn pop_task(q: &mut QueueState, limit: usize) -> Popped {
     }
 }
 
-/// Execute one placement instance: build the invocation envelope, call the
-/// resource gateway, parse the outputs (the invoker's wire format).
+/// Execute one placement instance: call the resource gateway with the
+/// prebuilt envelope and parse the outputs (the invoker's wire format).
 ///
 /// A panicking function handler is caught and converted into an instance
 /// error: letting it unwind through the worker would leak the admission
@@ -232,18 +275,9 @@ fn pop_task(q: &mut QueueState, limit: usize) -> Popped {
 fn run_instance(faas: &EdgeFaaS, t: &InstanceTask) -> anyhow::Result<InstanceResult> {
     let invoked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
         || -> anyhow::Result<InstanceResult> {
-            let mut envelope = Json::obj();
-            envelope
-                .set("app", t.app.as_str().into())
-                .set("function", t.function.as_str().into())
-                .set("resource", (t.resource as u64).into())
-                .set(
-                    "inputs",
-                    Json::Arr(t.inputs.iter().map(|u| Json::Str(u.clone())).collect()),
-                );
             let reg = faas.resource(t.resource)?;
             let qname = EdgeFaaS::qualified(&t.app, &t.function);
-            let (out, latency) = reg.handle.invoke(&qname, envelope.to_string().as_bytes())?;
+            let (out, latency) = reg.handle.invoke(&qname, &t.envelope)?;
             let outputs = parse_outputs(&out)?;
             Ok(InstanceResult { resource: t.resource, outputs, latency })
         },
@@ -251,12 +285,51 @@ fn run_instance(faas: &EdgeFaaS, t: &InstanceTask) -> anyhow::Result<InstanceRes
     match invoked {
         Ok(result) => result,
         Err(payload) => {
-            let what = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "non-string panic payload".to_string());
+            let what = crate::util::panic_message(&*payload);
             Err(anyhow::anyhow!("function handler panicked: {what}"))
+        }
+    }
+}
+
+/// Pull queued instances bound for `rid` (admission-deferred first — they
+/// are oldest — then ready-queue order) into `out`, up to `max_total`
+/// entries. The drained instances execute sequentially under the admission
+/// slot the first instance already holds, so the per-resource concurrency
+/// bound is preserved.
+///
+/// Ready-queue instances are drained only while the resource is saturated
+/// (`in_use >= limit`): below the limit, an idle worker could run them in
+/// parallel, and pulling them into this batch would trade that parallelism
+/// away. Deferred instances are admission-blocked either way, so joining
+/// the batch never costs them anything.
+fn drain_same_resource(
+    q: &mut QueueState,
+    rid: ResourceId,
+    limit: usize,
+    max_total: usize,
+    out: &mut Vec<InstanceTask>,
+) {
+    let mut i = 0;
+    while out.len() < max_total && i < q.deferred.len() {
+        if q.deferred[i].resource == rid {
+            out.push(q.deferred.remove(i).expect("index in bounds"));
+        } else {
+            i += 1;
+        }
+    }
+    if q.in_use.get(&rid).copied().unwrap_or(0) < limit {
+        return;
+    }
+    let mut i = 0;
+    while out.len() < max_total && i < q.ready.len() {
+        let matches_rid = matches!(&q.ready[i], Task::Instance(t) if t.resource == rid);
+        if matches_rid {
+            match q.ready.remove(i) {
+                Some(Task::Instance(t)) => out.push(t),
+                _ => unreachable!("checked variant above"),
+            }
+        } else {
+            i += 1;
         }
     }
 }
@@ -292,21 +365,28 @@ fn engine_worker(faas: Arc<EdgeFaaS>) {
                 let mut q = faas.engine.queue.lock().unwrap();
                 q.busy = q.busy.saturating_sub(1);
             }
-            Task::Instance(t) => {
-                // Fast-drain instances of runs that already failed.
-                let skip = {
-                    let runs = faas.engine.runs.lock().unwrap();
-                    runs.map.get(&t.run).map(|e| e.failed.is_some() || e.done).unwrap_or(true)
-                };
-                let outcome = if skip { None } else { Some(run_instance(&faas, &t)) };
-                faas.complete_instance(&t, outcome);
+            Task::Instance(first) => {
+                let rid = first.resource;
+                // Opportunistically drain more same-resource work into one
+                // batch (amortizes slot bookkeeping, completion locking and
+                // — through the backend's Batch verb — the gateway round
+                // trip). The batch runs sequentially on this worker under
+                // the single slot acquired by the pop above.
+                let mut tasks = vec![first];
+                let max_batch = faas.engine.max_batch.load(Ordering::Relaxed).max(1);
+                if max_batch > 1 {
+                    let limit = faas.engine.per_resource_slots.load(Ordering::Relaxed).max(1);
+                    let mut q = faas.engine.queue.lock().unwrap();
+                    drain_same_resource(&mut q, rid, limit, max_batch, &mut tasks);
+                }
+                faas.run_batch(rid, tasks);
                 {
                     let mut q = faas.engine.queue.lock().unwrap();
                     q.busy = q.busy.saturating_sub(1);
-                    if let Some(n) = q.in_use.get_mut(&t.resource) {
+                    if let Some(n) = q.in_use.get_mut(&rid) {
                         *n = n.saturating_sub(1);
                         if *n == 0 {
-                            q.in_use.remove(&t.resource);
+                            q.in_use.remove(&rid);
                         }
                     }
                 }
@@ -486,10 +566,37 @@ impl EdgeFaaS {
         self.engine.queue_cv.notify_all();
     }
 
+    /// Toggle per-resource invocation batching (see the module docs).
+    /// Enabled by default with [`DEFAULT_MAX_BATCH`]; disabling dispatches
+    /// every instance individually. Batching on or off, runs produce
+    /// identical firing orders and outputs — only the dispatch overhead
+    /// changes.
+    pub fn set_batching(&self, enabled: bool) {
+        self.set_max_batch(if enabled { DEFAULT_MAX_BATCH } else { 1 });
+    }
+
+    /// Cap the per-resource invocation batch size (clamped to >= 1; 1
+    /// disables batching).
+    pub fn set_max_batch(&self, max_batch: usize) {
+        self.engine.max_batch.store(max_batch.max(1), Ordering::Relaxed);
+    }
+
+    /// Whether per-resource invocation batching is currently enabled.
+    pub fn batching_enabled(&self) -> bool {
+        self.engine.max_batch.load(Ordering::Relaxed) > 1
+    }
+
     // ------------------------------------------------------------ internal --
 
     /// Fire one DAG node: route its inputs, record bookkeeping, and collect
     /// one task per placement instance into `batch`.
+    ///
+    /// Envelopes are assembled here, once per instance, into shared
+    /// [`Bytes`]: the node-common `{"app":...,"function":...` head is
+    /// serialized exactly once and shared across placements, and workers
+    /// never rebuild or re-serialize a JSON tree on the dispatch path. Key
+    /// order (`app`, `function`, `inputs`, `resource`) matches the sorted
+    /// order [`Json`] serialization used, so the wire format is unchanged.
     fn fire_node(
         &self,
         run: RunId,
@@ -511,118 +618,239 @@ impl EdgeFaaS {
         entry.pending.insert(fname.to_string(), placements.len());
         entry.partial.insert(fname.to_string(), vec![None; placements.len()]);
         entry.open_tasks += placements.len();
+        // Serialize the node-common envelope head once (JSON-escaped).
+        let mut head = String::with_capacity(32 + app.len() + fname.len());
+        head.push_str("{\"app\":");
+        head.push_str(&Json::Str(app.clone()).to_string());
+        head.push_str(",\"function\":");
+        head.push_str(&Json::Str(fname.to_string()).to_string());
         for (i, (rid, inputs)) in placements.into_iter().zip(per_instance).enumerate() {
+            let inputs_json = Json::Arr(inputs.into_iter().map(Json::Str).collect()).to_string();
+            let mut env = String::with_capacity(head.len() + inputs_json.len() + 24);
+            env.push_str(&head);
+            env.push_str(",\"inputs\":");
+            env.push_str(&inputs_json);
+            env.push_str(",\"resource\":");
+            env.push_str(&(rid as u64).to_string());
+            env.push('}');
             batch.push(Task::Instance(InstanceTask {
                 run,
                 app: app.clone(),
                 function: fname.to_string(),
                 instance: i,
                 resource: rid,
-                inputs,
+                envelope: Bytes::from(env),
             }));
         }
         Ok(())
     }
 
-    /// Process one finished (or skipped) instance.
+    /// Execute a drained same-resource batch and fan the results back out
+    /// to their runs. A batch of one takes the exact single-instance path;
+    /// larger batches go through the backend's `Batch` verb
+    /// ([`super::handle::ResourceHandle::invoke_batch`]) — one gateway
+    /// round trip, per-entry failure containment, results in task order.
+    fn run_batch(self: &Arc<Self>, rid: ResourceId, tasks: Vec<InstanceTask>) {
+        // Fast-drain instances of runs that already failed or finished
+        // (one lock for the whole batch). Like the unbatched path — where
+        // siblings already executing on other workers cannot be recalled
+        // either — this check is best-effort: a run failing mid-batch
+        // wastes at most the remainder of this one batch.
+        let skip: Vec<bool> = {
+            let runs = self.engine.runs.lock().unwrap();
+            tasks
+                .iter()
+                .map(|t| {
+                    runs.map.get(&t.run).map(|e| e.failed.is_some() || e.done).unwrap_or(true)
+                })
+                .collect()
+        };
+        let mut outcomes: Vec<Option<anyhow::Result<InstanceResult>>> =
+            skip.iter().map(|_| None).collect();
+        let live: Vec<usize> = (0..tasks.len()).filter(|&i| !skip[i]).collect();
+        match live.len() {
+            0 => {}
+            1 => {
+                let i = live[0];
+                outcomes[i] = Some(run_instance(self, &tasks[i]));
+            }
+            _ => match self.resource(rid) {
+                Err(e) => {
+                    let msg = e.to_string();
+                    for &i in &live {
+                        outcomes[i] = Some(Err(anyhow::anyhow!(msg.clone())));
+                    }
+                }
+                Ok(reg) => {
+                    // Refcount bumps only: the envelopes were built at fire
+                    // time and are shared with the backend call.
+                    let calls: Vec<(String, Bytes)> = live
+                        .iter()
+                        .map(|&i| {
+                            let t = &tasks[i];
+                            (EdgeFaaS::qualified(&t.app, &t.function), t.envelope.clone())
+                        })
+                        .collect();
+                    let invoked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        reg.handle.invoke_batch(&calls)
+                    }));
+                    match invoked {
+                        Ok(results) => {
+                            // Enforce the one-result-per-call contract: a
+                            // misbehaving handle returning too few results
+                            // must fail the unmatched tasks loudly, not
+                            // strand them as "skipped" (which would wedge
+                            // the run's pending count forever).
+                            let mut results = results.into_iter();
+                            for &i in &live {
+                                outcomes[i] = Some(match results.next() {
+                                    Some(result) => result.and_then(|(out, latency)| {
+                                        Ok(InstanceResult {
+                                            resource: rid,
+                                            outputs: parse_outputs(&out)?,
+                                            latency,
+                                        })
+                                    }),
+                                    None => Err(anyhow::anyhow!(
+                                        "backend returned too few batch results"
+                                    )),
+                                });
+                            }
+                        }
+                        Err(payload) => {
+                            // Only a handle without per-entry containment
+                            // can unwind to here; fail the whole batch.
+                            let what = crate::util::panic_message(&*payload);
+                            for &i in &live {
+                                outcomes[i] = Some(Err(anyhow::anyhow!(
+                                    "function handler panicked: {what}"
+                                )));
+                            }
+                        }
+                    }
+                }
+            },
+        }
+        self.complete_batch(&tasks, outcomes);
+    }
+
+    /// Process a batch of finished (or skipped) instances, sequentially in
+    /// task order — exactly the bookkeeping N single completions would do,
+    /// but with the run-table lock taken twice per batch instead of twice
+    /// per task.
     ///
-    /// Two lock phases with the node-completion event emitted *between*
+    /// Two lock phases with the node-completion events emitted *between*
     /// them: subscribers observe `NodeCompleted` before the node's
     /// dependents are scheduled, so a callback (e.g. one invoking
     /// `reschedule_function` against fresh monitoring data) can still
     /// influence where the next stage lands.
-    fn complete_instance(
+    fn complete_batch(
         self: &Arc<Self>,
-        task: &InstanceTask,
-        outcome: Option<anyhow::Result<InstanceResult>>,
+        tasks: &[InstanceTask],
+        outcomes: Vec<Option<anyhow::Result<InstanceResult>>>,
     ) {
-        // Phase 1: record the instance; detect node completion.
+        // Phase 1: record every instance; detect node completions.
         let mut node_events = Vec::new();
-        let mut node_done = false;
+        let mut node_done = vec![false; tasks.len()];
         {
             let mut runs = self.engine.runs.lock().unwrap();
-            let Some(entry) = runs.map.get_mut(&task.run) else { return };
-            entry.open_tasks = entry.open_tasks.saturating_sub(1);
-            match outcome {
-                None => {} // skipped: the run had already failed
-                Some(Ok(r)) => {
-                    if entry.failed.is_none() {
-                        if let Some(slots) = entry.partial.get_mut(&task.function) {
-                            slots[task.instance] = Some(r);
-                        }
-                        node_done = match entry.pending.get_mut(&task.function) {
-                            Some(p) => {
-                                *p -= 1;
-                                *p == 0
+            for ((idx, task), outcome) in tasks.iter().enumerate().zip(outcomes) {
+                let Some(entry) = runs.map.get_mut(&task.run) else { continue };
+                entry.open_tasks = entry.open_tasks.saturating_sub(1);
+                match outcome {
+                    None => {} // skipped: the run had already failed
+                    Some(Ok(r)) => {
+                        if entry.failed.is_none() {
+                            if let Some(slots) = entry.partial.get_mut(&task.function) {
+                                slots[task.instance] = Some(r);
                             }
-                            None => false,
-                        };
-                        if node_done {
-                            entry.pending.remove(&task.function);
-                            let slots = entry.partial.remove(&task.function).unwrap_or_default();
-                            let instances: Vec<InstanceResult> =
-                                slots.into_iter().flatten().collect();
-                            let latency =
-                                instances.iter().map(|i| i.latency).fold(0.0, f64::max);
-                            node_events.push(EngineEvent::NodeCompleted {
-                                run: task.run,
-                                app: entry.app_name.clone(),
-                                function: task.function.clone(),
-                                instances: instances.len(),
-                                latency,
-                            });
-                            entry.result.functions.insert(task.function.clone(), instances);
+                            node_done[idx] = match entry.pending.get_mut(&task.function) {
+                                Some(p) => {
+                                    *p -= 1;
+                                    *p == 0
+                                }
+                                None => false,
+                            };
+                            if node_done[idx] {
+                                entry.pending.remove(&task.function);
+                                let slots =
+                                    entry.partial.remove(&task.function).unwrap_or_default();
+                                let instances: Vec<InstanceResult> =
+                                    slots.into_iter().flatten().collect();
+                                let latency =
+                                    instances.iter().map(|i| i.latency).fold(0.0, f64::max);
+                                node_events.push(EngineEvent::NodeCompleted {
+                                    run: task.run,
+                                    app: entry.app_name.clone(),
+                                    function: task.function.clone(),
+                                    instances: instances.len(),
+                                    latency,
+                                });
+                                entry.result.functions.insert(task.function.clone(), instances);
+                            }
                         }
                     }
-                }
-                Some(Err(e)) => {
-                    let msg = format!(
-                        "workflow `{}` function `{}` on resource {}: {e}",
-                        entry.app_name, task.function, task.resource
-                    );
-                    log::warn!("{msg}");
-                    entry.failed.get_or_insert(msg);
-                    entry.pending.remove(&task.function);
-                    entry.partial.remove(&task.function);
+                    Some(Err(e)) => {
+                        let msg = format!(
+                            "workflow `{}` function `{}` on resource {}: {e}",
+                            entry.app_name, task.function, task.resource
+                        );
+                        log::warn!("{msg}");
+                        entry.failed.get_or_insert(msg);
+                        entry.pending.remove(&task.function);
+                        entry.partial.remove(&task.function);
+                    }
                 }
             }
         }
         self.emit_events(&node_events);
 
         // Phase 2: fire newly-ready dependents (sorted by topological index
-        // for deterministic firing orders) and detect run completion.
+        // for deterministic firing orders) in task order so firing orders
+        // match unbatched execution — for EVERY completed node in the batch
+        // before any run-completion check. Two batch entries can belong to
+        // one run, and `check_done` treats `open_tasks == 0` as
+        // run-complete: checking an earlier entry's run before a later
+        // entry fired its dependents would retire the run with downstream
+        // nodes unfired. (The unbatched path kept this invariant implicitly
+        // by interleaving fire and check per instance.)
         let mut run_events = Vec::new();
         {
             let mut runs = self.engine.runs.lock().unwrap();
-            let completed = match runs.map.get_mut(&task.run) {
-                None => false,
-                Some(entry) => {
-                    if node_done && entry.failed.is_none() {
-                        let application = Arc::clone(&entry.app);
-                        let mut ready = entry.state.complete(&application.dag, &task.function);
-                        ready.sort_by_key(|n| {
-                            application
-                                .dag
-                                .topo_order
-                                .iter()
-                                .position(|x| x == n)
-                                .unwrap_or(usize::MAX)
-                        });
-                        let mut batch = Vec::new();
-                        for f in &ready {
-                            if let Err(e) = self.fire_node(task.run, entry, f, &mut batch) {
-                                entry.failed.get_or_insert(e.to_string());
-                                break;
-                            }
-                        }
-                        self.engine.enqueue(batch);
-                    }
-                    self.check_done(task.run, entry, &mut run_events)
+            let mut to_enqueue = Vec::new();
+            for (idx, task) in tasks.iter().enumerate() {
+                if !node_done[idx] {
+                    continue;
                 }
-            };
-            if completed {
-                Self::retire_finished(&mut runs, task.run);
+                let Some(entry) = runs.map.get_mut(&task.run) else { continue };
+                if entry.failed.is_some() {
+                    continue;
+                }
+                let application = Arc::clone(&entry.app);
+                let mut ready = entry.state.complete(&application.dag, &task.function);
+                ready.sort_by_key(|n| {
+                    application.dag.topo_order.iter().position(|x| x == n).unwrap_or(usize::MAX)
+                });
+                for f in &ready {
+                    if let Err(e) = self.fire_node(task.run, entry, f, &mut to_enqueue) {
+                        entry.failed.get_or_insert(e.to_string());
+                        break;
+                    }
+                }
             }
+            // Now detect run completions (idempotent per run via the `done`
+            // flag, so duplicate runs in one batch check harmlessly twice).
+            for task in tasks {
+                let completed = match runs.map.get_mut(&task.run) {
+                    None => false,
+                    Some(entry) => self.check_done(task.run, entry, &mut run_events),
+                };
+                if completed {
+                    Self::retire_finished(&mut runs, task.run);
+                }
+            }
+            // One enqueue (queue lock + wakeup) for the whole batch.
+            self.engine.enqueue(to_enqueue);
         }
         if run_events.iter().any(|e| matches!(e, EngineEvent::RunCompleted { .. })) {
             self.engine.done_cv.notify_all();
@@ -843,6 +1071,34 @@ dag:
                     "run {tag} got cross-contaminated: {out}"
                 );
                 assert_eq!(result.firing_order, vec!["gen", "sum"]);
+            }
+        }
+    }
+
+    #[test]
+    fn batching_on_and_off_produce_identical_results() {
+        for enabled in [false, true] {
+            let b = chain_bed(Arc::new(RealClock::new()));
+            b.faas.set_batching(enabled);
+            assert_eq!(b.faas.batching_enabled(), enabled);
+            // One admission slot per resource forces queuing, so the
+            // batched pass actually forms multi-task batches.
+            b.faas.set_engine_limits(8, 1);
+            let runs: Vec<(String, RunId)> = (0..6)
+                .map(|i| {
+                    let tag = format!("r{i}");
+                    let id = b.faas.submit_workflow("chain", &entry_for(&tag)).unwrap();
+                    (tag, id)
+                })
+                .collect();
+            for (tag, id) in runs {
+                let result = b.faas.wait_workflow(id, 30.0).unwrap();
+                assert_eq!(result.firing_order, vec!["gen", "sum"], "batching={enabled}");
+                let out = &result.functions["sum"][0].outputs[0];
+                assert!(
+                    out.contains(&format!("{tag}-sum-n2")),
+                    "batching={enabled}: run {tag} contaminated: {out}"
+                );
             }
         }
     }

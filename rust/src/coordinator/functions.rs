@@ -8,6 +8,7 @@
 
 use std::collections::HashMap;
 
+use crate::util::bytes::Bytes;
 use crate::util::json::Json;
 use crate::util::threadpool::scoped_map;
 
@@ -195,7 +196,7 @@ impl EdgeFaaS {
         function: &str,
         payload: &Json,
         invoke_one: bool,
-    ) -> anyhow::Result<Vec<(ResourceId, Vec<u8>, f64)>> {
+    ) -> anyhow::Result<Vec<(ResourceId, Bytes, f64)>> {
         let mut candidates = self.candidates_of(app, function)?;
         if invoke_one {
             candidates.truncate(1);
@@ -204,7 +205,7 @@ impl EdgeFaaS {
             anyhow::bail!("function `{app}.{function}` has no deployments");
         }
         let qname = Self::qualified(app, function);
-        let work: Vec<(ResourceId, Json)> = candidates
+        let work: Vec<(ResourceId, Bytes)> = candidates
             .iter()
             .map(|&rid| {
                 let mut envelope = payload.clone();
@@ -218,7 +219,7 @@ impl EdgeFaaS {
                     .set("resource", (rid as u64).into())
                     .set("app", app.into())
                     .set("function", function.into());
-                (rid, envelope)
+                (rid, Bytes::from(envelope.to_string()))
             })
             .collect();
         // Fast path: a single instance needs no fan-out threads (spawning a
@@ -226,12 +227,12 @@ impl EdgeFaaS {
         if work.len() == 1 {
             let (rid, envelope) = work.into_iter().next().unwrap();
             let reg = self.resource(rid)?;
-            let (out, lat) = reg.handle.invoke(&qname, envelope.to_string().as_bytes())?;
+            let (out, lat) = reg.handle.invoke(&qname, &envelope)?;
             return Ok(vec![(rid, out, lat)]);
         }
         let results = scoped_map(work, 8, |(rid, envelope)| {
             let reg = self.resource(rid)?;
-            let (out, lat) = reg.handle.invoke(&qname, envelope.to_string().as_bytes())?;
+            let (out, lat) = reg.handle.invoke(&qname, &envelope)?;
             Ok::<_, anyhow::Error>((rid, out, lat))
         });
         results.into_iter().collect()

@@ -246,7 +246,7 @@ impl Handler for EdgeFaasGateway {
                     .get("url")
                     .ok_or_else(|| anyhow::anyhow!("missing url parameter"))?;
                 let data = self.faas.get_object(&ObjectUrl::parse(url)?)?;
-                Ok(Response::bytes(200, data))
+                Ok(Response::bytes(200, data.to_vec()))
             })()),
             ("DELETE", ["apps", app, "objects", bucket, rest @ ..]) if !rest.is_empty() => {
                 let object = rest.join("/");

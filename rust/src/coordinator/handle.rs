@@ -19,8 +19,14 @@ use crate::cluster::gateway::client as faas_client;
 use crate::monitor::metrics::ResourceUsage;
 use crate::objstore::gateway::client as store_client;
 use crate::objstore::ObjectStore;
+use crate::util::bytes::Bytes;
 
 /// Abstract per-resource operations the coordinator needs.
+///
+/// The data plane (`invoke` / `invoke_batch` / `put_object` / `get_object`)
+/// moves shared [`Bytes`]: against a [`LocalHandle`] no payload is ever
+/// copied (refcount bumps end to end); the [`HttpHandle`] copies exactly
+/// once per direction at the wire.
 pub trait ResourceHandle: Send + Sync {
     // ---- FaaS verbs (OpenFaaS gateway) ----
     fn deploy(
@@ -32,7 +38,14 @@ pub trait ResourceHandle: Send + Sync {
         labels: &[(String, String)],
     ) -> anyhow::Result<()>;
     fn remove(&self, name: &str) -> anyhow::Result<()>;
-    fn invoke(&self, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)>;
+    fn invoke(&self, name: &str, payload: &Bytes) -> anyhow::Result<(Bytes, f64)>;
+    /// The backend protocol's `Batch` verb: invoke several functions in one
+    /// gateway round trip, one result per entry. The default implementation
+    /// falls back to per-task [`ResourceHandle::invoke`] for backends that
+    /// do not support batching.
+    fn invoke_batch(&self, calls: &[(String, Bytes)]) -> Vec<anyhow::Result<(Bytes, f64)>> {
+        calls.iter().map(|(name, payload)| self.invoke(name, payload)).collect()
+    }
     fn list(&self) -> anyhow::Result<Vec<String>>;
     fn describe(&self, name: &str) -> anyhow::Result<crate::util::json::Json>;
 
@@ -42,8 +55,8 @@ pub trait ResourceHandle: Send + Sync {
     // ---- storage verbs (MinIO) ----
     fn make_bucket(&self, bucket: &str) -> anyhow::Result<()>;
     fn remove_bucket(&self, bucket: &str) -> anyhow::Result<()>;
-    fn put_object(&self, bucket: &str, object: &str, data: &[u8]) -> anyhow::Result<()>;
-    fn get_object(&self, bucket: &str, object: &str) -> anyhow::Result<Vec<u8>>;
+    fn put_object(&self, bucket: &str, object: &str, data: Bytes) -> anyhow::Result<()>;
+    fn get_object(&self, bucket: &str, object: &str) -> anyhow::Result<Bytes>;
     fn remove_object(&self, bucket: &str, object: &str) -> anyhow::Result<()>;
     fn list_objects(&self, bucket: &str) -> anyhow::Result<Vec<String>>;
     /// Total bytes stored (unregistration requires zero).
@@ -73,7 +86,13 @@ impl ResourceHandle for LocalHandle {
     ) -> anyhow::Result<()> {
         let labels: HashMap<String, String> = labels.iter().cloned().collect();
         self.backend
-            .deploy(FunctionSpec { name: name.into(), image: image.into(), memory, gpus, labels })
+            .deploy(FunctionSpec {
+                name: name.into(),
+                image: std::sync::Arc::from(image),
+                memory,
+                gpus,
+                labels,
+            })
             .map_err(|e| anyhow::anyhow!(e))
     }
 
@@ -81,8 +100,12 @@ impl ResourceHandle for LocalHandle {
         self.backend.remove(name).map_err(|e| anyhow::anyhow!(e))
     }
 
-    fn invoke(&self, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)> {
+    fn invoke(&self, name: &str, payload: &Bytes) -> anyhow::Result<(Bytes, f64)> {
         self.backend.invoke(name, payload)
+    }
+
+    fn invoke_batch(&self, calls: &[(String, Bytes)]) -> Vec<anyhow::Result<(Bytes, f64)>> {
+        self.backend.invoke_batch(calls)
     }
 
     fn list(&self) -> anyhow::Result<Vec<String>> {
@@ -93,7 +116,7 @@ impl ResourceHandle for LocalHandle {
         let st = self.backend.describe(name).map_err(|e| anyhow::anyhow!(e))?;
         let mut o = crate::util::json::Json::obj();
         o.set("name", st.spec.name.as_str().into())
-            .set("image", st.spec.image.as_str().into())
+            .set("image", (&*st.spec.image).into())
             .set("replicas", (st.replicas as u64).into())
             .set("invocations", st.invocations.into())
             .set("url", st.url.as_str().into());
@@ -121,11 +144,12 @@ impl ResourceHandle for LocalHandle {
         self.store.remove_bucket(bucket).map_err(|e| anyhow::anyhow!(e))
     }
 
-    fn put_object(&self, bucket: &str, object: &str, data: &[u8]) -> anyhow::Result<()> {
-        self.store.put_object(bucket, object, data.to_vec()).map_err(|e| anyhow::anyhow!(e))
+    fn put_object(&self, bucket: &str, object: &str, data: Bytes) -> anyhow::Result<()> {
+        // Zero-copy: the shared buffer is moved into the store as-is.
+        self.store.put_object(bucket, object, data).map_err(|e| anyhow::anyhow!(e))
     }
 
-    fn get_object(&self, bucket: &str, object: &str) -> anyhow::Result<Vec<u8>> {
+    fn get_object(&self, bucket: &str, object: &str) -> anyhow::Result<Bytes> {
         self.store.get_object(bucket, object).map_err(|e| anyhow::anyhow!(e))
     }
 
@@ -171,8 +195,34 @@ impl ResourceHandle for HttpHandle {
         faas_client::remove(&self.faas_addr, &self.pwd, name)
     }
 
-    fn invoke(&self, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)> {
-        faas_client::invoke(&self.faas_addr, name, payload)
+    fn invoke(&self, name: &str, payload: &Bytes) -> anyhow::Result<(Bytes, f64)> {
+        let (out, lat) = faas_client::invoke(&self.faas_addr, name, payload)?;
+        Ok((Bytes::from(out), lat))
+    }
+
+    fn invoke_batch(&self, calls: &[(String, Bytes)]) -> Vec<anyhow::Result<(Bytes, f64)>> {
+        // One wire round trip when the payloads are text (the engine's JSON
+        // envelopes always are). Per-call fallback happens only when the
+        // batch verifiably did NOT execute: binary payloads (refused here,
+        // before any wire traffic) or a pre-execution refusal from the
+        // gateway (`Ok(None)`: 404/400, e.g. a gateway without the verb).
+        // Ambiguous failures — transport/parse errors after the gateway may
+        // have executed the batch — fail every entry instead of retrying,
+        // so non-idempotent handlers never run twice.
+        if calls.iter().all(|(_, p)| std::str::from_utf8(p).is_ok()) {
+            match faas_client::invoke_batch(&self.faas_addr, calls) {
+                Ok(Some(results)) => return results,
+                Ok(None) => {} // gateway refused pre-execution: fall back
+                Err(e) => {
+                    let msg = e.to_string();
+                    return calls
+                        .iter()
+                        .map(|_| Err(anyhow::anyhow!("batch invoke failed: {}", msg.clone())))
+                        .collect();
+                }
+            }
+        }
+        calls.iter().map(|(name, payload)| self.invoke(name, payload)).collect()
     }
 
     fn list(&self) -> anyhow::Result<Vec<String>> {
@@ -198,19 +248,20 @@ impl ResourceHandle for HttpHandle {
         store_client::remove_bucket(&self.minio_addr, &self.access_key, &self.secret_key, bucket)
     }
 
-    fn put_object(&self, bucket: &str, object: &str, data: &[u8]) -> anyhow::Result<()> {
+    fn put_object(&self, bucket: &str, object: &str, data: Bytes) -> anyhow::Result<()> {
         store_client::put_object(
             &self.minio_addr,
             &self.access_key,
             &self.secret_key,
             bucket,
             object,
-            data,
+            &data,
         )
     }
 
-    fn get_object(&self, bucket: &str, object: &str) -> anyhow::Result<Vec<u8>> {
+    fn get_object(&self, bucket: &str, object: &str) -> anyhow::Result<Bytes> {
         store_client::get_object(&self.minio_addr, &self.access_key, &self.secret_key, bucket, object)
+            .map(Bytes::from)
     }
 
     fn remove_object(&self, bucket: &str, object: &str) -> anyhow::Result<()> {

@@ -383,7 +383,7 @@ mod tests {
         reg.handle.remove("app.f").unwrap();
         // Store data -> unregister must fail.
         reg.handle.make_bucket("app.data").unwrap();
-        reg.handle.put_object("app.data", "o", b"x").unwrap();
+        reg.handle.put_object("app.data", "o", crate::util::bytes::Bytes::from("x")).unwrap();
         assert!(b.faas.unregister(id).is_err());
         reg.handle.remove_object("app.data", "o").unwrap();
         reg.handle.remove_bucket("app.data").unwrap();

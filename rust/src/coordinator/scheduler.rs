@@ -217,8 +217,12 @@ impl EdgeFaaS {
             let res = self.resources.read().unwrap();
             upstream_ids.iter().filter_map(|id| res.get(id).map(|r| r.net_node)).collect()
         };
-        let sched = self.scheduler.read().unwrap().clone();
+        // Borrow the policy through the read guard for the duration of the
+        // scheduling call — no clone of the scheduler on the hot path (the
+        // guard is released as soon as the decision is made; `set_scheduler`
+        // only needs the write lock between decisions).
         let chosen = {
+            let sched = self.scheduler.read().unwrap();
             let topo = self.topology.read().unwrap();
             let ctx = ScheduleCtx { candidates, upstream_nodes, topology: &topo };
             sched.schedule(request, &ctx)?

@@ -11,6 +11,7 @@ use crate::objstore::store::valid_bucket_name;
 
 use super::placement;
 use super::resource::{EdgeFaaS, ResourceId};
+use crate::util::bytes::Bytes;
 use crate::util::json::Json;
 
 /// A parsed EdgeFaaS object URL:
@@ -126,12 +127,29 @@ impl EdgeFaaS {
 
     /// Add an object; returns its URL ("Each successfully uploaded object is
     /// given a url to user where user can use to access the data").
+    ///
+    /// The borrowed payload is copied into a shared buffer once; callers
+    /// that already hold a [`Bytes`] should use
+    /// [`Self::put_object_bytes`] for a fully zero-copy store.
     pub fn put_object(
         &self,
         app: &str,
         bucket: &str,
         object: &str,
         data: &[u8],
+    ) -> anyhow::Result<ObjectUrl> {
+        self.put_object_bytes(app, bucket, object, Bytes::copy_from(data))
+    }
+
+    /// Zero-copy variant of [`Self::put_object`]: the shared buffer is moved
+    /// into the owning resource's store (a refcount transfer against a
+    /// local backend).
+    pub fn put_object_bytes(
+        &self,
+        app: &str,
+        bucket: &str,
+        object: &str,
+        data: Bytes,
     ) -> anyhow::Result<ObjectUrl> {
         if object.is_empty() {
             anyhow::bail!("empty object name");
@@ -148,15 +166,16 @@ impl EdgeFaaS {
         })
     }
 
-    /// Retrieve an object by URL.
-    pub fn get_object(&self, url: &ObjectUrl) -> anyhow::Result<Vec<u8>> {
+    /// Retrieve an object by URL. Returns shared [`Bytes`] — against a local
+    /// backend this is a refcount bump on the stored buffer, not a copy.
+    pub fn get_object(&self, url: &ObjectUrl) -> anyhow::Result<Bytes> {
         let reg = self.resource(url.resource)?;
         let qb = Self::qualified_bucket(&url.application, &url.bucket);
         reg.handle.get_object(&qb, &url.object)
     }
 
     /// Retrieve an object by URL string.
-    pub fn get_object_url(&self, url: &str) -> anyhow::Result<Vec<u8>> {
+    pub fn get_object_url(&self, url: &str) -> anyhow::Result<Bytes> {
         self.get_object(&ObjectUrl::parse(url)?)
     }
 
@@ -206,7 +225,7 @@ mod tests {
         // Data actually lives on the chosen resource.
         let url = b.faas.put_object(app, "frames", "f0.bin", b"framedata").unwrap();
         assert_eq!(url.resource, b.iot[2]);
-        assert_eq!(b.faas.get_object(&url).unwrap(), b"framedata");
+        assert_eq!(b.faas.get_object(&url).unwrap(), &b"framedata"[..]);
         let reg = b.faas.resource(b.iot[2]).unwrap();
         assert_eq!(reg.handle.stored_bytes().unwrap(), 9);
         // Cleanup ordering enforced.
@@ -225,8 +244,8 @@ mod tests {
         b.faas.put_object("app2", "data", "o", b"two").unwrap();
         let u1 = ObjectUrl::parse(&format!("app1/data/{}/o", b.cloud)).unwrap();
         let u2 = ObjectUrl::parse(&format!("app2/data/{}/o", b.cloud)).unwrap();
-        assert_eq!(b.faas.get_object(&u1).unwrap(), b"one");
-        assert_eq!(b.faas.get_object(&u2).unwrap(), b"two");
+        assert_eq!(b.faas.get_object(&u1).unwrap(), &b"one"[..]);
+        assert_eq!(b.faas.get_object(&u2).unwrap(), &b"two"[..]);
     }
 
     #[test]

@@ -68,13 +68,17 @@ impl Handler for StoreGateway {
             ("GET", ["buckets"]) => Ok(Response::json(200, &Json::from(self.store.list_buckets()))),
             ("PUT", ["object", bucket, rest @ ..]) if !rest.is_empty() => {
                 let object = rest.join("/");
+                // Process boundary: the request body is copied into a shared
+                // buffer once; everything downstream is refcounted.
                 self.store
-                    .put_object(bucket, &object, req.body.clone())
+                    .put_object(bucket, &object, crate::util::bytes::Bytes::copy_from(&req.body))
                     .map(|()| Response::text(201, "stored"))
             }
             ("GET", ["object", bucket, rest @ ..]) if !rest.is_empty() => {
                 let object = rest.join("/");
-                self.store.get_object(bucket, &object).map(|data| Response::bytes(200, data))
+                self.store
+                    .get_object(bucket, &object)
+                    .map(|data| Response::bytes(200, data.to_vec()))
             }
             ("DELETE", ["object", bucket, rest @ ..]) if !rest.is_empty() => {
                 let object = rest.join("/");

@@ -12,6 +12,8 @@
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
+use crate::util::bytes::Bytes;
+
 #[derive(Debug, PartialEq)]
 pub enum StoreError {
     BadBucketName(String),
@@ -57,7 +59,10 @@ pub fn valid_bucket_name(name: &str) -> bool {
 
 #[derive(Debug, Default)]
 struct Inner {
-    buckets: BTreeMap<String, BTreeMap<String, Vec<u8>>>,
+    /// Objects are shared [`Bytes`]: `get_object` hands out a refcount bump,
+    /// so a reader holding a payload keeps it alive even across an
+    /// overwrite (MinIO-like read snapshot semantics).
+    buckets: BTreeMap<String, BTreeMap<String, Bytes>>,
     used: u64,
 }
 
@@ -108,8 +113,9 @@ impl ObjectStore {
         }
     }
 
-    /// MinIO FPutObject (last-writer-wins on overwrite).
-    pub fn put_object(&self, bucket: &str, object: &str, data: Vec<u8>) -> Result<(), StoreError> {
+    /// MinIO FPutObject (last-writer-wins on overwrite). Takes shared
+    /// [`Bytes`] so the hot path stores a refcount bump, not a copy.
+    pub fn put_object(&self, bucket: &str, object: &str, data: Bytes) -> Result<(), StoreError> {
         let mut inner = self.inner.lock().unwrap();
         if !inner.buckets.contains_key(bucket) {
             return Err(StoreError::NoBucket(bucket.to_string()));
@@ -132,8 +138,9 @@ impl ObjectStore {
         Ok(())
     }
 
-    /// MinIO FGetObject.
-    pub fn get_object(&self, bucket: &str, object: &str) -> Result<Vec<u8>, StoreError> {
+    /// MinIO FGetObject. Returns shared [`Bytes`] — a refcount bump, not a
+    /// copy of the payload.
+    pub fn get_object(&self, bucket: &str, object: &str) -> Result<Bytes, StoreError> {
         let inner = self.inner.lock().unwrap();
         inner
             .buckets
@@ -224,7 +231,7 @@ mod tests {
     fn object_crud_cycle() {
         let s = store();
         s.make_bucket("data").unwrap();
-        s.put_object("data", "a.bin", vec![1, 2, 3]).unwrap();
+        s.put_object("data", "a.bin", vec![1, 2, 3].into()).unwrap();
         assert_eq!(s.get_object("data", "a.bin").unwrap(), vec![1, 2, 3]);
         assert_eq!(s.stat_object("data", "a.bin").unwrap(), 3);
         assert_eq!(s.list_objects("data").unwrap(), vec!["a.bin".to_string()]);
@@ -237,8 +244,8 @@ mod tests {
     fn overwrite_is_last_writer_wins() {
         let s = store();
         s.make_bucket("data").unwrap();
-        s.put_object("data", "o", vec![0; 100]).unwrap();
-        s.put_object("data", "o", vec![7; 10]).unwrap();
+        s.put_object("data", "o", vec![0; 100].into()).unwrap();
+        s.put_object("data", "o", vec![7; 10].into()).unwrap();
         assert_eq!(s.get_object("data", "o").unwrap(), vec![7; 10]);
         assert_eq!(s.used(), 10, "overwrite releases the old bytes");
     }
@@ -247,7 +254,7 @@ mod tests {
     fn nonempty_bucket_cannot_be_removed() {
         let s = store();
         s.make_bucket("data").unwrap();
-        s.put_object("data", "o", vec![1]).unwrap();
+        s.put_object("data", "o", vec![1].into()).unwrap();
         assert_eq!(s.remove_bucket("data"), Err(StoreError::BucketNotEmpty("data".into())));
         s.remove_object("data", "o").unwrap();
         s.remove_bucket("data").unwrap();
@@ -259,7 +266,7 @@ mod tests {
         let s = store();
         s.make_bucket("data").unwrap();
         assert_eq!(s.make_bucket("data"), Err(StoreError::BucketExists("data".into())));
-        assert_eq!(s.put_object("nope", "o", vec![]), Err(StoreError::NoBucket("nope".into())));
+        assert_eq!(s.put_object("nope", "o", Bytes::new()), Err(StoreError::NoBucket("nope".into())));
         assert_eq!(s.remove_bucket("nope"), Err(StoreError::NoBucket("nope".into())));
     }
 
@@ -267,11 +274,51 @@ mod tests {
     fn capacity_enforced() {
         let s = ObjectStore::new(100, "ak", "sk");
         s.make_bucket("data").unwrap();
-        s.put_object("data", "a", vec![0; 60]).unwrap();
-        assert!(matches!(s.put_object("data", "b", vec![0; 60]), Err(StoreError::Full { .. })));
+        s.put_object("data", "a", vec![0; 60].into()).unwrap();
+        assert!(matches!(s.put_object("data", "b", vec![0; 60].into()), Err(StoreError::Full { .. })));
         // Overwriting the existing object with something that fits is fine.
-        s.put_object("data", "a", vec![0; 90]).unwrap();
+        s.put_object("data", "a", vec![0; 90].into()).unwrap();
         assert_eq!(s.used(), 90);
+    }
+
+    #[test]
+    fn used_accounting_survives_overwrites() {
+        let s = ObjectStore::new(1000, "ak", "sk");
+        s.make_bucket("data").unwrap();
+        // Grow, shrink, grow again: used() must track the live size exactly.
+        s.put_object("data", "o", vec![0; 100].into()).unwrap();
+        assert_eq!(s.used(), 100);
+        s.put_object("data", "o", vec![0; 700].into()).unwrap();
+        assert_eq!(s.used(), 700, "overwrite releases the old 100 bytes");
+        s.put_object("data", "o", vec![0; 10].into()).unwrap();
+        assert_eq!(s.used(), 10, "shrinking overwrite frees the delta");
+        // A rejected overwrite (would exceed capacity even after releasing
+        // the old bytes) must leave both the object and used() untouched.
+        let err = s.put_object("data", "o", vec![0; 2000].into()).unwrap_err();
+        assert!(matches!(err, StoreError::Full { .. }));
+        assert_eq!(s.used(), 10);
+        assert_eq!(s.stat_object("data", "o").unwrap(), 10);
+        // An overwrite that only fits because it replaces the old object.
+        s.put_object("data", "big", vec![0; 980].into()).unwrap();
+        s.put_object("data", "big", vec![0; 990].into()).unwrap();
+        assert_eq!(s.used(), 1000);
+        s.remove_object("data", "big").unwrap();
+        s.remove_object("data", "o").unwrap();
+        assert_eq!(s.used(), 0);
+    }
+
+    #[test]
+    fn get_object_shares_the_stored_allocation() {
+        let s = store();
+        s.make_bucket("data").unwrap();
+        let payload = Bytes::from(vec![9u8; 256]);
+        s.put_object("data", "o", payload.clone()).unwrap();
+        let out = s.get_object("data", "o").unwrap();
+        // Zero-copy: the returned buffer is the very allocation we stored.
+        assert_eq!(out.as_slice().as_ptr(), payload.as_slice().as_ptr());
+        // A held read survives an overwrite (snapshot semantics).
+        s.put_object("data", "o", vec![1u8; 4].into()).unwrap();
+        assert_eq!(out, vec![9u8; 256]);
     }
 
     #[test]
@@ -283,7 +330,7 @@ mod tests {
             .map(|i| {
                 let s = Arc::clone(&s);
                 std::thread::spawn(move || {
-                    s.put_object("data", "contested", vec![i; 64]).unwrap();
+                    s.put_object("data", "contested", vec![i; 64].into()).unwrap();
                 })
             })
             .collect();

@@ -1,8 +1,159 @@
-//! Byte-size parsing and formatting.
+//! Shared byte buffers plus byte-size parsing and formatting.
 //!
-//! The paper's registration YAML expresses capacities as `64GB`, `1024MB`,
-//! `512GB` (Tables 1-3); the data-size figures report MB. This module is the
-//! single place those units are interpreted.
+//! [`Bytes`] is the data plane's payload type: an `Arc<[u8]>`-backed,
+//! immutable buffer whose clone and slice are refcount bumps, not copies.
+//! The object stores hold `Bytes` so `get_object` never copies, function
+//! invocation envelopes are `Bytes` shared between the engine's batch and
+//! per-task paths, and handler outputs travel back as `Bytes`. Copies happen
+//! only at true process boundaries (the loopback HTTP gateways).
+//!
+//! The size helpers interpret the paper's registration YAML capacities
+//! (`64GB`, `1024MB`, `512GB` — Tables 1-3); this module is the single
+//! place those units are interpreted.
+
+use std::sync::Arc;
+
+/// A cheaply clonable, sliceable, immutable byte buffer.
+///
+/// Backed by an `Arc<[u8]>` plus a window: `clone()` and [`Bytes::slice`]
+/// bump a refcount instead of copying the payload. Dereferences to `&[u8]`,
+/// so existing slice-based code (`parse`, `from_utf8_lossy`, tensor
+/// decoders) works on a `&Bytes` unchanged.
+#[derive(Clone)]
+pub struct Bytes {
+    data: Arc<[u8]>,
+    start: usize,
+    end: usize,
+}
+
+impl Bytes {
+    /// An empty buffer (no allocation is shared, but none is needed).
+    pub fn new() -> Bytes {
+        Bytes::from(Vec::new())
+    }
+
+    /// Take ownership of a `Vec` (one move into the shared allocation).
+    pub fn from_vec(v: Vec<u8>) -> Bytes {
+        let data: Arc<[u8]> = Arc::from(v);
+        let end = data.len();
+        Bytes { data, start: 0, end }
+    }
+
+    /// Copy a borrowed slice into a fresh shared buffer (the one place a
+    /// copy is explicit: the caller keeps ownership of its bytes).
+    pub fn copy_from(s: &[u8]) -> Bytes {
+        let data: Arc<[u8]> = Arc::from(s);
+        let end = data.len();
+        Bytes { data, start: 0, end }
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data[self.start..self.end]
+    }
+
+    /// A sub-window sharing the same allocation (refcount bump, no copy).
+    /// `start..end` is relative to this buffer; panics when out of bounds.
+    pub fn slice(&self, start: usize, end: usize) -> Bytes {
+        assert!(start <= end && end <= self.len(), "slice {start}..{end} of {}", self.len());
+        Bytes { data: Arc::clone(&self.data), start: self.start + start, end: self.start + end }
+    }
+
+    /// Copy out to an owned `Vec` (for callers that must own, e.g. HTTP
+    /// response bodies).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl Default for Bytes {
+    fn default() -> Bytes {
+        Bytes::new()
+    }
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Cap the preview: this type exists to carry large payloads, and a
+        // debug-log or panic message must not dump megabytes of bytes.
+        const PREVIEW: usize = 32;
+        if self.len() <= PREVIEW {
+            write!(f, "Bytes({} B: {:?})", self.len(), self.as_slice())
+        } else {
+            write!(f, "Bytes({} B: {:?}…)", self.len(), &self.as_slice()[..PREVIEW])
+        }
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl PartialEq<Vec<u8>> for Bytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[u8]> for Bytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for Bytes {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        Bytes::from_vec(v)
+    }
+}
+
+impl From<&[u8]> for Bytes {
+    fn from(s: &[u8]) -> Bytes {
+        Bytes::copy_from(s)
+    }
+}
+
+impl From<String> for Bytes {
+    fn from(s: String) -> Bytes {
+        Bytes::from_vec(s.into_bytes())
+    }
+}
+
+impl From<&str> for Bytes {
+    fn from(s: &str) -> Bytes {
+        Bytes::copy_from(s.as_bytes())
+    }
+}
 
 /// Parse a human size string (`64GB`, `1024MB`, `4 KB`, `92mb`, `1024`) into
 /// bytes. Decimal (SI, 1000-based) vs binary is a perennial ambiguity; the
@@ -49,6 +200,44 @@ pub fn fmt_size(bytes: u64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bytes_clone_and_slice_share_the_allocation() {
+        let b = Bytes::from(vec![1u8, 2, 3, 4, 5]);
+        let c = b.clone();
+        assert_eq!(b, c);
+        // Same backing allocation: slices point into the same memory.
+        assert_eq!(b.as_slice().as_ptr(), c.as_slice().as_ptr());
+        let mid = b.slice(1, 4);
+        assert_eq!(mid.as_slice(), &[2, 3, 4]);
+        assert_eq!(mid.len(), 3);
+        // Sub-slice of a slice stays within the original allocation.
+        let inner = mid.slice(1, 2);
+        assert_eq!(inner.as_slice(), &[3]);
+        assert_eq!(inner.as_slice().as_ptr(), unsafe { b.as_slice().as_ptr().add(2) });
+    }
+
+    #[test]
+    fn bytes_conversions_and_equality() {
+        let from_vec = Bytes::from(vec![104, 105]);
+        let from_str = Bytes::from("hi");
+        let from_slice = Bytes::from(&b"hi"[..]);
+        assert_eq!(from_vec, from_str);
+        assert_eq!(from_str, from_slice);
+        assert_eq!(from_vec, vec![104, 105]);
+        assert_eq!(from_vec, &b"hi"[..]);
+        assert!(Bytes::new().is_empty());
+        assert_eq!(Bytes::default().len(), 0);
+        // Deref lets slice-based helpers take &Bytes directly.
+        assert_eq!(std::str::from_utf8(&from_str).unwrap(), "hi");
+        assert_eq!(from_vec.to_vec(), vec![104, 105]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bytes_slice_out_of_bounds_panics() {
+        Bytes::from(vec![1u8, 2]).slice(1, 3);
+    }
 
     #[test]
     fn parses_paper_units() {

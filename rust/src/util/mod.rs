@@ -11,3 +11,13 @@ pub mod threadpool;
 pub mod rng;
 pub mod logging;
 pub mod bytes;
+
+/// Render a caught `std::panic::catch_unwind` payload for error messages
+/// (used by the panic-containment sites in the engine and the FaaS backend).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}

@@ -1,0 +1,147 @@
+//! Equivalence of batched and unbatched execution: per-resource invocation
+//! batching is a pure dispatch optimization, so a workflow run must produce
+//! a byte-identical `WorkflowResult` (outputs + `firing_order`) whether the
+//! engine drains same-resource batches or dispatches every instance
+//! individually — under both the wall clock and the simnet virtual clock,
+//! for both paper workflows, and with enough concurrent runs that the
+//! batched pass actually forms multi-task batches.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use edgefaas::coordinator::appconfig::{federated_learning_yaml, video_pipeline_yaml};
+use edgefaas::coordinator::functions::FunctionPackage;
+use edgefaas::coordinator::{ResourceId, RunId, WorkflowResult};
+use edgefaas::simnet::{Clock, RealClock, VirtualClock};
+use edgefaas::testbed::{paper_testbed, TestBed};
+use edgefaas::util::json::Json;
+
+const BUCKET: &str = "stub";
+
+/// Deterministic stub handlers: each stage writes one object named after
+/// (stage, resource, input count) whose content is the sorted basenames of
+/// its inputs — outputs depend only on routing, never on timing.
+fn register_stubs(bed: &TestBed, app: &'static str, stages: &[&str]) {
+    for stage in stages {
+        let faas = Arc::clone(&bed.faas);
+        let stage_name = stage.to_string();
+        bed.executor.register(&format!("img/stub-{stage}"), move |payload: &[u8]| {
+            let v = edgefaas::util::json::parse(std::str::from_utf8(payload)?)?;
+            let rid = v.get("resource").unwrap().as_u64().unwrap();
+            let inputs: Vec<String> = v
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|u| u.as_str().map(String::from))
+                .collect();
+            let mut names: Vec<String> = inputs
+                .iter()
+                .map(|u| u.rsplit('/').next().unwrap_or("?").to_string())
+                .collect();
+            names.sort();
+            let obj = format!("{stage_name}-{rid}-n{}.bin", inputs.len());
+            let url = faas.put_object(app, BUCKET, &obj, names.join(",").as_bytes())?;
+            let mut out = Json::obj();
+            out.set("outputs", Json::Arr(vec![Json::Str(url.to_string())]));
+            Ok(out.to_string().into_bytes())
+        });
+    }
+}
+
+fn stub_packages(stages: &[&str]) -> HashMap<String, FunctionPackage> {
+    stages
+        .iter()
+        .map(|s| (s.to_string(), FunctionPackage { code: format!("img/stub-{s}") }))
+        .collect()
+}
+
+/// Timing-independent projection of a result: function -> per-instance
+/// (resource, outputs), in placement order.
+fn normalized(result: &WorkflowResult) -> BTreeMap<String, Vec<(ResourceId, Vec<String>)>> {
+    result
+        .functions
+        .iter()
+        .map(|(k, v)| (k.clone(), v.iter().map(|i| (i.resource, i.outputs.clone())).collect()))
+        .collect()
+}
+
+/// Run `concurrent` simultaneous stubbed workflow runs on a fresh paper
+/// testbed with batching forced on or off; returns each run's result in
+/// submission order.
+#[allow(clippy::too_many_arguments)]
+fn run_mode(
+    clock: Arc<dyn Clock>,
+    yaml: &str,
+    app: &'static str,
+    stages: &[&str],
+    data_fn: &str,
+    data_of: impl Fn(&TestBed) -> Vec<ResourceId>,
+    batching: bool,
+    concurrent: usize,
+) -> Vec<WorkflowResult> {
+    let bed = paper_testbed(clock);
+    register_stubs(&bed, app, stages);
+    bed.faas.set_batching(batching);
+    // Tight admission (2 slots per resource) makes instances queue, so the
+    // batched pass genuinely drains multi-task batches.
+    bed.faas.set_engine_limits(8, 2);
+    bed.faas.create_bucket(app, BUCKET, Some(bed.edges[0])).unwrap();
+    let mut data = HashMap::new();
+    data.insert(data_fn.to_string(), data_of(&bed));
+    bed.faas.configure_application(yaml, &data).unwrap();
+    bed.faas.deploy_application(app, &stub_packages(stages)).unwrap();
+    let ids: Vec<RunId> =
+        (0..concurrent).map(|_| bed.faas.submit_workflow(app, &HashMap::new()).unwrap()).collect();
+    ids.into_iter().map(|id| bed.faas.wait_workflow(id, 120.0).unwrap()).collect()
+}
+
+fn assert_equivalent(
+    yaml: &str,
+    app: &'static str,
+    stages: &[&str],
+    data_fn: &str,
+    data_of: impl Fn(&TestBed) -> Vec<ResourceId> + Copy,
+) {
+    for (label, clock_of) in [
+        ("wall", (|| Arc::new(RealClock::new()) as Arc<dyn Clock>) as fn() -> Arc<dyn Clock>),
+        ("virtual", || Arc::new(VirtualClock::new()) as Arc<dyn Clock>),
+    ] {
+        let unbatched = run_mode(clock_of(), yaml, app, stages, data_fn, data_of, false, 4);
+        let batched = run_mode(clock_of(), yaml, app, stages, data_fn, data_of, true, 4);
+        assert_eq!(unbatched.len(), batched.len());
+        for (i, (u, b)) in unbatched.iter().zip(&batched).enumerate() {
+            assert_eq!(
+                u.firing_order, b.firing_order,
+                "{app}/{label}: firing order diverged on run {i}"
+            );
+            assert_eq!(
+                normalized(u),
+                normalized(b),
+                "{app}/{label}: outputs diverged on run {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn video_workflow_batched_equals_unbatched_under_both_clocks() {
+    assert_equivalent(
+        video_pipeline_yaml(),
+        "videopipeline",
+        &edgefaas::workflows::video::STAGES,
+        "video-generator",
+        |bed| vec![bed.iot[0], bed.iot[1]],
+    );
+}
+
+#[test]
+fn fl_workflow_batched_equals_unbatched_under_both_clocks() {
+    assert_equivalent(
+        federated_learning_yaml(),
+        "federatedlearning",
+        &["train", "firstaggregation", "secondaggregation"],
+        "train",
+        |bed| bed.iot.clone(),
+    );
+}

@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use edgefaas::coordinator::functions::FunctionPackage;
 use edgefaas::coordinator::handle::ResourceHandle;
+use edgefaas::util::bytes::Bytes;
 use edgefaas::monitor::metrics::ResourceUsage;
 use edgefaas::simnet::RealClock;
 use edgefaas::testbed::paper_testbed;
@@ -55,7 +56,7 @@ impl ResourceHandle for FlakyHandle {
         self.inner.remove(name)
     }
 
-    fn invoke(&self, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)> {
+    fn invoke(&self, name: &str, payload: &Bytes) -> anyhow::Result<(Bytes, f64)> {
         self.invokes.fetch_add(1, Ordering::SeqCst);
         if self.fail_invoke.load(Ordering::SeqCst) {
             anyhow::bail!("injected invoke failure");
@@ -84,10 +85,10 @@ impl ResourceHandle for FlakyHandle {
     fn remove_bucket(&self, b: &str) -> anyhow::Result<()> {
         self.inner.remove_bucket(b)
     }
-    fn put_object(&self, b: &str, o: &str, d: &[u8]) -> anyhow::Result<()> {
+    fn put_object(&self, b: &str, o: &str, d: Bytes) -> anyhow::Result<()> {
         self.inner.put_object(b, o, d)
     }
-    fn get_object(&self, b: &str, o: &str) -> anyhow::Result<Vec<u8>> {
+    fn get_object(&self, b: &str, o: &str) -> anyhow::Result<Bytes> {
         self.inner.get_object(b, o)
     }
     fn remove_object(&self, b: &str, o: &str) -> anyhow::Result<()> {
@@ -222,13 +223,13 @@ fn capacity_exhaustion_surfaces_as_invocation_error() {
     });
     reg.handle.deploy("big", "img/hold", 3 << 30, 0, &[]).unwrap();
     let h = Arc::clone(&reg.handle);
-    let t = std::thread::spawn(move || h.invoke("big", b""));
+    let t = std::thread::spawn(move || h.invoke("big", &Bytes::new()));
     std::thread::sleep(std::time::Duration::from_millis(50));
-    let second = reg.handle.invoke("big", b"");
+    let second = reg.handle.invoke("big", &Bytes::new());
     assert!(second.is_err(), "no memory for a second sandbox");
     assert!(t.join().unwrap().is_ok(), "first invocation unaffected");
     // After the first completes, capacity is back (warm sandbox reused).
-    let third = reg.handle.invoke("big", b"");
+    let third = reg.handle.invoke("big", &Bytes::new());
     assert!(third.is_ok());
 }
 
@@ -245,6 +246,6 @@ fn store_full_surfaces_through_virtual_storage() {
     // object on a tiny ObjectStore.
     let small = edgefaas::objstore::ObjectStore::new(512, "ak", "sk");
     small.make_bucket("data").unwrap();
-    let err = small.put_object("data", "big", huge).unwrap_err();
+    let err = small.put_object("data", "big", huge.into()).unwrap_err();
     assert!(matches!(err, edgefaas::objstore::store::StoreError::Full { .. }));
 }
