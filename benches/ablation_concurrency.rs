@@ -1,7 +1,7 @@
 //! Ablation — workflow concurrency and dispatch overhead through the
 //! execution engine.
 //!
-//! Three sections:
+//! Four sections:
 //!
 //! 1. **Wall clock**: throughput of 1 / 4 / 16 / 64 concurrent runs of a
 //!    two-stage workflow (2 IoT generators -> 1 edge reducer) whose stages
@@ -19,16 +19,23 @@
 //!    `BENCH_hotpath.json` (override the path with `BENCH_OUT`) so future
 //!    PRs have a machine-readable perf trajectory to beat.
 //!
-//! `ABLATION_SMOKE=1` runs a tiny-N smoke pass (CI): only the hot-path
-//! section, no throughput assertions, but the JSON artifact is still
-//! produced.
+//! 4. **Mixed QoS (priority isolation)**: Realtime run latency, unloaded
+//!    vs. with 64 Batch-class runs in flight, on the same zero-work
+//!    hot-path bed. The QoS run queue dispatches Realtime ahead of the
+//!    Batch backlog, so the loaded p95 must stay within 2x the unloaded
+//!    p95 — the number a FIFO queue fails by an order of magnitude.
+//!    Written to `BENCH_qos.json` (override with `BENCH_QOS_OUT`).
+//!
+//! `ABLATION_SMOKE=1` runs a tiny-N smoke pass (CI): only the hot-path and
+//! mixed-QoS sections, no throughput assertions, but both JSON artifacts
+//! are still produced.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use edgefaas::bench_harness::{measure, Stats, Table};
 use edgefaas::coordinator::functions::FunctionPackage;
-use edgefaas::coordinator::RunId;
+use edgefaas::coordinator::{Priority, QoS, RunId};
 use edgefaas::simnet::{Clock, RealClock, VirtualClock};
 use edgefaas::testbed::{paper_testbed, TestBed};
 use edgefaas::util::bytes::Bytes;
@@ -132,6 +139,36 @@ fn hotpath_series(
             (n, best_wall, n as f64 / best_wall)
         })
         .collect()
+}
+
+/// One mixed-QoS sample: submit `backlog` Batch-class runs, then time a
+/// Realtime run from submission to completion; drain the backlog before
+/// returning so samples are independent.
+fn realtime_latency(bed: &TestBed, backlog: usize) -> f64 {
+    let batch: Vec<RunId> = (0..backlog)
+        .map(|_| {
+            bed.faas
+                .submit_workflow_qos("chain", &HashMap::new(), QoS::class(Priority::Batch))
+                .unwrap()
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let rt = bed
+        .faas
+        .submit_workflow_qos("chain", &HashMap::new(), QoS::class(Priority::Realtime))
+        .unwrap();
+    bed.faas.wait_workflow(rt, 120.0).unwrap();
+    let latency = t0.elapsed().as_secs_f64();
+    for id in batch {
+        bed.faas.wait_workflow(id, 120.0).unwrap();
+    }
+    latency
+}
+
+fn stats_json(s: &Stats) -> Json {
+    let mut o = Json::obj();
+    o.set("p50", s.p50.into()).set("p95", s.p95.into()).set("mean", s.mean.into());
+    o
 }
 
 fn series_json(rows: &[(usize, f64, f64)]) -> Json {
@@ -259,6 +296,48 @@ fn main() {
     std::fs::write(&out_path, doc.to_string()).expect("write bench json");
     println!("wrote {out_path} (speedup at {} concurrent runs: {speedup:.2}x)", max_u.0);
 
+    // ---- Section 4: mixed QoS — Realtime latency under Batch load. ----
+    let bed = bed_with_hotpath_chain();
+    let _ = run_batch(&bed, 1); // warm sandboxes
+    let backlog = 64usize;
+    let reps_qos = if smoke { 5 } else { 30 };
+    let unloaded = Stats::of((0..reps_qos).map(|_| realtime_latency(&bed, 0)).collect());
+    let loaded = Stats::of((0..reps_qos).map(|_| realtime_latency(&bed, backlog)).collect());
+    let ratio = loaded.p95 / unloaded.p95;
+
+    let mut tq = Table::new(
+        "Mixed QoS: Realtime run latency, unloaded vs 64 Batch runs in flight",
+        &["series", "p50", "p95", "mean"],
+    );
+    tq.row(&[
+        "realtime unloaded".into(),
+        Stats::fmt(unloaded.p50),
+        Stats::fmt(unloaded.p95),
+        Stats::fmt(unloaded.mean),
+    ]);
+    tq.row(&[
+        format!("realtime + {backlog} batch"),
+        Stats::fmt(loaded.p50),
+        Stats::fmt(loaded.p95),
+        Stats::fmt(loaded.mean),
+    ]);
+    tq.print();
+    println!("\n-> p95 ratio loaded/unloaded: {ratio:.2}x (priority isolation target: <= 2x)");
+
+    let mut qdoc = Json::obj();
+    qdoc.set("bench", "qos".into())
+        .set("clock", "virtual".into())
+        .set("smoke", smoke.into())
+        .set("batch_backlog", (backlog as u64).into())
+        .set("reps", (reps_qos as u64).into())
+        .set("realtime_unloaded_s", stats_json(&unloaded))
+        .set("realtime_with_batch_backlog_s", stats_json(&loaded))
+        .set("p95_ratio_loaded_vs_unloaded", ratio.into());
+    let qos_path =
+        std::env::var("BENCH_QOS_OUT").unwrap_or_else(|_| "BENCH_qos.json".to_string());
+    std::fs::write(&qos_path, qdoc.to_string()).expect("write qos bench json");
+    println!("wrote {qos_path}");
+
     if !smoke {
         assert!(
             speedup >= 1.5,
@@ -267,6 +346,13 @@ fn main() {
             max_u.0,
             max_u.2,
             max_b.2
+        );
+        assert!(
+            ratio <= 2.0,
+            "the QoS queue must isolate Realtime from a {backlog}-run Batch backlog: \
+             p95 {} loaded vs {} unloaded ({ratio:.2}x > 2x)",
+            Stats::fmt(loaded.p95),
+            Stats::fmt(unloaded.p95)
         );
     }
 }

@@ -53,7 +53,9 @@ fn main() -> anyhow::Result<()> {
         let urls = fedlearn::distribute_global(&faas, &bed.iot, round, &global)?;
         let mut entry = HashMap::new();
         entry.insert("train".to_string(), urls);
-        let result = faas.run_workflow(fedlearn::APP, &entry)?;
+        // Training rounds ride the Batch QoS class: background work that
+        // yields engine slots to any latency-sensitive run.
+        let result = faas.run_workflow_qos(fedlearn::APP, &entry, fedlearn::default_qos())?;
         let final_url = &result.functions["secondaggregation"][0].outputs[0];
         global = Tensor::from_bytes(&faas.get_object_url(final_url)?)?;
         let acc = fedlearn::evaluate(&engine, &global, 999, 4)?;

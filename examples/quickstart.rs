@@ -104,17 +104,24 @@ dag:
 
     // 6b. The same engine serves asynchronous submissions: submit, poll,
     //     await — and N submissions interleave on the shared worker pool.
-    let runs: Vec<_> = (0..3).map(|_| faas.submit_workflow("quickstart", &HashMap::new()))
+    //     Each submission carries a QoS class (and optionally a deadline):
+    //     the engine's run queue dispatches Realtime before Interactive
+    //     before Batch, earliest-deadline-first within a class.
+    use edgefaas::coordinator::{Priority, QoS};
+    let classes = [Priority::Batch, Priority::Interactive, Priority::Realtime];
+    let runs: Vec<_> = classes
+        .iter()
+        .map(|&p| faas.submit_workflow_qos("quickstart", &HashMap::new(), QoS::class(p)))
         .collect::<Result<_, _>>()?;
     for &run in &runs {
-        if let Some(status) = faas.run_status(run) {
-            println!("run {run} status while in flight: {status:?}");
+        if let (Some(status), Some((qos, _))) = (faas.run_status(run), faas.run_qos(run)) {
+            println!("run {run} [{}] status while in flight: {status:?}", qos.priority);
             break; // one peek is enough for the demo
         }
     }
-    for run in runs {
+    for (&run, &p) in runs.iter().zip(&classes) {
         let r = faas.wait_workflow(run, 30.0)?;
-        println!("async run finished in {:.3}s", r.duration);
+        println!("async {p} run finished in {:.3}s", r.duration);
     }
 
     // 7. Introspection through the same API the paper lists.

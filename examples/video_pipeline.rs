@@ -53,7 +53,9 @@ fn main() -> anyhow::Result<()> {
     faas.deploy_application(video::APP, &video::video_packages())?;
 
     let t0 = std::time::Instant::now();
-    let result = faas.run_workflow(video::APP, &HashMap::new())?;
+    // Live video is latency-critical: submit under the Realtime QoS class
+    // so the pipeline jumps any queued Interactive/Batch work.
+    let result = faas.run_workflow_qos(video::APP, &HashMap::new(), video::default_qos())?;
     println!("\npipeline wall time: {:.2}s ({gops} GoPs x {} cameras)", t0.elapsed().as_secs_f64(), cameras.len());
     println!("\nper-stage instances and reported latency:");
     for stage in [

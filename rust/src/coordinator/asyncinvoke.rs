@@ -23,6 +23,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::util::bytes::Bytes;
 use crate::util::json::Json;
 
+use super::engine::QoS;
 use super::functions::FunctionPackage;
 use super::resource::{EdgeFaaS, ResourceId};
 use super::scheduler::FunctionCreation;
@@ -97,7 +98,8 @@ impl AsyncTracker {
 impl EdgeFaaS {
     /// Invoke() with Sync=False: submit a job to the execution engine's
     /// worker pool, return the invocation id immediately. Results land in
-    /// `tracker`.
+    /// `tracker`. Submits under the default [`QoS`] (`Interactive`); see
+    /// [`Self::invoke_async_qos`].
     pub fn invoke_async(
         self: &Arc<Self>,
         tracker: &Arc<AsyncTracker>,
@@ -106,10 +108,27 @@ impl EdgeFaaS {
         payload: &Json,
         invoke_one: bool,
     ) -> InvocationId {
+        self.invoke_async_qos(tracker, app, function, payload, invoke_one, QoS::default())
+    }
+
+    /// [`Self::invoke_async`] under an explicit [`QoS`]: the class orders
+    /// the invocation's job against every queued workflow instance and job
+    /// (a `Batch` async invocation yields to `Realtime` workflow work), and
+    /// a deadline is an EDF ordering hint — single invocations are opaque
+    /// jobs, so they are never deadline-cancelled.
+    pub fn invoke_async_qos(
+        self: &Arc<Self>,
+        tracker: &Arc<AsyncTracker>,
+        app: &str,
+        function: &str,
+        payload: &Json,
+        invoke_one: bool,
+        qos: QoS,
+    ) -> InvocationId {
         let id = tracker.begin();
         let tracker = Arc::clone(tracker);
         let (app, function, payload) = (app.to_string(), function.to_string(), payload.clone());
-        self.spawn_job(move |faas| {
+        self.spawn_job_qos(qos, move |faas| {
             let status = match faas.invoke(&app, &function, &payload, invoke_one) {
                 Ok(results) => AsyncStatus::Done(results),
                 Err(e) => AsyncStatus::Failed(e.to_string()),

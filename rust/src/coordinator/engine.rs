@@ -59,8 +59,55 @@
 //!   under `RealClock` and `VirtualClock`, batching on or off). Toggle with
 //!   [`EdgeFaaS::set_batching`] / [`EdgeFaaS::set_max_batch`]; measured by
 //!   `benches/ablation_concurrency.rs` (`BENCH_hotpath.json`).
+//!
+//! # QoS: ordering, deadlines, backpressure
+//!
+//! The paper claims EdgeFaaS "automatically optimizes the scheduling of
+//! functions ... according to their performance and privacy requirements".
+//! Every submission therefore carries a [`QoS`]: a [`Priority`] class
+//! (`Realtime` > `Interactive` > `Batch`; default `Interactive`) and an
+//! optional relative deadline in seconds.
+//!
+//! **Ordering rule.** The ready queue is a priority queue ordered by the
+//! triple `(class, absolute deadline, submission sequence)`: strictly by
+//! class first, earliest-deadline-first within a class (no deadline sorts
+//! last), and FIFO submission order as the deterministic tie-break. Workers
+//! and admission-deferred instances follow the same order, so a `Realtime`
+//! instance always dispatches before queued `Interactive`/`Batch` work.
+//!
+//! **Starvation guard (aging).** Strict priority alone would starve `Batch`
+//! under sustained higher-class load, so the pop path ages the queue by
+//! dispatch count: after [`BATCH_AGE_LIMIT`] consecutive higher-class
+//! dispatches while `Batch` work waited, the oldest dispatchable `Batch`
+//! task runs next. Counting dispatches (not wall time) keeps the guard
+//! identical under `RealClock` and `VirtualClock`.
+//!
+//! **Class-pure batching.** Per-resource invocation batching only coalesces
+//! instances of the *same* class as the slot-holding instance: a `Batch`
+//! run can never ride a slot acquired by a `Realtime` pop (and vice versa),
+//! so batching cannot reorder work across classes.
+//!
+//! **Deadlines.** A run's deadline is fixed at submission
+//! (`now + deadline_s`). Deadline enforcement happens at dispatch: an
+//! instance popped after its run's deadline has passed is *not* executed —
+//! the run transitions to [`RunStatus::DeadlineExceeded`], its remaining
+//! queued instances drain without occupying backend slots, and
+//! [`EngineEvent::DeadlineMissed`] fires so an [`EdgeFaaS::on_engine_event`]
+//! policy (e.g. a reschedule hook) can react. Instances already executing
+//! are never cancelled — a run whose work completes late still reports
+//! `Done`.
+//!
+//! **Backpressure.** Two configurable bounds
+//! ([`EdgeFaaS::set_backpressure`]): total pending (not-yet-finished) runs,
+//! and queued instances per resource. A submission that would exceed either
+//! bound is refused with [`EngineError::Saturated`] — the REST gateway maps
+//! this to `429 Too Many Requests` with a `Retry-After` header — except
+//! that a `Realtime`/`Interactive` submission first *sheds* queued
+//! `Batch`-class runs (newest first, only runs with no instance currently
+//! executing) to make room: under overload the coordinator degrades
+//! predictably, Batch first, instead of queueing without bound.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -74,12 +121,180 @@ use super::resource::{Application, EdgeFaaS, ResourceId};
 /// Identifier of one submitted workflow run.
 pub type RunId = u64;
 
+/// QoS class of a submission (see the module docs' ordering rule).
+///
+/// Classes are strict: all queued `Realtime` work dispatches before any
+/// `Interactive` work, which dispatches before any `Batch` work — except
+/// for the aging guard ([`BATCH_AGE_LIMIT`]) that keeps `Batch` from
+/// starving under sustained higher-class load.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-critical: jumps every queue.
+    Realtime,
+    /// The default class for ordinary submissions.
+    #[default]
+    Interactive,
+    /// Throughput-oriented: runs when nothing more urgent waits, is shed
+    /// first under backpressure.
+    Batch,
+}
+
+impl Priority {
+    /// Ordering rank (lower dispatches first).
+    pub(crate) const fn rank(self) -> u8 {
+        match self {
+            Priority::Realtime => 0,
+            Priority::Interactive => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    /// Lowercase wire name (`realtime` / `interactive` / `batch`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Realtime => "realtime",
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Priority> {
+        match s {
+            "realtime" => Ok(Priority::Realtime),
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            other => Err(anyhow::anyhow!(
+                "unknown priority `{other}` (expected realtime|interactive|batch)"
+            )),
+        }
+    }
+}
+
+/// Per-submission quality-of-service requirements.
+///
+/// `deadline_s` is relative to submission time; the engine fixes the
+/// absolute deadline at submit. Defaults: `Interactive`, no deadline.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct QoS {
+    pub priority: Priority,
+    pub deadline_s: Option<f64>,
+}
+
+impl QoS {
+    /// Shorthand for a class with no deadline.
+    pub fn class(priority: Priority) -> QoS {
+        QoS { priority, deadline_s: None }
+    }
+
+    /// Attach a relative deadline (seconds from submission).
+    pub fn with_deadline(mut self, deadline_s: f64) -> QoS {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+}
+
+/// Why a submission was not accepted by the engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// Backpressure: the configured queue bounds are reached and nothing
+    /// Batch-class could be shed. The REST gateway maps this to
+    /// `429 Too Many Requests` with a `Retry-After` header.
+    Saturated {
+        /// Pending (not yet finished) runs at rejection time.
+        pending_runs: usize,
+        /// The configured pending-run bound.
+        max_pending_runs: usize,
+        /// The resource whose queued-instance bound was the binding
+        /// constraint, when it was a per-resource rejection.
+        saturated_resource: Option<ResourceId>,
+        /// Suggested client back-off, seconds.
+        retry_after_s: f64,
+    },
+    /// The submission itself was invalid (unknown application, ...).
+    Rejected(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Saturated {
+                pending_runs,
+                max_pending_runs,
+                saturated_resource,
+                retry_after_s,
+            } => {
+                write!(
+                    f,
+                    "engine saturated: {pending_runs}/{max_pending_runs} pending runs"
+                )?;
+                if let Some(rid) = saturated_resource {
+                    write!(f, " (resource {rid} queue full)")?;
+                }
+                write!(f, "; retry after {retry_after_s:.0}s")
+            }
+            EngineError::Rejected(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Why [`EdgeFaaS::wait_workflow`] returned without a result. Each cause is
+/// its own variant so callers can tell "the wait timed out but the run is
+/// still in flight" from "the run itself failed" without parsing strings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WaitError {
+    /// The wait's own timeout elapsed; the run is still executing (not
+    /// failed) and can be waited on again.
+    Timeout { run: RunId, waited_s: f64 },
+    /// The run missed its QoS deadline ([`RunStatus::DeadlineExceeded`]).
+    DeadlineExceeded { run: RunId },
+    /// The run finished unsuccessfully.
+    RunFailed { run: RunId, message: String },
+    /// No record of the run: never submitted, or already consumed.
+    UnknownRun { run: RunId },
+}
+
+impl std::fmt::Display for WaitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WaitError::Timeout { run, waited_s } => write!(
+                f,
+                "timed out after {waited_s:.3}s waiting for workflow run {run} \
+                 (the run is still executing, not failed)"
+            ),
+            WaitError::DeadlineExceeded { run } => {
+                write!(f, "workflow run {run} exceeded its QoS deadline")
+            }
+            WaitError::RunFailed { run, message } => {
+                write!(f, "workflow run {run} failed: {message}")
+            }
+            WaitError::UnknownRun { run } => write!(f, "unknown workflow run {run}"),
+        }
+    }
+}
+
+impl std::error::Error for WaitError {}
+
 /// Externally visible state of a run.
 #[derive(Debug, Clone)]
 pub enum RunStatus {
     Running,
     Done(WorkflowResult),
     Failed(String),
+    /// The run's QoS deadline passed before its queued work could
+    /// dispatch; remaining instances were drained without executing.
+    DeadlineExceeded,
 }
 
 /// A completion event published to [`EdgeFaaS::on_engine_event`] callbacks.
@@ -97,13 +312,48 @@ pub enum EngineEvent {
     },
     /// A whole run drained (successfully or not).
     RunCompleted { run: RunId, app: String, ok: bool, duration: f64 },
+    /// A run's QoS deadline passed before its queued work could dispatch.
+    /// Fires once per run, on the transition; reschedule policies
+    /// subscribed via [`EdgeFaaS::on_engine_event`] can resubmit or
+    /// migrate in response.
+    DeadlineMissed {
+        run: RunId,
+        app: String,
+        /// The configured relative deadline, seconds.
+        deadline_s: f64,
+        /// How far past the deadline the miss was detected, seconds.
+        late_by: f64,
+    },
 }
 
 /// One schedulable unit: a single placement instance of a DAG node, or an
 /// opaque job (the async-invoke front-end).
 enum Task {
     Instance(InstanceTask),
-    Job(Box<dyn FnOnce(&Arc<EdgeFaaS>) + Send + 'static>),
+    Job {
+        class: Priority,
+        /// Absolute deadline in integer nanoseconds (`u64::MAX` = none);
+        /// for jobs this is an EDF ordering hint only — jobs are opaque and
+        /// are never deadline-cancelled.
+        deadline_ns: u64,
+        job: Box<dyn FnOnce(&Arc<EdgeFaaS>) + Send + 'static>,
+    },
+}
+
+impl Task {
+    fn class(&self) -> Priority {
+        match self {
+            Task::Instance(t) => t.class,
+            Task::Job { class, .. } => *class,
+        }
+    }
+
+    fn deadline_ns(&self) -> u64 {
+        match self {
+            Task::Instance(t) => t.deadline_ns,
+            Task::Job { deadline_ns, .. } => *deadline_ns,
+        }
+    }
 }
 
 struct InstanceTask {
@@ -113,10 +363,34 @@ struct InstanceTask {
     /// Index into the node's placement list.
     instance: usize,
     resource: ResourceId,
+    /// The run's QoS class (queue ordering + class-pure batching).
+    class: Priority,
+    /// The run's absolute deadline in integer nanoseconds (`u64::MAX` =
+    /// no deadline) — the EDF component of the queue key.
+    deadline_ns: u64,
     /// Fully-assembled invocation envelope, built once at fire time (the
     /// node-common head is serialized once and shared across placements).
     /// Shared `Bytes`: the batch protocol clones refcounts, not payloads.
     envelope: Bytes,
+}
+
+/// Priority-queue key: strict class first, earliest deadline within the
+/// class (`u64::MAX` = none, sorts last), then submission sequence for a
+/// deterministic FIFO tie-break. Derived `Ord` is lexicographic over the
+/// fields in this order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct QKey {
+    class: u8,
+    deadline_ns: u64,
+    seq: u64,
+}
+
+impl QKey {
+    const MIN: QKey = QKey { class: 0, deadline_ns: 0, seq: 0 };
+
+    /// Smallest key of the `Batch` class (the start of the aged range).
+    const BATCH_MIN: QKey =
+        QKey { class: Priority::Batch.rank(), deadline_ns: 0, seq: 0 };
 }
 
 /// Bookkeeping for one in-flight workflow run.
@@ -135,6 +409,12 @@ struct RunEntry {
     /// Tasks enqueued but not yet finished (0 = run drained).
     open_tasks: usize,
     started: f64,
+    /// The QoS the run was submitted with.
+    qos: QoS,
+    /// Absolute deadline (clock seconds), fixed at submission.
+    deadline_abs: Option<f64>,
+    /// Set once when the deadline is detected as missed at dispatch.
+    deadline_missed: bool,
     failed: Option<String>,
     done: bool,
 }
@@ -142,12 +422,19 @@ struct RunEntry {
 /// Queue + admission state, under a single lock so slot acquisition and
 /// release cannot deadlock against the pop path.
 struct QueueState {
-    ready: VecDeque<Task>,
+    /// The QoS-ordered ready queue (see [`QKey`] for the ordering rule).
+    ready: BTreeMap<QKey, Task>,
     /// Instances that were popped but found their resource at its admission
-    /// limit; re-scanned whenever a slot frees up.
-    deferred: VecDeque<InstanceTask>,
+    /// limit; re-scanned (in the same QoS order) whenever a slot frees up.
+    /// They keep their original key, so age/priority is preserved.
+    deferred: BTreeMap<QKey, InstanceTask>,
     /// Resource -> instances currently executing on it.
     in_use: HashMap<ResourceId, usize>,
+    /// Monotonic enqueue sequence — the deterministic FIFO tie-break.
+    next_seq: u64,
+    /// Consecutive higher-class dispatches while Batch work waited (the
+    /// aging counter; see [`BATCH_AGE_LIMIT`]).
+    since_batch: u64,
     /// Live worker threads.
     workers: usize,
     /// Workers currently executing a task (the rest are polling or about to
@@ -157,6 +444,17 @@ struct QueueState {
     busy: usize,
 }
 
+/// Queued (ready + admission-deferred) instances bound for one resource —
+/// the quantity the per-resource backpressure bound limits.
+fn queued_on(q: &QueueState, rid: ResourceId) -> usize {
+    let ready = q
+        .ready
+        .values()
+        .filter(|t| matches!(t, Task::Instance(ti) if ti.resource == rid))
+        .count();
+    ready + q.deferred.values().filter(|t| t.resource == rid).count()
+}
+
 /// Table of workflow runs plus the retention queue of completed ones.
 struct RunTable {
     map: HashMap<RunId, RunEntry>,
@@ -164,6 +462,12 @@ struct RunTable {
     /// [`MAX_FINISHED_RUNS`] so submit-and-forget clients (e.g. a crashed
     /// REST poller) cannot grow the coordinator's memory without bound.
     finished: VecDeque<RunId>,
+    /// Count of not-yet-finished runs (admission increments, the
+    /// completing transition decrements) — the pending-run backpressure
+    /// bound compares against this instead of rescanning `map` (which also
+    /// holds up to [`MAX_FINISHED_RUNS`] retained finished entries) on
+    /// every submission.
+    pending_runs: usize,
 }
 
 /// Completed-but-unconsumed runs retained before the oldest are evicted.
@@ -179,6 +483,10 @@ pub(super) struct EngineCore {
     /// Largest per-resource invocation batch a worker may drain (1 =
     /// batching off: every instance dispatches individually).
     max_batch: AtomicUsize,
+    /// Backpressure: total pending (not yet finished) runs admitted.
+    max_pending_runs: AtomicUsize,
+    /// Backpressure: queued instances allowed per resource.
+    max_queued_per_resource: AtomicUsize,
     queue: Mutex<QueueState>,
     queue_cv: Condvar,
     runs: Mutex<RunTable>,
@@ -192,6 +500,20 @@ pub const DEFAULT_MAX_WORKERS: usize = 16;
 pub const DEFAULT_PER_RESOURCE_SLOTS: usize = 8;
 /// Default cap on a per-resource invocation batch (see the module docs).
 pub const DEFAULT_MAX_BATCH: usize = 16;
+/// Default bound on pending (not yet finished) runs before
+/// [`EngineError::Saturated`].
+pub const DEFAULT_MAX_PENDING_RUNS: usize = 1024;
+/// Default bound on queued instances per resource before
+/// [`EngineError::Saturated`].
+pub const DEFAULT_MAX_QUEUED_PER_RESOURCE: usize = 4096;
+/// Aging guard: after this many consecutive higher-class instance
+/// dispatches (popped or coalesced into a batching drain) while `Batch`
+/// work waited, the oldest dispatchable `Batch` task runs next.
+/// Dispatch-count based (not time based) so the guard behaves identically
+/// under `RealClock` and `VirtualClock`.
+pub const BATCH_AGE_LIMIT: u64 = 16;
+/// `Retry-After` hint returned with [`EngineError::Saturated`], seconds.
+pub const SATURATED_RETRY_AFTER_S: f64 = 1.0;
 
 impl EngineCore {
     pub(super) fn new() -> EngineCore {
@@ -200,15 +522,23 @@ impl EngineCore {
             max_workers: AtomicUsize::new(DEFAULT_MAX_WORKERS),
             per_resource_slots: AtomicUsize::new(DEFAULT_PER_RESOURCE_SLOTS),
             max_batch: AtomicUsize::new(DEFAULT_MAX_BATCH),
+            max_pending_runs: AtomicUsize::new(DEFAULT_MAX_PENDING_RUNS),
+            max_queued_per_resource: AtomicUsize::new(DEFAULT_MAX_QUEUED_PER_RESOURCE),
             queue: Mutex::new(QueueState {
-                ready: VecDeque::new(),
-                deferred: VecDeque::new(),
+                ready: BTreeMap::new(),
+                deferred: BTreeMap::new(),
                 in_use: HashMap::new(),
+                next_seq: 0,
+                since_batch: 0,
                 workers: 0,
                 busy: 0,
             }),
             queue_cv: Condvar::new(),
-            runs: Mutex::new(RunTable { map: HashMap::new(), finished: VecDeque::new() }),
+            runs: Mutex::new(RunTable {
+                map: HashMap::new(),
+                finished: VecDeque::new(),
+                pending_runs: 0,
+            }),
             done_cv: Condvar::new(),
             callbacks: Mutex::new(Vec::new()),
         }
@@ -220,7 +550,10 @@ impl EngineCore {
         }
         let mut q = self.queue.lock().unwrap();
         for t in tasks {
-            q.ready.push_back(t);
+            let key =
+                QKey { class: t.class().rank(), deadline_ns: t.deadline_ns(), seq: q.next_seq };
+            q.next_seq += 1;
+            q.ready.insert(key, t);
         }
         drop(q);
         self.queue_cv.notify_all();
@@ -235,33 +568,77 @@ enum Popped {
     Blocked,
 }
 
-fn pop_task(q: &mut QueueState, limit: usize) -> Popped {
-    // Deferred instances first: a slot may have freed since they blocked.
-    for i in 0..q.deferred.len() {
-        let rid = q.deferred[i].resource;
-        if q.in_use.get(&rid).copied().unwrap_or(0) < limit {
-            let t = q.deferred.remove(i).expect("index in bounds");
-            *q.in_use.entry(rid).or_insert(0) += 1;
-            return Popped::Task(Task::Instance(t));
+/// Take the best dispatchable task at or above `lo` in key order, merging
+/// the ready queue and the admission-deferred set (both are QoS-ordered;
+/// the globally smallest dispatchable key wins). Ready instances whose
+/// resource is at its admission limit migrate to `deferred` under their
+/// original key. Returns `None` when nothing in the range can dispatch.
+fn pop_best(q: &mut QueueState, limit: usize, lo: QKey) -> Option<Task> {
+    loop {
+        let d_key = {
+            let in_use = &q.in_use;
+            q.deferred
+                .range(lo..)
+                .find(|(_, t)| in_use.get(&t.resource).copied().unwrap_or(0) < limit)
+                .map(|(k, _)| *k)
+        };
+        let r_key = q.ready.range(lo..).next().map(|(k, _)| *k);
+        let take_ready = match (r_key, d_key) {
+            (None, None) => return None,
+            (Some(rk), Some(dk)) => rk < dk,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+        };
+        if take_ready {
+            let rk = r_key.expect("checked in take_ready");
+            let task = q.ready.remove(&rk).expect("key just observed");
+            match task {
+                Task::Job { .. } => return Some(task),
+                Task::Instance(t) => {
+                    if q.in_use.get(&t.resource).copied().unwrap_or(0) < limit {
+                        *q.in_use.entry(t.resource).or_insert(0) += 1;
+                        return Some(Task::Instance(t));
+                    }
+                    q.deferred.insert(rk, t);
+                }
+            }
+        } else {
+            let dk = d_key.expect("checked in take_ready");
+            let t = q.deferred.remove(&dk).expect("key just observed");
+            *q.in_use.entry(t.resource).or_insert(0) += 1;
+            return Some(Task::Instance(t));
         }
     }
-    while let Some(task) = q.ready.pop_front() {
-        match task {
-            Task::Job(j) => return Popped::Task(Task::Job(j)),
-            Task::Instance(t) => {
-                let rid = t.resource;
-                if q.in_use.get(&rid).copied().unwrap_or(0) < limit {
-                    *q.in_use.entry(rid).or_insert(0) += 1;
-                    return Popped::Task(Task::Instance(t));
-                }
-                q.deferred.push_back(t);
+}
+
+/// Pop the next task in QoS order, applying the aging guard: once
+/// [`BATCH_AGE_LIMIT`] consecutive higher-class tasks have dispatched while
+/// `Batch` work waited, the oldest dispatchable `Batch` task goes first.
+fn pop_task(q: &mut QueueState, limit: usize) -> Popped {
+    let aged = if q.since_batch >= BATCH_AGE_LIMIT {
+        pop_best(q, limit, QKey::BATCH_MIN)
+    } else {
+        None
+    };
+    let popped = aged.or_else(|| pop_best(q, limit, QKey::MIN));
+    match popped {
+        Some(task) => {
+            if task.class() == Priority::Batch {
+                q.since_batch = 0;
+            } else {
+                let batch_waiting = q.ready.range(QKey::BATCH_MIN..).next().is_some()
+                    || q.deferred.range(QKey::BATCH_MIN..).next().is_some();
+                q.since_batch = if batch_waiting { q.since_batch + 1 } else { 0 };
+            }
+            Popped::Task(task)
+        }
+        None => {
+            if q.ready.is_empty() && q.deferred.is_empty() {
+                Popped::Empty
+            } else {
+                Popped::Blocked
             }
         }
-    }
-    if q.deferred.is_empty() {
-        Popped::Empty
-    } else {
-        Popped::Blocked
     }
 }
 
@@ -291,11 +668,16 @@ fn run_instance(faas: &EdgeFaaS, t: &InstanceTask) -> anyhow::Result<InstanceRes
     }
 }
 
-/// Pull queued instances bound for `rid` (admission-deferred first — they
-/// are oldest — then ready-queue order) into `out`, up to `max_total`
-/// entries. The drained instances execute sequentially under the admission
-/// slot the first instance already holds, so the per-resource concurrency
-/// bound is preserved.
+/// Pull queued instances bound for `rid` *of the same QoS class as the
+/// slot-holding instance* (admission-deferred first, then ready-queue
+/// order; both in QoS key order) into `out`, up to `max_total` entries.
+/// The drained instances execute sequentially under the admission slot the
+/// first instance already holds, so the per-resource concurrency bound is
+/// preserved.
+///
+/// Class purity is a QoS invariant, not an optimization: a `Batch`
+/// instance must never ride a slot acquired by a `Realtime` pop — it would
+/// effectively jump every queue the ordering rule just made it wait in.
 ///
 /// Ready-queue instances are drained only while the resource is saturated
 /// (`in_use >= limit`): below the limit, an idle worker could run them in
@@ -305,31 +687,64 @@ fn run_instance(faas: &EdgeFaaS, t: &InstanceTask) -> anyhow::Result<InstanceRes
 fn drain_same_resource(
     q: &mut QueueState,
     rid: ResourceId,
+    class: Priority,
     limit: usize,
     max_total: usize,
     out: &mut Vec<InstanceTask>,
 ) {
-    let mut i = 0;
-    while out.len() < max_total && i < q.deferred.len() {
-        if q.deferred[i].resource == rid {
-            out.push(q.deferred.remove(i).expect("index in bounds"));
-        } else {
-            i += 1;
-        }
+    // No coalescing while a *higher*-class instance waits for this same
+    // resource: it is entitled to the slot at the next release, and a
+    // drained batch would run up to max_batch lower-class instances ahead
+    // of it — a priority inversion the ordering rule forbids. (`..lim` is
+    // exactly the keys of strictly higher classes.)
+    let lim = QKey { class: class.rank(), deadline_ns: 0, seq: 0 };
+    let higher_waits = q
+        .ready
+        .range(..lim)
+        .any(|(_, t)| matches!(t, Task::Instance(ti) if ti.resource == rid))
+        || q.deferred.range(..lim).any(|(_, t)| t.resource == rid);
+    if higher_waits {
+        return;
+    }
+    let before = out.len();
+    let keys: Vec<QKey> = q
+        .deferred
+        .iter()
+        .filter(|(k, t)| k.class == class.rank() && t.resource == rid)
+        .map(|(k, _)| *k)
+        .take(max_total.saturating_sub(out.len()))
+        .collect();
+    for k in keys {
+        out.push(q.deferred.remove(&k).expect("key just collected"));
     }
     if q.in_use.get(&rid).copied().unwrap_or(0) < limit {
         return;
     }
-    let mut i = 0;
-    while out.len() < max_total && i < q.ready.len() {
-        let matches_rid = matches!(&q.ready[i], Task::Instance(t) if t.resource == rid);
-        if matches_rid {
-            match q.ready.remove(i) {
-                Some(Task::Instance(t)) => out.push(t),
-                _ => unreachable!("checked variant above"),
-            }
-        } else {
-            i += 1;
+    let keys: Vec<QKey> = q
+        .ready
+        .iter()
+        .filter(|(k, t)| {
+            k.class == class.rank() && matches!(t, Task::Instance(ti) if ti.resource == rid)
+        })
+        .map(|(k, _)| *k)
+        .take(max_total.saturating_sub(out.len()))
+        .collect();
+    for k in keys {
+        match q.ready.remove(&k) {
+            Some(Task::Instance(t)) => out.push(t),
+            _ => unreachable!("collected an instance key"),
+        }
+    }
+    // Aging accounting: every drained higher-class instance counts toward
+    // the starvation bound, exactly like a popped one — otherwise batching
+    // would inflate the documented [`BATCH_AGE_LIMIT`] by up to max_batch x
+    // (same batch-waiting rule as `pop_task`).
+    let drained = (out.len() - before) as u64;
+    if drained > 0 && class != Priority::Batch {
+        let batch_waiting = q.ready.range(QKey::BATCH_MIN..).next().is_some()
+            || q.deferred.range(QKey::BATCH_MIN..).next().is_some();
+        if batch_waiting {
+            q.since_batch += drained;
         }
     }
 }
@@ -355,7 +770,7 @@ fn engine_worker(faas: Arc<EdgeFaaS>) {
         };
         let Some(task) = task else { return };
         match task {
-            Task::Job(job) => {
+            Task::Job { job, .. } => {
                 // Same containment as run_instance: a panicking job must
                 // not kill the worker and leak the busy/worker counts.
                 let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&faas)));
@@ -367,17 +782,19 @@ fn engine_worker(faas: Arc<EdgeFaaS>) {
             }
             Task::Instance(first) => {
                 let rid = first.resource;
-                // Opportunistically drain more same-resource work into one
-                // batch (amortizes slot bookkeeping, completion locking and
-                // — through the backend's Batch verb — the gateway round
-                // trip). The batch runs sequentially on this worker under
-                // the single slot acquired by the pop above.
+                let class = first.class;
+                // Opportunistically drain more same-resource, same-class
+                // work into one batch (amortizes slot bookkeeping,
+                // completion locking and — through the backend's Batch verb
+                // — the gateway round trip). The batch runs sequentially on
+                // this worker under the single slot acquired by the pop
+                // above.
                 let mut tasks = vec![first];
                 let max_batch = faas.engine.max_batch.load(Ordering::Relaxed).max(1);
                 if max_batch > 1 {
                     let limit = faas.engine.per_resource_slots.load(Ordering::Relaxed).max(1);
                     let mut q = faas.engine.queue.lock().unwrap();
-                    drain_same_resource(&mut q, rid, limit, max_batch, &mut tasks);
+                    drain_same_resource(&mut q, rid, class, limit, max_batch, &mut tasks);
                 }
                 faas.run_batch(rid, tasks);
                 {
@@ -397,60 +814,238 @@ fn engine_worker(faas: Arc<EdgeFaaS>) {
 }
 
 impl EdgeFaaS {
-    /// Submit a workflow run to the engine; returns immediately with its
-    /// [`RunId`]. Entry functions fire at once; dependents fire as their
-    /// dependencies complete, interleaved with every other in-flight run.
+    /// Submit a workflow run with default QoS (`Interactive`, no deadline);
+    /// returns immediately with its [`RunId`]. Entry functions fire at
+    /// once; dependents fire as their dependencies complete, interleaved
+    /// with every other in-flight run. See [`Self::submit_workflow_qos`]
+    /// for the admission (backpressure) rules.
     pub fn submit_workflow(
         self: &Arc<Self>,
         app: &str,
         entry_inputs: &HashMap<String, Vec<String>>,
-    ) -> anyhow::Result<RunId> {
-        let application = self.app(app)?;
-        let run = self.engine.next_run.fetch_add(1, Ordering::SeqCst);
-        let mut events = Vec::new();
-        {
-            let mut runs = self.engine.runs.lock().unwrap();
-            let entry = RunEntry {
-                app_name: app.to_string(),
-                app: Arc::clone(&application),
-                entry_inputs: entry_inputs.clone(),
-                state: RunState::new(&application.dag),
-                fired: HashSet::new(),
-                pending: HashMap::new(),
-                partial: HashMap::new(),
-                result: WorkflowResult::default(),
-                open_tasks: 0,
-                started: self.clock.now(),
-                failed: None,
-                done: false,
-            };
-            // Insert before enqueueing so a fast worker finds the entry.
-            runs.map.insert(run, entry);
-            let completed = {
-                let entry = runs.map.get_mut(&run).expect("just inserted");
-                let entrypoints = application.config.entrypoints.clone();
-                let mut batch = Vec::new();
-                for f in &entrypoints {
-                    if let Err(e) = self.fire_node(run, entry, f, &mut batch) {
-                        entry.failed.get_or_insert(e.to_string());
-                        break;
-                    }
-                }
-                self.engine.enqueue(batch);
-                self.check_done(run, entry, &mut events)
-            };
-            if completed {
-                Self::retire_finished(&mut runs, run);
+    ) -> Result<RunId, EngineError> {
+        self.submit_workflow_qos(app, entry_inputs, QoS::default())
+    }
+
+    /// Submit a workflow run under an explicit [`QoS`].
+    ///
+    /// Admission control: if the pending-run bound or any entry resource's
+    /// queued-instance bound ([`Self::set_backpressure`]) would be
+    /// exceeded, `Realtime`/`Interactive` submissions first shed queued
+    /// `Batch`-class runs (newest first, only runs with no instance
+    /// currently executing; each shed run fails with a "shed under
+    /// backpressure" message and publishes `RunCompleted { ok: false }`).
+    /// If nothing can be shed — or the submission is itself `Batch` — the
+    /// submission is refused with [`EngineError::Saturated`].
+    pub fn submit_workflow_qos(
+        self: &Arc<Self>,
+        app: &str,
+        entry_inputs: &HashMap<String, Vec<String>>,
+        qos: QoS,
+    ) -> Result<RunId, EngineError> {
+        let application = self.app(app).map_err(|e| EngineError::Rejected(e.to_string()))?;
+        // Entry-instance demand per resource (for the per-resource queue
+        // bound). Placement errors are deliberately ignored here: such a
+        // run is admitted and then fails through the normal fire path.
+        let mut demand: HashMap<ResourceId, usize> = HashMap::new();
+        for f in &application.config.entrypoints {
+            for rid in self.candidates_of(app, f).unwrap_or_default() {
+                *demand.entry(rid).or_insert(0) += 1;
             }
         }
+        let max_runs = self.engine.max_pending_runs.load(Ordering::Relaxed).max(1);
+        let max_queued = self.engine.max_queued_per_resource.load(Ordering::Relaxed).max(1);
+        let mut events = Vec::new();
+        let admitted: Result<RunId, EngineError> = {
+            let mut runs = self.engine.runs.lock().unwrap();
+            let admission = loop {
+                let pending = runs.pending_runs;
+                let saturated_resource = {
+                    let q = self.engine.queue.lock().unwrap();
+                    // Fast path: if the whole queue plus this run's largest
+                    // per-resource demand fits the bound, no single
+                    // resource can exceed it — skip the per-resource scan
+                    // (it is O(queue), and it runs under both locks).
+                    let total_queued = q.ready.len() + q.deferred.len();
+                    let max_demand = demand.values().copied().max().unwrap_or(0);
+                    if total_queued + max_demand <= max_queued {
+                        None
+                    } else {
+                        demand
+                            .iter()
+                            .find(|(rid, d)| queued_on(&q, **rid) + **d > max_queued)
+                            .map(|(rid, _)| *rid)
+                    }
+                };
+                if pending < max_runs && saturated_resource.is_none() {
+                    break Ok(());
+                }
+                // Shed only when it can actually relieve the binding
+                // constraint: against the pending-run bound any queued
+                // Batch run helps; against a saturated resource only Batch
+                // runs queued *on that resource* do. A demand larger than
+                // the per-resource bound can never be admitted, so nothing
+                // is shed for it.
+                let impossible = demand.values().any(|d| *d > max_queued);
+                let shed_target = if pending >= max_runs { None } else { saturated_resource };
+                if !impossible
+                    && qos.priority != Priority::Batch
+                    && self.shed_newest_queued_batch(&mut runs, shed_target, &mut events)
+                {
+                    continue;
+                }
+                break Err(EngineError::Saturated {
+                    pending_runs: pending,
+                    max_pending_runs: max_runs,
+                    saturated_resource,
+                    retry_after_s: SATURATED_RETRY_AFTER_S,
+                });
+            };
+            match admission {
+                Err(e) => Err(e),
+                Ok(()) => {
+                    let run = self.engine.next_run.fetch_add(1, Ordering::SeqCst);
+                    let now = self.clock.now();
+                    let entry = RunEntry {
+                        app_name: app.to_string(),
+                        app: Arc::clone(&application),
+                        entry_inputs: entry_inputs.clone(),
+                        state: RunState::new(&application.dag),
+                        fired: HashSet::new(),
+                        pending: HashMap::new(),
+                        partial: HashMap::new(),
+                        result: WorkflowResult::default(),
+                        open_tasks: 0,
+                        started: now,
+                        qos,
+                        deadline_abs: qos.deadline_s.map(|d| now + d.max(0.0)),
+                        deadline_missed: false,
+                        failed: None,
+                        done: false,
+                    };
+                    // Insert before enqueueing so a fast worker finds it.
+                    runs.map.insert(run, entry);
+                    runs.pending_runs += 1;
+                    let completed = {
+                        let entry = runs.map.get_mut(&run).expect("just inserted");
+                        let entrypoints = application.config.entrypoints.clone();
+                        let mut batch = Vec::new();
+                        for f in &entrypoints {
+                            if let Err(e) = self.fire_node(run, entry, f, &mut batch) {
+                                entry.failed.get_or_insert(e.to_string());
+                                break;
+                            }
+                        }
+                        self.engine.enqueue(batch);
+                        self.check_done(run, entry, &mut events)
+                    };
+                    if completed {
+                        Self::retire_finished(&mut runs, run);
+                    }
+                    Ok(run)
+                }
+            }
+        };
+        // Shed victims may already have wait_workflow callers parked.
+        if events.iter().any(|e| matches!(e, EngineEvent::RunCompleted { .. })) {
+            self.engine.done_cv.notify_all();
+        }
         self.emit_events(&events);
-        self.ensure_workers();
-        Ok(run)
+        if admitted.is_ok() {
+            self.ensure_workers();
+        }
+        admitted
+    }
+
+    /// Shed the newest `Batch`-class run that has no instance currently
+    /// executing: its queued instances are removed from the ready/deferred
+    /// queues and the run fails with a backpressure message. With
+    /// `on_resource` set, only runs with at least one instance queued on
+    /// that resource qualify — shedding a run that cannot relieve the
+    /// saturated resource would destroy it for zero benefit. Returns false
+    /// when no run qualifies. Caller holds the runs lock and collects the
+    /// completion events.
+    fn shed_newest_queued_batch(
+        &self,
+        runs: &mut RunTable,
+        on_resource: Option<ResourceId>,
+        events: &mut Vec<EngineEvent>,
+    ) -> bool {
+        let victim = {
+            // Queue lock nested inside the runs lock — the same nesting
+            // order as `enqueue` under `complete_batch`.
+            let q = self.engine.queue.lock().unwrap();
+            let mut queued_per_run: HashMap<RunId, usize> = HashMap::new();
+            let mut on_rid: HashSet<RunId> = HashSet::new();
+            for t in q.ready.values() {
+                if let Task::Instance(ti) = t {
+                    *queued_per_run.entry(ti.run).or_insert(0) += 1;
+                    if Some(ti.resource) == on_resource {
+                        on_rid.insert(ti.run);
+                    }
+                }
+            }
+            for t in q.deferred.values() {
+                *queued_per_run.entry(t.run).or_insert(0) += 1;
+                if Some(t.resource) == on_resource {
+                    on_rid.insert(t.run);
+                }
+            }
+            runs.map
+                .iter()
+                .filter(|(id, e)| {
+                    !e.done
+                        && e.qos.priority == Priority::Batch
+                        && e.open_tasks > 0
+                        && queued_per_run.get(*id).copied().unwrap_or(0) == e.open_tasks
+                        && (on_resource.is_none() || on_rid.contains(*id))
+                })
+                .map(|(id, _)| *id)
+                .max()
+        };
+        let Some(victim) = victim else { return false };
+        {
+            let mut q = self.engine.queue.lock().unwrap();
+            let keys: Vec<QKey> = q
+                .ready
+                .iter()
+                .filter(|(_, t)| matches!(t, Task::Instance(ti) if ti.run == victim))
+                .map(|(k, _)| *k)
+                .collect();
+            for k in keys {
+                q.ready.remove(&k);
+            }
+            let keys: Vec<QKey> =
+                q.deferred.iter().filter(|(_, t)| t.run == victim).map(|(k, _)| *k).collect();
+            for k in keys {
+                q.deferred.remove(&k);
+            }
+        }
+        let entry = runs.map.get_mut(&victim).expect("victim observed under this lock");
+        entry.open_tasks = 0;
+        entry.failed.get_or_insert_with(|| {
+            "shed under backpressure (batch-class run evicted by a higher-priority submission)"
+                .to_string()
+        });
+        log::warn!("engine saturated: shedding batch-class run {victim}");
+        if self.check_done(victim, entry, events) {
+            Self::retire_finished(runs, victim);
+        }
+        // A worker parked on the queue condvar may have been waiting for
+        // exactly the tasks just removed: wake it to re-evaluate (it exits
+        // if the queue is now empty).
+        self.engine.queue_cv.notify_all();
+        true
     }
 
     /// Block until a run completes (or `timeout_s` elapses; pass
-    /// `f64::INFINITY` to wait forever). Consumes the run's record.
-    pub fn wait_workflow(&self, run: RunId, timeout_s: f64) -> anyhow::Result<WorkflowResult> {
+    /// `f64::INFINITY` to wait forever). Consumes the run's record on
+    /// completion. Each failure mode is a distinct [`WaitError`] variant:
+    /// a wait timeout (the run is still executing and can be waited on
+    /// again) is not a run failure, and a missed QoS deadline is reported
+    /// as [`WaitError::DeadlineExceeded`] rather than a generic failure
+    /// string.
+    pub fn wait_workflow(&self, run: RunId, timeout_s: f64) -> Result<WorkflowResult, WaitError> {
         let deadline = if timeout_s.is_finite() {
             Some(
                 std::time::Instant::now()
@@ -462,13 +1057,16 @@ impl EdgeFaaS {
         let mut runs = self.engine.runs.lock().unwrap();
         loop {
             let done = match runs.map.get(&run) {
-                None => anyhow::bail!("unknown workflow run {run}"),
+                None => return Err(WaitError::UnknownRun { run }),
                 Some(e) => e.done,
             };
             if done {
                 let entry = runs.map.remove(&run).expect("checked above");
+                if entry.deadline_missed {
+                    return Err(WaitError::DeadlineExceeded { run });
+                }
                 return match entry.failed {
-                    Some(msg) => Err(anyhow::anyhow!(msg)),
+                    Some(message) => Err(WaitError::RunFailed { run, message }),
                     None => Ok(entry.result),
                 };
             }
@@ -477,7 +1075,7 @@ impl EdgeFaaS {
                 Some(d) => {
                     let now = std::time::Instant::now();
                     if now >= d {
-                        anyhow::bail!("workflow run {run} timed out");
+                        return Err(WaitError::Timeout { run, waited_s: timeout_s.max(0.0) });
                     }
                     let (g, _) = self.engine.done_cv.wait_timeout(runs, d - now).unwrap();
                     runs = g;
@@ -490,15 +1088,7 @@ impl EdgeFaaS {
     /// `take_run`).
     pub fn run_status(&self, run: RunId) -> Option<RunStatus> {
         let runs = self.engine.runs.lock().unwrap();
-        runs.map.get(&run).map(|e| {
-            if !e.done {
-                RunStatus::Running
-            } else if let Some(msg) = &e.failed {
-                RunStatus::Failed(msg.clone())
-            } else {
-                RunStatus::Done(e.result.clone())
-            }
-        })
+        runs.map.get(&run).map(Self::status_of)
     }
 
     /// Like [`Self::run_status`], but removes the record once the run is
@@ -510,10 +1100,36 @@ impl EdgeFaaS {
             return Some(RunStatus::Running);
         }
         let entry = runs.map.remove(&run).expect("checked above");
-        Some(match entry.failed {
-            Some(msg) => RunStatus::Failed(msg),
-            None => RunStatus::Done(entry.result),
+        Some(if entry.deadline_missed {
+            RunStatus::DeadlineExceeded
+        } else if let Some(msg) = entry.failed {
+            RunStatus::Failed(msg)
+        } else {
+            RunStatus::Done(entry.result)
         })
+    }
+
+    fn status_of(e: &RunEntry) -> RunStatus {
+        if !e.done {
+            RunStatus::Running
+        } else if e.deadline_missed {
+            RunStatus::DeadlineExceeded
+        } else if let Some(msg) = &e.failed {
+            RunStatus::Failed(msg.clone())
+        } else {
+            RunStatus::Done(e.result.clone())
+        }
+    }
+
+    /// QoS class and deadline state of a run still in the table: the
+    /// submitted [`QoS`] plus, when a deadline was set, the remaining
+    /// budget in seconds (negative once past). `None` once the record has
+    /// been consumed.
+    pub fn run_qos(&self, run: RunId) -> Option<(QoS, Option<f64>)> {
+        let runs = self.engine.runs.lock().unwrap();
+        runs.map
+            .get(&run)
+            .map(|e| (e.qos, e.deadline_abs.map(|d| d - self.clock.now())))
     }
 
     /// Run an opaque job on the engine's worker pool (the async-invoke
@@ -527,7 +1143,27 @@ impl EdgeFaaS {
     /// outstanding job, the same bound the old thread-per-async-invocation
     /// design had.
     pub fn spawn_job(self: &Arc<Self>, job: impl FnOnce(&Arc<EdgeFaaS>) + Send + 'static) {
-        self.engine.enqueue(vec![Task::Job(Box::new(job))]);
+        self.spawn_job_qos(QoS::default(), job)
+    }
+
+    /// [`Self::spawn_job`] under an explicit [`QoS`]: the class orders the
+    /// job against every other queued task, and a deadline (if any) is an
+    /// EDF ordering hint — jobs are opaque, so they are never
+    /// deadline-cancelled and are not subject to run backpressure.
+    pub fn spawn_job_qos(
+        self: &Arc<Self>,
+        qos: QoS,
+        job: impl FnOnce(&Arc<EdgeFaaS>) + Send + 'static,
+    ) {
+        let deadline_ns = qos
+            .deadline_s
+            .map(|d| ((self.clock.now() + d.max(0.0)) * 1e9) as u64)
+            .unwrap_or(u64::MAX);
+        self.engine.enqueue(vec![Task::Job {
+            class: qos.priority,
+            deadline_ns,
+            job: Box::new(job),
+        }]);
         let overflow = {
             let mut q = self.engine.queue.lock().unwrap();
             if q.workers.saturating_sub(q.busy) == 0 {
@@ -586,6 +1222,18 @@ impl EdgeFaaS {
         self.engine.max_batch.load(Ordering::Relaxed) > 1
     }
 
+    /// Tune the backpressure bounds (both clamped to >= 1): total pending
+    /// (not yet finished) runs, and queued instances per resource. Beyond
+    /// either bound, submissions are refused with
+    /// [`EngineError::Saturated`] — after `Batch`-class shedding for
+    /// higher-class submissions (see [`Self::submit_workflow_qos`]).
+    pub fn set_backpressure(&self, max_pending_runs: usize, max_queued_per_resource: usize) {
+        self.engine.max_pending_runs.store(max_pending_runs.max(1), Ordering::Relaxed);
+        self.engine
+            .max_queued_per_resource
+            .store(max_queued_per_resource.max(1), Ordering::Relaxed);
+    }
+
     // ------------------------------------------------------------ internal --
 
     /// Fire one DAG node: route its inputs, record bookkeeping, and collect
@@ -618,6 +1266,9 @@ impl EdgeFaaS {
         entry.pending.insert(fname.to_string(), placements.len());
         entry.partial.insert(fname.to_string(), vec![None; placements.len()]);
         entry.open_tasks += placements.len();
+        let class = entry.qos.priority;
+        let deadline_ns =
+            entry.deadline_abs.map(|d| (d.max(0.0) * 1e9) as u64).unwrap_or(u64::MAX);
         // Serialize the node-common envelope head once (JSON-escaped).
         let mut head = String::with_capacity(32 + app.len() + fname.len());
         head.push_str("{\"app\":");
@@ -639,6 +1290,8 @@ impl EdgeFaaS {
                 function: fname.to_string(),
                 instance: i,
                 resource: rid,
+                class,
+                deadline_ns,
                 envelope: Bytes::from(env),
             }));
         }
@@ -656,15 +1309,44 @@ impl EdgeFaaS {
         // siblings already executing on other workers cannot be recalled
         // either — this check is best-effort: a run failing mid-batch
         // wastes at most the remainder of this one batch.
+        //
+        // Deadline enforcement lives here too: an instance dispatched after
+        // its run's deadline has passed is skipped instead of occupying the
+        // backend, the run transitions to `DeadlineExceeded` (once), and
+        // `EngineEvent::DeadlineMissed` fires for reschedule policies.
+        let now = self.clock.now();
+        let mut deadline_events = Vec::new();
         let skip: Vec<bool> = {
-            let runs = self.engine.runs.lock().unwrap();
+            let mut runs = self.engine.runs.lock().unwrap();
             tasks
                 .iter()
                 .map(|t| {
-                    runs.map.get(&t.run).map(|e| e.failed.is_some() || e.done).unwrap_or(true)
+                    let Some(e) = runs.map.get_mut(&t.run) else { return true };
+                    if e.failed.is_some() || e.done {
+                        return true;
+                    }
+                    match e.deadline_abs {
+                        Some(d) if now >= d => {
+                            e.deadline_missed = true;
+                            e.failed = Some(format!(
+                                "deadline exceeded: dispatched {:.3}s past the {:.3}s deadline",
+                                now - d,
+                                e.qos.deadline_s.unwrap_or(0.0)
+                            ));
+                            deadline_events.push(EngineEvent::DeadlineMissed {
+                                run: t.run,
+                                app: e.app_name.clone(),
+                                deadline_s: e.qos.deadline_s.unwrap_or(0.0),
+                                late_by: now - d,
+                            });
+                            true
+                        }
+                        _ => false,
+                    }
                 })
                 .collect()
         };
+        self.emit_events(&deadline_events);
         let mut outcomes: Vec<Option<anyhow::Result<InstanceResult>>> =
             skip.iter().map(|_| None).collect();
         let live: Vec<usize> = (0..tasks.len()).filter(|&i| !skip[i]).collect();
@@ -878,8 +1560,11 @@ impl EdgeFaaS {
     /// Record a just-completed run in the retention queue, evicting the
     /// oldest completed-but-unconsumed runs beyond [`MAX_FINISHED_RUNS`].
     /// (Runs consumed by `wait_workflow`/`take_run` leave stale ids behind;
-    /// those pop harmlessly here.)
+    /// those pop harmlessly here.) Called exactly once per completing
+    /// transition (`check_done` returning true), so it also settles the
+    /// pending-run counter.
     fn retire_finished(runs: &mut RunTable, run: RunId) {
+        runs.pending_runs = runs.pending_runs.saturating_sub(1);
         while runs.finished.len() >= MAX_FINISHED_RUNS {
             let Some(old) = runs.finished.pop_front() else { break };
             if runs.map.get(&old).map(|e| e.done).unwrap_or(false) {
@@ -914,7 +1599,7 @@ impl EdgeFaaS {
                 // pick them up then).
                 let admissible_deferred = q
                     .deferred
-                    .iter()
+                    .values()
                     .filter(|t| q.in_use.get(&t.resource).copied().unwrap_or(0) < limit)
                     .count();
                 let pending = q.ready.len() + admissible_deferred;
@@ -1175,6 +1860,7 @@ dag:
                     assert!(ok);
                     runs_done.fetch_add(1, Ordering::SeqCst);
                 }
+                EngineEvent::DeadlineMissed { .. } => unreachable!("no deadlines set"),
             });
         }
         let run = b.faas.submit_workflow("chain", &entry_for("ev")).unwrap();
@@ -1197,7 +1883,204 @@ dag:
     fn unknown_app_and_unknown_run_error() {
         let b = chain_bed(Arc::new(RealClock::new()));
         assert!(b.faas.submit_workflow("ghost", &HashMap::new()).is_err());
-        assert!(b.faas.wait_workflow(999_999, 0.05).is_err());
+        assert_eq!(
+            b.faas.wait_workflow(999_999, 0.05).unwrap_err(),
+            WaitError::UnknownRun { run: 999_999 }
+        );
         assert!(b.faas.run_status(999_999).is_none());
+    }
+
+    // ------------------------------------------------- queue-order units --
+
+    fn inst(run: RunId, rid: ResourceId, class: Priority, deadline_ns: u64) -> Task {
+        Task::Instance(InstanceTask {
+            run,
+            app: "a".into(),
+            function: "f".into(),
+            instance: 0,
+            resource: rid,
+            class,
+            deadline_ns,
+            envelope: Bytes::new(),
+        })
+    }
+
+    fn fresh_queue() -> QueueState {
+        QueueState {
+            ready: std::collections::BTreeMap::new(),
+            deferred: std::collections::BTreeMap::new(),
+            in_use: HashMap::new(),
+            next_seq: 0,
+            since_batch: 0,
+            workers: 0,
+            busy: 0,
+        }
+    }
+
+    fn push(q: &mut QueueState, t: Task) {
+        let key = QKey { class: t.class().rank(), deadline_ns: t.deadline_ns(), seq: q.next_seq };
+        q.next_seq += 1;
+        q.ready.insert(key, t);
+    }
+
+    /// Pop one task and release its admission slot (simulates instant
+    /// completion so admission never interferes with order checks).
+    fn pop_run(q: &mut QueueState) -> RunId {
+        match pop_task(q, 8) {
+            Popped::Task(Task::Instance(t)) => {
+                if let Some(n) = q.in_use.get_mut(&t.resource) {
+                    *n = n.saturating_sub(1);
+                }
+                t.run
+            }
+            _ => panic!("expected an instance"),
+        }
+    }
+
+    #[test]
+    fn pop_orders_by_class_then_deadline_then_submission() {
+        let mut q = fresh_queue();
+        // Submission order: batch, interactive (late deadline), realtime,
+        // interactive (early deadline), interactive (no deadline).
+        push(&mut q, inst(0, 0, Priority::Batch, u64::MAX));
+        push(&mut q, inst(1, 1, Priority::Interactive, 2_000_000_000));
+        push(&mut q, inst(2, 2, Priority::Realtime, u64::MAX));
+        push(&mut q, inst(3, 3, Priority::Interactive, 1_000_000_000));
+        push(&mut q, inst(4, 4, Priority::Interactive, u64::MAX));
+        // Class first (realtime), then EDF within interactive (run 3 before
+        // run 1), no-deadline interactive last of its class, batch last.
+        assert_eq!(pop_run(&mut q), 2, "realtime jumps the queue");
+        assert_eq!(pop_run(&mut q), 3, "earliest deadline first");
+        assert_eq!(pop_run(&mut q), 1);
+        assert_eq!(pop_run(&mut q), 4, "no deadline sorts after deadlines");
+        assert_eq!(pop_run(&mut q), 0, "batch drains last");
+        assert!(matches!(pop_task(&mut q, 8), Popped::Empty));
+    }
+
+    #[test]
+    fn same_key_fields_fall_back_to_submission_order() {
+        let mut q = fresh_queue();
+        for run in 0..5 {
+            push(&mut q, inst(run, run as ResourceId, Priority::Interactive, u64::MAX));
+        }
+        for run in 0..5 {
+            assert_eq!(pop_run(&mut q), run, "FIFO within identical class/deadline");
+        }
+    }
+
+    #[test]
+    fn aging_guard_dispatches_batch_after_the_limit() {
+        let mut q = fresh_queue();
+        // One batch task waits while a steady interactive stream arrives.
+        push(&mut q, inst(1000, 99, Priority::Batch, u64::MAX));
+        for i in 0..(2 * BATCH_AGE_LIMIT) {
+            push(&mut q, inst(i, i as ResourceId, Priority::Interactive, u64::MAX));
+        }
+        let mut pops_before_batch = 0u64;
+        loop {
+            let run = pop_run(&mut q);
+            if run == 1000 {
+                break;
+            }
+            pops_before_batch += 1;
+            // Keep the stream topped up so strict priority alone would
+            // starve the batch task forever.
+            push(&mut q, inst(5000 + pops_before_batch, 7, Priority::Interactive, u64::MAX));
+            assert!(
+                pops_before_batch <= BATCH_AGE_LIMIT,
+                "batch task starved past the aging limit"
+            );
+        }
+        assert_eq!(
+            pops_before_batch, BATCH_AGE_LIMIT,
+            "batch dispatches exactly at the aging threshold"
+        );
+    }
+
+    #[test]
+    fn deadline_exceeded_run_fails_without_executing() {
+        let b = chain_bed(Arc::new(RealClock::new()));
+        let missed = Arc::new(AtomicUsize::new(0));
+        {
+            let missed = Arc::clone(&missed);
+            b.faas.on_engine_event(move |_, ev| {
+                if let EngineEvent::DeadlineMissed { deadline_s, late_by, .. } = ev {
+                    assert_eq!(*deadline_s, 0.0);
+                    assert!(*late_by >= 0.0);
+                    missed.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+        }
+        // A deadline of zero is already past at first dispatch.
+        let run = b
+            .faas
+            .submit_workflow_qos(
+                "chain",
+                &entry_for("dl"),
+                QoS::class(Priority::Interactive).with_deadline(0.0),
+            )
+            .unwrap();
+        let err = b.faas.wait_workflow(run, 10.0).unwrap_err();
+        assert_eq!(err, WaitError::DeadlineExceeded { run });
+        assert_eq!(missed.load(Ordering::SeqCst), 1, "DeadlineMissed fires once");
+    }
+
+    #[test]
+    fn backpressure_saturates_and_sheds_batch_first() {
+        let b = chain_bed(Arc::new(RealClock::new()));
+        // One worker, one slot, no batching: the first popped instance
+        // occupies the engine while the gate holds (a drain would pull the
+        // other runs' iot-0 instances into its batch and make them
+        // ineligible for shedding), so queue state is deterministic.
+        b.faas.set_engine_limits(1, 1);
+        b.faas.set_batching(false);
+        b.faas.set_backpressure(3, 1024);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        {
+            let gate = Arc::clone(&gate);
+            b.executor.register("img/gen", move |_: &[u8]| {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                Ok(br#"{"outputs":[]}"#.to_vec())
+            });
+        }
+        b.executor.register("img/sum", |_: &[u8]| Ok(br#"{"outputs":[]}"#.to_vec()));
+        let batch_qos = QoS::class(Priority::Batch);
+        let b0 = b.faas.submit_workflow_qos("chain", &entry_for("b0"), batch_qos).unwrap();
+        let b1 = b.faas.submit_workflow_qos("chain", &entry_for("b1"), batch_qos).unwrap();
+        let b2 = b.faas.submit_workflow_qos("chain", &entry_for("b2"), batch_qos).unwrap();
+        // 3 pending batch runs: a 4th batch submission is refused...
+        match b.faas.submit_workflow_qos("chain", &entry_for("b3"), batch_qos) {
+            Err(EngineError::Saturated { pending_runs, max_pending_runs, .. }) => {
+                assert_eq!((pending_runs, max_pending_runs), (3, 3));
+            }
+            other => panic!("expected Saturated, got {other:?}"),
+        }
+        // ...but an interactive submission sheds the newest fully-queued
+        // batch run (b2; b0 has an instance executing behind the gate).
+        let rt = b
+            .faas
+            .submit_workflow_qos("chain", &entry_for("i0"), QoS::default())
+            .unwrap();
+        let err = b.faas.wait_workflow(b2, 10.0).unwrap_err();
+        match err {
+            WaitError::RunFailed { run, message } => {
+                assert_eq!(run, b2);
+                assert!(message.contains("shed under backpressure"), "{message}");
+            }
+            other => panic!("expected shed failure, got {other:?}"),
+        }
+        // Release the gate: the survivors all complete.
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        for id in [b0, b1, rt] {
+            b.faas.wait_workflow(id, 30.0).unwrap();
+        }
     }
 }

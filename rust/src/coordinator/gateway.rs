@@ -15,8 +15,13 @@
 //! DELETE /apps/{app}/functions/{fn}     delete_function
 //! POST   /apps/{app}/invoke/{fn}        invoke  (JSON body; ?one=true)
 //! POST   /apps/{app}/run                run_workflow {entry_inputs}
-//!                                       (?async=true -> {run} id, poll below)
-//! GET    /runs/{id}                     run status; a finished run is
+//!                                       (?async=true -> {run} id, poll below;
+//!                                       ?priority=realtime|interactive|batch
+//!                                       and ?deadline_s=<f64> set the QoS;
+//!                                       a saturated engine answers 429 with
+//!                                       a Retry-After header)
+//! GET    /runs/{id}                     run status incl. QoS class +
+//!                                       deadline state; a finished run is
 //!                                       returned once, then forgotten
 //! PUT    /apps/{app}/buckets/{bucket}   create_bucket (?locality=<rid>)
 //! DELETE /apps/{app}/buckets/{bucket}   delete_bucket
@@ -29,13 +34,13 @@
 //! GET    /healthz
 //! ```
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 use crate::util::http::{Handler, Request, Response, Server};
 use crate::util::json::Json;
 
-use super::engine::RunStatus;
+use super::engine::{EngineError, Priority, QoS, RunStatus, WaitError};
 use super::functions::FunctionPackage;
 use super::invoker::WorkflowResult;
 use super::resource::EdgeFaaS;
@@ -88,6 +93,55 @@ impl EdgeFaasGateway {
 
     fn ok_or_500(r: anyhow::Result<Response>) -> Response {
         r.unwrap_or_else(|e| Response::error(e.to_string()))
+    }
+
+    /// Parse the QoS query parameters of `POST /apps/{app}/run`.
+    fn qos_from_query(query: &BTreeMap<String, String>) -> anyhow::Result<QoS> {
+        let mut qos = QoS::default();
+        if let Some(p) = query.get("priority") {
+            qos.priority = p.parse()?;
+        }
+        if let Some(d) = query.get("deadline_s") {
+            let secs: f64 =
+                d.parse().map_err(|_| anyhow::anyhow!("bad deadline_s `{d}` (want seconds)"))?;
+            qos.deadline_s = Some(secs);
+        }
+        Ok(qos)
+    }
+
+    /// Map an admission error: `Saturated` becomes `429 Too Many Requests`
+    /// with a `Retry-After` header (whole seconds, rounded up); anything
+    /// else stays a 500 like other coordinator errors.
+    fn engine_error_response(e: EngineError) -> Response {
+        let msg = e.to_string();
+        match e {
+            EngineError::Saturated { retry_after_s, .. } => {
+                let mut r = Response::text(429, msg);
+                r.headers.insert(
+                    "Retry-After".into(),
+                    format!("{}", retry_after_s.ceil().max(1.0) as u64),
+                );
+                r
+            }
+            EngineError::Rejected(_) => Response::error(msg),
+        }
+    }
+
+    /// The `qos` object reported by `GET /runs/{id}`: class, configured
+    /// deadline, and the deadline's current state
+    /// (`none`/`pending`/`met`/`missed`).
+    fn qos_json(qos: QoS, remaining: Option<f64>, state: &str) -> Json {
+        let mut o = Json::obj();
+        o.set("priority", qos.priority.as_str().into());
+        match qos.deadline_s {
+            Some(d) => o.set("deadline_s", d.into()),
+            None => o.set("deadline_s", Json::Null),
+        };
+        if let Some(r) = remaining {
+            o.set("deadline_remaining_s", r.into());
+        }
+        o.set("deadline_state", state.into());
+        o
     }
 
     /// JSON shape shared by the sync `run` response and `GET /runs/{id}`.
@@ -178,16 +232,39 @@ impl Handler for EdgeFaasGateway {
                         }
                     }
                 }
+                let qos = match Self::qos_from_query(&req.query) {
+                    Ok(qos) => qos,
+                    Err(e) => return Ok(Response::bad_request(e.to_string())),
+                };
                 // Async submission: hand back the engine run id immediately.
                 if req.query.get("async").map(|v| v == "true").unwrap_or(false) {
-                    let run = self.faas.submit_workflow(app, &entry_inputs)?;
+                    let run = match self.faas.submit_workflow_qos(app, &entry_inputs, qos) {
+                        Ok(run) => run,
+                        Err(e) => return Ok(Self::engine_error_response(e)),
+                    };
                     self.async_runs.lock().unwrap().insert(run);
                     let mut o = Json::obj();
                     o.set("run", run.into());
                     return Ok(Response::json(202, &o));
                 }
-                let result = self.faas.run_workflow(app, &entry_inputs)?;
-                Ok(Response::json(200, &Self::workflow_result_json(&result)))
+                let run = match self.faas.submit_workflow_qos(app, &entry_inputs, qos) {
+                    Ok(run) => run,
+                    Err(e) => return Ok(Self::engine_error_response(e)),
+                };
+                match self.faas.wait_workflow(run, f64::INFINITY) {
+                    Ok(result) => {
+                        Ok(Response::json(200, &Self::workflow_result_json(&result)))
+                    }
+                    // A missed deadline is a client-configured QoS outcome,
+                    // not a server fault: report it like `GET /runs/{id}`
+                    // does, not as a 500.
+                    Err(WaitError::DeadlineExceeded { .. }) => {
+                        let mut o = Json::obj();
+                        o.set("status", "deadline_exceeded".into()).set("run", run.into());
+                        Ok(Response::json(200, &o))
+                    }
+                    Err(e) => Err(e.into()),
+                }
             })()),
             ("GET", ["runs", id]) => Self::ok_or_500((|| {
                 let run: u64 = id.parse().map_err(|_| anyhow::anyhow!("bad run id `{id}`"))?;
@@ -196,26 +273,47 @@ impl Handler for EdgeFaasGateway {
                 if !self.async_runs.lock().unwrap().contains(&run) {
                     return Ok(Response::not_found());
                 }
+                // QoS snapshot before take_run consumes the record.
+                let qos_info = self.faas.run_qos(run);
                 let status = self.faas.take_run(run);
                 if !matches!(&status, Some(RunStatus::Running)) {
                     self.async_runs.lock().unwrap().remove(&run);
                 }
+                let qos_for = |o: &mut Json, state: &str| {
+                    if let Some((qos, remaining)) = qos_info {
+                        let state = if qos.deadline_s.is_none() && state != "missed" {
+                            "none"
+                        } else {
+                            state
+                        };
+                        o.set("qos", Self::qos_json(qos, remaining, state));
+                    }
+                };
                 match status {
                     None => Ok(Response::not_found()),
                     Some(RunStatus::Running) => {
                         let mut o = Json::obj();
                         o.set("status", "running".into());
+                        qos_for(&mut o, "pending");
                         Ok(Response::json(200, &o))
                     }
                     Some(RunStatus::Failed(msg)) => {
                         let mut o = Json::obj();
                         o.set("status", "failed".into()).set("error", msg.as_str().into());
+                        qos_for(&mut o, "met");
+                        Ok(Response::json(200, &o))
+                    }
+                    Some(RunStatus::DeadlineExceeded) => {
+                        let mut o = Json::obj();
+                        o.set("status", "deadline_exceeded".into());
+                        qos_for(&mut o, "missed");
                         Ok(Response::json(200, &o))
                     }
                     Some(RunStatus::Done(result)) => {
                         let mut o = Json::obj();
                         o.set("status", "done".into())
                             .set("result", Self::workflow_result_json(&result));
+                        qos_for(&mut o, "met");
                         Ok(Response::json(200, &o))
                     }
                 }
@@ -354,23 +452,45 @@ dag:
             .deploy_function("asyncdemo", "f", &FunctionPackage { code: "img/slow-echo".into() })
             .unwrap();
 
-        let resp =
-            http::request(&addr, "POST", "/apps/asyncdemo/run?async=true", &[], &[]).unwrap();
+        // A malformed priority is refused outright.
+        let resp = http::request(
+            &addr,
+            "POST",
+            "/apps/asyncdemo/run?async=true&priority=urgent",
+            &[],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(resp.status, 400, "{}", resp.body_str().unwrap_or(""));
+
+        let resp = http::request(
+            &addr,
+            "POST",
+            "/apps/asyncdemo/run?async=true&priority=realtime&deadline_s=30",
+            &[],
+            &[],
+        )
+        .unwrap();
         assert_eq!(resp.status, 202, "{}", resp.body_str().unwrap_or(""));
         let run = resp.json_body().unwrap().get("run").unwrap().as_u64().unwrap();
 
         // Poll until done; the finished record is consumed (next GET: 404).
-        let mut status = String::new();
+        let mut last = Json::obj();
         for _ in 0..200 {
             let resp = http::get(&addr, &format!("/runs/{run}")).unwrap();
             assert_eq!(resp.status, 200);
-            status = resp.json_body().unwrap().req_str("status").unwrap().to_string();
-            if status != "running" {
+            last = resp.json_body().unwrap();
+            if last.req_str("status").unwrap() != "running" {
                 break;
             }
             std::thread::sleep(std::time::Duration::from_millis(5));
         }
-        assert_eq!(status, "done");
+        assert_eq!(last.req_str("status").unwrap(), "done");
+        // The run's QoS class + deadline state ride along with the status.
+        let qos = last.get("qos").expect("qos object reported");
+        assert_eq!(qos.req_str("priority").unwrap(), "realtime");
+        assert_eq!(qos.req_str("deadline_state").unwrap(), "met");
+        assert_eq!(qos.get("deadline_s").unwrap().as_f64().unwrap(), 30.0);
         assert_eq!(http::get(&addr, &format!("/runs/{run}")).unwrap().status, 404);
     }
 

@@ -28,6 +28,7 @@ use std::sync::Arc;
 
 use crate::util::json::Json;
 
+use super::engine::QoS;
 use super::resource::{EdgeFaaS, ResourceId};
 
 /// Result of one function instance within a workflow run.
@@ -78,14 +79,33 @@ impl EdgeFaaS {
     /// Front-end over the engine: equivalent to
     /// [`submit_workflow`](Self::submit_workflow) +
     /// [`wait_workflow`](Self::wait_workflow), and therefore safe to call
-    /// from many threads at once — the runs interleave.
+    /// from many threads at once — the runs interleave. Submits under the
+    /// default [`QoS`] (`Interactive`, no deadline); see
+    /// [`run_workflow_qos`](Self::run_workflow_qos).
     pub fn run_workflow(
         self: &Arc<Self>,
         app: &str,
         entry_inputs: &HashMap<String, Vec<String>>,
     ) -> anyhow::Result<WorkflowResult> {
-        let run = self.submit_workflow(app, entry_inputs)?;
-        self.wait_workflow(run, f64::INFINITY)
+        self.run_workflow_qos(app, entry_inputs, QoS::default())
+    }
+
+    /// [`run_workflow`](Self::run_workflow) under an explicit [`QoS`]: the
+    /// class and deadline govern the run's position in the engine's
+    /// priority queue, its backpressure treatment, and deadline
+    /// enforcement (see [`super::engine`]'s module docs). The typed errors
+    /// — [`super::engine::EngineError`] on admission,
+    /// [`super::engine::WaitError`] on completion — flatten into the
+    /// returned `anyhow::Error`; callers that need to branch on them
+    /// should use `submit_workflow_qos` + `wait_workflow` directly.
+    pub fn run_workflow_qos(
+        self: &Arc<Self>,
+        app: &str,
+        entry_inputs: &HashMap<String, Vec<String>>,
+        qos: QoS,
+    ) -> anyhow::Result<WorkflowResult> {
+        let run = self.submit_workflow_qos(app, entry_inputs, qos)?;
+        Ok(self.wait_workflow(run, f64::INFINITY)?)
     }
 
     /// Compute each instance's input URLs: entry inputs are split by the

@@ -24,11 +24,14 @@
 //!
 //! Every invocation path — synchronous workflow runs, asynchronous function
 //! calls, and the REST gateway's `run`/`runs` endpoints — submits through
-//! the single [`engine`] core, which owns the run queue of in-flight
-//! workflows, fires DAG nodes as dependency-completion events, and enforces
-//! per-resource admission limits. The engine is clock-generic: the same
-//! dispatch code runs under wall-clock time (examples, gateways) and simnet
-//! virtual time (figure benches).
+//! the single [`engine`] core, which owns the QoS-ordered run queue of
+//! in-flight workflows (priority class, earliest-deadline-first, aging;
+//! see [`engine`]'s module docs), fires DAG nodes as dependency-completion
+//! events, enforces per-resource admission limits, and applies
+//! backpressure — shedding `Batch`-class work first — once its queue
+//! bounds are reached. The engine is clock-generic: the same dispatch code
+//! runs under wall-clock time (examples, gateways) and simnet virtual time
+//! (figure benches).
 //!
 //! The coordinator sees resources only through the [`handle::ResourceHandle`]
 //! trait, so the same scheduling/placement code runs against in-process
@@ -49,7 +52,7 @@ pub mod storage;
 
 pub use asyncinvoke::{AsyncStatus, AsyncTracker, InvocationId};
 pub use appconfig::{Affinity, AffinityType, AppConfig, FunctionConfig, Reduce, Requirements};
-pub use engine::{EngineEvent, RunId, RunStatus};
+pub use engine::{EngineError, EngineEvent, Priority, QoS, RunId, RunStatus, WaitError};
 pub use handle::{LocalHandle, ResourceHandle};
 pub use invoker::{InstanceResult, WorkflowResult};
 pub use resource::{EdgeFaaS, ResourceId};

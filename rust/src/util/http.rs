@@ -117,6 +117,7 @@ impl Response {
             403 => "Forbidden",
             404 => "Not Found",
             409 => "Conflict",
+            429 => "Too Many Requests",
             500 => "Internal Server Error",
             502 => "Bad Gateway",
             503 => "Service Unavailable",

@@ -23,7 +23,7 @@ use std::sync::Arc;
 
 use crate::cluster::NativeExecutor;
 use crate::coordinator::functions::FunctionPackage;
-use crate::coordinator::{EdgeFaaS, ResourceId};
+use crate::coordinator::{EdgeFaaS, Priority, QoS, ResourceId};
 use crate::runtime::{EngineService, Tensor};
 use crate::util::rng::Pcg32;
 
@@ -142,6 +142,14 @@ impl Default for FlConfig {
 
 /// The application name used by all FL objects.
 pub const APP: &str = "federatedlearning";
+
+/// The QoS class FL training rounds submit under: federated learning is
+/// throughput-oriented background work (a round taking longer costs
+/// nothing but wall time), so it rides the `Batch` class — yielding slots
+/// to latency-sensitive workflows and being shed first under backpressure.
+pub fn default_qos() -> QoS {
+    QoS::class(Priority::Batch)
+}
 
 /// Bucket holding each device's local shard: `shard-<rid>`.
 pub fn shard_bucket(rid: ResourceId) -> String {

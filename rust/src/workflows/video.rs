@@ -20,7 +20,7 @@ use std::sync::Arc;
 
 use crate::cluster::NativeExecutor;
 use crate::coordinator::functions::FunctionPackage;
-use crate::coordinator::{EdgeFaaS, ResourceId};
+use crate::coordinator::{EdgeFaaS, Priority, QoS, ResourceId};
 use crate::runtime::{EngineService, Tensor};
 use crate::util::rng::Pcg32;
 
@@ -37,6 +37,15 @@ pub const GALLERY: usize = 32;
 
 /// The application name used by all video objects.
 pub const APP: &str = "videopipeline";
+
+/// The QoS class video-analytics runs submit under: a live camera pipeline
+/// is latency-critical (a GoP analyzed late is a GoP analyzed never), so
+/// it rides the `Realtime` class and jumps queued `Interactive`/`Batch`
+/// work. No default deadline — attach one per deployment with
+/// [`QoS::with_deadline`] when frames may be dropped.
+pub fn default_qos() -> QoS {
+    QoS::class(Priority::Realtime)
+}
 
 /// The six pipeline stages, in DAG order.
 pub const STAGES: [&str; 6] = [
