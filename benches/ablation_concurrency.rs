@@ -26,16 +26,25 @@
 //!    p95 — the number a FIFO queue fails by an order of magnitude.
 //!    Written to `BENCH_qos.json` (override with `BENCH_QOS_OUT`).
 //!
-//! `ABLATION_SMOKE=1` runs a tiny-N smoke pass (CI): only the hot-path and
-//! mixed-QoS sections, no throughput assertions, but both JSON artifacts
-//! are still produced.
+//! 5. **Lock contention (shard sweep)**: the same zero-work bed at engine
+//!    shard counts {1, 4, 16} — 1 collapses the dispatch queues and run
+//!    table to the old single-lock layout, 16 gives every resource its
+//!    own queue and spreads runs over 16 run shards. Runs/sec at 64 and
+//!    256 concurrent runs plus per-run dispatch p50/p95 per shard count,
+//!    written to `BENCH_contention.json` (override with
+//!    `BENCH_CONTENTION_OUT`). Non-smoke asserts >= 1.5x runs/sec at 64
+//!    concurrent runs for shards=16 over the shards=1 baseline.
+//!
+//! `ABLATION_SMOKE=1` runs a tiny-N smoke pass (CI): only the hot-path,
+//! mixed-QoS and contention sections, no throughput assertions, but all
+//! three JSON artifacts are still produced.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
 use edgefaas::bench_harness::{measure, Stats, Table};
 use edgefaas::coordinator::functions::FunctionPackage;
-use edgefaas::coordinator::{Priority, QoS, RunId};
+use edgefaas::coordinator::{Priority, QoS, RunId, ENGINE_SHARDS};
 use edgefaas::simnet::{Clock, RealClock, VirtualClock};
 use edgefaas::testbed::{paper_testbed, TestBed};
 use edgefaas::util::bytes::Bytes;
@@ -89,7 +98,14 @@ fn bed_with_sleeping_chain(clock: Arc<dyn Clock>) -> TestBed {
 /// returns a refcount bump on one shared response buffer, so the measured
 /// wall time is the engine's dispatch overhead and nothing else.
 fn bed_with_hotpath_chain() -> TestBed {
+    bed_with_hotpath_chain_sharded(ENGINE_SHARDS)
+}
+
+/// Section 5: the same zero-work bed at an explicit engine shard count
+/// (1 = the single-lock baseline layout).
+fn bed_with_hotpath_chain_sharded(shards: usize) -> TestBed {
     let bed = paper_testbed(Arc::new(VirtualClock::new()));
+    bed.faas.set_engine_shards(shards);
     let response = Bytes::from(r#"{"outputs":[]}"#);
     for stage in ["gen", "sum"] {
         let response = response.clone();
@@ -338,6 +354,94 @@ fn main() {
     std::fs::write(&qos_path, qdoc.to_string()).expect("write qos bench json");
     println!("wrote {qos_path}");
 
+    // ---- Section 5: lock contention — engine shard sweep. ----
+    let shard_counts = [1usize, 4, 16];
+    let levels_c: Vec<usize> = if smoke { vec![8] } else { vec![64, 256] };
+    let reps_c = if smoke { 1 } else { 3 };
+    let mut tc = Table::new(
+        "Contention: engine shard sweep on the zero-work hot path (virtual clock)",
+        &["shards", "concurrency", "runs/s", "dispatch p50", "dispatch p95"],
+    );
+    let mut shard_rows: Vec<(usize, Vec<(usize, f64)>, Stats)> = Vec::new();
+    for &s in &shard_counts {
+        let bed = bed_with_hotpath_chain_sharded(s);
+        let _ = run_batch(&bed, 1); // warm sandboxes
+        let overhead = measure(if smoke { 2 } else { 10 }, if smoke { 10 } else { 100 }, || {
+            let _ = run_batch(&bed, 1);
+        });
+        let mut rows = Vec::new();
+        for &n in &levels_c {
+            let mut best_wall = f64::INFINITY;
+            for _ in 0..reps_c.max(1) {
+                let (wall, _) = run_batch(&bed, n);
+                best_wall = best_wall.min(wall);
+            }
+            rows.push((n, n as f64 / best_wall));
+        }
+        for (n, rate) in &rows {
+            tc.row(&[
+                s.to_string(),
+                n.to_string(),
+                format!("{rate:.0}"),
+                Stats::fmt(overhead.p50),
+                Stats::fmt(overhead.p95),
+            ]);
+        }
+        shard_rows.push((s, rows, overhead));
+    }
+    tc.print();
+    let rate_at = |shards: usize, n: usize| -> f64 {
+        shard_rows
+            .iter()
+            .find(|(s, _, _)| *s == shards)
+            .and_then(|(_, rows, _)| rows.iter().find(|(c, _)| *c == n).map(|(_, r)| *r))
+            .unwrap_or(f64::NAN)
+    };
+    let contention_level = *levels_c.first().unwrap();
+    let shard_speedup = rate_at(16, contention_level) / rate_at(1, contention_level);
+    println!(
+        "\n-> shards=16 vs shards=1 (single-lock layout) at {contention_level} concurrent \
+         runs: {shard_speedup:.2}x"
+    );
+    let mut cdoc = Json::obj();
+    let mut sweep = Vec::new();
+    for (s, rows, overhead) in &shard_rows {
+        let mut o = Json::obj();
+        let mut oh = Json::obj();
+        oh.set("p50", overhead.p50.into()).set("p95", overhead.p95.into());
+        o.set("shards", (*s as u64).into())
+            .set(
+                "series",
+                Json::Arr(
+                    rows.iter()
+                        .map(|&(n, rate)| {
+                            let mut r = Json::obj();
+                            r.set("concurrency", (n as u64).into())
+                                .set("runs_per_s", rate.into());
+                            r
+                        })
+                        .collect(),
+                ),
+            )
+            .set("dispatch_overhead_s", oh);
+        sweep.push(o);
+    }
+    cdoc.set("bench", "contention".into())
+        .set("clock", "virtual".into())
+        .set("smoke", smoke.into())
+        .set("levels", Json::Arr(levels_c.iter().map(|&n| Json::Num(n as f64)).collect()))
+        .set(
+            "shard_counts",
+            Json::Arr(shard_counts.iter().map(|&n| Json::Num(n as f64)).collect()),
+        )
+        .set("sweep", Json::Arr(sweep))
+        .set("speedup_level", (contention_level as u64).into())
+        .set("speedup_sharded_vs_single_lock", shard_speedup.into());
+    let contention_path = std::env::var("BENCH_CONTENTION_OUT")
+        .unwrap_or_else(|_| "BENCH_contention.json".to_string());
+    std::fs::write(&contention_path, cdoc.to_string()).expect("write contention bench json");
+    println!("wrote {contention_path}");
+
     if !smoke {
         assert!(
             speedup >= 1.5,
@@ -353,6 +457,13 @@ fn main() {
              p95 {} loaded vs {} unloaded ({ratio:.2}x > 2x)",
             Stats::fmt(loaded.p95),
             Stats::fmt(unloaded.p95)
+        );
+        assert!(
+            shard_speedup >= 1.5,
+            "sharding must relieve the dispatch/run-table locks at {contention_level} \
+             concurrent runs: shards=1 {:.0}/s shards=16 {:.0}/s ({shard_speedup:.2}x < 1.5x)",
+            rate_at(1, contention_level),
+            rate_at(16, contention_level),
         );
     }
 }

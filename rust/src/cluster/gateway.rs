@@ -11,18 +11,28 @@
 //! GET    /system/function/{name}    describe
 //! POST   /function/{name}           invoke (sync; body = payload)
 //! POST   /function/_batch           invoke many in one round trip:
-//!                                   {calls:[{name, payload}, ...]} ->
-//!                                   {results:[{ok, output, latency}|{ok, error}]}
+//!                                   binary frames (preferred) or JSON
 //! GET    /healthz
 //! ```
 //!
 //! The `_batch` verb is the wire half of the engine's per-resource
 //! invocation batching: one HTTP round trip carries a whole batch, with
 //! per-entry results (a failing or panicking entry does not fail its
-//! siblings). Payloads/outputs on this path are JSON-embedded text — which
-//! the engine's envelopes and `{"outputs": [...]}` responses always are;
-//! binary payloads fall back to per-call `POST /function/{name}`. A
-//! function literally named `_batch` is shadowed by this verb.
+//! siblings). A function literally named `_batch` is shadowed by this
+//! verb. Two wire formats, negotiated by `Content-Type`:
+//!
+//! * **Binary frames** ([`BATCH_BINARY_CONTENT_TYPE`]) — the streaming
+//!   format: a `EFB1` magic, a little-endian `u32` call count, then one
+//!   length-prefixed `(name, payload)` frame per call; the response
+//!   mirrors it with one `(ok, latency, output | error)` frame per entry.
+//!   Payloads and outputs are raw bytes, so binary data travels at 1x
+//!   (the JSON format hex-encodes it at 2x) and needs no UTF-8 guard.
+//! * **JSON** (anything else) — `{calls:[{name, payload}, ...]}` ->
+//!   `{results:[{ok, output|output_hex, latency}|{ok, error}]}`, kept for
+//!   old peers; text payloads ride as-is, binary outputs are hex-encoded
+//!   so the path stays lossless. The coordinator's client tries the
+//!   binary format first and falls back to JSON — and then to per-call
+//!   `POST /function/{name}` — only on a pre-execution refusal.
 //!
 //! Administrative verbs require the resource `pwd` in the `Authorization`
 //! header, mirroring the paper's "pwd is the password to authenticate the
@@ -124,10 +134,30 @@ impl FaasGateway {
         }
     }
 
-    /// The batch verb: parse `{calls: [{name, payload}, ...]}`, execute the
-    /// whole batch through [`FaasBackend::invoke_batch`] (per-entry failure
-    /// containment), and answer with one result per entry.
+    /// The batch verb: decode the calls (binary frames or JSON, by
+    /// `Content-Type`), execute the whole batch through
+    /// [`FaasBackend::invoke_batch`] (per-entry failure containment), and
+    /// answer with one result per entry in the request's format.
     fn invoke_batch(&self, req: &Request) -> Response {
+        if req.headers.get("content-type").map(String::as_str) == Some(BATCH_BINARY_CONTENT_TYPE)
+        {
+            // Decode errors are pre-execution refusals (400), so a client
+            // may safely retry through another format or per-call invokes.
+            let calls = match decode_binary_calls(&req.body) {
+                Ok(calls) => calls,
+                Err(e) => return Response::bad_request(format!("bad binary batch: {e}")),
+            };
+            let results = self.backend.invoke_batch(&calls);
+            let mut resp = Response::bytes(200, encode_binary_results(&results));
+            resp.headers.insert("Content-Type".into(), BATCH_BINARY_CONTENT_TYPE.into());
+            return resp;
+        }
+        self.invoke_batch_json(req)
+    }
+
+    /// The JSON leg of the batch verb (old peers): parse
+    /// `{calls: [{name, payload}, ...]}` and answer JSON results.
+    fn invoke_batch_json(&self, req: &Request) -> Response {
         let body = match req.json() {
             Ok(v) => v,
             Err(e) => return Response::bad_request(format!("bad json: {e}")),
@@ -216,6 +246,143 @@ fn hex_decode(s: &str) -> anyhow::Result<Vec<u8>> {
                 .map_err(|_| anyhow::anyhow!("bad hex byte `{}`", &s[i..i + 2]))
         })
         .collect()
+}
+
+/// `Content-Type` of the length-prefixed binary `_batch` wire format.
+pub const BATCH_BINARY_CONTENT_TYPE: &str = "application/x-edgefaas-batch";
+
+/// Magic prefix of every binary batch request/response body.
+const BATCH_MAGIC: &[u8; 4] = b"EFB1";
+
+/// Bounds-checked little-endian reader over a binary batch body.
+struct FrameReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FrameReader<'a> {
+    fn new(buf: &'a [u8]) -> anyhow::Result<FrameReader<'a>> {
+        anyhow::ensure!(buf.len() >= 8 && &buf[..4] == BATCH_MAGIC, "bad batch magic");
+        Ok(FrameReader { buf, pos: 4 })
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.buf.len() - self.pos >= n, "truncated batch frame");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+
+    /// A `u32` length followed by that many bytes. The length is checked
+    /// against the remaining buffer before any allocation, so a
+    /// misbehaving peer cannot make us reserve gigabytes.
+    fn blob(&mut self) -> anyhow::Result<&'a [u8]> {
+        let len = self.u32()? as usize;
+        self.take(len)
+    }
+
+    fn done(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.pos == self.buf.len(), "trailing bytes after batch frames");
+        Ok(())
+    }
+}
+
+fn push_blob(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+/// Encode `calls` as a binary batch request body.
+pub(crate) fn encode_binary_calls(calls: &[(String, Bytes)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        8 + calls.iter().map(|(n, p)| 8 + n.len() + p.len()).sum::<usize>(),
+    );
+    out.extend_from_slice(BATCH_MAGIC);
+    out.extend_from_slice(&(calls.len() as u32).to_le_bytes());
+    for (name, payload) in calls {
+        push_blob(&mut out, name.as_bytes());
+        push_blob(&mut out, payload);
+    }
+    out
+}
+
+/// Decode a binary batch request body into `(name, payload)` calls.
+fn decode_binary_calls(body: &[u8]) -> anyhow::Result<Vec<(String, Bytes)>> {
+    let mut r = FrameReader::new(body)?;
+    let count = r.u32()? as usize;
+    let mut calls = Vec::with_capacity(count.min(4096));
+    for _ in 0..count {
+        let name = std::str::from_utf8(r.blob()?)?.to_string();
+        let payload = Bytes::copy_from(r.blob()?);
+        calls.push((name, payload));
+    }
+    r.done()?;
+    Ok(calls)
+}
+
+/// Encode per-entry results as a binary batch response body: one
+/// `ok(u8) + (latency f64 + output blob | error blob)` frame per entry.
+fn encode_binary_results(results: &[anyhow::Result<(Bytes, f64)>]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + results.len() * 16);
+    out.extend_from_slice(BATCH_MAGIC);
+    out.extend_from_slice(&(results.len() as u32).to_le_bytes());
+    for result in results {
+        match result {
+            Ok((bytes, latency)) => {
+                out.push(1);
+                out.extend_from_slice(&latency.to_le_bytes());
+                push_blob(&mut out, bytes);
+            }
+            Err(e) => {
+                out.push(0);
+                push_blob(&mut out, e.to_string().as_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Decode a binary batch response body into per-entry results.
+pub(crate) fn decode_binary_results(
+    body: &[u8],
+    expected: usize,
+) -> anyhow::Result<Vec<anyhow::Result<(Bytes, f64)>>> {
+    let mut r = FrameReader::new(body)?;
+    let count = r.u32()? as usize;
+    anyhow::ensure!(count == expected, "batch response arity {count} != {expected} calls");
+    let mut results = Vec::with_capacity(count);
+    for _ in 0..count {
+        match r.u8()? {
+            1 => {
+                let latency = r.f64()?;
+                let out = Bytes::copy_from(r.blob()?);
+                results.push(Ok((out, latency)));
+            }
+            0 => {
+                let msg = String::from_utf8_lossy(r.blob()?).to_string();
+                results.push(Err(anyhow::anyhow!(msg)));
+            }
+            other => anyhow::bail!("bad batch result tag {other}"),
+        }
+    }
+    r.done()?;
+    Ok(results)
 }
 
 fn parse_function_spec(v: &Json) -> anyhow::Result<FunctionSpec> {
@@ -318,25 +485,65 @@ pub mod client {
         Ok((resp.body, latency))
     }
 
-    /// Invoke a batch of functions in one round trip via `_batch`.
-    ///
-    /// `Ok(Some(results))` carries one result per call. `Ok(None)` means
-    /// the gateway *refused before executing anything* (404/400 — e.g. an
-    /// older gateway without the verb), so the caller may safely fall back
-    /// to per-call invokes. Any other failure (transport error, non-OK
-    /// status, malformed or short response) returns `Err`: the gateway may
-    /// already have executed the batch, so retrying would double-execute.
-    /// Fails whole when a payload is not UTF-8 (the JSON wire format
-    /// carries payloads as text — the engine's envelopes always are).
-    #[allow(clippy::type_complexity)]
-    pub fn invoke_batch(
+    /// Outcome of one wire leg of the `_batch` protocol.
+    pub enum BatchAttempt {
+        /// The gateway executed the batch: one result per call.
+        Ran(Vec<anyhow::Result<(crate::util::bytes::Bytes, f64)>>),
+        /// Refused before executing anything (no `_batch` verb, a peer
+        /// without this leg's codec, or a pre-wire payload check) —
+        /// another leg may be tried safely.
+        Refused,
+    }
+
+    /// The binary-frame leg of `_batch`
+    /// ([`super::BATCH_BINARY_CONTENT_TYPE`]): raw payloads and outputs,
+    /// no hex doubling, no UTF-8 requirement. `Refused` on 404 (no verb)
+    /// or 400/415 (a JSON-only peer that cannot parse the frames — its
+    /// parse-time rejection happens before any execution). Any other
+    /// failure is `Err`: the gateway may already have executed the batch,
+    /// so retrying — on any leg — would double-execute.
+    pub fn invoke_batch_binary(
         addr: &str,
         calls: &[(String, crate::util::bytes::Bytes)],
-    ) -> anyhow::Result<Option<Vec<anyhow::Result<(crate::util::bytes::Bytes, f64)>>>> {
+    ) -> anyhow::Result<BatchAttempt> {
+        let resp = http::request(
+            addr,
+            "POST",
+            "/function/_batch",
+            &[("Content-Type", super::BATCH_BINARY_CONTENT_TYPE)],
+            &super::encode_binary_calls(calls),
+        )?;
+        if resp.ok() {
+            return Ok(BatchAttempt::Ran(super::decode_binary_results(
+                &resp.body,
+                calls.len(),
+            )?));
+        }
+        if matches!(resp.status, 400 | 404 | 415) {
+            return Ok(BatchAttempt::Refused);
+        }
+        anyhow::bail!(
+            "batch invoke on {addr}: {} {}",
+            resp.status,
+            resp.body_str().unwrap_or("")
+        )
+    }
+
+    /// The JSON leg of `_batch` (old peers): payloads ride as JSON text,
+    /// binary *outputs* come back hex-encoded. `Refused` pre-wire when a
+    /// payload is not UTF-8, or on a pre-execution 404/400 from the
+    /// gateway; `Err` follows the same may-have-executed rule as the
+    /// binary leg.
+    pub fn invoke_batch_json(
+        addr: &str,
+        calls: &[(String, crate::util::bytes::Bytes)],
+    ) -> anyhow::Result<BatchAttempt> {
+        if !calls.iter().all(|(_, p)| std::str::from_utf8(p).is_ok()) {
+            return Ok(BatchAttempt::Refused);
+        }
         let mut entries = Vec::with_capacity(calls.len());
         for (name, payload) in calls {
-            let text = std::str::from_utf8(payload)
-                .map_err(|_| anyhow::anyhow!("batch wire path requires UTF-8 payloads"))?;
+            let text = std::str::from_utf8(payload).expect("checked above");
             let mut o = Json::obj();
             o.set("name", name.as_str().into()).set("payload", text.into());
             entries.push(o);
@@ -353,7 +560,7 @@ pub mod client {
         if resp.status == 404 || resp.status == 400 {
             // Refused before execution: the verb is unknown to this
             // gateway (or the request was rejected at parse time).
-            return Ok(None);
+            return Ok(BatchAttempt::Refused);
         }
         if !resp.ok() {
             anyhow::bail!(
@@ -392,7 +599,30 @@ pub mod client {
                 }
             })
             .collect();
-        Ok(Some(decoded))
+        Ok(BatchAttempt::Ran(decoded))
+    }
+
+    /// Invoke a batch of functions in one round trip via `_batch`: the
+    /// binary frame leg first, the JSON leg on a pre-execution refusal.
+    /// `Ok(Some(results))` carries one result per call; `Ok(None)` means
+    /// both legs were refused before executing anything (fall back to
+    /// per-call invokes); `Err` means the gateway may already have
+    /// executed the batch — do not retry. Callers that talk to the same
+    /// gateway repeatedly should use the split legs and cache the peer's
+    /// format (see `HttpHandle::invoke_batch`) instead of re-probing
+    /// binary every time.
+    #[allow(clippy::type_complexity)]
+    pub fn invoke_batch(
+        addr: &str,
+        calls: &[(String, crate::util::bytes::Bytes)],
+    ) -> anyhow::Result<Option<Vec<anyhow::Result<(crate::util::bytes::Bytes, f64)>>>> {
+        if let BatchAttempt::Ran(results) = invoke_batch_binary(addr, calls)? {
+            return Ok(Some(results));
+        }
+        match invoke_batch_json(addr, calls)? {
+            BatchAttempt::Ran(results) => Ok(Some(results)),
+            BatchAttempt::Refused => Ok(None),
+        }
     }
 
     /// List deployed functions.
@@ -492,7 +722,7 @@ mod tests {
         assert_eq!(
             results[0].as_ref().unwrap().0,
             &[0xff, 0x00, 0xfe, b'x'][..],
-            "binary output survives the hex leg of the batch wire format"
+            "binary output survives the batch wire format"
         );
         assert_eq!(hex_decode(&hex_encode(&[0xde, 0xad, 0x01])).unwrap(), vec![0xde, 0xad, 0x01]);
         assert!(hex_decode("zz").is_err(), "non-hex characters rejected");
@@ -522,5 +752,106 @@ mod tests {
         .unwrap();
         let desc = client::describe(&addr, "f").unwrap();
         assert_eq!(desc.get("labels").unwrap().get("app").unwrap().as_str(), Some("videopipeline"));
+    }
+
+    fn backend_with(images: &[(&str, fn(&[u8]) -> anyhow::Result<Vec<u8>>)]) -> Arc<FaasBackend> {
+        let exec = Arc::new(NativeExecutor::new());
+        for (image, f) in images {
+            exec.register(image, *f);
+        }
+        let spec = ResourceSpec::paper_edge("unused");
+        Arc::new(FaasBackend::new(
+            spec,
+            exec as Arc<dyn super::super::faas::Executor>,
+            Arc::new(RealClock::new()),
+        ))
+    }
+
+    #[test]
+    fn binary_batch_carries_binary_payloads_and_outputs_raw() {
+        let backend =
+            backend_with(&[("img/rev", |p: &[u8]| Ok(p.iter().rev().copied().collect()))]);
+        let server = FaasGateway::serve(Arc::clone(&backend), 2).unwrap();
+        let addr = server.addr();
+        client::deploy(&addr, "edgepwd", "rev", "img/rev", 1 << 20, 0, &[]).unwrap();
+        // A non-UTF-8 payload: only the binary frame format can carry it
+        // in one round trip (the JSON leg would refuse pre-wire).
+        let calls = vec![
+            ("rev".to_string(), Bytes::copy_from(&[0xff, 0x00, 0x01])),
+            ("ghost".to_string(), Bytes::from("x")),
+        ];
+        let results = client::invoke_batch(&addr, &calls).unwrap().expect("binary leg");
+        assert_eq!(results[0].as_ref().unwrap().0, &[0x01, 0x00, 0xff][..]);
+        assert!(results[1].is_err(), "unknown function fails its entry only");
+        assert_eq!(backend.describe("rev").unwrap().invocations, 1);
+    }
+
+    #[test]
+    fn binary_codec_roundtrips_and_rejects_garbage() {
+        let calls = vec![("f".to_string(), Bytes::copy_from(&[0u8, 159, 146, 150]))];
+        let encoded = encode_binary_calls(&calls);
+        // Wire cost: 8 header bytes plus 8 framing bytes per call — the 4
+        // payload bytes travel raw, with no hex doubling.
+        assert_eq!(encoded.len(), 8 + (4 + 1) + (4 + 4));
+        let results =
+            vec![Ok((Bytes::copy_from(&[0xde, 0xad]), 0.25)), Err(anyhow::anyhow!("boom"))];
+        let body = encode_binary_results(&results);
+        let decoded = decode_binary_results(&body, 2).unwrap();
+        assert_eq!(decoded[0].as_ref().unwrap().0, &[0xde, 0xad][..]);
+        assert_eq!(decoded[0].as_ref().unwrap().1, 0.25);
+        assert!(decoded[1].as_ref().unwrap_err().to_string().contains("boom"));
+        assert!(decode_binary_results(&body, 3).is_err(), "arity checked");
+        assert!(decode_binary_results(b"EFB1", 0).is_err(), "truncated header");
+        assert!(decode_binary_results(b"NOPE\x00\x00\x00\x00", 0).is_err(), "bad magic");
+        // A frame claiming more bytes than the body holds must not panic
+        // (or allocate) — it errors.
+        let mut bad = Vec::from(&b"EFB1"[..]);
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.push(1);
+        bad.extend_from_slice(&0.0f64.to_le_bytes());
+        bad.extend_from_slice(&999u32.to_le_bytes());
+        assert!(decode_binary_results(&bad, 1).is_err(), "truncated blob");
+    }
+
+    /// A stand-in for an old, JSON-only gateway: refuses the binary batch
+    /// content type the way a peer without the codec would (a parse-time
+    /// 400, before any execution), forwards everything else.
+    struct JsonOnlyPeer(FaasGateway);
+
+    impl Handler for JsonOnlyPeer {
+        fn handle(&self, req: Request) -> Response {
+            if req.headers.get("content-type").map(String::as_str)
+                == Some(BATCH_BINARY_CONTENT_TYPE)
+            {
+                return Response::bad_request("bad json: unexpected byte".to_string());
+            }
+            self.0.handle(req)
+        }
+    }
+
+    #[test]
+    fn json_only_peer_gets_the_json_fallback() {
+        let backend = backend_with(&[
+            ("img/echo", |p: &[u8]| Ok(p.to_vec())),
+            ("img/bin", |_: &[u8]| Ok(vec![0xff, 0x00])),
+        ]);
+        let gw = JsonOnlyPeer(FaasGateway::new(Arc::clone(&backend)));
+        let server = Server::bind(0, 2, Arc::new(gw) as Arc<dyn Handler>).unwrap();
+        let addr = server.addr();
+        client::deploy(&addr, "edgepwd", "echo", "img/echo", 1 << 20, 0, &[]).unwrap();
+        client::deploy(&addr, "edgepwd", "bin", "img/bin", 1 << 20, 0, &[]).unwrap();
+        // Text payloads ride the JSON leg after the binary refusal; a
+        // binary *output* still survives it via the hex encoding.
+        let calls =
+            vec![("echo".to_string(), Bytes::from("hi")), ("bin".to_string(), Bytes::from("{}"))];
+        let results = client::invoke_batch(&addr, &calls).unwrap().expect("json leg");
+        assert_eq!(results[0].as_ref().unwrap().0, &b"hi"[..]);
+        assert_eq!(results[1].as_ref().unwrap().0, &[0xff, 0x00][..]);
+        assert_eq!(backend.describe("echo").unwrap().invocations, 1, "executed exactly once");
+        // A binary *payload* cannot ride the JSON leg: the client reports
+        // "fall back to per-call invokes" without executing anything.
+        let calls = vec![("echo".to_string(), Bytes::copy_from(&[0xff]))];
+        assert!(client::invoke_batch(&addr, &calls).unwrap().is_none());
+        assert_eq!(backend.describe("echo").unwrap().invocations, 1);
     }
 }

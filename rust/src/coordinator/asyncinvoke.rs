@@ -9,6 +9,10 @@
 //! tracker, the OpenFaaS async-function pattern. Because the job runs on
 //! the same pool as workflow instances, async invocations are subject to
 //! the same worker cap and interleave fairly with in-flight workflow runs.
+//! Jobs ride the engine's sharded dispatch queues like instances do
+//! (spread across shards by submission sequence), so a burst of async
+//! invocations does not serialize against workflow dispatch on any global
+//! lock.
 //!
 //! §3.1.2 + the NanoLambda comparison (§6: NanoLambda "does not follow the
 //! dynamic changes of system loads ... to reschedule functions" — implying

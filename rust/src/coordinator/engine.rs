@@ -3,7 +3,7 @@
 //!
 //! The paper positions EdgeFaaS "in the critical-path, acting like a
 //! router" for every invocation (§3.2.1). This module is that router's
-//! execution core: a run queue of in-flight workflow runs whose DAG nodes
+//! execution core: a run table of in-flight workflow runs whose DAG nodes
 //! fire as dependency-completion events, executed by a shared worker pool
 //! under per-resource admission limits. Both invocation front-ends sit on
 //! top of it:
@@ -21,17 +21,55 @@
 //! paper workflows) fire in the same order under either clock; independent
 //! parallel branches may interleave by completion timing.
 //!
-//! Scheduling decisions interleave across runs: N submitted workflows share
-//! the worker pool and the per-resource slots, so a long run does not
-//! head-of-line-block a short one. Every node/run completion is also
-//! published to [`EdgeFaaS::on_engine_event`] subscribers, which is the hook
-//! `reschedule_function` reacts through mid-run.
+//! # Sharding & wakeups
+//!
+//! Earlier revisions serialized every dispatch and completion through two
+//! global mutexes (one ready queue, one run table) and broadcast every
+//! state change over two global condvars — at 64+ concurrent runs the
+//! locks, not the backends, were the bottleneck. The engine's mutable
+//! state is now sharded so the hot path touches only per-shard locks:
+//!
+//! * **Per-resource dispatch queues.** Queued work lives in
+//!   [`ENGINE_SHARDS`] dispatch shards, each its own mutex + condvar; an
+//!   instance is routed to the shard of its placement's resource
+//!   (`resource % active_shards`), so with the shard count at or above the
+//!   resource count every resource has a private queue, and with
+//!   [`EdgeFaaS::set_engine_shards`]`(1)` the engine collapses to the old
+//!   single-lock behaviour (the bench baseline). Within a shard the QoS
+//!   order is exactly the global rule below; across shards, workers pick
+//!   shards best-class-first through the coordination set.
+//!
+//! * **Sharded run table.** Run bookkeeping lives in [`ENGINE_SHARDS`] hash
+//!   shards keyed by run id, each with its own `done_cv`, so
+//!   [`EdgeFaaS::wait_workflow`] callers and batched completion passes
+//!   never contend — or thundering-herd — across unrelated runs: a run's
+//!   completion notifies only the waiters parked on its own shard.
+//!
+//! * **Targeted wakeups via a small coordination struct.** When a shard
+//!   gains dispatchable work it is *flagged* once — `(best class, flag
+//!   seq, shard)` in a tiny ordered set guarded by a lock that protects a
+//!   few integers, never task payloads — and exactly one worker is woken
+//!   (or lazily spawned) per flag. An admission-slot release re-flags only
+//!   the affected shard; nothing notifies every worker any more.
+//!
+//! * **Global invariants via atomics.** The pending-run count, the queued
+//!   task/backlog counters behind backpressure, the Batch aging guard and
+//!   the dispatch statistics are plain atomics, so submissions and
+//!   completions consult them without any shared lock. The bounds are
+//!   exact under sequential submission (what every test drives);
+//!   concurrent submitters may transiently overshoot the per-resource
+//!   queue bound by the number of racing threads.
+//!
+//! `set_engine_shards` must be called on an idle engine (no queued work,
+//! no pending runs): shard routing of in-flight state is not rehashed.
+//! Determinism is preserved across shard counts: a run's firing order and
+//! outputs depend only on dependency completion and routing, which the
+//! shard layout does not alter (verified by `rust/tests/shard_determinism.rs`
+//! across shard counts {1, 4, 16} × both clocks × batching on/off).
 //!
 //! # Hot path & batching
 //!
-//! The paper puts EdgeFaaS "in the critical-path, acting like a router"
-//! for every invocation, so per-invocation overhead bounds system
-//! throughput. Two optimizations keep that overhead flat:
+//! Two further optimizations keep per-invocation overhead flat:
 //!
 //! * **Zero-copy envelopes.** A node's invocation envelope is assembled at
 //!   fire time, once per instance, into a shared [`Bytes`] buffer: the
@@ -47,18 +85,30 @@
 //!   always, ready-queue ones only while the resource is saturated
 //!   (draining below the admission limit would trade away parallelism an
 //!   idle worker could provide) — up to [`DEFAULT_MAX_BATCH`] — and
-//!   executes them as one batch: a single
-//!   admission-slot acquisition, one backend `Batch` round trip
+//!   executes them as one batch: a single admission-slot acquisition, one
+//!   backend `Batch` round trip
 //!   ([`super::handle::ResourceHandle::invoke_batch`]; per-task fallback for
 //!   backends without the verb), and one amortized completion pass that
-//!   takes the run-table lock twice per *batch* instead of twice per task.
-//!   A batch executes sequentially on one worker, so the per-resource
-//!   concurrency bound is unchanged, and results fan back out to their runs
-//!   in pop order — the exact order a lone worker would have produced —
-//!   preserving the determinism guarantee (identical firing orders/outputs
-//!   under `RealClock` and `VirtualClock`, batching on or off). Toggle with
-//!   [`EdgeFaaS::set_batching`] / [`EdgeFaaS::set_max_batch`]; measured by
-//!   `benches/ablation_concurrency.rs` (`BENCH_hotpath.json`).
+//!   takes each affected run shard's lock twice per *batch* instead of
+//!   twice per task. Because an instance's resource pins it to one shard,
+//!   the whole drain happens under the single shard lock the worker
+//!   already holds. A batch executes sequentially on one worker, so the
+//!   per-resource concurrency bound is unchanged, and results fan back out
+//!   to their runs in pop order — the exact order a lone worker would have
+//!   produced — preserving the determinism guarantee (identical firing
+//!   orders/outputs under `RealClock` and `VirtualClock`, batching on or
+//!   off). Toggle with [`EdgeFaaS::set_batching`] /
+//!   [`EdgeFaaS::set_max_batch`]; measured by
+//!   `benches/ablation_concurrency.rs` (`BENCH_hotpath.json`,
+//!   `BENCH_contention.json`).
+//!
+//! * **Adaptive dispatch window (off by default).** Under light load a
+//!   freshly-acquired slot usually dispatches a batch of one. With
+//!   [`EdgeFaaS::set_batch_window`] the slot holder parks on its shard's
+//!   condvar for up to the window, waking early as same-shard enqueues
+//!   arrive, then drains same-class same-resource ready work into the
+//!   batch even when the resource is below its admission limit — trading
+//!   bounded latency for fewer backend round trips.
 //!
 //! # QoS: ordering, deadlines, backpressure
 //!
@@ -68,19 +118,21 @@
 //! (`Realtime` > `Interactive` > `Batch`; default `Interactive`) and an
 //! optional relative deadline in seconds.
 //!
-//! **Ordering rule.** The ready queue is a priority queue ordered by the
-//! triple `(class, absolute deadline, submission sequence)`: strictly by
-//! class first, earliest-deadline-first within a class (no deadline sorts
-//! last), and FIFO submission order as the deterministic tie-break. Workers
-//! and admission-deferred instances follow the same order, so a `Realtime`
-//! instance always dispatches before queued `Interactive`/`Batch` work.
+//! **Ordering rule.** Each shard's ready queue is a priority queue ordered
+//! by the triple `(class, absolute deadline, submission sequence)`:
+//! strictly by class first, earliest-deadline-first within a class (no
+//! deadline sorts last), and a globally-assigned FIFO submission sequence
+//! as the deterministic tie-break. Workers take flagged shards
+//! best-class-first, so a `Realtime` instance dispatches before queued
+//! `Interactive`/`Batch` work whether or not they share a shard.
 //!
 //! **Starvation guard (aging).** Strict priority alone would starve `Batch`
 //! under sustained higher-class load, so the pop path ages the queue by
-//! dispatch count: after [`BATCH_AGE_LIMIT`] consecutive higher-class
-//! dispatches while `Batch` work waited, the oldest dispatchable `Batch`
-//! task runs next. Counting dispatches (not wall time) keeps the guard
-//! identical under `RealClock` and `VirtualClock`.
+//! dispatch count (a global atomic): after [`BATCH_AGE_LIMIT`] consecutive
+//! higher-class dispatches while `Batch` work waited anywhere, the oldest
+//! dispatchable `Batch` task — workers prefer `Batch`-flagged shards while
+//! the guard is tripped — runs next. Counting dispatches (not wall time)
+//! keeps the guard identical under `RealClock` and `VirtualClock`.
 //!
 //! **Class-pure batching.** Per-resource invocation batching only coalesces
 //! instances of the *same* class as the slot-holding instance: a `Batch`
@@ -107,9 +159,9 @@
 //! executing) to make room: under overload the coordinator degrades
 //! predictably, Batch first, instead of queueing without bound.
 
-use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::util::bytes::Bytes;
 use crate::util::json::Json;
@@ -326,6 +378,25 @@ pub enum EngineEvent {
     },
 }
 
+/// A point-in-time snapshot of engine-wide counters
+/// ([`EdgeFaaS::engine_stats`]; also served by the REST gateway's
+/// `GET /engine/stats`).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineStats {
+    /// Active shard count (dispatch queues and run-table shards).
+    pub shards: usize,
+    /// Runs admitted and not yet finished.
+    pub pending_runs: usize,
+    /// Instances currently queued (ready or admission-deferred).
+    pub queued_instances: usize,
+    /// Live worker threads / workers currently executing.
+    pub workers: usize,
+    pub busy_workers: usize,
+    /// Backend dispatches (a batch counts once) / instances dispatched.
+    pub batch_dispatches: u64,
+    pub instances_dispatched: u64,
+}
+
 /// One schedulable unit: a single placement instance of a DAG node, or an
 /// opaque job (the async-invoke front-end).
 enum Task {
@@ -377,7 +448,8 @@ struct InstanceTask {
 /// Priority-queue key: strict class first, earliest deadline within the
 /// class (`u64::MAX` = none, sorts last), then submission sequence for a
 /// deterministic FIFO tie-break. Derived `Ord` is lexicographic over the
-/// fields in this order.
+/// fields in this order. The sequence is assigned from one global atomic,
+/// so the tie-break is identical at every shard count.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 struct QKey {
     class: u8,
@@ -419,9 +491,11 @@ struct RunEntry {
     done: bool,
 }
 
-/// Queue + admission state, under a single lock so slot acquisition and
-/// release cannot deadlock against the pop path.
-struct QueueState {
+/// Queue + admission state of one dispatch shard, under one lock so slot
+/// acquisition and release cannot deadlock against the pop path. A
+/// resource's instances all hash to one shard, so this is the per-resource
+/// dispatch queue (shards may host several resources at low shard counts).
+struct DispatchState {
     /// The QoS-ordered ready queue (see [`QKey`] for the ordering rule).
     ready: BTreeMap<QKey, Task>,
     /// Instances that were popped but found their resource at its admission
@@ -430,68 +504,114 @@ struct QueueState {
     deferred: BTreeMap<QKey, InstanceTask>,
     /// Resource -> instances currently executing on it.
     in_use: HashMap<ResourceId, usize>,
-    /// Monotonic enqueue sequence — the deterministic FIFO tie-break.
-    next_seq: u64,
-    /// Consecutive higher-class dispatches while Batch work waited (the
-    /// aging counter; see [`BATCH_AGE_LIMIT`]).
-    since_batch: u64,
-    /// Live worker threads.
-    workers: usize,
-    /// Workers currently executing a task (the rest are polling or about to
-    /// exit). `workers - busy` is the free capacity `ensure_workers`
-    /// compares against the backlog, so a long-running task never blocks a
-    /// short run from getting a fresh worker.
-    busy: usize,
+    /// The `(class rank, flag seq)` under which this shard is currently
+    /// registered in the coordination set (None = unflagged). A flag means
+    /// "a worker has been woken/spawned for this shard and has not yet
+    /// arrived"; it is cleared by the arriving worker and re-raised
+    /// whenever dispatchable work remains or appears.
+    flag: Option<(u8, u64)>,
 }
 
-/// Queued (ready + admission-deferred) instances bound for one resource —
-/// the quantity the per-resource backpressure bound limits.
-fn queued_on(q: &QueueState, rid: ResourceId) -> usize {
-    let ready = q
-        .ready
-        .values()
-        .filter(|t| matches!(t, Task::Instance(ti) if ti.resource == rid))
-        .count();
-    ready + q.deferred.values().filter(|t| t.resource == rid).count()
+/// One dispatch shard: queue state + the shard's condvar. The condvar is
+/// the adaptive-window parking spot — a slot holder waiting for its batch
+/// to fill is woken by same-shard enqueues only.
+struct DispatchShard {
+    state: Mutex<DispatchState>,
+    cv: Condvar,
 }
 
-/// Table of workflow runs plus the retention queue of completed ones.
-struct RunTable {
+/// One run-table shard: run map + completion retention + its own `done_cv`
+/// so completion wakeups reach only waiters of runs hashed here.
+struct RunShard {
+    state: Mutex<RunShardState>,
+    done_cv: Condvar,
+}
+
+struct RunShardState {
     map: HashMap<RunId, RunEntry>,
-    /// Completed runs not yet consumed, oldest first. Bounded by
+    /// Completed runs not yet consumed, oldest first. Bounded per shard by
     /// [`MAX_FINISHED_RUNS`] so submit-and-forget clients (e.g. a crashed
     /// REST poller) cannot grow the coordinator's memory without bound.
     finished: VecDeque<RunId>,
-    /// Count of not-yet-finished runs (admission increments, the
-    /// completing transition decrements) — the pending-run backpressure
-    /// bound compares against this instead of rescanning `map` (which also
-    /// holds up to [`MAX_FINISHED_RUNS`] retained finished entries) on
-    /// every submission.
-    pending_runs: usize,
 }
 
-/// Completed-but-unconsumed runs retained before the oldest are evicted.
+/// The small coordination struct: which shards have dispatchable work, and
+/// the worker-pool accounting. Its critical sections touch a few integers
+/// and a tiny ordered set — never task payloads — so it stays cold even
+/// when every worker passes through it per dispatch.
+struct CoordState {
+    /// Flagged shards, ordered `(best class rank, flag seq, shard)` so a
+    /// waking worker serves the most urgent shard first and FIFO breaks
+    /// ties deterministically.
+    flags: BTreeSet<(u8, u64, usize)>,
+    next_flag: u64,
+    /// Live worker threads.
+    workers: usize,
+    /// Workers currently serving a shard (the rest are parked or arriving).
+    busy: usize,
+}
+
+struct Coord {
+    state: Mutex<CoordState>,
+    /// Idle workers park here; one `notify_one` per new flag.
+    cv: Condvar,
+}
+
+/// Completed-but-unconsumed runs retained across the whole run table
+/// before the oldest are evicted (the bound is split evenly across the
+/// active run shards, so sharding does not multiply the memory a
+/// submit-and-forget client can pin).
 pub const MAX_FINISHED_RUNS: usize = 1024;
 
 type EventCallback = Arc<dyn Fn(&EdgeFaaS, &EngineEvent) + Send + Sync>;
 
+/// Physical shard count for both the dispatch queues and the run table.
+/// [`EdgeFaaS::set_engine_shards`] activates a prefix `1..=ENGINE_SHARDS`
+/// of them (default: all).
+pub const ENGINE_SHARDS: usize = 16;
+
 /// The shared execution core owned by [`EdgeFaaS`].
 pub(super) struct EngineCore {
     next_run: AtomicU64,
+    /// Global submission sequence — the deterministic FIFO tie-break,
+    /// identical at every shard count.
+    next_seq: AtomicU64,
     max_workers: AtomicUsize,
     per_resource_slots: AtomicUsize,
     /// Largest per-resource invocation batch a worker may drain (1 =
     /// batching off: every instance dispatches individually).
     max_batch: AtomicUsize,
+    /// Adaptive dispatch window, integer nanoseconds (0 = off).
+    batch_window_ns: AtomicU64,
     /// Backpressure: total pending (not yet finished) runs admitted.
     max_pending_runs: AtomicUsize,
     /// Backpressure: queued instances allowed per resource.
     max_queued_per_resource: AtomicUsize,
-    queue: Mutex<QueueState>,
-    queue_cv: Condvar,
-    runs: Mutex<RunTable>,
-    done_cv: Condvar,
-    callbacks: Mutex<Vec<EventCallback>>,
+    /// Active shard prefix (1..=ENGINE_SHARDS).
+    active_shards: AtomicUsize,
+    /// Pending (admitted, not yet finished) runs — the pending-run
+    /// backpressure bound compares against this.
+    pending_runs: AtomicUsize,
+    /// Instances queued (ready + deferred) across all shards.
+    queued_instances: AtomicUsize,
+    /// Jobs queued across all shards.
+    queued_jobs: AtomicUsize,
+    /// Batch-class tasks queued anywhere (the aging guard's "Batch work
+    /// waited" condition, without scanning shards).
+    queued_batch_class: AtomicUsize,
+    /// Consecutive higher-class dispatches while Batch work waited (the
+    /// aging counter; see [`BATCH_AGE_LIMIT`]).
+    since_batch: AtomicU64,
+    /// Dispatch statistics: backend dispatches (a batch counts once) and
+    /// instances dispatched.
+    batch_dispatches: AtomicU64,
+    instances_dispatched: AtomicU64,
+    dispatch: Vec<DispatchShard>,
+    runs: Vec<RunShard>,
+    coord: Coord,
+    /// Event subscribers. Emitting clones the `Arc` under a read lock —
+    /// never the callback list itself.
+    callbacks: RwLock<Arc<[EventCallback]>>,
 }
 
 /// Default cap on worker threads (lazily spawned, exit when idle).
@@ -517,55 +637,180 @@ pub const SATURATED_RETRY_AFTER_S: f64 = 1.0;
 
 impl EngineCore {
     pub(super) fn new() -> EngineCore {
+        let dispatch = (0..ENGINE_SHARDS)
+            .map(|_| DispatchShard {
+                state: Mutex::new(DispatchState {
+                    ready: BTreeMap::new(),
+                    deferred: BTreeMap::new(),
+                    in_use: HashMap::new(),
+                    flag: None,
+                }),
+                cv: Condvar::new(),
+            })
+            .collect();
+        let runs = (0..ENGINE_SHARDS)
+            .map(|_| RunShard {
+                state: Mutex::new(RunShardState {
+                    map: HashMap::new(),
+                    finished: VecDeque::new(),
+                }),
+                done_cv: Condvar::new(),
+            })
+            .collect();
         EngineCore {
             next_run: AtomicU64::new(0),
+            next_seq: AtomicU64::new(0),
             max_workers: AtomicUsize::new(DEFAULT_MAX_WORKERS),
             per_resource_slots: AtomicUsize::new(DEFAULT_PER_RESOURCE_SLOTS),
             max_batch: AtomicUsize::new(DEFAULT_MAX_BATCH),
+            batch_window_ns: AtomicU64::new(0),
             max_pending_runs: AtomicUsize::new(DEFAULT_MAX_PENDING_RUNS),
             max_queued_per_resource: AtomicUsize::new(DEFAULT_MAX_QUEUED_PER_RESOURCE),
-            queue: Mutex::new(QueueState {
-                ready: BTreeMap::new(),
-                deferred: BTreeMap::new(),
-                in_use: HashMap::new(),
-                next_seq: 0,
-                since_batch: 0,
-                workers: 0,
-                busy: 0,
-            }),
-            queue_cv: Condvar::new(),
-            runs: Mutex::new(RunTable {
-                map: HashMap::new(),
-                finished: VecDeque::new(),
-                pending_runs: 0,
-            }),
-            done_cv: Condvar::new(),
-            callbacks: Mutex::new(Vec::new()),
+            active_shards: AtomicUsize::new(ENGINE_SHARDS),
+            pending_runs: AtomicUsize::new(0),
+            queued_instances: AtomicUsize::new(0),
+            queued_jobs: AtomicUsize::new(0),
+            queued_batch_class: AtomicUsize::new(0),
+            since_batch: AtomicU64::new(0),
+            batch_dispatches: AtomicU64::new(0),
+            instances_dispatched: AtomicU64::new(0),
+            dispatch,
+            runs,
+            coord: Coord {
+                state: Mutex::new(CoordState {
+                    flags: BTreeSet::new(),
+                    next_flag: 0,
+                    workers: 0,
+                    busy: 0,
+                }),
+                cv: Condvar::new(),
+            },
+            callbacks: RwLock::new(Arc::from(Vec::<EventCallback>::new())),
         }
     }
 
-    fn enqueue(&self, tasks: Vec<Task>) {
-        if tasks.is_empty() {
-            return;
+    fn active(&self) -> usize {
+        self.active_shards.load(Ordering::Relaxed).clamp(1, ENGINE_SHARDS)
+    }
+
+    fn dispatch_shard_of(&self, rid: ResourceId) -> usize {
+        rid as usize % self.active()
+    }
+
+    fn run_shard_of(&self, run: RunId) -> usize {
+        run as usize % self.active()
+    }
+
+    /// Queued (ready + admission-deferred) instances bound for one
+    /// resource — the quantity the per-resource backpressure bound limits.
+    /// Locks only the resource's own shard.
+    fn queued_on(&self, rid: ResourceId) -> usize {
+        let st = self.dispatch[self.dispatch_shard_of(rid)].state.lock().unwrap();
+        let ready = st
+            .ready
+            .values()
+            .filter(|t| matches!(t, Task::Instance(ti) if ti.resource == rid))
+            .count();
+        ready + st.deferred.values().filter(|t| t.resource == rid).count()
+    }
+
+    /// Register `sid` in the coordination set under `rank` (or upgrade an
+    /// existing flag to a better rank). Caller holds the shard lock; the
+    /// coord lock nests inside it (lock order: run shard → dispatch shard
+    /// → coord). Returns true when the caller should spawn a worker.
+    fn flag_shard_locked(&self, st: &mut DispatchState, sid: usize, rank: u8) -> bool {
+        let mut c = self.coord.state.lock().unwrap();
+        match st.flag {
+            Some((r, s)) => {
+                if rank < r {
+                    let was_queued = c.flags.remove(&(r, s, sid));
+                    let seq = c.next_flag;
+                    c.next_flag += 1;
+                    c.flags.insert((rank, seq, sid));
+                    st.flag = Some((rank, seq));
+                    if !was_queued {
+                        // The old flag had already been claimed by an
+                        // en-route worker, so this upgrade inserted a
+                        // net-new flag: it needs its own wakeup/spawn, or
+                        // a parked worker would sleep through claimable
+                        // work until some busy worker loops back.
+                        return self.wake_for_flag(&mut c);
+                    }
+                }
+                false
+            }
+            None => {
+                let seq = c.next_flag;
+                c.next_flag += 1;
+                c.flags.insert((rank, seq, sid));
+                st.flag = Some((rank, seq));
+                self.wake_for_flag(&mut c)
+            }
         }
-        let mut q = self.queue.lock().unwrap();
-        for t in tasks {
-            let key =
-                QKey { class: t.class().rank(), deadline_ns: t.deadline_ns(), seq: q.next_seq };
-            q.next_seq += 1;
-            q.ready.insert(key, t);
+    }
+
+    /// Targeted wakeup for one newly-inserted flag: notify exactly one
+    /// parked worker, and tell the caller to spawn one when the flags
+    /// outnumber the non-busy workers (caller holds the coord lock).
+    fn wake_for_flag(&self, c: &mut CoordState) -> bool {
+        self.coord.cv.notify_one();
+        let max = self.max_workers.load(Ordering::Relaxed).max(1);
+        if c.flags.len() > c.workers.saturating_sub(c.busy) && c.workers < max {
+            c.workers += 1;
+            true
+        } else {
+            false
         }
-        drop(q);
-        self.queue_cv.notify_all();
+    }
+
+    /// Pop the next task of this shard in QoS order, applying the global
+    /// aging guard, and settle the global queued counters.
+    fn pop_task(&self, st: &mut DispatchState, limit: usize) -> Option<Task> {
+        let aged = if self.since_batch.load(Ordering::SeqCst) >= BATCH_AGE_LIMIT {
+            pop_best(st, limit, QKey::BATCH_MIN)
+        } else {
+            None
+        };
+        let popped = aged.or_else(|| pop_best(st, limit, QKey::MIN))?;
+        match &popped {
+            Task::Instance(_) => {
+                self.queued_instances.fetch_sub(1, Ordering::SeqCst);
+            }
+            Task::Job { .. } => {
+                self.queued_jobs.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        if popped.class() == Priority::Batch {
+            self.queued_batch_class.fetch_sub(1, Ordering::SeqCst);
+            self.since_batch.store(0, Ordering::SeqCst);
+        } else if self.queued_batch_class.load(Ordering::SeqCst) > 0 {
+            self.since_batch.fetch_add(1, Ordering::SeqCst);
+        } else {
+            self.since_batch.store(0, Ordering::SeqCst);
+        }
+        Some(popped)
     }
 }
 
-enum Popped {
-    Task(Task),
-    /// Nothing queued at all: the worker may exit.
-    Empty,
-    /// Only admission-blocked instances remain: wait for a slot release.
-    Blocked,
+/// Class rank of the best *dispatchable* task in a shard (None = nothing
+/// can dispatch: empty, or only admission-blocked instances). Because the
+/// key orders by class first, the first dispatchable entry in key order
+/// has the minimal dispatchable class.
+fn poppable_rank(st: &DispatchState, limit: usize) -> Option<u8> {
+    let ready = st.ready.iter().find(|(_, t)| match t {
+        Task::Job { .. } => true,
+        Task::Instance(ti) => st.in_use.get(&ti.resource).copied().unwrap_or(0) < limit,
+    });
+    let deferred = st
+        .deferred
+        .iter()
+        .find(|(_, t)| st.in_use.get(&t.resource).copied().unwrap_or(0) < limit);
+    match (ready, deferred) {
+        (None, None) => None,
+        (Some((k, _)), None) => Some(k.class),
+        (None, Some((k, _))) => Some(k.class),
+        (Some((rk, _)), Some((dk, _))) => Some(rk.class.min(dk.class)),
+    }
 }
 
 /// Take the best dispatchable task at or above `lo` in key order, merging
@@ -573,7 +818,7 @@ enum Popped {
 /// the globally smallest dispatchable key wins). Ready instances whose
 /// resource is at its admission limit migrate to `deferred` under their
 /// original key. Returns `None` when nothing in the range can dispatch.
-fn pop_best(q: &mut QueueState, limit: usize, lo: QKey) -> Option<Task> {
+fn pop_best(q: &mut DispatchState, limit: usize, lo: QKey) -> Option<Task> {
     loop {
         let d_key = {
             let in_use = &q.in_use;
@@ -611,37 +856,6 @@ fn pop_best(q: &mut QueueState, limit: usize, lo: QKey) -> Option<Task> {
     }
 }
 
-/// Pop the next task in QoS order, applying the aging guard: once
-/// [`BATCH_AGE_LIMIT`] consecutive higher-class tasks have dispatched while
-/// `Batch` work waited, the oldest dispatchable `Batch` task goes first.
-fn pop_task(q: &mut QueueState, limit: usize) -> Popped {
-    let aged = if q.since_batch >= BATCH_AGE_LIMIT {
-        pop_best(q, limit, QKey::BATCH_MIN)
-    } else {
-        None
-    };
-    let popped = aged.or_else(|| pop_best(q, limit, QKey::MIN));
-    match popped {
-        Some(task) => {
-            if task.class() == Priority::Batch {
-                q.since_batch = 0;
-            } else {
-                let batch_waiting = q.ready.range(QKey::BATCH_MIN..).next().is_some()
-                    || q.deferred.range(QKey::BATCH_MIN..).next().is_some();
-                q.since_batch = if batch_waiting { q.since_batch + 1 } else { 0 };
-            }
-            Popped::Task(task)
-        }
-        None => {
-            if q.ready.is_empty() && q.deferred.is_empty() {
-                Popped::Empty
-            } else {
-                Popped::Blocked
-            }
-        }
-    }
-}
-
 /// Execute one placement instance: call the resource gateway with the
 /// prebuilt envelope and parse the outputs (the invoker's wire format).
 ///
@@ -671,7 +885,9 @@ fn run_instance(faas: &EdgeFaaS, t: &InstanceTask) -> anyhow::Result<InstanceRes
 /// Pull queued instances bound for `rid` *of the same QoS class as the
 /// slot-holding instance* (admission-deferred first, then ready-queue
 /// order; both in QoS key order) into `out`, up to `max_total` entries.
-/// The drained instances execute sequentially under the admission slot the
+/// Shard-local: a resource's instances all live in one shard, so the whole
+/// drain happens under the one shard lock the caller already holds. The
+/// drained instances execute sequentially under the admission slot the
 /// first instance already holds, so the per-resource concurrency bound is
 /// preserved.
 ///
@@ -680,16 +896,20 @@ fn run_instance(faas: &EdgeFaaS, t: &InstanceTask) -> anyhow::Result<InstanceRes
 /// effectively jump every queue the ordering rule just made it wait in.
 ///
 /// Ready-queue instances are drained only while the resource is saturated
-/// (`in_use >= limit`): below the limit, an idle worker could run them in
+/// (`in_use >= limit`) or when `force_ready` is set (the adaptive window's
+/// final fill): below the limit, an idle worker could run them in
 /// parallel, and pulling them into this batch would trade that parallelism
 /// away. Deferred instances are admission-blocked either way, so joining
 /// the batch never costs them anything.
+#[allow(clippy::too_many_arguments)]
 fn drain_same_resource(
-    q: &mut QueueState,
+    eng: &EngineCore,
+    q: &mut DispatchState,
     rid: ResourceId,
     class: Priority,
     limit: usize,
     max_total: usize,
+    force_ready: bool,
     out: &mut Vec<InstanceTask>,
 ) {
     // No coalescing while a *higher*-class instance waits for this same
@@ -717,97 +937,196 @@ fn drain_same_resource(
     for k in keys {
         out.push(q.deferred.remove(&k).expect("key just collected"));
     }
-    if q.in_use.get(&rid).copied().unwrap_or(0) < limit {
+    if force_ready || q.in_use.get(&rid).copied().unwrap_or(0) >= limit {
+        let keys: Vec<QKey> = q
+            .ready
+            .iter()
+            .filter(|(k, t)| {
+                k.class == class.rank()
+                    && matches!(t, Task::Instance(ti) if ti.resource == rid)
+            })
+            .map(|(k, _)| *k)
+            .take(max_total.saturating_sub(out.len()))
+            .collect();
+        for k in keys {
+            match q.ready.remove(&k) {
+                Some(Task::Instance(t)) => out.push(t),
+                _ => unreachable!("collected an instance key"),
+            }
+        }
+    }
+    // Settle the global counters for every drained task, and count each
+    // drained higher-class instance toward the starvation bound exactly
+    // like a popped one — otherwise batching would inflate the documented
+    // [`BATCH_AGE_LIMIT`] by up to max_batch x.
+    let drained = (out.len() - before) as u64;
+    if drained == 0 {
         return;
     }
-    let keys: Vec<QKey> = q
-        .ready
-        .iter()
-        .filter(|(k, t)| {
-            k.class == class.rank() && matches!(t, Task::Instance(ti) if ti.resource == rid)
-        })
-        .map(|(k, _)| *k)
-        .take(max_total.saturating_sub(out.len()))
-        .collect();
-    for k in keys {
-        match q.ready.remove(&k) {
-            Some(Task::Instance(t)) => out.push(t),
-            _ => unreachable!("collected an instance key"),
-        }
-    }
-    // Aging accounting: every drained higher-class instance counts toward
-    // the starvation bound, exactly like a popped one — otherwise batching
-    // would inflate the documented [`BATCH_AGE_LIMIT`] by up to max_batch x
-    // (same batch-waiting rule as `pop_task`).
-    let drained = (out.len() - before) as u64;
-    if drained > 0 && class != Priority::Batch {
-        let batch_waiting = q.ready.range(QKey::BATCH_MIN..).next().is_some()
-            || q.deferred.range(QKey::BATCH_MIN..).next().is_some();
-        if batch_waiting {
-            q.since_batch += drained;
-        }
+    eng.queued_instances.fetch_sub(drained as usize, Ordering::SeqCst);
+    if class == Priority::Batch {
+        eng.queued_batch_class.fetch_sub(drained as usize, Ordering::SeqCst);
+    } else if eng.queued_batch_class.load(Ordering::SeqCst) > 0 {
+        eng.since_batch.fetch_add(drained, Ordering::SeqCst);
     }
 }
 
 fn engine_worker(faas: Arc<EdgeFaaS>) {
+    let eng = &faas.engine;
     loop {
-        let task = {
-            let mut q = faas.engine.queue.lock().unwrap();
+        // Acquire a flagged shard: best class first, FIFO within a class;
+        // once the aging guard trips, a Batch-flagged shard goes first.
+        let taken = {
+            let mut c = eng.coord.state.lock().unwrap();
             loop {
-                let limit = faas.engine.per_resource_slots.load(Ordering::Relaxed).max(1);
-                match pop_task(&mut q, limit) {
-                    Popped::Task(t) => {
-                        q.busy += 1;
-                        break Some(t);
-                    }
-                    Popped::Empty => {
-                        q.workers -= 1;
-                        break None;
-                    }
-                    Popped::Blocked => q = faas.engine.queue_cv.wait(q).unwrap(),
+                let aged = if eng.since_batch.load(Ordering::SeqCst) >= BATCH_AGE_LIMIT {
+                    c.flags.range((Priority::Batch.rank(), 0, 0)..).next().copied()
+                } else {
+                    None
+                };
+                let key = aged.or_else(|| c.flags.iter().next().copied());
+                if let Some(k) = key {
+                    c.flags.remove(&k);
+                    c.busy += 1;
+                    break Some(k);
                 }
+                // Nothing flagged. Exit when the whole engine is idle;
+                // otherwise only admission-blocked work remains and the
+                // releasing worker will flag its shard — park until then.
+                if eng.queued_instances.load(Ordering::SeqCst) == 0
+                    && eng.queued_jobs.load(Ordering::SeqCst) == 0
+                {
+                    c.workers -= 1;
+                    break None;
+                }
+                c = eng.coord.cv.wait(c).unwrap();
             }
         };
-        let Some(task) = task else { return };
-        match task {
-            Task::Job { job, .. } => {
-                // Same containment as run_instance: a panicking job must
-                // not kill the worker and leak the busy/worker counts.
-                let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&faas)));
-                if ran.is_err() {
-                    log::warn!("engine job panicked; worker kept alive");
-                }
-                let mut q = faas.engine.queue.lock().unwrap();
-                q.busy = q.busy.saturating_sub(1);
-            }
-            Task::Instance(first) => {
+        let Some((_rank, fseq, sid)) = taken else { return };
+        serve_shard(&faas, sid, fseq);
+        let mut c = eng.coord.state.lock().unwrap();
+        c.busy -= 1;
+    }
+}
+
+/// What a worker found when it arrived at a flagged shard.
+enum Work {
+    /// Stale flag: the work was drained/shed/stolen before arrival.
+    None,
+    Job(Box<dyn FnOnce(&Arc<EdgeFaaS>) + Send + 'static>),
+    /// A same-resource batch holding one admission slot on the resource.
+    Batch(ResourceId, Vec<InstanceTask>),
+}
+
+/// Serve one flag: pop the shard's best task (plus a same-resource batch
+/// drain), re-flag the shard while more work is dispatchable so other
+/// workers can serve it in parallel, execute, then release the admission
+/// slot — flagging again if the release unblocked deferred work.
+fn serve_shard(faas: &Arc<EdgeFaaS>, sid: usize, fseq: u64) {
+    let eng = &faas.engine;
+    let shard = &eng.dispatch[sid];
+    let limit = eng.per_resource_slots.load(Ordering::Relaxed).max(1);
+    let max_batch = eng.max_batch.load(Ordering::Relaxed).max(1);
+    let mut spawn = false;
+    let work = {
+        let mut st = shard.state.lock().unwrap();
+        if matches!(st.flag, Some((_, s)) if s == fseq) {
+            st.flag = None;
+        }
+        let work = match eng.pop_task(&mut st, limit) {
+            None => Work::None,
+            Some(Task::Job { job, .. }) => Work::Job(job),
+            Some(Task::Instance(first)) => {
                 let rid = first.resource;
                 let class = first.class;
-                // Opportunistically drain more same-resource, same-class
-                // work into one batch (amortizes slot bookkeeping,
-                // completion locking and — through the backend's Batch verb
-                // — the gateway round trip). The batch runs sequentially on
-                // this worker under the single slot acquired by the pop
-                // above.
                 let mut tasks = vec![first];
-                let max_batch = faas.engine.max_batch.load(Ordering::Relaxed).max(1);
                 if max_batch > 1 {
-                    let limit = faas.engine.per_resource_slots.load(Ordering::Relaxed).max(1);
-                    let mut q = faas.engine.queue.lock().unwrap();
-                    drain_same_resource(&mut q, rid, class, limit, max_batch, &mut tasks);
+                    drain_same_resource(
+                        eng, &mut st, rid, class, limit, max_batch, false, &mut tasks,
+                    );
                 }
-                faas.run_batch(rid, tasks);
-                {
-                    let mut q = faas.engine.queue.lock().unwrap();
-                    q.busy = q.busy.saturating_sub(1);
-                    if let Some(n) = q.in_use.get_mut(&rid) {
-                        *n = n.saturating_sub(1);
-                        if *n == 0 {
-                            q.in_use.remove(&rid);
-                        }
+                Work::Batch(rid, tasks)
+            }
+        };
+        if let Some(rank) = poppable_rank(&st, limit) {
+            spawn = eng.flag_shard_locked(&mut st, sid, rank);
+        }
+        work
+    };
+    if spawn {
+        faas.spawn_worker();
+    }
+    match work {
+        Work::None => {}
+        Work::Job(job) => {
+            // Same containment as run_instance: a panicking job must not
+            // kill the worker and leak the busy/worker counts.
+            let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(faas)));
+            if ran.is_err() {
+                log::warn!("engine job panicked; worker kept alive");
+            }
+            // Mirror complete_batch's idle wakeup: if this job drained the
+            // engine, parked workers must re-evaluate and exit rather than
+            // linger as live threads (job-only workloads never pass
+            // through complete_batch).
+            if eng.queued_instances.load(Ordering::SeqCst) == 0
+                && eng.queued_jobs.load(Ordering::SeqCst) == 0
+            {
+                eng.coord.cv.notify_all();
+            }
+        }
+        Work::Batch(rid, mut tasks) => {
+            // Adaptive dispatch window: hold the acquired slot briefly so a
+            // batch can fill under light load. The holder parks on the
+            // *shard's* condvar (same-shard enqueues notify it), re-drains
+            // on every wakeup, and force-drains ready work even below the
+            // admission limit. The window is bounded by a *wall-clock*
+            // deadline: a virtual clock's now() does not advance while we
+            // wait, and unrelated same-shard enqueue wakeups must not
+            // restart the wait, so only an Instant makes termination
+            // unconditional.
+            let window_ns = eng.batch_window_ns.load(Ordering::Relaxed);
+            if window_ns > 0 && max_batch > 1 && tasks.len() < max_batch {
+                let class = tasks[0].class;
+                let wall_deadline = std::time::Instant::now()
+                    + std::time::Duration::from_nanos(window_ns);
+                let mut st = shard.state.lock().unwrap();
+                loop {
+                    drain_same_resource(
+                        eng, &mut st, rid, class, limit, max_batch, true, &mut tasks,
+                    );
+                    if tasks.len() >= max_batch {
+                        break;
+                    }
+                    let now = std::time::Instant::now();
+                    if now >= wall_deadline {
+                        break;
+                    }
+                    let (g, _timeout) =
+                        shard.cv.wait_timeout(st, wall_deadline - now).unwrap();
+                    st = g;
+                    // Loop re-drains; the shrinking wall deadline bounds the
+                    // total hold regardless of wakeup frequency.
+                }
+            }
+            faas.run_batch(rid, tasks);
+            // Release the admission slot; if that unblocked deferred work
+            // (or ready work was waiting on this slot), flag the shard.
+            let mut spawn2 = false;
+            {
+                let mut st = shard.state.lock().unwrap();
+                if let Some(n) = st.in_use.get_mut(&rid) {
+                    *n = n.saturating_sub(1);
+                    if *n == 0 {
+                        st.in_use.remove(&rid);
                     }
                 }
-                faas.engine.queue_cv.notify_all();
+                if let Some(rank) = poppable_rank(&st, limit) {
+                    spawn2 = eng.flag_shard_locked(&mut st, sid, rank);
+                }
+            }
+            if spawn2 {
+                faas.spawn_worker();
             }
         }
     }
@@ -837,6 +1156,11 @@ impl EdgeFaaS {
     /// backpressure" message and publishes `RunCompleted { ok: false }`).
     /// If nothing can be shed — or the submission is itself `Batch` — the
     /// submission is refused with [`EngineError::Saturated`].
+    ///
+    /// The bounds are enforced through atomics (a CAS admits against the
+    /// pending-run bound), so admission takes no engine-wide lock; under
+    /// *concurrent* submission the per-resource bound may transiently
+    /// overshoot by the number of racing submitters.
     pub fn submit_workflow_qos(
         self: &Arc<Self>,
         app: &str,
@@ -844,6 +1168,7 @@ impl EdgeFaaS {
         qos: QoS,
     ) -> Result<RunId, EngineError> {
         let application = self.app(app).map_err(|e| EngineError::Rejected(e.to_string()))?;
+        let eng = &self.engine;
         // Entry-instance demand per resource (for the per-resource queue
         // bound). Placement errors are deliberately ignored here: such a
         // run is admitted and then fails through the normal fire path.
@@ -853,131 +1178,142 @@ impl EdgeFaaS {
                 *demand.entry(rid).or_insert(0) += 1;
             }
         }
-        let max_runs = self.engine.max_pending_runs.load(Ordering::Relaxed).max(1);
-        let max_queued = self.engine.max_queued_per_resource.load(Ordering::Relaxed).max(1);
+        let max_runs = eng.max_pending_runs.load(Ordering::Relaxed).max(1);
+        let max_queued = eng.max_queued_per_resource.load(Ordering::Relaxed).max(1);
         let mut events = Vec::new();
-        let admitted: Result<RunId, EngineError> = {
-            let mut runs = self.engine.runs.lock().unwrap();
-            let admission = loop {
-                let pending = runs.pending_runs;
-                let saturated_resource = {
-                    let q = self.engine.queue.lock().unwrap();
-                    // Fast path: if the whole queue plus this run's largest
-                    // per-resource demand fits the bound, no single
-                    // resource can exceed it — skip the per-resource scan
-                    // (it is O(queue), and it runs under both locks).
-                    let total_queued = q.ready.len() + q.deferred.len();
-                    let max_demand = demand.values().copied().max().unwrap_or(0);
-                    if total_queued + max_demand <= max_queued {
-                        None
-                    } else {
-                        demand
-                            .iter()
-                            .find(|(rid, d)| queued_on(&q, **rid) + **d > max_queued)
-                            .map(|(rid, _)| *rid)
-                    }
-                };
-                if pending < max_runs && saturated_resource.is_none() {
+        let mut notify_shards: Vec<usize> = Vec::new();
+        let admission: Result<(), EngineError> = loop {
+            let pending = eng.pending_runs.load(Ordering::SeqCst);
+            let saturated_resource = {
+                // Fast path: if every queued task plus this run's largest
+                // per-resource demand fits the bound, no single resource
+                // can exceed it — skip the per-shard scans.
+                let total_queued = eng.queued_instances.load(Ordering::SeqCst)
+                    + eng.queued_jobs.load(Ordering::SeqCst);
+                let max_demand = demand.values().copied().max().unwrap_or(0);
+                if total_queued + max_demand <= max_queued {
+                    None
+                } else {
+                    demand
+                        .iter()
+                        .find(|(rid, d)| eng.queued_on(**rid) + **d > max_queued)
+                        .map(|(rid, _)| *rid)
+                }
+            };
+            if pending < max_runs && saturated_resource.is_none() {
+                if eng
+                    .pending_runs
+                    .compare_exchange(pending, pending + 1, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+                {
                     break Ok(());
                 }
-                // Shed only when it can actually relieve the binding
-                // constraint: against the pending-run bound any queued
-                // Batch run helps; against a saturated resource only Batch
-                // runs queued *on that resource* do. A demand larger than
-                // the per-resource bound can never be admitted, so nothing
-                // is shed for it.
-                let impossible = demand.values().any(|d| *d > max_queued);
-                let shed_target = if pending >= max_runs { None } else { saturated_resource };
-                if !impossible
-                    && qos.priority != Priority::Batch
-                    && self.shed_newest_queued_batch(&mut runs, shed_target, &mut events)
-                {
-                    continue;
-                }
-                break Err(EngineError::Saturated {
-                    pending_runs: pending,
-                    max_pending_runs: max_runs,
-                    saturated_resource,
-                    retry_after_s: SATURATED_RETRY_AFTER_S,
-                });
-            };
-            match admission {
-                Err(e) => Err(e),
-                Ok(()) => {
-                    let run = self.engine.next_run.fetch_add(1, Ordering::SeqCst);
-                    let now = self.clock.now();
-                    let entry = RunEntry {
-                        app_name: app.to_string(),
-                        app: Arc::clone(&application),
-                        entry_inputs: entry_inputs.clone(),
-                        state: RunState::new(&application.dag),
-                        fired: HashSet::new(),
-                        pending: HashMap::new(),
-                        partial: HashMap::new(),
-                        result: WorkflowResult::default(),
-                        open_tasks: 0,
-                        started: now,
-                        qos,
-                        deadline_abs: qos.deadline_s.map(|d| now + d.max(0.0)),
-                        deadline_missed: false,
-                        failed: None,
-                        done: false,
-                    };
+                continue; // lost the CAS race: re-evaluate
+            }
+            // Shed only when it can actually relieve the binding
+            // constraint: against the pending-run bound any queued Batch
+            // run helps; against a saturated resource only Batch runs
+            // queued *on that resource* do. A demand larger than the
+            // per-resource bound can never be admitted, so nothing is shed
+            // for it.
+            let impossible = demand.values().any(|d| *d > max_queued);
+            let shed_target = if pending >= max_runs { None } else { saturated_resource };
+            if !impossible
+                && qos.priority != Priority::Batch
+                && self.shed_newest_queued_batch(shed_target, &mut events, &mut notify_shards)
+            {
+                continue;
+            }
+            break Err(EngineError::Saturated {
+                pending_runs: pending,
+                max_pending_runs: max_runs,
+                saturated_resource,
+                retry_after_s: SATURATED_RETRY_AFTER_S,
+            });
+        };
+        let admitted = match admission {
+            Err(e) => Err(e),
+            Ok(()) => {
+                let run = eng.next_run.fetch_add(1, Ordering::SeqCst);
+                let now = self.clock.now();
+                let entry = RunEntry {
+                    app_name: app.to_string(),
+                    app: Arc::clone(&application),
+                    entry_inputs: entry_inputs.clone(),
+                    state: RunState::new(&application.dag),
+                    fired: HashSet::new(),
+                    pending: HashMap::new(),
+                    partial: HashMap::new(),
+                    result: WorkflowResult::default(),
+                    open_tasks: 0,
+                    started: now,
+                    qos,
+                    deadline_abs: qos.deadline_s.map(|d| now + d.max(0.0)),
+                    deadline_missed: false,
+                    failed: None,
+                    done: false,
+                };
+                let sid = eng.run_shard_of(run);
+                let mut batch = Vec::new();
+                let completed = {
+                    let mut rs = eng.runs[sid].state.lock().unwrap();
                     // Insert before enqueueing so a fast worker finds it.
-                    runs.map.insert(run, entry);
-                    runs.pending_runs += 1;
-                    let completed = {
-                        let entry = runs.map.get_mut(&run).expect("just inserted");
-                        let entrypoints = application.config.entrypoints.clone();
-                        let mut batch = Vec::new();
-                        for f in &entrypoints {
-                            if let Err(e) = self.fire_node(run, entry, f, &mut batch) {
-                                entry.failed.get_or_insert(e.to_string());
-                                break;
-                            }
+                    rs.map.insert(run, entry);
+                    let entry = rs.map.get_mut(&run).expect("just inserted");
+                    let entrypoints = application.config.entrypoints.clone();
+                    for f in &entrypoints {
+                        if let Err(e) = self.fire_node(run, entry, f, &mut batch) {
+                            entry.failed.get_or_insert(e.to_string());
+                            break;
                         }
-                        self.engine.enqueue(batch);
-                        self.check_done(run, entry, &mut events)
-                    };
-                    if completed {
-                        Self::retire_finished(&mut runs, run);
                     }
-                    Ok(run)
+                    let completed = self.check_done(run, entry, &mut events);
+                    if completed {
+                        Self::retire_finished(eng, &mut rs, run);
+                    }
+                    completed
+                };
+                // Enqueue outside the run-shard lock: the entry is already
+                // visible to any worker that races us to completion.
+                self.enqueue(batch);
+                if completed {
+                    notify_shards.push(sid);
                 }
+                Ok(run)
             }
         };
-        // Shed victims may already have wait_workflow callers parked.
-        if events.iter().any(|e| matches!(e, EngineEvent::RunCompleted { .. })) {
-            self.engine.done_cv.notify_all();
+        // Shed victims (and instantly-failed submissions) may already have
+        // wait_workflow callers parked on their run shard.
+        for sid in notify_shards {
+            eng.runs[sid].done_cv.notify_all();
         }
         self.emit_events(&events);
-        if admitted.is_ok() {
-            self.ensure_workers();
-        }
         admitted
     }
 
     /// Shed the newest `Batch`-class run that has no instance currently
-    /// executing: its queued instances are removed from the ready/deferred
-    /// queues and the run fails with a backpressure message. With
+    /// executing: its queued instances are removed from the dispatch
+    /// shards and the run fails with a backpressure message. With
     /// `on_resource` set, only runs with at least one instance queued on
     /// that resource qualify — shedding a run that cannot relieve the
     /// saturated resource would destroy it for zero benefit. Returns false
-    /// when no run qualifies. Caller holds the runs lock and collects the
-    /// completion events.
+    /// when no run qualifies. Shards are scanned one lock at a time; a
+    /// worker racing the scan is tolerated (a shed run's instance that
+    /// slipped into execution completes against the already-failed run, a
+    /// no-op).
     fn shed_newest_queued_batch(
         &self,
-        runs: &mut RunTable,
         on_resource: Option<ResourceId>,
         events: &mut Vec<EngineEvent>,
+        notify_shards: &mut Vec<usize>,
     ) -> bool {
-        let victim = {
-            // Queue lock nested inside the runs lock — the same nesting
-            // order as `enqueue` under `complete_batch`.
-            let q = self.engine.queue.lock().unwrap();
-            let mut queued_per_run: HashMap<RunId, usize> = HashMap::new();
-            let mut on_rid: HashSet<RunId> = HashSet::new();
-            for t in q.ready.values() {
+        let eng = &self.engine;
+        let active = eng.active();
+        let mut queued_per_run: HashMap<RunId, usize> = HashMap::new();
+        let mut on_rid: HashSet<RunId> = HashSet::new();
+        for sid in 0..active {
+            let st = eng.dispatch[sid].state.lock().unwrap();
+            for t in st.ready.values() {
                 if let Task::Instance(ti) = t {
                     *queued_per_run.entry(ti.run).or_insert(0) += 1;
                     if Some(ti.resource) == on_resource {
@@ -985,56 +1321,74 @@ impl EdgeFaaS {
                     }
                 }
             }
-            for t in q.deferred.values() {
+            for t in st.deferred.values() {
                 *queued_per_run.entry(t.run).or_insert(0) += 1;
                 if Some(t.resource) == on_resource {
                     on_rid.insert(t.run);
                 }
             }
-            runs.map
-                .iter()
-                .filter(|(id, e)| {
-                    !e.done
-                        && e.qos.priority == Priority::Batch
-                        && e.open_tasks > 0
-                        && queued_per_run.get(*id).copied().unwrap_or(0) == e.open_tasks
-                        && (on_resource.is_none() || on_rid.contains(*id))
-                })
-                .map(|(id, _)| *id)
-                .max()
-        };
+        }
+        let mut victim: Option<RunId> = None;
+        for sid in 0..active {
+            let rs = eng.runs[sid].state.lock().unwrap();
+            for (id, e) in rs.map.iter() {
+                if !e.done
+                    && e.qos.priority == Priority::Batch
+                    && e.open_tasks > 0
+                    && queued_per_run.get(id).copied().unwrap_or(0) == e.open_tasks
+                    && (on_resource.is_none() || on_rid.contains(id))
+                {
+                    victim = victim.max(Some(*id));
+                }
+            }
+        }
         let Some(victim) = victim else { return false };
-        {
-            let mut q = self.engine.queue.lock().unwrap();
-            let keys: Vec<QKey> = q
+        // Remove the victim's queued tasks shard by shard, settling the
+        // global counters (a Batch-class run's tasks are all Batch).
+        for sid in 0..active {
+            let mut st = eng.dispatch[sid].state.lock().unwrap();
+            let keys: Vec<QKey> = st
                 .ready
                 .iter()
                 .filter(|(_, t)| matches!(t, Task::Instance(ti) if ti.run == victim))
                 .map(|(k, _)| *k)
                 .collect();
             for k in keys {
-                q.ready.remove(&k);
+                if st.ready.remove(&k).is_some() {
+                    eng.queued_instances.fetch_sub(1, Ordering::SeqCst);
+                    eng.queued_batch_class.fetch_sub(1, Ordering::SeqCst);
+                }
             }
             let keys: Vec<QKey> =
-                q.deferred.iter().filter(|(_, t)| t.run == victim).map(|(k, _)| *k).collect();
+                st.deferred.iter().filter(|(_, t)| t.run == victim).map(|(k, _)| *k).collect();
             for k in keys {
-                q.deferred.remove(&k);
+                if st.deferred.remove(&k).is_some() {
+                    eng.queued_instances.fetch_sub(1, Ordering::SeqCst);
+                    eng.queued_batch_class.fetch_sub(1, Ordering::SeqCst);
+                }
             }
         }
-        let entry = runs.map.get_mut(&victim).expect("victim observed under this lock");
-        entry.open_tasks = 0;
-        entry.failed.get_or_insert_with(|| {
-            "shed under backpressure (batch-class run evicted by a higher-priority submission)"
-                .to_string()
-        });
-        log::warn!("engine saturated: shedding batch-class run {victim}");
-        if self.check_done(victim, entry, events) {
-            Self::retire_finished(runs, victim);
+        let rsid = eng.run_shard_of(victim);
+        {
+            let mut rs = eng.runs[rsid].state.lock().unwrap();
+            if let Some(entry) = rs.map.get_mut(&victim) {
+                entry.open_tasks = 0;
+                entry.failed.get_or_insert_with(|| {
+                    "shed under backpressure (batch-class run evicted by a higher-priority \
+                     submission)"
+                        .to_string()
+                });
+                log::warn!("engine saturated: shedding batch-class run {victim}");
+                if self.check_done(victim, entry, events) {
+                    Self::retire_finished(eng, &mut rs, victim);
+                    notify_shards.push(rsid);
+                }
+            }
         }
-        // A worker parked on the queue condvar may have been waiting for
-        // exactly the tasks just removed: wake it to re-evaluate (it exits
-        // if the queue is now empty).
-        self.engine.queue_cv.notify_all();
+        // A worker parked on the coordination condvar may have been
+        // waiting for exactly the tasks just removed: wake the pool to
+        // re-evaluate (idle workers exit).
+        eng.coord.cv.notify_all();
         true
     }
 
@@ -1044,7 +1398,8 @@ impl EdgeFaaS {
     /// a wait timeout (the run is still executing and can be waited on
     /// again) is not a run failure, and a missed QoS deadline is reported
     /// as [`WaitError::DeadlineExceeded`] rather than a generic failure
-    /// string.
+    /// string. The wait parks on the run's own shard condvar, so
+    /// completions of unrelated runs never wake it.
     pub fn wait_workflow(&self, run: RunId, timeout_s: f64) -> Result<WorkflowResult, WaitError> {
         let deadline = if timeout_s.is_finite() {
             Some(
@@ -1054,14 +1409,15 @@ impl EdgeFaaS {
         } else {
             None
         };
-        let mut runs = self.engine.runs.lock().unwrap();
+        let shard = &self.engine.runs[self.engine.run_shard_of(run)];
+        let mut rs = shard.state.lock().unwrap();
         loop {
-            let done = match runs.map.get(&run) {
+            let done = match rs.map.get(&run) {
                 None => return Err(WaitError::UnknownRun { run }),
                 Some(e) => e.done,
             };
             if done {
-                let entry = runs.map.remove(&run).expect("checked above");
+                let entry = rs.map.remove(&run).expect("checked above");
                 if entry.deadline_missed {
                     return Err(WaitError::DeadlineExceeded { run });
                 }
@@ -1071,14 +1427,14 @@ impl EdgeFaaS {
                 };
             }
             match deadline {
-                None => runs = self.engine.done_cv.wait(runs).unwrap(),
+                None => rs = shard.done_cv.wait(rs).unwrap(),
                 Some(d) => {
                     let now = std::time::Instant::now();
                     if now >= d {
                         return Err(WaitError::Timeout { run, waited_s: timeout_s.max(0.0) });
                     }
-                    let (g, _) = self.engine.done_cv.wait_timeout(runs, d - now).unwrap();
-                    runs = g;
+                    let (g, _) = shard.done_cv.wait_timeout(rs, d - now).unwrap();
+                    rs = g;
                 }
             }
         }
@@ -1087,19 +1443,19 @@ impl EdgeFaaS {
     /// Non-blocking peek at a run (None once consumed by `wait_workflow` /
     /// `take_run`).
     pub fn run_status(&self, run: RunId) -> Option<RunStatus> {
-        let runs = self.engine.runs.lock().unwrap();
-        runs.map.get(&run).map(Self::status_of)
+        let rs = self.engine.runs[self.engine.run_shard_of(run)].state.lock().unwrap();
+        rs.map.get(&run).map(Self::status_of)
     }
 
     /// Like [`Self::run_status`], but removes the record once the run is
     /// done (the REST gateway's poll-then-forget semantics).
     pub fn take_run(&self, run: RunId) -> Option<RunStatus> {
-        let mut runs = self.engine.runs.lock().unwrap();
-        let done = runs.map.get(&run)?.done;
+        let mut rs = self.engine.runs[self.engine.run_shard_of(run)].state.lock().unwrap();
+        let done = rs.map.get(&run)?.done;
         if !done {
             return Some(RunStatus::Running);
         }
-        let entry = runs.map.remove(&run).expect("checked above");
+        let entry = rs.map.remove(&run).expect("checked above");
         Some(if entry.deadline_missed {
             RunStatus::DeadlineExceeded
         } else if let Some(msg) = entry.failed {
@@ -1126,8 +1482,8 @@ impl EdgeFaaS {
     /// budget in seconds (negative once past). `None` once the record has
     /// been consumed.
     pub fn run_qos(&self, run: RunId) -> Option<(QoS, Option<f64>)> {
-        let runs = self.engine.runs.lock().unwrap();
-        runs.map
+        let rs = self.engine.runs[self.engine.run_shard_of(run)].state.lock().unwrap();
+        rs.map
             .get(&run)
             .map(|e| (e.qos, e.deadline_abs.map(|d| d - self.clock.now())))
     }
@@ -1159,30 +1515,22 @@ impl EdgeFaaS {
             .deadline_s
             .map(|d| ((self.clock.now() + d.max(0.0)) * 1e9) as u64)
             .unwrap_or(u64::MAX);
-        self.engine.enqueue(vec![Task::Job {
+        self.enqueue(vec![Task::Job {
             class: qos.priority,
             deadline_ns,
             job: Box::new(job),
         }]);
         let overflow = {
-            let mut q = self.engine.queue.lock().unwrap();
-            if q.workers.saturating_sub(q.busy) == 0 {
-                q.workers += 1;
+            let mut c = self.engine.coord.state.lock().unwrap();
+            if c.workers.saturating_sub(c.busy) == 0 {
+                c.workers += 1;
                 true
             } else {
                 false
             }
         };
         if overflow {
-            let faas = Arc::clone(self);
-            let spawned = std::thread::Builder::new()
-                .name("engine-worker".into())
-                .spawn(move || engine_worker(faas));
-            if spawned.is_err() {
-                self.engine.queue.lock().unwrap().workers -= 1;
-            }
-        } else {
-            self.ensure_workers();
+            self.spawn_worker();
         }
     }
 
@@ -1190,16 +1538,53 @@ impl EdgeFaaS {
     /// threads after the engine's locks are released, so they may call back
     /// into the coordinator (e.g. `reschedule_function` on load changes).
     pub fn on_engine_event(&self, cb: impl Fn(&EdgeFaaS, &EngineEvent) + Send + Sync + 'static) {
-        self.engine.callbacks.lock().unwrap().push(Arc::new(cb));
+        let mut cbs = self.engine.callbacks.write().unwrap();
+        let mut v: Vec<EventCallback> = cbs.iter().cloned().collect();
+        v.push(Arc::new(cb));
+        *cbs = Arc::from(v);
     }
 
     /// Tune the engine: worker-thread cap and per-resource admission slots
     /// (both clamped to >= 1). Takes effect for subsequent scheduling
     /// decisions.
-    pub fn set_engine_limits(&self, max_workers: usize, per_resource_slots: usize) {
+    pub fn set_engine_limits(self: &Arc<Self>, max_workers: usize, per_resource_slots: usize) {
         self.engine.max_workers.store(max_workers.max(1), Ordering::Relaxed);
         self.engine.per_resource_slots.store(per_resource_slots.max(1), Ordering::Relaxed);
-        self.engine.queue_cv.notify_all();
+        // A raised slot limit can turn admission-blocked work dispatchable
+        // without any slot release: re-flag affected shards.
+        self.refresh_dispatch();
+    }
+
+    /// Set the active shard count for the dispatch queues and the run
+    /// table (clamped to `1..=`[`ENGINE_SHARDS`]). **Call on an idle
+    /// engine only** (no queued work, no pending runs): shard routing of
+    /// in-flight state is not rehashed. `1` reproduces the old
+    /// single-lock engine (the contention bench's baseline); the default
+    /// is [`ENGINE_SHARDS`].
+    pub fn set_engine_shards(&self, shards: usize) {
+        let eng = &self.engine;
+        let busy = eng.pending_runs.load(Ordering::SeqCst) != 0
+            || eng.queued_instances.load(Ordering::SeqCst) != 0
+            || eng.queued_jobs.load(Ordering::SeqCst) != 0;
+        debug_assert!(
+            !busy,
+            "set_engine_shards called on a non-idle engine: in-flight state is not rehashed"
+        );
+        if busy {
+            // Release builds: refuse silently corrupting shard routing of
+            // live runs; keep the current layout and say why.
+            log::warn!(
+                "set_engine_shards({shards}) ignored: engine not idle \
+                 (pending runs or queued work present)"
+            );
+            return;
+        }
+        eng.active_shards.store(shards.clamp(1, ENGINE_SHARDS), Ordering::SeqCst);
+    }
+
+    /// The active shard count.
+    pub fn engine_shards(&self) -> usize {
+        self.engine.active()
     }
 
     /// Toggle per-resource invocation batching (see the module docs).
@@ -1222,6 +1607,22 @@ impl EdgeFaaS {
         self.engine.max_batch.load(Ordering::Relaxed) > 1
     }
 
+    /// Adaptive dispatch window, seconds (0 disables; the default). While
+    /// set, a worker that acquired an admission slot with a non-full batch
+    /// holds it for up to the window — parked on its shard's condvar, so
+    /// same-shard enqueues fill the batch early — before dispatching (see
+    /// the module docs). Trades up to `window_s` of added latency for
+    /// fewer backend round trips under light load.
+    pub fn set_batch_window(&self, window_s: f64) {
+        let ns = if window_s > 0.0 { (window_s * 1e9) as u64 } else { 0 };
+        self.engine.batch_window_ns.store(ns, Ordering::Relaxed);
+    }
+
+    /// The configured adaptive dispatch window, seconds (0 = off).
+    pub fn batch_window(&self) -> f64 {
+        self.engine.batch_window_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
     /// Tune the backpressure bounds (both clamped to >= 1): total pending
     /// (not yet finished) runs, and queued instances per resource. Beyond
     /// either bound, submissions are refused with
@@ -1234,7 +1635,112 @@ impl EdgeFaaS {
             .store(max_queued_per_resource.max(1), Ordering::Relaxed);
     }
 
+    /// Snapshot of engine-wide counters (shards, pending runs, queue
+    /// depth, worker pool, dispatch statistics).
+    pub fn engine_stats(&self) -> EngineStats {
+        let eng = &self.engine;
+        let (workers, busy) = {
+            let c = eng.coord.state.lock().unwrap();
+            (c.workers, c.busy)
+        };
+        EngineStats {
+            shards: eng.active(),
+            pending_runs: eng.pending_runs.load(Ordering::SeqCst),
+            queued_instances: eng.queued_instances.load(Ordering::SeqCst),
+            workers,
+            busy_workers: busy,
+            batch_dispatches: eng.batch_dispatches.load(Ordering::Relaxed),
+            instances_dispatched: eng.instances_dispatched.load(Ordering::Relaxed),
+        }
+    }
+
     // ------------------------------------------------------------ internal --
+
+    /// Key tasks, route them to their shards (an instance to its
+    /// resource's shard, a job spread by sequence), flag every shard that
+    /// became dispatchable, and spawn workers for uncovered flags. Keys
+    /// are assigned from the global sequence in task order, so the FIFO
+    /// tie-break is identical at every shard count.
+    fn enqueue(self: &Arc<Self>, tasks: Vec<Task>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let eng = &self.engine;
+        let active = eng.active();
+        let limit = eng.per_resource_slots.load(Ordering::Relaxed).max(1);
+        let mut by_shard: BTreeMap<usize, Vec<(QKey, Task)>> = BTreeMap::new();
+        for t in tasks {
+            let seq = eng.next_seq.fetch_add(1, Ordering::SeqCst);
+            let key = QKey { class: t.class().rank(), deadline_ns: t.deadline_ns(), seq };
+            let sid = match &t {
+                Task::Instance(ti) => eng.dispatch_shard_of(ti.resource),
+                Task::Job { .. } => (seq % active as u64) as usize,
+            };
+            by_shard.entry(sid).or_default().push((key, t));
+        }
+        let mut spawns = 0usize;
+        for (sid, group) in by_shard {
+            let shard = &eng.dispatch[sid];
+            let mut st = shard.state.lock().unwrap();
+            for (key, t) in group {
+                match &t {
+                    Task::Instance(_) => {
+                        eng.queued_instances.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Task::Job { .. } => {
+                        eng.queued_jobs.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+                if t.class() == Priority::Batch {
+                    eng.queued_batch_class.fetch_add(1, Ordering::SeqCst);
+                }
+                st.ready.insert(key, t);
+            }
+            if let Some(rank) = poppable_rank(&st, limit) {
+                if eng.flag_shard_locked(&mut st, sid, rank) {
+                    spawns += 1;
+                }
+            }
+            // Wake an adaptive-window holder parked on this shard.
+            shard.cv.notify_all();
+        }
+        for _ in 0..spawns {
+            self.spawn_worker();
+        }
+    }
+
+    /// Spawn one worker thread; the coord `workers` count was already
+    /// incremented by the caller's accounting, so a failed spawn rolls it
+    /// back.
+    fn spawn_worker(self: &Arc<Self>) {
+        let faas = Arc::clone(self);
+        let spawned = std::thread::Builder::new()
+            .name("engine-worker".into())
+            .spawn(move || engine_worker(faas));
+        if spawned.is_err() {
+            self.engine.coord.state.lock().unwrap().workers -= 1;
+        }
+    }
+
+    /// Re-flag every active shard that has dispatchable work (after a
+    /// limits change) and wake the pool.
+    fn refresh_dispatch(self: &Arc<Self>) {
+        let eng = &self.engine;
+        let limit = eng.per_resource_slots.load(Ordering::Relaxed).max(1);
+        let mut spawns = 0usize;
+        for sid in 0..eng.active() {
+            let mut st = eng.dispatch[sid].state.lock().unwrap();
+            if let Some(rank) = poppable_rank(&st, limit) {
+                if eng.flag_shard_locked(&mut st, sid, rank) {
+                    spawns += 1;
+                }
+            }
+        }
+        for _ in 0..spawns {
+            self.spawn_worker();
+        }
+        eng.coord.cv.notify_all();
+    }
 
     /// Fire one DAG node: route its inputs, record bookkeeping, and collect
     /// one task per placement instance into `batch`.
@@ -1304,52 +1810,71 @@ impl EdgeFaaS {
     /// ([`super::handle::ResourceHandle::invoke_batch`]) — one gateway
     /// round trip, per-entry failure containment, results in task order.
     fn run_batch(self: &Arc<Self>, rid: ResourceId, tasks: Vec<InstanceTask>) {
+        let eng = &self.engine;
         // Fast-drain instances of runs that already failed or finished
-        // (one lock for the whole batch). Like the unbatched path — where
-        // siblings already executing on other workers cannot be recalled
-        // either — this check is best-effort: a run failing mid-batch
-        // wastes at most the remainder of this one batch.
+        // (one lock per affected run shard for the whole batch). Like the
+        // unbatched path — where siblings already executing on other
+        // workers cannot be recalled either — this check is best-effort: a
+        // run failing mid-batch wastes at most the remainder of this one
+        // batch.
         //
         // Deadline enforcement lives here too: an instance dispatched after
         // its run's deadline has passed is skipped instead of occupying the
         // backend, the run transitions to `DeadlineExceeded` (once), and
         // `EngineEvent::DeadlineMissed` fires for reschedule policies.
         let now = self.clock.now();
-        let mut deadline_events = Vec::new();
-        let skip: Vec<bool> = {
-            let mut runs = self.engine.runs.lock().unwrap();
-            tasks
-                .iter()
-                .map(|t| {
-                    let Some(e) = runs.map.get_mut(&t.run) else { return true };
-                    if e.failed.is_some() || e.done {
-                        return true;
-                    }
-                    match e.deadline_abs {
-                        Some(d) if now >= d => {
-                            e.deadline_missed = true;
-                            e.failed = Some(format!(
-                                "deadline exceeded: dispatched {:.3}s past the {:.3}s deadline",
-                                now - d,
-                                e.qos.deadline_s.unwrap_or(0.0)
-                            ));
-                            deadline_events.push(EngineEvent::DeadlineMissed {
+        let mut deadline_events: Vec<(usize, EngineEvent)> = Vec::new();
+        let mut skip = vec![false; tasks.len()];
+        for (sid, idxs) in Self::by_run_shard(eng, &tasks) {
+            let mut rs = eng.runs[sid].state.lock().unwrap();
+            for i in idxs {
+                let t = &tasks[i];
+                let Some(e) = rs.map.get_mut(&t.run) else {
+                    skip[i] = true;
+                    continue;
+                };
+                if e.failed.is_some() || e.done {
+                    skip[i] = true;
+                    continue;
+                }
+                if let Some(d) = e.deadline_abs {
+                    if now >= d {
+                        e.deadline_missed = true;
+                        e.failed = Some(format!(
+                            "deadline exceeded: dispatched {:.3}s past the {:.3}s deadline",
+                            now - d,
+                            e.qos.deadline_s.unwrap_or(0.0)
+                        ));
+                        deadline_events.push((
+                            i,
+                            EngineEvent::DeadlineMissed {
                                 run: t.run,
                                 app: e.app_name.clone(),
                                 deadline_s: e.qos.deadline_s.unwrap_or(0.0),
                                 late_by: now - d,
-                            });
-                            true
-                        }
-                        _ => false,
+                            },
+                        ));
+                        skip[i] = true;
                     }
-                })
-                .collect()
-        };
+                }
+            }
+        }
+        // Emit in task order regardless of shard visit order.
+        deadline_events.sort_by_key(|(i, _)| *i);
+        let deadline_events: Vec<EngineEvent> =
+            deadline_events.into_iter().map(|(_, ev)| ev).collect();
         self.emit_events(&deadline_events);
         let mut outcomes: Vec<Option<anyhow::Result<InstanceResult>>> =
             skip.iter().map(|_| None).collect();
         let live: Vec<usize> = (0..tasks.len()).filter(|&i| !skip[i]).collect();
+        // Statistics count *backend* dispatches only: a batch whose tasks
+        // were all skipped (run failed/shed, deadline missed) never reaches
+        // a backend and must not inflate the counters the contention bench
+        // and the window test read.
+        if !live.is_empty() {
+            eng.batch_dispatches.fetch_add(1, Ordering::Relaxed);
+            eng.instances_dispatched.fetch_add(live.len() as u64, Ordering::Relaxed);
+        }
         match live.len() {
             0 => {}
             1 => {
@@ -1416,10 +1941,21 @@ impl EdgeFaaS {
         self.complete_batch(&tasks, outcomes);
     }
 
+    /// Group a batch's task indices by run shard (ascending shard order,
+    /// task order within a shard). Tasks of one run always share a shard,
+    /// so per-run invariants hold within one lock session.
+    fn by_run_shard(eng: &EngineCore, tasks: &[InstanceTask]) -> BTreeMap<usize, Vec<usize>> {
+        let mut by_shard: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, t) in tasks.iter().enumerate() {
+            by_shard.entry(eng.run_shard_of(t.run)).or_default().push(i);
+        }
+        by_shard
+    }
+
     /// Process a batch of finished (or skipped) instances, sequentially in
-    /// task order — exactly the bookkeeping N single completions would do,
-    /// but with the run-table lock taken twice per batch instead of twice
-    /// per task.
+    /// task order within each affected run shard — exactly the bookkeeping
+    /// N single completions would do, but with each run shard's lock taken
+    /// twice per batch instead of twice per task.
     ///
     /// Two lock phases with the node-completion events emitted *between*
     /// them: subscribers observe `NodeCompleted` before the node's
@@ -1429,15 +1965,19 @@ impl EdgeFaaS {
     fn complete_batch(
         self: &Arc<Self>,
         tasks: &[InstanceTask],
-        outcomes: Vec<Option<anyhow::Result<InstanceResult>>>,
+        mut outcomes: Vec<Option<anyhow::Result<InstanceResult>>>,
     ) {
+        let eng = &self.engine;
+        let by_shard = Self::by_run_shard(eng, tasks);
         // Phase 1: record every instance; detect node completions.
-        let mut node_events = Vec::new();
+        let mut node_events: Vec<Option<EngineEvent>> = (0..tasks.len()).map(|_| None).collect();
         let mut node_done = vec![false; tasks.len()];
-        {
-            let mut runs = self.engine.runs.lock().unwrap();
-            for ((idx, task), outcome) in tasks.iter().enumerate().zip(outcomes) {
-                let Some(entry) = runs.map.get_mut(&task.run) else { continue };
+        for (sid, idxs) in &by_shard {
+            let mut rs = eng.runs[*sid].state.lock().unwrap();
+            for &idx in idxs {
+                let task = &tasks[idx];
+                let outcome = outcomes[idx].take();
+                let Some(entry) = rs.map.get_mut(&task.run) else { continue };
                 entry.open_tasks = entry.open_tasks.saturating_sub(1);
                 match outcome {
                     None => {} // skipped: the run had already failed
@@ -1461,7 +2001,7 @@ impl EdgeFaaS {
                                     slots.into_iter().flatten().collect();
                                 let latency =
                                     instances.iter().map(|i| i.latency).fold(0.0, f64::max);
-                                node_events.push(EngineEvent::NodeCompleted {
+                                node_events[idx] = Some(EngineEvent::NodeCompleted {
                                     run: task.run,
                                     app: entry.app_name.clone(),
                                     function: task.function.clone(),
@@ -1485,26 +2025,31 @@ impl EdgeFaaS {
                 }
             }
         }
+        // Emit in task order regardless of shard visit order.
+        let node_events: Vec<EngineEvent> = node_events.into_iter().flatten().collect();
         self.emit_events(&node_events);
 
         // Phase 2: fire newly-ready dependents (sorted by topological index
-        // for deterministic firing orders) in task order so firing orders
-        // match unbatched execution — for EVERY completed node in the batch
-        // before any run-completion check. Two batch entries can belong to
-        // one run, and `check_done` treats `open_tasks == 0` as
-        // run-complete: checking an earlier entry's run before a later
-        // entry fired its dependents would retire the run with downstream
-        // nodes unfired. (The unbatched path kept this invariant implicitly
-        // by interleaving fire and check per instance.)
+        // for deterministic firing orders) in task order — for EVERY
+        // completed node of a run before that run's completion check. Two
+        // batch entries can belong to one run, and `check_done` treats
+        // `open_tasks == 0` as run-complete: checking an earlier entry's
+        // run before a later entry fired its dependents would retire the
+        // run with downstream nodes unfired. Tasks of one run share a run
+        // shard, so the invariant holds within each shard's lock session.
+        // New tasks are collected per entry index and enqueued once, in
+        // task order, so the FIFO sequence matches unsharded execution.
         let mut run_events = Vec::new();
-        {
-            let mut runs = self.engine.runs.lock().unwrap();
-            let mut to_enqueue = Vec::new();
-            for (idx, task) in tasks.iter().enumerate() {
+        let mut to_enqueue: Vec<Vec<Task>> = (0..tasks.len()).map(|_| Vec::new()).collect();
+        let mut completed_shards: Vec<usize> = Vec::new();
+        for (sid, idxs) in &by_shard {
+            let mut rs = eng.runs[*sid].state.lock().unwrap();
+            for &idx in idxs {
                 if !node_done[idx] {
                     continue;
                 }
-                let Some(entry) = runs.map.get_mut(&task.run) else { continue };
+                let task = &tasks[idx];
+                let Some(entry) = rs.map.get_mut(&task.run) else { continue };
                 if entry.failed.is_some() {
                     continue;
                 }
@@ -1514,7 +2059,7 @@ impl EdgeFaaS {
                     application.dag.topo_order.iter().position(|x| x == n).unwrap_or(usize::MAX)
                 });
                 for f in &ready {
-                    if let Err(e) = self.fire_node(task.run, entry, f, &mut to_enqueue) {
+                    if let Err(e) = self.fire_node(task.run, entry, f, &mut to_enqueue[idx]) {
                         entry.failed.get_or_insert(e.to_string());
                         break;
                     }
@@ -1522,23 +2067,32 @@ impl EdgeFaaS {
             }
             // Now detect run completions (idempotent per run via the `done`
             // flag, so duplicate runs in one batch check harmlessly twice).
-            for task in tasks {
-                let completed = match runs.map.get_mut(&task.run) {
+            for &idx in idxs {
+                let task = &tasks[idx];
+                let completed = match rs.map.get_mut(&task.run) {
                     None => false,
                     Some(entry) => self.check_done(task.run, entry, &mut run_events),
                 };
                 if completed {
-                    Self::retire_finished(&mut runs, task.run);
+                    Self::retire_finished(eng, &mut rs, task.run);
+                    completed_shards.push(*sid);
                 }
             }
-            // One enqueue (queue lock + wakeup) for the whole batch.
-            self.engine.enqueue(to_enqueue);
         }
-        if run_events.iter().any(|e| matches!(e, EngineEvent::RunCompleted { .. })) {
-            self.engine.done_cv.notify_all();
+        // One enqueue (shard locks + wakeups) for the whole batch, in task
+        // order. The entries are already visible in their run shards.
+        let to_enqueue: Vec<Task> = to_enqueue.into_iter().flatten().collect();
+        if to_enqueue.is_empty() {
+            // Nothing new to dispatch: let any parked workers re-evaluate —
+            // if the engine just went idle they exit instead of lingering.
+            eng.coord.cv.notify_all();
+        } else {
+            self.enqueue(to_enqueue);
+        }
+        for sid in completed_shards {
+            eng.runs[sid].done_cv.notify_all();
         }
         self.emit_events(&run_events);
-        self.ensure_workers();
     }
 
     /// Mark a drained run done; returns true on the completing transition.
@@ -1557,69 +2111,36 @@ impl EdgeFaaS {
         false
     }
 
-    /// Record a just-completed run in the retention queue, evicting the
-    /// oldest completed-but-unconsumed runs beyond [`MAX_FINISHED_RUNS`].
-    /// (Runs consumed by `wait_workflow`/`take_run` leave stale ids behind;
-    /// those pop harmlessly here.) Called exactly once per completing
-    /// transition (`check_done` returning true), so it also settles the
+    /// Record a just-completed run in its shard's retention queue, evicting
+    /// the oldest completed-but-unconsumed runs beyond this shard's share
+    /// of [`MAX_FINISHED_RUNS`]. (Runs consumed by
+    /// `wait_workflow`/`take_run` leave stale ids behind; those pop
+    /// harmlessly here.) Called exactly once per completing transition
+    /// (`check_done` returning true), so it also settles the global
     /// pending-run counter.
-    fn retire_finished(runs: &mut RunTable, run: RunId) {
-        runs.pending_runs = runs.pending_runs.saturating_sub(1);
-        while runs.finished.len() >= MAX_FINISHED_RUNS {
-            let Some(old) = runs.finished.pop_front() else { break };
-            if runs.map.get(&old).map(|e| e.done).unwrap_or(false) {
-                runs.map.remove(&old);
+    fn retire_finished(eng: &EngineCore, rs: &mut RunShardState, run: RunId) {
+        eng.pending_runs.fetch_sub(1, Ordering::SeqCst);
+        // Split the global retention bound across the active shards so the
+        // total stays MAX_FINISHED_RUNS at every shard count.
+        let shard_cap = (MAX_FINISHED_RUNS / eng.active()).max(1);
+        while rs.finished.len() >= shard_cap {
+            let Some(old) = rs.finished.pop_front() else { break };
+            if rs.map.get(&old).map(|e| e.done).unwrap_or(false) {
+                rs.map.remove(&old);
             }
         }
-        runs.finished.push_back(run);
+        rs.finished.push_back(run);
     }
 
     fn emit_events(&self, events: &[EngineEvent]) {
         if events.is_empty() {
             return;
         }
-        let cbs: Vec<EventCallback> = self.engine.callbacks.lock().unwrap().clone();
+        // Clone the Arc under the read lock — never the callback list.
+        let cbs: Arc<[EventCallback]> = Arc::clone(&self.engine.callbacks.read().unwrap());
         for ev in events {
-            for cb in &cbs {
+            for cb in cbs.iter() {
                 cb(self, ev);
-            }
-        }
-    }
-
-    /// Spawn worker threads up to the cap, one per pending task. Workers
-    /// exit when the queue drains, so an idle coordinator holds no threads.
-    fn ensure_workers(self: &Arc<Self>) {
-        loop {
-            {
-                let mut q = self.engine.queue.lock().unwrap();
-                let limit = self.engine.per_resource_slots.load(Ordering::Relaxed).max(1);
-                // Admission-blocked deferred instances are not runnable
-                // demand — a thread spawned for them could only park on the
-                // condvar until a slot frees (and an existing worker will
-                // pick them up then).
-                let admissible_deferred = q
-                    .deferred
-                    .values()
-                    .filter(|t| q.in_use.get(&t.resource).copied().unwrap_or(0) < limit)
-                    .count();
-                let pending = q.ready.len() + admissible_deferred;
-                let max = self.engine.max_workers.load(Ordering::Relaxed).max(1);
-                // Compare the backlog against *free* capacity: workers stuck
-                // in a long task must not stop a short run from getting a
-                // fresh thread (no head-of-line blocking across runs).
-                let available = q.workers.saturating_sub(q.busy);
-                if q.workers >= max || available >= pending {
-                    return;
-                }
-                q.workers += 1;
-            }
-            let faas = Arc::clone(self);
-            let spawned = std::thread::Builder::new()
-                .name("engine-worker".into())
-                .spawn(move || engine_worker(faas));
-            if spawned.is_err() {
-                self.engine.queue.lock().unwrap().workers -= 1;
-                return;
             }
         }
     }
@@ -1890,6 +2411,32 @@ dag:
         assert!(b.faas.run_status(999_999).is_none());
     }
 
+    #[test]
+    fn shard_knob_clamps_and_stays_correct_at_every_count() {
+        for shards in [0usize, 1, 4, 999] {
+            let b = chain_bed(Arc::new(RealClock::new()));
+            b.faas.set_engine_shards(shards);
+            assert_eq!(b.faas.engine_shards(), shards.clamp(1, ENGINE_SHARDS));
+            let run = b.faas.submit_workflow("chain", &entry_for("s0")).unwrap();
+            let result = b.faas.wait_workflow(run, 10.0).unwrap();
+            assert_eq!(result.firing_order, vec!["gen", "sum"], "shards={shards}");
+            assert!(result.functions["sum"][0].outputs[0].contains("s0-sum-n2"));
+        }
+    }
+
+    #[test]
+    fn engine_stats_track_dispatches() {
+        let b = chain_bed(Arc::new(RealClock::new()));
+        let run = b.faas.submit_workflow("chain", &entry_for("st")).unwrap();
+        b.faas.wait_workflow(run, 10.0).unwrap();
+        let stats = b.faas.engine_stats();
+        assert_eq!(stats.shards, ENGINE_SHARDS);
+        assert_eq!(stats.pending_runs, 0, "run retired");
+        assert_eq!(stats.queued_instances, 0, "queues drained");
+        assert_eq!(stats.instances_dispatched, 3, "2 gen + 1 sum");
+        assert!(stats.batch_dispatches >= 1 && stats.batch_dispatches <= 3);
+    }
+
     // ------------------------------------------------- queue-order units --
 
     fn inst(run: RunId, rid: ResourceId, class: Priority, deadline_ns: u64) -> Task {
@@ -1905,30 +2452,31 @@ dag:
         })
     }
 
-    fn fresh_queue() -> QueueState {
-        QueueState {
-            ready: std::collections::BTreeMap::new(),
-            deferred: std::collections::BTreeMap::new(),
-            in_use: HashMap::new(),
-            next_seq: 0,
-            since_batch: 0,
-            workers: 0,
-            busy: 0,
+    /// Push straight into one shard's ready queue, with the same key
+    /// assignment and counter bookkeeping as `enqueue`.
+    fn push(eng: &EngineCore, st: &mut DispatchState, t: Task) {
+        let seq = eng.next_seq.fetch_add(1, Ordering::SeqCst);
+        let key = QKey { class: t.class().rank(), deadline_ns: t.deadline_ns(), seq };
+        match &t {
+            Task::Instance(_) => {
+                eng.queued_instances.fetch_add(1, Ordering::SeqCst);
+            }
+            Task::Job { .. } => {
+                eng.queued_jobs.fetch_add(1, Ordering::SeqCst);
+            }
         }
-    }
-
-    fn push(q: &mut QueueState, t: Task) {
-        let key = QKey { class: t.class().rank(), deadline_ns: t.deadline_ns(), seq: q.next_seq };
-        q.next_seq += 1;
-        q.ready.insert(key, t);
+        if t.class() == Priority::Batch {
+            eng.queued_batch_class.fetch_add(1, Ordering::SeqCst);
+        }
+        st.ready.insert(key, t);
     }
 
     /// Pop one task and release its admission slot (simulates instant
     /// completion so admission never interferes with order checks).
-    fn pop_run(q: &mut QueueState) -> RunId {
-        match pop_task(q, 8) {
-            Popped::Task(Task::Instance(t)) => {
-                if let Some(n) = q.in_use.get_mut(&t.resource) {
+    fn pop_run(eng: &EngineCore, st: &mut DispatchState) -> RunId {
+        match eng.pop_task(st, 8) {
+            Some(Task::Instance(t)) => {
+                if let Some(n) = st.in_use.get_mut(&t.resource) {
                     *n = n.saturating_sub(1);
                 }
                 t.run
@@ -1939,53 +2487,62 @@ dag:
 
     #[test]
     fn pop_orders_by_class_then_deadline_then_submission() {
-        let mut q = fresh_queue();
+        let eng = EngineCore::new();
+        let mut st = eng.dispatch[0].state.lock().unwrap();
         // Submission order: batch, interactive (late deadline), realtime,
         // interactive (early deadline), interactive (no deadline).
-        push(&mut q, inst(0, 0, Priority::Batch, u64::MAX));
-        push(&mut q, inst(1, 1, Priority::Interactive, 2_000_000_000));
-        push(&mut q, inst(2, 2, Priority::Realtime, u64::MAX));
-        push(&mut q, inst(3, 3, Priority::Interactive, 1_000_000_000));
-        push(&mut q, inst(4, 4, Priority::Interactive, u64::MAX));
+        push(&eng, &mut st, inst(0, 0, Priority::Batch, u64::MAX));
+        push(&eng, &mut st, inst(1, 1, Priority::Interactive, 2_000_000_000));
+        push(&eng, &mut st, inst(2, 2, Priority::Realtime, u64::MAX));
+        push(&eng, &mut st, inst(3, 3, Priority::Interactive, 1_000_000_000));
+        push(&eng, &mut st, inst(4, 4, Priority::Interactive, u64::MAX));
         // Class first (realtime), then EDF within interactive (run 3 before
         // run 1), no-deadline interactive last of its class, batch last.
-        assert_eq!(pop_run(&mut q), 2, "realtime jumps the queue");
-        assert_eq!(pop_run(&mut q), 3, "earliest deadline first");
-        assert_eq!(pop_run(&mut q), 1);
-        assert_eq!(pop_run(&mut q), 4, "no deadline sorts after deadlines");
-        assert_eq!(pop_run(&mut q), 0, "batch drains last");
-        assert!(matches!(pop_task(&mut q, 8), Popped::Empty));
+        assert_eq!(pop_run(&eng, &mut st), 2, "realtime jumps the queue");
+        assert_eq!(pop_run(&eng, &mut st), 3, "earliest deadline first");
+        assert_eq!(pop_run(&eng, &mut st), 1);
+        assert_eq!(pop_run(&eng, &mut st), 4, "no deadline sorts after deadlines");
+        assert_eq!(pop_run(&eng, &mut st), 0, "batch drains last");
+        assert!(eng.pop_task(&mut st, 8).is_none());
+        assert_eq!(eng.queued_instances.load(Ordering::SeqCst), 0, "counters settled");
+        assert_eq!(eng.queued_batch_class.load(Ordering::SeqCst), 0);
     }
 
     #[test]
     fn same_key_fields_fall_back_to_submission_order() {
-        let mut q = fresh_queue();
+        let eng = EngineCore::new();
+        let mut st = eng.dispatch[0].state.lock().unwrap();
         for run in 0..5 {
-            push(&mut q, inst(run, run as ResourceId, Priority::Interactive, u64::MAX));
+            push(&eng, &mut st, inst(run, run as ResourceId, Priority::Interactive, u64::MAX));
         }
         for run in 0..5 {
-            assert_eq!(pop_run(&mut q), run, "FIFO within identical class/deadline");
+            assert_eq!(pop_run(&eng, &mut st), run, "FIFO within identical class/deadline");
         }
     }
 
     #[test]
     fn aging_guard_dispatches_batch_after_the_limit() {
-        let mut q = fresh_queue();
+        let eng = EngineCore::new();
+        let mut st = eng.dispatch[0].state.lock().unwrap();
         // One batch task waits while a steady interactive stream arrives.
-        push(&mut q, inst(1000, 99, Priority::Batch, u64::MAX));
+        push(&eng, &mut st, inst(1000, 99, Priority::Batch, u64::MAX));
         for i in 0..(2 * BATCH_AGE_LIMIT) {
-            push(&mut q, inst(i, i as ResourceId, Priority::Interactive, u64::MAX));
+            push(&eng, &mut st, inst(i, i as ResourceId, Priority::Interactive, u64::MAX));
         }
         let mut pops_before_batch = 0u64;
         loop {
-            let run = pop_run(&mut q);
+            let run = pop_run(&eng, &mut st);
             if run == 1000 {
                 break;
             }
             pops_before_batch += 1;
             // Keep the stream topped up so strict priority alone would
             // starve the batch task forever.
-            push(&mut q, inst(5000 + pops_before_batch, 7, Priority::Interactive, u64::MAX));
+            push(
+                &eng,
+                &mut st,
+                inst(5000 + pops_before_batch, 7, Priority::Interactive, u64::MAX),
+            );
             assert!(
                 pops_before_batch <= BATCH_AGE_LIMIT,
                 "batch task starved past the aging limit"
@@ -1995,6 +2552,36 @@ dag:
             pops_before_batch, BATCH_AGE_LIMIT,
             "batch dispatches exactly at the aging threshold"
         );
+    }
+
+    #[test]
+    fn flags_order_by_class_and_upgrade_in_place() {
+        // Flag three shards Batch-first, then upgrade one to Realtime: the
+        // coordination set must hand out the Realtime shard first, and the
+        // upgrade must replace (not duplicate) the old entry.
+        let eng = EngineCore::new();
+        {
+            let mut st = eng.dispatch[3].state.lock().unwrap();
+            // No free workers: the flag asks for a spawn (the counter is
+            // reserved; no thread is actually started in this unit test).
+            assert!(eng.flag_shard_locked(&mut st, 3, Priority::Batch.rank()));
+        }
+        {
+            let mut st = eng.dispatch[5].state.lock().unwrap();
+            eng.flag_shard_locked(&mut st, 5, Priority::Batch.rank());
+        }
+        {
+            let mut st = eng.dispatch[5].state.lock().unwrap();
+            assert!(
+                !eng.flag_shard_locked(&mut st, 5, Priority::Realtime.rank()),
+                "an upgrade re-keys the existing flag, it does not spawn"
+            );
+        }
+        let c = eng.coord.state.lock().unwrap();
+        assert_eq!(c.flags.len(), 2, "upgrade replaced the old flag");
+        let first = c.flags.iter().next().copied().unwrap();
+        assert_eq!(first.2, 5, "the realtime-flagged shard is served first");
+        assert_eq!(first.0, Priority::Realtime.rank());
     }
 
     #[test]
@@ -2052,6 +2639,11 @@ dag:
         let b0 = b.faas.submit_workflow_qos("chain", &entry_for("b0"), batch_qos).unwrap();
         let b1 = b.faas.submit_workflow_qos("chain", &entry_for("b1"), batch_qos).unwrap();
         let b2 = b.faas.submit_workflow_qos("chain", &entry_for("b2"), batch_qos).unwrap();
+        // The lone worker must have popped b0's first instance before the
+        // shed scan runs, or b0 is fully queued and becomes sheddable.
+        while b.faas.engine_stats().instances_dispatched == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
         // 3 pending batch runs: a 4th batch submission is refused...
         match b.faas.submit_workflow_qos("chain", &entry_for("b3"), batch_qos) {
             Err(EngineError::Saturated { pending_runs, max_pending_runs, .. }) => {
@@ -2081,6 +2673,70 @@ dag:
         }
         for id in [b0, b1, rt] {
             b.faas.wait_workflow(id, 30.0).unwrap();
+        }
+    }
+
+    #[test]
+    fn batch_window_coalesces_under_light_load() {
+        // Four single-stage runs on one unsaturated resource: without a
+        // window each dispatches alone; with one, the slot holder fills a
+        // batch of four. Virtual clock — the window loop must terminate on
+        // its wall-bounded wait even though now() never advances.
+        for (window_s, want_dispatches) in [(0.0f64, 4u64), (0.02, 1u64)] {
+            let b = paper_testbed(Arc::new(VirtualClock::new()));
+            b.executor.register("img/solo", |_: &[u8]| Ok(br#"{"outputs":[]}"#.to_vec()));
+            let yaml = "\
+application: solo
+entrypoint: f
+dag:
+  - name: f
+    affinity:
+      nodetype: iot
+      affinitytype: data
+    reduce: auto
+";
+            let mut data = HashMap::new();
+            data.insert("f".to_string(), vec![b.iot[0]]);
+            b.faas.configure_application(yaml, &data).unwrap();
+            b.faas
+                .deploy_function("solo", "f", &FunctionPackage { code: "img/solo".into() })
+                .unwrap();
+            // 1 worker; 2 slots = light load (the non-window path must not
+            // coalesce below the admission limit).
+            b.faas.set_engine_limits(1, 2);
+            b.faas.set_batch_window(window_s);
+            assert!((b.faas.batch_window() - window_s).abs() < 1e-9);
+            // Park the lone worker on a gated job so all four runs queue
+            // before any dispatch decision — deterministic under any clock.
+            let gate = Arc::new((Mutex::new(false), Condvar::new()));
+            {
+                let gate = Arc::clone(&gate);
+                b.faas.spawn_job(move |_| {
+                    let (lock, cv) = &*gate;
+                    let mut open = lock.lock().unwrap();
+                    while !*open {
+                        open = cv.wait(open).unwrap();
+                    }
+                });
+            }
+            let ids: Vec<RunId> = (0..4)
+                .map(|_| b.faas.submit_workflow("solo", &HashMap::new()).unwrap())
+                .collect();
+            {
+                let (lock, cv) = &*gate;
+                *lock.lock().unwrap() = true;
+                cv.notify_all();
+            }
+            for id in ids {
+                b.faas.wait_workflow(id, 30.0).unwrap();
+            }
+            let stats = b.faas.engine_stats();
+            assert_eq!(stats.instances_dispatched, 4, "window={window_s}");
+            assert_eq!(
+                stats.batch_dispatches, want_dispatches,
+                "window={window_s}: the window must decide whether the four \
+                 instances coalesce"
+            );
         }
     }
 }

@@ -31,6 +31,9 @@
 //! DELETE /apps/{app}/objects/{bucket}/{obj...}   delete_object
 //! GET    /apps/{app}/objects/{bucket}   list_objects
 //! GET    /resources                     resource ids
+//! GET    /engine/stats                  engine counters: shards, pending
+//!                                       runs, queue depth, worker pool,
+//!                                       dispatch statistics
 //! GET    /healthz
 //! ```
 
@@ -178,6 +181,20 @@ impl Handler for EdgeFaasGateway {
         let segs_ref: Vec<&str> = segs.iter().map(String::as_str).collect();
         match (req.method.as_str(), segs_ref.as_slice()) {
             ("GET", ["healthz"]) => Response::text(200, "ok"),
+            ("GET", ["engine", "stats"]) => {
+                let s = self.faas.engine_stats();
+                let mut o = Json::obj();
+                o.set("shards", (s.shards as u64).into())
+                    .set("pending_runs", (s.pending_runs as u64).into())
+                    .set("queued_instances", (s.queued_instances as u64).into())
+                    .set("workers", (s.workers as u64).into())
+                    .set("busy_workers", (s.busy_workers as u64).into())
+                    .set("batch_dispatches", s.batch_dispatches.into())
+                    .set("instances_dispatched", s.instances_dispatched.into())
+                    .set("batching", self.faas.batching_enabled().into())
+                    .set("batch_window_s", self.faas.batch_window().into());
+                Response::json(200, &o)
+            }
             ("GET", ["resources"]) => {
                 let ids = self.faas.resource_ids();
                 Response::json(
@@ -384,6 +401,20 @@ mod tests {
         assert_eq!(http::get(&addr, "/healthz").unwrap().status, 200);
         let v = http::get(&addr, "/resources").unwrap().json_body().unwrap();
         assert_eq!(v.as_arr().unwrap().len(), 11);
+    }
+
+    #[test]
+    fn engine_stats_over_rest() {
+        let (server, bed) = served();
+        let addr = server.addr();
+        let v = http::get(&addr, "/engine/stats").unwrap().json_body().unwrap();
+        assert_eq!(
+            v.get("shards").unwrap().as_u64().unwrap(),
+            bed.faas.engine_shards() as u64
+        );
+        assert_eq!(v.get("pending_runs").unwrap().as_u64(), Some(0));
+        assert_eq!(v.get("batching").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("batch_window_s").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]

@@ -167,6 +167,10 @@ impl ResourceHandle for LocalHandle {
 }
 
 /// Loopback-HTTP handle: the full REST wire path.
+///
+/// Construct with [`HttpHandle::new`]: the handle carries a private peer
+/// capability cache alongside the address fields, so struct-literal
+/// construction (possible in older revisions) no longer compiles.
 pub struct HttpHandle {
     /// OpenFaaS-style gateway address (host:port).
     pub faas_addr: String,
@@ -177,6 +181,32 @@ pub struct HttpHandle {
     pub secret_key: String,
     /// Prometheus endpoint ("" = no monitoring; usage() returns default).
     pub prometheus_addr: String,
+    /// Peer capability cache: cleared the first time the gateway refuses
+    /// the binary `_batch` frame format pre-execution (a JSON-only peer),
+    /// so later batches skip the doomed binary round trip instead of
+    /// shipping every payload twice.
+    binary_batch_ok: std::sync::atomic::AtomicBool,
+}
+
+impl HttpHandle {
+    pub fn new(
+        faas_addr: impl Into<String>,
+        pwd: impl Into<String>,
+        minio_addr: impl Into<String>,
+        access_key: impl Into<String>,
+        secret_key: impl Into<String>,
+        prometheus_addr: impl Into<String>,
+    ) -> HttpHandle {
+        HttpHandle {
+            faas_addr: faas_addr.into(),
+            pwd: pwd.into(),
+            minio_addr: minio_addr.into(),
+            access_key: access_key.into(),
+            secret_key: secret_key.into(),
+            prometheus_addr: prometheus_addr.into(),
+            binary_batch_ok: std::sync::atomic::AtomicBool::new(true),
+        }
+    }
 }
 
 impl ResourceHandle for HttpHandle {
@@ -201,28 +231,44 @@ impl ResourceHandle for HttpHandle {
     }
 
     fn invoke_batch(&self, calls: &[(String, Bytes)]) -> Vec<anyhow::Result<(Bytes, f64)>> {
-        // One wire round trip when the payloads are text (the engine's JSON
-        // envelopes always are). Per-call fallback happens only when the
-        // batch verifiably did NOT execute: binary payloads (refused here,
-        // before any wire traffic) or a pre-execution refusal from the
-        // gateway (`Ok(None)`: 404/400, e.g. a gateway without the verb).
-        // Ambiguous failures — transport/parse errors after the gateway may
-        // have executed the batch — fail every entry instead of retrying,
-        // so non-idempotent handlers never run twice.
-        if calls.iter().all(|(_, p)| std::str::from_utf8(p).is_ok()) {
-            match faas_client::invoke_batch(&self.faas_addr, calls) {
-                Ok(Some(results)) => return results,
-                Ok(None) => {} // gateway refused pre-execution: fall back
-                Err(e) => {
-                    let msg = e.to_string();
-                    return calls
-                        .iter()
-                        .map(|_| Err(anyhow::anyhow!("batch invoke failed: {}", msg.clone())))
-                        .collect();
+        // One wire round trip: the length-prefixed binary frame format
+        // (raw payloads/outputs — binary data travels at 1x instead of the
+        // JSON leg's 2x hex), downgrading to the JSON format for old
+        // peers. A peer's pre-execution refusal of the binary frames is
+        // cached (`binary_batch_ok`), so a JSON-only gateway costs the
+        // double round trip exactly once, not on every batch. Fallbacks
+        // happen only when the batch verifiably did NOT execute
+        // (`Refused` = pre-execution rejection); ambiguous failures —
+        // transport/parse errors after the gateway may have executed the
+        // batch — fail every entry instead of retrying, so non-idempotent
+        // handlers never run twice.
+        use crate::cluster::gateway::client::BatchAttempt;
+        use std::sync::atomic::Ordering;
+        let fail_all = |e: anyhow::Error| -> Vec<anyhow::Result<(Bytes, f64)>> {
+            let msg = e.to_string();
+            calls
+                .iter()
+                .map(|_| Err(anyhow::anyhow!("batch invoke failed: {}", msg.clone())))
+                .collect()
+        };
+        if self.binary_batch_ok.load(Ordering::Relaxed) {
+            match faas_client::invoke_batch_binary(&self.faas_addr, calls) {
+                Ok(BatchAttempt::Ran(results)) => return results,
+                Ok(BatchAttempt::Refused) => {
+                    self.binary_batch_ok.store(false, Ordering::Relaxed);
                 }
+                Err(e) => return fail_all(e),
             }
         }
-        calls.iter().map(|(name, payload)| self.invoke(name, payload)).collect()
+        match faas_client::invoke_batch_json(&self.faas_addr, calls) {
+            Ok(BatchAttempt::Ran(results)) => results,
+            // Both legs refused pre-execution (e.g. binary payloads
+            // against a JSON-only peer): per-call invokes.
+            Ok(BatchAttempt::Refused) => {
+                calls.iter().map(|(name, payload)| self.invoke(name, payload)).collect()
+            }
+            Err(e) => fail_all(e),
+        }
     }
 
     fn list(&self) -> anyhow::Result<Vec<String>> {

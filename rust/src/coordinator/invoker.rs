@@ -7,8 +7,11 @@
 //! placements, and as instances complete (notify_finish), dependents whose
 //! dependencies are all done fire next. The DAG walk itself lives in
 //! [`super::engine`]; [`EdgeFaaS::run_workflow`] is submit + await, so a
-//! synchronous caller shares the run queue, worker pool and per-resource
-//! admission limits with every other in-flight run.
+//! synchronous caller shares the dispatch queues, worker pool and
+//! per-resource admission limits with every other in-flight run. Awaiting
+//! parks on the run's own run-table shard (see [`super::engine`]'s
+//! "Sharding & wakeups"), so N synchronous callers never form a
+//! thundering herd on one condvar.
 //!
 //! Data flows by object URL: every function instance receives an envelope
 //!

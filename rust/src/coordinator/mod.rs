@@ -24,14 +24,18 @@
 //!
 //! Every invocation path — synchronous workflow runs, asynchronous function
 //! calls, and the REST gateway's `run`/`runs` endpoints — submits through
-//! the single [`engine`] core, which owns the QoS-ordered run queue of
-//! in-flight workflows (priority class, earliest-deadline-first, aging;
+//! the single [`engine`] core, which owns the QoS-ordered dispatch queues
+//! of in-flight workflows (priority class, earliest-deadline-first, aging;
 //! see [`engine`]'s module docs), fires DAG nodes as dependency-completion
 //! events, enforces per-resource admission limits, and applies
 //! backpressure — shedding `Batch`-class work first — once its queue
-//! bounds are reached. The engine is clock-generic: the same dispatch code
-//! runs under wall-clock time (examples, gateways) and simnet virtual time
-//! (figure benches).
+//! bounds are reached. The engine's hot path is sharded: per-resource
+//! dispatch queues and a hash-sharded run table (each shard its own lock +
+//! condvar, global invariants in atomics) with targeted wakeups through a
+//! small coordination set, so unrelated runs and resources never contend
+//! (see [`engine`]'s "Sharding & wakeups"). The engine is clock-generic:
+//! the same dispatch code runs under wall-clock time (examples, gateways)
+//! and simnet virtual time (figure benches).
 //!
 //! The coordinator sees resources only through the [`handle::ResourceHandle`]
 //! trait, so the same scheduling/placement code runs against in-process
@@ -52,7 +56,10 @@ pub mod storage;
 
 pub use asyncinvoke::{AsyncStatus, AsyncTracker, InvocationId};
 pub use appconfig::{Affinity, AffinityType, AppConfig, FunctionConfig, Reduce, Requirements};
-pub use engine::{EngineError, EngineEvent, Priority, QoS, RunId, RunStatus, WaitError};
+pub use engine::{
+    EngineError, EngineEvent, EngineStats, Priority, QoS, RunId, RunStatus, WaitError,
+    ENGINE_SHARDS,
+};
 pub use handle::{LocalHandle, ResourceHandle};
 pub use invoker::{InstanceResult, WorkflowResult};
 pub use resource::{EdgeFaaS, ResourceId};

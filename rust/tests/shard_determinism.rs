@@ -1,0 +1,270 @@
+//! Determinism of the sharded engine hot path: sharding is a pure
+//! concurrency-structure change, so a mixed-QoS submission sequence must
+//! produce byte-identical outputs and firing orders at every shard count —
+//! `{1, 4, 16}` (1 = the old single-lock layout, 16 = fully sharded) —
+//! under both the wall clock and the simnet virtual clock, with
+//! per-resource invocation batching on and off, for both paper workflows.
+//!
+//! Also the ISSUE's starvation regression at shards=16: strict priority
+//! plus per-shard queues must not let a Realtime run starve 64 Batch runs
+//! (work conservation via the dispatch-count aging guard), nor the Batch
+//! backlog delay the Realtime run behind it.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Condvar, Mutex};
+
+use edgefaas::coordinator::appconfig::{federated_learning_yaml, video_pipeline_yaml};
+use edgefaas::coordinator::functions::FunctionPackage;
+use edgefaas::coordinator::{Priority, QoS, ResourceId, RunId, WorkflowResult, ENGINE_SHARDS};
+use edgefaas::simnet::{Clock, RealClock, VirtualClock};
+use edgefaas::testbed::{paper_testbed, TestBed};
+use edgefaas::util::json::Json;
+
+const BUCKET: &str = "stub";
+
+/// Deterministic stub handlers: each stage writes one object named after
+/// (stage, resource, input count) whose content is the sorted basenames of
+/// its inputs — outputs depend only on routing, never on timing.
+fn register_stubs(bed: &TestBed, app: &'static str, stages: &[&str]) {
+    for stage in stages {
+        let faas = Arc::clone(&bed.faas);
+        let stage_name = stage.to_string();
+        bed.executor.register(&format!("img/stub-{stage}"), move |payload: &[u8]| {
+            let v = edgefaas::util::json::parse(std::str::from_utf8(payload)?)?;
+            let rid = v.get("resource").unwrap().as_u64().unwrap();
+            let inputs: Vec<String> = v
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|u| u.as_str().map(String::from))
+                .collect();
+            let mut names: Vec<String> = inputs
+                .iter()
+                .map(|u| u.rsplit('/').next().unwrap_or("?").to_string())
+                .collect();
+            names.sort();
+            let obj = format!("{stage_name}-{rid}-n{}.bin", inputs.len());
+            let url = faas.put_object(app, BUCKET, &obj, names.join(",").as_bytes())?;
+            let mut out = Json::obj();
+            out.set("outputs", Json::Arr(vec![Json::Str(url.to_string())]));
+            Ok(out.to_string().into_bytes())
+        });
+    }
+}
+
+fn stub_packages(stages: &[&str]) -> HashMap<String, FunctionPackage> {
+    stages
+        .iter()
+        .map(|s| (s.to_string(), FunctionPackage { code: format!("img/stub-{s}") }))
+        .collect()
+}
+
+/// Timing-independent projection of a result: function -> per-instance
+/// (resource, outputs), in placement order.
+fn normalized(result: &WorkflowResult) -> BTreeMap<String, Vec<(ResourceId, Vec<String>)>> {
+    result
+        .functions
+        .iter()
+        .map(|(k, v)| (k.clone(), v.iter().map(|i| (i.resource, i.outputs.clone())).collect()))
+        .collect()
+}
+
+/// The mixed-QoS submission sequence: classes cycle Batch → Interactive →
+/// Realtime, with a far-future (never missed) deadline on every third run.
+fn mixed_qos(i: usize) -> QoS {
+    let classes = [Priority::Batch, Priority::Interactive, Priority::Realtime];
+    let mut qos = QoS::class(classes[i % 3]);
+    if i % 3 == 1 {
+        qos = qos.with_deadline(1e6 + i as f64);
+    }
+    qos
+}
+
+/// Run 6 mixed-QoS runs of one workflow on a fresh paper testbed at the
+/// given shard count; returns per-run (firing_order, normalized outputs)
+/// in submission order.
+#[allow(clippy::too_many_arguments)]
+fn run_sharded(
+    clock: Arc<dyn Clock>,
+    yaml: &str,
+    app: &'static str,
+    stages: &[&str],
+    data_fn: &str,
+    data_of: impl Fn(&TestBed) -> Vec<ResourceId>,
+    shards: usize,
+    batching: bool,
+) -> Vec<(Vec<String>, BTreeMap<String, Vec<(ResourceId, Vec<String>)>>)> {
+    let bed = paper_testbed(clock);
+    bed.faas.set_engine_shards(shards);
+    assert_eq!(bed.faas.engine_shards(), shards);
+    register_stubs(&bed, app, stages);
+    bed.faas.set_batching(batching);
+    // Tight admission (2 slots per resource) makes instances queue — the
+    // regime where dispatch order and batching could diverge if sharding
+    // were not transparent.
+    bed.faas.set_engine_limits(8, 2);
+    bed.faas.create_bucket(app, BUCKET, Some(bed.edges[0])).unwrap();
+    let mut data = HashMap::new();
+    data.insert(data_fn.to_string(), data_of(&bed));
+    bed.faas.configure_application(yaml, &data).unwrap();
+    bed.faas.deploy_application(app, &stub_packages(stages)).unwrap();
+    let ids: Vec<RunId> = (0..6)
+        .map(|i| bed.faas.submit_workflow_qos(app, &HashMap::new(), mixed_qos(i)).unwrap())
+        .collect();
+    ids.into_iter()
+        .map(|id| {
+            let r = bed.faas.wait_workflow(id, 120.0).unwrap();
+            (r.firing_order.clone(), normalized(&r))
+        })
+        .collect()
+}
+
+fn assert_shard_invariant(
+    yaml: &str,
+    app: &'static str,
+    stages: &[&str],
+    data_fn: &str,
+    data_of: impl Fn(&TestBed) -> Vec<ResourceId> + Copy,
+) {
+    assert_eq!(ENGINE_SHARDS, 16, "the sweep's top count is the physical shard count");
+    for (label, clock_of) in [
+        ("wall", (|| Arc::new(RealClock::new()) as Arc<dyn Clock>) as fn() -> Arc<dyn Clock>),
+        ("virtual", || Arc::new(VirtualClock::new()) as Arc<dyn Clock>),
+    ] {
+        for batching in [true, false] {
+            let reference =
+                run_sharded(clock_of(), yaml, app, stages, data_fn, data_of, 1, batching);
+            for (i, (firing, _)) in reference.iter().enumerate() {
+                assert_eq!(
+                    firing,
+                    &stages.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+                    "{app}/{label}/batching={batching}: run {i} fired out of order at shards=1"
+                );
+            }
+            for shards in [4usize, 16] {
+                let got = run_sharded(
+                    clock_of(),
+                    yaml,
+                    app,
+                    stages,
+                    data_fn,
+                    data_of,
+                    shards,
+                    batching,
+                );
+                assert_eq!(
+                    got, reference,
+                    "{app}/{label}/batching={batching}: outputs or firing orders diverged \
+                     between shards=1 and shards={shards}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn video_workflow_is_shard_count_invariant() {
+    assert_shard_invariant(
+        video_pipeline_yaml(),
+        "videopipeline",
+        &edgefaas::workflows::video::STAGES,
+        "video-generator",
+        |bed| vec![bed.iot[0], bed.iot[1]],
+    );
+}
+
+#[test]
+fn fl_workflow_is_shard_count_invariant() {
+    assert_shard_invariant(
+        federated_learning_yaml(),
+        "federatedlearning",
+        &["train", "firstaggregation", "secondaggregation"],
+        "train",
+        |bed| bed.iot.clone(),
+    );
+}
+
+// ------------------------------------------------ starvation at shards=16
+
+const CHAIN_YAML: &str = "\
+application: chain
+entrypoint: gen
+dag:
+  - name: gen
+    affinity:
+      nodetype: iot
+      affinitytype: data
+    reduce: auto
+  - name: sum
+    dependencies: gen
+    affinity:
+      nodetype: edge
+      affinitytype: function
+    reduce: 1
+";
+
+/// The ISSUE's starvation regression at the full shard count: 64 Batch
+/// runs plus one Realtime run, a single worker, gated handlers so queue
+/// state is deterministic. The Realtime run must complete before every
+/// Batch run even though its work is spread over per-resource shards, and
+/// every Batch run must still complete (the aging guard keeps the class
+/// work-conserving).
+#[test]
+fn realtime_beats_64_batch_runs_at_16_shards_and_batch_still_drains() {
+    let bed = paper_testbed(Arc::new(VirtualClock::new()));
+    bed.faas.set_engine_shards(16);
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    for stage in ["gen", "sum"] {
+        let gate = Arc::clone(&gate);
+        bed.executor.register(&format!("img/{stage}"), move |_: &[u8]| {
+            let (lock, cv) = &*gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            Ok(br#"{"outputs":[]}"#.to_vec())
+        });
+    }
+    let mut data = HashMap::new();
+    data.insert("gen".to_string(), vec![bed.iot[0], bed.iot[1]]);
+    bed.faas.configure_application(CHAIN_YAML, &data).unwrap();
+    bed.faas.deploy_function("chain", "gen", &FunctionPackage { code: "img/gen".into() }).unwrap();
+    bed.faas.deploy_function("chain", "sum", &FunctionPackage { code: "img/sum".into() }).unwrap();
+    bed.faas.set_engine_limits(1, 8);
+
+    let completions: Arc<Mutex<Vec<RunId>>> = Arc::new(Mutex::new(Vec::new()));
+    {
+        let completions = Arc::clone(&completions);
+        bed.faas.on_engine_event(move |_, ev| {
+            if let edgefaas::coordinator::EngineEvent::RunCompleted { run, .. } = ev {
+                completions.lock().unwrap().push(*run);
+            }
+        });
+    }
+
+    let batch_ids: Vec<RunId> = (0..64)
+        .map(|_| {
+            bed.faas
+                .submit_workflow_qos("chain", &HashMap::new(), QoS::class(Priority::Batch))
+                .unwrap()
+        })
+        .collect();
+    let rt = bed
+        .faas
+        .submit_workflow_qos("chain", &HashMap::new(), QoS::class(Priority::Realtime))
+        .unwrap();
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    bed.faas.wait_workflow(rt, 60.0).unwrap();
+    for id in &batch_ids {
+        bed.faas.wait_workflow(*id, 120.0).unwrap();
+    }
+    let order = completions.lock().unwrap();
+    assert_eq!(order[0], rt, "the realtime run must complete before every batch run");
+    assert_eq!(order.len(), 65, "all 64 batch runs still complete");
+}
