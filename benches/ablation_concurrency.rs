@@ -35,17 +35,36 @@
 //!    `BENCH_CONTENTION_OUT`). Non-smoke asserts >= 1.5x runs/sec at 64
 //!    concurrent runs for shards=16 over the shards=1 baseline.
 //!
+//! 6. **Control plane (schedule rate)**: `schedule_function` calls/sec and
+//!    per-call p50/p95 at 16/64/256 registered resources, three modes on
+//!    one bed — per-call `/metrics` scrape (the pre-snapshot baseline,
+//!    every decision does O(resources) loopback-HTTP scrapes), the
+//!    monitoring snapshot plane (decisions are pure in-memory reads), and
+//!    the placement decision cache on top. Written to
+//!    `BENCH_schedule.json` (override with `BENCH_SCHEDULE_OUT`).
+//!    Non-smoke asserts >= 5x snapshot-vs-scrape calls/sec at 64
+//!    resources.
+//!
 //! `ABLATION_SMOKE=1` runs a tiny-N smoke pass (CI): only the hot-path,
-//! mixed-QoS and contention sections, no throughput assertions, but all
-//! three JSON artifacts are still produced.
+//! mixed-QoS, contention and control-plane sections, no throughput
+//! assertions, but all four JSON artifacts are still produced.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use edgefaas::backup::DurableKv;
 use edgefaas::bench_harness::{measure, Stats, Table};
+use edgefaas::cluster::spec::ResourceSpec;
 use edgefaas::coordinator::functions::FunctionPackage;
-use edgefaas::coordinator::{Priority, QoS, RunId, ENGINE_SHARDS};
-use edgefaas::simnet::{Clock, RealClock, VirtualClock};
+use edgefaas::coordinator::scheduler::FunctionCreation;
+use edgefaas::coordinator::{
+    Affinity, AffinityType, EdgeFaaS, FunctionConfig, Priority, QoS, Reduce, Requirements,
+    ResourceHandle, RunId, ENGINE_SHARDS,
+};
+use edgefaas::monitor::scrape::MetricsGateway;
+use edgefaas::monitor::{MetricsRegistry, ResourceUsage};
+use edgefaas::simnet::topology::mbps;
+use edgefaas::simnet::{Clock, RealClock, Tier, Topology, VirtualClock};
 use edgefaas::testbed::{paper_testbed, TestBed};
 use edgefaas::util::bytes::Bytes;
 use edgefaas::util::json::Json;
@@ -179,6 +198,104 @@ fn realtime_latency(bed: &TestBed, backlog: usize) -> f64 {
         bed.faas.wait_workflow(id, 120.0).unwrap();
     }
     latency
+}
+
+/// Section 6: a handle whose `usage()` is a real loopback-HTTP Prometheus
+/// scrape — the per-resource monitoring round trip the snapshot plane
+/// amortizes. Scheduling never touches the other verbs.
+struct ScrapeHandle {
+    addr: String,
+}
+
+impl ResourceHandle for ScrapeHandle {
+    fn deploy(
+        &self,
+        _name: &str,
+        _image: &str,
+        _memory: u64,
+        _gpus: u32,
+        _labels: &[(String, String)],
+    ) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn remove(&self, _name: &str) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn invoke(&self, _name: &str, _payload: &Bytes) -> anyhow::Result<(Bytes, f64)> {
+        anyhow::bail!("control-plane bench never invokes")
+    }
+    fn list(&self) -> anyhow::Result<Vec<String>> {
+        Ok(vec![])
+    }
+    fn describe(&self, _name: &str) -> anyhow::Result<Json> {
+        anyhow::bail!("unused")
+    }
+    fn usage(&self) -> anyhow::Result<ResourceUsage> {
+        edgefaas::monitor::scrape::scrape(&self.addr)
+    }
+    fn make_bucket(&self, _bucket: &str) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn remove_bucket(&self, _bucket: &str) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn put_object(&self, _bucket: &str, _object: &str, _data: Bytes) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn get_object(&self, _bucket: &str, _object: &str) -> anyhow::Result<Bytes> {
+        anyhow::bail!("unused")
+    }
+    fn remove_object(&self, _bucket: &str, _object: &str) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn list_objects(&self, _bucket: &str) -> anyhow::Result<Vec<String>> {
+        Ok(vec![])
+    }
+    fn stored_bytes(&self) -> anyhow::Result<u64> {
+        Ok(0)
+    }
+}
+
+/// Section 6: a coordinator with `n` IoT resources on a star topology
+/// (edge hub, distinct leaf latencies) whose monitoring endpoint is a real
+/// scrape of `addr`, plus a data-affinity request anchored at the first
+/// resource — phase 1 consults all `n` resources per decision.
+fn schedule_bed(n: usize, addr: &str) -> (Arc<EdgeFaaS>, FunctionCreation) {
+    let mut topo = Topology::new();
+    let hub = topo.add_node("hub", Tier::Edge);
+    let mut leaves = Vec::new();
+    for i in 0..n {
+        let leaf = topo.add_node(format!("iot-{i}"), Tier::Iot);
+        topo.add_link(leaf, hub, 0.001 + i as f64 * 1e-4, mbps(100.0));
+        leaves.push(leaf);
+    }
+    let faas = Arc::new(EdgeFaaS::with_parts(
+        topo,
+        DurableKv::ephemeral(),
+        Arc::new(RealClock::new()),
+    ));
+    let mut first = 0;
+    for (i, leaf) in leaves.into_iter().enumerate() {
+        let spec = ResourceSpec::paper_iot(&format!("pi{i}:8080"));
+        let handle = Arc::new(ScrapeHandle { addr: addr.to_string() });
+        let id = faas.register(spec, handle, leaf).unwrap();
+        if i == 0 {
+            first = id;
+        }
+    }
+    let request = FunctionCreation {
+        app: "ctl".into(),
+        function: FunctionConfig {
+            name: "probe".into(),
+            dependencies: vec![],
+            requirements: Requirements::default(),
+            affinity: Affinity { nodetype: Tier::Iot, affinitytype: AffinityType::Data },
+            reduce: Reduce::One,
+        },
+        data_locations: vec![first],
+        dep_locations: vec![],
+    };
+    (faas, request)
 }
 
 fn stats_json(s: &Stats) -> Json {
@@ -441,6 +558,113 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_contention.json".to_string());
     std::fs::write(&contention_path, cdoc.to_string()).expect("write contention bench json");
     println!("wrote {contention_path}");
+
+    // ---- Section 6: control plane — schedule rate on the snapshot plane. ----
+    let levels_s: Vec<usize> = if smoke { vec![8] } else { vec![16, 64, 256] };
+    let registry = Arc::new(MetricsRegistry::new());
+    registry.record_usage(&ResourceUsage {
+        cpu_frac: 0.1,
+        mem_used: 1 << 30,
+        mem_total: 8 << 30,
+        io_bytes_per_s: 0.0,
+        gpu_frac: 0.0,
+        gpus_used: 0,
+        gpus_total: 0,
+    });
+    let metrics_server = MetricsGateway::serve(Arc::clone(&registry)).expect("metrics gateway");
+    let metrics_addr = metrics_server.addr();
+    let mut ts = Table::new(
+        "Control plane: schedule_function — per-call scrape vs snapshot plane vs decision cache",
+        &["resources", "scrape calls/s", "snapshot calls/s", "cached calls/s", "snapshot speedup"],
+    );
+    // (resources, scrape stats, snapshot stats, cached stats, speedup)
+    let mut sched_rows: Vec<(usize, Stats, Stats, Stats, f64)> = Vec::new();
+    for &n in &levels_s {
+        let (faas, request) = schedule_bed(n, &metrics_addr);
+        // Baseline: empty snapshot, cache off — every decision scrapes all
+        // n resources over loopback HTTP (the pre-snapshot behaviour).
+        faas.set_schedule_cache(false);
+        let scrape = measure(1, if smoke { 5 } else { 20 }, || {
+            faas.schedule_function(&request).unwrap();
+        });
+        // Snapshot plane: one refresh, then decisions are in-memory reads
+        // (a generous max_age keeps the samples fresh for the whole run).
+        faas.set_snapshot_max_age(1e9);
+        faas.refresh_monitor_snapshot();
+        let reps_mem = if smoke { 50 } else { 500 };
+        let snapshot = measure(5, reps_mem, || {
+            faas.schedule_function(&request).unwrap();
+        });
+        // Decision cache on top: repeats of an identical request are hits.
+        faas.set_schedule_cache(true);
+        let cached = measure(5, reps_mem, || {
+            faas.schedule_function(&request).unwrap();
+        });
+        let speedup = scrape.mean / snapshot.mean;
+        ts.row(&[
+            n.to_string(),
+            format!("{:.0}", 1.0 / scrape.mean),
+            format!("{:.0}", 1.0 / snapshot.mean),
+            format!("{:.0}", 1.0 / cached.mean),
+            format!("{speedup:.1}x"),
+        ]);
+        sched_rows.push((n, scrape, snapshot, cached, speedup));
+    }
+    ts.print();
+    println!("\n-> the snapshot plane removes O(resources) scrape RTTs from every decision;");
+    println!("   the cache removes the remaining phase-1/phase-2 work for repeats.");
+    let speedup_level = if smoke { levels_s[0] } else { 64 };
+    let schedule_speedup = sched_rows
+        .iter()
+        .find(|(n, ..)| *n == speedup_level)
+        .map(|(_, _, _, _, s)| *s)
+        .unwrap_or(f64::NAN);
+    let mut sdoc = Json::obj();
+    let mut series = Vec::new();
+    for (n, scrape, snapshot, cached, speedup) in &sched_rows {
+        let mode = |s: &Stats| {
+            let mut o = stats_json(s);
+            o.set("calls_per_s", (1.0 / s.mean).into());
+            o
+        };
+        let mut o = Json::obj();
+        o.set("resources", (*n as u64).into())
+            .set("scrape", mode(scrape))
+            .set("snapshot", mode(snapshot))
+            .set("cached", mode(cached))
+            .set("speedup_snapshot_vs_scrape", (*speedup).into());
+        series.push(o);
+    }
+    sdoc.set("bench", "schedule".into())
+        .set("clock", "real".into())
+        .set("smoke", smoke.into())
+        .set("levels", Json::Arr(levels_s.iter().map(|&n| Json::Num(n as f64)).collect()))
+        .set("series", Json::Arr(series))
+        .set("speedup_level", (speedup_level as u64).into())
+        .set("speedup_snapshot_vs_scrape", schedule_speedup.into());
+    let schedule_path = std::env::var("BENCH_SCHEDULE_OUT")
+        .unwrap_or_else(|_| "BENCH_schedule.json".to_string());
+    std::fs::write(&schedule_path, sdoc.to_string()).expect("write schedule bench json");
+    println!("wrote {schedule_path} (snapshot speedup at {speedup_level} resources: {schedule_speedup:.1}x)");
+    drop(metrics_server);
+
+    if !smoke {
+        assert!(
+            schedule_speedup >= 5.0,
+            "the snapshot plane must beat per-call scraping at {speedup_level} registered \
+             resources: scrape {:.0}/s snapshot {:.0}/s ({schedule_speedup:.2}x < 5x)",
+            sched_rows
+                .iter()
+                .find(|(n, ..)| *n == speedup_level)
+                .map(|(_, s, ..)| 1.0 / s.mean)
+                .unwrap_or(f64::NAN),
+            sched_rows
+                .iter()
+                .find(|(n, ..)| *n == speedup_level)
+                .map(|(_, _, s, ..)| 1.0 / s.mean)
+                .unwrap_or(f64::NAN),
+        );
+    }
 
     if !smoke {
         assert!(

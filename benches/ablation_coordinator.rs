@@ -86,6 +86,10 @@ fn main() {
         data_locations: bed.iot.clone(),
         dep_locations: vec![],
     };
+    // Measure the full two-phase path: the decision cache would turn these
+    // identical repeats into hits (bench §6 of ablation_concurrency covers
+    // the cached/snapshot modes).
+    faas.set_schedule_cache(false);
     let s = measure(50, 1000, || {
         faas.schedule_function(&req).unwrap();
     });

@@ -17,17 +17,26 @@
 //! §3.1.2 + the NanoLambda comparison (§6: NanoLambda "does not follow the
 //! dynamic changes of system loads ... to reschedule functions" — implying
 //! EdgeFaaS does): [`EdgeFaaS::reschedule_function`] re-runs the two-phase
-//! scheduler against *current* monitoring data and migrates deployments
-//! whose placement changed.
+//! scheduler against *current* monitoring data (it bypasses the placement
+//! decision cache) and migrates deployments whose placement changed.
+//!
+//! [`EdgeFaaS::enable_auto_reschedule`] closes the loop automatically: an
+//! `on_engine_event` subscriber keeps a per-`(function, resource)` latency
+//! EWMA from `NodeCompleted` events and reacts to `DeadlineMissed`,
+//! migrating a hot function through `reschedule_function` — rate-limited
+//! per function, decided off the monitoring snapshot, and never touching
+//! an executing instance (migration is deployment-level make-before-break:
+//! future firings go to the new placement; in-flight invocations complete
+//! where they started).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::util::bytes::Bytes;
 use crate::util::json::Json;
 
-use super::engine::QoS;
+use super::engine::{EngineEvent, Priority, QoS};
 use super::functions::FunctionPackage;
 use super::resource::{EdgeFaaS, ResourceId};
 use super::scheduler::FunctionCreation;
@@ -146,6 +155,11 @@ impl EdgeFaaS {
     /// monitoring data; if the placement changed, deploy on the new
     /// resources and remove from the abandoned ones. Returns
     /// `(old, new)` placements.
+    ///
+    /// Bypasses the placement decision cache — an explicit reschedule must
+    /// observe current load, not a memoized decision — and drops any
+    /// cached entries afterwards so later `schedule_function` calls cannot
+    /// resurrect the pre-migration placement.
     pub fn reschedule_function(
         &self,
         app: &str,
@@ -171,10 +185,11 @@ impl EdgeFaaS {
             data_locations,
             dep_locations,
         };
-        let new = self.schedule_function(&request)?;
+        let new = self.schedule_function_uncached(&request)?;
         if new == old {
             return Ok((old.clone(), new));
         }
+        self.invalidate_schedule_cache();
         let qname = Self::qualified(app, function);
         // Deploy on newly-chosen resources first (make-before-break), then
         // remove from the abandoned ones.
@@ -207,6 +222,198 @@ fn request_memory(faas: &EdgeFaaS, app: &str, function: &str) -> anyhow::Result<
         .function(function)
         .map(|f| f.requirements.memory)
         .unwrap_or(128 << 20))
+}
+
+/// Configuration of the automatic reschedule policy
+/// ([`EdgeFaaS::enable_auto_reschedule`]).
+#[derive(Debug, Clone, Copy)]
+pub struct AutoRescheduleConfig {
+    /// EWMA smoothing factor in (0, 1]: weight of the newest sample.
+    pub alpha: f64,
+    /// Migrate a function once any of its placements' latency EWMA
+    /// exceeds this (seconds). `INFINITY` (the default) disables the
+    /// latency trigger — the policy then reacts to `DeadlineMissed` only.
+    pub latency_threshold_s: f64,
+    /// Minimum coordinator-clock seconds between two migration attempts of
+    /// the same function (the rate limit).
+    pub min_interval_s: f64,
+}
+
+impl Default for AutoRescheduleConfig {
+    fn default() -> Self {
+        AutoRescheduleConfig {
+            alpha: 0.3,
+            latency_threshold_s: f64::INFINITY,
+            min_interval_s: 10.0,
+        }
+    }
+}
+
+/// Handle to a running auto-reschedule policy: observability counters for
+/// operators and tests. The policy itself runs inside an
+/// `on_engine_event` subscription.
+pub struct AutoRescheduler {
+    cfg: AutoRescheduleConfig,
+    /// Latency EWMA per (qualified function, resource).
+    ewma: Mutex<HashMap<(String, ResourceId), f64>>,
+    /// Last migration-attempt clock time per qualified function.
+    last_attempt: Mutex<HashMap<String, f64>>,
+    /// Functions with a migration job currently queued/running.
+    inflight: Mutex<HashSet<String>>,
+    /// Migration attempts dispatched (rate limit and in-flight gate
+    /// passed).
+    attempts: AtomicU64,
+    /// Attempts whose reschedule actually changed the placement.
+    moved: AtomicU64,
+}
+
+impl AutoRescheduler {
+    /// Migration attempts dispatched so far.
+    pub fn attempts(&self) -> u64 {
+        self.attempts.load(Ordering::SeqCst)
+    }
+
+    /// Attempts that changed the placement.
+    pub fn moved(&self) -> u64 {
+        self.moved.load(Ordering::SeqCst)
+    }
+
+    /// Current latency EWMA for one placement, if any samples arrived.
+    pub fn ewma(&self, app: &str, function: &str, resource: ResourceId) -> Option<f64> {
+        self.ewma
+            .lock()
+            .unwrap()
+            .get(&(EdgeFaaS::qualified(app, function), resource))
+            .copied()
+    }
+
+    /// Fold one latency sample into the EWMA; returns the new value.
+    fn observe(&self, qname: &str, resource: ResourceId, latency: f64) -> f64 {
+        let mut map = self.ewma.lock().unwrap();
+        let e = map.entry((qname.to_string(), resource)).or_insert(latency);
+        *e = self.cfg.alpha * latency + (1.0 - self.cfg.alpha) * *e;
+        *e
+    }
+
+    /// The function of `app` with the highest EWMA (the "hot" migration
+    /// candidate when a deadline miss names only the app).
+    fn hottest_of_app(&self, app: &str) -> Option<String> {
+        let prefix = format!("{app}.");
+        let map = self.ewma.lock().unwrap();
+        map.iter()
+            .filter(|((q, _), _)| q.starts_with(&prefix))
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|((q, _), _)| q.clone())
+    }
+
+    /// Rate-limit + in-flight gate; returns true when a migration job
+    /// should be dispatched for `qname` (and records the attempt time).
+    ///
+    /// The in-flight lock is held across check *and* insert: engine events
+    /// fire on concurrent worker threads, and a check-then-reacquire gap
+    /// would let two events both dispatch a migration for one function.
+    /// (Lock order inflight → last_attempt; this is the only place both
+    /// are held together.)
+    fn admit_attempt(&self, qname: &str, now: f64) -> bool {
+        let mut inflight = self.inflight.lock().unwrap();
+        if inflight.contains(qname) {
+            return false;
+        }
+        let mut last = self.last_attempt.lock().unwrap();
+        if let Some(t) = last.get(qname) {
+            if now - t < self.cfg.min_interval_s {
+                return false;
+            }
+        }
+        last.insert(qname.to_string(), now);
+        inflight.insert(qname.to_string());
+        true
+    }
+}
+
+impl EdgeFaaS {
+    /// Wire `reschedule_function` to engine events: subscribe the
+    /// auto-reschedule policy (the ROADMAP's "auto-policy should watch
+    /// node latencies and migrate hot functions").
+    ///
+    /// * **Watch.** Every [`EngineEvent::NodeCompleted`] folds its
+    ///   per-placement latencies into a `(function, resource)` EWMA.
+    /// * **React.** When an EWMA crosses `latency_threshold_s`, or an
+    ///   [`EngineEvent::DeadlineMissed`] fires (the policy picks the
+    ///   missed app's hottest function by EWMA), a migration is attempted.
+    /// * **Migrate safely.** Attempts are rate-limited per function
+    ///   (`min_interval_s`) and serialized (at most one in flight per
+    ///   function); the migration itself runs as a `Batch`-class engine
+    ///   job calling [`Self::reschedule_function`] with the recorded
+    ///   deployment package and data anchors — placement is decided off
+    ///   the monitoring snapshot, deployment is make-before-break, and no
+    ///   executing instance is ever cancelled (only future firings move).
+    ///
+    /// Returns a handle with attempt/moved counters. Functions without a
+    /// recorded package (never deployed through `deploy_function`) are
+    /// skipped.
+    pub fn enable_auto_reschedule(
+        self: &Arc<Self>,
+        cfg: AutoRescheduleConfig,
+    ) -> Arc<AutoRescheduler> {
+        let policy = Arc::new(AutoRescheduler {
+            cfg,
+            ewma: Mutex::new(HashMap::new()),
+            last_attempt: Mutex::new(HashMap::new()),
+            inflight: Mutex::new(HashSet::new()),
+            attempts: AtomicU64::new(0),
+            moved: AtomicU64::new(0),
+        });
+        let subscriber = Arc::clone(&policy);
+        // The callback receives `&EdgeFaaS`; dispatching the migration job
+        // needs an owned `Arc`, captured weakly so the subscription does
+        // not keep the coordinator alive through its own callback list.
+        let weak = Arc::downgrade(self);
+        self.on_engine_event(move |faas, ev| {
+            let hot: Option<String> = match ev {
+                EngineEvent::NodeCompleted { app, function, instance_latencies, .. } => {
+                    let qname = EdgeFaaS::qualified(app, function);
+                    let mut worst = f64::NEG_INFINITY;
+                    for &(rid, lat) in instance_latencies {
+                        worst = worst.max(subscriber.observe(&qname, rid, lat));
+                    }
+                    (worst > subscriber.cfg.latency_threshold_s).then_some(qname)
+                }
+                EngineEvent::DeadlineMissed { app, .. } => subscriber.hottest_of_app(app),
+                _ => None,
+            };
+            let Some(qname) = hot else { return };
+            let Some((app, function)) = qname.split_once('.') else { return };
+            let Some(package) = faas.deployed_package(app, function) else { return };
+            let Some(strong) = weak.upgrade() else { return };
+            if !subscriber.admit_attempt(&qname, faas.clock().now()) {
+                return;
+            }
+            subscriber.attempts.fetch_add(1, Ordering::SeqCst);
+            let anchors = faas.data_anchor(app, function);
+            let (app, function) = (app.to_string(), function.to_string());
+            let policy = Arc::clone(&subscriber);
+            // The migration runs as a Batch-class engine job — it must
+            // never delay the latency-critical work it exists to help, and
+            // it must not re-enter the coordinator from inside the event
+            // emission path.
+            strong.spawn_job_qos(QoS::class(Priority::Batch), move |faas| {
+                match faas.reschedule_function(&app, &function, &package, anchors) {
+                    Ok((old, new)) => {
+                        if new != old {
+                            policy.moved.fetch_add(1, Ordering::SeqCst);
+                            log::info!(
+                                "auto-reschedule migrated {qname}: {old:?} -> {new:?}"
+                            );
+                        }
+                    }
+                    Err(e) => log::warn!("auto-reschedule of {qname} failed: {e}"),
+                }
+                policy.inflight.lock().unwrap().remove(&qname);
+            });
+        });
+        policy
+    }
 }
 
 #[cfg(test)]
@@ -301,6 +508,106 @@ mod tests {
             .reschedule_function("federatedlearning", "train", &pkg, bed.iot.clone())
             .unwrap();
         assert_eq!(old, new, "same load, same placement");
+    }
+
+    /// A single-placement edge function (`mono.f`, anchored at iot[0])
+    /// with a workflow-shaped handler, ready for auto-reschedule tests.
+    fn mono_bed() -> crate::testbed::TestBed {
+        let bed = paper_testbed(Arc::new(RealClock::new()));
+        bed.executor.register("img/ok", |_: &[u8]| Ok(br#"{"outputs":[]}"#.to_vec()));
+        let yaml = "\
+application: mono
+entrypoint: f
+dag:
+  - name: f
+    requirements:
+      memory: 1024MB
+    affinity:
+      nodetype: edge
+      affinitytype: data
+    reduce: 1
+";
+        let mut data = HashMap::new();
+        data.insert("f".to_string(), vec![bed.iot[0]]);
+        bed.faas.configure_application(yaml, &data).unwrap();
+        bed.faas
+            .deploy_function("mono", "f", &FunctionPackage { code: "img/ok".into() })
+            .unwrap();
+        bed
+    }
+
+    #[test]
+    fn auto_reschedule_reacts_to_deadline_miss() {
+        let bed = mono_bed();
+        let policy = bed.faas.enable_auto_reschedule(AutoRescheduleConfig {
+            min_interval_s: 0.0,
+            ..AutoRescheduleConfig::default()
+        });
+        // A successful run populates the per-(function, resource) EWMA.
+        let run = bed.faas.submit_workflow("mono", &HashMap::new()).unwrap();
+        bed.faas.wait_workflow(run, 10.0).unwrap();
+        assert!(
+            policy.ewma("mono", "f", bed.edges[0]).is_some(),
+            "NodeCompleted latencies feed the EWMA"
+        );
+        assert_eq!(policy.attempts(), 0, "INFINITY threshold: no latency trigger");
+        // Saturate edge 0 (1 GB function cannot fit 0.5 GB free), then miss
+        // a deadline: the policy must migrate the app's hottest function.
+        let reg0 = bed.faas.resource(bed.edges[0]).unwrap();
+        bed.executor.register("img/noop", |_: &[u8]| Ok(vec![]));
+        reg0.handle.deploy("hog", "img/noop", 127 << 29, 0, &[]).unwrap();
+        reg0.handle.invoke("hog", &Bytes::new()).unwrap();
+        let run = bed
+            .faas
+            .submit_workflow_qos(
+                "mono",
+                &HashMap::new(),
+                QoS::class(Priority::Interactive).with_deadline(0.0),
+            )
+            .unwrap();
+        assert!(bed.faas.wait_workflow(run, 10.0).is_err(), "deadline 0 must miss");
+        // The migration job is asynchronous: poll for the new placement.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            if bed.faas.candidates_of("mono", "f").unwrap() == vec![bed.edges[1]] {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "auto-reschedule did not migrate mono.f off the saturated edge"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(policy.attempts() >= 1);
+        assert!(policy.moved() >= 1);
+        // The deployment followed the placement (make-before-break).
+        let reg1 = bed.faas.resource(bed.edges[1]).unwrap();
+        assert!(reg1.handle.list().unwrap().contains(&"mono.f".to_string()));
+    }
+
+    #[test]
+    fn auto_reschedule_latency_trigger_is_rate_limited() {
+        let bed = mono_bed();
+        let policy = bed.faas.enable_auto_reschedule(AutoRescheduleConfig {
+            alpha: 1.0,
+            // Any real invocation latency exceeds a zero threshold.
+            latency_threshold_s: 0.0,
+            min_interval_s: 3600.0,
+        });
+        for _ in 0..3 {
+            let run = bed.faas.submit_workflow("mono", &HashMap::new()).unwrap();
+            bed.faas.wait_workflow(run, 10.0).unwrap();
+        }
+        assert_eq!(
+            policy.attempts(),
+            1,
+            "three threshold crossings inside the rate-limit window = one attempt"
+        );
+        // Give the (asynchronous) migration job time to run: no load
+        // changed, so it must not move anything.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert_eq!(policy.moved(), 0, "same load, same placement");
+        assert_eq!(bed.faas.candidates_of("mono", "f").unwrap(), vec![bed.edges[0]]);
     }
 
     #[test]

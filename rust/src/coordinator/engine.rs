@@ -361,6 +361,10 @@ pub enum EngineEvent {
         instances: usize,
         /// Slowest instance latency, seconds.
         latency: f64,
+        /// Per-placement `(resource, latency)` pairs, in instance order —
+        /// what load-driven policies (the auto-rescheduler's per-resource
+        /// latency EWMA) consume.
+        instance_latencies: Vec<(ResourceId, f64)>,
     },
     /// A whole run drained (successfully or not).
     RunCompleted { run: RunId, app: String, ok: bool, duration: f64 },
@@ -2001,12 +2005,15 @@ impl EdgeFaaS {
                                     slots.into_iter().flatten().collect();
                                 let latency =
                                     instances.iter().map(|i| i.latency).fold(0.0, f64::max);
+                                let instance_latencies: Vec<(ResourceId, f64)> =
+                                    instances.iter().map(|i| (i.resource, i.latency)).collect();
                                 node_events[idx] = Some(EngineEvent::NodeCompleted {
                                     run: task.run,
                                     app: entry.app_name.clone(),
                                     function: task.function.clone(),
                                     instances: instances.len(),
                                     latency,
+                                    instance_latencies,
                                 });
                                 entry.result.functions.insert(task.function.clone(), instances);
                             }

@@ -58,10 +58,33 @@ impl EdgeFaaS {
                 data_locations: data_locations.get(fname).cloned().unwrap_or_default(),
                 dep_locations,
             };
+            // Remember the data anchors so later reschedules (manual or the
+            // auto-reschedule policy) can re-anchor data-affinity functions
+            // without the caller re-supplying them.
+            self.data_anchors
+                .write()
+                .unwrap()
+                .insert(Self::qualified(&request.app, fname), request.data_locations.clone());
             let placed = self.schedule_function(&request)?;
             plan.insert(fname.clone(), placed);
         }
         Ok(plan)
+    }
+
+    /// The data anchors a function was configured with (empty if none).
+    pub fn data_anchor(&self, app: &str, function: &str) -> Vec<ResourceId> {
+        self.data_anchors
+            .read()
+            .unwrap()
+            .get(&Self::qualified(app, function))
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// The deployment package last used for a function
+    /// ([`Self::deploy_function`] records it), if any.
+    pub fn deployed_package(&self, app: &str, function: &str) -> Option<FunctionPackage> {
+        self.packages.read().unwrap().get(&Self::qualified(app, function)).cloned()
     }
 
     /// Deploy_function(): build + deploy an EdgeFaaS function on its
@@ -80,6 +103,9 @@ impl EdgeFaaS {
             .ok_or_else(|| anyhow::anyhow!("no function `{function}` in `{app}`"))?;
         let candidates = self.candidates_of(app, function)?;
         let qname = Self::qualified(app, function);
+        // Record the package (even on partial failure): it is what the
+        // auto-reschedule policy redeploys with.
+        self.packages.write().unwrap().insert(qname.clone(), package.clone());
         let labels =
             vec![("app".to_string(), app.to_string()), ("fn".to_string(), function.to_string())];
         let mut failed = Vec::new();
@@ -130,6 +156,10 @@ impl EdgeFaaS {
     pub fn delete_function(&self, app: &str, function: &str) -> anyhow::Result<()> {
         let candidates = self.candidates_of(app, function)?;
         let qname = Self::qualified(app, function);
+        // Drop the reschedule bookkeeping with the deployment: a later
+        // re-creation must not inherit this incarnation's package/anchors.
+        self.packages.write().unwrap().remove(&qname);
+        self.data_anchors.write().unwrap().remove(&qname);
         let mut failed = Vec::new();
         for rid in candidates {
             match self.resource(rid) {

@@ -34,12 +34,18 @@
 //! GET    /engine/stats                  engine counters: shards, pending
 //!                                       runs, queue depth, worker pool,
 //!                                       dispatch statistics
+//! GET    /monitor/snapshot              the monitoring snapshot plane:
+//!                                       epoch, staleness bound, per-resource
+//!                                       usage samples with ages
+//!                                       (?latency=true adds the dense
+//!                                       latency matrix)
 //! GET    /healthz
 //! ```
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
+use crate::simnet::Clock as _;
 use crate::util::http::{Handler, Request, Response, Server};
 use crate::util::json::Json;
 
@@ -193,6 +199,47 @@ impl Handler for EdgeFaasGateway {
                     .set("instances_dispatched", s.instances_dispatched.into())
                     .set("batching", self.faas.batching_enabled().into())
                     .set("batch_window_s", self.faas.batch_window().into());
+                Response::json(200, &o)
+            }
+            ("GET", ["monitor", "snapshot"]) => {
+                let snap = self.faas.monitor_snapshot();
+                let max_age = self.faas.snapshot_max_age();
+                let now = self.faas.clock().now();
+                // The hand-rolled serializer prints non-finite floats
+                // verbatim (invalid JSON); disconnected latencies are
+                // INFINITY, so map non-finite to null.
+                let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+                let mut o = Json::obj();
+                o.set("epoch", snap.epoch.into())
+                    .set("taken_at", num(snap.taken_at))
+                    .set("max_age_s", num(max_age))
+                    .set("collector_running", self.faas.monitor_collector_running().into())
+                    .set("nodes", (snap.latencies().len() as u64).into());
+                let mut resources = Json::obj();
+                for (rid, s) in snap.samples() {
+                    let mut r = Json::obj();
+                    r.set("cpu_frac", num(s.usage.cpu_frac))
+                        .set("mem_used", s.usage.mem_used.into())
+                        .set("mem_total", s.usage.mem_total.into())
+                        .set("io_bytes_per_s", num(s.usage.io_bytes_per_s))
+                        .set("gpu_frac", num(s.usage.gpu_frac))
+                        .set("gpus_used", (s.usage.gpus_used as u64).into())
+                        .set("gpus_total", (s.usage.gpus_total as u64).into())
+                        .set("collected_at", num(s.collected_at))
+                        .set("age_s", num(now - s.collected_at))
+                        .set("fresh", (now - s.collected_at <= max_age).into());
+                    resources.set(&rid.to_string(), r);
+                }
+                o.set("resources", resources);
+                if req.query.get("latency").map(|v| v == "true").unwrap_or(false) {
+                    let m = snap.latencies();
+                    let rows: Vec<Json> = (0..m.len())
+                        .map(|from| {
+                            Json::Arr((0..m.len()).map(|to| num(m.latency(from, to))).collect())
+                        })
+                        .collect();
+                    o.set("latency_matrix", Json::Arr(rows));
+                }
                 Response::json(200, &o)
             }
             ("GET", ["resources"]) => {
@@ -415,6 +462,34 @@ mod tests {
         assert_eq!(v.get("pending_runs").unwrap().as_u64(), Some(0));
         assert_eq!(v.get("batching").unwrap().as_bool(), Some(true));
         assert_eq!(v.get("batch_window_s").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn monitor_snapshot_over_rest() {
+        let (server, bed) = served();
+        let addr = server.addr();
+        // Epoch 0: the plane exists but nothing was ever collected.
+        let v = http::get(&addr, "/monitor/snapshot").unwrap().json_body().unwrap();
+        assert_eq!(v.get("epoch").unwrap().as_u64(), Some(0));
+        assert_eq!(v.get("collector_running").unwrap().as_bool(), Some(false));
+        assert!(v.get("resources").unwrap().as_obj().unwrap().is_empty());
+        // After a refresh every registered resource has a fresh sample.
+        let epoch = bed.faas.refresh_monitor_snapshot();
+        assert_eq!(epoch, 1);
+        let v = http::get(&addr, "/monitor/snapshot?latency=true")
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(v.get("epoch").unwrap().as_u64(), Some(1));
+        let resources = v.get("resources").unwrap().as_obj().unwrap();
+        assert_eq!(resources.len(), 11);
+        for r in resources.values() {
+            assert_eq!(r.get("fresh").unwrap().as_bool(), Some(true));
+        }
+        // ?latency=true adds the dense node matrix (11 topology nodes).
+        let matrix = v.get("latency_matrix").unwrap().as_arr().unwrap();
+        assert_eq!(matrix.len(), 11);
+        assert_eq!(matrix[0].as_arr().unwrap().len(), 11);
     }
 
     #[test]

@@ -11,15 +11,15 @@
 //! | paper section                | module        |
 //! |------------------------------|---------------|
 //! | 3.1 resource management      | [`resource`]  |
-//! | 3.1.2 resource monitoring    | [`handle`] (usage scrape per resource) |
+//! | 3.1.2 resource monitoring    | [`handle`] (per-resource usage scrape) + [`crate::monitor::snapshot`] (epoch-versioned snapshot plane + collector) |
 //! | 3.2.1 function virtualization| [`functions`] |
 //! | 3.2.2 DAG creation           | [`appconfig`], [`dag`] |
-//! | 3.2.3 function scheduling    | [`scheduler`] |
+//! | 3.2.3 function scheduling    | [`scheduler`] (snapshot-backed phases + placement decision cache) |
 //! | 3.3.1 storage virtualization | [`storage`]   |
 //! | 3.3.2 data placement         | [`placement`] |
 //! | execution core               | [`engine`] (event-driven run queue, admission limits) |
 //! | sync workflow front-end      | [`invoker`] (`run_workflow` = submit + await) |
-//! | async front-end              | [`asyncinvoke`] (`invoke_async` = job + tracker id) |
+//! | async front-end              | [`asyncinvoke`] (`invoke_async` = job + tracker id; auto-reschedule policy) |
 //! | unified REST gateway         | [`gateway`]   |
 //!
 //! Every invocation path — synchronous workflow runs, asynchronous function
@@ -36,6 +36,15 @@
 //! (see [`engine`]'s "Sharding & wakeups"). The engine is clock-generic:
 //! the same dispatch code runs under wall-clock time (examples, gateways)
 //! and simnet virtual time (figure benches).
+//!
+//! Placement decisions ride the **monitoring snapshot plane**
+//! ([`crate::monitor::snapshot`]): a background collector publishes an
+//! epoch-versioned snapshot (per-resource usage with a staleness bound +
+//! a dense latency matrix), phase-1 filtering and phase-2 policies read
+//! it without a scrape on the decision path (direct-scrape fallback for
+//! missing/stale entries), repeated decisions hit a per-epoch cache, and
+//! the auto-reschedule policy ([`asyncinvoke`]) watches engine events to
+//! migrate hot functions through `reschedule_function`.
 //!
 //! The coordinator sees resources only through the [`handle::ResourceHandle`]
 //! trait, so the same scheduling/placement code runs against in-process
@@ -54,7 +63,9 @@ pub mod resource;
 pub mod scheduler;
 pub mod storage;
 
-pub use asyncinvoke::{AsyncStatus, AsyncTracker, InvocationId};
+pub use asyncinvoke::{
+    AsyncStatus, AsyncTracker, AutoRescheduleConfig, AutoRescheduler, InvocationId,
+};
 pub use appconfig::{Affinity, AffinityType, AppConfig, FunctionConfig, Reduce, Requirements};
 pub use engine::{
     EngineError, EngineEvent, EngineStats, Priority, QoS, RunId, RunStatus, WaitError,

@@ -10,10 +10,12 @@
 
 use std::collections::{BTreeMap, BinaryHeap, HashMap};
 use std::cmp::Reverse;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 
 use crate::backup::DurableKv;
 use crate::cluster::spec::ResourceSpec;
+use crate::monitor::snapshot::{LatencyMatrix, MonitorSnapshot, SnapshotPlane, UsageSample};
 use crate::simnet::{Clock, NodeId, RealClock, Tier, Topology, TransferModel};
 use crate::util::json::Json;
 use crate::util::yaml;
@@ -21,8 +23,9 @@ use crate::util::yaml;
 use super::appconfig::AppConfig;
 use super::dag::Dag;
 use super::engine::EngineCore;
+use super::functions::FunctionPackage;
 use super::handle::ResourceHandle;
-use super::scheduler::{LocalityScheduler, Schedule};
+use super::scheduler::{LocalityScheduler, Schedule, SchedCache};
 
 /// Unique id assigned at registration (reused after unregistration).
 pub type ResourceId = u32;
@@ -63,6 +66,23 @@ pub struct EdgeFaaS {
     /// The event-driven execution core every invocation front-end submits
     /// through (see [`super::engine`]).
     pub(super) engine: EngineCore,
+    /// The monitoring snapshot plane: epoch-versioned usage + latency view
+    /// the scheduling fast path reads instead of scraping per decision
+    /// (see [`crate::monitor::snapshot`]).
+    pub(super) monitor: SnapshotPlane,
+    /// Placement decision cache keyed by (app, function, anchor sets) and
+    /// the snapshot epoch; invalidated on epoch bumps, resource
+    /// (de)registration, app reconfiguration and scheduler swaps, bypassed
+    /// by `reschedule_function` (see [`super::scheduler`]).
+    pub(super) sched_cache: Mutex<SchedCache>,
+    /// Deployment package last used per qualified function name — what the
+    /// auto-reschedule policy redeploys with (recorded by
+    /// `deploy_function`).
+    pub(super) packages: RwLock<HashMap<String, FunctionPackage>>,
+    /// Data anchors per qualified function name (the `data_locations` the
+    /// function was configured with), so rescheduling can re-anchor
+    /// data-affinity placements.
+    pub(super) data_anchors: RwLock<HashMap<String, Vec<ResourceId>>>,
 }
 
 impl EdgeFaaS {
@@ -73,6 +93,11 @@ impl EdgeFaaS {
 
     /// Full constructor.
     pub fn with_parts(topology: Topology, kv: DurableKv, clock: Arc<dyn Clock>) -> EdgeFaaS {
+        // The dense latency matrix is lifted from the topology once here:
+        // the topology graph is fixed after construction (registration only
+        // *positions* resources on existing nodes), so every snapshot epoch
+        // shares one matrix Arc.
+        let latency = Arc::new(LatencyMatrix::from_topology(&topology));
         EdgeFaaS {
             resources: RwLock::new(BTreeMap::new()),
             free_ids: Mutex::new(BinaryHeap::new()),
@@ -87,13 +112,20 @@ impl EdgeFaaS {
             transfer: TransferModel::default(),
             clock,
             engine: EngineCore::new(),
+            monitor: SnapshotPlane::new(latency),
+            sched_cache: Mutex::new(SchedCache::default()),
+            packages: RwLock::new(HashMap::new()),
+            data_anchors: RwLock::new(HashMap::new()),
         }
     }
 
     /// Swap in a user scheduling policy ("EdgeFaaS also offers easy to use
     /// interface for users to implement their own scheduling policies").
+    /// Invalidates the placement decision cache — cached decisions of the
+    /// old policy must not masquerade as the new one's.
     pub fn set_scheduler(&self, s: Arc<dyn Schedule>) {
         *self.scheduler.write().unwrap() = s;
+        self.invalidate_schedule_cache();
     }
 
     pub fn clock(&self) -> &Arc<dyn Clock> {
@@ -158,6 +190,8 @@ impl EdgeFaaS {
         self.kv.put("resource_map", &id.to_string(), rec)?;
         let reg = Arc::new(RegisteredResource { id, spec, net_node, handle });
         self.resources.write().unwrap().insert(id, reg);
+        // A new resource can change any placement decision: drop the cache.
+        self.invalidate_schedule_cache();
         log::info!("registered resource {id} ({})", self.describe_resource(id));
         Ok(id)
     }
@@ -193,6 +227,8 @@ impl EdgeFaaS {
         self.resources.write().unwrap().remove(&id);
         self.kv.delete("resource_map", &id.to_string())?;
         self.free_ids.lock().unwrap().push(Reverse(id));
+        // Cached decisions may name the departed resource: drop the cache.
+        self.invalidate_schedule_cache();
         log::info!("unregistered resource {id}");
         Ok(())
     }
@@ -244,6 +280,133 @@ impl EdgeFaaS {
         Ok(self.transfer.time(&self.topology.read().unwrap(), nf, nt, bytes))
     }
 
+    // ------------------------------------------------- monitoring plane --
+
+    /// The current monitoring snapshot (a refcount bump; see
+    /// [`crate::monitor::snapshot`]).
+    pub fn monitor_snapshot(&self) -> Arc<MonitorSnapshot> {
+        self.monitor.snapshot()
+    }
+
+    /// The snapshot plane's current epoch (0 until the first refresh).
+    pub fn snapshot_epoch(&self) -> u64 {
+        self.monitor.epoch()
+    }
+
+    /// The snapshot staleness bound, seconds: phase-1 reads a snapshot
+    /// sample only while it is younger than this, falling back to a direct
+    /// scrape of that resource otherwise.
+    pub fn snapshot_max_age(&self) -> f64 {
+        self.monitor.max_age()
+    }
+
+    /// Set the snapshot staleness bound (seconds, clamped to >= 0).
+    pub fn set_snapshot_max_age(&self, max_age_s: f64) {
+        self.monitor.set_max_age(max_age_s);
+    }
+
+    /// Whether a background monitor collector is currently running.
+    pub fn monitor_collector_running(&self) -> bool {
+        self.monitor.collector_running()
+    }
+
+    /// Synchronously scrape every registered resource and publish a new
+    /// snapshot epoch. Scrapes run outside the resource-map lock; a
+    /// resource whose scrape fails keeps its previous sample (it ages out
+    /// through the staleness bound instead of vanishing on one transient
+    /// failure), while departed resources are dropped. Returns the new
+    /// epoch. This is the collector's refresh step, also callable directly
+    /// (virtual-time tests, benches, or a scrape-now REST hook).
+    pub fn refresh_monitor_snapshot(&self) -> u64 {
+        let targets: Vec<(ResourceId, Arc<dyn ResourceHandle>)> = {
+            let res = self.resources.read().unwrap();
+            res.values().map(|r| (r.id, Arc::clone(&r.handle))).collect()
+        };
+        let prev = self.monitor.snapshot();
+        let mut usage = BTreeMap::new();
+        for (id, handle) in targets {
+            match handle.usage() {
+                Ok(u) => {
+                    usage.insert(
+                        id,
+                        UsageSample { usage: u, collected_at: self.clock.now() },
+                    );
+                }
+                Err(e) => {
+                    log::warn!("monitor refresh: scrape of resource {id} failed: {e}");
+                    if let Some(old) = prev.usage_of(id) {
+                        usage.insert(id, *old);
+                    }
+                }
+            }
+        }
+        let now = self.clock.now();
+        self.monitor.publish(usage, prev.latencies_arc(), now)
+    }
+
+    /// Start the background monitor collector: a thread that refreshes the
+    /// snapshot ([`Self::refresh_monitor_snapshot`]) then `Clock::sleep`s
+    /// `interval_s`, until stopped — clock-generic, so under a
+    /// `VirtualClock` the same loop advances virtual time instead of
+    /// blocking. Returns `false` (without starting a second collector) if
+    /// one is already running. The thread holds only a `Weak` reference to
+    /// the coordinator, so dropping the last `Arc<EdgeFaaS>` also ends the
+    /// collector.
+    pub fn start_monitor_collector(self: &Arc<Self>, interval_s: f64) -> bool {
+        let stop = Arc::new(AtomicBool::new(false));
+        if !self.monitor.register_collector(Arc::clone(&stop)) {
+            return false;
+        }
+        let weak: Weak<EdgeFaaS> = Arc::downgrade(self);
+        let clock = Arc::clone(&self.clock);
+        let interval = interval_s.max(0.0);
+        let spawned = std::thread::Builder::new()
+            .name("monitor-collector".into())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let Some(faas) = weak.upgrade() else { break };
+                    faas.refresh_monitor_snapshot();
+                    drop(faas);
+                    clock.sleep(interval);
+                }
+            });
+        if spawned.is_err() {
+            self.monitor.stop_collector();
+            return false;
+        }
+        true
+    }
+
+    /// Signal the collector to stop after its current cycle (non-blocking;
+    /// under a `RealClock` the thread exits within one interval).
+    pub fn stop_monitor_collector(&self) {
+        self.monitor.stop_collector();
+    }
+
+    /// Enable/disable the placement decision cache (enabled by default).
+    /// Disabling also drops all cached decisions. Even when enabled, the
+    /// cache only engages while decisions are snapshot-backed — the
+    /// current snapshot is non-initial (epoch > 0) and within the
+    /// staleness bound; otherwise every call pays the full scraping path.
+    pub fn set_schedule_cache(&self, enabled: bool) {
+        let mut cache = self.sched_cache.lock().unwrap();
+        cache.enabled = enabled;
+        cache.map.clear();
+    }
+
+    /// Decision-cache statistics: `(hits, misses)` since construction.
+    /// Bypassing calls (`reschedule_function`) count as neither.
+    pub fn schedule_cache_stats(&self) -> (u64, u64) {
+        let cache = self.sched_cache.lock().unwrap();
+        (cache.hits, cache.misses)
+    }
+
+    /// Drop every cached placement decision (registration changes, app
+    /// reconfiguration, scheduler swaps, explicit rescheduling).
+    pub(super) fn invalidate_schedule_cache(&self) {
+        self.sched_cache.lock().unwrap().map.clear();
+    }
+
     // ------------------------------------------------------ applications --
 
     /// Store a validated application (its DAG is built here). Scheduling
@@ -266,6 +429,9 @@ impl EdgeFaaS {
         );
         self.kv.put("dag_store", &name, rec)?;
         self.apps.write().unwrap().insert(name, Arc::clone(&app));
+        // Reconfiguration may change function configs under unchanged
+        // names; cached decisions for the old configs must not survive.
+        self.invalidate_schedule_cache();
         Ok(app)
     }
 

@@ -2,17 +2,50 @@
 //!
 //! Phase 1 — *filter*: drop resources that violate the privacy requirement
 //! (privacy=1 ⇒ only the IoT devices where the input data is generated) or
-//! lack free memory/GPUs per the monitoring scrape.
+//! lack free memory/GPUs per the monitoring data.
 //!
 //! Phase 2 — *placement policy*: the default [`LocalityScheduler`] places by
 //! data locality / dependency-function locality with the `reduce: 1|auto`
 //! fan-in rule; users can plug any policy through the [`Schedule`] trait
 //! ("EdgeFaaS also offers easy to use interface for users to implement
 //! their own scheduling policies").
+//!
+//! # The scheduling fast path
+//!
+//! Both phases read the **monitoring snapshot plane**
+//! ([`crate::monitor::snapshot`]) instead of touching the network:
+//!
+//! * Phase 1 takes each resource's usage vector from the current
+//!   [`crate::monitor::MonitorSnapshot`] when its sample is younger than
+//!   the staleness bound (`EdgeFaaS::set_snapshot_max_age`), and falls back
+//!   to a direct `handle.usage()` scrape only for missing/stale entries —
+//!   with no collector running the snapshot is empty and every decision
+//!   degrades to exactly the old per-call-scrape behaviour.
+//! * Phase 2's [`ScheduleCtx`] carries the snapshot's dense
+//!   [`LatencyMatrix`], so [`ScheduleCtx::closest`] /
+//!   [`ScheduleCtx::closest_to_all`] are indexed loads, never per-pair
+//!   shortest-path searches.
+//!
+//! On top of that sits the **placement decision cache** (`SchedCache`):
+//! `schedule_function` memoizes its result keyed by
+//! `(app, function, data anchors, dependency anchors)` within one snapshot
+//! epoch. Memoizing is only sound while decisions are snapshot-backed, so
+//! the cache engages only when the current snapshot is non-initial
+//! (epoch > 0) and within the staleness bound — with no collector running
+//! it is inert and every call pays the full (scraping) path, exactly the
+//! pre-snapshot behaviour. The cache is invalidated by epoch bumps (the
+//! collector published fresher data), resource (de)registration, app
+//! reconfiguration and scheduler swaps, and is *bypassed* by
+//! `reschedule_function` — an explicit reschedule must always consult
+//! current monitoring data.
+//! `benches/ablation_concurrency.rs` §6 tracks the schedule-call rates
+//! (`BENCH_schedule.json`).
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::simnet::{Tier, Topology};
+use crate::monitor::snapshot::LatencyMatrix;
+use crate::simnet::Tier;
 
 use super::appconfig::{AffinityType, FunctionConfig, Reduce};
 use super::resource::{EdgeFaaS, RegisteredResource, ResourceId};
@@ -39,7 +72,9 @@ pub struct ScheduleCtx<'a> {
     /// `affinitytype: data`, dependency placements for `: function`), in
     /// upstream order, duplicates preserved.
     pub upstream_nodes: Vec<usize>,
-    pub topology: &'a Topology,
+    /// Dense one-way latency view of the topology, lifted from the
+    /// monitoring snapshot — lookups are indexed loads, not path searches.
+    pub latencies: &'a LatencyMatrix,
 }
 
 impl<'a> ScheduleCtx<'a> {
@@ -50,34 +85,58 @@ impl<'a> ScheduleCtx<'a> {
 
     /// The candidate of `tier` with the lowest latency from `from_node`.
     ///
-    /// Latencies are compared with `f64::total_cmp`: a NaN latency (e.g. a
-    /// poisoned monitoring sample) sorts *last* instead of silently
-    /// comparing `Equal` and letting `min_by`'s tie-breaking pick an
-    /// arbitrary resource.
+    /// Each candidate's latency key is computed exactly once into a
+    /// `(latency, id)` vector before the selection, and keys are compared
+    /// with `f64::total_cmp`: a NaN latency (e.g. a poisoned monitoring
+    /// sample) sorts *last* instead of silently comparing `Equal` and
+    /// letting `min_by`'s tie-breaking pick an arbitrary resource. Ties
+    /// keep the first candidate in iteration order (ascending resource
+    /// id), matching the pre-keyed behaviour.
     pub fn closest(&self, from_node: usize, tier: Tier) -> Option<ResourceId> {
-        self.of_tier(tier)
+        let keyed: Vec<(f64, ResourceId)> = self
+            .of_tier(tier)
             .into_iter()
-            .min_by(|a, b| {
-                let la = self.topology.latency(from_node, a.net_node);
-                let lb = self.topology.latency(from_node, b.net_node);
-                la.total_cmp(&lb)
-            })
-            .map(|r| r.id)
+            .map(|r| (self.latencies.latency(from_node, r.net_node), r.id))
+            .collect();
+        keyed.into_iter().min_by(|a, b| a.0.total_cmp(&b.0)).map(|(_, id)| id)
     }
 
     /// The candidate of `tier` minimizing summed latency from all nodes
-    /// (NaN-safe, see [`Self::closest`]).
+    /// (keys precomputed once per candidate; NaN-safe, see
+    /// [`Self::closest`]).
     pub fn closest_to_all(&self, from_nodes: &[usize], tier: Tier) -> Option<ResourceId> {
-        self.of_tier(tier)
+        let keyed: Vec<(f64, ResourceId)> = self
+            .of_tier(tier)
             .into_iter()
-            .min_by(|a, b| {
-                let sa: f64 =
-                    from_nodes.iter().map(|&n| self.topology.latency(n, a.net_node)).sum();
-                let sb: f64 =
-                    from_nodes.iter().map(|&n| self.topology.latency(n, b.net_node)).sum();
-                sa.total_cmp(&sb)
+            .map(|r| {
+                let sum: f64 =
+                    from_nodes.iter().map(|&n| self.latencies.latency(n, r.net_node)).sum();
+                (sum, r.id)
             })
-            .map(|r| r.id)
+            .collect();
+        keyed.into_iter().min_by(|a, b| a.0.total_cmp(&b.0)).map(|(_, id)| id)
+    }
+}
+
+/// The placement decision cache (see the module docs). Lives behind a
+/// mutex in [`EdgeFaaS`]; entries are valid for one snapshot epoch.
+pub(super) struct SchedCache {
+    pub(super) enabled: bool,
+    /// The snapshot epoch the entries were computed under.
+    pub(super) epoch: u64,
+    pub(super) map: HashMap<SchedKey, Vec<ResourceId>>,
+    pub(super) hits: u64,
+    pub(super) misses: u64,
+}
+
+/// Cache key: `(app, function, data anchors, dependency anchors)`. The
+/// snapshot epoch is held once per cache generation (`SchedCache::epoch`),
+/// not per entry: an epoch bump clears the whole map.
+type SchedKey = (String, String, Vec<ResourceId>, Vec<ResourceId>);
+
+impl Default for SchedCache {
+    fn default() -> Self {
+        SchedCache { enabled: true, epoch: 0, map: HashMap::new(), hits: 0, misses: 0 }
     }
 }
 
@@ -155,7 +214,29 @@ impl Schedule for LocalityScheduler {
 
 impl EdgeFaaS {
     /// Phase 1: filter resources by privacy and capacity requirements.
+    ///
+    /// Capacity reads come from the monitoring snapshot when the
+    /// resource's sample is within the staleness bound; missing/stale
+    /// entries fall back to a direct scrape of that resource (§3.1.2's
+    /// behaviour, one resource at a time instead of all of them).
     pub fn phase1_filter(&self, request: &FunctionCreation) -> Vec<Arc<RegisteredResource>> {
+        let snap = self.monitor.snapshot();
+        let max_age = self.monitor.max_age();
+        let now = self.clock.now();
+        self.phase1_filter_on(&snap, now, max_age, request)
+    }
+
+    /// [`Self::phase1_filter`] against an explicit snapshot, so one
+    /// scheduling decision reads a single consistent monitoring view for
+    /// both phases (no second fetch between phase 1 and the latency
+    /// matrix).
+    fn phase1_filter_on(
+        &self,
+        snap: &crate::monitor::MonitorSnapshot,
+        now: f64,
+        max_age: f64,
+        request: &FunctionCreation,
+    ) -> Vec<Arc<RegisteredResource>> {
         let resources = self.resources.read().unwrap();
         resources
             .values()
@@ -172,8 +253,13 @@ impl EdgeFaaS {
                         return false;
                     }
                 }
-                // Capacity: scrape the monitoring stand-in (§3.1.2).
-                match r.handle.usage() {
+                // Capacity: snapshot read when fresh, direct scrape of the
+                // monitoring stand-in otherwise.
+                let usage = match snap.fresh_usage_of(r.id, now, max_age) {
+                    Some(u) => Ok(*u),
+                    None => r.handle.usage(),
+                };
+                match usage {
                     Ok(u) => {
                         let mem_total =
                             if u.mem_total > 0 { u.mem_total } else { r.spec.total_memory() };
@@ -198,8 +284,71 @@ impl EdgeFaaS {
 
     /// Full two-phase scheduling for one function. Returns the chosen
     /// resource ids and records them in the candidate_resource mapping.
+    ///
+    /// Consults the placement decision cache: a repeated request within
+    /// one snapshot epoch returns the memoized placement without
+    /// re-running either phase (see the module docs for the invalidation
+    /// rules). `reschedule_function` goes through
+    /// [`Self::schedule_function_uncached`] instead.
     pub fn schedule_function(&self, request: &FunctionCreation) -> anyhow::Result<Vec<ResourceId>> {
-        let candidates = self.phase1_filter(request);
+        self.schedule_function_inner(request, true)
+    }
+
+    /// Two-phase scheduling that bypasses the decision cache — every call
+    /// re-filters against current monitoring data. The computed placement
+    /// is *not* inserted into the cache (the caller is explicitly asking
+    /// for a load-sensitive decision).
+    pub fn schedule_function_uncached(
+        &self,
+        request: &FunctionCreation,
+    ) -> anyhow::Result<Vec<ResourceId>> {
+        self.schedule_function_inner(request, false)
+    }
+
+    fn schedule_function_inner(
+        &self,
+        request: &FunctionCreation,
+        use_cache: bool,
+    ) -> anyhow::Result<Vec<ResourceId>> {
+        // One snapshot fetch per decision: phase 1, the phase-2 latency
+        // matrix and the cache epoch all come from this single view.
+        let snap = self.monitor.snapshot();
+        let now = self.clock.now();
+        let max_age = self.monitor.max_age();
+        let epoch = snap.epoch;
+        // Memoizing is sound only while decisions are snapshot-backed: at
+        // epoch 0 (nothing ever collected) or past the staleness bound
+        // (collector stopped/stalled) phase 1 scrapes live, and caching a
+        // load-dependent decision would pin it load-blind forever. In
+        // those regimes the cache is inert and every call behaves exactly
+        // like the pre-snapshot per-call-scrape path.
+        let cacheable = use_cache && epoch > 0 && now - snap.taken_at <= max_age;
+        let key = (
+            request.app.clone(),
+            request.function.name.clone(),
+            request.data_locations.clone(),
+            request.dep_locations.clone(),
+        );
+        if cacheable {
+            let mut cache = self.sched_cache.lock().unwrap();
+            if cache.enabled {
+                if cache.epoch != epoch {
+                    cache.map.clear();
+                    cache.epoch = epoch;
+                }
+                if let Some(hit) = cache.map.get(&key) {
+                    cache.hits += 1;
+                    let chosen = hit.clone();
+                    drop(cache);
+                    // Hits still (re)record the mapping: callers observe
+                    // identical side effects either way.
+                    self.set_candidates(&request.app, &request.function.name, chosen.clone())?;
+                    return Ok(chosen);
+                }
+                cache.misses += 1;
+            }
+        }
+        let candidates = self.phase1_filter_on(&snap, now, max_age, request);
         if candidates.is_empty() {
             anyhow::bail!(
                 "no resource passes phase-1 filtering for `{}.{}`",
@@ -220,15 +369,23 @@ impl EdgeFaaS {
         // Borrow the policy through the read guard for the duration of the
         // scheduling call — no clone of the scheduler on the hot path (the
         // guard is released as soon as the decision is made; `set_scheduler`
-        // only needs the write lock between decisions).
+        // only needs the write lock between decisions). Latencies come from
+        // the snapshot's dense matrix — no topology lock, no path searches.
         let chosen = {
             let sched = self.scheduler.read().unwrap();
-            let topo = self.topology.read().unwrap();
-            let ctx = ScheduleCtx { candidates, upstream_nodes, topology: &topo };
+            let ctx = ScheduleCtx { candidates, upstream_nodes, latencies: snap.latencies() };
             sched.schedule(request, &ctx)?
         };
         if chosen.is_empty() {
             anyhow::bail!("scheduler returned no placement for `{}`", request.function.name);
+        }
+        if cacheable {
+            let mut cache = self.sched_cache.lock().unwrap();
+            // Guard against a concurrent epoch bump: an entry computed
+            // under an older snapshot must not be filed under the new one.
+            if cache.enabled && cache.epoch == epoch {
+                cache.map.insert(key, chosen.clone());
+            }
         }
         self.set_candidates(&request.app, &request.function.name, chosen.clone())?;
         log::info!(

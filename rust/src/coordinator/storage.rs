@@ -40,14 +40,11 @@ impl ObjectUrl {
         })
     }
 
-    pub fn to_string(&self) -> String {
-        format!("{}/{}/{}/{}", self.application, self.bucket, self.resource, self.object)
-    }
 }
 
 impl std::fmt::Display for ObjectUrl {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(&self.to_string())
+        write!(f, "{}/{}/{}/{}", self.application, self.bucket, self.resource, self.object)
     }
 }
 

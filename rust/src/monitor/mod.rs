@@ -3,10 +3,20 @@
 //! "Each resource has a Prometheus service deployed to monitor the resource
 //! usages... CPU usage, memory usage, I/O bandwidth and GPU usage" (§3.1.2).
 //! [`metrics`] is the per-resource gauge/counter registry, [`scrape`] is the
-//! text exposition endpoint plus the scraper client EdgeFaaS uses during
-//! phase-1 scheduling.
+//! text exposition endpoint plus the scraper client.
+//!
+//! [`snapshot`] is the **monitoring snapshot plane**: a background
+//! collector scrapes every registered resource and publishes an
+//! epoch-versioned, atomically-swapped [`snapshot::MonitorSnapshot`]
+//! (usage samples with a staleness bound, plus a dense latency matrix
+//! lifted from the topology), so the two-phase scheduler's decisions are
+//! pure in-memory reads instead of O(resources) synchronous scrapes — see
+//! the [`snapshot`] module docs for epoching, staleness, and the
+//! collector lifecycle.
 
 pub mod metrics;
 pub mod scrape;
+pub mod snapshot;
 
 pub use metrics::{MetricsRegistry, ResourceUsage};
+pub use snapshot::{LatencyMatrix, MonitorSnapshot, SnapshotPlane, UsageSample};

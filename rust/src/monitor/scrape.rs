@@ -35,6 +35,12 @@ impl Handler for MetricsGateway {
 
 /// Parse a Prometheus text exposition into name → value. Labelled series are
 /// keyed as `name{labels}`.
+///
+/// Exposition lines are `name value [timestamp]` with arbitrary whitespace
+/// between fields: the value is the *first* numeric field after the metric
+/// name, never the trailing timestamp. The name ends at the closing `}` of
+/// its label set (label values may contain spaces) or, unlabelled, at the
+/// first whitespace.
 pub fn parse_exposition(text: &str) -> BTreeMap<String, f64> {
     let mut out = BTreeMap::new();
     for line in text.lines() {
@@ -42,10 +48,18 @@ pub fn parse_exposition(text: &str) -> BTreeMap<String, f64> {
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        if let Some((name, value)) = line.rsplit_once(' ') {
-            if let Ok(v) = value.parse::<f64>() {
-                out.insert(name.to_string(), v);
-            }
+        // The value/timestamp tail is numeric and cannot contain `}`, so
+        // the last `}` on the line closes the label set.
+        let (name, rest) = match line.rfind('}') {
+            Some(close) => line.split_at(close + 1),
+            None => match line.split_once(char::is_whitespace) {
+                Some((name, rest)) => (name, rest),
+                None => continue,
+            },
+        };
+        let mut fields = rest.split_whitespace();
+        if let Some(v) = fields.next().and_then(|f| f.parse::<f64>().ok()) {
+            out.insert(name.to_string(), v);
         }
     }
     out
@@ -105,5 +119,23 @@ mod tests {
     #[test]
     fn missing_endpoint_is_error() {
         assert!(scrape("127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn parse_takes_the_value_not_the_trailing_timestamp() {
+        // `name value timestamp` lines: the value is the first numeric
+        // field after the name, never the timestamp.
+        let text = "a 1.5 1395066363000\n\
+                    b{l=\"v\"} 2 1395066363000\n\
+                    c   3.25    1395066363000\n\
+                    d\t4\t1395066363000\n\
+                    spaced{l=\"two words\"} 5 1395066363000\n";
+        let m = parse_exposition(text);
+        assert_eq!(m.get("a"), Some(&1.5));
+        assert_eq!(m.get("b{l=\"v\"}"), Some(&2.0));
+        assert_eq!(m.get("c"), Some(&3.25), "multi-space separators");
+        assert_eq!(m.get("d"), Some(&4.0), "tab separators");
+        assert_eq!(m.get("spaced{l=\"two words\"}"), Some(&5.0), "label value with a space");
+        assert_eq!(m.len(), 5);
     }
 }

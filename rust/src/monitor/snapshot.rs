@@ -1,0 +1,348 @@
+//! The monitoring snapshot plane — epoch-versioned, atomically-swapped
+//! cluster state for the scheduling fast path.
+//!
+//! §3.1.2 has EdgeFaaS "fetch the Prometheus resource metrics from each
+//! resource" during phase-1 scheduling — a synchronous scrape per resource
+//! per decision, O(resources) network round trips on the exact path the
+//! two-phase scheduler (§3.2.3) exercises under load. The snapshot plane
+//! moves those scrapes *off* the decision path:
+//!
+//! * A **[`MonitorSnapshot`]** is an immutable point-in-time view: one
+//!   [`UsageSample`] per registered resource (the scraped usage vector plus
+//!   the clock time it was collected) and a dense **[`LatencyMatrix`]**
+//!   lifted from the network topology (all-pairs one-way latencies, one
+//!   Dijkstra sweep per node instead of a per-pair search on every
+//!   placement comparison).
+//!
+//! * The **[`SnapshotPlane`]** publishes snapshots behind an
+//!   `RwLock<Arc<MonitorSnapshot>>`: readers clone the `Arc` (a refcount
+//!   bump under a read lock held for nanoseconds) and then work entirely
+//!   on immutable data; a refresh builds the next snapshot *outside* any
+//!   lock and swaps the pointer in one write. Every publish bumps the
+//!   **epoch** — the version number the coordinator's placement decision
+//!   cache is keyed by, so cached decisions are invalidated exactly when
+//!   the monitoring view changes.
+//!
+//! * **Staleness bound.** Each sample carries `collected_at`; consumers
+//!   (the phase-1 filter) treat samples older than the plane's `max_age`
+//!   as missing and fall back to a direct scrape of that one resource —
+//!   the snapshot accelerates the common case without ever feeding the
+//!   scheduler data older than the bound. With no collector running the
+//!   snapshot is empty and every decision degrades to exactly the old
+//!   per-call-scrape behaviour.
+//!
+//! * **Collector lifecycle.** The refresh loop itself lives in the
+//!   coordinator (`EdgeFaaS::start_monitor_collector`): a background
+//!   thread that re-scrapes every registered resource and publishes, then
+//!   `Clock::sleep`s the refresh interval — clock-generic, so the same
+//!   collector runs under `RealClock` (examples, gateways) and
+//!   `VirtualClock` (tests, benches). The plane only tracks the collector's
+//!   stop flag so exactly one collector runs at a time and
+//!   `stop_monitor_collector` can end it.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::simnet::Topology;
+
+use super::metrics::ResourceUsage;
+
+/// Default staleness bound, seconds: snapshot samples older than this are
+/// treated as missing (phase-1 falls back to a direct scrape).
+pub const DEFAULT_SNAPSHOT_MAX_AGE_S: f64 = 5.0;
+
+/// One resource's scraped usage vector plus when it was collected
+/// (coordinator clock seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UsageSample {
+    pub usage: ResourceUsage,
+    pub collected_at: f64,
+}
+
+/// Dense all-pairs one-way latency matrix over the topology's nodes.
+///
+/// Built with one Dijkstra sweep per source node
+/// ([`Topology::latencies_from`]); lookups are a single indexed load, so
+/// placement policies comparing hundreds of candidates never re-run a
+/// shortest-path search. Out-of-range nodes read as `INFINITY`, matching
+/// [`Topology::latency`] for disconnected pairs.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyMatrix {
+    n: usize,
+    data: Vec<f64>,
+}
+
+impl LatencyMatrix {
+    /// An empty matrix (every lookup is `INFINITY`).
+    pub fn empty() -> LatencyMatrix {
+        LatencyMatrix::default()
+    }
+
+    /// Lift the full topology into a dense matrix.
+    pub fn from_topology(topo: &Topology) -> LatencyMatrix {
+        let n = topo.len();
+        let mut data = Vec::with_capacity(n * n);
+        for from in 0..n {
+            data.extend(topo.latencies_from(from));
+        }
+        LatencyMatrix { n, data }
+    }
+
+    /// Number of topology nodes covered.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// One-way latency between two topology nodes, seconds (`INFINITY`
+    /// when either node is out of range or the pair is disconnected).
+    pub fn latency(&self, from: usize, to: usize) -> f64 {
+        if from < self.n && to < self.n {
+            self.data[from * self.n + to]
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// An immutable point-in-time view of cluster state: per-resource usage
+/// samples plus the dense latency matrix. Shared as `Arc<MonitorSnapshot>`;
+/// consumers never lock while reading it.
+#[derive(Debug, Clone)]
+pub struct MonitorSnapshot {
+    /// Version number, bumped on every publish. Epoch 0 is the empty
+    /// initial snapshot (no collector has ever run).
+    pub epoch: u64,
+    /// Coordinator clock time the snapshot was published.
+    pub taken_at: f64,
+    usage: BTreeMap<u32, UsageSample>,
+    latency: Arc<LatencyMatrix>,
+}
+
+impl MonitorSnapshot {
+    /// The initial (epoch-0) snapshot: no usage samples, the given matrix.
+    pub fn initial(latency: Arc<LatencyMatrix>) -> MonitorSnapshot {
+        MonitorSnapshot { epoch: 0, taken_at: 0.0, usage: BTreeMap::new(), latency }
+    }
+
+    /// The sample for one resource, if any was ever collected.
+    pub fn usage_of(&self, resource: u32) -> Option<&UsageSample> {
+        self.usage.get(&resource)
+    }
+
+    /// The usage vector for one resource *iff* its sample is no older than
+    /// `max_age` at clock time `now` — the staleness-bounded read the
+    /// phase-1 filter performs (a `None` means "scrape directly").
+    pub fn fresh_usage_of(&self, resource: u32, now: f64, max_age: f64) -> Option<&ResourceUsage> {
+        self.usage
+            .get(&resource)
+            .filter(|s| now - s.collected_at <= max_age)
+            .map(|s| &s.usage)
+    }
+
+    /// All samples, ascending resource id.
+    pub fn samples(&self) -> impl Iterator<Item = (u32, &UsageSample)> {
+        self.usage.iter().map(|(k, v)| (*k, v))
+    }
+
+    /// Number of resources with a sample.
+    pub fn len(&self) -> usize {
+        self.usage.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.usage.is_empty()
+    }
+
+    /// The dense latency matrix (always present, even at epoch 0).
+    pub fn latencies(&self) -> &LatencyMatrix {
+        &self.latency
+    }
+
+    /// Shared handle to the matrix (refcount bump).
+    pub fn latencies_arc(&self) -> Arc<LatencyMatrix> {
+        Arc::clone(&self.latency)
+    }
+}
+
+/// The publication point: the current snapshot, its epoch, the staleness
+/// bound, and the running collector's stop flag (at most one collector).
+pub struct SnapshotPlane {
+    current: RwLock<Arc<MonitorSnapshot>>,
+    epoch: AtomicU64,
+    /// Staleness bound in integer nanoseconds (atomic f64 stand-in).
+    max_age_ns: AtomicU64,
+    collector_stop: Mutex<Option<Arc<AtomicBool>>>,
+}
+
+impl SnapshotPlane {
+    /// A plane whose epoch-0 snapshot carries `latency` and no samples.
+    pub fn new(latency: Arc<LatencyMatrix>) -> SnapshotPlane {
+        SnapshotPlane {
+            current: RwLock::new(Arc::new(MonitorSnapshot::initial(latency))),
+            epoch: AtomicU64::new(0),
+            max_age_ns: AtomicU64::new((DEFAULT_SNAPSHOT_MAX_AGE_S * 1e9) as u64),
+            collector_stop: Mutex::new(None),
+        }
+    }
+
+    /// The current snapshot (refcount bump under a read lock).
+    pub fn snapshot(&self) -> Arc<MonitorSnapshot> {
+        Arc::clone(&self.current.read().unwrap())
+    }
+
+    /// The current epoch without touching the snapshot lock.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// The staleness bound, seconds.
+    pub fn max_age(&self) -> f64 {
+        self.max_age_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Set the staleness bound (clamped to >= 0).
+    pub fn set_max_age(&self, max_age_s: f64) {
+        let ns = if max_age_s > 0.0 { (max_age_s * 1e9) as u64 } else { 0 };
+        self.max_age_ns.store(ns, Ordering::Relaxed);
+    }
+
+    /// Publish a new snapshot: bump the epoch and swap the pointer.
+    /// Returns the new epoch. The epoch is assigned *under* the write
+    /// lock, so concurrent publishers (the collector racing a direct
+    /// refresh) install snapshots in strictly increasing epoch order —
+    /// the visible snapshot can never regress to an older epoch.
+    pub fn publish(
+        &self,
+        usage: BTreeMap<u32, UsageSample>,
+        latency: Arc<LatencyMatrix>,
+        now: f64,
+    ) -> u64 {
+        let mut cur = self.current.write().unwrap();
+        let epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        *cur = Arc::new(MonitorSnapshot { epoch, taken_at: now, usage, latency });
+        epoch
+    }
+
+    /// Register a collector's stop flag. Returns `false` (and leaves the
+    /// existing collector alone) when one is already running.
+    pub fn register_collector(&self, stop: Arc<AtomicBool>) -> bool {
+        let mut slot = self.collector_stop.lock().unwrap();
+        match &*slot {
+            Some(existing) if !existing.load(Ordering::SeqCst) => false,
+            _ => {
+                *slot = Some(stop);
+                true
+            }
+        }
+    }
+
+    /// Whether a collector is currently registered and not stopped.
+    pub fn collector_running(&self) -> bool {
+        self.collector_stop
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|s| !s.load(Ordering::SeqCst))
+            .unwrap_or(false)
+    }
+
+    /// Signal the running collector (if any) to stop after its current
+    /// cycle. Does not block on the collector thread.
+    pub fn stop_collector(&self) {
+        if let Some(stop) = self.collector_stop.lock().unwrap().take() {
+            stop.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::{Tier, Topology};
+
+    fn topo() -> Topology {
+        let mut t = Topology::new();
+        let a = t.add_node("a", Tier::Iot);
+        let b = t.add_node("b", Tier::Edge);
+        let c = t.add_node("c", Tier::Cloud);
+        t.add_link(a, b, 0.002, 1e6);
+        t.add_link(b, c, 0.010, 1e6);
+        t
+    }
+
+    #[test]
+    fn matrix_matches_topology_latency() {
+        let t = topo();
+        let m = LatencyMatrix::from_topology(&t);
+        assert_eq!(m.len(), 3);
+        for from in 0..3 {
+            for to in 0..3 {
+                assert!(
+                    (m.latency(from, to) - t.latency(from, to)).abs() < 1e-12,
+                    "{from}->{to}"
+                );
+            }
+        }
+        assert!(m.latency(0, 99).is_infinite());
+        assert!(LatencyMatrix::empty().latency(0, 0).is_infinite());
+    }
+
+    #[test]
+    fn publish_bumps_epoch_and_swaps_atomically() {
+        let m = Arc::new(LatencyMatrix::from_topology(&topo()));
+        let plane = SnapshotPlane::new(Arc::clone(&m));
+        assert_eq!(plane.epoch(), 0);
+        assert!(plane.snapshot().is_empty());
+        let old = plane.snapshot();
+        let mut usage = BTreeMap::new();
+        usage.insert(
+            7u32,
+            UsageSample { usage: ResourceUsage::default(), collected_at: 1.5 },
+        );
+        let e = plane.publish(usage, m, 1.5);
+        assert_eq!(e, 1);
+        assert_eq!(plane.epoch(), 1);
+        // The old Arc is still a valid (immutable) epoch-0 view.
+        assert_eq!(old.epoch, 0);
+        assert!(old.is_empty());
+        let new = plane.snapshot();
+        assert_eq!(new.epoch, 1);
+        assert!(new.usage_of(7).is_some());
+    }
+
+    #[test]
+    fn freshness_is_bounded_by_max_age() {
+        let m = Arc::new(LatencyMatrix::empty());
+        let plane = SnapshotPlane::new(Arc::clone(&m));
+        let mut usage = BTreeMap::new();
+        usage.insert(
+            1u32,
+            UsageSample { usage: ResourceUsage::default(), collected_at: 10.0 },
+        );
+        plane.publish(usage, m, 10.0);
+        let snap = plane.snapshot();
+        assert!(snap.fresh_usage_of(1, 12.0, 5.0).is_some(), "2s old, bound 5s");
+        assert!(snap.fresh_usage_of(1, 16.0, 5.0).is_none(), "6s old, bound 5s");
+        assert!(snap.fresh_usage_of(2, 10.0, 5.0).is_none(), "never sampled");
+    }
+
+    #[test]
+    fn one_collector_at_a_time() {
+        let plane = SnapshotPlane::new(Arc::new(LatencyMatrix::empty()));
+        assert!(!plane.collector_running());
+        let s1 = Arc::new(AtomicBool::new(false));
+        assert!(plane.register_collector(Arc::clone(&s1)));
+        assert!(plane.collector_running());
+        assert!(!plane.register_collector(Arc::new(AtomicBool::new(false))));
+        plane.stop_collector();
+        assert!(s1.load(Ordering::SeqCst), "stop flag raised");
+        assert!(!plane.collector_running());
+        // A stopped slot can be replaced.
+        assert!(plane.register_collector(Arc::new(AtomicBool::new(false))));
+    }
+}

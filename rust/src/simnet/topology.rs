@@ -189,6 +189,49 @@ impl Topology {
         self.route(from, to).map(|r| r.latency).unwrap_or(f64::INFINITY)
     }
 
+    /// One-way latency from `from` to *every* node, in node order
+    /// (`INFINITY` for unreachable nodes; `0.0` at `from` itself). One
+    /// Dijkstra pass over the whole graph — the building block of the
+    /// monitoring plane's dense latency matrix
+    /// ([`crate::monitor::snapshot::LatencyMatrix`]), which needs all-pairs
+    /// distances without paying a per-pair shortest-path search.
+    pub fn latencies_from(&self, from: NodeId) -> Vec<f64> {
+        let n = self.nodes.len();
+        let mut dist = vec![f64::INFINITY; n];
+        if from >= n {
+            return dist;
+        }
+        #[derive(PartialEq)]
+        struct Item(f64, NodeId);
+        impl Eq for Item {}
+        impl PartialOrd for Item {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for Item {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                o.0.total_cmp(&self.0)
+            }
+        }
+        let mut heap = BinaryHeap::new();
+        dist[from] = 0.0;
+        heap.push(Item(0.0, from));
+        while let Some(Item(d, u)) = heap.pop() {
+            if d > dist[u] {
+                continue;
+            }
+            for &(v, li) in &self.adj[u] {
+                let nd = d + self.links[li].rtt / 2.0;
+                if nd < dist[v] {
+                    dist[v] = nd;
+                    heap.push(Item(nd, v));
+                }
+            }
+        }
+        dist
+    }
+
     /// The node of `tier` with minimum latency from `from` (NaN-safe:
     /// `total_cmp` sorts NaN distances last instead of tying).
     pub fn closest(&self, from: NodeId, tier: Tier) -> Option<NodeId> {
@@ -301,6 +344,25 @@ mod tests {
         let r = t.route(a, b).unwrap();
         assert_eq!(r.hops, vec![a, m, b], "two fast hops beat one slow hop");
         assert_eq!(r.bw, mbps(10.0));
+    }
+
+    #[test]
+    fn latencies_from_matches_per_pair_routes() {
+        let (t, i, e, c) = line3();
+        let d = t.latencies_from(i);
+        for to in [i, e, c] {
+            assert!(
+                (d[to] - t.latency(i, to)).abs() < 1e-12,
+                "single-sweep distance to {to} diverges from route()"
+            );
+        }
+        assert_eq!(d[i], 0.0);
+        // Disconnected and out-of-range nodes are INFINITY.
+        let mut t2 = Topology::new();
+        let a = t2.add_node("a", Tier::Iot);
+        let b = t2.add_node("b", Tier::Cloud);
+        assert!(t2.latencies_from(a)[b].is_infinite());
+        assert!(t2.latencies_from(99).iter().all(|d| d.is_infinite()));
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Integration coverage for the monitoring snapshot plane and the
+//! placement decision cache (ISSUE 5): cache hits on repeated
+//! `schedule_function` calls, invalidation on resource (de)registration
+//! and snapshot epoch bumps, `reschedule_function` bypassing the cache,
+//! staleness fallback to direct scrapes under `VirtualClock`, and the
+//! clock-generic background collector.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use edgefaas::backup::DurableKv;
+use edgefaas::cluster::spec::ResourceSpec;
+use edgefaas::coordinator::functions::FunctionPackage;
+use edgefaas::coordinator::scheduler::{FunctionCreation, LocalityScheduler, Schedule, ScheduleCtx};
+use edgefaas::coordinator::{
+    Affinity, AffinityType, EdgeFaaS, FunctionConfig, Reduce, Requirements, ResourceId,
+    ResourceHandle,
+};
+use edgefaas::monitor::ResourceUsage;
+use edgefaas::simnet::topology::mbps;
+use edgefaas::simnet::{Clock, RealClock, Tier, Topology, VirtualClock};
+use edgefaas::testbed::paper_testbed;
+use edgefaas::util::bytes::Bytes;
+use edgefaas::util::json::Json;
+
+/// A phase-2 policy that counts invocations and delegates to the default.
+struct SpyScheduler {
+    calls: Arc<AtomicUsize>,
+}
+
+impl Schedule for SpyScheduler {
+    fn schedule(
+        &self,
+        request: &FunctionCreation,
+        ctx: &ScheduleCtx<'_>,
+    ) -> anyhow::Result<Vec<ResourceId>> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        LocalityScheduler.schedule(request, ctx)
+    }
+}
+
+fn iot_request(anchor: ResourceId) -> FunctionCreation {
+    FunctionCreation {
+        app: "t".into(),
+        function: FunctionConfig {
+            name: "gen".into(),
+            dependencies: vec![],
+            requirements: Requirements::default(),
+            affinity: Affinity { nodetype: Tier::Iot, affinitytype: AffinityType::Data },
+            reduce: Reduce::Auto,
+        },
+        data_locations: vec![anchor],
+        dep_locations: vec![],
+    }
+}
+
+#[test]
+fn decision_cache_hits_and_invalidates() {
+    let b = paper_testbed(Arc::new(RealClock::new()));
+    let calls = Arc::new(AtomicUsize::new(0));
+    b.faas.set_scheduler(Arc::new(SpyScheduler { calls: Arc::clone(&calls) }));
+    let req = iot_request(b.iot[0]);
+
+    // At epoch 0 (nothing ever collected) decisions are live scrapes, so
+    // the cache is inert: every call runs the policy.
+    assert_eq!(b.faas.snapshot_epoch(), 0);
+    b.faas.schedule_function(&req).unwrap();
+    b.faas.schedule_function(&req).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 2, "no memoizing without a snapshot");
+    assert_eq!(b.faas.schedule_cache_stats(), (0, 0));
+
+    // With a fresh snapshot: first call is a miss, the repeat is a pure
+    // cache hit — the policy (and phase 1) never re-run, the placement is
+    // identical.
+    assert_eq!(b.faas.refresh_monitor_snapshot(), 1);
+    let p1 = b.faas.schedule_function(&req).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 3);
+    let p2 = b.faas.schedule_function(&req).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 3, "repeat must be served from the cache");
+    assert_eq!(p1, p2);
+    let (hits, misses) = b.faas.schedule_cache_stats();
+    assert_eq!((hits, misses), (1, 1));
+
+    // A snapshot epoch bump invalidates every cached decision.
+    assert_eq!(b.faas.refresh_monitor_snapshot(), 2);
+    b.faas.schedule_function(&req).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 4, "epoch bump must invalidate");
+
+    // Registering a resource invalidates; so does unregistering it.
+    let donor = b.faas.resource(b.iot[0]).unwrap();
+    let spec = ResourceSpec::paper_iot("pi-extra:8080");
+    let extra = b.faas.register(spec, donor.handle.clone(), donor.net_node).unwrap();
+    b.faas.schedule_function(&req).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 5, "registration must invalidate");
+    b.faas.unregister(extra).unwrap();
+    b.faas.schedule_function(&req).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 6, "deregistration must invalidate");
+
+    // A different anchor set is a different key, not a hit.
+    b.faas.schedule_function(&iot_request(b.iot[1])).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 7);
+
+    // Disabling the cache forces a policy run per call.
+    b.faas.set_schedule_cache(false);
+    b.faas.schedule_function(&req).unwrap();
+    b.faas.schedule_function(&req).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 9);
+}
+
+#[test]
+fn reschedule_function_bypasses_the_cache() {
+    let b = paper_testbed(Arc::new(RealClock::new()));
+    b.executor.register("img/noop", |_: &[u8]| Ok(vec![]));
+    let yaml = "\
+application: mono
+entrypoint: f
+dag:
+  - name: f
+    requirements:
+      memory: 1024MB
+    affinity:
+      nodetype: edge
+      affinitytype: data
+    reduce: 1
+";
+    let mut data = HashMap::new();
+    data.insert("f".to_string(), vec![b.iot[0]]);
+    let plan = b.faas.configure_application(yaml, &data).unwrap();
+    assert_eq!(plan["f"], vec![b.edges[0]]);
+    let pkg = FunctionPackage { code: "img/noop".into() };
+    b.faas.deploy_function("mono", "f", &pkg).unwrap();
+    // A fresh snapshot makes the decision cache eligible to engage.
+    b.faas.refresh_monitor_snapshot();
+
+    let calls = Arc::new(AtomicUsize::new(0));
+    b.faas.set_scheduler(Arc::new(SpyScheduler { calls: Arc::clone(&calls) }));
+    let (h0, m0) = b.faas.schedule_cache_stats();
+
+    // Two identical reschedules each re-run the policy — no memoization,
+    // and the cache counters do not move (bypass is neither hit nor miss).
+    b.faas.reschedule_function("mono", "f", &pkg, vec![b.iot[0]]).unwrap();
+    b.faas.reschedule_function("mono", "f", &pkg, vec![b.iot[0]]).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 2, "reschedule must bypass the cache");
+    assert_eq!(b.faas.schedule_cache_stats(), (h0, m0));
+
+    // Prime the cache: a schedule_function miss, then a hit.
+    let app = b.faas.app("mono").unwrap();
+    let req = FunctionCreation {
+        app: "mono".into(),
+        function: app.config.function("f").unwrap().clone(),
+        data_locations: vec![b.iot[0]],
+        dep_locations: vec![],
+    };
+    b.faas.schedule_function(&req).unwrap();
+    b.faas.schedule_function(&req).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 3, "second call is a warm-cache hit");
+    let before = calls.load(Ordering::SeqCst);
+    // Load shift: saturate edge 0, republish the snapshot (so the shift is
+    // visible to snapshot-backed decisions), and reschedule — the bypass
+    // must observe the current monitoring data and migrate, despite the
+    // warm cache still holding the pre-migration placement.
+    let reg0 = b.faas.resource(b.edges[0]).unwrap();
+    reg0.handle.deploy("hog", "img/noop", 127 << 29, 0, &[]).unwrap();
+    reg0.handle.invoke("hog", &Bytes::new()).unwrap();
+    b.faas.refresh_monitor_snapshot();
+    let (old, new) = b.faas.reschedule_function("mono", "f", &pkg, vec![b.iot[0]]).unwrap();
+    assert_eq!(old, vec![b.edges[0]]);
+    assert_eq!(new, vec![b.edges[1]], "bypass must see the saturated edge");
+    assert_eq!(calls.load(Ordering::SeqCst), before + 1);
+    // The pre-migration placement is gone from the cache (migration and
+    // epoch bump both invalidate): a fresh schedule recomputes.
+    assert_eq!(b.faas.schedule_function(&req).unwrap(), vec![b.edges[1]]);
+}
+
+// ---------------------------------------------------------------- plane --
+
+/// A handle whose only meaningful verb is `usage()`: fixed usage vector,
+/// call counter. Scheduling never touches the other verbs.
+struct CountingHandle {
+    usage: ResourceUsage,
+    scrapes: Arc<AtomicUsize>,
+}
+
+impl ResourceHandle for CountingHandle {
+    fn deploy(
+        &self,
+        _name: &str,
+        _image: &str,
+        _memory: u64,
+        _gpus: u32,
+        _labels: &[(String, String)],
+    ) -> anyhow::Result<()> {
+        anyhow::bail!("unused")
+    }
+    fn remove(&self, _name: &str) -> anyhow::Result<()> {
+        anyhow::bail!("unused")
+    }
+    fn invoke(&self, _name: &str, _payload: &Bytes) -> anyhow::Result<(Bytes, f64)> {
+        anyhow::bail!("unused")
+    }
+    fn list(&self) -> anyhow::Result<Vec<String>> {
+        Ok(vec![])
+    }
+    fn describe(&self, _name: &str) -> anyhow::Result<Json> {
+        anyhow::bail!("unused")
+    }
+    fn usage(&self) -> anyhow::Result<ResourceUsage> {
+        self.scrapes.fetch_add(1, Ordering::SeqCst);
+        Ok(self.usage)
+    }
+    fn make_bucket(&self, _bucket: &str) -> anyhow::Result<()> {
+        anyhow::bail!("unused")
+    }
+    fn remove_bucket(&self, _bucket: &str) -> anyhow::Result<()> {
+        anyhow::bail!("unused")
+    }
+    fn put_object(&self, _bucket: &str, _object: &str, _data: Bytes) -> anyhow::Result<()> {
+        anyhow::bail!("unused")
+    }
+    fn get_object(&self, _bucket: &str, _object: &str) -> anyhow::Result<Bytes> {
+        anyhow::bail!("unused")
+    }
+    fn remove_object(&self, _bucket: &str, _object: &str) -> anyhow::Result<()> {
+        anyhow::bail!("unused")
+    }
+    fn list_objects(&self, _bucket: &str) -> anyhow::Result<Vec<String>> {
+        Ok(vec![])
+    }
+    fn stored_bytes(&self) -> anyhow::Result<u64> {
+        Ok(0)
+    }
+}
+
+/// Two IoT resources on a two-node topology, every scrape counted.
+fn counting_bed(clock: Arc<dyn Clock>) -> (Arc<EdgeFaaS>, Vec<ResourceId>, Arc<AtomicUsize>) {
+    let mut topo = Topology::new();
+    let a = topo.add_node("a", Tier::Iot);
+    let b = topo.add_node("b", Tier::Iot);
+    topo.add_link(a, b, 0.002, mbps(100.0));
+    let faas = Arc::new(EdgeFaaS::with_parts(topo, DurableKv::ephemeral(), clock));
+    let scrapes = Arc::new(AtomicUsize::new(0));
+    let usage = ResourceUsage {
+        cpu_frac: 0.1,
+        mem_used: 1 << 30,
+        mem_total: 4 << 30,
+        io_bytes_per_s: 0.0,
+        gpu_frac: 0.0,
+        gpus_used: 0,
+        gpus_total: 0,
+    };
+    let mut ids = Vec::new();
+    for (i, node) in [a, b].into_iter().enumerate() {
+        let handle = Arc::new(CountingHandle { usage, scrapes: Arc::clone(&scrapes) });
+        let spec = ResourceSpec::paper_iot(&format!("pi{i}:8080"));
+        ids.push(faas.register(spec, handle, node).unwrap());
+    }
+    (faas, ids, scrapes)
+}
+
+#[test]
+fn stale_snapshot_falls_back_to_direct_scrape() {
+    let clock = Arc::new(VirtualClock::new());
+    let (faas, ids, scrapes) = counting_bed(clock);
+    faas.set_schedule_cache(false); // count phase-1 reads per call
+    let req = iot_request(ids[0]);
+
+    // Empty snapshot (epoch 0): every decision scrapes each resource.
+    faas.schedule_function(&req).unwrap();
+    assert_eq!(scrapes.load(Ordering::SeqCst), 2, "per-call scrape without a snapshot");
+
+    // One refresh scrapes everything once; decisions then read the
+    // snapshot while it is within the staleness bound.
+    faas.refresh_monitor_snapshot();
+    assert_eq!(scrapes.load(Ordering::SeqCst), 4);
+    let from_snapshot = faas.schedule_function(&req).unwrap();
+    faas.schedule_function(&req).unwrap();
+    assert_eq!(scrapes.load(Ordering::SeqCst), 4, "fresh snapshot: zero scrapes per decision");
+
+    // Age the snapshot past max_age (virtual time): decisions fall back
+    // to direct scrapes again.
+    assert_eq!(faas.snapshot_max_age(), 5.0, "documented default");
+    faas.clock().sleep(10.0);
+    let from_fallback = faas.schedule_function(&req).unwrap();
+    assert_eq!(scrapes.load(Ordering::SeqCst), 6, "stale snapshot: per-resource fallback");
+    assert_eq!(from_snapshot, from_fallback, "same monitoring data, same placement");
+
+    // Widening the bound makes the existing sample fresh again.
+    faas.set_snapshot_max_age(100.0);
+    faas.schedule_function(&req).unwrap();
+    assert_eq!(scrapes.load(Ordering::SeqCst), 6);
+}
+
+#[test]
+fn collector_is_clock_generic_and_stoppable() {
+    // Virtual clock: the Clock::sleep-driven loop must advance virtual
+    // time and publish epochs without any real blocking.
+    let clock = Arc::new(VirtualClock::new());
+    let (faas, _ids, _scrapes) = counting_bed(clock);
+    assert!(faas.start_monitor_collector(5.0));
+    assert!(!faas.start_monitor_collector(5.0), "one collector at a time");
+    assert!(faas.monitor_collector_running());
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while faas.snapshot_epoch() < 3 {
+        assert!(std::time::Instant::now() < deadline, "collector never published");
+        std::thread::yield_now();
+    }
+    assert!(faas.clock().now() >= 5.0, "each cycle advances virtual time by the interval");
+    let snap = faas.monitor_snapshot();
+    assert_eq!(snap.len(), 2, "every registered resource sampled");
+    faas.stop_monitor_collector();
+    assert!(!faas.monitor_collector_running());
+    // The loop re-checks the flag each cycle; after a grace period the
+    // epoch must be quiescent.
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let e1 = faas.snapshot_epoch();
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    assert_eq!(faas.snapshot_epoch(), e1, "stopped collector publishes nothing");
+    // A new collector can start after the old one stopped.
+    assert!(faas.start_monitor_collector(1.0));
+    faas.stop_monitor_collector();
+}
+
+#[test]
+fn collector_under_real_clock_serves_phase1_without_scrapes() {
+    let (faas, ids, scrapes) = counting_bed(Arc::new(RealClock::new()));
+    faas.set_schedule_cache(false);
+    assert!(faas.start_monitor_collector(0.005));
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while faas.snapshot_epoch() == 0 {
+        assert!(std::time::Instant::now() < deadline, "collector never published");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    // Decisions now read the snapshot: the only scrapes are the
+    // collector's own refresh cycles (2 per epoch), never 2 per decision.
+    // Epoch is read before the scrape counter so a refresh racing the two
+    // reads can only make the residue *under*-count collector scrapes.
+    let before_epochs = faas.snapshot_epoch();
+    let before = scrapes.load(Ordering::SeqCst);
+    for _ in 0..50 {
+        faas.schedule_function(&iot_request(ids[0])).unwrap();
+    }
+    // Quiesce the collector before the closing reads.
+    faas.stop_monitor_collector();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let epochs = (faas.snapshot_epoch() - before_epochs) as usize;
+    let residue = scrapes.load(Ordering::SeqCst).saturating_sub(before + 2 * epochs);
+    // 50 decisions scraping would add 100; the read race adds at most one
+    // refresh cycle of noise.
+    assert!(
+        residue <= 2,
+        "decisions must not scrape while the snapshot is fresh (residue {residue})"
+    );
+}
