@@ -1,7 +1,7 @@
 //! Ablation — workflow concurrency and dispatch overhead through the
 //! execution engine.
 //!
-//! Four sections:
+//! Seven sections:
 //!
 //! 1. **Wall clock**: throughput of 1 / 4 / 16 / 64 concurrent runs of a
 //!    two-stage workflow (2 IoT generators -> 1 edge reducer) whose stages
@@ -45,9 +45,21 @@
 //!    Non-smoke asserts >= 5x snapshot-vs-scrape calls/sec at 64
 //!    resources.
 //!
+//! 7. **Network plane (keep-alive + epoll)**: echo-request throughput and
+//!    per-request p50/p95 at 1/16/64 concurrent clients in three modes —
+//!    (a) fresh connection per request against the thread-per-connection
+//!    fallback server (the pre-refactor behaviour), (b) the pooled
+//!    keep-alive client against the same fallback server, (c) the pooled
+//!    client against the platform-default server (the epoll reactor on
+//!    Linux) — plus a 1 MiB object PUT/GET series through the store
+//!    gateway for the zero-copy body path. Written to `BENCH_net.json`
+//!    (override with `BENCH_NET_OUT`). Non-smoke on Linux asserts >= 2x
+//!    requests/sec for pooled+epoll over the fresh-connection baseline at
+//!    64 clients.
+//!
 //! `ABLATION_SMOKE=1` runs a tiny-N smoke pass (CI): only the hot-path,
-//! mixed-QoS, contention and control-plane sections, no throughput
-//! assertions, but all four JSON artifacts are still produced.
+//! mixed-QoS, contention, control-plane and network sections, no
+//! throughput assertions, but all five JSON artifacts are still produced.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -63,10 +75,16 @@ use edgefaas::coordinator::{
 };
 use edgefaas::monitor::scrape::MetricsGateway;
 use edgefaas::monitor::{MetricsRegistry, ResourceUsage};
+use edgefaas::objstore::gateway::{client as store_client, StoreGateway};
+use edgefaas::objstore::ObjectStore;
 use edgefaas::simnet::topology::mbps;
 use edgefaas::simnet::{Clock, RealClock, Tier, Topology, VirtualClock};
 use edgefaas::testbed::{paper_testbed, TestBed};
 use edgefaas::util::bytes::Bytes;
+use edgefaas::util::http::{
+    self as http, Handler as HttpHandler, Request as HttpRequest, Response as HttpResponse,
+    Server as HttpServer, ServerOptions,
+};
 use edgefaas::util::json::Json;
 
 /// Per-instance modeled compute, seconds (sections 1-2).
@@ -296,6 +314,40 @@ fn schedule_bed(n: usize, addr: &str) -> (Arc<EdgeFaaS>, FunctionCreation) {
         dep_locations: vec![],
     };
     (faas, request)
+}
+
+/// Section 7: `clients` threads each issue `reqs` echo requests against
+/// `server`, fresh-connection (`request_fresh`) or pooled keep-alive
+/// (`request`). Returns (wall seconds, requests/sec, per-request latency
+/// stats across all clients).
+fn net_series(server: &HttpServer, fresh: bool, clients: usize, reqs: usize) -> (f64, f64, Stats) {
+    let addr = server.addr();
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut lat = Vec::with_capacity(reqs);
+                for _ in 0..reqs {
+                    let t = std::time::Instant::now();
+                    let resp = if fresh {
+                        http::request_fresh(&addr, "POST", "/echo", &[], b"x").unwrap()
+                    } else {
+                        http::request(&addr, "POST", "/echo", &[], b"x").unwrap()
+                    };
+                    assert_eq!(resp.status, 200);
+                    lat.push(t.elapsed().as_secs_f64());
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (wall, (clients * reqs) as f64 / wall, Stats::of(all))
 }
 
 fn stats_json(s: &Stats) -> Json {
@@ -647,6 +699,135 @@ fn main() {
     std::fs::write(&schedule_path, sdoc.to_string()).expect("write schedule bench json");
     println!("wrote {schedule_path} (snapshot speedup at {speedup_level} resources: {schedule_speedup:.1}x)");
     drop(metrics_server);
+
+    // ---- Section 7: network plane — keep-alive + epoll throughput. ----
+    http::set_pool_per_addr(64);
+    let clients_levels: Vec<usize> = if smoke { vec![1, 4] } else { vec![1, 16, 64] };
+    let reqs_per_client = if smoke { 10 } else { 200 };
+    let echo: Arc<dyn HttpHandler> =
+        Arc::new(|req: HttpRequest| HttpResponse::bytes(200, req.body));
+    let fallback_opts = ServerOptions { force_fallback: true, ..ServerOptions::default() };
+    // (mode name, fresh connection per request?, server options)
+    let net_modes: Vec<(&str, bool, ServerOptions)> = vec![
+        ("fresh", true, fallback_opts.clone()),
+        ("pooled", false, fallback_opts),
+        ("pooled_epoll", false, ServerOptions::default()),
+    ];
+    let mut tn = Table::new(
+        "Network plane: echo throughput — fresh conns vs pooled keep-alive vs epoll server",
+        &["mode", "clients", "reqs/s", "p50", "p95"],
+    );
+    // (mode, clients, wall, reqs/s, latency stats)
+    let mut net_rows: Vec<(String, usize, f64, f64, Stats)> = Vec::new();
+    for (name, fresh, opts) in net_modes {
+        let server = HttpServer::bind_with(0, 8, Arc::clone(&echo), opts).expect("bind echo");
+        for &c in &clients_levels {
+            let (wall, rate, lat) = net_series(&server, fresh, c, reqs_per_client);
+            tn.row(&[
+                name.into(),
+                c.to_string(),
+                format!("{rate:.0}"),
+                Stats::fmt(lat.p50),
+                Stats::fmt(lat.p95),
+            ]);
+            net_rows.push((name.to_string(), c, wall, rate, lat));
+        }
+    }
+    tn.print();
+    let net_rate = |mode: &str, c: usize| {
+        net_rows
+            .iter()
+            .find(|(m, n, ..)| m == mode && *n == c)
+            .map(|(_, _, _, r, _)| *r)
+            .unwrap_or(f64::NAN)
+    };
+    let top_clients = *clients_levels.last().unwrap();
+    let net_speedup = net_rate("pooled_epoll", top_clients) / net_rate("fresh", top_clients);
+    println!(
+        "\n-> pooled keep-alive + platform server vs fresh connections at {top_clients} \
+         clients: {net_speedup:.2}x"
+    );
+
+    // 1 MiB object PUT/GET through the store gateway: the zero-copy body
+    // path (request body -> store by refcount, stored buffer -> response).
+    let store = Arc::new(ObjectStore::new(1 << 30, "ak", "sk"));
+    let store_server =
+        HttpServer::bind(0, 4, Arc::new(StoreGateway::new(store)) as Arc<dyn HttpHandler>)
+            .expect("bind store");
+    let saddr = store_server.addr();
+    store_client::make_bucket(&saddr, "ak", "sk", "bench").unwrap();
+    let blob = vec![7u8; 1 << 20];
+    let obj_reps = if smoke { 3 } else { 30 };
+    let obj_put = Stats::of(
+        (0..obj_reps)
+            .map(|i| {
+                let name = format!("o{i}");
+                let t = std::time::Instant::now();
+                store_client::put_object(&saddr, "ak", "sk", "bench", &name, &blob).unwrap();
+                t.elapsed().as_secs_f64()
+            })
+            .collect(),
+    );
+    let obj_get = Stats::of(
+        (0..obj_reps)
+            .map(|i| {
+                let name = format!("o{i}");
+                let t = std::time::Instant::now();
+                let got = store_client::get_object(&saddr, "ak", "sk", "bench", &name).unwrap();
+                assert_eq!(got.len(), blob.len());
+                t.elapsed().as_secs_f64()
+            })
+            .collect(),
+    );
+    println!(
+        "1 MiB object over keep-alive: PUT p50 {} GET p50 {}",
+        Stats::fmt(obj_put.p50),
+        Stats::fmt(obj_get.p50)
+    );
+
+    let mut ndoc = Json::obj();
+    let mut mode_arr = Vec::new();
+    for mode in ["fresh", "pooled", "pooled_epoll"] {
+        let mut o = Json::obj();
+        let rows = net_rows.iter().filter(|(m, ..)| m == mode);
+        let series = rows
+            .map(|(_, c, wall, rate, lat)| {
+                let mut r = stats_json(lat);
+                r.set("clients", (*c as u64).into())
+                    .set("wall_s", (*wall).into())
+                    .set("requests_per_s", (*rate).into());
+                r
+            })
+            .collect();
+        o.set("mode", mode.into()).set("series", Json::Arr(series));
+        mode_arr.push(o);
+    }
+    let mut obj = Json::obj();
+    obj.set("put_s", stats_json(&obj_put)).set("get_s", stats_json(&obj_get));
+    ndoc.set("bench", "net".into())
+        .set("smoke", smoke.into())
+        .set("epoll_available", cfg!(target_os = "linux").into())
+        .set("clients", Json::Arr(clients_levels.iter().map(|&n| Json::Num(n as f64)).collect()))
+        .set("requests_per_client", (reqs_per_client as u64).into())
+        .set("modes", Json::Arr(mode_arr))
+        .set("object_1mib", obj)
+        .set("speedup_level_clients", (top_clients as u64).into())
+        .set("speedup_pooled_epoll_vs_fresh", net_speedup.into());
+    let net_path =
+        std::env::var("BENCH_NET_OUT").unwrap_or_else(|_| "BENCH_net.json".to_string());
+    std::fs::write(&net_path, ndoc.to_string()).expect("write net bench json");
+    println!("wrote {net_path} (pooled+epoll speedup at {top_clients} clients: {net_speedup:.2}x)");
+
+    if !smoke && cfg!(target_os = "linux") {
+        assert!(
+            net_speedup >= 2.0,
+            "pooled keep-alive + epoll must at least double fresh-connection throughput at \
+             {top_clients} concurrent clients: fresh {:.0}/s pooled+epoll {:.0}/s \
+             ({net_speedup:.2}x < 2x)",
+            net_rate("fresh", top_clients),
+            net_rate("pooled_epoll", top_clients),
+        );
+    }
 
     if !smoke {
         assert!(

@@ -123,10 +123,11 @@ impl FaasGateway {
     }
 
     fn invoke(&self, name: &str, req: &Request) -> Response {
-        // Process boundary: copy the request body into a shared buffer once.
-        match self.backend.invoke(name, &Bytes::copy_from(&req.body)) {
+        // The parsed body is already a shared buffer; no copy on the way in
+        // or out.
+        match self.backend.invoke(name, &req.body) {
             Ok((out, latency)) => {
-                let mut r = Response::bytes(200, out.to_vec());
+                let mut r = Response::bytes(200, out);
                 r.headers.insert("X-Duration-Seconds".into(), format!("{latency:.6}"));
                 r
             }
@@ -297,6 +298,16 @@ impl<'a> FrameReader<'a> {
         self.take(len)
     }
 
+    /// Like [`FrameReader::blob`], but returns the blob's byte range so a
+    /// caller holding the backing [`Bytes`] can slice a zero-copy window
+    /// instead of copying the payload out.
+    fn blob_range(&mut self) -> anyhow::Result<(usize, usize)> {
+        let len = self.u32()? as usize;
+        let start = self.pos;
+        self.take(len)?;
+        Ok((start, start + len))
+    }
+
     fn done(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.pos == self.buf.len(), "trailing bytes after batch frames");
         Ok(())
@@ -322,15 +333,17 @@ pub(crate) fn encode_binary_calls(calls: &[(String, Bytes)]) -> Vec<u8> {
     out
 }
 
-/// Decode a binary batch request body into `(name, payload)` calls.
-fn decode_binary_calls(body: &[u8]) -> anyhow::Result<Vec<(String, Bytes)>> {
+/// Decode a binary batch request body into `(name, payload)` calls. Each
+/// payload is a window into `body`'s allocation — frames stream straight
+/// from the request buffer without a copy.
+fn decode_binary_calls(body: &Bytes) -> anyhow::Result<Vec<(String, Bytes)>> {
     let mut r = FrameReader::new(body)?;
     let count = r.u32()? as usize;
     let mut calls = Vec::with_capacity(count.min(4096));
     for _ in 0..count {
         let name = std::str::from_utf8(r.blob()?)?.to_string();
-        let payload = Bytes::copy_from(r.blob()?);
-        calls.push((name, payload));
+        let (start, end) = r.blob_range()?;
+        calls.push((name, body.slice(start, end)));
     }
     r.done()?;
     Ok(calls)
@@ -358,9 +371,10 @@ fn encode_binary_results(results: &[anyhow::Result<(Bytes, f64)>]) -> Vec<u8> {
     out
 }
 
-/// Decode a binary batch response body into per-entry results.
+/// Decode a binary batch response body into per-entry results; outputs are
+/// zero-copy windows into `body`.
 pub(crate) fn decode_binary_results(
-    body: &[u8],
+    body: &Bytes,
     expected: usize,
 ) -> anyhow::Result<Vec<anyhow::Result<(Bytes, f64)>>> {
     let mut r = FrameReader::new(body)?;
@@ -371,8 +385,8 @@ pub(crate) fn decode_binary_results(
         match r.u8()? {
             1 => {
                 let latency = r.f64()?;
-                let out = Bytes::copy_from(r.blob()?);
-                results.push(Ok((out, latency)));
+                let (start, end) = r.blob_range()?;
+                results.push(Ok((body.slice(start, end), latency)));
             }
             0 => {
                 let msg = String::from_utf8_lossy(r.blob()?).to_string();
@@ -468,7 +482,12 @@ pub mod client {
     }
 
     /// Invoke a function synchronously; returns (output, reported latency).
-    pub fn invoke(addr: &str, name: &str, payload: &[u8]) -> anyhow::Result<(Vec<u8>, f64)> {
+    /// The output shares the response buffer (no copy).
+    pub fn invoke(
+        addr: &str,
+        name: &str,
+        payload: &[u8],
+    ) -> anyhow::Result<(crate::util::bytes::Bytes, f64)> {
         let resp = http::post_bytes(addr, &format!("/function/{name}"), payload)?;
         if !resp.ok() {
             anyhow::bail!(
@@ -795,14 +814,23 @@ mod tests {
         assert_eq!(encoded.len(), 8 + (4 + 1) + (4 + 4));
         let results =
             vec![Ok((Bytes::copy_from(&[0xde, 0xad]), 0.25)), Err(anyhow::anyhow!("boom"))];
-        let body = encode_binary_results(&results);
+        let body = Bytes::from(encode_binary_results(&results));
         let decoded = decode_binary_results(&body, 2).unwrap();
         assert_eq!(decoded[0].as_ref().unwrap().0, &[0xde, 0xad][..]);
         assert_eq!(decoded[0].as_ref().unwrap().1, 0.25);
+        // Zero-copy: the decoded output is a window into the response body.
+        assert_eq!(
+            decoded[0].as_ref().unwrap().0.as_slice().as_ptr(),
+            unsafe { body.as_slice().as_ptr().add(8 + 1 + 8 + 4) },
+            "output blob shares the wire buffer"
+        );
         assert!(decoded[1].as_ref().unwrap_err().to_string().contains("boom"));
         assert!(decode_binary_results(&body, 3).is_err(), "arity checked");
-        assert!(decode_binary_results(b"EFB1", 0).is_err(), "truncated header");
-        assert!(decode_binary_results(b"NOPE\x00\x00\x00\x00", 0).is_err(), "bad magic");
+        assert!(decode_binary_results(&Bytes::from(&b"EFB1"[..]), 0).is_err(), "truncated header");
+        assert!(
+            decode_binary_results(&Bytes::from(&b"NOPE\x00\x00\x00\x00"[..]), 0).is_err(),
+            "bad magic"
+        );
         // A frame claiming more bytes than the body holds must not panic
         // (or allocate) — it errors.
         let mut bad = Vec::from(&b"EFB1"[..]);
@@ -810,7 +838,7 @@ mod tests {
         bad.push(1);
         bad.extend_from_slice(&0.0f64.to_le_bytes());
         bad.extend_from_slice(&999u32.to_le_bytes());
-        assert!(decode_binary_results(&bad, 1).is_err(), "truncated blob");
+        assert!(decode_binary_results(&Bytes::from(bad), 1).is_err(), "truncated blob");
     }
 
     /// A stand-in for an old, JSON-only gateway: refuses the binary batch

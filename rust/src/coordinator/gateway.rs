@@ -396,7 +396,10 @@ impl Handler for EdgeFaasGateway {
             ("PUT", ["apps", app, "objects", bucket, rest @ ..]) if !rest.is_empty() => {
                 Self::ok_or_500((|| {
                     let object = rest.join("/");
-                    let url = self.faas.put_object(app, bucket, &object, &req.body)?;
+                    // Zero-copy hand-off: the request body (a window into the
+                    // connection's read buffer) moves into the store by
+                    // refcount when the owning backend is local.
+                    let url = self.faas.put_object_bytes(app, bucket, &object, req.body.clone())?;
                     let mut o = Json::obj();
                     o.set("url", url.to_string().as_str().into());
                     Ok(Response::json(201, &o))
@@ -408,7 +411,7 @@ impl Handler for EdgeFaasGateway {
                     .get("url")
                     .ok_or_else(|| anyhow::anyhow!("missing url parameter"))?;
                 let data = self.faas.get_object(&ObjectUrl::parse(url)?)?;
-                Ok(Response::bytes(200, data.to_vec()))
+                Ok(Response::bytes(200, data))
             })()),
             ("DELETE", ["apps", app, "objects", bucket, rest @ ..]) if !rest.is_empty() => {
                 let object = rest.join("/");

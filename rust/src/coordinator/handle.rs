@@ -226,8 +226,9 @@ impl ResourceHandle for HttpHandle {
     }
 
     fn invoke(&self, name: &str, payload: &Bytes) -> anyhow::Result<(Bytes, f64)> {
-        let (out, lat) = faas_client::invoke(&self.faas_addr, name, payload)?;
-        Ok((Bytes::from(out), lat))
+        // The client already returns a shared buffer (a window into the
+        // HTTP response); no re-wrap copy.
+        faas_client::invoke(&self.faas_addr, name, payload)
     }
 
     fn invoke_batch(&self, calls: &[(String, Bytes)]) -> Vec<anyhow::Result<(Bytes, f64)>> {
@@ -306,8 +307,13 @@ impl ResourceHandle for HttpHandle {
     }
 
     fn get_object(&self, bucket: &str, object: &str) -> anyhow::Result<Bytes> {
-        store_client::get_object(&self.minio_addr, &self.access_key, &self.secret_key, bucket, object)
-            .map(Bytes::from)
+        store_client::get_object(
+            &self.minio_addr,
+            &self.access_key,
+            &self.secret_key,
+            bucket,
+            object,
+        )
     }
 
     fn remove_object(&self, bucket: &str, object: &str) -> anyhow::Result<()> {
@@ -325,7 +331,8 @@ impl ResourceHandle for HttpHandle {
     }
 
     fn stored_bytes(&self) -> anyhow::Result<u64> {
-        // Sum object sizes across buckets via the REST interface.
+        // Sum object sizes across buckets via the REST interface (rides a
+        // pooled keep-alive connection like every other client call).
         let mut total = 0u64;
         let resp = crate::util::http::request(
             &self.minio_addr,
@@ -350,5 +357,78 @@ impl ResourceHandle for HttpHandle {
             }
         }
         Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::faas::NativeExecutor;
+    use crate::cluster::gateway::{FaasGateway, BATCH_BINARY_CONTENT_TYPE};
+    use crate::cluster::spec::ResourceSpec;
+    use crate::simnet::RealClock;
+    use crate::util::http::{Handler, Request, Response, Server, ServerOptions};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    /// A JSON-only peer that counts binary `_batch` probes: refuses the
+    /// binary content type pre-execution (400) the way an old gateway
+    /// would, forwarding everything else to a real [`FaasGateway`].
+    struct CountingJsonOnlyPeer {
+        inner: FaasGateway,
+        binary_probes: Arc<AtomicUsize>,
+    }
+
+    impl Handler for CountingJsonOnlyPeer {
+        fn handle(&self, req: Request) -> Response {
+            if req.headers.get("content-type").map(String::as_str)
+                == Some(BATCH_BINARY_CONTENT_TYPE)
+            {
+                self.binary_probes.fetch_add(1, Ordering::SeqCst);
+                return Response::bad_request("bad json: unexpected byte".to_string());
+            }
+            self.inner.handle(req)
+        }
+    }
+
+    #[test]
+    fn binary_refusal_cache_survives_pooled_connection_recycling() {
+        let exec = Arc::new(NativeExecutor::new());
+        exec.register("img/echo", |p: &[u8]| Ok(p.to_vec()));
+        let backend = Arc::new(FaasBackend::new(
+            ResourceSpec::paper_edge("unused"),
+            exec as Arc<dyn crate::cluster::faas::Executor>,
+            Arc::new(RealClock::new()),
+        ));
+        let probes = Arc::new(AtomicUsize::new(0));
+        let gw = CountingJsonOnlyPeer {
+            inner: FaasGateway::new(Arc::clone(&backend)),
+            binary_probes: Arc::clone(&probes),
+        };
+        // Short idle timeout so the server retires the pooled keep-alive
+        // connection between batches.
+        let opts =
+            ServerOptions { idle_timeout: Duration::from_millis(100), ..ServerOptions::default() };
+        let server = Server::bind_with(0, 2, Arc::new(gw) as Arc<dyn Handler>, opts).unwrap();
+        let addr = server.addr();
+        faas_client::deploy(&addr, "edgepwd", "echo", "img/echo", 1 << 20, 0, &[]).unwrap();
+
+        let handle = HttpHandle::new(addr.clone(), "edgepwd", "", "", "", "");
+        let calls = vec![("echo".to_string(), Bytes::from("hi"))];
+        let results = handle.invoke_batch(&calls);
+        assert_eq!(results[0].as_ref().unwrap().0, &b"hi"[..]);
+        assert_eq!(probes.load(Ordering::SeqCst), 1, "one probe, then refusal cached");
+
+        // Let the server close the idle connection: the pool's copy goes
+        // stale and the next batch rides a brand-new connection.
+        std::thread::sleep(Duration::from_millis(500));
+        let results = handle.invoke_batch(&calls);
+        assert_eq!(results[0].as_ref().unwrap().0, &b"hi"[..]);
+        assert_eq!(
+            probes.load(Ordering::SeqCst),
+            1,
+            "recycled pooled connection must not re-pay the binary probe"
+        );
+        assert!(server.connections_accepted() >= 2, "the first connection was retired");
     }
 }

@@ -66,7 +66,9 @@ pub fn parse_exposition(text: &str) -> BTreeMap<String, f64> {
 }
 
 /// Scrape a resource's `/metrics` endpoint and decode the standard usage
-/// vector.
+/// vector. Rides the shared pooled HTTP client, so periodic scrapes of the
+/// same endpoint (the snapshot collector's steady-state) reuse one
+/// keep-alive connection instead of a fresh TCP handshake per tick.
 pub fn scrape(addr: &str) -> anyhow::Result<ResourceUsage> {
     let resp = get(addr, "/metrics")?;
     if !resp.ok() {

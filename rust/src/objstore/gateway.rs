@@ -68,17 +68,17 @@ impl Handler for StoreGateway {
             ("GET", ["buckets"]) => Ok(Response::json(200, &Json::from(self.store.list_buckets()))),
             ("PUT", ["object", bucket, rest @ ..]) if !rest.is_empty() => {
                 let object = rest.join("/");
-                // Process boundary: the request body is copied into a shared
-                // buffer once; everything downstream is refcounted.
+                // The request body is already a shared window into the
+                // connection's read buffer; storing it is a refcount bump.
                 self.store
-                    .put_object(bucket, &object, crate::util::bytes::Bytes::copy_from(&req.body))
+                    .put_object(bucket, &object, req.body.clone())
                     .map(|()| Response::text(201, "stored"))
             }
             ("GET", ["object", bucket, rest @ ..]) if !rest.is_empty() => {
                 let object = rest.join("/");
-                self.store
-                    .get_object(bucket, &object)
-                    .map(|data| Response::bytes(200, data.to_vec()))
+                // Zero-copy: the stored buffer itself becomes the response
+                // body (one vectored write at the socket).
+                self.store.get_object(bucket, &object).map(|data| Response::bytes(200, data))
             }
             ("DELETE", ["object", bucket, rest @ ..]) if !rest.is_empty() => {
                 let object = rest.join("/");
@@ -134,13 +134,15 @@ pub mod client {
         Ok(())
     }
 
+    /// Fetch an object; the returned buffer shares the HTTP response
+    /// allocation (no copy).
     pub fn get_object(
         addr: &str,
         ak: &str,
         sk: &str,
         bucket: &str,
         object: &str,
-    ) -> anyhow::Result<Vec<u8>> {
+    ) -> anyhow::Result<crate::util::bytes::Bytes> {
         let resp =
             http::request(addr, "GET", &format!("/object/{bucket}/{object}"), &auth(ak, sk), &[])?;
         if !resp.ok() {

@@ -131,6 +131,18 @@ impl PartialEq<&[u8]> for Bytes {
     }
 }
 
+impl<const N: usize> PartialEq<[u8; N]> for Bytes {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<const N: usize> PartialEq<&[u8; N]> for Bytes {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
 impl From<Vec<u8>> for Bytes {
     fn from(v: Vec<u8>) -> Bytes {
         Bytes::from_vec(v)
@@ -226,6 +238,9 @@ mod tests {
         assert_eq!(from_str, from_slice);
         assert_eq!(from_vec, vec![104, 105]);
         assert_eq!(from_vec, &b"hi"[..]);
+        // Array literals too (HTTP tests compare response bodies this way).
+        assert_eq!(from_vec, *b"hi");
+        assert_eq!(from_vec, b"hi");
         assert!(Bytes::new().is_empty());
         assert_eq!(Bytes::default().len(), 0);
         // Deref lets slice-based helpers take &Bytes directly.

@@ -3,23 +3,51 @@
 //! The paper's whole control plane is RESTful: the unified EdgeFaaS gateway,
 //! the per-resource OpenFaaS/faasd gateways, the MinIO endpoints, and the
 //! Prometheus scrape endpoints all speak HTTP. The offline build has no
-//! hyper/tokio, so this module implements the needed subset: request/response
-//! framing with `Content-Length` bodies, a threadpool-backed listener, and a
-//! blocking client. Chunked transfer, TLS and keep-alive pipelining are out
-//! of scope (every exchange is one request/response on a fresh connection,
-//! which matches how OpenFaaS CLI-style clients behave).
+//! hyper/tokio, so this module implements the needed subset — now with a
+//! connection-oriented fast path:
+//!
+//! * **Keep-alive server.** Connections serve many requests. On Linux the
+//!   listener runs a readiness-driven epoll reactor (raw `extern "C"`
+//!   declarations, no crates) owning non-blocking connection state machines:
+//!   read-accumulate → parse → hand off to the worker pool → queue write →
+//!   flush on writable. Everywhere else (and under
+//!   [`ServerOptions::force_fallback`]) a portable thread-per-connection
+//!   loop provides the same semantics. Both paths honor
+//!   `Connection: keep-alive`/`close`, enforce idle + partial-request
+//!   (slowloris) timeouts, and cap requests per connection with a clean
+//!   `Connection: close` downgrade.
+//! * **Pooled client.** The free functions ([`request`], [`get`],
+//!   [`post_json`], [`post_bytes`], [`delete`]) draw keep-alive connections
+//!   from a per-address connection pool with health check-on-checkout,
+//!   bounded size, and idle eviction. [`request_fresh`] preserves the old
+//!   one-shot `Connection: close` behaviour for baselines and benches.
+//! * **Zero-copy bodies.** [`Request`] and [`Response`] carry
+//!   [`Bytes`](super::bytes::Bytes); parsed request bodies are windows into
+//!   the connection's read buffer, and responses go out with one vectored
+//!   write (head + body) instead of per-header `format!` appends.
+//!
+//! Chunked transfer and TLS remain out of scope.
 
-use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
+use std::collections::{BTreeMap, HashMap};
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
+use super::bytes::Bytes;
+#[cfg(target_os = "linux")]
 use super::threadpool::ThreadPool;
 
 /// Maximum accepted body size (128 MiB — a 92 MB paper video fits).
 pub const MAX_BODY: usize = 128 << 20;
+
+/// Maximum accepted header block (request line + headers + CRLFCRLF).
+const MAX_HEAD: usize = 64 << 10;
+
+/// Granularity of timeout checks on blocking fallback sockets.
+const SLICE: Duration = Duration::from_millis(100);
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -30,7 +58,8 @@ pub struct Request {
     /// Decoded query parameters.
     pub query: BTreeMap<String, String>,
     pub headers: BTreeMap<String, String>,
-    pub body: Vec<u8>,
+    /// Body as a window into the connection's read buffer (no copy).
+    pub body: Bytes,
 }
 
 impl Request {
@@ -53,32 +82,34 @@ impl Request {
 pub struct Response {
     pub status: u16,
     pub headers: BTreeMap<String, String>,
-    pub body: Vec<u8>,
+    pub body: Bytes,
 }
 
 impl Response {
     pub fn new(status: u16) -> Response {
-        Response { status, headers: BTreeMap::new(), body: Vec::new() }
+        Response { status, headers: BTreeMap::new(), body: Bytes::new() }
     }
 
     pub fn text(status: u16, body: impl Into<String>) -> Response {
         let mut r = Response::new(status);
         r.headers.insert("Content-Type".into(), "text/plain".into());
-        r.body = body.into().into_bytes();
+        r.body = Bytes::from(body.into());
         r
     }
 
     pub fn json(status: u16, v: &super::json::Json) -> Response {
         let mut r = Response::new(status);
         r.headers.insert("Content-Type".into(), "application/json".into());
-        r.body = v.to_string().into_bytes();
+        r.body = Bytes::from(v.to_string());
         r
     }
 
-    pub fn bytes(status: u16, body: Vec<u8>) -> Response {
+    /// Octet-stream response; accepts `Vec<u8>` or an existing [`Bytes`]
+    /// (the latter is a refcount bump, not a copy).
+    pub fn bytes(status: u16, body: impl Into<Bytes>) -> Response {
         let mut r = Response::new(status);
         r.headers.insert("Content-Type".into(), "application/octet-stream".into());
-        r.body = body;
+        r.body = body.into();
         r
     }
 
@@ -140,45 +171,74 @@ where
     }
 }
 
+/// Tunables for a listener; [`Server::bind`] uses [`ServerOptions::default`].
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Serve with the portable thread-per-connection loop even on Linux
+    /// (tests use this to exercise both paths on one platform).
+    pub force_fallback: bool,
+    /// Close a keep-alive connection idle for this long between requests.
+    pub idle_timeout: Duration,
+    /// Close a connection whose request has arrived only partially for this
+    /// long (slowloris guard).
+    pub request_timeout: Duration,
+    /// After this many requests, answer with `Connection: close`.
+    pub max_requests_per_conn: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> ServerOptions {
+        ServerOptions {
+            force_fallback: false,
+            idle_timeout: Duration::from_secs(5),
+            request_timeout: Duration::from_secs(10),
+            max_requests_per_conn: 1000,
+        }
+    }
+}
+
 /// A running HTTP server; dropping it stops the accept loop.
 pub struct Server {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    conns: Arc<AtomicU64>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
     /// Bind to `127.0.0.1:port` (0 = ephemeral) and serve `handler` on a
-    /// pool of `workers` threads.
+    /// pool of `workers` threads with default options.
     pub fn bind(port: u16, workers: usize, handler: Arc<dyn Handler>) -> anyhow::Result<Server> {
+        Server::bind_with(port, workers, handler, ServerOptions::default())
+    }
+
+    /// [`Server::bind`] with explicit [`ServerOptions`]. On Linux this runs
+    /// the epoll reactor unless `opts.force_fallback` is set; elsewhere the
+    /// thread-per-connection fallback always serves.
+    pub fn bind_with(
+        port: u16,
+        workers: usize,
+        handler: Arc<dyn Handler>,
+        opts: ServerOptions,
+    ) -> anyhow::Result<Server> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let accept_thread = std::thread::Builder::new()
-            .name(format!("http-{}", addr.port()))
-            .spawn(move || {
-                let pool = ThreadPool::new(workers);
-                loop {
-                    if stop2.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let h = Arc::clone(&handler);
-                            if pool.execute(move || serve_conn(stream, h)).is_err() {
-                                break; // workers gone: stop accepting
-                            }
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
-        Ok(Server { addr, stop, accept_thread: Some(accept_thread) })
+        let conns = Arc::new(AtomicU64::new(0));
+        #[cfg(target_os = "linux")]
+        if !opts.force_fallback {
+            let t = epoll::spawn_reactor(
+                listener,
+                workers,
+                handler,
+                opts,
+                Arc::clone(&stop),
+                Arc::clone(&conns),
+            )?;
+            return Ok(Server { addr, stop, conns, accept_thread: Some(t) });
+        }
+        let t = spawn_fallback(listener, workers, handler, opts, &stop, &conns)?;
+        Ok(Server { addr, stop, conns, accept_thread: Some(t) })
     }
 
     /// The bound address, e.g. `127.0.0.1:43211`.
@@ -188,6 +248,12 @@ impl Server {
 
     pub fn port(&self) -> u16 {
         self.addr.port()
+    }
+
+    /// Total TCP connections accepted so far (keep-alive reuse means this
+    /// can be far below the request count; tests assert on it).
+    pub fn connections_accepted(&self) -> u64 {
+        self.conns.load(Ordering::Relaxed)
     }
 }
 
@@ -200,25 +266,152 @@ impl Drop for Server {
     }
 }
 
-fn serve_conn(stream: TcpStream, handler: Arc<dyn Handler>) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
-    let peer = stream.peer_addr().ok();
-    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
-    let resp = match read_request(&mut reader) {
-        Ok(req) => {
-            log::debug!("{} {} from {:?}", req.method, req.path, peer);
-            handler.handle(req)
-        }
-        Err(e) => Response::bad_request(format!("malformed request: {e}")),
-    };
-    let mut stream = stream;
-    let _ = write_response(&mut stream, &resp);
+// ------------------------------------------------- portable fallback path --
+
+fn spawn_fallback(
+    listener: TcpListener,
+    workers: usize,
+    handler: Arc<dyn Handler>,
+    opts: ServerOptions,
+    stop: &Arc<AtomicBool>,
+    conns: &Arc<AtomicU64>,
+) -> anyhow::Result<std::thread::JoinHandle<()>> {
+    // Keep-alive pins a connection to its thread, so the fallback dedicates
+    // a thread per connection instead of a fixed pool slot (a pool would let
+    // one idle keep-alive client starve fresh connections). `workers` only
+    // sizes the epoll reactor's handler pool.
+    let _ = workers;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::clone(stop);
+    let conns = Arc::clone(conns);
+    let t = std::thread::Builder::new()
+        .name(format!("http-{}", listener.local_addr()?.port()))
+        .spawn(move || loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    conns.fetch_add(1, Ordering::Relaxed);
+                    let h = Arc::clone(&handler);
+                    let o = opts.clone();
+                    let s = Arc::clone(&stop);
+                    std::thread::spawn(move || serve_conn(stream, h, o, s));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => break,
+            }
+        })?;
+    Ok(t)
 }
 
-fn read_request(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Request> {
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
+/// Serve one connection until close/timeout/stop (fallback path). Blocking
+/// reads run in `SLICE`-sized timeouts so deadlines and the stop flag are
+/// checked between slices.
+fn serve_conn(
+    stream: TcpStream,
+    handler: Arc<dyn Handler>,
+    opts: ServerOptions,
+    stop: Arc<AtomicBool>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(SLICE));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let peer = stream.peer_addr().ok();
+    let mut stream = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut served = 0usize;
+    'conn: loop {
+        // Accumulate until one complete request sits at the front of `buf`.
+        let idle_since = Instant::now();
+        let mut first_byte_at = if buf.is_empty() { None } else { Some(Instant::now()) };
+        let parsed = loop {
+            match try_parse(&mut buf) {
+                Ok(Some(p)) => break p,
+                Ok(None) => {}
+                Err(e) => {
+                    // Parse error: answer 400 and close.
+                    let resp = Response::bad_request(format!("malformed request: {e}"));
+                    let _ = write_response(&mut stream, &resp, false);
+                    break 'conn;
+                }
+            }
+            if stop.load(Ordering::Relaxed) {
+                break 'conn;
+            }
+            let waited = idle_since.elapsed();
+            match first_byte_at {
+                // Slowloris guard: a request that arrives only partially.
+                Some(t) if t.elapsed() >= opts.request_timeout => break 'conn,
+                // Idle between requests (or never sent one): drop silently.
+                None if waited >= opts.idle_timeout.max(opts.request_timeout) => break 'conn,
+                None if served > 0 && waited >= opts.idle_timeout => break 'conn,
+                _ => {}
+            }
+            let mut chunk = [0u8; 16 * 1024];
+            match stream.read(&mut chunk) {
+                // EOF with no buffered bytes is a clean close (a client
+                // dropping an idle keep-alive conn), not a malformed
+                // request; either way nobody is listening for an error.
+                Ok(0) => break 'conn,
+                Ok(n) => {
+                    if first_byte_at.is_none() {
+                        first_byte_at = Some(Instant::now());
+                    }
+                    buf.extend_from_slice(&chunk[..n]);
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    continue;
+                }
+                Err(_) => break 'conn,
+            }
+        };
+        served += 1;
+        let keep = parsed.keep_alive
+            && served < opts.max_requests_per_conn
+            && !stop.load(Ordering::Relaxed);
+        log::debug!("{} {} from {:?}", parsed.req.method, parsed.req.path, peer);
+        let resp = handler.handle(parsed.req);
+        if write_response(&mut stream, &resp, keep).is_err() || !keep {
+            break;
+        }
+    }
+}
+
+// ------------------------------------------------------- request parsing --
+
+/// One request parsed off the front of a connection buffer.
+struct ParsedRequest {
+    req: Request,
+    /// Whether the client asked to keep the connection open (explicit
+    /// `Connection` header, else the HTTP-version default).
+    keep_alive: bool,
+}
+
+/// Try to parse one complete request from the front of `buf`.
+///
+/// Returns `Ok(None)` when more bytes are needed. On success the request's
+/// bytes are consumed from `buf` (pipelined followers stay in place) and the
+/// body is a zero-copy window into the consumed allocation.
+fn try_parse(buf: &mut Vec<u8>) -> anyhow::Result<Option<ParsedRequest>> {
+    let head_end = match buf.windows(4).position(|w| w == b"\r\n\r\n") {
+        Some(p) => p + 4,
+        None => {
+            if buf.len() > MAX_HEAD {
+                anyhow::bail!("header block exceeds {MAX_HEAD} bytes");
+            }
+            return Ok(None);
+        }
+    };
+    let head = std::str::from_utf8(&buf[..head_end - 4])
+        .map_err(|_| anyhow::anyhow!("non-utf8 header block"))?;
+    let mut lines = head.lines();
+    let line = lines.next().unwrap_or("");
     let mut parts = line.split_whitespace();
     let method = parts.next().ok_or_else(|| anyhow::anyhow!("empty request line"))?.to_string();
     let target = parts.next().ok_or_else(|| anyhow::anyhow!("missing path"))?.to_string();
@@ -226,31 +419,13 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> anyhow::Result<Request> {
     if !version.starts_with("HTTP/1") {
         anyhow::bail!("unsupported version {version}");
     }
-    let headers = read_headers(reader)?;
-    let body = read_body(reader, &headers)?;
-    let (path, query) = split_target(&target);
-    Ok(Request { method, path, query, headers, body })
-}
-
-fn read_headers(reader: &mut impl BufRead) -> anyhow::Result<BTreeMap<String, String>> {
+    let http11 = version != "HTTP/1.0";
     let mut headers = BTreeMap::new();
-    loop {
-        let mut line = String::new();
-        reader.read_line(&mut line)?;
-        let line = line.trim_end();
-        if line.is_empty() {
-            return Ok(headers);
-        }
+    for line in lines {
         if let Some((k, v)) = line.split_once(':') {
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
     }
-}
-
-fn read_body(
-    reader: &mut impl BufRead,
-    headers: &BTreeMap<String, String>,
-) -> anyhow::Result<Vec<u8>> {
     let len: usize = headers
         .get("content-length")
         .map(|v| v.parse())
@@ -260,9 +435,21 @@ fn read_body(
     if len > MAX_BODY {
         anyhow::bail!("body too large: {len}");
     }
-    let mut body = vec![0u8; len];
-    reader.read_exact(&mut body)?;
-    Ok(body)
+    let total = head_end + len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    // Detach this request's bytes; the body becomes a refcounted window.
+    let tail = buf.split_off(total);
+    let owned = std::mem::replace(buf, tail);
+    let body = Bytes::from_vec(owned).slice(head_end, total);
+    let (path, query) = split_target(&target);
+    let keep_alive = match headers.get("connection").map(|c| c.to_ascii_lowercase()) {
+        Some(c) if c.contains("close") => false,
+        Some(c) if c.contains("keep-alive") => true,
+        _ => http11,
+    };
+    Ok(Some(ParsedRequest { req: Request { method, path, query, headers, body }, keep_alive }))
 }
 
 fn split_target(target: &str) -> (String, BTreeMap<String, String>) {
@@ -289,17 +476,20 @@ pub fn url_decode(s: &str) -> String {
     let mut i = 0;
     while i < bytes.len() {
         match bytes[i] {
-            b'%' if i + 2 < bytes.len() + 1 && i + 2 <= bytes.len() - 1 + 1 => {
-                let hex = &s[i + 1..(i + 3).min(s.len())];
-                if hex.len() == 2 {
-                    if let Ok(b) = u8::from_str_radix(hex, 16) {
-                        out.push(b);
-                        i += 3;
-                        continue;
-                    }
+            // A '%' escape needs two following hex bytes; truncated
+            // ("%4", trailing "%") or non-hex escapes pass through
+            // literally. Decoding stays byte-based so a multibyte UTF-8
+            // char right after '%' can never split a `str` slice.
+            b'%' if i + 2 < bytes.len() => {
+                let hi = (bytes[i + 1] as char).to_digit(16);
+                let lo = (bytes[i + 2] as char).to_digit(16);
+                if let (Some(hi), Some(lo)) = (hi, lo) {
+                    out.push((hi * 16 + lo) as u8);
+                    i += 3;
+                } else {
+                    out.push(b'%');
+                    i += 1;
                 }
-                out.push(b'%');
-                i += 1;
             }
             b'+' => {
                 out.push(b' ');
@@ -328,21 +518,595 @@ pub fn url_encode(s: &str) -> String {
     out
 }
 
-fn write_response(stream: &mut TcpStream, resp: &Response) -> anyhow::Result<()> {
-    let mut head = format!("HTTP/1.1 {} {}\r\n", resp.status, resp.reason());
+// ------------------------------------------------------ response writing --
+
+/// Serialize the status line + headers into one `String` (single growing
+/// buffer, no per-header allocations).
+fn encode_head(resp: &Response, keep_alive: bool) -> String {
+    let mut head = String::with_capacity(192);
+    let _ = write!(head, "HTTP/1.1 {} {}\r\n", resp.status, resp.reason());
     for (k, v) in &resp.headers {
-        head.push_str(&format!("{k}: {v}\r\n"));
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
     }
-    head.push_str(&format!("Content-Length: {}\r\nConnection: close\r\n\r\n", resp.body.len()));
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(&resp.body)?;
-    stream.flush()?;
-    Ok(())
+    let _ = write!(head, "Content-Length: {}\r\n", resp.body.len());
+    head.push_str(if keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
+    head
+}
+
+/// Write `head` then `body` with as few syscalls as the kernel allows:
+/// vectored writes while the head is unfinished, plain writes after.
+fn write_all_vectored(w: &mut impl Write, head: &[u8], body: &[u8]) -> std::io::Result<()> {
+    let total = head.len() + body.len();
+    let mut done = 0usize;
+    while done < total {
+        let n = if done < head.len() {
+            w.write_vectored(&[IoSlice::new(&head[done..]), IoSlice::new(body)])?
+        } else {
+            w.write(&body[done - head.len()..])?
+        };
+        if n == 0 {
+            return Err(std::io::ErrorKind::WriteZero.into());
+        }
+        done += n;
+    }
+    w.flush()
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = encode_head(resp, keep_alive);
+    write_all_vectored(stream, head.as_bytes(), &resp.body)
+}
+
+// -------------------------------------------------- epoll reactor (linux) --
+
+/// Readiness-driven server: one reactor thread multiplexes every connection
+/// over `epoll`, handlers run on the worker pool, and finished responses
+/// come back through an `eventfd` wakeup. Raw `extern "C"` declarations
+/// keep the offline build crate-free (same approach as the vendored shims).
+#[cfg(target_os = "linux")]
+mod epoll {
+    use super::*;
+    use std::os::fd::AsRawFd;
+
+    #[repr(C)]
+    #[cfg_attr(any(target_arch = "x86_64", target_arch = "x86"), repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn eventfd(initval: u32, flags: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        fn close(fd: i32) -> i32;
+    }
+
+    const EPOLL_CLOEXEC: i32 = 0x80000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x1;
+    const EPOLLOUT: u32 = 0x4;
+    const EPOLLERR: u32 = 0x8;
+    const EPOLLHUP: u32 = 0x10;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EFD_NONBLOCK: i32 = 0x800;
+    const EFD_CLOEXEC: i32 = 0x80000;
+
+    const TOKEN_LISTENER: u64 = 0;
+    const TOKEN_WAKE: u64 = 1;
+    /// Writes stalled longer than this (peer not draining) kill the conn.
+    const WRITE_STALL: Duration = Duration::from_secs(30);
+
+    /// Owned epoll instance; closes its fd on drop.
+    struct EpollFd(i32);
+
+    impl EpollFd {
+        fn new() -> std::io::Result<EpollFd> {
+            let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if fd < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(EpollFd(fd))
+        }
+
+        fn ctl(&self, op: i32, fd: i32, events: u32, token: u64) -> std::io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            let arg = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+            if unsafe { epoll_ctl(self.0, op, fd, arg) } < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> usize {
+            let n = unsafe {
+                epoll_wait(self.0, events.as_mut_ptr(), events.len() as i32, timeout_ms)
+            };
+            if n < 0 {
+                0 // EINTR and friends: treat as an empty tick
+            } else {
+                n as usize
+            }
+        }
+    }
+
+    impl Drop for EpollFd {
+        fn drop(&mut self) {
+            unsafe { close(self.0) };
+        }
+    }
+
+    /// Worker→reactor doorbell over an `eventfd`. Workers hold `Arc` clones,
+    /// so the fd outlives the reactor and can never be written after close.
+    struct Notifier(i32);
+
+    impl Notifier {
+        fn new() -> std::io::Result<Notifier> {
+            let fd = unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
+            if fd < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Notifier(fd))
+        }
+
+        fn notify(&self) {
+            let one: u64 = 1;
+            unsafe { write(self.0, &one as *const u64 as *const u8, 8) };
+        }
+
+        fn drain(&self) {
+            let mut buf = [0u8; 8];
+            while unsafe { read(self.0, buf.as_mut_ptr(), 8) } > 0 {}
+        }
+    }
+
+    impl Drop for Notifier {
+        fn drop(&mut self) {
+            unsafe { close(self.0) };
+        }
+    }
+
+    enum ConnState {
+        /// Accumulating request bytes.
+        Reading,
+        /// A request is on the worker pool; its response is not back yet.
+        Busy,
+        /// Flushing `head` then `body`; `done` counts bytes already written
+        /// across both.
+        Writing { head: Vec<u8>, body: Bytes, done: usize, keep_alive: bool },
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        buf: Vec<u8>,
+        state: ConnState,
+        served: usize,
+        /// Last byte read or write progress (for idle/slowloris sweeps).
+        last_activity: Instant,
+        /// Peer half-closed (EOF/RDHUP): finish the in-flight response,
+        /// then close instead of keeping alive.
+        peer_closed: bool,
+    }
+
+    pub(super) fn spawn_reactor(
+        listener: TcpListener,
+        workers: usize,
+        handler: Arc<dyn Handler>,
+        opts: ServerOptions,
+        stop: Arc<AtomicBool>,
+        conns: Arc<AtomicU64>,
+    ) -> anyhow::Result<std::thread::JoinHandle<()>> {
+        listener.set_nonblocking(true)?;
+        let ep = EpollFd::new()?;
+        let notifier = Arc::new(Notifier::new()?);
+        ep.ctl(EPOLL_CTL_ADD, listener.as_raw_fd(), EPOLLIN, TOKEN_LISTENER)?;
+        ep.ctl(EPOLL_CTL_ADD, notifier.0, EPOLLIN, TOKEN_WAKE)?;
+        let port = listener.local_addr()?.port();
+        let t = std::thread::Builder::new()
+            .name(format!("http-epoll-{port}"))
+            .spawn(move || run(listener, ep, notifier, workers, handler, opts, stop, conns))?;
+        Ok(t)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        listener: TcpListener,
+        ep: EpollFd,
+        notifier: Arc<Notifier>,
+        workers: usize,
+        handler: Arc<dyn Handler>,
+        opts: ServerOptions,
+        stop: Arc<AtomicBool>,
+        conns: Arc<AtomicU64>,
+    ) {
+        let pool = ThreadPool::new(workers);
+        // (token, response, keep_alive) triples finished by the pool.
+        let done: Arc<Mutex<Vec<(u64, Response, bool)>>> = Arc::default();
+        let mut table: HashMap<u64, Conn> = HashMap::new();
+        let mut next_token: u64 = 2; // 0 = listener, 1 = eventfd; never reused
+        let mut events = vec![EpollEvent { events: 0, data: 0 }; 64];
+        while !stop.load(Ordering::Relaxed) {
+            let n = ep.wait(&mut events, 100);
+            for ev in events.iter().take(n) {
+                let (bits, token) = (ev.events, ev.data);
+                match token {
+                    TOKEN_LISTENER => {
+                        accept_all(&listener, &ep, &mut table, &mut next_token, &conns);
+                    }
+                    TOKEN_WAKE => notifier.drain(),
+                    token => {
+                        if let Some(conn) = table.get_mut(&token) {
+                            let close = on_conn_event(
+                                conn, token, bits, &ep, &pool, &done, &notifier, &handler, &opts,
+                            );
+                            if close {
+                                remove(&ep, &mut table, token);
+                            }
+                        }
+                    }
+                }
+            }
+            // Responses finished by workers (the wake may have raced the
+            // poll timeout, so always drain the queue).
+            let finished: Vec<(u64, Response, bool)> =
+                done.lock().unwrap().drain(..).collect();
+            for (token, resp, keep) in finished {
+                let Some(conn) = table.get_mut(&token) else { continue };
+                let keep = keep && !conn.peer_closed && !stop.load(Ordering::Relaxed);
+                let head = encode_head(&resp, keep);
+                conn.state = ConnState::Writing {
+                    head: head.into_bytes(),
+                    body: resp.body,
+                    done: 0,
+                    keep_alive: keep,
+                };
+                conn.last_activity = Instant::now();
+                if flush_then_continue(conn, token, &ep, &pool, &done, &notifier, &handler, &opts) {
+                    remove(&ep, &mut table, token);
+                }
+            }
+            sweep(&ep, &mut table, &opts);
+        }
+        // Reactor exit: drop the table (closes every conn), then the pool
+        // joins its workers; the eventfd closes with the last Arc.
+    }
+
+    fn accept_all(
+        listener: &TcpListener,
+        ep: &EpollFd,
+        table: &mut HashMap<u64, Conn>,
+        next_token: &mut u64,
+        conns: &Arc<AtomicU64>,
+    ) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    conns.fetch_add(1, Ordering::Relaxed);
+                    let _ = stream.set_nonblocking(true);
+                    let _ = stream.set_nodelay(true);
+                    let token = *next_token;
+                    *next_token += 1;
+                    if ep
+                        .ctl(EPOLL_CTL_ADD, stream.as_raw_fd(), EPOLLIN | EPOLLRDHUP, token)
+                        .is_ok()
+                    {
+                        table.insert(
+                            token,
+                            Conn {
+                                stream,
+                                buf: Vec::new(),
+                                state: ConnState::Reading,
+                                served: 0,
+                                last_activity: Instant::now(),
+                                peer_closed: false,
+                            },
+                        );
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn remove(ep: &EpollFd, table: &mut HashMap<u64, Conn>, token: u64) {
+        if let Some(conn) = table.remove(&token) {
+            let _ = ep.ctl(EPOLL_CTL_DEL, conn.stream.as_raw_fd(), 0, 0);
+            // conn.stream drops here, closing the fd after deregistration.
+        }
+    }
+
+    /// React to readiness on one connection. Returns `true` when the
+    /// connection should be closed.
+    #[allow(clippy::too_many_arguments)]
+    fn on_conn_event(
+        conn: &mut Conn,
+        token: u64,
+        bits: u32,
+        ep: &EpollFd,
+        pool: &ThreadPool,
+        done: &Arc<Mutex<Vec<(u64, Response, bool)>>>,
+        notifier: &Arc<Notifier>,
+        handler: &Arc<dyn Handler>,
+        opts: &ServerOptions,
+    ) -> bool {
+        if bits & (EPOLLERR | EPOLLHUP) != 0 {
+            return true;
+        }
+        if bits & EPOLLRDHUP != 0 {
+            conn.peer_closed = true;
+        }
+        if bits & EPOLLIN != 0 {
+            // Drain the socket (level-triggered: unread bytes would re-fire
+            // the event). Pipelined bytes accumulate; parsing happens only
+            // in the Reading state, one request in flight per connection.
+            let mut chunk = [0u8; 16 * 1024];
+            loop {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        conn.peer_closed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.buf.extend_from_slice(&chunk[..n]);
+                        conn.last_activity = Instant::now();
+                        if conn.buf.len() > MAX_HEAD + MAX_BODY {
+                            return true; // runaway peer
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(_) => return true,
+                }
+            }
+            if matches!(conn.state, ConnState::Reading)
+                && dispatch_if_ready(conn, token, ep, pool, done, notifier, handler, opts)
+            {
+                return true;
+            }
+        }
+        if bits & EPOLLOUT != 0 && matches!(conn.state, ConnState::Writing { .. }) {
+            return flush_then_continue(conn, token, ep, pool, done, notifier, handler, opts);
+        }
+        // EOF while idle with nothing buffered and nothing in flight:
+        // clean close, no 400 into a dead socket.
+        conn.peer_closed && matches!(conn.state, ConnState::Reading) && conn.buf.is_empty()
+    }
+
+    /// Parse `conn.buf`; when a full request is there, hand it to the pool.
+    /// Returns `true` when the connection should be closed.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_if_ready(
+        conn: &mut Conn,
+        token: u64,
+        ep: &EpollFd,
+        pool: &ThreadPool,
+        done: &Arc<Mutex<Vec<(u64, Response, bool)>>>,
+        notifier: &Arc<Notifier>,
+        handler: &Arc<dyn Handler>,
+        opts: &ServerOptions,
+    ) -> bool {
+        match try_parse(&mut conn.buf) {
+            Ok(None) => {
+                // Truncated request from a half-closed peer can never
+                // complete; drop it silently.
+                conn.peer_closed && !conn.buf.is_empty()
+            }
+            Ok(Some(parsed)) => {
+                conn.served += 1;
+                conn.state = ConnState::Busy;
+                let keep = parsed.keep_alive && conn.served < opts.max_requests_per_conn;
+                let h = Arc::clone(handler);
+                let d = Arc::clone(done);
+                let nf = Arc::clone(notifier);
+                let req = parsed.req;
+                pool.execute(move || {
+                    let resp = h.handle(req);
+                    d.lock().unwrap().push((token, resp, keep));
+                    nf.notify();
+                })
+                .is_err() // pool gone: close the connection
+            }
+            Err(_) => {
+                // Parse error: 400, then close. The write goes through the
+                // normal Writing state so partial flushes still work.
+                conn.served += 1;
+                conn.buf.clear();
+                let resp = Response::bad_request("malformed request");
+                conn.state = ConnState::Writing {
+                    head: encode_head(&resp, false).into_bytes(),
+                    body: resp.body,
+                    done: 0,
+                    keep_alive: false,
+                };
+                flush_then_continue(conn, token, ep, pool, done, notifier, handler, opts)
+            }
+        }
+    }
+
+    /// Flush the Writing state as far as the socket allows; on completion
+    /// either close, or go back to Reading and serve any pipelined request.
+    /// Returns `true` when the connection should be closed.
+    #[allow(clippy::too_many_arguments)]
+    fn flush_then_continue(
+        conn: &mut Conn,
+        token: u64,
+        ep: &EpollFd,
+        pool: &ThreadPool,
+        done: &Arc<Mutex<Vec<(u64, Response, bool)>>>,
+        notifier: &Arc<Notifier>,
+        handler: &Arc<dyn Handler>,
+        opts: &ServerOptions,
+    ) -> bool {
+        let ConnState::Writing { head, body, done: written, keep_alive } = &mut conn.state else {
+            return false;
+        };
+        let total = head.len() + body.len();
+        while *written < total {
+            let r = if *written < head.len() {
+                conn.stream
+                    .write_vectored(&[IoSlice::new(&head[*written..]), IoSlice::new(body)])
+            } else {
+                conn.stream.write(&body[*written - head.len()..])
+            };
+            match r {
+                Ok(0) => return true,
+                Ok(n) => {
+                    *written += n;
+                    conn.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // Wait for writability; keep listening for RDHUP.
+                    let _ = ep.ctl(
+                        EPOLL_CTL_MOD,
+                        conn.stream.as_raw_fd(),
+                        EPOLLIN | EPOLLOUT | EPOLLRDHUP,
+                        token,
+                    );
+                    return false;
+                }
+                Err(_) => return true,
+            }
+        }
+        let keep = *keep_alive && !conn.peer_closed;
+        if !keep {
+            return true;
+        }
+        conn.state = ConnState::Reading;
+        let _ = ep.ctl(EPOLL_CTL_MOD, conn.stream.as_raw_fd(), EPOLLIN | EPOLLRDHUP, token);
+        // A pipelined follow-up may already be buffered.
+        dispatch_if_ready(conn, token, ep, pool, done, notifier, handler, opts)
+    }
+
+    /// Close idle keep-alive conns, slowloris partial requests, and stalled
+    /// writers. Runs every reactor tick (~100 ms).
+    fn sweep(ep: &EpollFd, table: &mut HashMap<u64, Conn>, opts: &ServerOptions) {
+        let doomed: Vec<u64> = table
+            .iter()
+            .filter(|(_, c)| {
+                let quiet = c.last_activity.elapsed();
+                match &c.state {
+                    ConnState::Reading if c.buf.is_empty() => {
+                        if c.served > 0 {
+                            quiet >= opts.idle_timeout
+                        } else {
+                            quiet >= opts.idle_timeout.max(opts.request_timeout)
+                        }
+                    }
+                    ConnState::Reading => quiet >= opts.request_timeout,
+                    ConnState::Busy => false, // handler owns the clock here
+                    ConnState::Writing { .. } => quiet >= WRITE_STALL,
+                }
+            })
+            .map(|(&t, _)| t)
+            .collect();
+        for token in doomed {
+            remove(ep, table, token);
+        }
+    }
 }
 
 // ---------------------------------------------------------------- client --
 
-/// Issue a blocking HTTP request to `addr` (`host:port`).
+/// How long an idle pooled connection stays eligible for reuse.
+const POOL_IDLE_TTL: Duration = Duration::from_secs(30);
+
+/// Per-address idle-connection cap (see [`set_pool_per_addr`]).
+static POOL_PER_ADDR: AtomicUsize = AtomicUsize::new(32);
+
+static POOL: OnceLock<ConnectionPool> = OnceLock::new();
+
+fn pool() -> &'static ConnectionPool {
+    POOL.get_or_init(ConnectionPool::default)
+}
+
+/// Cap the number of idle keep-alive connections kept per address (process
+/// wide). High-fan-in benches raise this to the client count so reuse is
+/// not defeated by checkin evictions.
+pub fn set_pool_per_addr(n: usize) {
+    POOL_PER_ADDR.store(n.max(1), Ordering::Relaxed);
+}
+
+struct IdleConn {
+    stream: TcpStream,
+    since: Instant,
+}
+
+/// Process-wide pool of idle keep-alive client connections, keyed by
+/// `host:port`. Checkout health-checks each candidate (a server may have
+/// closed it while idle); checkin evicts expired entries and bounds the
+/// per-address stack.
+#[derive(Default)]
+struct ConnectionPool {
+    idle: Mutex<HashMap<String, Vec<IdleConn>>>,
+}
+
+impl ConnectionPool {
+    fn checkout(&self, addr: &str) -> Option<TcpStream> {
+        let mut map = self.idle.lock().unwrap();
+        let list = map.get_mut(addr)?;
+        while let Some(c) = list.pop() {
+            if c.since.elapsed() <= POOL_IDLE_TTL && stream_is_healthy(&c.stream) {
+                return Some(c.stream);
+            }
+        }
+        None
+    }
+
+    fn checkin(&self, addr: &str, stream: TcpStream) {
+        let mut map = self.idle.lock().unwrap();
+        let list = map.entry(addr.to_string()).or_default();
+        list.retain(|c| c.since.elapsed() <= POOL_IDLE_TTL);
+        if list.len() < POOL_PER_ADDR.load(Ordering::Relaxed) {
+            list.push(IdleConn { stream, since: Instant::now() });
+        }
+    }
+}
+
+/// A pooled stream is healthy when a non-blocking peek would block: `Ok(0)`
+/// means the server closed it, `Ok(_)` means stray bytes we never asked for.
+fn stream_is_healthy(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut probe = [0u8; 1];
+    let healthy = matches!(
+        stream.peek(&mut probe),
+        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock
+    );
+    stream.set_nonblocking(false).is_ok() && healthy
+}
+
+fn connect_fresh(addr: &str) -> anyhow::Result<TcpStream> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(60)))?;
+    let _ = stream.set_nodelay(true);
+    Ok(stream)
+}
+
+/// Issue a blocking HTTP request to `addr` (`host:port`), reusing a pooled
+/// keep-alive connection when one is available.
+///
+/// A pooled connection can go stale between health check and use (the
+/// server closes it as we write); when that happens before any response
+/// byte arrives, the request is retried once on a fresh connection.
 pub fn request(
     addr: &str,
     method: &str,
@@ -350,29 +1114,150 @@ pub fn request(
     headers: &[(&str, &str)],
     body: &[u8],
 ) -> anyhow::Result<Response> {
-    let mut stream = TcpStream::connect(addr)?;
-    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(60)))?;
-    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\n");
-    for (k, v) in headers {
-        head.push_str(&format!("{k}: {v}\r\n"));
+    if let Some(stream) = pool().checkout(addr) {
+        match exchange(stream, addr, method, path, headers, body, true) {
+            Ok(resp) => return Ok(resp),
+            // Nothing of the response arrived: the server never processed
+            // (or never saw) the request, so a retry is safe.
+            Err(ExchangeError::BeforeResponse(_)) => {}
+            Err(ExchangeError::MidResponse(e)) => return Err(e),
+        }
     }
-    head.push_str(&format!("Content-Length: {}\r\nConnection: close\r\n\r\n", body.len()));
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body)?;
-    stream.flush()?;
+    let stream = connect_fresh(addr)?;
+    exchange(stream, addr, method, path, headers, body, true).map_err(ExchangeError::into_inner)
+}
 
-    let mut reader = BufReader::new(stream);
+/// One-shot `Connection: close` request on a fresh connection (the
+/// pre-pool behaviour; benches use it as the baseline).
+pub fn request_fresh(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> anyhow::Result<Response> {
+    let stream = connect_fresh(addr)?;
+    exchange(stream, addr, method, path, headers, body, false).map_err(ExchangeError::into_inner)
+}
+
+/// Failure side of [`exchange`], split on whether any response bytes had
+/// arrived (the retry-safety line for pooled connections).
+enum ExchangeError {
+    BeforeResponse(anyhow::Error),
+    MidResponse(anyhow::Error),
+}
+
+impl ExchangeError {
+    fn into_inner(self) -> anyhow::Error {
+        match self {
+            ExchangeError::BeforeResponse(e) | ExchangeError::MidResponse(e) => e,
+        }
+    }
+}
+
+/// Send one request and read one response on `stream`. With `keep_alive`,
+/// a fully-read response on a connection the server left open goes back to
+/// the pool.
+fn exchange(
+    stream: TcpStream,
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> Result<Response, ExchangeError> {
+    let mut head = String::with_capacity(192);
+    let _ = write!(head, "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n");
+    for (k, v) in headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    let _ = write!(head, "Content-Length: {}\r\n", body.len());
+    head.push_str(if keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
+    {
+        let mut w = &stream;
+        write_all_vectored(&mut w, head.as_bytes(), body)
+            .map_err(|e| ExchangeError::BeforeResponse(e.into()))?;
+    }
+
+    // Read exactly one response. `BufReader` over `&TcpStream` leaves the
+    // stream free to return to the pool; over-buffering cannot eat a later
+    // response because the server sends one response per request.
+    let mut reader = BufReader::new(&stream);
     let mut status_line = String::new();
-    reader.read_line(&mut status_line)?;
-    let status: u16 = status_line
-        .split_whitespace()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .ok_or_else(|| anyhow::anyhow!("bad status line {status_line:?}"))?;
-    let headers = read_headers(&mut reader)?;
-    let body = read_body(&mut reader, &headers)?;
-    Ok(Response { status, headers, body })
+    match reader.read_line(&mut status_line) {
+        Ok(0) => {
+            return Err(ExchangeError::BeforeResponse(anyhow::anyhow!(
+                "connection closed before response"
+            )))
+        }
+        Ok(_) => {}
+        Err(e) if status_line.is_empty() => return Err(ExchangeError::BeforeResponse(e.into())),
+        Err(e) => return Err(ExchangeError::MidResponse(e.into())),
+    }
+    let parse = || -> anyhow::Result<Response> {
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad status line {status_line:?}"))?;
+        let headers = read_headers(&mut reader)?;
+        let body = Bytes::from_vec(read_body(&mut reader, &headers)?);
+        Ok(Response { status, headers, body })
+    };
+    let resp = parse().map_err(ExchangeError::MidResponse)?;
+    let server_keeps = resp
+        .headers
+        .get("connection")
+        .map(|c| !c.eq_ignore_ascii_case("close"))
+        .unwrap_or(true);
+    drop(reader);
+    if keep_alive && server_keeps {
+        pool().checkin(addr, stream);
+    }
+    Ok(resp)
+}
+
+fn read_headers(reader: &mut impl BufRead) -> anyhow::Result<BTreeMap<String, String>> {
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("connection closed mid-headers");
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+}
+
+fn read_body(
+    reader: &mut impl BufRead,
+    headers: &BTreeMap<String, String>,
+) -> anyhow::Result<Vec<u8>> {
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse())
+        .transpose()
+        .map_err(|_| anyhow::anyhow!("bad content-length"))?
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        anyhow::bail!("body too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(body)
 }
 
 /// GET shorthand.
@@ -399,42 +1284,57 @@ pub fn delete(addr: &str, path: &str) -> anyhow::Result<Response> {
 mod tests {
     use super::*;
     use crate::util::json::Json;
+    use std::net::Shutdown;
+
+    fn echo_handler() -> Arc<dyn Handler> {
+        Arc::new(|req: Request| {
+            let mut o = Json::obj();
+            o.set("method", req.method.as_str().into())
+                .set("path", req.path.as_str().into())
+                .set("len", req.body.len().into());
+            if let Some(q) = req.query.get("q") {
+                o.set("q", q.as_str().into());
+            }
+            Response::json(200, &o)
+        })
+    }
 
     fn echo_server() -> Server {
-        Server::bind(
-            0,
-            4,
-            Arc::new(|req: Request| {
-                let mut o = Json::obj();
-                o.set("method", req.method.as_str().into())
-                    .set("path", req.path.as_str().into())
-                    .set("len", req.body.len().into());
-                if let Some(q) = req.query.get("q") {
-                    o.set("q", q.as_str().into());
-                }
-                Response::json(200, &o)
-            }),
-        )
-        .unwrap()
+        Server::bind(0, 4, echo_handler()).unwrap()
+    }
+
+    fn echo_server_with(opts: ServerOptions) -> Server {
+        Server::bind_with(0, 4, echo_handler(), opts).unwrap()
+    }
+
+    /// Both serving paths, exercised on one platform (on non-Linux the
+    /// "default" variant is the fallback anyway).
+    fn both_paths(f: impl Fn(ServerOptions)) {
+        f(ServerOptions::default());
+        f(ServerOptions { force_fallback: true, ..ServerOptions::default() });
     }
 
     #[test]
     fn get_roundtrip() {
-        let server = echo_server();
-        let resp = get(&server.addr(), "/hello/world?q=a+b%21").unwrap();
-        assert_eq!(resp.status, 200);
-        let v = resp.json_body().unwrap();
-        assert_eq!(v.req_str("method").unwrap(), "GET");
-        assert_eq!(v.req_str("path").unwrap(), "/hello/world");
-        assert_eq!(v.req_str("q").unwrap(), "a b!");
+        both_paths(|opts| {
+            let server = echo_server_with(opts);
+            let resp = get(&server.addr(), "/hello/world?q=a+b%21").unwrap();
+            assert_eq!(resp.status, 200);
+            let v = resp.json_body().unwrap();
+            assert_eq!(v.req_str("method").unwrap(), "GET");
+            assert_eq!(v.req_str("path").unwrap(), "/hello/world");
+            assert_eq!(v.req_str("q").unwrap(), "a b!");
+        });
     }
 
     #[test]
     fn post_body_roundtrip() {
-        let server = echo_server();
-        let body = vec![7u8; 100_000];
-        let resp = post_bytes(&server.addr(), "/upload", &body).unwrap();
-        assert_eq!(resp.json_body().unwrap().get("len").unwrap().as_u64(), Some(100_000));
+        both_paths(|opts| {
+            let server = echo_server_with(opts);
+            let body = vec![7u8; 100_000];
+            let resp = post_bytes(&server.addr(), "/upload", &body).unwrap();
+            assert_eq!(resp.json_body().unwrap().get("len").unwrap().as_u64(), Some(100_000));
+        });
     }
 
     #[test]
@@ -460,6 +1360,29 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_64_clients_smoke() {
+        // 64 simultaneous pooled clients against the default (epoll on
+        // Linux) server — the high-fan-in shape the reactor exists for.
+        set_pool_per_addr(64);
+        let server = echo_server();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..64)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    for j in 0..4 {
+                        let resp = get(&addr, &format!("/c/{i}/{j}")).unwrap();
+                        assert_eq!(resp.status, 200);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
     fn not_found_and_errors() {
         let server = Server::bind(0, 2, Arc::new(|_req: Request| Response::not_found())).unwrap();
         let resp = get(&server.addr(), "/whatever").unwrap();
@@ -475,11 +1398,176 @@ mod tests {
     }
 
     #[test]
-    fn server_stops_on_drop() {
+    fn url_decode_truncated_and_invalid_escapes() {
+        // Truncated escapes pass through literally instead of tripping the
+        // old contorted bounds logic.
+        assert_eq!(url_decode("%4"), "%4");
+        assert_eq!(url_decode("%"), "%");
+        assert_eq!(url_decode("abc%"), "abc%");
+        assert_eq!(url_decode("%zz"), "%zz");
+        assert_eq!(url_decode("%41"), "A");
+        assert_eq!(url_decode("%4g"), "%4g");
+        // Multibyte UTF-8 right after '%' must not panic (the old code
+        // sliced the &str at a byte offset inside the char).
+        assert_eq!(url_decode("%aé"), "%aé");
+        assert_eq!(url_decode("%%41"), "%A");
+    }
+
+    #[test]
+    fn keep_alive_reuses_one_connection() {
+        both_paths(|opts| {
+            let server = echo_server_with(opts);
+            let addr = server.addr();
+            for i in 0..3 {
+                let resp = get(&addr, &format!("/ka/{i}")).unwrap();
+                assert_eq!(resp.status, 200);
+            }
+            assert_eq!(server.connections_accepted(), 1, "pooled requests share one conn");
+        });
+    }
+
+    #[test]
+    fn fresh_requests_open_one_connection_each() {
         let server = echo_server();
         let addr = server.addr();
-        drop(server);
-        std::thread::sleep(Duration::from_millis(30));
-        assert!(TcpStream::connect(&addr).is_err() || get(&addr, "/").is_err());
+        for _ in 0..3 {
+            assert_eq!(request_fresh(&addr, "GET", "/", &[], &[]).unwrap().status, 200);
+        }
+        assert_eq!(server.connections_accepted(), 3);
+    }
+
+    #[test]
+    fn max_requests_per_conn_downgrades_to_close() {
+        both_paths(|opts| {
+            let server = echo_server_with(ServerOptions { max_requests_per_conn: 2, ..opts });
+            let addr = server.addr();
+            for i in 0..4 {
+                assert_eq!(get(&addr, &format!("/m/{i}")).unwrap().status, 200);
+            }
+            // Requests 1-2 ride conn 1 (closed after 2), 3-4 ride conn 2.
+            assert_eq!(server.connections_accepted(), 2);
+        });
+    }
+
+    #[test]
+    fn stale_pooled_connection_is_replaced() {
+        both_paths(|opts| {
+            let server = echo_server_with(ServerOptions {
+                idle_timeout: Duration::from_millis(100),
+                ..opts
+            });
+            let addr = server.addr();
+            assert_eq!(get(&addr, "/a").unwrap().status, 200);
+            // Server closes the idle conn; the pool's copy is now stale.
+            std::thread::sleep(Duration::from_millis(500));
+            assert_eq!(get(&addr, "/b").unwrap().status, 200, "transparent retry");
+            assert_eq!(server.connections_accepted(), 2);
+        });
+    }
+
+    #[test]
+    fn slowloris_partial_request_is_dropped() {
+        both_paths(|opts| {
+            let server = echo_server_with(ServerOptions {
+                request_timeout: Duration::from_millis(200),
+                idle_timeout: Duration::from_millis(200),
+                ..opts
+            });
+            let addr = server.addr();
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(b"GET /slow HTT").unwrap();
+            std::thread::sleep(Duration::from_millis(800));
+            let mut buf = Vec::new();
+            let n = s.read_to_end(&mut buf).unwrap_or(0);
+            assert_eq!(n, 0, "server must drop, not answer: {buf:?}");
+            // And the listener still serves others.
+            assert_eq!(get(&addr, "/after").unwrap().status, 200);
+        });
+    }
+
+    #[test]
+    fn clean_eof_gets_no_error_response() {
+        both_paths(|opts| {
+            let server = echo_server_with(opts);
+            let mut s = TcpStream::connect(server.addr()).unwrap();
+            s.shutdown(Shutdown::Write).unwrap();
+            let mut buf = Vec::new();
+            let n = s.read_to_end(&mut buf).unwrap_or(0);
+            assert_eq!(n, 0, "no 400 into a closing socket: {buf:?}");
+        });
+    }
+
+    #[test]
+    fn malformed_request_gets_400_then_close() {
+        both_paths(|opts| {
+            let server = echo_server_with(opts);
+            let mut s = TcpStream::connect(server.addr()).unwrap();
+            s.write_all(b"GARBAGE\r\n\r\n").unwrap();
+            let mut buf = String::new();
+            let mut reader = BufReader::new(&s);
+            reader.read_line(&mut buf).unwrap();
+            assert!(buf.starts_with("HTTP/1.1 400"), "got {buf:?}");
+        });
+    }
+
+    #[test]
+    fn pipelined_requests_each_get_a_response() {
+        both_paths(|opts| {
+            let server = echo_server_with(opts);
+            let mut s = TcpStream::connect(server.addr()).unwrap();
+            let two = "GET /p/1 HTTP/1.1\r\nContent-Length: 0\r\n\r\n\
+                       GET /p/2 HTTP/1.1\r\nContent-Length: 0\r\nConnection: close\r\n\r\n";
+            s.write_all(two.as_bytes()).unwrap();
+            let mut reader = BufReader::new(&s);
+            for expect in ["/p/1", "/p/2"] {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert!(line.starts_with("HTTP/1.1 200"), "got {line:?}");
+                let headers = read_headers(&mut reader).unwrap();
+                let body = read_body(&mut reader, &headers).unwrap();
+                let v = crate::util::json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+                assert_eq!(v.req_str("path").unwrap(), expect);
+            }
+        });
+    }
+
+    #[test]
+    fn server_stops_on_drop_with_live_keepalive_conns() {
+        both_paths(|opts| {
+            let server = echo_server_with(opts);
+            let addr = server.addr();
+            // Leave a live keep-alive connection idle in the pool.
+            assert_eq!(get(&addr, "/warm").unwrap().status, 200);
+            let t0 = Instant::now();
+            drop(server);
+            assert!(t0.elapsed() < Duration::from_secs(2), "drop must not hang");
+            std::thread::sleep(Duration::from_millis(50));
+            assert!(
+                TcpStream::connect(&addr).is_err() || get(&addr, "/").is_err(),
+                "listener must be gone"
+            );
+        });
+    }
+
+    #[test]
+    fn body_is_zero_copy_window() {
+        // A parsed body shares the connection buffer's allocation.
+        let mut buf = b"POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nhelloTAIL".to_vec();
+        let parsed = try_parse(&mut buf).unwrap().unwrap();
+        assert_eq!(parsed.req.body, &b"hello"[..]);
+        assert!(parsed.keep_alive);
+        assert_eq!(buf, b"TAIL", "pipelined tail stays buffered");
+    }
+
+    #[test]
+    fn parse_connection_header_semantics() {
+        let mut buf = b"GET / HTTP/1.0\r\n\r\n".to_vec();
+        assert!(!try_parse(&mut buf).unwrap().unwrap().keep_alive, "1.0 defaults to close");
+        let mut buf = b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n".to_vec();
+        assert!(try_parse(&mut buf).unwrap().unwrap().keep_alive);
+        let mut buf = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n".to_vec();
+        assert!(!try_parse(&mut buf).unwrap().unwrap().keep_alive);
+        let mut buf = b"GET / HTT".to_vec();
+        assert!(try_parse(&mut buf).unwrap().is_none(), "incomplete head");
     }
 }

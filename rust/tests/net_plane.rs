@@ -1,0 +1,146 @@
+//! Network-plane integration: the real REST gateways (FaaS + object store)
+//! served over the readiness-driven HTTP stack, exercised through the pooled
+//! keep-alive client and through `Connection: close` clients.
+//!
+//! Every test that touches a server runs against both serve paths — the
+//! platform default (the epoll reactor on Linux) and the forced portable
+//! fallback — asserting identical REST semantics and, via
+//! `Server::connections_accepted`, that keep-alive actually collapses many
+//! requests onto few TCP connections.
+
+use std::sync::Arc;
+
+use edgefaas::cluster::faas::{Executor, FaasBackend, NativeExecutor};
+use edgefaas::cluster::gateway::{client as faas_client, FaasGateway};
+use edgefaas::cluster::spec::ResourceSpec;
+use edgefaas::objstore::gateway::{client as store_client, StoreGateway};
+use edgefaas::objstore::ObjectStore;
+use edgefaas::simnet::RealClock;
+use edgefaas::util::bytes::Bytes;
+use edgefaas::util::http::{self, Handler, Server, ServerOptions};
+
+fn faas_backend() -> Arc<FaasBackend> {
+    let exec = Arc::new(NativeExecutor::new());
+    exec.register("img/echo", |p: &[u8]| Ok(p.to_vec()));
+    exec.register("img/rev", |p: &[u8]| {
+        let mut v = p.to_vec();
+        v.reverse();
+        Ok(v)
+    });
+    Arc::new(FaasBackend::new(
+        ResourceSpec::paper_edge("unused"),
+        exec as Arc<dyn Executor>,
+        Arc::new(RealClock::new()),
+    ))
+}
+
+/// Both serve paths: the platform default and the portable fallback.
+fn serve_paths() -> Vec<(&'static str, ServerOptions)> {
+    vec![
+        ("default", ServerOptions::default()),
+        ("fallback", ServerOptions { force_fallback: true, ..ServerOptions::default() }),
+    ]
+}
+
+#[test]
+fn faas_rest_semantics_ride_one_keepalive_connection() {
+    for (label, opts) in serve_paths() {
+        let gw = Arc::new(FaasGateway::new(faas_backend())) as Arc<dyn Handler>;
+        let server = Server::bind_with(0, 4, gw, opts).unwrap();
+        let addr = server.addr();
+
+        faas_client::deploy(&addr, "edgepwd", "echo", "img/echo", 128 << 20, 0, &[]).unwrap();
+        faas_client::deploy(&addr, "edgepwd", "rev", "img/rev", 128 << 20, 0, &[]).unwrap();
+        assert_eq!(faas_client::list(&addr).unwrap().len(), 2, "{label}");
+        let (out, _) = faas_client::invoke(&addr, "echo", b"ping").unwrap();
+        assert_eq!(out, b"ping", "{label}");
+
+        // Binary `_batch` leg: raw non-UTF-8 payloads in one round trip.
+        let calls = vec![
+            ("echo".to_string(), Bytes::from(vec![0u8, 159, 146, 150])),
+            ("rev".to_string(), Bytes::from(&b"abc"[..])),
+        ];
+        let results = faas_client::invoke_batch(&addr, &calls).unwrap().unwrap();
+        assert_eq!(results[0].as_ref().unwrap().0, vec![0u8, 159, 146, 150], "{label}");
+        assert_eq!(results[1].as_ref().unwrap().0, b"cba", "{label}");
+
+        faas_client::remove(&addr, "edgepwd", "echo").unwrap();
+        assert_eq!(faas_client::list(&addr).unwrap(), vec!["rev".to_string()], "{label}");
+
+        // Deploys, invokes, the batch, and the listings all shared one
+        // pooled keep-alive connection.
+        assert_eq!(server.connections_accepted(), 1, "{label}");
+    }
+}
+
+#[test]
+fn connection_close_clients_see_identical_semantics() {
+    for (label, opts) in serve_paths() {
+        let gw = Arc::new(FaasGateway::new(faas_backend())) as Arc<dyn Handler>;
+        let server = Server::bind_with(0, 4, gw, opts).unwrap();
+        let addr = server.addr();
+        faas_client::deploy(&addr, "edgepwd", "echo", "img/echo", 128 << 20, 0, &[]).unwrap();
+
+        // `request_fresh` sends `Connection: close` and never pools: same
+        // REST answers, one TCP connection per call.
+        let before = server.connections_accepted();
+        let resp = http::request_fresh(&addr, "POST", "/function/echo", &[], b"hi").unwrap();
+        assert_eq!(resp.status, 200, "{label}");
+        assert_eq!(resp.body, b"hi", "{label}");
+        let resp = http::request_fresh(&addr, "GET", "/no/such/route", &[], &[]).unwrap();
+        assert_eq!(resp.status, 404, "{label}");
+        assert_eq!(server.connections_accepted(), before + 2, "{label}");
+    }
+}
+
+#[test]
+fn one_mib_objects_roundtrip_on_both_server_paths() {
+    for (label, opts) in serve_paths() {
+        let store = Arc::new(ObjectStore::new(64 << 20, "ak", "sk"));
+        let gw = Arc::new(StoreGateway::new(store)) as Arc<dyn Handler>;
+        let server = Server::bind_with(0, 4, gw, opts).unwrap();
+        let addr = server.addr();
+
+        let mut payload = vec![0u8; 1 << 20];
+        for (i, b) in payload.iter_mut().enumerate() {
+            *b = (i * 31 % 251) as u8;
+        }
+        store_client::make_bucket(&addr, "ak", "sk", "big").unwrap();
+        store_client::put_object(&addr, "ak", "sk", "big", "blob", &payload).unwrap();
+        let got = store_client::get_object(&addr, "ak", "sk", "big", "blob").unwrap();
+        assert_eq!(got, payload, "{label}");
+        assert_eq!(server.connections_accepted(), 1, "{label}");
+    }
+}
+
+#[test]
+fn sixteen_concurrent_clients_through_the_faas_gateway() {
+    let gw = Arc::new(FaasGateway::new(faas_backend())) as Arc<dyn Handler>;
+    let server = Server::bind(0, 8, gw).unwrap();
+    let addr = server.addr();
+    faas_client::deploy(&addr, "edgepwd", "echo", "img/echo", 128 << 20, 0, &[]).unwrap();
+
+    let handles: Vec<_> = (0..16)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                for j in 0..8 {
+                    let msg = format!("m{i}.{j}");
+                    let (out, _) = faas_client::invoke(&addr, "echo", msg.as_bytes()).unwrap();
+                    assert_eq!(out, msg.into_bytes());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // 129 requests (1 deploy + 16×8 invokes): keep-alive must collapse them
+    // onto roughly one pooled connection per concurrent client, not one per
+    // request. Allow slack for an occasional stale-checkout replacement.
+    assert!(
+        server.connections_accepted() <= 20,
+        "expected ~16 pooled connections, got {}",
+        server.connections_accepted()
+    );
+}
