@@ -6,7 +6,7 @@
 //! sandbox/capacity model of [`super::sandbox`] underneath and an
 //! [`Executor`] doing the actual compute.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 
 use crate::simnet::Clock;
@@ -107,6 +107,53 @@ impl Executor for NativeExecutor {
     }
 }
 
+/// One entry of the backend's `Batch` verb: function name, payload, and the
+/// engine-assigned attempt id used for at-most-once retry deduplication.
+///
+/// Attempt `0` means "no dedup" (ad-hoc callers, pre-liveness peers on the
+/// wire). Nonzero ids are engine-global and unique per instance attempt:
+/// if a coordinator retries an instance whose first send actually executed
+/// here (the reply was lost, or the resource flapped), the re-sent attempt
+/// id hits this backend's [attempt cache](FaasBackend::invoke_batch) and the
+/// recorded result is replayed instead of executing the function twice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchCall {
+    pub name: String,
+    pub payload: Bytes,
+    pub attempt: u64,
+}
+
+impl BatchCall {
+    /// An undeduplicated call (attempt 0) — the pre-liveness behaviour.
+    pub fn new(name: impl Into<String>, payload: Bytes) -> Self {
+        BatchCall { name: name.into(), payload, attempt: 0 }
+    }
+}
+
+/// Bounded FIFO memory of executed attempt ids → recorded results. Sized so
+/// a retry storm cannot grow a backend without bound; ids are unique
+/// (engine-global counter), so eviction order is insertion order.
+const ATTEMPT_CACHE_CAP: usize = 1024;
+
+#[derive(Default)]
+struct AttemptCache {
+    map: HashMap<u64, Result<(Bytes, f64), String>>,
+    order: VecDeque<u64>,
+}
+
+impl AttemptCache {
+    fn record(&mut self, attempt: u64, result: Result<(Bytes, f64), String>) {
+        if self.map.insert(attempt, result).is_none() {
+            self.order.push_back(attempt);
+            while self.order.len() > ATTEMPT_CACHE_CAP {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
+}
+
 #[derive(Debug)]
 pub enum FaasError {
     AlreadyDeployed(String),
@@ -139,12 +186,22 @@ pub struct FaasBackend {
     inner: Mutex<Inner>,
     executor: Arc<dyn Executor>,
     clock: Arc<dyn Clock>,
+    /// Executed attempt ids → recorded results (the at-most-once dedup
+    /// memory; see [`BatchCall`]). Separate lock from `inner`: a replay hit
+    /// never touches sandbox state.
+    attempts: Mutex<AttemptCache>,
 }
 
 impl FaasBackend {
     pub fn new(spec: ResourceSpec, executor: Arc<dyn Executor>, clock: Arc<dyn Clock>) -> Self {
         let sandboxes = SandboxManager::new(spec.total_memory(), spec.total_gpus());
-        FaasBackend { spec, inner: Mutex::new(Inner { functions: HashMap::new(), sandboxes }), executor, clock }
+        FaasBackend {
+            spec,
+            inner: Mutex::new(Inner { functions: HashMap::new(), sandboxes }),
+            executor,
+            clock,
+            attempts: Mutex::new(AttemptCache::default()),
+        }
     }
 
     /// Deploy a function. Fails if already present or if a single sandbox of
@@ -267,19 +324,42 @@ impl FaasBackend {
     ///
     /// A panicking handler fails its own entry only; later entries still
     /// run (the per-task containment the engine's single path has).
-    pub fn invoke_batch(&self, calls: &[(String, Bytes)]) -> Vec<anyhow::Result<(Bytes, f64)>> {
+    ///
+    /// Nonzero attempt ids are deduplicated (at-most-once per backend): an
+    /// attempt that already executed here replays its recorded result —
+    /// success *or* failure — instead of running the handler again, so a
+    /// coordinator retrying past a lost reply cannot double-execute. The
+    /// record is bounded ([`ATTEMPT_CACHE_CAP`], FIFO by first execution).
+    pub fn invoke_batch(&self, calls: &[BatchCall]) -> Vec<anyhow::Result<(Bytes, f64)>> {
         calls
             .iter()
-            .map(|(name, payload)| {
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    self.invoke(name, payload)
+            .map(|call| {
+                if call.attempt != 0 {
+                    let cache = self.attempts.lock().unwrap();
+                    if let Some(hit) = cache.map.get(&call.attempt) {
+                        return match hit {
+                            Ok((out, lat)) => Ok((out.clone(), *lat)),
+                            Err(e) => Err(anyhow::anyhow!("{e}")),
+                        };
+                    }
+                }
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.invoke(&call.name, &call.payload)
                 }))
                 .unwrap_or_else(|p| {
                     Err(anyhow::anyhow!(
                         "function handler panicked: {}",
                         crate::util::panic_message(&*p)
                     ))
-                })
+                });
+                if call.attempt != 0 {
+                    let recorded = match &result {
+                        Ok((out, lat)) => Ok((out.clone(), *lat)),
+                        Err(e) => Err(e.to_string()),
+                    };
+                    self.attempts.lock().unwrap().record(call.attempt, recorded);
+                }
+                result
             })
             .collect()
     }
@@ -397,11 +477,11 @@ mod tests {
         b.deploy(fspec("upper", "img/upper")).unwrap();
         b.deploy(fspec("boom", "img/boom")).unwrap();
         let calls = vec![
-            ("echo".to_string(), Bytes::from("one")),
-            ("upper".to_string(), Bytes::from("two")),
-            ("boom".to_string(), Bytes::new()),
-            ("missing".to_string(), Bytes::new()),
-            ("echo".to_string(), Bytes::from("three")),
+            BatchCall::new("echo", Bytes::from("one")),
+            BatchCall::new("upper", Bytes::from("two")),
+            BatchCall::new("boom", Bytes::new()),
+            BatchCall::new("missing", Bytes::new()),
+            BatchCall::new("echo", Bytes::from("three")),
         ];
         let results = b.invoke_batch(&calls);
         assert_eq!(results.len(), 5);
@@ -412,6 +492,35 @@ mod tests {
         assert!(results[3].is_err(), "unknown function fails its own entry");
         assert_eq!(results[4].as_ref().unwrap().0, &b"three"[..], "later entries still run");
         assert_eq!(b.describe("echo").unwrap().invocations, 2);
+    }
+
+    #[test]
+    fn repeated_attempt_id_replays_instead_of_reexecuting() {
+        let (b, exec) = backend();
+        exec.register("img/fail", |_: &[u8]| -> anyhow::Result<Vec<u8>> {
+            anyhow::bail!("transient")
+        });
+        b.deploy(fspec("echo", "img/echo")).unwrap();
+        b.deploy(fspec("fail", "img/fail")).unwrap();
+        let call = BatchCall { name: "echo".into(), payload: Bytes::from("x"), attempt: 7 };
+        let first = b.invoke_batch(std::slice::from_ref(&call));
+        assert_eq!(first[0].as_ref().unwrap().0, &b"x"[..]);
+        // Same attempt id again: replay, no second execution.
+        let second = b.invoke_batch(&[call]);
+        assert_eq!(second[0].as_ref().unwrap().0, &b"x"[..]);
+        assert_eq!(b.describe("echo").unwrap().invocations, 1, "executed once");
+        // Failures replay too — at-most-once covers both outcomes.
+        let boom = BatchCall { name: "fail".into(), payload: Bytes::new(), attempt: 8 };
+        let e1 = b.invoke_batch(std::slice::from_ref(&boom));
+        assert!(e1[0].is_err());
+        let e2 = b.invoke_batch(&[boom]);
+        assert!(e2[0].as_ref().unwrap_err().to_string().contains("transient"));
+        assert_eq!(b.describe("fail").unwrap().invocations, 1);
+        // Attempt 0 never deduplicates.
+        let plain = BatchCall::new("echo", Bytes::from("y"));
+        b.invoke_batch(std::slice::from_ref(&plain));
+        b.invoke_batch(&[plain]);
+        assert_eq!(b.describe("echo").unwrap().invocations, 3);
     }
 
     #[test]

@@ -22,16 +22,23 @@
 //! verb. Two wire formats, negotiated by `Content-Type`:
 //!
 //! * **Binary frames** ([`BATCH_BINARY_CONTENT_TYPE`]) — the streaming
-//!   format: a `EFB1` magic, a little-endian `u32` call count, then one
-//!   length-prefixed `(name, payload)` frame per call; the response
-//!   mirrors it with one `(ok, latency, output | error)` frame per entry.
+//!   format: an `EFB2` magic, a little-endian `u32` call count, then one
+//!   `(attempt u64, name, payload)` length-prefixed frame per call; the
+//!   response mirrors it with one `(ok, latency, output | error)` frame
+//!   per entry under the original `EFB1` magic. The request decoder also
+//!   accepts v1 (`EFB1`, no attempt field — attempt 0) from older
+//!   clients; an older *gateway* rejects `EFB2` at parse time (400), which
+//!   the client treats as a pre-execution refusal and downgrades to JSON.
 //!   Payloads and outputs are raw bytes, so binary data travels at 1x
-//!   (the JSON format hex-encodes it at 2x) and needs no UTF-8 guard.
-//! * **JSON** (anything else) — `{calls:[{name, payload}, ...]}` ->
-//!   `{results:[{ok, output|output_hex, latency}|{ok, error}]}`, kept for
-//!   old peers; text payloads ride as-is, binary outputs are hex-encoded
-//!   so the path stays lossless. The coordinator's client tries the
-//!   binary format first and falls back to JSON — and then to per-call
+//!   (the JSON format hex-encodes it at 2x) and needs no UTF-8 guard. The
+//!   attempt id is the liveness plane's at-most-once retry key (see
+//!   [`BatchCall`]).
+//! * **JSON** (anything else) — `{calls:[{name, payload, attempt?}, ...]}`
+//!   -> `{results:[{ok, output|output_hex, latency}|{ok, error}]}`, kept
+//!   for old peers; text payloads ride as-is, binary outputs are
+//!   hex-encoded so the path stays lossless; a missing `attempt` means 0
+//!   (no dedup). The coordinator's client tries the binary format first
+//!   and falls back to JSON — and then to per-call
 //!   `POST /function/{name}` — only on a pre-execution refusal.
 //!
 //! Administrative verbs require the resource `pwd` in the `Authorization`
@@ -45,7 +52,7 @@ use crate::util::bytes::Bytes;
 use crate::util::http::{Handler, Request, Response, Server};
 use crate::util::json::Json;
 
-use super::faas::{FaasBackend, FunctionSpec};
+use super::faas::{BatchCall, FaasBackend, FunctionSpec};
 
 /// HTTP facade over a [`FaasBackend`].
 pub struct FaasGateway {
@@ -166,12 +173,16 @@ impl FaasGateway {
         let Some(entries) = body.get("calls").and_then(Json::as_arr) else {
             return Response::bad_request("missing `calls` array".to_string());
         };
-        let mut calls: Vec<(String, Bytes)> = Vec::with_capacity(entries.len());
+        let mut calls: Vec<BatchCall> = Vec::with_capacity(entries.len());
         for entry in entries {
-            let parsed = entry
-                .req_str("name")
-                .map(String::from)
-                .and_then(|n| Ok((n, Bytes::from(entry.req_str("payload")?))));
+            let parsed = entry.req_str("name").map(String::from).and_then(|n| {
+                Ok(BatchCall {
+                    name: n,
+                    payload: Bytes::from(entry.req_str("payload")?),
+                    // Optional: old peers send no attempt (0 = no dedup).
+                    attempt: entry.get("attempt").and_then(Json::as_u64).unwrap_or(0),
+                })
+            });
             match parsed {
                 Ok(call) => calls.push(call),
                 Err(e) => return Response::bad_request(format!("bad batch entry: {e}")),
@@ -252,8 +263,14 @@ fn hex_decode(s: &str) -> anyhow::Result<Vec<u8>> {
 /// `Content-Type` of the length-prefixed binary `_batch` wire format.
 pub const BATCH_BINARY_CONTENT_TYPE: &str = "application/x-edgefaas-batch";
 
-/// Magic prefix of every binary batch request/response body.
+/// v1 magic: responses always use it; v1 requests carry `(name, payload)`
+/// frames with no attempt ids (decoded as attempt 0).
 const BATCH_MAGIC: &[u8; 4] = b"EFB1";
+
+/// v2 request magic: each call frame is `(attempt u64, name, payload)`.
+/// Encoders emit v2; a v1-only gateway rejects the magic at parse time
+/// (pre-execution 400), so the client's refusal downgrade applies.
+const BATCH_MAGIC2: &[u8; 4] = b"EFB2";
 
 /// Bounds-checked little-endian reader over a binary batch body.
 struct FrameReader<'a> {
@@ -265,6 +282,18 @@ impl<'a> FrameReader<'a> {
     fn new(buf: &'a [u8]) -> anyhow::Result<FrameReader<'a>> {
         anyhow::ensure!(buf.len() >= 8 && &buf[..4] == BATCH_MAGIC, "bad batch magic");
         Ok(FrameReader { buf, pos: 4 })
+    }
+
+    /// Accept a request body under either magic. Returns `(reader, v2)`:
+    /// `v2 = true` means each call frame leads with a `u64` attempt id.
+    fn new_request(buf: &'a [u8]) -> anyhow::Result<(FrameReader<'a>, bool)> {
+        anyhow::ensure!(buf.len() >= 8, "short batch frame");
+        let v2 = match &buf[..4] {
+            m if m == BATCH_MAGIC => false,
+            m if m == BATCH_MAGIC2 => true,
+            _ => anyhow::bail!("bad batch magic"),
+        };
+        Ok((FrameReader { buf, pos: 4 }, v2))
     }
 
     fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
@@ -281,6 +310,13 @@ impl<'a> FrameReader<'a> {
     fn u32(&mut self) -> anyhow::Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
     }
 
     fn f64(&mut self) -> anyhow::Result<f64> {
@@ -319,31 +355,35 @@ fn push_blob(out: &mut Vec<u8>, b: &[u8]) {
     out.extend_from_slice(b);
 }
 
-/// Encode `calls` as a binary batch request body.
-pub(crate) fn encode_binary_calls(calls: &[(String, Bytes)]) -> Vec<u8> {
+/// Encode `calls` as a v2 (`EFB2`) binary batch request body: one
+/// `(attempt u64, name blob, payload blob)` frame per call.
+pub(crate) fn encode_binary_calls(calls: &[BatchCall]) -> Vec<u8> {
     let mut out = Vec::with_capacity(
-        8 + calls.iter().map(|(n, p)| 8 + n.len() + p.len()).sum::<usize>(),
+        8 + calls.iter().map(|c| 16 + c.name.len() + c.payload.len()).sum::<usize>(),
     );
-    out.extend_from_slice(BATCH_MAGIC);
+    out.extend_from_slice(BATCH_MAGIC2);
     out.extend_from_slice(&(calls.len() as u32).to_le_bytes());
-    for (name, payload) in calls {
-        push_blob(&mut out, name.as_bytes());
-        push_blob(&mut out, payload);
+    for call in calls {
+        out.extend_from_slice(&call.attempt.to_le_bytes());
+        push_blob(&mut out, call.name.as_bytes());
+        push_blob(&mut out, &call.payload);
     }
     out
 }
 
-/// Decode a binary batch request body into `(name, payload)` calls. Each
+/// Decode a binary batch request body (v1 or v2) into [`BatchCall`]s. Each
 /// payload is a window into `body`'s allocation — frames stream straight
-/// from the request buffer without a copy.
-fn decode_binary_calls(body: &Bytes) -> anyhow::Result<Vec<(String, Bytes)>> {
-    let mut r = FrameReader::new(body)?;
+/// from the request buffer without a copy. v1 frames carry no attempt ids:
+/// they decode as attempt 0, i.e. no dedup, preserving the old semantics.
+fn decode_binary_calls(body: &Bytes) -> anyhow::Result<Vec<BatchCall>> {
+    let (mut r, v2) = FrameReader::new_request(body)?;
     let count = r.u32()? as usize;
     let mut calls = Vec::with_capacity(count.min(4096));
     for _ in 0..count {
+        let attempt = if v2 { r.u64()? } else { 0 };
         let name = std::str::from_utf8(r.blob()?)?.to_string();
         let (start, end) = r.blob_range()?;
-        calls.push((name, body.slice(start, end)));
+        calls.push(BatchCall { name, payload: body.slice(start, end), attempt });
     }
     r.done()?;
     Ok(calls)
@@ -523,7 +563,7 @@ pub mod client {
     /// so retrying — on any leg — would double-execute.
     pub fn invoke_batch_binary(
         addr: &str,
-        calls: &[(String, crate::util::bytes::Bytes)],
+        calls: &[crate::cluster::faas::BatchCall],
     ) -> anyhow::Result<BatchAttempt> {
         let resp = http::request(
             addr,
@@ -555,16 +595,21 @@ pub mod client {
     /// binary leg.
     pub fn invoke_batch_json(
         addr: &str,
-        calls: &[(String, crate::util::bytes::Bytes)],
+        calls: &[crate::cluster::faas::BatchCall],
     ) -> anyhow::Result<BatchAttempt> {
-        if !calls.iter().all(|(_, p)| std::str::from_utf8(p).is_ok()) {
+        if !calls.iter().all(|c| std::str::from_utf8(&c.payload).is_ok()) {
             return Ok(BatchAttempt::Refused);
         }
         let mut entries = Vec::with_capacity(calls.len());
-        for (name, payload) in calls {
-            let text = std::str::from_utf8(payload).expect("checked above");
+        for call in calls {
+            let text = std::str::from_utf8(&call.payload).expect("checked above");
             let mut o = Json::obj();
-            o.set("name", name.as_str().into()).set("payload", text.into());
+            o.set("name", call.name.as_str().into()).set("payload", text.into());
+            if call.attempt != 0 {
+                // Old gateways ignore unknown fields, so the attempt id
+                // rides the JSON leg harmlessly and new gateways dedup.
+                o.set("attempt", call.attempt.into());
+            }
             entries.push(o);
         }
         let mut body = Json::obj();
@@ -633,7 +678,7 @@ pub mod client {
     #[allow(clippy::type_complexity)]
     pub fn invoke_batch(
         addr: &str,
-        calls: &[(String, crate::util::bytes::Bytes)],
+        calls: &[crate::cluster::faas::BatchCall],
     ) -> anyhow::Result<Option<Vec<anyhow::Result<(crate::util::bytes::Bytes, f64)>>>> {
         if let BatchAttempt::Ran(results) = invoke_batch_binary(addr, calls)? {
             return Ok(Some(results));
@@ -711,9 +756,9 @@ mod tests {
         let addr = server.addr();
         client::deploy(&addr, "edgepwd", "echo", "img/echo", 128 << 20, 0, &[]).unwrap();
         let calls = vec![
-            ("echo".to_string(), Bytes::from("a")),
-            ("ghost".to_string(), Bytes::from("x")),
-            ("echo".to_string(), Bytes::from("b")),
+            BatchCall::new("echo", Bytes::from("a")),
+            BatchCall::new("ghost", Bytes::from("x")),
+            BatchCall::new("echo", Bytes::from("b")),
         ];
         let results = client::invoke_batch(&addr, &calls).unwrap().expect("verb supported");
         assert_eq!(results.len(), 3);
@@ -736,7 +781,7 @@ mod tests {
         let server = FaasGateway::serve(Arc::clone(&backend), 2).unwrap();
         let addr = server.addr();
         client::deploy(&addr, "edgepwd", "bin", "img/bin", 1 << 20, 0, &[]).unwrap();
-        let calls = vec![("bin".to_string(), Bytes::from("{}"))];
+        let calls = vec![BatchCall::new("bin", Bytes::from("{}"))];
         let results = client::invoke_batch(&addr, &calls).unwrap().expect("verb supported");
         assert_eq!(
             results[0].as_ref().unwrap().0,
@@ -796,8 +841,8 @@ mod tests {
         // A non-UTF-8 payload: only the binary frame format can carry it
         // in one round trip (the JSON leg would refuse pre-wire).
         let calls = vec![
-            ("rev".to_string(), Bytes::copy_from(&[0xff, 0x00, 0x01])),
-            ("ghost".to_string(), Bytes::from("x")),
+            BatchCall::new("rev", Bytes::copy_from(&[0xff, 0x00, 0x01])),
+            BatchCall::new("ghost", Bytes::from("x")),
         ];
         let results = client::invoke_batch(&addr, &calls).unwrap().expect("binary leg");
         assert_eq!(results[0].as_ref().unwrap().0, &[0x01, 0x00, 0xff][..]);
@@ -807,11 +852,28 @@ mod tests {
 
     #[test]
     fn binary_codec_roundtrips_and_rejects_garbage() {
-        let calls = vec![("f".to_string(), Bytes::copy_from(&[0u8, 159, 146, 150]))];
+        let calls = vec![BatchCall {
+            name: "f".into(),
+            payload: Bytes::copy_from(&[0u8, 159, 146, 150]),
+            attempt: 42,
+        }];
         let encoded = encode_binary_calls(&calls);
-        // Wire cost: 8 header bytes plus 8 framing bytes per call — the 4
-        // payload bytes travel raw, with no hex doubling.
-        assert_eq!(encoded.len(), 8 + (4 + 1) + (4 + 4));
+        // Wire cost: 8 header bytes plus 16 framing bytes per call (8 of
+        // them the v2 attempt id) — the 4 payload bytes travel raw, with
+        // no hex doubling.
+        assert_eq!(encoded.len(), 8 + 8 + (4 + 1) + (4 + 4));
+        assert_eq!(&encoded[..4], b"EFB2");
+        // Round trip: the v2 decoder recovers the attempt id; a v1 body
+        // (no attempt field) decodes as attempt 0.
+        let decoded = decode_binary_calls(&Bytes::from(encoded)).unwrap();
+        assert_eq!(decoded, calls);
+        let mut v1 = Vec::from(&b"EFB1"[..]);
+        v1.extend_from_slice(&1u32.to_le_bytes());
+        push_blob(&mut v1, b"f");
+        push_blob(&mut v1, &[7u8]);
+        let legacy = decode_binary_calls(&Bytes::from(v1)).unwrap();
+        assert_eq!(legacy[0].name, "f");
+        assert_eq!(legacy[0].attempt, 0, "v1 peers get no dedup, not an error");
         let results =
             vec![Ok((Bytes::copy_from(&[0xde, 0xad]), 0.25)), Err(anyhow::anyhow!("boom"))];
         let body = Bytes::from(encode_binary_results(&results));
@@ -870,16 +932,44 @@ mod tests {
         client::deploy(&addr, "edgepwd", "bin", "img/bin", 1 << 20, 0, &[]).unwrap();
         // Text payloads ride the JSON leg after the binary refusal; a
         // binary *output* still survives it via the hex encoding.
-        let calls =
-            vec![("echo".to_string(), Bytes::from("hi")), ("bin".to_string(), Bytes::from("{}"))];
+        let calls = vec![
+            BatchCall::new("echo", Bytes::from("hi")),
+            BatchCall::new("bin", Bytes::from("{}")),
+        ];
         let results = client::invoke_batch(&addr, &calls).unwrap().expect("json leg");
         assert_eq!(results[0].as_ref().unwrap().0, &b"hi"[..]);
         assert_eq!(results[1].as_ref().unwrap().0, &[0xff, 0x00][..]);
         assert_eq!(backend.describe("echo").unwrap().invocations, 1, "executed exactly once");
         // A binary *payload* cannot ride the JSON leg: the client reports
         // "fall back to per-call invokes" without executing anything.
-        let calls = vec![("echo".to_string(), Bytes::copy_from(&[0xff]))];
+        let calls = vec![BatchCall::new("echo", Bytes::copy_from(&[0xff]))];
         assert!(client::invoke_batch(&addr, &calls).unwrap().is_none());
+        assert_eq!(backend.describe("echo").unwrap().invocations, 1);
+    }
+
+    #[test]
+    fn attempt_ids_dedup_across_the_wire_on_both_legs() {
+        let backend = backend_with(&[("img/echo", |p: &[u8]| Ok(p.to_vec()))]);
+        let server = FaasGateway::serve(Arc::clone(&backend), 2).unwrap();
+        let addr = server.addr();
+        client::deploy(&addr, "edgepwd", "echo", "img/echo", 1 << 20, 0, &[]).unwrap();
+        let calls =
+            vec![BatchCall { name: "echo".into(), payload: Bytes::from("hi"), attempt: 11 }];
+        // Binary leg, twice with the same attempt id: one execution.
+        for _ in 0..2 {
+            match client::invoke_batch_binary(&addr, &calls).unwrap() {
+                client::BatchAttempt::Ran(r) => {
+                    assert_eq!(r[0].as_ref().unwrap().0, &b"hi"[..])
+                }
+                client::BatchAttempt::Refused => panic!("binary leg refused"),
+            }
+        }
+        assert_eq!(backend.describe("echo").unwrap().invocations, 1, "replayed, not re-run");
+        // JSON leg with the same attempt id: still the same cached result.
+        match client::invoke_batch_json(&addr, &calls).unwrap() {
+            client::BatchAttempt::Ran(r) => assert_eq!(r[0].as_ref().unwrap().0, &b"hi"[..]),
+            client::BatchAttempt::Refused => panic!("json leg refused"),
+        }
         assert_eq!(backend.describe("echo").unwrap().invocations, 1);
     }
 }

@@ -20,5 +20,5 @@ pub mod gateway;
 pub mod sandbox;
 pub mod spec;
 
-pub use faas::{Executor, FaasBackend, FunctionSpec, NativeExecutor};
+pub use faas::{BatchCall, Executor, FaasBackend, FunctionSpec, NativeExecutor};
 pub use spec::ResourceSpec;

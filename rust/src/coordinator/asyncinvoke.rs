@@ -215,7 +215,7 @@ impl EdgeFaaS {
     }
 }
 
-fn request_memory(faas: &EdgeFaaS, app: &str, function: &str) -> anyhow::Result<u64> {
+pub(super) fn request_memory(faas: &EdgeFaaS, app: &str, function: &str) -> anyhow::Result<u64> {
     Ok(faas
         .app(app)?
         .config
@@ -237,6 +237,21 @@ pub struct AutoRescheduleConfig {
     /// Minimum coordinator-clock seconds between two migration attempts of
     /// the same function (the rate limit).
     pub min_interval_s: f64,
+    /// Backoff after a migration that did not help: if, at the next
+    /// trigger, the function's hotness has not dropped below
+    /// `improvement_factor` × its pre-migration value, further attempts
+    /// are refused until `cooldown_s` seconds have passed since that
+    /// migration. Stops a function the reschedule *cannot* help (e.g. the
+    /// only candidate is the hot one) from being migrated in a loop.
+    pub cooldown_s: f64,
+    /// The "it helped" bar for lifting the cooldown early, as a fraction
+    /// of the pre-migration hotness (0.9 = at least 10% better).
+    pub improvement_factor: f64,
+    /// Half-life (seconds) of a placement's latency EWMA when no new
+    /// samples arrive. An idle function's hotness decays instead of
+    /// holding its last value forever, so a deadline miss hours later
+    /// does not migrate a long-cold former hot spot.
+    pub idle_half_life_s: f64,
 }
 
 impl Default for AutoRescheduleConfig {
@@ -245,6 +260,9 @@ impl Default for AutoRescheduleConfig {
             alpha: 0.3,
             latency_threshold_s: f64::INFINITY,
             min_interval_s: 10.0,
+            cooldown_s: 60.0,
+            improvement_factor: 0.9,
+            idle_half_life_s: 300.0,
         }
     }
 }
@@ -254,8 +272,13 @@ impl Default for AutoRescheduleConfig {
 /// `on_engine_event` subscription.
 pub struct AutoRescheduler {
     cfg: AutoRescheduleConfig,
-    /// Latency EWMA per (qualified function, resource).
-    ewma: Mutex<HashMap<(String, ResourceId), f64>>,
+    /// Latency EWMA per (qualified function, resource): `(value,
+    /// last_sample_at)`. The value decays with `idle_half_life_s` when
+    /// read, so idle placements cool off.
+    ewma: Mutex<HashMap<(String, ResourceId), (f64, f64)>>,
+    /// Last migration per qualified function: `(at, pre_migration
+    /// hotness)` — the cooldown's evidence that the move helped (or not).
+    outcomes: Mutex<HashMap<String, (f64, f64)>>,
     /// Last migration-attempt clock time per qualified function.
     last_attempt: Mutex<HashMap<String, f64>>,
     /// Functions with a migration job currently queued/running.
@@ -278,46 +301,87 @@ impl AutoRescheduler {
         self.moved.load(Ordering::SeqCst)
     }
 
-    /// Current latency EWMA for one placement, if any samples arrived.
+    /// Latency EWMA for one placement as of its last sample (undecayed),
+    /// if any samples arrived.
     pub fn ewma(&self, app: &str, function: &str, resource: ResourceId) -> Option<f64> {
         self.ewma
             .lock()
             .unwrap()
             .get(&(EdgeFaaS::qualified(app, function), resource))
-            .copied()
+            .map(|&(v, _)| v)
     }
 
-    /// Fold one latency sample into the EWMA; returns the new value.
-    fn observe(&self, qname: &str, resource: ResourceId, latency: f64) -> f64 {
+    /// A stored EWMA value cooled down to `now`: halves every
+    /// `idle_half_life_s` seconds without a sample.
+    fn decayed(&self, value: f64, last_at: f64, now: f64) -> f64 {
+        if self.cfg.idle_half_life_s <= 0.0 {
+            return value;
+        }
+        let dt = (now - last_at).max(0.0);
+        value * 0.5f64.powf(dt / self.cfg.idle_half_life_s)
+    }
+
+    /// Fold one latency sample into the EWMA; returns the new value. The
+    /// stored value is first decayed to `now`, so a placement that sat
+    /// idle re-learns its hotness from near-zero rather than from stale
+    /// history.
+    fn observe(&self, qname: &str, resource: ResourceId, latency: f64, now: f64) -> f64 {
         let mut map = self.ewma.lock().unwrap();
-        let e = map.entry((qname.to_string(), resource)).or_insert(latency);
-        *e = self.cfg.alpha * latency + (1.0 - self.cfg.alpha) * *e;
-        *e
+        let e = map.entry((qname.to_string(), resource)).or_insert((latency, now));
+        let cooled = self.decayed(e.0, e.1, now);
+        *e = (self.cfg.alpha * latency + (1.0 - self.cfg.alpha) * cooled, now);
+        e.0
     }
 
-    /// The function of `app` with the highest EWMA (the "hot" migration
-    /// candidate when a deadline miss names only the app).
-    fn hottest_of_app(&self, app: &str) -> Option<String> {
+    /// The hottest placement of `qname` across resources, decayed to
+    /// `now`. `None` when no samples arrived yet.
+    fn max_effective(&self, qname: &str, now: f64) -> Option<f64> {
+        let map = self.ewma.lock().unwrap();
+        map.iter()
+            .filter(|((q, _), _)| q.as_str() == qname)
+            .map(|(_, &(v, at))| self.decayed(v, at, now))
+            .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.max(v))))
+    }
+
+    /// The function of `app` with the highest decayed EWMA (the "hot"
+    /// migration candidate when a deadline miss names only the app).
+    fn hottest_of_app(&self, app: &str, now: f64) -> Option<String> {
         let prefix = format!("{app}.");
         let map = self.ewma.lock().unwrap();
         map.iter()
             .filter(|((q, _), _)| q.starts_with(&prefix))
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|((q, _), _)| q.clone())
+            .map(|((q, _), &(v, at))| (q, self.decayed(v, at, now)))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(q, _)| q.clone())
     }
 
-    /// Rate-limit + in-flight gate; returns true when a migration job
-    /// should be dispatched for `qname` (and records the attempt time).
+    /// Rate-limit + in-flight + cooldown gate; returns true when a
+    /// migration job should be dispatched for `qname` (and records the
+    /// attempt time and the pre-migration hotness).
     ///
     /// The in-flight lock is held across check *and* insert: engine events
     /// fire on concurrent worker threads, and a check-then-reacquire gap
     /// would let two events both dispatch a migration for one function.
-    /// (Lock order inflight → last_attempt; this is the only place both
-    /// are held together.)
+    /// (Lock order inflight → outcomes → last_attempt; this is the only
+    /// place they nest. The ewma lock is taken *before* inflight and
+    /// released first — `max_effective` never nests inside the others.)
     fn admit_attempt(&self, qname: &str, now: f64) -> bool {
+        let hotness = self.max_effective(qname, now);
         let mut inflight = self.inflight.lock().unwrap();
         if inflight.contains(qname) {
             return false;
+        }
+        let mut outcomes = self.outcomes.lock().unwrap();
+        if let Some(&(at, pre)) = outcomes.get(qname) {
+            // The last migration only counts as "helped" once the
+            // function's hotness dropped below improvement_factor × its
+            // pre-migration value; until then (or until the cooldown
+            // lapses) re-migrating would just shuffle the same load.
+            let unimproved =
+                hotness.is_some_and(|h| h > self.cfg.improvement_factor * pre);
+            if now - at < self.cfg.cooldown_s && unimproved {
+                return false;
+            }
         }
         let mut last = self.last_attempt.lock().unwrap();
         if let Some(t) = last.get(qname) {
@@ -327,6 +391,9 @@ impl AutoRescheduler {
         }
         last.insert(qname.to_string(), now);
         inflight.insert(qname.to_string());
+        // No samples yet → pre-hotness ∞, so the next trigger inside the
+        // cooldown always passes the improvement check.
+        outcomes.insert(qname.to_string(), (now, hotness.unwrap_or(f64::INFINITY)));
         true
     }
 }
@@ -359,6 +426,7 @@ impl EdgeFaaS {
         let policy = Arc::new(AutoRescheduler {
             cfg,
             ewma: Mutex::new(HashMap::new()),
+            outcomes: Mutex::new(HashMap::new()),
             last_attempt: Mutex::new(HashMap::new()),
             inflight: Mutex::new(HashSet::new()),
             attempts: AtomicU64::new(0),
@@ -373,13 +441,16 @@ impl EdgeFaaS {
             let hot: Option<String> = match ev {
                 EngineEvent::NodeCompleted { app, function, instance_latencies, .. } => {
                     let qname = EdgeFaaS::qualified(app, function);
+                    let now = faas.clock().now();
                     let mut worst = f64::NEG_INFINITY;
                     for &(rid, lat) in instance_latencies {
-                        worst = worst.max(subscriber.observe(&qname, rid, lat));
+                        worst = worst.max(subscriber.observe(&qname, rid, lat, now));
                     }
                     (worst > subscriber.cfg.latency_threshold_s).then_some(qname)
                 }
-                EngineEvent::DeadlineMissed { app, .. } => subscriber.hottest_of_app(app),
+                EngineEvent::DeadlineMissed { app, .. } => {
+                    subscriber.hottest_of_app(app, faas.clock().now())
+                }
                 _ => None,
             };
             let Some(qname) = hot else { return };
@@ -593,6 +664,7 @@ dag:
             // Any real invocation latency exceeds a zero threshold.
             latency_threshold_s: 0.0,
             min_interval_s: 3600.0,
+            ..AutoRescheduleConfig::default()
         });
         for _ in 0..3 {
             let run = bed.faas.submit_workflow("mono", &HashMap::new()).unwrap();
@@ -651,5 +723,71 @@ dag:
         assert!(!reg0.handle.list().unwrap().contains(&"mono.f".to_string()));
         let reg1 = bed.faas.resource(bed.edges[1]).unwrap();
         assert!(reg1.handle.list().unwrap().contains(&"mono.f".to_string()));
+    }
+
+    /// A policy handle detached from any coordinator, for exercising the
+    /// admission gates against explicit clock values.
+    fn bare_policy(cfg: AutoRescheduleConfig) -> AutoRescheduler {
+        AutoRescheduler {
+            cfg,
+            ewma: Mutex::new(HashMap::new()),
+            outcomes: Mutex::new(HashMap::new()),
+            last_attempt: Mutex::new(HashMap::new()),
+            inflight: Mutex::new(HashSet::new()),
+            attempts: AtomicU64::new(0),
+            moved: AtomicU64::new(0),
+        }
+    }
+
+    #[test]
+    fn idle_ewma_decays_with_half_life() {
+        let policy = bare_policy(AutoRescheduleConfig {
+            alpha: 1.0,
+            idle_half_life_s: 10.0,
+            ..AutoRescheduleConfig::default()
+        });
+        policy.observe("a.f", 1, 8.0, 0.0);
+        assert_eq!(policy.max_effective("a.f", 0.0), Some(8.0));
+        // Three half-lives idle: 8 → 1.
+        let cooled = policy.max_effective("a.f", 30.0).unwrap();
+        assert!((cooled - 1.0).abs() < 1e-9, "8.0 over 3 half-lives = 1.0, got {cooled}");
+        // The next sample folds into the *cooled* value, not the stale one:
+        // alpha 1.0 means the sample replaces it outright.
+        assert_eq!(policy.observe("a.f", 1, 2.0, 30.0), 2.0);
+        // A colder placement never outranks a recently-hot one.
+        policy.observe("a.g", 2, 1.5, 30.0);
+        assert_eq!(policy.hottest_of_app("a", 30.0), Some("a.f".to_string()));
+        // ...but decay can flip the ranking once the hot one idles. a.f was
+        // last seen at t=30 with 2.0; a.g refreshed at t=50 stays 1.5 while
+        // a.f has cooled to 2.0 · 0.5² = 0.5 by t=50.
+        policy.observe("a.g", 2, 1.5, 50.0);
+        assert_eq!(policy.hottest_of_app("a", 50.0), Some("a.g".to_string()));
+    }
+
+    #[test]
+    fn unhelpful_migration_enters_cooldown() {
+        let policy = bare_policy(AutoRescheduleConfig {
+            alpha: 1.0,
+            min_interval_s: 0.0,
+            cooldown_s: 100.0,
+            improvement_factor: 0.9,
+            // Disable decay so hotness only moves via samples.
+            idle_half_life_s: f64::INFINITY,
+            ..AutoRescheduleConfig::default()
+        });
+        policy.observe("a.f", 1, 10.0, 0.0);
+        assert!(policy.admit_attempt("a.f", 1.0), "first attempt always admitted");
+        policy.inflight.lock().unwrap().remove("a.f"); // migration job finished
+        // Hotness unchanged (10 > 0.9 · 10): inside the cooldown the
+        // re-trigger is refused even though min_interval_s is 0.
+        assert!(!policy.admit_attempt("a.f", 5.0), "unimproved + in cooldown = refused");
+        // The migration helped after all (10 → 0.5): cooldown lifts early.
+        policy.observe("a.f", 1, 0.5, 6.0);
+        assert!(policy.admit_attempt("a.f", 6.0), "improvement lifts the cooldown");
+        policy.inflight.lock().unwrap().remove("a.f");
+        // That second migration didn't help (0.5 vs pre 0.5) → refused again…
+        assert!(!policy.admit_attempt("a.f", 7.0));
+        // …until the cooldown itself lapses.
+        assert!(policy.admit_attempt("a.f", 200.0), "cooldown expiry re-admits");
     }
 }

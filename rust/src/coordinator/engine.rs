@@ -167,6 +167,7 @@ use crate::util::bytes::Bytes;
 use crate::util::json::Json;
 
 use super::dag::RunState;
+use super::handle::BatchCall;
 use super::invoker::{parse_outputs, InstanceResult, WorkflowResult};
 use super::resource::{Application, EdgeFaaS, ResourceId};
 
@@ -313,6 +314,10 @@ pub enum WaitError {
     DeadlineExceeded { run: RunId },
     /// The run finished unsuccessfully.
     RunFailed { run: RunId, message: String },
+    /// The run failed because a resource it depended on was declared dead
+    /// by the liveness detector and no surviving candidate could take over
+    /// its instances.
+    ResourceDead { run: RunId, resource: ResourceId, message: String },
     /// No record of the run: never submitted, or already consumed.
     UnknownRun { run: RunId },
 }
@@ -330,6 +335,9 @@ impl std::fmt::Display for WaitError {
             }
             WaitError::RunFailed { run, message } => {
                 write!(f, "workflow run {run} failed: {message}")
+            }
+            WaitError::ResourceDead { run, resource, message } => {
+                write!(f, "workflow run {run} failed: resource {resource} died: {message}")
             }
             WaitError::UnknownRun { run } => write!(f, "unknown workflow run {run}"),
         }
@@ -380,7 +388,50 @@ pub enum EngineEvent {
         /// How far past the deadline the miss was detected, seconds.
         late_by: f64,
     },
+    /// The liveness detector declared a resource Dead and its dispatch
+    /// shard was drained. Fires after the drain, so candidate mappings and
+    /// the monitor snapshot already exclude the resource when subscribers
+    /// (e.g. relocation policies) observe it.
+    ResourceDead {
+        resource: ResourceId,
+        /// Queued instances moved onto surviving candidates.
+        queued_moved: usize,
+        /// Queued instances whose runs failed typed (no survivor).
+        queued_failed: usize,
+    },
+    /// A Dead resource answered scrapes through its quarantine and was
+    /// re-admitted; its candidate memberships have been restored.
+    ResourceRecovered { resource: ResourceId },
 }
+
+/// Typed refusal returned by [`EdgeFaaS::unregister`] when the resource
+/// still has queued or in-flight engine work: yanking it would strand
+/// those runs with no completion path (the historical hang). Names the
+/// runs with queued instances so the caller can wait on them — or kill the
+/// resource and let the liveness plane drain it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceBusy {
+    pub resource: ResourceId,
+    /// Runs with instances queued on the resource (sorted, deduplicated).
+    pub runs: Vec<RunId>,
+    /// Instances queued (ready or admission-deferred) for the resource.
+    pub queued: usize,
+    /// Instances currently executing on the resource.
+    pub in_flight: usize,
+}
+
+impl std::fmt::Display for ResourceBusy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "resource {} has {} queued and {} in-flight instance(s) (runs {:?}); wait for \
+             them to finish, or let the liveness plane drain the resource",
+            self.resource, self.queued, self.in_flight, self.runs
+        )
+    }
+}
+
+impl std::error::Error for ResourceBusy {}
 
 /// A point-in-time snapshot of engine-wide counters
 /// ([`EdgeFaaS::engine_stats`]; also served by the REST gateway's
@@ -447,6 +498,14 @@ struct InstanceTask {
     /// node-common head is serialized once and shared across placements).
     /// Shared `Bytes`: the batch protocol clones refcounts, not payloads.
     envelope: Bytes,
+    /// Globally unique attempt id (nonzero), threaded through the `_batch`
+    /// wire so a backend can deduplicate a liveness retry whose first
+    /// attempt actually executed on a half-dead resource. Preserved across
+    /// drain re-anchoring and retries.
+    attempt: u64,
+    /// Set once the liveness path has retried this instance: in-flight
+    /// work is retried at most once per node, never a second time.
+    retried: bool,
 }
 
 /// Priority-queue key: strict class first, earliest deadline within the
@@ -492,6 +551,9 @@ struct RunEntry {
     /// Set once when the deadline is detected as missed at dispatch.
     deadline_missed: bool,
     failed: Option<String>,
+    /// When the failure was caused by a dead resource with no surviving
+    /// candidate, the resource — [`WaitError::ResourceDead`]'s payload.
+    dead_resource: Option<ResourceId>,
     done: bool,
 }
 
@@ -580,6 +642,8 @@ pub(super) struct EngineCore {
     /// Global submission sequence — the deterministic FIFO tie-break,
     /// identical at every shard count.
     next_seq: AtomicU64,
+    /// Per-instance attempt ids (nonzero; 0 on the wire = "no dedup").
+    next_attempt: AtomicU64,
     max_workers: AtomicUsize,
     per_resource_slots: AtomicUsize,
     /// Largest per-resource invocation batch a worker may drain (1 =
@@ -664,6 +728,7 @@ impl EngineCore {
         EngineCore {
             next_run: AtomicU64::new(0),
             next_seq: AtomicU64::new(0),
+            next_attempt: AtomicU64::new(1),
             max_workers: AtomicUsize::new(DEFAULT_MAX_WORKERS),
             per_resource_slots: AtomicUsize::new(DEFAULT_PER_RESOURCE_SLOTS),
             max_batch: AtomicUsize::new(DEFAULT_MAX_BATCH),
@@ -860,6 +925,26 @@ fn pop_best(q: &mut DispatchState, limit: usize, lo: QKey) -> Option<Task> {
     }
 }
 
+/// Re-anchor a fire-time envelope on a different resource: the envelope's
+/// trailing `"resource":<id>}` field (always last — see `fire_node`'s
+/// serialization) is rewritten in place of re-serializing the whole JSON
+/// tree. Falls back to the original envelope if the marker is missing
+/// (malformed envelopes fail downstream either way).
+fn patch_envelope_resource(envelope: &Bytes, target: ResourceId) -> Bytes {
+    let Ok(s) = std::str::from_utf8(envelope) else { return envelope.clone() };
+    match s.rfind(",\"resource\":") {
+        Some(pos) => {
+            let mut out = String::with_capacity(pos + 24);
+            out.push_str(&s[..pos]);
+            out.push_str(",\"resource\":");
+            out.push_str(&(target as u64).to_string());
+            out.push('}');
+            Bytes::from(out)
+        }
+        None => envelope.clone(),
+    }
+}
+
 /// Execute one placement instance: call the resource gateway with the
 /// prebuilt envelope and parse the outputs (the invoker's wire format).
 ///
@@ -872,7 +957,22 @@ fn run_instance(faas: &EdgeFaaS, t: &InstanceTask) -> anyhow::Result<InstanceRes
         || -> anyhow::Result<InstanceResult> {
             let reg = faas.resource(t.resource)?;
             let qname = EdgeFaaS::qualified(&t.app, &t.function);
-            let (out, latency) = reg.handle.invoke(&qname, &t.envelope)?;
+            // Even a single instance goes through the batch verb so its
+            // attempt id registers at the backend's dedup cache — the
+            // at-most-once guarantee must cover first attempts, not only
+            // batched ones.
+            let calls = [BatchCall {
+                name: qname,
+                payload: t.envelope.clone(),
+                attempt: t.attempt,
+            }];
+            let mut results = reg.handle.invoke_batch(&calls);
+            anyhow::ensure!(
+                results.len() == 1,
+                "backend returned {} results for 1 call",
+                results.len()
+            );
+            let (out, latency) = results.pop().expect("length checked")?;
             let outputs = parse_outputs(&out)?;
             Ok(InstanceResult { resource: t.resource, outputs, latency })
         },
@@ -1255,6 +1355,7 @@ impl EdgeFaaS {
                     deadline_abs: qos.deadline_s.map(|d| now + d.max(0.0)),
                     deadline_missed: false,
                     failed: None,
+                    dead_resource: None,
                     done: false,
                 };
                 let sid = eng.run_shard_of(run);
@@ -1426,7 +1527,12 @@ impl EdgeFaaS {
                     return Err(WaitError::DeadlineExceeded { run });
                 }
                 return match entry.failed {
-                    Some(message) => Err(WaitError::RunFailed { run, message }),
+                    Some(message) => match entry.dead_resource {
+                        Some(resource) => {
+                            Err(WaitError::ResourceDead { run, resource, message })
+                        }
+                        None => Err(WaitError::RunFailed { run, message }),
+                    },
                     None => Ok(entry.result),
                 };
             }
@@ -1803,6 +1909,8 @@ impl EdgeFaaS {
                 class,
                 deadline_ns,
                 envelope: Bytes::from(env),
+                attempt: self.engine.next_attempt.fetch_add(1, Ordering::Relaxed),
+                retried: false,
             }));
         }
         Ok(())
@@ -1895,11 +2003,15 @@ impl EdgeFaaS {
                 Ok(reg) => {
                     // Refcount bumps only: the envelopes were built at fire
                     // time and are shared with the backend call.
-                    let calls: Vec<(String, Bytes)> = live
+                    let calls: Vec<BatchCall> = live
                         .iter()
                         .map(|&i| {
                             let t = &tasks[i];
-                            (EdgeFaaS::qualified(&t.app, &t.function), t.envelope.clone())
+                            BatchCall {
+                                name: EdgeFaaS::qualified(&t.app, &t.function),
+                                payload: t.envelope.clone(),
+                                attempt: t.attempt,
+                            }
                         })
                         .collect();
                     let invoked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -1942,7 +2054,139 @@ impl EdgeFaaS {
                 }
             },
         }
+        // At-most-once in-flight retry: failed entries whose resource
+        // looks dead move to a surviving candidate before the failure
+        // reaches the run bookkeeping. Runs outside every engine lock.
+        let retries = self.plan_liveness_retries(rid, &tasks, &mut outcomes);
         self.complete_batch(&tasks, outcomes);
+        if !retries.is_empty() {
+            self.enqueue(retries);
+        }
+    }
+
+    /// Decide which failed entries of a just-executed batch to retry on a
+    /// surviving resource, and which to convert into typed
+    /// `ResourceDead` failures.
+    ///
+    /// The gate is an *infrastructure* check, not the per-entry error: the
+    /// resource's lease is unschedulable (Dead/Recovering), it was
+    /// unregistered, or a direct probe fails (covers a resource killed
+    /// before the detector's first sweep saw it). An application error
+    /// from a healthy resource is never retried.
+    ///
+    /// For each retried entry: the run's `open_tasks` is raised *before*
+    /// the entry's own decrement in `complete_batch` (so the run cannot
+    /// transiently drain to zero and complete early), the outcome becomes
+    /// a skip, and a re-anchored copy of the task — same attempt id, so a
+    /// backend that executed the first attempt deduplicates it; `retried`
+    /// set, so it is never retried again — is returned for enqueueing
+    /// after `complete_batch`. Entries with no survivor (or already
+    /// retried once) fail typed: the run's `dead_resource` is recorded and
+    /// the error message names the dead resource.
+    fn plan_liveness_retries(
+        self: &Arc<Self>,
+        rid: ResourceId,
+        tasks: &[InstanceTask],
+        outcomes: &mut [Option<anyhow::Result<InstanceResult>>],
+    ) -> Vec<Task> {
+        let eng = &self.engine;
+        let any_failed =
+            (0..tasks.len()).any(|i| matches!(&outcomes[i], Some(Err(_))));
+        if !any_failed {
+            return Vec::new();
+        }
+        let snap = self.monitor_snapshot();
+        let lease_bad =
+            snap.lease_of(rid).map(|l| !l.state.schedulable()).unwrap_or(false);
+        let infra_dead = lease_bad
+            || match self.resource(rid) {
+                Err(_) => true,
+                Ok(reg) => reg.handle.usage().is_err(),
+            };
+        if !infra_dead {
+            return Vec::new();
+        }
+        let mut retries = Vec::new();
+        for i in 0..tasks.len() {
+            if !matches!(&outcomes[i], Some(Err(_))) {
+                continue;
+            }
+            let t = &tasks[i];
+            let candidates = self.candidates_of(&t.app, &t.function).unwrap_or_default();
+            // Prefer a different, schedulable resource; fall back to the
+            // same node only when it is the sole candidate — the backend's
+            // attempt-id dedup makes that retry safe even if the first
+            // attempt executed.
+            let survivor = candidates
+                .iter()
+                .copied()
+                .find(|&r| {
+                    r != rid
+                        && self.resource(r).is_ok()
+                        && snap.lease_of(r).map(|l| l.state.schedulable()).unwrap_or(true)
+                })
+                .or_else(|| {
+                    candidates.iter().copied().find(|&r| r == rid && self.resource(r).is_ok())
+                });
+            let target = match (t.retried, survivor) {
+                (false, Some(target)) => target,
+                _ => {
+                    // Out of retries or out of survivors: make the failure
+                    // typed. `complete_batch` records the message; the
+                    // `dead_resource` mark turns the wait into
+                    // [`WaitError::ResourceDead`].
+                    let orig = match &outcomes[i] {
+                        Some(Err(e)) => e.to_string(),
+                        _ => unreachable!("filtered above"),
+                    };
+                    outcomes[i] = Some(Err(anyhow::anyhow!(
+                        "resource {rid} is dead and no surviving candidate remains \
+                         (ResourceDead): {orig}"
+                    )));
+                    let rsid = eng.run_shard_of(t.run);
+                    let mut rs = eng.runs[rsid].state.lock().unwrap();
+                    if let Some(entry) = rs.map.get_mut(&t.run) {
+                        entry.dead_resource.get_or_insert(rid);
+                    }
+                    continue;
+                }
+            };
+            // Raise open_tasks before complete_batch's decrement; skip the
+            // retry when the run is already failed/done (nothing to save).
+            let alive = {
+                let rsid = eng.run_shard_of(t.run);
+                let mut rs = eng.runs[rsid].state.lock().unwrap();
+                match rs.map.get_mut(&t.run) {
+                    Some(entry) if entry.failed.is_none() && !entry.done => {
+                        entry.open_tasks += 1;
+                        true
+                    }
+                    _ => false,
+                }
+            };
+            if !alive {
+                continue;
+            }
+            log::warn!(
+                "retrying instance {} of `{}.{}` (run {}, attempt {}) on resource {target} \
+                 after resource {rid} died",
+                t.instance, t.app, t.function, t.run, t.attempt
+            );
+            outcomes[i] = None; // skip: the retry owns this entry's result now
+            retries.push(Task::Instance(InstanceTask {
+                run: t.run,
+                app: t.app.clone(),
+                function: t.function.clone(),
+                instance: t.instance,
+                resource: target,
+                class: t.class,
+                deadline_ns: t.deadline_ns,
+                envelope: patch_envelope_resource(&t.envelope, target),
+                attempt: t.attempt,
+                retried: true,
+            }));
+        }
+        retries
     }
 
     /// Group a batch's task indices by run shard (ascending shard order,
@@ -2102,6 +2346,147 @@ impl EdgeFaaS {
         self.emit_events(&run_events);
     }
 
+    /// Drain every *queued* instance bound for a dead resource out of its
+    /// dispatch shard: instances with a surviving schedulable candidate
+    /// are re-anchored onto it (attempt id preserved, retry budget
+    /// untouched — a queued instance never executed), the rest fail their
+    /// runs with a typed `ResourceDead` cause so no `wait_workflow` caller
+    /// hangs. In-flight instances are not touched here; they surface
+    /// through the batch path's at-most-once retry
+    /// ([`Self::plan_liveness_retries`]). Jobs and other resources' work
+    /// in the same shard are left in place. Returns `(moved, failed)`.
+    pub(super) fn drain_dead_resource(self: &Arc<Self>, rid: ResourceId) -> (usize, usize) {
+        let eng = &self.engine;
+        let sid = eng.dispatch_shard_of(rid);
+        // Phase A (dispatch shard lock): pull the dead resource's queued
+        // instances and settle the global queue counters.
+        let stranded: Vec<InstanceTask> = {
+            let mut st = eng.dispatch[sid].state.lock().unwrap();
+            let mut out = Vec::new();
+            let ready_keys: Vec<QKey> = st
+                .ready
+                .iter()
+                .filter(|(_, t)| matches!(t, Task::Instance(ti) if ti.resource == rid))
+                .map(|(k, _)| *k)
+                .collect();
+            for k in ready_keys {
+                if let Some(Task::Instance(t)) = st.ready.remove(&k) {
+                    out.push(t);
+                }
+            }
+            let deferred_keys: Vec<QKey> = st
+                .deferred
+                .iter()
+                .filter(|(_, t)| t.resource == rid)
+                .map(|(k, _)| *k)
+                .collect();
+            for k in deferred_keys {
+                if let Some(t) = st.deferred.remove(&k) {
+                    out.push(t);
+                }
+            }
+            if !out.is_empty() {
+                eng.queued_instances.fetch_sub(out.len(), Ordering::SeqCst);
+                let batch = out.iter().filter(|t| t.class == Priority::Batch).count();
+                if batch > 0 {
+                    eng.queued_batch_class.fetch_sub(batch, Ordering::SeqCst);
+                }
+            }
+            out
+        };
+        if stranded.is_empty() {
+            return (0, 0);
+        }
+        // Phase B (run shard locks only — never nested under the dispatch
+        // lock): re-anchor or fail each instance.
+        let snap = self.monitor_snapshot();
+        let mut moved: Vec<Task> = Vec::new();
+        let mut failed = 0usize;
+        let mut run_events = Vec::new();
+        let mut completed_shards: Vec<usize> = Vec::new();
+        for mut t in stranded {
+            let survivor = self
+                .candidates_of(&t.app, &t.function)
+                .unwrap_or_default()
+                .into_iter()
+                .find(|&r| {
+                    r != rid
+                        && self.resource(r).is_ok()
+                        && snap.lease_of(r).map(|l| l.state.schedulable()).unwrap_or(true)
+                });
+            match survivor {
+                Some(target) => {
+                    t.envelope = patch_envelope_resource(&t.envelope, target);
+                    t.resource = target;
+                    moved.push(Task::Instance(t));
+                }
+                None => {
+                    failed += 1;
+                    let rsid = eng.run_shard_of(t.run);
+                    let mut rs = eng.runs[rsid].state.lock().unwrap();
+                    let Some(entry) = rs.map.get_mut(&t.run) else { continue };
+                    entry.open_tasks = entry.open_tasks.saturating_sub(1);
+                    entry.dead_resource.get_or_insert(rid);
+                    entry.failed.get_or_insert_with(|| {
+                        format!(
+                            "workflow `{}` function `{}`: resource {rid} died with no \
+                             surviving candidate (ResourceDead)",
+                            entry.app_name, t.function
+                        )
+                    });
+                    entry.pending.remove(&t.function);
+                    entry.partial.remove(&t.function);
+                    if self.check_done(t.run, entry, &mut run_events) {
+                        Self::retire_finished(eng, &mut rs, t.run);
+                        completed_shards.push(rsid);
+                    }
+                }
+            }
+        }
+        let moved_count = moved.len();
+        if moved.is_empty() {
+            // Queued work vanished without dispatching: parked workers must
+            // re-evaluate (and exit if the engine just went idle).
+            eng.coord.cv.notify_all();
+        } else {
+            self.enqueue(moved);
+        }
+        for rsid in completed_shards {
+            eng.runs[rsid].done_cv.notify_all();
+        }
+        self.emit_events(&run_events);
+        (moved_count, failed)
+    }
+
+    /// Live engine work bound for one resource: the runs with instances
+    /// queued on it (sorted, deduplicated) plus the queued and in-flight
+    /// counts — what `unregister`'s [`ResourceBusy`] refusal reports.
+    pub(super) fn live_instances_on(&self, rid: ResourceId) -> (Vec<RunId>, usize, usize) {
+        let eng = &self.engine;
+        let st = eng.dispatch[eng.dispatch_shard_of(rid)].state.lock().unwrap();
+        let mut runs: Vec<RunId> = Vec::new();
+        let mut queued = 0usize;
+        for t in st.ready.values() {
+            if let Task::Instance(ti) = t {
+                if ti.resource == rid {
+                    queued += 1;
+                    runs.push(ti.run);
+                }
+            }
+        }
+        for t in st.deferred.values() {
+            if t.resource == rid {
+                queued += 1;
+                runs.push(t.run);
+            }
+        }
+        let in_flight = st.in_use.get(&rid).copied().unwrap_or(0);
+        drop(st);
+        runs.sort_unstable();
+        runs.dedup();
+        (runs, queued, in_flight)
+    }
+
     /// Mark a drained run done; returns true on the completing transition.
     fn check_done(&self, run: RunId, entry: &mut RunEntry, events: &mut Vec<EngineEvent>) -> bool {
         if !entry.done && entry.open_tasks == 0 {
@@ -2139,7 +2524,7 @@ impl EdgeFaaS {
         rs.finished.push_back(run);
     }
 
-    fn emit_events(&self, events: &[EngineEvent]) {
+    pub(super) fn emit_events(&self, events: &[EngineEvent]) {
         if events.is_empty() {
             return;
         }
@@ -2389,6 +2774,9 @@ dag:
                     runs_done.fetch_add(1, Ordering::SeqCst);
                 }
                 EngineEvent::DeadlineMissed { .. } => unreachable!("no deadlines set"),
+                EngineEvent::ResourceDead { .. } | EngineEvent::ResourceRecovered { .. } => {
+                    unreachable!("no liveness transitions in this test")
+                }
             });
         }
         let run = b.faas.submit_workflow("chain", &entry_for("ev")).unwrap();
@@ -2456,6 +2844,8 @@ dag:
             class,
             deadline_ns,
             envelope: Bytes::new(),
+            attempt: 0,
+            retried: false,
         })
     }
 

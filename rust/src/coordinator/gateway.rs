@@ -36,15 +36,21 @@
 //!                                       dispatch statistics
 //! GET    /monitor/snapshot              the monitoring snapshot plane:
 //!                                       epoch, staleness bound, per-resource
-//!                                       usage samples with ages
+//!                                       usage samples with ages, scrape
+//!                                       failure counts and lease states
 //!                                       (?latency=true adds the dense
 //!                                       latency matrix)
+//! GET    /monitor/liveness              the failure detector: per-resource
+//!                                       lease state machine (alive/suspect/
+//!                                       dead/recovering), miss counters,
+//!                                       detector config, summary counts
 //! GET    /healthz
 //! ```
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
+use crate::monitor::LeaseState;
 use crate::simnet::Clock as _;
 use crate::util::http::{Handler, Request, Response, Server};
 use crate::util::json::Json;
@@ -227,7 +233,15 @@ impl Handler for EdgeFaasGateway {
                         .set("gpus_total", (s.usage.gpus_total as u64).into())
                         .set("collected_at", num(s.collected_at))
                         .set("age_s", num(now - s.collected_at))
-                        .set("fresh", (now - s.collected_at <= max_age).into());
+                        .set("fresh", (now - s.collected_at <= max_age).into())
+                        .set("consecutive_failures", (s.consecutive_failures as u64).into());
+                    match &s.last_error {
+                        Some(e) => r.set("last_error", e.as_str().into()),
+                        None => r.set("last_error", Json::Null),
+                    };
+                    if let Some(lease) = snap.lease_of(rid) {
+                        r.set("lease", lease.state.as_str().into());
+                    }
                     resources.set(&rid.to_string(), r);
                 }
                 o.set("resources", resources);
@@ -240,6 +254,48 @@ impl Handler for EdgeFaasGateway {
                         .collect();
                     o.set("latency_matrix", Json::Arr(rows));
                 }
+                Response::json(200, &o)
+            }
+            ("GET", ["monitor", "liveness"]) => {
+                let snap = self.faas.monitor_snapshot();
+                let cfg = self.faas.liveness_config();
+                let now = self.faas.clock().now();
+                let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+                let mut o = Json::obj();
+                o.set("epoch", snap.epoch.into())
+                    .set("dead_after", (cfg.dead_after as u64).into())
+                    .set("quarantine_sweeps", (cfg.quarantine_sweeps as u64).into());
+                let mut resources = Json::obj();
+                let (mut alive, mut suspect, mut dead, mut recovering) = (0u64, 0u64, 0u64, 0u64);
+                for (rid, lease) in snap.leases() {
+                    match lease.state {
+                        LeaseState::Alive => alive += 1,
+                        LeaseState::Suspect => suspect += 1,
+                        LeaseState::Dead => dead += 1,
+                        LeaseState::Recovering => recovering += 1,
+                    }
+                    let mut r = Json::obj();
+                    r.set("state", lease.state.as_str().into())
+                        .set("schedulable", lease.state.schedulable().into())
+                        .set("misses", (lease.misses as u64).into())
+                        .set("clean_sweeps", (lease.clean_sweeps as u64).into())
+                        .set("since", num(lease.since))
+                        .set("state_age_s", num(now - lease.since))
+                        .set("last_seen", num(lease.last_seen));
+                    match snap.usage_of(rid).and_then(|s| s.last_error.as_deref()) {
+                        Some(e) => r.set("last_error", e.into()),
+                        None => r.set("last_error", Json::Null),
+                    };
+                    resources.set(&rid.to_string(), r);
+                }
+                o.set("resources", resources);
+                let mut summary = Json::obj();
+                summary
+                    .set("alive", alive.into())
+                    .set("suspect", suspect.into())
+                    .set("dead", dead.into())
+                    .set("recovering", recovering.into());
+                o.set("summary", summary);
                 Response::json(200, &o)
             }
             ("GET", ["resources"]) => {
@@ -488,11 +544,35 @@ mod tests {
         assert_eq!(resources.len(), 11);
         for r in resources.values() {
             assert_eq!(r.get("fresh").unwrap().as_bool(), Some(true));
+            assert_eq!(r.get("consecutive_failures").unwrap().as_u64(), Some(0));
+            assert!(matches!(r.get("last_error"), Some(Json::Null)));
+            assert_eq!(r.get("lease").unwrap().as_str(), Some("alive"));
         }
         // ?latency=true adds the dense node matrix (11 topology nodes).
         let matrix = v.get("latency_matrix").unwrap().as_arr().unwrap();
         assert_eq!(matrix.len(), 11);
         assert_eq!(matrix[0].as_arr().unwrap().len(), 11);
+    }
+
+    #[test]
+    fn liveness_plane_over_rest() {
+        let (server, bed) = served();
+        let addr = server.addr();
+        bed.faas.refresh_monitor_snapshot();
+        let v = http::get(&addr, "/monitor/liveness").unwrap().json_body().unwrap();
+        assert_eq!(v.get("epoch").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("dead_after").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("quarantine_sweeps").unwrap().as_u64(), Some(2));
+        let resources = v.get("resources").unwrap().as_obj().unwrap();
+        assert_eq!(resources.len(), 11);
+        for r in resources.values() {
+            assert_eq!(r.get("state").unwrap().as_str(), Some("alive"));
+            assert_eq!(r.get("schedulable").unwrap().as_bool(), Some(true));
+            assert_eq!(r.get("misses").unwrap().as_u64(), Some(0));
+        }
+        let summary = v.get("summary").unwrap();
+        assert_eq!(summary.get("alive").unwrap().as_u64(), Some(11));
+        assert_eq!(summary.get("dead").unwrap().as_u64(), Some(0));
     }
 
     #[test]

@@ -15,6 +15,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::cluster::faas::{FaasBackend, FunctionSpec};
+pub use crate::cluster::faas::BatchCall;
 use crate::cluster::gateway::client as faas_client;
 use crate::monitor::metrics::ResourceUsage;
 use crate::objstore::gateway::client as store_client;
@@ -40,11 +41,14 @@ pub trait ResourceHandle: Send + Sync {
     fn remove(&self, name: &str) -> anyhow::Result<()>;
     fn invoke(&self, name: &str, payload: &Bytes) -> anyhow::Result<(Bytes, f64)>;
     /// The backend protocol's `Batch` verb: invoke several functions in one
-    /// gateway round trip, one result per entry. The default implementation
+    /// gateway round trip, one result per entry. Each call carries its
+    /// engine attempt id ([`BatchCall`]) so the backend can deduplicate
+    /// liveness-plane retries at-most-once. The default implementation
     /// falls back to per-task [`ResourceHandle::invoke`] for backends that
-    /// do not support batching.
-    fn invoke_batch(&self, calls: &[(String, Bytes)]) -> Vec<anyhow::Result<(Bytes, f64)>> {
-        calls.iter().map(|(name, payload)| self.invoke(name, payload)).collect()
+    /// do not support batching (dropping dedup — acceptable for ad-hoc
+    /// handles; the engine paths use [`LocalHandle`]/[`HttpHandle`]).
+    fn invoke_batch(&self, calls: &[BatchCall]) -> Vec<anyhow::Result<(Bytes, f64)>> {
+        calls.iter().map(|c| self.invoke(&c.name, &c.payload)).collect()
     }
     fn list(&self) -> anyhow::Result<Vec<String>>;
     fn describe(&self, name: &str) -> anyhow::Result<crate::util::json::Json>;
@@ -104,7 +108,7 @@ impl ResourceHandle for LocalHandle {
         self.backend.invoke(name, payload)
     }
 
-    fn invoke_batch(&self, calls: &[(String, Bytes)]) -> Vec<anyhow::Result<(Bytes, f64)>> {
+    fn invoke_batch(&self, calls: &[BatchCall]) -> Vec<anyhow::Result<(Bytes, f64)>> {
         self.backend.invoke_batch(calls)
     }
 
@@ -231,7 +235,7 @@ impl ResourceHandle for HttpHandle {
         faas_client::invoke(&self.faas_addr, name, payload)
     }
 
-    fn invoke_batch(&self, calls: &[(String, Bytes)]) -> Vec<anyhow::Result<(Bytes, f64)>> {
+    fn invoke_batch(&self, calls: &[BatchCall]) -> Vec<anyhow::Result<(Bytes, f64)>> {
         // One wire round trip: the length-prefixed binary frame format
         // (raw payloads/outputs — binary data travels at 1x instead of the
         // JSON leg's 2x hex), downgrading to the JSON format for old
@@ -264,9 +268,11 @@ impl ResourceHandle for HttpHandle {
         match faas_client::invoke_batch_json(&self.faas_addr, calls) {
             Ok(BatchAttempt::Ran(results)) => results,
             // Both legs refused pre-execution (e.g. binary payloads
-            // against a JSON-only peer): per-call invokes.
+            // against a JSON-only peer): per-call invokes. The single-call
+            // verb has no attempt field — dedup is lost on this legacy
+            // path, exactly as for a pre-liveness peer.
             Ok(BatchAttempt::Refused) => {
-                calls.iter().map(|(name, payload)| self.invoke(name, payload)).collect()
+                calls.iter().map(|c| self.invoke(&c.name, &c.payload)).collect()
             }
             Err(e) => fail_all(e),
         }
@@ -414,7 +420,7 @@ mod tests {
         faas_client::deploy(&addr, "edgepwd", "echo", "img/echo", 1 << 20, 0, &[]).unwrap();
 
         let handle = HttpHandle::new(addr.clone(), "edgepwd", "", "", "", "");
-        let calls = vec![("echo".to_string(), Bytes::from("hi"))];
+        let calls = vec![BatchCall::new("echo", Bytes::from("hi"))];
         let results = handle.invoke_batch(&calls);
         assert_eq!(results[0].as_ref().unwrap().0, &b"hi"[..]);
         assert_eq!(probes.load(Ordering::SeqCst), 1, "one probe, then refusal cached");

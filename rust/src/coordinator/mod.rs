@@ -68,8 +68,8 @@ pub use asyncinvoke::{
 };
 pub use appconfig::{Affinity, AffinityType, AppConfig, FunctionConfig, Reduce, Requirements};
 pub use engine::{
-    EngineError, EngineEvent, EngineStats, Priority, QoS, RunId, RunStatus, WaitError,
-    ENGINE_SHARDS,
+    EngineError, EngineEvent, EngineStats, Priority, QoS, ResourceBusy, RunId, RunStatus,
+    WaitError, ENGINE_SHARDS,
 };
 pub use handle::{LocalHandle, ResourceHandle};
 pub use invoker::{InstanceResult, WorkflowResult};

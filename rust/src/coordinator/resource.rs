@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex, RwLock, Weak};
 
 use crate::backup::DurableKv;
 use crate::cluster::spec::ResourceSpec;
+use crate::monitor::liveness::{self, LivenessConfig, Transition};
 use crate::monitor::snapshot::{LatencyMatrix, MonitorSnapshot, SnapshotPlane, UsageSample};
 use crate::simnet::{Clock, NodeId, RealClock, Tier, Topology, TransferModel};
 use crate::util::json::Json;
@@ -22,7 +23,7 @@ use crate::util::yaml;
 
 use super::appconfig::AppConfig;
 use super::dag::Dag;
-use super::engine::EngineCore;
+use super::engine::{EngineCore, EngineEvent};
 use super::functions::FunctionPackage;
 use super::handle::ResourceHandle;
 use super::scheduler::{LocalityScheduler, Schedule, SchedCache};
@@ -83,6 +84,17 @@ pub struct EdgeFaaS {
     /// function was configured with), so rescheduling can re-anchor
     /// data-affinity placements.
     pub(super) data_anchors: RwLock<HashMap<String, Vec<ResourceId>>>,
+    /// Failure-detector configuration (dead-after / quarantine sweeps; see
+    /// [`crate::monitor::liveness`]).
+    liveness_cfg: Mutex<LivenessConfig>,
+    /// Serializes collector sweeps: lease stepping is a read-modify-write
+    /// over the previous snapshot's lease table, so two concurrent
+    /// refreshes could double-count a miss or lose a `Died` transition.
+    sweep_lock: Mutex<()>,
+    /// Candidate memberships stripped from a resource when it was marked
+    /// dead (qualified function names), kept so quarantine re-admission can
+    /// restore them.
+    dead_memberships: Mutex<HashMap<ResourceId, Vec<String>>>,
 }
 
 impl EdgeFaaS {
@@ -116,6 +128,9 @@ impl EdgeFaaS {
             sched_cache: Mutex::new(SchedCache::default()),
             packages: RwLock::new(HashMap::new()),
             data_anchors: RwLock::new(HashMap::new()),
+            liveness_cfg: Mutex::new(LivenessConfig::default()),
+            sweep_lock: Mutex::new(()),
+            dead_memberships: Mutex::new(HashMap::new()),
         }
     }
 
@@ -224,9 +239,26 @@ impl EdgeFaaS {
         if stored > 0 {
             anyhow::bail!("resource {id} still stores {stored} bytes");
         }
+        // A resource with queued or in-flight engine work still owes runs
+        // their completion events; yanking it would strand them with no
+        // completion path. Refuse with a typed error naming the live runs —
+        // the caller can wait them out (or kill the resource and let the
+        // liveness plane drain it).
+        let (runs, queued, in_flight) = self.live_instances_on(id);
+        if queued > 0 || in_flight > 0 {
+            return Err(anyhow::Error::new(super::engine::ResourceBusy {
+                resource: id,
+                runs,
+                queued,
+                in_flight,
+            }));
+        }
         self.resources.write().unwrap().remove(&id);
         self.kv.delete("resource_map", &id.to_string())?;
         self.free_ids.lock().unwrap().push(Reverse(id));
+        // Forget any pending quarantine restore: the id may be reused by an
+        // unrelated resource.
+        self.dead_memberships.lock().unwrap().remove(&id);
         // Cached decisions may name the departed resource: drop the cache.
         self.invalidate_schedule_cache();
         log::info!("unregistered resource {id}");
@@ -310,38 +342,191 @@ impl EdgeFaaS {
         self.monitor.collector_running()
     }
 
+    /// The failure detector's configuration (see
+    /// [`crate::monitor::liveness`] for the lease lifecycle).
+    pub fn liveness_config(&self) -> LivenessConfig {
+        *self.liveness_cfg.lock().unwrap()
+    }
+
+    /// Tune the failure detector: consecutive missed sweeps before a
+    /// resource is marked Dead, and consecutive clean sweeps a recovering
+    /// resource must answer before re-admission (both clamped to >= 1).
+    pub fn set_liveness(&self, dead_after: u32, quarantine_sweeps: u32) {
+        *self.liveness_cfg.lock().unwrap() = LivenessConfig {
+            dead_after: dead_after.max(1),
+            quarantine_sweeps: quarantine_sweeps.max(1),
+        };
+    }
+
     /// Synchronously scrape every registered resource and publish a new
-    /// snapshot epoch. Scrapes run outside the resource-map lock; a
-    /// resource whose scrape fails keeps its previous sample (it ages out
-    /// through the staleness bound instead of vanishing on one transient
-    /// failure), while departed resources are dropped. Returns the new
-    /// epoch. This is the collector's refresh step, also callable directly
-    /// (virtual-time tests, benches, or a scrape-now REST hook).
-    pub fn refresh_monitor_snapshot(&self) -> u64 {
+    /// snapshot epoch. Scrapes run outside the resource-map lock. Each
+    /// sweep doubles as a heartbeat for the liveness plane: a resource
+    /// whose scrape fails keeps its previous sample — visibly, with
+    /// `consecutive_failures`/`last_error` carried on it — while its lease
+    /// advances `Alive -> Suspect -> Dead` (and back through quarantine;
+    /// see [`crate::monitor::liveness`]). A `Died` transition drains the
+    /// resource's queued/in-flight work and strips its candidate
+    /// memberships; a `Readmitted` one restores them. Departed resources
+    /// are dropped. Returns the new epoch. This is the collector's refresh
+    /// step, also callable directly (virtual-time tests, benches, or a
+    /// scrape-now REST hook).
+    pub fn refresh_monitor_snapshot(self: &Arc<Self>) -> u64 {
+        // One sweep at a time: lease stepping is a read-modify-write of the
+        // previous snapshot's lease table, and each Died/Readmitted
+        // transition must fire its side effects exactly once.
+        let _sweep = self.sweep_lock.lock().unwrap();
+        let cfg = self.liveness_config();
         let targets: Vec<(ResourceId, Arc<dyn ResourceHandle>)> = {
             let res = self.resources.read().unwrap();
             res.values().map(|r| (r.id, Arc::clone(&r.handle))).collect()
         };
         let prev = self.monitor.snapshot();
         let mut usage = BTreeMap::new();
+        let mut leases = BTreeMap::new();
+        let mut died = Vec::new();
+        let mut readmitted = Vec::new();
         for (id, handle) in targets {
-            match handle.usage() {
+            let now = self.clock.now();
+            let ok = match handle.usage() {
                 Ok(u) => {
-                    usage.insert(
-                        id,
-                        UsageSample { usage: u, collected_at: self.clock.now() },
-                    );
+                    usage.insert(id, UsageSample::fresh(u, now));
+                    true
                 }
                 Err(e) => {
                     log::warn!("monitor refresh: scrape of resource {id} failed: {e}");
+                    // Carry the last-good reading, but visibly: the sample
+                    // keeps its original collection time and counts the
+                    // misses instead of masquerading as fresh forever.
                     if let Some(old) = prev.usage_of(id) {
-                        usage.insert(id, *old);
+                        usage.insert(
+                            id,
+                            UsageSample {
+                                usage: old.usage,
+                                collected_at: old.collected_at,
+                                consecutive_failures: old.consecutive_failures + 1,
+                                last_error: Some(e.to_string()),
+                            },
+                        );
                     }
+                    false
+                }
+            };
+            let (lease, transition) = liveness::step(&cfg, prev.lease_of(id), ok, now);
+            match transition {
+                Some(Transition::Died) => died.push(id),
+                Some(Transition::Readmitted) => readmitted.push(id),
+                None => {}
+            }
+            leases.insert(id, lease);
+        }
+        let now = self.clock.now();
+        let epoch = self.monitor.publish(usage, leases, prev.latencies_arc(), now);
+        // Transition side effects run after the publish so drain and
+        // relocation decisions read the epoch that declared the new state.
+        for id in died {
+            self.on_resource_dead(id);
+        }
+        for id in readmitted {
+            self.on_resource_recovered(id);
+        }
+        epoch
+    }
+
+    /// Lease transition hook: `id` was just declared Dead by the detector.
+    /// Strips it from every candidate mapping (recording the memberships
+    /// for re-admission), drains its dispatch shard through the engine —
+    /// queued instances move to surviving candidates or fail typed — emits
+    /// [`EngineEvent::ResourceDead`], and relocates the functions it
+    /// anchored via the make-before-break reschedule path.
+    fn on_resource_dead(self: &Arc<Self>, id: ResourceId) {
+        let mut stripped: Vec<String> = Vec::new();
+        {
+            let mut map = self.candidates.write().unwrap();
+            for (qname, ids) in map.iter_mut() {
+                if ids.contains(&id) {
+                    ids.retain(|&x| x != id);
+                    let rec = Json::Arr(ids.iter().map(|&i| Json::Num(i as f64)).collect());
+                    let _ = self.kv.put("candidate_resource", qname, rec);
+                    stripped.push(qname.clone());
                 }
             }
         }
-        let now = self.clock.now();
-        self.monitor.publish(usage, prev.latencies_arc(), now)
+        if !stripped.is_empty() {
+            self.dead_memberships.lock().unwrap().insert(id, stripped.clone());
+        }
+        self.invalidate_schedule_cache();
+        let (queued_moved, queued_failed) = self.drain_dead_resource(id);
+        log::warn!(
+            "resource {id} marked dead: {queued_moved} queued instance(s) moved, \
+             {queued_failed} failed"
+        );
+        self.emit_events(&[EngineEvent::ResourceDead {
+            resource: id,
+            queued_moved,
+            queued_failed,
+        }]);
+        // Relocate what the dead resource anchored: every function whose
+        // candidate set it belonged to is rescheduled make-before-break
+        // against the post-death snapshot (the phase-1 filter now excludes
+        // it). Failures are logged, not fatal — the drain above already
+        // guaranteed every affected run a completion path.
+        for qname in stripped {
+            let Some((app, function)) = qname.split_once('.') else { continue };
+            let package = self.packages.read().unwrap().get(&qname).cloned();
+            let Some(package) = package else { continue };
+            let anchors =
+                self.data_anchors.read().unwrap().get(&qname).cloned().unwrap_or_default();
+            if let Err(e) = self.reschedule_function(app, function, &package, anchors) {
+                log::warn!("relocation of `{qname}` off dead resource {id} failed: {e}");
+            }
+        }
+    }
+
+    /// Lease transition hook: `id` survived quarantine and is re-admitted.
+    /// Restores its recorded candidate memberships — best-effort
+    /// redeploying each function's package first so a restored membership
+    /// is actually servable — and emits [`EngineEvent::ResourceRecovered`].
+    fn on_resource_recovered(self: &Arc<Self>, id: ResourceId) {
+        let memberships = self.dead_memberships.lock().unwrap().remove(&id).unwrap_or_default();
+        let Ok(reg) = self.resource(id) else { return };
+        let deployed = reg.handle.list().unwrap_or_default();
+        let mut restored = 0usize;
+        for qname in &memberships {
+            let Some((app, function)) = qname.split_once('.') else { continue };
+            if !deployed.contains(qname) {
+                // The resource may have rebooted and lost its sandboxes:
+                // redeploy the recorded package before re-advertising.
+                let package = self.packages.read().unwrap().get(qname).cloned();
+                let Some(package) = package else { continue };
+                let memory = super::asyncinvoke::request_memory(self, app, function)
+                    .unwrap_or(128 << 20);
+                let labels = vec![
+                    ("app".to_string(), app.to_string()),
+                    ("fn".to_string(), function.to_string()),
+                ];
+                if let Err(e) =
+                    reg.handle.deploy(qname, &package.code, memory, 0, &labels)
+                {
+                    log::warn!("re-admission redeploy of `{qname}` on {id} failed: {e}");
+                    continue;
+                }
+            }
+            let mut map = self.candidates.write().unwrap();
+            if let Some(ids) = map.get_mut(qname) {
+                if !ids.contains(&id) {
+                    ids.push(id);
+                    let rec = Json::Arr(ids.iter().map(|&i| Json::Num(i as f64)).collect());
+                    let _ = self.kv.put("candidate_resource", qname, rec);
+                    restored += 1;
+                }
+            }
+        }
+        self.invalidate_schedule_cache();
+        log::info!(
+            "resource {id} re-admitted after quarantine ({restored} candidate membership(s) \
+             restored)"
+        );
+        self.emit_events(&[EngineEvent::ResourceRecovered { resource: id }]);
     }
 
     /// Start the background monitor collector: a thread that refreshes the

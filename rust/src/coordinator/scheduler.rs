@@ -241,6 +241,16 @@ impl EdgeFaaS {
         resources
             .values()
             .filter(|r| {
+                // Liveness: a resource whose lease the failure detector has
+                // marked Dead (or Recovering through quarantine) never
+                // receives new placements. Suspect stays schedulable — one
+                // missed scrape must not trigger migrations. No lease
+                // (snapshot plane not yet swept) means schedulable.
+                if let Some(lease) = snap.lease_of(r.id) {
+                    if !lease.state.schedulable() {
+                        return false;
+                    }
+                }
                 // Privacy: "the function can only be created on the IoT
                 // devices where the input data is generated".
                 if request.function.requirements.privacy {

@@ -1,0 +1,357 @@
+//! The failure detector behind the liveness plane — per-resource lease
+//! state driven by the monitor collector's scrape sweeps.
+//!
+//! Production edge fleets flap: the paper's own IoT tier (Raspberry Pis on
+//! home networks) is the least reliable hardware in the system. The
+//! snapshot collector already touches every resource once per sweep, so
+//! each sweep doubles as a heartbeat: a successful scrape renews the
+//! resource's lease, a failed one counts against it.
+//!
+//! # Lease states
+//!
+//! ```text
+//!            miss                 miss (total >= dead_after)
+//!   Alive ---------> Suspect --------------------------------> Dead
+//!     ^                 |                                       |
+//!     |      scrape ok  |                             scrape ok |
+//!     +-----------------+                                       v
+//!     ^                                                    Recovering
+//!     |        clean sweeps >= quarantine_sweeps                |
+//!     +---------------------------------------------------------+
+//! ```
+//!
+//! * **Alive** — the last sweep scraped successfully. The resource is a
+//!   full scheduling citizen.
+//! * **Suspect** — at least one consecutive sweep missed. Still scheduled,
+//!   but the engine treats invocation failures against a Suspect resource
+//!   as infrastructure failures (eligible for the at-most-once retry path)
+//!   rather than application errors.
+//! * **Dead** — `dead_after` consecutive sweeps missed. The coordinator
+//!   drains the resource's queued instances, removes it from candidate
+//!   mappings, and relocates its functions; the scheduler's phase-1 filter
+//!   excludes it.
+//! * **Recovering** — a Dead resource answered a scrape again. It stays
+//!   quarantined (excluded from scheduling) until `quarantine_sweeps`
+//!   consecutive clean sweeps pass, then it is re-admitted and its
+//!   candidate memberships restored. A miss during quarantine sends it
+//!   straight back to Dead (no second drain — it was never re-admitted).
+//!
+//! The state machine itself ([`step`]) is a pure function of (config,
+//! previous lease, sweep outcome, now) so chaos tests can drive it
+//! deterministically under `VirtualClock`; the side effects (drain,
+//! candidate exclusion, relocation, re-admission) live in the coordinator
+//! (`EdgeFaaS::refresh_monitor_snapshot`), keyed off the [`Transition`]s
+//! this module reports.
+
+/// Configuration of the failure detector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LivenessConfig {
+    /// Consecutive missed sweeps before a resource is marked Dead.
+    /// (1 missed sweep already makes it Suspect.)
+    pub dead_after: u32,
+    /// Consecutive clean sweeps a recovering resource must answer before
+    /// it is re-admitted to scheduling.
+    pub quarantine_sweeps: u32,
+}
+
+impl Default for LivenessConfig {
+    fn default() -> Self {
+        LivenessConfig { dead_after: 3, quarantine_sweeps: 2 }
+    }
+}
+
+/// One resource's lease state (see the module docs for the lifecycle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeaseState {
+    Alive,
+    Suspect,
+    Dead,
+    Recovering,
+}
+
+impl LeaseState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LeaseState::Alive => "alive",
+            LeaseState::Suspect => "suspect",
+            LeaseState::Dead => "dead",
+            LeaseState::Recovering => "recovering",
+        }
+    }
+
+    /// Whether the scheduler may place onto / dispatch to this resource.
+    /// Suspect resources remain schedulable (one missed scrape is routine);
+    /// Dead and quarantined (Recovering) ones do not.
+    pub fn schedulable(&self) -> bool {
+        matches!(self, LeaseState::Alive | LeaseState::Suspect)
+    }
+}
+
+/// One resource's lease: state plus the counters that drive transitions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceLease {
+    pub state: LeaseState,
+    /// Consecutive missed sweeps (0 when Alive/Recovering).
+    pub misses: u32,
+    /// Consecutive clean sweeps while Recovering (0 otherwise).
+    pub clean_sweeps: u32,
+    /// Clock time the current state was entered.
+    pub since: f64,
+    /// Clock time of the last successful scrape (`None` if never).
+    pub last_seen: Option<f64>,
+}
+
+impl ResourceLease {
+    /// A fresh lease for a resource first seen alive at `now`.
+    pub fn alive(now: f64) -> ResourceLease {
+        ResourceLease {
+            state: LeaseState::Alive,
+            misses: 0,
+            clean_sweeps: 0,
+            since: now,
+            last_seen: Some(now),
+        }
+    }
+}
+
+/// A state transition with coordinator-visible side effects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transition {
+    /// The resource crossed into Dead this sweep: drain it, exclude it
+    /// from candidates, relocate its functions.
+    Died,
+    /// The resource completed quarantine and is Alive again: restore its
+    /// candidate memberships.
+    Readmitted,
+}
+
+/// Advance one resource's lease by one sweep. `ok` is whether this sweep's
+/// scrape succeeded; `prev` is the lease from the previous snapshot (`None`
+/// for a resource never swept before). Returns the new lease and the
+/// transition the coordinator must act on, if any.
+pub fn step(
+    cfg: &LivenessConfig,
+    prev: Option<&ResourceLease>,
+    ok: bool,
+    now: f64,
+) -> (ResourceLease, Option<Transition>) {
+    let dead_after = cfg.dead_after.max(1);
+    let quarantine = cfg.quarantine_sweeps.max(1);
+    let Some(prev) = prev else {
+        // First sweep ever for this resource.
+        return if ok {
+            (ResourceLease::alive(now), None)
+        } else if dead_after <= 1 {
+            (
+                ResourceLease {
+                    state: LeaseState::Dead,
+                    misses: 1,
+                    clean_sweeps: 0,
+                    since: now,
+                    last_seen: None,
+                },
+                Some(Transition::Died),
+            )
+        } else {
+            (
+                ResourceLease {
+                    state: LeaseState::Suspect,
+                    misses: 1,
+                    clean_sweeps: 0,
+                    since: now,
+                    last_seen: None,
+                },
+                None,
+            )
+        };
+    };
+    match (prev.state, ok) {
+        (LeaseState::Alive, true) => {
+            let mut l = prev.clone();
+            l.last_seen = Some(now);
+            (l, None)
+        }
+        (LeaseState::Alive | LeaseState::Suspect, false) => {
+            let misses = prev.misses + 1;
+            if misses >= dead_after {
+                (
+                    ResourceLease {
+                        state: LeaseState::Dead,
+                        misses,
+                        clean_sweeps: 0,
+                        since: now,
+                        last_seen: prev.last_seen,
+                    },
+                    Some(Transition::Died),
+                )
+            } else {
+                (
+                    ResourceLease {
+                        state: LeaseState::Suspect,
+                        misses,
+                        clean_sweeps: 0,
+                        since: if prev.state == LeaseState::Suspect { prev.since } else { now },
+                        last_seen: prev.last_seen,
+                    },
+                    None,
+                )
+            }
+        }
+        (LeaseState::Suspect, true) => {
+            // A Suspect resource was never drained, so a clean sweep
+            // restores it directly — no quarantine.
+            (ResourceLease::alive(now), None)
+        }
+        (LeaseState::Dead, false) => {
+            let mut l = prev.clone();
+            l.misses = prev.misses.saturating_add(1);
+            (l, None)
+        }
+        (LeaseState::Dead, true) => {
+            if quarantine <= 1 {
+                (ResourceLease::alive(now), Some(Transition::Readmitted))
+            } else {
+                (
+                    ResourceLease {
+                        state: LeaseState::Recovering,
+                        misses: 0,
+                        clean_sweeps: 1,
+                        since: now,
+                        last_seen: Some(now),
+                    },
+                    None,
+                )
+            }
+        }
+        (LeaseState::Recovering, true) => {
+            let clean = prev.clean_sweeps + 1;
+            if clean >= quarantine {
+                (ResourceLease::alive(now), Some(Transition::Readmitted))
+            } else {
+                let mut l = prev.clone();
+                l.clean_sweeps = clean;
+                l.last_seen = Some(now);
+                (l, None)
+            }
+        }
+        (LeaseState::Recovering, false) => {
+            // Flapped during quarantine: straight back to Dead. It was
+            // never re-admitted, so there is nothing to drain again.
+            (
+                ResourceLease {
+                    state: LeaseState::Dead,
+                    misses: 1,
+                    clean_sweeps: 0,
+                    since: now,
+                    last_seen: prev.last_seen,
+                },
+                None,
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(dead_after: u32, quarantine: u32) -> LivenessConfig {
+        LivenessConfig { dead_after, quarantine_sweeps: quarantine }
+    }
+
+    /// Drive a sweep sequence from scratch; returns (final lease, transitions).
+    fn drive(c: &LivenessConfig, sweeps: &[bool]) -> (ResourceLease, Vec<Transition>) {
+        let mut lease: Option<ResourceLease> = None;
+        let mut transitions = Vec::new();
+        for (i, &ok) in sweeps.iter().enumerate() {
+            let (next, t) = step(c, lease.as_ref(), ok, i as f64);
+            transitions.extend(t);
+            lease = Some(next);
+        }
+        (lease.unwrap(), transitions)
+    }
+
+    #[test]
+    fn alive_suspect_dead_progression() {
+        let c = cfg(3, 2);
+        let (l, t) = drive(&c, &[true]);
+        assert_eq!(l.state, LeaseState::Alive);
+        assert!(t.is_empty());
+        let (l, t) = drive(&c, &[true, false]);
+        assert_eq!((l.state, l.misses), (LeaseState::Suspect, 1));
+        assert!(t.is_empty());
+        let (l, t) = drive(&c, &[true, false, false]);
+        assert_eq!((l.state, l.misses), (LeaseState::Suspect, 2));
+        assert!(t.is_empty());
+        let (l, t) = drive(&c, &[true, false, false, false]);
+        assert_eq!((l.state, l.misses), (LeaseState::Dead, 3));
+        assert_eq!(t, vec![Transition::Died]);
+        assert!(!l.state.schedulable());
+    }
+
+    #[test]
+    fn suspect_recovers_without_quarantine() {
+        let c = cfg(3, 2);
+        let (l, t) = drive(&c, &[true, false, false, true]);
+        assert_eq!(l.state, LeaseState::Alive);
+        assert_eq!(l.misses, 0);
+        assert!(t.is_empty(), "Suspect -> Alive is not a re-admission");
+        assert!(l.state.schedulable());
+    }
+
+    #[test]
+    fn dead_requires_full_quarantine_to_readmit() {
+        let c = cfg(2, 3);
+        let (l, t) = drive(&c, &[false, false]);
+        assert_eq!(l.state, LeaseState::Dead);
+        assert_eq!(t, vec![Transition::Died]);
+        // One clean sweep: quarantined, still not schedulable.
+        let (l, t) = drive(&c, &[false, false, true]);
+        assert_eq!((l.state, l.clean_sweeps), (LeaseState::Recovering, 1));
+        assert_eq!(t, vec![Transition::Died]);
+        assert!(!l.state.schedulable());
+        // Three clean sweeps: re-admitted.
+        let (l, t) = drive(&c, &[false, false, true, true, true]);
+        assert_eq!(l.state, LeaseState::Alive);
+        assert_eq!(t, vec![Transition::Died, Transition::Readmitted]);
+    }
+
+    #[test]
+    fn flap_during_quarantine_goes_back_to_dead_without_second_drain() {
+        let c = cfg(2, 2);
+        let (l, t) = drive(&c, &[false, false, true, false]);
+        assert_eq!(l.state, LeaseState::Dead);
+        assert_eq!(t, vec![Transition::Died], "no second Died for a quarantine flap");
+        // A full kill -> recover -> kill cycle does fire Died twice.
+        let (l, t) = drive(&c, &[false, false, true, true, false, false]);
+        assert_eq!(l.state, LeaseState::Dead);
+        assert_eq!(
+            t,
+            vec![Transition::Died, Transition::Readmitted, Transition::Died],
+            "a re-admitted resource that dies again is drained again"
+        );
+        assert_eq!(l.misses, 2);
+    }
+
+    #[test]
+    fn dead_after_one_marks_dead_immediately() {
+        let c = cfg(1, 1);
+        let (l, t) = drive(&c, &[false]);
+        assert_eq!(l.state, LeaseState::Dead);
+        assert_eq!(t, vec![Transition::Died]);
+        let (l, t) = drive(&c, &[false, true]);
+        assert_eq!(l.state, LeaseState::Alive, "quarantine of 1 re-admits on first clean sweep");
+        assert_eq!(t, vec![Transition::Died, Transition::Readmitted]);
+    }
+
+    #[test]
+    fn timestamps_track_state_entry_and_last_success() {
+        let c = cfg(3, 2);
+        let (l, _) = drive(&c, &[true, true, false, false]);
+        assert_eq!(l.since, 2.0, "Suspect entered at the first miss");
+        assert_eq!(l.last_seen, Some(1.0));
+        let (l, _) = drive(&c, &[true, false, false, false]);
+        assert_eq!(l.since, 3.0, "Dead entered at the fatal miss");
+        assert_eq!(l.last_seen, Some(0.0));
+    }
+}

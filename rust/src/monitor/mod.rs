@@ -13,10 +13,19 @@
 //! pure in-memory reads instead of O(resources) synchronous scrapes — see
 //! the [`snapshot`] module docs for epoching, staleness, and the
 //! collector lifecycle.
+//!
+//! [`liveness`] turns the collector into a **failure detector**: each sweep
+//! advances a per-resource lease (`Alive` → `Suspect` → `Dead` →
+//! `Recovering`), published alongside the usage samples in every snapshot.
+//! The coordinator acts on the transitions (drain, candidate exclusion,
+//! relocation, quarantined re-admission) — see the [`liveness`] module docs
+//! for the state machine.
 
+pub mod liveness;
 pub mod metrics;
 pub mod scrape;
 pub mod snapshot;
 
+pub use liveness::{LeaseState, LivenessConfig, ResourceLease};
 pub use metrics::{MetricsRegistry, ResourceUsage};
 pub use snapshot::{LatencyMatrix, MonitorSnapshot, SnapshotPlane, UsageSample};

@@ -65,16 +65,57 @@ pub fn parse_exposition(text: &str) -> BTreeMap<String, f64> {
     out
 }
 
+/// Why a scrape failed — the classification the liveness detector's
+/// `last_error` surfaces. `Unreachable` is connection-level death (refused,
+/// reset, timed out: the strongest churn signal); `Bad` is a resource that
+/// answered but wrongly (HTTP error status or a non-UTF-8 body) — still a
+/// missed heartbeat, but pointing at a misbehaving exporter rather than a
+/// dead box.
+#[derive(Debug)]
+pub enum ScrapeFailure {
+    Unreachable { addr: String, cause: String },
+    Bad { addr: String, cause: String },
+}
+
+impl std::fmt::Display for ScrapeFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScrapeFailure::Unreachable { addr, cause } => {
+                write!(f, "scrape {addr} unreachable: {cause}")
+            }
+            ScrapeFailure::Bad { addr, cause } => {
+                write!(f, "scrape {addr} bad response: {cause}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScrapeFailure {}
+
 /// Scrape a resource's `/metrics` endpoint and decode the standard usage
 /// vector. Rides the shared pooled HTTP client, so periodic scrapes of the
 /// same endpoint (the snapshot collector's steady-state) reuse one
 /// keep-alive connection instead of a fresh TCP handshake per tick.
+///
+/// Failures are typed [`ScrapeFailure`]s (downcastable from the returned
+/// `anyhow::Error`), so the liveness plane's `last_error` distinguishes a
+/// dead box from a confused exporter.
 pub fn scrape(addr: &str) -> anyhow::Result<ResourceUsage> {
-    let resp = get(addr, "/metrics")?;
+    let resp = get(addr, "/metrics").map_err(|e| ScrapeFailure::Unreachable {
+        addr: addr.to_string(),
+        cause: e.to_string(),
+    })?;
     if !resp.ok() {
-        anyhow::bail!("scrape {addr}: {}", resp.status);
+        anyhow::bail!(ScrapeFailure::Bad {
+            addr: addr.to_string(),
+            cause: format!("status {}", resp.status),
+        });
     }
-    let series = parse_exposition(resp.body_str()?);
+    let body = resp.body_str().map_err(|e| ScrapeFailure::Bad {
+        addr: addr.to_string(),
+        cause: e.to_string(),
+    })?;
+    let series = parse_exposition(body);
     let g = |name: &str| series.get(&format!("edgefaas_{name}")).copied().unwrap_or(0.0);
     Ok(ResourceUsage {
         cpu_frac: g("node_cpu_usage"),
@@ -120,7 +161,28 @@ mod tests {
 
     #[test]
     fn missing_endpoint_is_error() {
-        assert!(scrape("127.0.0.1:1").is_err());
+        let err = scrape("127.0.0.1:1").unwrap_err();
+        assert!(
+            matches!(err.downcast_ref(), Some(ScrapeFailure::Unreachable { .. })),
+            "connection-level death is typed Unreachable: {err}"
+        );
+    }
+
+    #[test]
+    fn http_error_status_is_typed_bad_not_unreachable() {
+        // A server that answers — just not with metrics. /metrics 404s.
+        struct NoMetrics;
+        impl Handler for NoMetrics {
+            fn handle(&self, _req: Request) -> Response {
+                Response::not_found()
+            }
+        }
+        let server = Server::bind(0, 1, Arc::new(NoMetrics) as Arc<dyn Handler>).unwrap();
+        let err = scrape(&server.addr()).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref(), Some(ScrapeFailure::Bad { .. })),
+            "an answering-but-wrong exporter is Bad, not Unreachable: {err}"
+        );
     }
 
     #[test]

@@ -46,6 +46,7 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use crate::simnet::Topology;
 
+use super::liveness::ResourceLease;
 use super::metrics::ResourceUsage;
 
 /// Default staleness bound, seconds: snapshot samples older than this are
@@ -54,10 +55,31 @@ pub const DEFAULT_SNAPSHOT_MAX_AGE_S: f64 = 5.0;
 
 /// One resource's scraped usage vector plus when it was collected
 /// (coordinator clock seconds).
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// When a sweep fails to scrape a resource, the collector carries the
+/// previous usage vector forward but bumps `consecutive_failures` and
+/// records `last_error` — `collected_at` stays at the last *successful*
+/// scrape, so the [`MonitorSnapshot::fresh_usage_of`] staleness bound
+/// naturally ages a failing resource out of the fast path while the
+/// failure counters make the staleness visible (`GET /monitor/snapshot`)
+/// instead of silently serving the last-good sample forever.
+#[derive(Debug, Clone, PartialEq)]
 pub struct UsageSample {
     pub usage: ResourceUsage,
+    /// Clock time of the last successful scrape.
     pub collected_at: f64,
+    /// Consecutive sweeps whose scrape of this resource failed (0 when the
+    /// latest sweep succeeded).
+    pub consecutive_failures: u32,
+    /// The most recent scrape error, if the latest sweep failed.
+    pub last_error: Option<String>,
+}
+
+impl UsageSample {
+    /// A sample from a successful scrape at `now`.
+    pub fn fresh(usage: ResourceUsage, now: f64) -> UsageSample {
+        UsageSample { usage, collected_at: now, consecutive_failures: 0, last_error: None }
+    }
 }
 
 /// Dense all-pairs one-way latency matrix over the topology's nodes.
@@ -120,13 +142,22 @@ pub struct MonitorSnapshot {
     /// Coordinator clock time the snapshot was published.
     pub taken_at: f64,
     usage: BTreeMap<u32, UsageSample>,
+    /// Per-resource failure-detector leases (see [`super::liveness`]).
+    /// Empty until a collector sweep runs.
+    leases: BTreeMap<u32, ResourceLease>,
     latency: Arc<LatencyMatrix>,
 }
 
 impl MonitorSnapshot {
     /// The initial (epoch-0) snapshot: no usage samples, the given matrix.
     pub fn initial(latency: Arc<LatencyMatrix>) -> MonitorSnapshot {
-        MonitorSnapshot { epoch: 0, taken_at: 0.0, usage: BTreeMap::new(), latency }
+        MonitorSnapshot {
+            epoch: 0,
+            taken_at: 0.0,
+            usage: BTreeMap::new(),
+            leases: BTreeMap::new(),
+            latency,
+        }
     }
 
     /// The sample for one resource, if any was ever collected.
@@ -147,6 +178,18 @@ impl MonitorSnapshot {
     /// All samples, ascending resource id.
     pub fn samples(&self) -> impl Iterator<Item = (u32, &UsageSample)> {
         self.usage.iter().map(|(k, v)| (*k, v))
+    }
+
+    /// The failure-detector lease for one resource, if a sweep ever ran.
+    /// A missing lease means the detector has no opinion — consumers treat
+    /// it as schedulable (the pre-liveness behaviour).
+    pub fn lease_of(&self, resource: u32) -> Option<&ResourceLease> {
+        self.leases.get(&resource)
+    }
+
+    /// All leases, ascending resource id.
+    pub fn leases(&self) -> impl Iterator<Item = (u32, &ResourceLease)> {
+        self.leases.iter().map(|(k, v)| (*k, v))
     }
 
     /// Number of resources with a sample.
@@ -219,12 +262,13 @@ impl SnapshotPlane {
     pub fn publish(
         &self,
         usage: BTreeMap<u32, UsageSample>,
+        leases: BTreeMap<u32, ResourceLease>,
         latency: Arc<LatencyMatrix>,
         now: f64,
     ) -> u64 {
         let mut cur = self.current.write().unwrap();
         let epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
-        *cur = Arc::new(MonitorSnapshot { epoch, taken_at: now, usage, latency });
+        *cur = Arc::new(MonitorSnapshot { epoch, taken_at: now, usage, leases, latency });
         epoch
     }
 
@@ -300,19 +344,21 @@ mod tests {
         assert!(plane.snapshot().is_empty());
         let old = plane.snapshot();
         let mut usage = BTreeMap::new();
-        usage.insert(
-            7u32,
-            UsageSample { usage: ResourceUsage::default(), collected_at: 1.5 },
-        );
-        let e = plane.publish(usage, m, 1.5);
+        usage.insert(7u32, UsageSample::fresh(ResourceUsage::default(), 1.5));
+        let mut leases = BTreeMap::new();
+        leases.insert(7u32, ResourceLease::alive(1.5));
+        let e = plane.publish(usage, leases, m, 1.5);
         assert_eq!(e, 1);
         assert_eq!(plane.epoch(), 1);
         // The old Arc is still a valid (immutable) epoch-0 view.
         assert_eq!(old.epoch, 0);
         assert!(old.is_empty());
+        assert!(old.lease_of(7).is_none());
         let new = plane.snapshot();
         assert_eq!(new.epoch, 1);
         assert!(new.usage_of(7).is_some());
+        assert_eq!(new.usage_of(7).unwrap().consecutive_failures, 0);
+        assert!(new.lease_of(7).is_some());
     }
 
     #[test]
@@ -320,11 +366,8 @@ mod tests {
         let m = Arc::new(LatencyMatrix::empty());
         let plane = SnapshotPlane::new(Arc::clone(&m));
         let mut usage = BTreeMap::new();
-        usage.insert(
-            1u32,
-            UsageSample { usage: ResourceUsage::default(), collected_at: 10.0 },
-        );
-        plane.publish(usage, m, 10.0);
+        usage.insert(1u32, UsageSample::fresh(ResourceUsage::default(), 10.0));
+        plane.publish(usage, BTreeMap::new(), m, 10.0);
         let snap = plane.snapshot();
         assert!(snap.fresh_usage_of(1, 12.0, 5.0).is_some(), "2s old, bound 5s");
         assert!(snap.fresh_usage_of(1, 16.0, 5.0).is_none(), "6s old, bound 5s");

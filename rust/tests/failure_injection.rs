@@ -3,17 +3,31 @@
 //! capacity exhaustion mid-workflow. The paper specifies several of these
 //! behaviours explicitly (§3.2.1: failed resource IDs are returned and
 //! removed from the candidate mapping).
+//!
+//! The second half is the liveness-plane chaos suite: 16-resource beds on
+//! virtual time where nodes are killed, flapped, or half-killed mid-run,
+//! asserting detection (`Alive -> Suspect -> Dead`), queued-work drain,
+//! at-most-once retry via attempt-id dedup, quarantine re-admission, and
+//! that no `wait_workflow` caller ever hangs.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
+use edgefaas::backup::DurableKv;
+use edgefaas::cluster::faas::{Executor, FaasBackend, NativeExecutor};
+use edgefaas::cluster::spec::ResourceSpec;
+use edgefaas::coordinator::engine::{EngineEvent, ResourceBusy, RunId, WaitError};
 use edgefaas::coordinator::functions::FunctionPackage;
-use edgefaas::coordinator::handle::ResourceHandle;
-use edgefaas::util::bytes::Bytes;
+use edgefaas::coordinator::handle::{LocalHandle, ResourceHandle};
+use edgefaas::coordinator::resource::{EdgeFaaS, ResourceId};
 use edgefaas::monitor::metrics::ResourceUsage;
-use edgefaas::simnet::RealClock;
+use edgefaas::monitor::LeaseState;
+use edgefaas::objstore::ObjectStore;
+use edgefaas::simnet::topology::mbps;
+use edgefaas::simnet::{Clock, RealClock, Tier, Topology, VirtualClock};
 use edgefaas::testbed::paper_testbed;
+use edgefaas::util::bytes::Bytes;
 use edgefaas::util::json::Json;
 
 /// A handle wrapper that can be told to fail specific verbs.
@@ -248,4 +262,489 @@ fn store_full_surfaces_through_virtual_storage() {
     small.make_bucket("data").unwrap();
     let err = small.put_object("data", "big", huge.into()).unwrap_err();
     assert!(matches!(err, edgefaas::objstore::store::StoreError::Full { .. }));
+}
+
+// ==================== liveness-plane chaos suite =========================
+
+/// A handle wrapper for chaos runs. `kill` makes every coordinator-facing
+/// verb fail the way a crashed node would (connection refused); `revive`
+/// brings it back. `lose_next_reply` executes the next batch for real but
+/// drops its reply — the half-dead case the attempt-id dedup exists for —
+/// and `fail_usage` fails only the monitoring scrape (the engine's
+/// infrastructure-death probe) while invocations still go through.
+struct KillableHandle {
+    inner: Arc<dyn ResourceHandle>,
+    dead: AtomicBool,
+    fail_usage: AtomicBool,
+    lose_next_reply: AtomicBool,
+}
+
+impl KillableHandle {
+    fn wrap(inner: Arc<dyn ResourceHandle>) -> Arc<KillableHandle> {
+        Arc::new(KillableHandle {
+            inner,
+            dead: AtomicBool::new(false),
+            fail_usage: AtomicBool::new(false),
+            lose_next_reply: AtomicBool::new(false),
+        })
+    }
+
+    fn kill(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+    }
+
+    fn revive(&self) {
+        self.dead.store(false, Ordering::SeqCst);
+        self.fail_usage.store(false, Ordering::SeqCst);
+    }
+
+    fn check(&self) -> anyhow::Result<()> {
+        if self.dead.load(Ordering::SeqCst) {
+            anyhow::bail!("connection refused (node down)");
+        }
+        Ok(())
+    }
+}
+
+impl ResourceHandle for KillableHandle {
+    fn deploy(
+        &self,
+        name: &str,
+        image: &str,
+        memory: u64,
+        gpus: u32,
+        labels: &[(String, String)],
+    ) -> anyhow::Result<()> {
+        self.check()?;
+        self.inner.deploy(name, image, memory, gpus, labels)
+    }
+
+    fn remove(&self, name: &str) -> anyhow::Result<()> {
+        self.check()?;
+        self.inner.remove(name)
+    }
+
+    fn invoke(&self, name: &str, payload: &Bytes) -> anyhow::Result<(Bytes, f64)> {
+        self.check()?;
+        self.inner.invoke(name, payload)
+    }
+
+    fn invoke_batch(
+        &self,
+        calls: &[edgefaas::cluster::faas::BatchCall],
+    ) -> Vec<anyhow::Result<(Bytes, f64)>> {
+        if self.dead.load(Ordering::SeqCst) {
+            return calls
+                .iter()
+                .map(|_| Err(anyhow::anyhow!("connection refused (node down)")))
+                .collect();
+        }
+        if self.lose_next_reply.swap(false, Ordering::SeqCst) {
+            // The node executes the batch (its backend records the attempt
+            // ids) but the reply never reaches the coordinator.
+            let _ = self.inner.invoke_batch(calls);
+            return calls.iter().map(|_| Err(anyhow::anyhow!("reply lost"))).collect();
+        }
+        self.inner.invoke_batch(calls)
+    }
+
+    fn list(&self) -> anyhow::Result<Vec<String>> {
+        self.check()?;
+        self.inner.list()
+    }
+
+    fn describe(&self, name: &str) -> anyhow::Result<Json> {
+        self.inner.describe(name)
+    }
+
+    fn usage(&self) -> anyhow::Result<ResourceUsage> {
+        self.check()?;
+        if self.fail_usage.load(Ordering::SeqCst) {
+            anyhow::bail!("scrape timed out");
+        }
+        self.inner.usage()
+    }
+
+    fn make_bucket(&self, b: &str) -> anyhow::Result<()> {
+        self.inner.make_bucket(b)
+    }
+    fn remove_bucket(&self, b: &str) -> anyhow::Result<()> {
+        self.inner.remove_bucket(b)
+    }
+    fn put_object(&self, b: &str, o: &str, d: Bytes) -> anyhow::Result<()> {
+        self.inner.put_object(b, o, d)
+    }
+    fn get_object(&self, b: &str, o: &str) -> anyhow::Result<Bytes> {
+        self.inner.get_object(b, o)
+    }
+    fn remove_object(&self, b: &str, o: &str) -> anyhow::Result<()> {
+        self.inner.remove_object(b, o)
+    }
+    fn list_objects(&self, b: &str) -> anyhow::Result<Vec<String>> {
+        self.inner.list_objects(b)
+    }
+    fn stored_bytes(&self) -> anyhow::Result<u64> {
+        self.inner.stored_bytes()
+    }
+}
+
+/// A gate handler instances can be parked on: `entered` counts arrivals,
+/// `release` lets them all through. Real OS blocking, so it composes with
+/// `VirtualClock` (a parked handler is not a virtual sleeper).
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+    entered: AtomicUsize,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { open: Mutex::new(false), cv: Condvar::new(), entered: AtomicUsize::new(0) })
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn enter_and_wait(&self) {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+struct ChaosBed {
+    faas: Arc<EdgeFaaS>,
+    executor: Arc<NativeExecutor>,
+    /// One killable handle per resource, same order as `resources`.
+    handles: Vec<Arc<KillableHandle>>,
+    resources: Vec<ResourceId>,
+}
+
+/// `n` IoT resources hanging off one edge hub, every handle killable, the
+/// whole bed on virtual time — chaos runs are deterministic and sweep
+/// counts, not wall clocks, drive detection.
+fn chaos_bed(n: usize) -> ChaosBed {
+    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    let mut topo = Topology::new();
+    let hub = topo.add_node("hub", Tier::Edge);
+    let nodes: Vec<usize> = (0..n)
+        .map(|i| {
+            let node = topo.add_node(format!("chaos-{i}"), Tier::Iot);
+            topo.add_link(node, hub, 0.001, mbps(100.0));
+            node
+        })
+        .collect();
+    let executor = Arc::new(NativeExecutor::new());
+    let faas =
+        Arc::new(EdgeFaaS::with_parts(topo, DurableKv::ephemeral(), Arc::clone(&clock)));
+    let mut handles = Vec::new();
+    let mut resources = Vec::new();
+    for (i, &node) in nodes.iter().enumerate() {
+        let spec = ResourceSpec::paper_iot(&format!("chaos{i}:8080"));
+        let backend = Arc::new(FaasBackend::new(
+            spec.clone(),
+            Arc::clone(&executor) as Arc<dyn Executor>,
+            Arc::clone(&clock),
+        ));
+        let store = Arc::new(ObjectStore::new(
+            spec.storage * spec.nodes as u64,
+            &spec.minio_access_key,
+            &spec.minio_secret_key,
+        ));
+        let inner = Arc::new(LocalHandle::new(backend, store)) as Arc<dyn ResourceHandle>;
+        let killable = KillableHandle::wrap(inner);
+        let id = faas
+            .register(spec, Arc::clone(&killable) as Arc<dyn ResourceHandle>, node)
+            .unwrap();
+        handles.push(killable);
+        resources.push(id);
+    }
+    ChaosBed { faas, executor, handles, resources }
+}
+
+/// Configure + deploy a single-function app fanning one instance onto each
+/// anchor resource. Returns the handler-execution counter. Instances on
+/// `gate_on.0` park on the gate until released.
+fn fanout_app(
+    bed: &ChaosBed,
+    app: &str,
+    anchors: &[ResourceId],
+    gate_on: Option<(ResourceId, Arc<Gate>)>,
+) -> Arc<AtomicUsize> {
+    let executions = Arc::new(AtomicUsize::new(0));
+    let img = format!("img/{app}");
+    {
+        let executions = Arc::clone(&executions);
+        bed.executor.register(&img, move |payload: &[u8]| {
+            executions.fetch_add(1, Ordering::SeqCst);
+            if let Some((gated, gate)) = &gate_on {
+                let v = edgefaas::util::json::parse(std::str::from_utf8(payload)?)?;
+                let rid = v.get("resource").and_then(Json::as_u64).unwrap_or(u64::MAX);
+                if rid == *gated as u64 {
+                    gate.enter_and_wait();
+                }
+            }
+            Ok(br#"{"outputs":[]}"#.to_vec())
+        });
+    }
+    let yaml = format!(
+        "\
+application: {app}
+entrypoint: f
+dag:
+  - name: f
+    affinity:
+      nodetype: iot
+      affinitytype: data
+    reduce: auto
+"
+    );
+    let mut data = HashMap::new();
+    data.insert("f".to_string(), anchors.to_vec());
+    bed.faas.configure_application(&yaml, &data).unwrap();
+    bed.faas.deploy_function(app, "f", &FunctionPackage { code: img }).unwrap();
+    executions
+}
+
+fn lease_state(bed: &ChaosBed, id: ResourceId) -> LeaseState {
+    bed.faas.monitor_snapshot().lease_of(id).expect("lease exists after a sweep").state
+}
+
+#[test]
+fn killed_resource_is_detected_drained_and_runs_complete() {
+    let bed = chaos_bed(16);
+    let victim = bed.resources[3];
+    let gate = Gate::new();
+    fanout_app(&bed, "chaos", &bed.resources, Some((victim, Arc::clone(&gate))));
+    // One admission slot per resource: the victim's first instance blocks
+    // in the gate, later runs' victim instances queue behind it.
+    bed.faas.set_engine_limits(32, 1);
+    let dead_events = Arc::new(Mutex::new(Vec::new()));
+    {
+        let dead_events = Arc::clone(&dead_events);
+        bed.faas.on_engine_event(move |_, ev| {
+            if let EngineEvent::ResourceDead { resource, queued_moved, queued_failed } = ev {
+                dead_events.lock().unwrap().push((*resource, *queued_moved, *queued_failed));
+            }
+        });
+    }
+    assert_eq!(bed.faas.refresh_monitor_snapshot(), 1);
+    assert_eq!(lease_state(&bed, victim), LeaseState::Alive);
+    let runs: Vec<RunId> = (0..3)
+        .map(|_| bed.faas.submit_workflow("chaos", &HashMap::new()).unwrap())
+        .collect();
+    // Kill only once the victim's first instance is actually executing,
+    // and give the workers a moment to park the later ones at admission.
+    while gate.entered.load(Ordering::SeqCst) == 0 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    bed.handles[3].kill();
+    // Time-to-detect is sweep-counted: 1 miss = Suspect (still
+    // schedulable), dead_after = 3 misses = Dead.
+    bed.faas.refresh_monitor_snapshot();
+    assert_eq!(lease_state(&bed, victim), LeaseState::Suspect);
+    assert!(lease_state(&bed, victim).schedulable());
+    assert!(dead_events.lock().unwrap().is_empty(), "Suspect must not drain");
+    bed.faas.refresh_monitor_snapshot();
+    bed.faas.refresh_monitor_snapshot();
+    assert_eq!(lease_state(&bed, victim), LeaseState::Dead);
+    let drained = dead_events.lock().unwrap().clone();
+    assert_eq!(drained.len(), 1, "exactly one Died transition");
+    let (dead_id, moved, failed) = drained[0];
+    assert_eq!(dead_id, victim);
+    assert_eq!(failed, 0, "15 survivors: no queued instance lacks a home");
+    assert!(
+        (1..=2).contains(&moved),
+        "both later runs' victim instances were queued; got moved={moved}"
+    );
+    let cands = bed.faas.candidates_of("chaos", "f").unwrap();
+    assert_eq!(cands.len(), 15, "dead resource stripped from candidates");
+    assert!(!cands.contains(&victim));
+    // Release the in-flight instance: every run must now complete — the
+    // drained instances on survivors, the gated one on the (half-)dead
+    // node it already executed on.
+    gate.release();
+    for run in runs {
+        bed.faas.wait_workflow(run, 60.0).unwrap();
+    }
+}
+
+#[test]
+fn flapping_resource_is_quarantined_then_readmitted() {
+    let bed = chaos_bed(16);
+    let victim = bed.resources[0];
+    fanout_app(&bed, "flap", &bed.resources, None);
+    let recovered = Arc::new(Mutex::new(Vec::new()));
+    {
+        let recovered = Arc::clone(&recovered);
+        bed.faas.on_engine_event(move |_, ev| {
+            if let EngineEvent::ResourceRecovered { resource } = ev {
+                recovered.lock().unwrap().push(*resource);
+            }
+        });
+    }
+    bed.faas.refresh_monitor_snapshot();
+    bed.handles[0].kill();
+    for _ in 0..3 {
+        bed.faas.refresh_monitor_snapshot();
+    }
+    assert_eq!(lease_state(&bed, victim), LeaseState::Dead);
+    assert_eq!(bed.faas.candidates_of("flap", "f").unwrap().len(), 15);
+    // Back up — but one clean sweep only starts the quarantine
+    // (quarantine_sweeps defaults to 2): still excluded from scheduling.
+    bed.handles[0].revive();
+    bed.faas.refresh_monitor_snapshot();
+    let lease = bed.faas.monitor_snapshot().lease_of(victim).unwrap().clone();
+    assert_eq!((lease.state, lease.clean_sweeps), (LeaseState::Recovering, 1));
+    assert!(!lease.state.schedulable());
+    assert_eq!(bed.faas.candidates_of("flap", "f").unwrap().len(), 15);
+    assert!(recovered.lock().unwrap().is_empty(), "not re-admitted yet");
+    // Second clean sweep: re-admitted, memberships restored, servable.
+    bed.faas.refresh_monitor_snapshot();
+    assert_eq!(lease_state(&bed, victim), LeaseState::Alive);
+    assert_eq!(*recovered.lock().unwrap(), vec![victim]);
+    let cands = bed.faas.candidates_of("flap", "f").unwrap();
+    assert_eq!(cands.len(), 16, "membership restored after quarantine");
+    assert!(cands.contains(&victim));
+    let run = bed.faas.submit_workflow("flap", &HashMap::new()).unwrap();
+    let result = bed.faas.wait_workflow(run, 60.0).unwrap();
+    assert_eq!(result.functions["f"].len(), 16, "restored resource serves again");
+}
+
+#[test]
+fn single_missed_sweep_is_suspect_not_dead() {
+    let bed = chaos_bed(16);
+    let victim = bed.resources[8];
+    fanout_app(&bed, "slow", &bed.resources, None);
+    bed.faas.refresh_monitor_snapshot();
+    // One slow/missed scrape: Suspect, still schedulable, nothing drained
+    // or stripped.
+    bed.handles[8].fail_usage.store(true, Ordering::SeqCst);
+    bed.faas.refresh_monitor_snapshot();
+    let lease = bed.faas.monitor_snapshot().lease_of(victim).unwrap().clone();
+    assert_eq!((lease.state, lease.misses), (LeaseState::Suspect, 1));
+    assert!(lease.state.schedulable());
+    assert_eq!(bed.faas.candidates_of("slow", "f").unwrap().len(), 16);
+    // The next sweep answers: straight back to Alive — Suspect was never
+    // drained, so there is no quarantine.
+    bed.handles[8].fail_usage.store(false, Ordering::SeqCst);
+    bed.faas.refresh_monitor_snapshot();
+    assert_eq!(lease_state(&bed, victim), LeaseState::Alive);
+    let run = bed.faas.submit_workflow("slow", &HashMap::new()).unwrap();
+    let result = bed.faas.wait_workflow(run, 60.0).unwrap();
+    assert_eq!(result.functions["f"].len(), 16);
+}
+
+#[test]
+fn no_surviving_candidate_fails_typed_and_never_hangs() {
+    let bed = chaos_bed(16);
+    let victim = bed.resources[5];
+    fanout_app(&bed, "pinned", &[victim], None);
+    // Killed before the detector's first sweep ever saw it: the batch
+    // path's direct probe, not the lease, must classify the death.
+    bed.handles[5].kill();
+    let run = bed.faas.submit_workflow("pinned", &HashMap::new()).unwrap();
+    let err = bed.faas.wait_workflow(run, 60.0).expect_err("no survivor: the run must fail");
+    match err {
+        WaitError::ResourceDead { resource, message, .. } => {
+            assert_eq!(resource, victim);
+            assert!(message.contains("ResourceDead"), "{message}");
+        }
+        other => panic!("expected a typed ResourceDead failure, got {other:?}"),
+    }
+}
+
+#[test]
+fn half_dead_resource_executes_at_most_once() {
+    let bed = chaos_bed(16);
+    let victim = bed.resources[7];
+    let executions = fanout_app(&bed, "halfdead", &[victim], None);
+    bed.faas.refresh_monitor_snapshot();
+    // The node executes the batch but its reply is lost and its scrape
+    // times out — from the coordinator's side indistinguishable from a
+    // crash mid-call. Sole candidate, so the retry lands on the same node,
+    // where the attempt-id cache must replay instead of re-executing.
+    bed.handles[7].lose_next_reply.store(true, Ordering::SeqCst);
+    bed.handles[7].fail_usage.store(true, Ordering::SeqCst);
+    let run = bed.faas.submit_workflow("halfdead", &HashMap::new()).unwrap();
+    let result = bed.faas.wait_workflow(run, 60.0).unwrap();
+    assert_eq!(result.functions["f"].len(), 1);
+    assert_eq!(
+        executions.load(Ordering::SeqCst),
+        1,
+        "the lost-reply retry must replay the recorded result, not run the handler again"
+    );
+}
+
+#[test]
+fn chaos_outcome_is_identical_across_engine_shard_counts() {
+    let mut outcomes = Vec::new();
+    for shards in [1usize, 16] {
+        let bed = chaos_bed(16);
+        bed.faas.set_engine_shards(shards);
+        let victim = bed.resources[9];
+        fanout_app(&bed, "det", &bed.resources, None);
+        bed.faas.refresh_monitor_snapshot();
+        bed.handles[9].kill();
+        for _ in 0..3 {
+            bed.faas.refresh_monitor_snapshot();
+        }
+        let run = bed.faas.submit_workflow("det", &HashMap::new()).unwrap();
+        let result = bed.faas.wait_workflow(run, 60.0).unwrap();
+        let mut placements: Vec<ResourceId> =
+            result.functions["f"].iter().map(|i| i.resource).collect();
+        placements.sort_unstable();
+        outcomes.push((
+            lease_state(&bed, victim),
+            bed.faas.candidates_of("det", "f").unwrap(),
+            placements,
+        ));
+    }
+    assert_eq!(
+        outcomes[0], outcomes[1],
+        "detection, candidate stripping and placements must not depend on shard count"
+    );
+}
+
+#[test]
+fn unregister_of_a_busy_resource_is_refused_with_live_runs() {
+    let bed = chaos_bed(2);
+    let blocker = bed.resources[0];
+    let victim = bed.resources[1];
+    let gate = Gate::new();
+    fanout_app(&bed, "blocker", &[blocker], Some((blocker, Arc::clone(&gate))));
+    fanout_app(&bed, "solo", &[victim], None);
+    // One worker total: it parks inside the blocker's gate, so solo's
+    // instance stays queued on the victim.
+    bed.faas.set_engine_limits(1, 4);
+    let blocker_run = bed.faas.submit_workflow("blocker", &HashMap::new()).unwrap();
+    while gate.entered.load(Ordering::SeqCst) == 0 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let solo_run = bed.faas.submit_workflow("solo", &HashMap::new()).unwrap();
+    // Clear the victim's deployments directly so the *engine* refusal —
+    // not the deployed-functions check — is what unregister hits. This is
+    // the historical hang: the resource looks clean, but a queued instance
+    // still needs it.
+    let reg = bed.faas.resource(victim).unwrap();
+    reg.handle.remove("solo.f").unwrap();
+    let err = bed.faas.unregister(victim).unwrap_err();
+    let busy = err.downcast_ref::<ResourceBusy>().expect("typed ResourceBusy refusal");
+    assert_eq!(busy.resource, victim);
+    assert!(busy.queued >= 1, "{busy}");
+    assert!(busy.runs.contains(&solo_run), "refusal names the live run: {busy}");
+    // Make the function servable again, unblock, and prove nothing hangs.
+    reg.handle.deploy("solo.f", "img/solo", 128 << 20, 0, &[]).unwrap();
+    gate.release();
+    bed.faas.wait_workflow(blocker_run, 60.0).unwrap();
+    bed.faas.wait_workflow(solo_run, 60.0).unwrap();
+    // With its queue drained and functions gone, unregistration goes
+    // through.
+    reg.handle.remove("solo.f").unwrap();
+    bed.faas.unregister(victim).unwrap();
 }

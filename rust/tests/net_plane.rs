@@ -10,7 +10,7 @@
 
 use std::sync::Arc;
 
-use edgefaas::cluster::faas::{Executor, FaasBackend, NativeExecutor};
+use edgefaas::cluster::faas::{BatchCall, Executor, FaasBackend, NativeExecutor};
 use edgefaas::cluster::gateway::{client as faas_client, FaasGateway};
 use edgefaas::cluster::spec::ResourceSpec;
 use edgefaas::objstore::gateway::{client as store_client, StoreGateway};
@@ -57,8 +57,8 @@ fn faas_rest_semantics_ride_one_keepalive_connection() {
 
         // Binary `_batch` leg: raw non-UTF-8 payloads in one round trip.
         let calls = vec![
-            ("echo".to_string(), Bytes::from(vec![0u8, 159, 146, 150])),
-            ("rev".to_string(), Bytes::from(&b"abc"[..])),
+            BatchCall::new("echo", Bytes::from(vec![0u8, 159, 146, 150])),
+            BatchCall::new("rev", Bytes::from(&b"abc"[..])),
         ];
         let results = faas_client::invoke_batch(&addr, &calls).unwrap().unwrap();
         assert_eq!(results[0].as_ref().unwrap().0, vec![0u8, 159, 146, 150], "{label}");
