@@ -1,0 +1,254 @@
+//! Scale harness — seeded workload populations over discrete-event time.
+//!
+//! Drives [`edgefaas::testbed::scale_testbed`] fleets with 1k / 10k / 100k
+//! simulated edge devices through the real engine / scheduler / liveness
+//! planes under the discrete-event [`SimClock`]: a seeded population
+//! (`workloads::population`) turns a `u64` seed into a byte-identical
+//! submission schedule, and the replay paces the virtual clock along it
+//! with a registered pacer actor so arrivals land at their exact virtual
+//! times regardless of host speed.
+//!
+//! Two parts:
+//!
+//! 1. **Determinism gate** (always, including smoke): the same seed is
+//!    replayed twice on fresh beds in [`RunConfig::determinism`] mode
+//!    (deadlines stripped, backpressure raised) — the schedule digest
+//!    *and* the outcome/firing digest must be bit-identical, or the
+//!    bench panics (nonzero exit, fails CI).
+//! 2. **Scale series** (per device count): a measured-mode replay
+//!    ([`RunConfig::measured`] — deadlines live, periodic liveness
+//!    sweeps) reporting sustained submissions/sec, per-QoS-class p50/p99
+//!    virtual end-to-end latency, shed / deadline-miss / saturation
+//!    rates, virtual makespan and wall cost. Non-smoke runs 1k / 10k /
+//!    100k devices and asserts the 100k replay completes in bounded wall
+//!    time with zero hung and zero lost runs.
+//!
+//! Everything is written to `BENCH_scale.json` (override the path with
+//! `BENCH_SCALE_OUT`). `ABLATION_SMOKE=1` runs the determinism gate plus
+//! a short 1k-device series only (CI), still producing the artifact.
+
+use std::sync::Arc;
+
+use edgefaas::bench_harness::{Stats, Table};
+use edgefaas::simnet::{Clock, SimClock};
+use edgefaas::testbed::{scale_testbed, ScaleBed};
+use edgefaas::util::json::Json;
+use edgefaas::workloads::{
+    generate, install_population, run_population, ClassReport, PopulationReport, PopulationSpec,
+    RunConfig,
+};
+
+/// Every population in this bench derives from this seed.
+const SEED: u64 = 0xED6E_FAA5;
+
+struct SeriesCfg {
+    label: &'static str,
+    devices: usize,
+    cells: usize,
+    boxes_per_cell: usize,
+    duration_s: f64,
+}
+
+fn fresh_bed(cells: usize, boxes_per_cell: usize) -> (Arc<SimClock>, ScaleBed) {
+    let clock = Arc::new(SimClock::new());
+    let bed = scale_testbed(Arc::clone(&clock) as Arc<dyn Clock>, cells, boxes_per_cell);
+    (clock, bed)
+}
+
+/// One determinism-mode replay on a fresh bed (raised backpressure so no
+/// run is shed — shed victims are timing-dependent).
+fn determinism_run(devices: usize, cells: usize, duration_s: f64) -> PopulationReport {
+    let (clock, bed) = fresh_bed(cells, 4);
+    bed.faas.set_backpressure(1_000_000, 1_000_000);
+    install_population(&bed.faas, &bed.executor, &bed.cell_boxes).expect("install population");
+    let schedule = generate(&PopulationSpec::standard(SEED, devices, cells, duration_s));
+    run_population(&bed.faas, &schedule, RunConfig::determinism(Some(clock.actor())))
+}
+
+/// One measured-mode replay on a fresh bed.
+fn measured_run(s: &SeriesCfg) -> PopulationReport {
+    let (clock, bed) = fresh_bed(s.cells, s.boxes_per_cell);
+    install_population(&bed.faas, &bed.executor, &bed.cell_boxes).expect("install population");
+    let schedule = generate(&PopulationSpec::standard(SEED, s.devices, s.cells, s.duration_s));
+    run_population(&bed.faas, &schedule, RunConfig::measured(Some(clock.actor())))
+}
+
+fn class_json(c: &ClassReport) -> Json {
+    let mut o = Json::obj();
+    o.set("submitted", (c.submitted as u64).into())
+        .set("completed", (c.completed as u64).into())
+        .set("saturated", (c.saturated as u64).into())
+        .set("shed", (c.shed as u64).into())
+        .set("deadline_missed", (c.deadline_missed as u64).into())
+        .set("resource_dead", (c.resource_dead as u64).into())
+        .set("failed", (c.failed as u64).into());
+    if c.e2e_s.is_empty() {
+        o.set("e2e_p50_s", Json::Null).set("e2e_p99_s", Json::Null);
+    } else {
+        let st = Stats::of(c.e2e_s.clone());
+        o.set("e2e_p50_s", st.p50.into()).set("e2e_p99_s", st.p99.into());
+    }
+    o
+}
+
+fn rate(part: usize, whole: usize) -> f64 {
+    if whole == 0 {
+        0.0
+    } else {
+        part as f64 / whole as f64
+    }
+}
+
+fn quantiles(c: &ClassReport) -> (String, String) {
+    if c.e2e_s.is_empty() {
+        ("-".into(), "-".into())
+    } else {
+        let st = Stats::of(c.e2e_s.clone());
+        (Stats::fmt(st.p50), Stats::fmt(st.p99))
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("ABLATION_SMOKE").map(|v| v == "1").unwrap_or(false);
+
+    // -------------------------------------------------- determinism gate
+    let (gate_devices, gate_duration) = if smoke { (200, 20.0) } else { (1000, 30.0) };
+    let a = determinism_run(gate_devices, 4, gate_duration);
+    let b = determinism_run(gate_devices, 4, gate_duration);
+    assert_eq!(
+        a.schedule_digest, b.schedule_digest,
+        "same-seed populations generated different schedules"
+    );
+    assert_eq!(
+        a.firing_digest, b.firing_digest,
+        "same-seed replays produced different outcome/firing digests"
+    );
+    assert_eq!(a.hung, 0, "determinism replay hung");
+    assert_eq!(a.lost, 0, "determinism replay lost run records");
+    println!(
+        "determinism gate: {} devices, {} submissions, schedule {:016x}, firing {:016x} — \
+         identical across two replays",
+        gate_devices,
+        a.submitted(),
+        a.schedule_digest,
+        a.firing_digest
+    );
+
+    // ------------------------------------------------------ scale series
+    let series: Vec<SeriesCfg> = if smoke {
+        vec![SeriesCfg {
+            label: "1k",
+            devices: 1000,
+            cells: 8,
+            boxes_per_cell: 4,
+            duration_s: 20.0,
+        }]
+    } else {
+        vec![
+            SeriesCfg { label: "1k", devices: 1000, cells: 8, boxes_per_cell: 4, duration_s: 60.0 },
+            SeriesCfg {
+                label: "10k",
+                devices: 10_000,
+                cells: 16,
+                boxes_per_cell: 4,
+                duration_s: 60.0,
+            },
+            SeriesCfg {
+                label: "100k",
+                devices: 100_000,
+                cells: 16,
+                boxes_per_cell: 8,
+                duration_s: 60.0,
+            },
+        ]
+    };
+
+    let mut table = Table::new(
+        "Scale harness — seeded populations over discrete-event time",
+        &[
+            "series", "devices", "submitted", "sub/s", "completed", "shed", "missed", "rt p50",
+            "rt p99", "wall",
+        ],
+    );
+    let mut series_json = Vec::new();
+    let mut reports = Vec::new();
+    for s in &series {
+        let r = measured_run(s);
+        let submitted = r.submitted();
+        let subs_per_s =
+            if r.submit_wall_s > 0.0 { submitted as f64 / r.submit_wall_s } else { 0.0 };
+        let shed: usize = r.per_class.iter().map(|c| c.shed).sum();
+        let missed: usize = r.per_class.iter().map(|c| c.deadline_missed).sum();
+        let (rt_p50, rt_p99) = quantiles(&r.per_class[0]);
+        table.row(&[
+            s.label.to_string(),
+            s.devices.to_string(),
+            submitted.to_string(),
+            format!("{subs_per_s:.0}"),
+            r.completed().to_string(),
+            format!("{:.1}%", 100.0 * rate(shed, submitted)),
+            format!("{:.1}%", 100.0 * rate(missed, submitted)),
+            rt_p50,
+            rt_p99,
+            Stats::fmt(r.wall_s),
+        ]);
+
+        let mut o = Json::obj();
+        o.set("label", s.label.into())
+            .set("devices", (s.devices as u64).into())
+            .set("cells", (s.cells as u64).into())
+            .set("boxes_per_cell", (s.boxes_per_cell as u64).into())
+            .set("duration_virtual_s", s.duration_s.into())
+            .set("submitted", (submitted as u64).into())
+            .set("completed", (r.completed() as u64).into())
+            .set("submissions_per_s", subs_per_s.into())
+            .set("shed_rate", rate(shed, submitted).into())
+            .set("deadline_miss_rate", rate(missed, submitted).into())
+            .set("virtual_makespan_s", r.virtual_makespan_s.into())
+            .set("submit_wall_s", r.submit_wall_s.into())
+            .set("wall_s", r.wall_s.into())
+            .set("lost", (r.lost as u64).into())
+            .set("hung", (r.hung as u64).into());
+        let mut classes = Json::obj();
+        classes
+            .set("realtime", class_json(&r.per_class[0]))
+            .set("interactive", class_json(&r.per_class[1]))
+            .set("batch", class_json(&r.per_class[2]));
+        o.set("classes", classes);
+        series_json.push(o);
+        reports.push(r);
+    }
+    table.print();
+
+    // --------------------------------------------------------- artifact
+    let mut determinism = Json::obj();
+    determinism
+        .set("seed", (SEED).into())
+        .set("devices", (gate_devices as u64).into())
+        .set("submitted", (a.submitted() as u64).into())
+        .set("schedule_digest", format!("{:016x}", a.schedule_digest).into())
+        .set("firing_digest", format!("{:016x}", a.firing_digest).into())
+        .set("identical", true.into());
+    let mut doc = Json::obj();
+    doc.set("bench", "scale_population".into())
+        .set("smoke", smoke.into())
+        .set("determinism", determinism)
+        .set("series", Json::Arr(series_json));
+    let out_path =
+        std::env::var("BENCH_SCALE_OUT").unwrap_or_else(|_| "BENCH_scale.json".to_string());
+    std::fs::write(&out_path, doc.to_string()).expect("write bench json");
+    println!("wrote {out_path}");
+
+    // Non-smoke acceptance: the 100k-device replay completes in bounded
+    // wall time and never hangs or loses a run record.
+    if !smoke {
+        let big = reports.last().expect("non-smoke runs the 100k series");
+        assert_eq!(big.hung, 0, "100k-device replay hung");
+        assert_eq!(big.lost, 0, "100k-device replay lost run records");
+        assert!(
+            big.wall_s < 900.0,
+            "100k-device replay took {:.0} s wall (budget 900 s)",
+            big.wall_s
+        );
+    }
+}

@@ -2,8 +2,11 @@
 //!
 //! The offline build has no criterion, so `benches/*` (built with
 //! `harness = false`) use this: warmup + timed iterations with min / mean /
-//! p50 / p95 statistics, and an aligned-table printer so every bench emits
-//! the same rows/series the paper's figures report.
+//! p50 / p95 / p99 statistics, and an aligned-table printer so every bench
+//! emits the same rows/series the paper's figures report. The scale
+//! harness (`benches/scale_population.rs`) also feeds *virtual-time*
+//! end-to-end latencies through [`Stats::of`] — the statistics are
+//! unit-agnostic.
 
 use std::time::Instant;
 
@@ -15,6 +18,7 @@ pub struct Stats {
     pub mean: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -30,6 +34,7 @@ impl Stats {
             mean: samples.iter().sum::<f64>() / n as f64,
             p50: pick(0.5),
             p95: pick(0.95),
+            p99: pick(0.99),
             max: samples[n - 1],
         }
     }
@@ -129,6 +134,7 @@ mod tests {
         assert!((s.mean - 50.5).abs() < 1e-9);
         assert!((s.p50 - 50.0).abs() < 1.5);
         assert!((s.p95 - 95.0).abs() < 1.5);
+        assert!((s.p99 - 99.0).abs() < 1.5);
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub mod backup;
 pub mod coordinator;
 pub mod runtime;
 pub mod workflows;
+pub mod workloads;
 pub mod perfmodel;
 pub mod bench_harness;
 pub mod testbed;

@@ -82,10 +82,28 @@ impl Clock for VirtualClock {
     }
 
     fn sleep(&self, dur: f64) {
-        if dur > 0.0 {
-            let d = (dur * 1e9) as u64;
-            let now = self.nanos.load(Ordering::SeqCst);
-            self.nanos.fetch_max(now.saturating_add(d), Ordering::SeqCst);
+        if dur <= 0.0 {
+            return;
+        }
+        let d = (dur * 1e9) as u64;
+        // One CAS loop instead of a separate `load` + `fetch_max`: the wake
+        // target stays anchored at the value observed on entry (re-anchoring
+        // on retry would serialize concurrent sleeps and break the overlap
+        // semantics above), and the loop exits as soon as the clock is seen
+        // at or past the target — whether this sleeper published it or a
+        // concurrent sleeper/advancer already did.
+        let mut cur = self.nanos.load(Ordering::SeqCst);
+        let target = cur.saturating_add(d);
+        while cur < target {
+            match self.nanos.compare_exchange_weak(
+                cur,
+                target,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
         }
     }
 }
@@ -151,5 +169,62 @@ mod tests {
         let t = c.now();
         assert!(t <= 14.0 + 1e-6, "overlapping sleeps must not fully serialize: {t}");
         assert!(t >= 10.0 - 1e-6, "the longest sleep bounds the end time: {t}");
+    }
+
+    /// The ISSUE's atomicity property, under real contention: 4 sleeper
+    /// threads each run 200 sequential 1 ms sleeps while 4 advancer threads
+    /// hammer `advance_to` with a value below every sleeper's accumulated
+    /// floor. Invariants:
+    ///
+    /// * per-sleep progress — after `sleep(d)` returns, `now() >=
+    ///   entry_now + d` (a lost update here is what a racy read-modify-write
+    ///   pair would produce);
+    /// * sequential accumulation — the final time is at least one thread's
+    ///   full sleep sum, advancers notwithstanding;
+    /// * overlap ceiling — the final time never exceeds the sum of *all*
+    ///   sleeps (concurrent sleeps may overlap, never serialize past it).
+    #[test]
+    fn sleep_invariants_hold_under_8_racing_threads() {
+        let c = std::sync::Arc::new(VirtualClock::new());
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(8));
+        let per_thread = 200u32;
+        let d = 0.001f64; // 1 ms per sleep, exact in integer nanoseconds
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let c = std::sync::Arc::clone(&c);
+            let b = std::sync::Arc::clone(&barrier);
+            handles.push(std::thread::spawn(move || {
+                b.wait();
+                for k in 0..per_thread {
+                    let t0 = c.now();
+                    c.sleep(d);
+                    let t1 = c.now();
+                    assert!(
+                        t1 >= t0 + d - 1e-9,
+                        "sleeper {t} iteration {k}: sleep lost an update (t0={t0} t1={t1})"
+                    );
+                }
+            }));
+        }
+        for _ in 0..4 {
+            let c = std::sync::Arc::clone(&c);
+            let b = std::sync::Arc::clone(&barrier);
+            handles.push(std::thread::spawn(move || {
+                b.wait();
+                for _ in 0..per_thread {
+                    // Always below the 0.2 s per-thread floor: a correct
+                    // sleep must out-accumulate these no matter how the
+                    // advancer interleaves with its read-modify-write.
+                    c.advance_to(0.05);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let end = c.now();
+        let one_thread = per_thread as f64 * d;
+        assert!(end >= one_thread - 1e-9, "sequential accumulation under-advanced: {end}");
+        assert!(end <= 4.0 * one_thread + 1e-6, "concurrent sleeps serialized: {end}");
     }
 }

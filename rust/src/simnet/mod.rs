@@ -15,15 +15,22 @@
 //!   `crate::coordinator::engine` — runs in real time (examples, loopback
 //!   HTTP) or virtual time (benches), with concurrent virtual sleeps
 //!   overlapping the way parallel stage executions do on real hardware;
+//! * [`simclock`] — true discrete-event virtual time behind the same
+//!   `Clock` trait: sleepers register wake events on an event wheel and a
+//!   driver thread advances time only when every live actor is parked, so
+//!   populations of thousands of paced submitters simulate hours in wall
+//!   seconds (the scale harness, `workloads::population`, runs on it);
 //! * [`engine`] — a discrete-event engine used by the workflow simulations
 //!   (Figs. 8/9) so a 96.7 s cloud-only pipeline simulates in microseconds.
 
 pub mod clock;
 pub mod engine;
+pub mod simclock;
 pub mod topology;
 pub mod transfer;
 
 pub use clock::{Clock, RealClock, VirtualClock};
 pub use engine::SimEngine;
+pub use simclock::{SimActor, SimClock};
 pub use topology::{LinkSpec, NodeId, Tier, Topology};
 pub use transfer::TransferModel;

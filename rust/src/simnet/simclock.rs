@@ -1,0 +1,396 @@
+//! True discrete-event virtual time.
+//!
+//! [`VirtualClock`](super::VirtualClock) is a monotonic `fetch_max`
+//! counter: a sleeper advances the clock itself, instantly, which is fine
+//! when every sleeper is also the only actor (the figure benches) but
+//! cannot coordinate a *population* — thousands of paced submitters plus
+//! engine workers — because whichever thread sleeps first drags the clock
+//! forward under everyone else's feet.
+//!
+//! [`SimClock`] is a discrete-event scheduler behind the same
+//! [`Clock`] trait:
+//!
+//! * every `sleep(d)` registers a wake event at `now + d` on an **event
+//!   wheel** (a `BTreeSet` keyed by `(wake_ns, ticket)`) and parks the OS
+//!   thread on a condvar;
+//! * a **driver thread** advances virtual time to the earliest pending
+//!   wake point — but only when every *registered actor* (see
+//!   [`SimClock::actor`]) is parked and no already-due sleeper has yet to
+//!   exit — then broadcasts, wakes the due sleepers, and waits for the
+//!   wheel to quiesce again;
+//! * `now()` is a lock-free atomic read, so hot-path engine code pays the
+//!   same cost as under `VirtualClock`.
+//!
+//! Actor registration is what makes pacing sound: a workload generator
+//! takes a [`SimActor`] guard and paces its submissions with
+//! [`SimActor::sleep`]; the driver will not advance past the generator's
+//! next arrival while it is mid-submission (registered, not parked).
+//! Threads that sleep through the plain [`Clock`] interface — engine
+//! backends simulating service time — park *passively*: they gate
+//! advancement only while their event is due, so a million device-sleeps
+//! cost one `BTreeSet` insert + one condvar park each, and virtual hours
+//! simulate in wall seconds.
+//!
+//! Dropping the last reference shuts the driver down and releases any
+//! still-parked sleepers (their remaining virtual delay is abandoned —
+//! only relevant on teardown).
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::clock::Clock;
+
+#[derive(Default)]
+struct State {
+    /// Pending wake points, one `(wake_ns, ticket)` entry per parked
+    /// sleeper; the ticket disambiguates equal wake times.
+    wheel: BTreeSet<(u64, u64)>,
+    next_ticket: u64,
+    /// Live [`SimActor`] guards.
+    actors: usize,
+    /// Registered actors currently parked in a sleep.
+    actors_parked: usize,
+    shutdown: bool,
+}
+
+struct Core {
+    state: Mutex<State>,
+    /// Sleepers park here; time advances are broadcast on it.
+    wake_cv: Condvar,
+    /// The driver parks here; sleep entry/exit, actor release, and
+    /// shutdown all signal it.
+    driver_cv: Condvar,
+    /// Mirror of the current virtual time for lock-free `now()`. Written
+    /// only under the state mutex, so stores are totally ordered.
+    now_ns: AtomicU64,
+}
+
+impl Core {
+    /// Register a wake event and park until virtual time reaches it.
+    /// `registered` marks the parked interval as an actor's (it then
+    /// counts toward the driver's all-actors-parked gate).
+    fn park(&self, dur_s: f64, registered: bool) {
+        if dur_s <= 0.0 {
+            return;
+        }
+        // Ceil so no positive sleep rounds to a zero-length event.
+        let d = ((dur_s * 1e9).ceil() as u64).max(1);
+        let mut st = self.state.lock().unwrap();
+        let wake = self.now_ns.load(Ordering::SeqCst).saturating_add(d);
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.wheel.insert((wake, ticket));
+        if registered {
+            st.actors_parked += 1;
+        }
+        self.driver_cv.notify_one();
+        while self.now_ns.load(Ordering::SeqCst) < wake && !st.shutdown {
+            st = self.wake_cv.wait(st).unwrap();
+        }
+        st.wheel.remove(&(wake, ticket));
+        if registered {
+            st.actors_parked -= 1;
+        }
+        // Exit may unblock the driver: either the last due sleeper left
+        // the wheel, or the last registered actor just re-parked elsewhere.
+        self.driver_cv.notify_one();
+    }
+}
+
+/// The event-wheel driver: advance to the earliest wake point exactly when
+/// the system is quiescent — every registered actor parked, and no sleeper
+/// whose wake time has already been reached still on the wheel (it was
+/// woken but has not yet exited `park`).
+fn drive(core: &Core) {
+    let mut st = core.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let now = core.now_ns.load(Ordering::SeqCst);
+        if let Some(&(wake, _)) = st.wheel.first() {
+            if wake > now && st.actors_parked >= st.actors {
+                core.now_ns.store(wake, Ordering::SeqCst);
+                core.wake_cv.notify_all();
+                // Fall through to wait: the entries at `wake` are now due
+                // and must exit before the next advance. Their exits (and
+                // any new sleeps) signal `driver_cv`; the mutex is held
+                // from this store through the wait, so no signal is lost.
+            }
+        }
+        st = core.driver_cv.wait(st).unwrap();
+    }
+}
+
+/// A discrete-event virtual clock. See the module docs; construct with
+/// [`SimClock::new`], share as `Arc<dyn Clock>`, register pacing threads
+/// via [`SimClock::actor`].
+pub struct SimClock {
+    core: Arc<Core>,
+    driver: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        let core = Arc::new(Core {
+            state: Mutex::new(State::default()),
+            wake_cv: Condvar::new(),
+            driver_cv: Condvar::new(),
+            now_ns: AtomicU64::new(0),
+        });
+        let driver_core = Arc::clone(&core);
+        let driver = std::thread::Builder::new()
+            .name("simclock-driver".into())
+            .spawn(move || drive(&driver_core))
+            .expect("spawn simclock driver");
+        SimClock { core, driver: Mutex::new(Some(driver)) }
+    }
+
+    /// Register a live actor. While the returned guard exists and is not
+    /// inside [`SimActor::sleep`], the driver will not advance virtual
+    /// time — the actor is presumed busy scheduling work for "now".
+    /// Dropping (or [`SimActor::release`]-ing) the guard lets time
+    /// free-run past the actor again.
+    pub fn actor(self: &Arc<Self>) -> SimActor {
+        self.core.state.lock().unwrap().actors += 1;
+        SimActor { core: Arc::clone(&self.core), released: AtomicBool::new(false) }
+    }
+
+    /// Number of wake events currently on the wheel (tests use this to
+    /// handshake with sleepers deterministically).
+    #[cfg(test)]
+    fn pending_events(&self) -> usize {
+        self.core.state.lock().unwrap().wheel.len()
+    }
+
+    /// Advance the clock to `t` seconds if `t` is ahead (monotonic) and
+    /// wake every sleeper whose wake point is now due. Mirrors
+    /// [`VirtualClock::advance_to`](super::VirtualClock::advance_to).
+    pub fn advance_to(&self, t: f64) {
+        let target = (t * 1e9) as u64;
+        let st = self.core.state.lock().unwrap();
+        if target > self.core.now_ns.load(Ordering::SeqCst) {
+            self.core.now_ns.store(target, Ordering::SeqCst);
+            self.core.wake_cv.notify_all();
+            self.core.driver_cv.notify_one();
+        }
+        drop(st);
+    }
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> f64 {
+        self.core.now_ns.load(Ordering::SeqCst) as f64 / 1e9
+    }
+
+    /// Passive (unregistered) sleep: park on the wheel until the driver —
+    /// or an `advance_to` — reaches the wake point.
+    fn sleep(&self, dur: f64) {
+        self.core.park(dur, false);
+    }
+}
+
+impl Drop for SimClock {
+    fn drop(&mut self) {
+        {
+            let mut st = self.core.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.core.wake_cv.notify_all();
+        self.core.driver_cv.notify_all();
+        if let Some(h) = self.driver.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Registered-actor guard from [`SimClock::actor`]. The guard's
+/// [`sleep`](SimActor::sleep) is the *pacing* sleep: virtual time cannot
+/// run ahead of a live actor that is not parked in one.
+pub struct SimActor {
+    core: Arc<Core>,
+    released: AtomicBool,
+}
+
+impl SimActor {
+    /// Park this actor for `dur_s` virtual seconds. Unlike the passive
+    /// [`Clock::sleep`], the parked interval counts toward the driver's
+    /// all-actors-parked gate, so the wake fires at exactly `now + dur_s`
+    /// — no other thread can drag time past it first.
+    pub fn sleep(&self, dur_s: f64) {
+        debug_assert!(!self.released.load(Ordering::SeqCst), "sleep on a released SimActor");
+        self.core.park(dur_s, true);
+    }
+
+    /// Deregister the actor (idempotent; also runs on drop). After
+    /// release, the driver free-runs the remaining wheel without waiting
+    /// on this actor — call it after a generator's last submission so
+    /// in-flight service-time sleeps can drain at full speed.
+    pub fn release(&self) {
+        if !self.released.swap(true, Ordering::SeqCst) {
+            self.core.state.lock().unwrap().actors -= 1;
+            self.core.driver_cv.notify_one();
+        }
+    }
+}
+
+impl Drop for SimActor {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn unregistered_sleep_advances_in_wall_microseconds() {
+        let c = Arc::new(SimClock::new());
+        let wall = Instant::now();
+        c.sleep(3600.0); // "one virtual hour"
+        assert!(wall.elapsed().as_millis() < 500);
+        assert!((c.now() - 3600.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn events_fire_in_time_order_not_spawn_order() {
+        let c = Arc::new(SimClock::new());
+        // Pin an actor so only the explicit advance_to steps move time:
+        // each step must wake exactly the sleepers whose wake point is due,
+        // regardless of spawn order (spawned long-first here).
+        let pin = c.actor();
+        let done: Arc<Vec<AtomicBool>> =
+            Arc::new((0..3).map(|_| AtomicBool::new(false)).collect());
+        let mut handles = Vec::new();
+        for (i, d) in [30.0f64, 20.0, 10.0].into_iter().enumerate() {
+            let c = Arc::clone(&c);
+            let done = Arc::clone(&done);
+            handles.push(std::thread::spawn(move || {
+                c.sleep(d);
+                done[i].store(true, Ordering::SeqCst);
+            }));
+        }
+        while c.pending_events() < 3 {
+            std::thread::yield_now();
+        }
+        for (step, woken) in [(10.0f64, 2usize), (20.0, 1), (30.0, 0)] {
+            c.advance_to(step);
+            while !done[woken].load(Ordering::SeqCst) {
+                std::thread::yield_now();
+            }
+            for (i, flag) in done.iter().enumerate() {
+                let expect = [30.0, 20.0, 10.0][i] <= step + 1e-9;
+                assert_eq!(
+                    flag.load(Ordering::SeqCst),
+                    expect,
+                    "after advance_to({step}): sleeper {i} wrong wake state"
+                );
+            }
+        }
+        pin.release();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn sequential_sleeps_accumulate_and_concurrent_sleeps_overlap() {
+        let c = Arc::new(SimClock::new());
+        c.sleep(2.0);
+        c.sleep(3.0);
+        assert!((c.now() - 5.0).abs() < 1e-6, "sequential sleeps accumulate");
+        // Two overlapping sleepers, both anchored at t=5 (an actor pin
+        // holds time until both events are registered): end at t=5+10.
+        let pin = c.actor();
+        let mut handles = Vec::new();
+        for d in [10.0f64, 4.0] {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                c.sleep(d);
+            }));
+        }
+        while c.pending_events() < 2 {
+            std::thread::yield_now();
+        }
+        pin.release();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!((c.now() - 15.0).abs() < 1e-6, "concurrent sleeps overlap: {}", c.now());
+    }
+
+    #[test]
+    fn registered_actor_gates_advancement() {
+        let c = Arc::new(SimClock::new());
+        let actor = c.actor();
+        let done = Arc::new(AtomicBool::new(false));
+        let t = {
+            let c = Arc::clone(&c);
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                c.sleep(100.0); // passive: must NOT advance while the actor is live
+                done.store(true, Ordering::SeqCst);
+            })
+        };
+        while c.pending_events() < 1 {
+            std::thread::yield_now();
+        }
+        // The actor is live and unparked: the passive sleeper stays parked.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!done.load(Ordering::SeqCst), "time advanced past a live actor");
+        assert!(c.now() < 1e-9);
+        // Actor pacing: a 10 s actor sleep wakes at exactly t=10 (the
+        // passive 100 s event stays pending), then release free-runs it.
+        actor.sleep(10.0);
+        assert!((c.now() - 10.0).abs() < 1e-6, "actor wake is the earliest event");
+        assert!(!done.load(Ordering::SeqCst));
+        actor.release();
+        t.join().unwrap();
+        assert!(done.load(Ordering::SeqCst));
+        assert!((c.now() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn advance_to_is_monotonic_and_wakes_due_sleepers() {
+        let c = Arc::new(SimClock::new());
+        let _actor = c.actor(); // pin the driver so only advance_to moves time
+        let woke = Arc::new(AtomicBool::new(false));
+        let t = {
+            let c = Arc::clone(&c);
+            let woke = Arc::clone(&woke);
+            std::thread::spawn(move || {
+                c.sleep(5.0);
+                woke.store(true, Ordering::SeqCst);
+            })
+        };
+        while c.pending_events() < 1 {
+            std::thread::yield_now();
+        }
+        assert!(!woke.load(Ordering::SeqCst));
+        c.advance_to(3.0);
+        c.advance_to(2.0); // ignored: behind
+        assert!((c.now() - 3.0).abs() < 1e-6);
+        c.advance_to(7.5);
+        t.join().unwrap();
+        assert!(woke.load(Ordering::SeqCst));
+        assert!((c.now() - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn drop_joins_the_driver_cleanly() {
+        let c = Arc::new(SimClock::new());
+        c.sleep(5.0);
+        assert!((c.now() - 5.0).abs() < 1e-6);
+        drop(c); // must shut down and join the driver thread, not hang
+    }
+}

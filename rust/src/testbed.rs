@@ -7,6 +7,11 @@
 //! [`LocalHandle`], registered with the coordinator exactly as a remote
 //! gateway would be. Used by the examples, the benches and the integration
 //! tests.
+//!
+//! [`scale_testbed`] builds the same stack in a parameterized star-of-stars
+//! shape (cells of IoT boxes behind edge hubs, one cloud) for the scale
+//! harness, where thousands of simulated devices multiplex onto a
+//! bounded registered fleet.
 
 use std::sync::Arc;
 
@@ -103,6 +108,98 @@ pub fn paper_testbed(clock: Arc<dyn Clock>) -> TestBed {
     let cloud = faas.register(spec, h, cloud_node).unwrap();
 
     TestBed { faas: Arc::new(faas), executor, iot, edges, cloud }
+}
+
+/// A running scale-harness fleet (see [`scale_testbed`]).
+pub struct ScaleBed {
+    pub faas: Arc<EdgeFaaS>,
+    /// Shared executor: register handler images here.
+    pub executor: Arc<NativeExecutor>,
+    /// Device-hosting IoT boxes, grouped per cell: `cell_boxes[c]` are the
+    /// registered resources behind cell `c`'s hub. Simulated devices are
+    /// multiplexed onto these (device `d` submits through cell
+    /// `d % cells`), so the *device* count scales independently of the
+    /// *registered-resource* count — the latter is bounded by the
+    /// monitoring snapshot's dense latency matrix.
+    pub cell_boxes: Vec<Vec<ResourceId>>,
+    /// One edge hub per cell.
+    pub hubs: Vec<ResourceId>,
+    pub cloud: ResourceId,
+}
+
+impl ScaleBed {
+    /// Every resource id: boxes cell by cell, then hubs, then cloud.
+    pub fn all_resources(&self) -> Vec<ResourceId> {
+        let mut v: Vec<ResourceId> = self.cell_boxes.iter().flatten().copied().collect();
+        v.extend(&self.hubs);
+        v.push(self.cloud);
+        v
+    }
+}
+
+/// Build the scale-harness topology: `cells` edge cells, each one hub
+/// fronting `boxes_per_cell` IoT boxes (2 ms LAN), hubs uplinked to one
+/// cloud (30 ms WAN). The registered fleet is
+/// `cells * boxes_per_cell + cells + 1` resources; populations of any
+/// device count run on top of it (`workloads::population`).
+pub fn scale_testbed(clock: Arc<dyn Clock>, cells: usize, boxes_per_cell: usize) -> ScaleBed {
+    assert!(cells > 0 && boxes_per_cell > 0, "scale_testbed needs a non-empty fleet");
+    let executor = Arc::new(NativeExecutor::new());
+    let mut topo = Topology::new();
+    let mut box_nodes = Vec::new();
+    let mut hub_nodes = Vec::new();
+    for c in 0..cells {
+        let hub = topo.add_node(format!("hub-{c}"), Tier::Edge);
+        let mut boxes = Vec::new();
+        for b in 0..boxes_per_cell {
+            let n = topo.add_node(format!("box-{c}-{b}"), Tier::Iot);
+            topo.add_link(n, hub, 0.002, mbps(100.0));
+            boxes.push(n);
+        }
+        box_nodes.push(boxes);
+        hub_nodes.push(hub);
+    }
+    let cloud_node = topo.add_node("cloud", Tier::Cloud);
+    for &hub in &hub_nodes {
+        topo.add_link(hub, cloud_node, 0.03, mbps(50.0));
+    }
+
+    let faas = EdgeFaaS::with_parts(topo, DurableKv::ephemeral(), Arc::clone(&clock));
+    let mk_handle = |spec: &ResourceSpec| -> Arc<dyn ResourceHandle> {
+        let backend = Arc::new(FaasBackend::new(
+            spec.clone(),
+            Arc::clone(&executor) as Arc<dyn Executor>,
+            Arc::clone(&clock),
+        ));
+        let store = Arc::new(ObjectStore::new(
+            spec.storage * spec.nodes as u64,
+            &spec.minio_access_key,
+            &spec.minio_secret_key,
+        ));
+        Arc::new(LocalHandle::new(backend, store))
+    };
+
+    let mut cell_boxes = Vec::new();
+    for (c, boxes) in box_nodes.into_iter().enumerate() {
+        let mut ids = Vec::new();
+        for (b, node) in boxes.into_iter().enumerate() {
+            let spec = ResourceSpec::paper_iot(&format!("box{c}x{b}:8080"));
+            let h = mk_handle(&spec);
+            ids.push(faas.register(spec, h, node).unwrap());
+        }
+        cell_boxes.push(ids);
+    }
+    let mut hubs = Vec::new();
+    for (c, node) in hub_nodes.into_iter().enumerate() {
+        let spec = ResourceSpec::paper_edge(&format!("hub{c}:8080"));
+        let h = mk_handle(&spec);
+        hubs.push(faas.register(spec, h, node).unwrap());
+    }
+    let spec = ResourceSpec::paper_cloud("cloud:8080");
+    let h = mk_handle(&spec);
+    let cloud = faas.register(spec, h, cloud_node).unwrap();
+
+    ScaleBed { faas: Arc::new(faas), executor, cell_boxes, hubs, cloud }
 }
 
 /// Locate the AOT artifact directory (`artifacts/` at the crate root).

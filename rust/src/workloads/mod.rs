@@ -1,0 +1,21 @@
+//! Synthetic workload populations — the scale harness's load generator.
+//!
+//! Where [`crate::workflows`] carries the *paper's* two workflows (video
+//! analytics, federated learning) with their real compute, this module
+//! carries seeded *populations* of lightweight workflow archetypes for
+//! driving the engine/scheduler/liveness planes at 1k–100k simulated
+//! devices: [`population`] turns a `u64` seed into a byte-identical
+//! submission schedule (per-archetype Poisson/bursty arrival models over
+//! a device population) and replays it against a live coordinator under
+//! any [`crate::simnet::Clock`] — the discrete-event
+//! [`crate::simnet::SimClock`] for bounded-wall-time runs.
+//!
+//! See `benches/scale_population.rs` (emits `BENCH_scale.json`) and the
+//! README's "Scale harness" section for how the pieces fit.
+
+pub mod population;
+
+pub use population::{
+    generate, install_population, run_population, schedule_digest, Archetype, ArchetypeLoad,
+    Arrival, ClassReport, PopulationApps, PopulationReport, PopulationSpec, RunConfig, Submission,
+};

@@ -1,0 +1,769 @@
+//! Seeded workload populations over a device fleet.
+//!
+//! A **population** is a set of simulated edge devices, each running one
+//! workflow **archetype** with its own arrival-rate model. Everything is
+//! derived from a single `u64` seed through [`SplitMix64`] split streams,
+//! so the submission schedule is *byte-identical* across runs, machines,
+//! and engine shard counts — the property the seed-reproducibility suite
+//! and the CI determinism gate assert.
+//!
+//! The pipeline has three stages, deliberately separable:
+//!
+//! 1. [`generate`] — pure data: `PopulationSpec -> Vec<Submission>`,
+//!    sorted by `(at_ns, device)`. No engine, no clock, no I/O.
+//!    [`schedule_digest`] fingerprints it.
+//! 2. [`install_population`] — register the archetype apps (one per
+//!    `(archetype, cell)`) and their stub handlers on a live coordinator.
+//!    Handlers *sleep virtual service time* on the coordinator's clock and
+//!    nothing else, so a run's end-to-end latency is queueing + service
+//!    under the engine's real dispatch/QoS/batching machinery.
+//! 3. [`run_population`] — replay the schedule: pace submissions on the
+//!    clock (a [`SimActor`] under [`SimClock`](crate::simnet::SimClock),
+//!    a plain sleep otherwise), collect every run's outcome as it
+//!    completes (an `on_engine_event` subscriber consumes finished runs
+//!    immediately, so the engine's bounded finished-run retention can
+//!    never evict an unobserved result), and fold per-QoS-class counters
+//!    and latency vectors into a [`PopulationReport`].
+//!
+//! ### Determinism contract
+//!
+//! Same seed ⇒ identical [`Submission`] bytes (always), and identical
+//! per-run firing orders (chain-shaped archetype DAGs keep
+//! `WorkflowResult::firing_order` deterministic at any worker/shard
+//! count). [`PopulationReport::firing_digest`] folds outcomes in
+//! *submission order*, so two same-seed runs with deadlines stripped and
+//! backpressure raised ([`RunConfig::determinism`]) produce equal digests
+//! at any shard count. Measured (non-determinism) configs keep deadlines
+//! and default backpressure: shed/deadline-miss *rates* are then real
+//! measurements and may vary run to run — only the schedule stays
+//! byte-identical.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::cluster::faas::NativeExecutor;
+use crate::coordinator::functions::FunctionPackage;
+use crate::coordinator::{
+    EdgeFaaS, EngineError, EngineEvent, Priority, QoS, ResourceId, RunId, RunStatus, WaitError,
+};
+use crate::simnet::SimActor;
+use crate::util::rng::SplitMix64;
+
+// ---------------------------------------------------------------- archetypes
+
+/// A workflow archetype: a small chain-shaped DAG with fixed per-stage
+/// virtual service times and a QoS class. Chains (single dependency per
+/// stage; fan-out expressed as entry-instance parallelism) keep firing
+/// orders deterministic — the engine guarantees order only for chain DAGs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Archetype {
+    /// The paper's video-analytics shape: capture on a device box, analyze
+    /// on the cell hub. `Realtime`, tight deadline.
+    Video,
+    /// Federated learning: parallel on-device training (entry instances on
+    /// several boxes), aggregate on the hub. `Batch`, no deadline.
+    FedLearn,
+    /// Synthetic fan-out/fan-in: a wide scatter across the cell's boxes
+    /// reduced by a single gather. `Interactive`, loose deadline.
+    FanOut,
+}
+
+impl Archetype {
+    pub const ALL: [Archetype; 3] = [Archetype::Video, Archetype::FedLearn, Archetype::FanOut];
+
+    /// Stable lowercase name (used in app names; must stay alphanumeric —
+    /// the YAML application field and object URLs both embed it).
+    pub fn name(self) -> &'static str {
+        match self {
+            Archetype::Video => "video",
+            Archetype::FedLearn => "fl",
+            Archetype::FanOut => "fanout",
+        }
+    }
+
+    /// The chain stages: `(name, nodetype, virtual service seconds)`.
+    /// Stage 0 is the entry (data affinity, `reduce: auto`); later stages
+    /// reduce to one instance with function affinity.
+    pub fn stages(self) -> &'static [(&'static str, &'static str, f64)] {
+        match self {
+            Archetype::Video => &[("capture", "iot", 0.05), ("analyze", "edge", 0.2)],
+            Archetype::FedLearn => &[("train", "iot", 0.5), ("aggregate", "edge", 0.1)],
+            Archetype::FanOut => &[("scatter", "iot", 0.02), ("gather", "edge", 0.05)],
+        }
+    }
+
+    /// How many of a cell's device boxes the entry stage anchors on
+    /// (= entry instances per run).
+    pub fn anchor_width(self) -> usize {
+        match self {
+            Archetype::Video => 1,
+            Archetype::FedLearn => 4,
+            Archetype::FanOut => 8,
+        }
+    }
+
+    /// The class (and, unless stripped, the relative deadline) every
+    /// submission of this archetype carries.
+    pub fn qos(self, strip_deadlines: bool) -> QoS {
+        let q = match self {
+            Archetype::Video => QoS::class(Priority::Realtime).with_deadline(5.0),
+            Archetype::FedLearn => QoS::class(Priority::Batch),
+            Archetype::FanOut => QoS::class(Priority::Interactive).with_deadline(20.0),
+        };
+        if strip_deadlines {
+            QoS::class(q.priority)
+        } else {
+            q
+        }
+    }
+
+    /// QoS-class index (0 Realtime, 1 Interactive, 2 Batch) — the
+    /// [`PopulationReport::per_class`] row this archetype lands in.
+    pub fn class_index(self) -> usize {
+        match self.qos(true).priority {
+            Priority::Realtime => 0,
+            Priority::Interactive => 1,
+            Priority::Batch => 2,
+        }
+    }
+}
+
+// ------------------------------------------------------------- arrival models
+
+/// Per-device arrival process (rates are per device, so aggregate load
+/// scales linearly with the device count).
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Memoryless arrivals at `rate_hz` events/sec: exponential
+    /// inter-arrival times.
+    Poisson { rate_hz: f64 },
+    /// On/off bursts: exponentially distributed ON periods (mean
+    /// `mean_on_s`) with Poisson arrivals at `rate_hz`, separated by
+    /// exponentially distributed OFF periods (mean `mean_off_s`).
+    Bursty { rate_hz: f64, mean_on_s: f64, mean_off_s: f64 },
+}
+
+/// One archetype's share of the population.
+#[derive(Debug, Clone, Copy)]
+pub struct ArchetypeLoad {
+    pub archetype: Archetype,
+    /// Fraction of devices running this archetype (weights are normalized
+    /// over the spec's loads).
+    pub weight: f64,
+    pub arrival: Arrival,
+}
+
+/// A fully seeded population description. Pure data: two equal specs
+/// always generate byte-identical schedules.
+#[derive(Debug, Clone)]
+pub struct PopulationSpec {
+    pub seed: u64,
+    /// Simulated devices (traffic sources). Devices are multiplexed onto
+    /// the registered fleet: device `d` lives in cell `d % cells`.
+    pub devices: usize,
+    /// App cells (each cell gets its own `(archetype, cell)` app anchored
+    /// on its own slice of the fleet).
+    pub cells: usize,
+    /// Virtual length of the arrival window, seconds.
+    pub duration_s: f64,
+    pub loads: Vec<ArchetypeLoad>,
+}
+
+impl PopulationSpec {
+    /// The standard mix the benches and tests use: 30% video devices
+    /// (Poisson, ~1 run/min), 20% federated-learning devices (bursty), 50%
+    /// fan-out devices (Poisson, ~1 run/min).
+    pub fn standard(seed: u64, devices: usize, cells: usize, duration_s: f64) -> PopulationSpec {
+        PopulationSpec {
+            seed,
+            devices,
+            cells,
+            duration_s,
+            loads: vec![
+                ArchetypeLoad {
+                    archetype: Archetype::Video,
+                    weight: 0.3,
+                    arrival: Arrival::Poisson { rate_hz: 1.0 / 60.0 },
+                },
+                ArchetypeLoad {
+                    archetype: Archetype::FedLearn,
+                    weight: 0.2,
+                    arrival: Arrival::Bursty {
+                        rate_hz: 1.0 / 20.0,
+                        mean_on_s: 10.0,
+                        mean_off_s: 50.0,
+                    },
+                },
+                ArchetypeLoad {
+                    archetype: Archetype::FanOut,
+                    weight: 0.5,
+                    arrival: Arrival::Poisson { rate_hz: 1.0 / 60.0 },
+                },
+            ],
+        }
+    }
+}
+
+/// One scheduled workflow submission. Times are integer nanoseconds from
+/// the population start so "byte-identical schedule" is exact, not
+/// float-comparison-modulo-epsilon.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Submission {
+    pub at_ns: u64,
+    pub device: u32,
+    pub cell: u32,
+    pub archetype: Archetype,
+}
+
+/// Generate the full submission schedule for a spec. Pure and
+/// deterministic: stream derivation order is fixed (assignment stream
+/// first, then one stream per device in index order), and the result is
+/// sorted by `(at_ns, device)`.
+pub fn generate(spec: &PopulationSpec) -> Vec<Submission> {
+    assert!(spec.cells > 0, "population needs at least one cell");
+    assert!(!spec.loads.is_empty(), "population needs at least one archetype load");
+    let total_weight: f64 = spec.loads.iter().map(|l| l.weight).sum();
+    assert!(total_weight > 0.0, "archetype weights must sum to > 0");
+    let mut root = SplitMix64::seeded(spec.seed);
+    let mut assign = root.split(0);
+    let horizon_ns = (spec.duration_s * 1e9) as u64;
+    let mut subs = Vec::new();
+    for device in 0..spec.devices {
+        // Archetype assignment by cumulative weight.
+        let mut u = assign.next_f64() * total_weight;
+        let mut load = spec.loads[spec.loads.len() - 1];
+        for l in &spec.loads {
+            if u < l.weight {
+                load = *l;
+                break;
+            }
+            u -= l.weight;
+        }
+        let mut rng = root.split(1 + device as u64);
+        let cell = (device % spec.cells) as u32;
+        let mut push = |t_s: f64| {
+            let at_ns = (t_s * 1e9) as u64;
+            if at_ns < horizon_ns {
+                subs.push(Submission {
+                    at_ns,
+                    device: device as u32,
+                    cell,
+                    archetype: load.archetype,
+                });
+            }
+        };
+        match load.arrival {
+            Arrival::Poisson { rate_hz } => {
+                if rate_hz > 0.0 {
+                    let mut t = rng.next_exp(rate_hz);
+                    while t < spec.duration_s {
+                        push(t);
+                        t += rng.next_exp(rate_hz);
+                    }
+                }
+            }
+            Arrival::Bursty { rate_hz, mean_on_s, mean_off_s } => {
+                if rate_hz > 0.0 {
+                    // Start in a random phase of the off period so bursts
+                    // are not population-synchronized.
+                    let mut t = rng.next_f64() * mean_off_s;
+                    while t < spec.duration_s {
+                        let on_end = t + rng.next_exp(1.0 / mean_on_s.max(1e-9));
+                        let mut a = t + rng.next_exp(rate_hz);
+                        while a < on_end && a < spec.duration_s {
+                            push(a);
+                            a += rng.next_exp(rate_hz);
+                        }
+                        t = on_end + rng.next_exp(1.0 / mean_off_s.max(1e-9));
+                    }
+                }
+            }
+        }
+    }
+    subs.sort_by_key(|s| (s.at_ns, s.device));
+    subs
+}
+
+/// FNV-1a fingerprint of a schedule's exact bytes (`at_ns`, `device`,
+/// `cell`, archetype index).
+pub fn schedule_digest(schedule: &[Submission]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for b in bytes {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    };
+    for s in schedule {
+        eat(&s.at_ns.to_le_bytes());
+        eat(&s.device.to_le_bytes());
+        eat(&s.cell.to_le_bytes());
+        eat(&[s.archetype.class_index() as u8, s.archetype.anchor_width() as u8]);
+    }
+    h
+}
+
+// --------------------------------------------------------------- installation
+
+/// Handle to the installed `(archetype, cell)` app grid.
+#[derive(Debug, Clone)]
+pub struct PopulationApps {
+    pub cells: usize,
+}
+
+impl PopulationApps {
+    /// The app name of an `(archetype, cell)` pair — alphanumeric only,
+    /// like every other app name in the repo.
+    pub fn app_name(archetype: Archetype, cell: u32) -> String {
+        format!("pop{}{}", archetype.name(), cell)
+    }
+}
+
+/// Table-2-style YAML for one archetype's chain at one cell.
+fn app_yaml(archetype: Archetype, cell: u32) -> String {
+    let stages = archetype.stages();
+    let mut y = format!(
+        "application: {}\nentrypoint: {}\ndag:\n",
+        PopulationApps::app_name(archetype, cell),
+        stages[0].0
+    );
+    for (i, (name, nodetype, _)) in stages.iter().enumerate() {
+        y.push_str(&format!("  - name: {name}\n"));
+        if i > 0 {
+            y.push_str(&format!("    dependencies: {}\n", stages[i - 1].0));
+        }
+        y.push_str(&format!(
+            "    affinity:\n      nodetype: {nodetype}\n      affinitytype: {}\n",
+            if i == 0 { "data" } else { "function" }
+        ));
+        y.push_str(&format!("    reduce: {}\n", if i == 0 { "auto" } else { "1" }));
+    }
+    y
+}
+
+/// Register every archetype's stub handlers and configure + deploy one app
+/// per `(archetype, cell)`. `cell_boxes[c]` lists cell `c`'s device-hosting
+/// resources (the entry stage anchors on the first
+/// [`Archetype::anchor_width`] of them — wrapping never duplicates an
+/// anchor, it just narrows the fan-out on small cells).
+///
+/// Handlers sleep their stage's virtual service time on the coordinator's
+/// clock and return an empty output list; all observable load is therefore
+/// engine queueing + virtual service, not host CPU.
+pub fn install_population(
+    faas: &Arc<EdgeFaaS>,
+    executor: &Arc<NativeExecutor>,
+    cell_boxes: &[Vec<ResourceId>],
+) -> anyhow::Result<PopulationApps> {
+    for archetype in Archetype::ALL {
+        for (stage, _, service_s) in archetype.stages() {
+            let clock = Arc::clone(faas.clock());
+            let s = *service_s;
+            executor.register(&format!("img/pop-{}-{stage}", archetype.name()), move |_: &[u8]| {
+                clock.sleep(s);
+                Ok(br#"{"outputs":[]}"#.to_vec())
+            });
+        }
+        for (cell, boxes) in cell_boxes.iter().enumerate() {
+            anyhow::ensure!(!boxes.is_empty(), "cell {cell} has no device boxes");
+            let cell = cell as u32;
+            let anchors: Vec<ResourceId> =
+                boxes.iter().copied().take(archetype.anchor_width()).collect();
+            let entry = archetype.stages()[0].0;
+            let mut data = HashMap::new();
+            data.insert(entry.to_string(), anchors);
+            faas.configure_application(&app_yaml(archetype, cell), &data)?;
+            let packages: HashMap<String, FunctionPackage> = archetype
+                .stages()
+                .iter()
+                .map(|(s, _, _)| {
+                    (
+                        s.to_string(),
+                        FunctionPackage { code: format!("img/pop-{}-{s}", archetype.name()) },
+                    )
+                })
+                .collect();
+            faas.deploy_application(&PopulationApps::app_name(archetype, cell), &packages)?;
+        }
+    }
+    Ok(PopulationApps { cells: cell_boxes.len() })
+}
+
+// ------------------------------------------------------------------- running
+
+/// How to replay a schedule.
+pub struct RunConfig {
+    /// Pace submissions with this registered actor (SimClock populations).
+    /// `None` paces with the coordinator clock's plain `sleep` — correct
+    /// under `VirtualClock` (instant) and `RealClock` (real time).
+    pub pacer: Option<SimActor>,
+    /// Submit every archetype without its deadline (determinism runs:
+    /// which runs miss a deadline is timing-dependent).
+    pub strip_deadlines: bool,
+    /// Refresh the monitoring snapshot (one liveness sweep) every this
+    /// many *virtual* seconds along the schedule; 0 disables.
+    pub sweep_every_s: f64,
+    /// Wall-clock budget for collecting stragglers after the last
+    /// submission; runs still unfinished are reported as `hung`.
+    pub drain_timeout_s: f64,
+}
+
+impl RunConfig {
+    /// Measured mode: deadlines live, periodic sweeps.
+    pub fn measured(pacer: Option<SimActor>) -> RunConfig {
+        RunConfig { pacer, strip_deadlines: false, sweep_every_s: 5.0, drain_timeout_s: 300.0 }
+    }
+
+    /// Determinism mode: no deadlines, no sweeps; pair with raised
+    /// backpressure bounds (`set_backpressure`) so nothing is shed and the
+    /// outcome digest is shard-count- and run-to-run-stable.
+    pub fn determinism(pacer: Option<SimActor>) -> RunConfig {
+        RunConfig { pacer, strip_deadlines: true, sweep_every_s: 0.0, drain_timeout_s: 300.0 }
+    }
+}
+
+/// Per-QoS-class outcome counters (row i = class rank i: 0 Realtime,
+/// 1 Interactive, 2 Batch).
+#[derive(Debug, Clone, Default)]
+pub struct ClassReport {
+    pub submitted: usize,
+    /// Completed successfully; `e2e_s` holds their engine-clock
+    /// end-to-end latencies (virtual seconds under a virtual clock).
+    pub completed: usize,
+    pub e2e_s: Vec<f64>,
+    /// Refused at submission (`EngineError::Saturated`).
+    pub saturated: usize,
+    /// Admitted, then evicted by a higher-priority submission.
+    pub shed: usize,
+    /// Missed their QoS deadline.
+    pub deadline_missed: usize,
+    /// Failed typed with a dead resource (liveness drain, no survivor).
+    pub resource_dead: usize,
+    /// Any other failure.
+    pub failed: usize,
+}
+
+/// What a replayed population did.
+#[derive(Debug, Clone, Default)]
+pub struct PopulationReport {
+    pub per_class: [ClassReport; 3],
+    /// Fingerprint of the schedule that was replayed.
+    pub schedule_digest: u64,
+    /// Fold (in submission order) of every outcome + firing order.
+    pub firing_digest: u64,
+    /// Wall seconds spent in the submission phase.
+    pub submit_wall_s: f64,
+    /// Wall seconds for the whole replay including straggler collection.
+    pub wall_s: f64,
+    /// Virtual seconds from first pace to last collected completion.
+    pub virtual_makespan_s: f64,
+    /// Runs whose record disappeared before an outcome was observed
+    /// (bounded finished-run retention; 0 in a healthy replay).
+    pub lost: usize,
+    /// Runs still unfinished when `drain_timeout_s` expired (0 = the
+    /// population never hangs).
+    pub hung: usize,
+}
+
+impl PopulationReport {
+    pub fn submitted(&self) -> usize {
+        self.per_class.iter().map(|c| c.submitted).sum()
+    }
+
+    pub fn completed(&self) -> usize {
+        self.per_class.iter().map(|c| c.completed).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Outcome {
+    Pending,
+    Done { duration: f64, firing: Vec<String> },
+    Saturated,
+    Rejected(String),
+    Missed,
+    Shed,
+    Dead,
+    Failed(String),
+    Lost,
+    Hung,
+}
+
+fn fold_digest(h: &mut u64, bytes: &[u8]) {
+    for b in bytes {
+        *h ^= *b as u64;
+        *h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+}
+
+/// Replay `schedule` against a coordinator where [`install_population`]
+/// has run. Consumes each run's engine record as it completes (callers
+/// must not `wait_workflow` these runs themselves). Returns the folded
+/// report; never blocks longer than the schedule + `drain_timeout_s`.
+pub fn run_population(
+    faas: &Arc<EdgeFaaS>,
+    schedule: &[Submission],
+    cfg: RunConfig,
+) -> PopulationReport {
+    let clock = Arc::clone(faas.clock());
+    // Completed runs stream into this queue from an engine-event
+    // subscriber that consumes (`take_run`) each record the moment its
+    // `RunCompleted` fires — the engine's finished-run retention is
+    // bounded, so deferring collection to the end would lose early runs.
+    type Collected = Arc<Mutex<Vec<(RunId, RunStatus)>>>;
+    let collected: Collected = Arc::new(Mutex::new(Vec::new()));
+    {
+        let collected = Arc::clone(&collected);
+        faas.on_engine_event(move |faas, ev| {
+            if let EngineEvent::RunCompleted { run, .. } = ev {
+                match faas.take_run(*run) {
+                    // A prior population's subscriber (or a racing waiter)
+                    // may have consumed it, or it may still be mid-flight
+                    // (impossible after RunCompleted, but harmless): only
+                    // terminal statuses are collected.
+                    None | Some(RunStatus::Running) => {}
+                    Some(st) => collected.lock().unwrap().push((*run, st)),
+                }
+            }
+        });
+    }
+
+    let wall0 = Instant::now();
+    let v0 = clock.now();
+    let mut outcomes: Vec<Outcome> = vec![Outcome::Pending; schedule.len()];
+    let mut run_of: Vec<Option<RunId>> = vec![None; schedule.len()];
+    let mut index_of: HashMap<RunId, usize> = HashMap::new();
+    let mut next_sweep =
+        if cfg.sweep_every_s > 0.0 { Some(v0 + cfg.sweep_every_s) } else { None };
+
+    let pace_to = |target: f64| {
+        let now = clock.now();
+        if target > now {
+            match &cfg.pacer {
+                Some(actor) => actor.sleep(target - now),
+                None => clock.sleep(target - now),
+            }
+        }
+    };
+    let drain = |outcomes: &mut Vec<Outcome>, index_of: &HashMap<RunId, usize>| {
+        let batch: Vec<(RunId, RunStatus)> = std::mem::take(&mut *collected.lock().unwrap());
+        for (run, st) in batch {
+            let Some(&i) = index_of.get(&run) else { continue };
+            if !matches!(outcomes[i], Outcome::Pending) {
+                continue;
+            }
+            outcomes[i] = match st {
+                RunStatus::Done(res) => {
+                    Outcome::Done { duration: res.duration, firing: res.firing_order }
+                }
+                RunStatus::DeadlineExceeded => Outcome::Missed,
+                RunStatus::Failed(msg) if msg.contains("shed under backpressure") => {
+                    Outcome::Shed
+                }
+                RunStatus::Failed(msg) if msg.contains("ResourceDead") => Outcome::Dead,
+                RunStatus::Failed(msg) => Outcome::Failed(msg),
+                RunStatus::Running => unreachable!("filtered by the subscriber"),
+            };
+        }
+    };
+
+    // Submission phase: pace the virtual clock along the schedule,
+    // submitting each run at its arrival time and sweeping the monitor on
+    // its virtual cadence.
+    for (i, sub) in schedule.iter().enumerate() {
+        let at = v0 + sub.at_ns as f64 / 1e9;
+        while let Some(sweep_at) = next_sweep {
+            if sweep_at > at {
+                break;
+            }
+            pace_to(sweep_at);
+            faas.refresh_monitor_snapshot();
+            next_sweep = Some(sweep_at + cfg.sweep_every_s);
+        }
+        pace_to(at);
+        let app = PopulationApps::app_name(sub.archetype, sub.cell);
+        match faas.submit_workflow_qos(
+            &app,
+            &HashMap::new(),
+            sub.archetype.qos(cfg.strip_deadlines),
+        ) {
+            Ok(run) => {
+                run_of[i] = Some(run);
+                index_of.insert(run, i);
+            }
+            Err(EngineError::Saturated { .. }) => outcomes[i] = Outcome::Saturated,
+            Err(EngineError::Rejected(msg)) => outcomes[i] = Outcome::Rejected(msg),
+        }
+        drain(&mut outcomes, &index_of);
+    }
+    // Let virtual time free-run past the pacer: in-flight service sleeps
+    // drain at event speed.
+    if let Some(actor) = &cfg.pacer {
+        actor.release();
+    }
+    let submit_wall_s = wall0.elapsed().as_secs_f64();
+
+    // Straggler collection: bounded wall time, short waits so collection
+    // keeps pace with completions.
+    let drain_deadline = Instant::now() + std::time::Duration::from_secs_f64(cfg.drain_timeout_s);
+    loop {
+        drain(&mut outcomes, &index_of);
+        let next_pending = (0..schedule.len())
+            .find(|&i| matches!(outcomes[i], Outcome::Pending) && run_of[i].is_some());
+        let Some(i) = next_pending else { break };
+        if Instant::now() >= drain_deadline {
+            for o in outcomes.iter_mut() {
+                if matches!(o, Outcome::Pending) {
+                    *o = Outcome::Hung;
+                }
+            }
+            break;
+        }
+        let run = run_of[i].expect("filtered above");
+        match faas.wait_workflow(run, 0.25) {
+            Ok(res) => {
+                outcomes[i] =
+                    Outcome::Done { duration: res.duration, firing: res.firing_order }
+            }
+            Err(WaitError::Timeout { .. }) => {}
+            Err(WaitError::DeadlineExceeded { .. }) => outcomes[i] = Outcome::Missed,
+            Err(WaitError::ResourceDead { .. }) => outcomes[i] = Outcome::Dead,
+            Err(WaitError::RunFailed { message, .. }) => {
+                outcomes[i] = if message.contains("shed under backpressure") {
+                    Outcome::Shed
+                } else {
+                    Outcome::Failed(message)
+                };
+            }
+            // The subscriber consumed it between our drain and this wait
+            // (next drain records it) — or it was evicted unobserved.
+            Err(WaitError::UnknownRun { .. }) => {
+                drain(&mut outcomes, &index_of);
+                if matches!(outcomes[i], Outcome::Pending) {
+                    outcomes[i] = Outcome::Lost;
+                }
+            }
+        }
+    }
+    drain(&mut outcomes, &index_of);
+
+    // Fold the report in submission order.
+    let mut report = PopulationReport {
+        schedule_digest: schedule_digest(schedule),
+        ..PopulationReport::default()
+    };
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for (sub, outcome) in schedule.iter().zip(&outcomes) {
+        let class = &mut report.per_class[sub.archetype.class_index()];
+        class.submitted += 1;
+        let tag: u8 = match outcome {
+            Outcome::Pending => unreachable!("every outcome is terminal after collection"),
+            Outcome::Done { duration, firing } => {
+                class.completed += 1;
+                class.e2e_s.push(*duration);
+                for f in firing {
+                    fold_digest(&mut h, f.as_bytes());
+                }
+                1
+            }
+            Outcome::Saturated => {
+                class.saturated += 1;
+                2
+            }
+            Outcome::Rejected(_) | Outcome::Failed(_) => {
+                class.failed += 1;
+                3
+            }
+            Outcome::Missed => {
+                class.deadline_missed += 1;
+                4
+            }
+            Outcome::Shed => {
+                class.shed += 1;
+                5
+            }
+            Outcome::Dead => {
+                class.resource_dead += 1;
+                6
+            }
+            Outcome::Lost => {
+                report.lost += 1;
+                7
+            }
+            Outcome::Hung => {
+                report.hung += 1;
+                8
+            }
+        };
+        fold_digest(&mut h, &[tag]);
+    }
+    report.firing_digest = h;
+    report.submit_wall_s = submit_wall_s;
+    report.wall_s = wall0.elapsed().as_secs_f64();
+    report.virtual_makespan_s = clock.now() - v0;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_and_seed_sensitive() {
+        let spec = PopulationSpec::standard(42, 500, 4, 120.0);
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a, b, "same spec must generate byte-identical schedules");
+        assert_eq!(schedule_digest(&a), schedule_digest(&b));
+        let other = generate(&PopulationSpec::standard(43, 500, 4, 120.0));
+        assert_ne!(
+            schedule_digest(&a),
+            schedule_digest(&other),
+            "different seeds must diverge"
+        );
+        assert!(!a.is_empty(), "the standard mix produces load");
+    }
+
+    #[test]
+    fn schedule_is_sorted_in_horizon_and_cell_mapped() {
+        let spec = PopulationSpec::standard(7, 300, 5, 60.0);
+        let subs = generate(&spec);
+        let horizon = (spec.duration_s * 1e9) as u64;
+        for w in subs.windows(2) {
+            assert!((w[0].at_ns, w[0].device) <= (w[1].at_ns, w[1].device), "sorted");
+        }
+        for s in &subs {
+            assert!(s.at_ns < horizon);
+            assert!((s.device as usize) < spec.devices);
+            assert_eq!(s.cell, s.device % spec.cells as u32);
+        }
+    }
+
+    #[test]
+    fn load_scales_linearly_with_devices() {
+        let small = generate(&PopulationSpec::standard(11, 200, 4, 60.0)).len();
+        let large = generate(&PopulationSpec::standard(11, 2000, 4, 60.0)).len();
+        let ratio = large as f64 / small.max(1) as f64;
+        assert!(
+            (5.0..20.0).contains(&ratio),
+            "10x devices ≈ 10x submissions, got ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn archetype_yaml_parses_and_stays_chain_shaped() {
+        for archetype in Archetype::ALL {
+            let yaml = app_yaml(archetype, 3);
+            let parsed = crate::util::yaml::parse(&yaml).expect("yaml parses");
+            let cfg = crate::coordinator::AppConfig::from_yaml(&parsed).expect("valid app");
+            assert_eq!(cfg.application, PopulationApps::app_name(archetype, 3));
+            // Chain: every non-entry stage depends on exactly the previous.
+            let stages = archetype.stages();
+            for (i, (name, _, _)) in stages.iter().enumerate().skip(1) {
+                let f = cfg.function(name).expect("stage present");
+                assert_eq!(f.dependencies, vec![stages[i - 1].0.to_string()]);
+            }
+        }
+    }
+}

@@ -712,6 +712,78 @@ fn chaos_outcome_is_identical_across_engine_shard_counts() {
 }
 
 #[test]
+fn killing_a_tenth_of_a_1k_fleet_mid_population_never_hangs() {
+    use edgefaas::workloads::{generate, PopulationSpec};
+
+    // Liveness at harness scale (ISSUE 8, satellite c): a 1k-resource
+    // fleet serving a seeded population loses 10% of its nodes mid-run.
+    // Every submission must either complete or fail *typed*
+    // (`WaitError::ResourceDead`) — no run may hang, and the survivors
+    // must carry the large majority of the population.
+    const FLEET: usize = 1000;
+    const APPS: usize = 50;
+    let bed = chaos_bed(FLEET);
+    bed.faas.set_backpressure(1_000_000, 1_000_000);
+    let gate = Gate::new();
+    // 50 single-anchor apps spread over the fleet: anchors 0, 20, ...,
+    // 980. The kill below takes out resources 0..100, i.e. 5 of the 50
+    // anchors — their populations lose every candidate.
+    for c in 0..APPS {
+        let anchor = bed.resources[c * (FLEET / APPS)];
+        let g = if c == 0 { Some((anchor, Arc::clone(&gate))) } else { None };
+        fanout_app(&bed, &format!("pop{c}"), &[anchor], g);
+    }
+    bed.faas.refresh_monitor_snapshot();
+
+    // A seeded population mapped onto the apps: device `d` lives in cell
+    // `d % APPS`, and each submission targets its cell's app.
+    let schedule = generate(&PopulationSpec::standard(0xC0FFEE, FLEET, APPS, 20.0));
+    assert!(schedule.len() >= 100, "population too small: {}", schedule.len());
+    let half = schedule.len() / 2;
+    let mut runs: Vec<RunId> = Vec::new();
+
+    // Park one pop0 handler on its (soon-dead) anchor so the kill lands
+    // with work genuinely in flight, then submit the first half.
+    runs.push(bed.faas.submit_workflow("pop0", &HashMap::new()).unwrap());
+    while gate.entered.load(Ordering::SeqCst) == 0 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    for sub in &schedule[..half] {
+        runs.push(bed.faas.submit_workflow(&format!("pop{}", sub.cell), &HashMap::new()).unwrap());
+    }
+
+    // Kill 10% of the fleet and keep submitting before the detector has
+    // seen anything — dead-anchor dispatches must be classified by the
+    // batch path's direct probe, not a lucky sweep ordering.
+    for h in &bed.handles[..FLEET / 10] {
+        h.kill();
+    }
+    for sub in &schedule[half..] {
+        runs.push(bed.faas.submit_workflow(&format!("pop{}", sub.cell), &HashMap::new()).unwrap());
+    }
+    // Now let the lease detector walk the victims to Dead (1 miss =
+    // Suspect, 3 = Dead) and drain their queues.
+    for _ in 0..3 {
+        bed.faas.refresh_monitor_snapshot();
+    }
+    gate.release();
+
+    let (mut completed, mut dead) = (0usize, 0usize);
+    for run in runs {
+        match bed.faas.wait_workflow(run, 120.0) {
+            Ok(_) => completed += 1,
+            Err(WaitError::ResourceDead { .. }) => dead += 1,
+            Err(other) => panic!("run neither completed nor failed typed: {other:?}"),
+        }
+    }
+    assert!(dead >= 1, "five sole anchors died: some runs must fail typed");
+    assert!(
+        completed * 10 >= (completed + dead) * 8,
+        "survivors must carry the large majority: {completed} completed, {dead} dead"
+    );
+}
+
+#[test]
 fn unregister_of_a_busy_resource_is_refused_with_live_runs() {
     let bed = chaos_bed(2);
     let blocker = bed.resources[0];

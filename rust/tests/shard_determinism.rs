@@ -2,8 +2,9 @@
 //! concurrency-structure change, so a mixed-QoS submission sequence must
 //! produce byte-identical outputs and firing orders at every shard count —
 //! `{1, 4, 16}` (1 = the old single-lock layout, 16 = fully sharded) —
-//! under both the wall clock and the simnet virtual clock, with
-//! per-resource invocation batching on and off, for both paper workflows.
+//! under the wall clock, the simnet virtual clock and the discrete-event
+//! `SimClock`, with per-resource invocation batching on and off, for both
+//! paper workflows.
 //!
 //! Also the ISSUE's starvation regression at shards=16: strict priority
 //! plus per-shard queues must not let a Realtime run starve 64 Batch runs
@@ -131,6 +132,11 @@ fn assert_shard_invariant(
     for (label, clock_of) in [
         ("wall", (|| Arc::new(RealClock::new()) as Arc<dyn Clock>) as fn() -> Arc<dyn Clock>),
         ("virtual", || Arc::new(VirtualClock::new()) as Arc<dyn Clock>),
+        // The discrete-event clock with no registered actors free-runs to
+        // each earliest sleeper, so it drops into the same harness
+        // unchanged — the suite is the SimClock/VirtualClock equivalence
+        // proof on the paper workflows.
+        ("sim", || Arc::new(edgefaas::simnet::SimClock::new()) as Arc<dyn Clock>),
     ] {
         for batching in [true, false] {
             let reference =
