@@ -1,7 +1,7 @@
 //! Ablation — workflow concurrency and dispatch overhead through the
 //! execution engine.
 //!
-//! Eight sections:
+//! Nine sections:
 //!
 //! 1. **Wall clock**: throughput of 1 / 4 / 16 / 64 concurrent runs of a
 //!    two-stage workflow (2 IoT generators -> 1 edge reducer) whose stages
@@ -70,23 +70,39 @@
 //!    (asserted non-smoke). Written to `BENCH_liveness.json` (override
 //!    with `BENCH_LIVENESS_OUT`).
 //!
+//! 9. **Fault plane (goodput under wire faults)**: a 16-resource bed where
+//!    every resource is a real HTTP pair (FaaS gateway + metrics exporter)
+//!    behind an `HttpHandle`, and the seeded fault injector resets a
+//!    configurable fraction of requests on the wire. Goodput (fraction of
+//!    16-instance runs completing) and per-run p50/p99 at fault rates
+//!    0/1/5/10%, with the handle's budgeted retries on vs off — plus
+//!    time-to-Suspect for a fully black-holed resource, detected from live
+//!    traffic (data-path lease evidence) vs by the periodic sweeper alone.
+//!    Written to `BENCH_faults.json` (override with `BENCH_FAULTS_OUT`).
+//!    Non-smoke asserts >= 90% goodput at a 5% fault rate with retries on,
+//!    and that data-path detection beats the sweep interval.
+//!
 //! `ABLATION_SMOKE=1` runs a tiny-N smoke pass (CI): only the hot-path,
-//! mixed-QoS, contention, control-plane, network and liveness sections, no
-//! throughput assertions, but all six JSON artifacts are still produced.
+//! mixed-QoS, contention, control-plane, network, liveness and fault-plane
+//! sections, no throughput assertions, but all seven JSON artifacts are
+//! still produced.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use edgefaas::backup::DurableKv;
 use edgefaas::bench_harness::{measure, Stats, Table};
 use edgefaas::cluster::faas::{BatchCall, Executor, FaasBackend, NativeExecutor};
+use edgefaas::cluster::gateway::FaasGateway;
 use edgefaas::cluster::spec::ResourceSpec;
 use edgefaas::coordinator::functions::FunctionPackage;
+use edgefaas::coordinator::handle::HttpHandle;
 use edgefaas::coordinator::scheduler::FunctionCreation;
 use edgefaas::coordinator::{
     Affinity, AffinityType, EdgeFaaS, FunctionConfig, LocalHandle, Priority, QoS, Reduce,
-    Requirements, ResourceHandle, ResourceId, RunId, ENGINE_SHARDS,
+    Requirements, ResourceHandle, ResourceId, RunId, VerbBudgets, ENGINE_SHARDS,
 };
 use edgefaas::monitor::scrape::MetricsGateway;
 use edgefaas::monitor::{LeaseState, MetricsRegistry, ResourceUsage};
@@ -96,6 +112,7 @@ use edgefaas::simnet::topology::mbps;
 use edgefaas::simnet::{Clock, RealClock, Tier, Topology, VirtualClock};
 use edgefaas::testbed::{paper_testbed, TestBed};
 use edgefaas::util::bytes::Bytes;
+use edgefaas::util::faults::{self, FaultKind, FaultRule};
 use edgefaas::util::http::{
     self as http, Handler as HttpHandler, Request as HttpRequest, Response as HttpResponse,
     Server as HttpServer, ServerOptions,
@@ -533,6 +550,179 @@ fn churn_round(n: usize, sweep_s: f64) -> (f64, f64, f64, f64) {
         "re-admitted resource must rejoin the candidate set"
     );
     (detect, drain_wall, mttr, readmit)
+}
+
+/// Section 9: `n` resources as real HTTP pairs — a [`FaasGateway`] and a
+/// [`MetricsGateway`] exporter behind an [`HttpHandle`] with budgeted
+/// verbs — hosting one anchor of the `live` fan-out app each, so the
+/// seeded fault injector can corrupt the wire itself. Returns the
+/// coordinator, resource ids, gateway + exporter addresses, and the
+/// servers (kept alive by the caller).
+fn faults_wire_bed(
+    n: usize,
+    retry: bool,
+) -> (Arc<EdgeFaaS>, Vec<ResourceId>, Vec<String>, Vec<String>, Vec<HttpServer>) {
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    let mut topo = Topology::new();
+    let hub = topo.add_node("hub", Tier::Edge);
+    let nodes: Vec<usize> = (0..n)
+        .map(|i| {
+            let leaf = topo.add_node(format!("wire-{i}"), Tier::Iot);
+            topo.add_link(leaf, hub, 0.001, mbps(100.0));
+            leaf
+        })
+        .collect();
+    let executor = Arc::new(NativeExecutor::new());
+    executor.register("img/live", |_: &[u8]| {
+        let mut out = Json::obj();
+        out.set("outputs", Json::Arr(vec![]));
+        Ok(out.to_string().into_bytes())
+    });
+    let faas = Arc::new(EdgeFaaS::with_parts(topo, DurableKv::ephemeral(), Arc::clone(&clock)));
+    // Tight budgets: a black-holed peer costs hundreds of milliseconds,
+    // not the 60 s production defaults. `retry` is the bench's on/off arm.
+    let budgets = VerbBudgets {
+        connect: Duration::from_millis(500),
+        control: Duration::from_secs(5),
+        usage: Duration::from_millis(300),
+        object: Duration::from_secs(5),
+        invoke: Duration::from_millis(800),
+        retries: 2,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(5),
+        retry,
+    };
+    let mut resources = Vec::new();
+    let (mut faas_addrs, mut metrics_addrs) = (Vec::new(), Vec::new());
+    let mut servers = Vec::new();
+    for (i, node) in nodes.into_iter().enumerate() {
+        let spec = ResourceSpec::paper_iot(&format!("wire{i}:8080"));
+        let backend = Arc::new(FaasBackend::new(
+            spec.clone(),
+            Arc::clone(&executor) as Arc<dyn Executor>,
+            Arc::clone(&clock),
+        ));
+        let gateway = Arc::new(FaasGateway::new(backend)) as Arc<dyn HttpHandler>;
+        let gw = HttpServer::bind(0, 4, gateway).expect("bind faas gateway");
+        let registry = Arc::new(MetricsRegistry::new());
+        registry.record_usage(&ResourceUsage {
+            mem_total: spec.total_memory(),
+            gpus_total: spec.total_gpus(),
+            ..ResourceUsage::default()
+        });
+        let metrics = MetricsGateway::serve(registry).expect("bind metrics exporter");
+        let handle = HttpHandle::new(gw.addr(), spec.pwd.as_str(), "", "", "", metrics.addr())
+            .with_budgets(budgets.clone());
+        let id = faas.register(spec, Arc::new(handle) as Arc<dyn ResourceHandle>, node).unwrap();
+        resources.push(id);
+        faas_addrs.push(gw.addr());
+        metrics_addrs.push(metrics.addr());
+        servers.extend([gw, metrics]);
+    }
+    let mut data = HashMap::new();
+    data.insert("f".to_string(), resources.clone());
+    faas.configure_application(LIVE_YAML, &data).unwrap();
+    faas.deploy_function("live", "f", &FunctionPackage { code: "img/live".into() }).unwrap();
+    (faas, resources, faas_addrs, metrics_addrs, servers)
+}
+
+/// One goodput cell: `runs` sequential 16-instance runs under `rate`
+/// injected resets on every gateway link, retries per the bed's budgets.
+/// A monitor sweep between runs plays the periodic sweeper, healing
+/// data-path Suspect leases so the cell measures goodput, not churn.
+/// Returns (completed, failed, completed-run wall latencies).
+fn fault_cell(rate: f64, retry: bool, runs: usize, seed: u64) -> (usize, usize, Vec<f64>) {
+    let (faas, _resources, faas_addrs, _metrics_addrs, _servers) = faults_wire_bed(16, retry);
+    faas.refresh_monitor_snapshot();
+    faults::injector().install(seed);
+    if rate > 0.0 {
+        for (i, addr) in faas_addrs.iter().enumerate() {
+            faults::injector().add_rule(
+                FaultRule::new(addr, FaultKind::ErrorRate { rate }).tagged(format!("flaky-{i}")),
+            );
+        }
+    }
+    let (mut completed, mut failed) = (0usize, 0usize);
+    let mut latencies = Vec::new();
+    for _ in 0..runs {
+        let t = std::time::Instant::now();
+        match faas.submit_workflow("live", &HashMap::new()) {
+            Err(_) => failed += 1,
+            Ok(run) => match faas.wait_workflow(run, 120.0) {
+                Ok(_) => {
+                    completed += 1;
+                    latencies.push(t.elapsed().as_secs_f64());
+                }
+                Err(_) => failed += 1,
+            },
+        }
+        faas.refresh_monitor_snapshot();
+    }
+    faults::injector().clear();
+    (completed, failed, latencies)
+}
+
+/// Section 9, detection arm: a 4-resource wire bed with one resource
+/// fully black-holed (invokes *and* scrapes). Returns wall seconds from
+/// the fault to the victim's lease first reading Suspect — once driven by
+/// live traffic (the data-path miss reporter), once left to a periodic
+/// sweeper alone.
+fn time_to_suspect(sweep_interval_s: f64) -> (f64, f64) {
+    let suspect = |faas: &Arc<EdgeFaaS>, victim: ResourceId| {
+        faas.monitor_snapshot()
+            .lease_of(victim)
+            .map(|l| l.state == LeaseState::Suspect)
+            .unwrap_or(false)
+    };
+    let partition = |faas_addr: &str, metrics_addr: &str| {
+        let inj = faults::injector();
+        inj.install(0xDA7A);
+        inj.add_rule(FaultRule::new(faas_addr, FaultKind::BlackHole).tagged("victim-faas"));
+        inj.add_rule(FaultRule::new(metrics_addr, FaultKind::BlackHole).tagged("victim-metrics"));
+    };
+
+    // Data-path arm: submit one run; its faulted instance reports the miss
+    // long before any sweep fires.
+    let (faas, resources, faas_addrs, metrics_addrs, _servers) = faults_wire_bed(4, true);
+    faas.refresh_monitor_snapshot();
+    let victim = resources[1];
+    partition(&faas_addrs[1], &metrics_addrs[1]);
+    let t0 = std::time::Instant::now();
+    let run = faas.submit_workflow("live", &HashMap::new()).unwrap();
+    while !suspect(&faas, victim) {
+        assert!(t0.elapsed().as_secs_f64() < 30.0, "data-path evidence never arrived");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let data_path_s = t0.elapsed().as_secs_f64();
+    faas.wait_workflow(run, 120.0).expect("the faulted instance must relocate");
+    faults::injector().clear();
+
+    // Sweep-only arm: identical partition, no traffic — detection waits
+    // for the sweeper's next tick.
+    let (faas, resources, faas_addrs, metrics_addrs, _servers) = faults_wire_bed(4, true);
+    faas.refresh_monitor_snapshot();
+    let victim = resources[1];
+    partition(&faas_addrs[1], &metrics_addrs[1]);
+    let t0 = std::time::Instant::now();
+    while !suspect(&faas, victim) {
+        assert!(t0.elapsed().as_secs_f64() < 30.0, "sweeps never saw the partition");
+        std::thread::sleep(Duration::from_secs_f64(sweep_interval_s));
+        faas.refresh_monitor_snapshot();
+    }
+    let sweep_only_s = t0.elapsed().as_secs_f64();
+    faults::injector().clear();
+    (data_path_s, sweep_only_s)
+}
+
+/// p99 over raw samples (Stats carries p50/p95; the fault plane's tail
+/// target is p99).
+fn p99_of(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[((v.len() - 1) as f64 * 0.99).round() as usize]
 }
 
 /// Section 7: `clients` threads each issue `reqs` echo requests against
@@ -1130,6 +1320,90 @@ fn main() {
     std::fs::write(&liveness_path, ldoc.to_string()).expect("write liveness bench json");
     println!("wrote {liveness_path} (throughput kept under sweeper: {:.1}%)", lease_ratio * 100.0);
 
+    // --- Section 9: fault plane ------------------------------------------
+    // Goodput of 16-instance fan-out runs over real sockets while the
+    // seeded injector resets a fraction of gateway requests, with the
+    // handle's idempotent-retry budget on vs off; plus time-to-Suspect for
+    // a fully partitioned resource, from live traffic vs sweeps alone.
+    println!("\nfault plane: goodput under injected wire faults (real clock, real sockets)");
+    let fault_rates = [0.0, 0.01, 0.05, 0.10];
+    let runs_per_cell = if smoke { 5 } else { 40 };
+    let mut fault_rows = Vec::new();
+    for (ri, &rate) in fault_rates.iter().enumerate() {
+        for &retry in &[true, false] {
+            let seed = 0xFA5EED + (ri * 2 + retry as usize) as u64;
+            let (completed, failed, lat) = fault_cell(rate, retry, runs_per_cell, seed);
+            let goodput = completed as f64 / runs_per_cell as f64;
+            let tail = p99_of(&lat);
+            fault_rows.push((rate, retry, goodput, completed, failed, Stats::of(lat), tail));
+        }
+    }
+    let mut tf = Table::new(
+        "Fault plane: goodput at injected wire-fault rates (16 resources, 16-instance runs)",
+        &["fault rate", "retries", "goodput", "completed", "failed", "run p50", "run p99"],
+    );
+    for &(rate, retry, goodput, completed, failed, ref lat, tail) in &fault_rows {
+        tf.row(&[
+            format!("{:.0}%", rate * 100.0),
+            if retry { "on" } else { "off" }.to_string(),
+            format!("{:.1}%", goodput * 100.0),
+            completed.to_string(),
+            failed.to_string(),
+            Stats::fmt(lat.p50),
+            Stats::fmt(tail),
+        ]);
+    }
+    tf.print();
+
+    let fault_sweep_s = if smoke { 0.5 } else { 2.0 };
+    let (data_path_s, sweep_only_s) = time_to_suspect(fault_sweep_s);
+    println!(
+        "time-to-Suspect for a fully partitioned resource: {data_path_s:.3}s from live \
+         traffic vs {sweep_only_s:.3}s under a {fault_sweep_s:.1}s sweeper alone"
+    );
+
+    let mut fdoc = Json::obj();
+    let mut fseries = Vec::new();
+    for &(rate, retry, goodput, completed, failed, ref lat, tail) in &fault_rows {
+        let mut l = Json::obj();
+        l.set("p50_s", lat.p50.into())
+            .set("p95_s", lat.p95.into())
+            .set("mean_s", lat.mean.into())
+            .set("p99_s", tail.into());
+        let mut o = Json::obj();
+        o.set("fault_rate", rate.into())
+            .set("retries", retry.into())
+            .set("goodput", goodput.into())
+            .set("completed", (completed as u64).into())
+            .set("failed", (failed as u64).into())
+            .set("latency", l);
+        fseries.push(o);
+    }
+    let mut fdetect = Json::obj();
+    fdetect
+        .set("sweep_interval_s", fault_sweep_s.into())
+        .set("data_path_s", data_path_s.into())
+        .set("sweep_only_s", sweep_only_s.into());
+    fdoc.set("bench", "faults".into())
+        .set("clock", "real".into())
+        .set("smoke", smoke.into())
+        .set("runs_per_cell", (runs_per_cell as u64).into())
+        .set("rates", Json::Arr(fault_rates.iter().map(|&r| Json::Num(r)).collect()))
+        .set("series", Json::Arr(fseries))
+        .set("time_to_suspect", fdetect);
+    let faults_path =
+        std::env::var("BENCH_FAULTS_OUT").unwrap_or_else(|_| "BENCH_faults.json".to_string());
+    std::fs::write(&faults_path, fdoc.to_string()).expect("write faults bench json");
+    let goodput_5pct_retries = fault_rows
+        .iter()
+        .find(|&&(rate, retry, ..)| (rate - 0.05).abs() < 1e-9 && retry)
+        .map(|&(_, _, g, ..)| g)
+        .unwrap_or(f64::NAN);
+    println!(
+        "wrote {faults_path} (goodput at 5% faults with retries: {:.1}%)",
+        goodput_5pct_retries * 100.0
+    );
+
     if !smoke && cfg!(target_os = "linux") {
         assert!(
             net_speedup >= 2.0,
@@ -1197,5 +1471,16 @@ fn main() {
                  {detect:.1}s > {bound:.1}s"
             );
         }
+        assert!(
+            goodput_5pct_retries >= 0.9,
+            "idempotent retries must hold >=90% goodput at a 5% wire-fault rate: \
+             {:.1}% < 90%",
+            goodput_5pct_retries * 100.0
+        );
+        assert!(
+            data_path_s < sweep_only_s,
+            "data-path evidence must reach Suspect before the sweeper: \
+             {data_path_s:.3}s >= {sweep_only_s:.3}s"
+        );
     }
 }

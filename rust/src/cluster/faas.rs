@@ -121,12 +121,18 @@ pub struct BatchCall {
     pub name: String,
     pub payload: Bytes,
     pub attempt: u64,
+    /// Client-side deadline budget for the batch carrying this call (the
+    /// engine derives it from the run's QoS deadline). Never serialized on
+    /// the wire — wire-decoded calls carry `None` — it only shapes the
+    /// sending [`HttpHandle`](crate::coordinator::handle::HttpHandle)'s
+    /// request deadline.
+    pub budget: Option<std::time::Duration>,
 }
 
 impl BatchCall {
     /// An undeduplicated call (attempt 0) — the pre-liveness behaviour.
     pub fn new(name: impl Into<String>, payload: Bytes) -> Self {
-        BatchCall { name: name.into(), payload, attempt: 0 }
+        BatchCall { name: name.into(), payload, attempt: 0, budget: None }
     }
 }
 
@@ -502,7 +508,8 @@ mod tests {
         });
         b.deploy(fspec("echo", "img/echo")).unwrap();
         b.deploy(fspec("fail", "img/fail")).unwrap();
-        let call = BatchCall { name: "echo".into(), payload: Bytes::from("x"), attempt: 7 };
+        let call =
+            BatchCall { name: "echo".into(), payload: Bytes::from("x"), attempt: 7, budget: None };
         let first = b.invoke_batch(std::slice::from_ref(&call));
         assert_eq!(first[0].as_ref().unwrap().0, &b"x"[..]);
         // Same attempt id again: replay, no second execution.
@@ -510,7 +517,8 @@ mod tests {
         assert_eq!(second[0].as_ref().unwrap().0, &b"x"[..]);
         assert_eq!(b.describe("echo").unwrap().invocations, 1, "executed once");
         // Failures replay too — at-most-once covers both outcomes.
-        let boom = BatchCall { name: "fail".into(), payload: Bytes::new(), attempt: 8 };
+        let boom =
+            BatchCall { name: "fail".into(), payload: Bytes::new(), attempt: 8, budget: None };
         let e1 = b.invoke_batch(std::slice::from_ref(&boom));
         assert!(e1[0].is_err());
         let e2 = b.invoke_batch(&[boom]);

@@ -181,6 +181,7 @@ impl FaasGateway {
                     payload: Bytes::from(entry.req_str("payload")?),
                     // Optional: old peers send no attempt (0 = no dedup).
                     attempt: entry.get("attempt").and_then(Json::as_u64).unwrap_or(0),
+                    budget: None,
                 })
             });
             match parsed {
@@ -383,7 +384,7 @@ fn decode_binary_calls(body: &Bytes) -> anyhow::Result<Vec<BatchCall>> {
         let attempt = if v2 { r.u64()? } else { 0 };
         let name = std::str::from_utf8(r.blob()?)?.to_string();
         let (start, end) = r.blob_range()?;
-        calls.push(BatchCall { name, payload: body.slice(start, end), attempt });
+        calls.push(BatchCall { name, payload: body.slice(start, end), attempt, budget: None });
     }
     r.done()?;
     Ok(calls)
@@ -458,8 +459,11 @@ fn parse_function_spec(v: &Json) -> anyhow::Result<FunctionSpec> {
 }
 
 /// Client helpers for talking to a FaasGateway (used by the coordinator).
+/// Every verb has a `_with` variant taking an explicit
+/// [`RequestOptions`](crate::util::http::RequestOptions) budget; the plain
+/// form runs under the client defaults.
 pub mod client {
-    use crate::util::http;
+    use crate::util::http::{self, RequestOptions};
     use crate::util::json::Json;
 
     /// Deploy a function through a resource gateway.
@@ -472,6 +476,21 @@ pub mod client {
         gpus: u32,
         labels: &[(String, String)],
     ) -> anyhow::Result<()> {
+        deploy_with(addr, pwd, name, image, memory, gpus, labels, RequestOptions::default())
+    }
+
+    /// [`deploy`] under an explicit request budget.
+    #[allow(clippy::too_many_arguments)]
+    pub fn deploy_with(
+        addr: &str,
+        pwd: &str,
+        name: &str,
+        image: &str,
+        memory: u64,
+        gpus: u32,
+        labels: &[(String, String)],
+        opts: RequestOptions,
+    ) -> anyhow::Result<()> {
         let mut body = Json::obj();
         body.set("name", name.into())
             .set("image", image.into())
@@ -482,12 +501,13 @@ pub mod client {
             l.set(k, v.as_str().into());
         }
         body.set("labels", l);
-        let resp = http::request(
+        let resp = http::request_with(
             addr,
             "POST",
             "/system/functions",
             &[("Authorization", pwd), ("Content-Type", "application/json")],
             body.to_string().as_bytes(),
+            opts,
         )?;
         if !resp.ok() {
             anyhow::bail!("deploy {name} on {addr}: {} {}", resp.status, resp.body_str().unwrap_or(""));
@@ -497,14 +517,25 @@ pub mod client {
 
     /// Remove a function through a resource gateway.
     pub fn remove(addr: &str, pwd: &str, name: &str) -> anyhow::Result<()> {
+        remove_with(addr, pwd, name, RequestOptions::default())
+    }
+
+    /// [`remove`] under an explicit request budget.
+    pub fn remove_with(
+        addr: &str,
+        pwd: &str,
+        name: &str,
+        opts: RequestOptions,
+    ) -> anyhow::Result<()> {
         let mut body = Json::obj();
         body.set("name", name.into());
-        let resp = http::request(
+        let resp = http::request_with(
             addr,
             "DELETE",
             "/system/functions",
             &[("Authorization", pwd), ("Content-Type", "application/json")],
             body.to_string().as_bytes(),
+            opts,
         )?;
         if !resp.ok() {
             anyhow::bail!("remove {name} on {addr}: {}", resp.status);
@@ -514,7 +545,13 @@ pub mod client {
 
     /// Describe a function; returns the raw JSON document.
     pub fn describe(addr: &str, name: &str) -> anyhow::Result<Json> {
-        let resp = http::get(addr, &format!("/system/function/{name}"))?;
+        describe_with(addr, name, RequestOptions::default())
+    }
+
+    /// [`describe`] under an explicit request budget.
+    pub fn describe_with(addr: &str, name: &str, opts: RequestOptions) -> anyhow::Result<Json> {
+        let resp =
+            http::request_with(addr, "GET", &format!("/system/function/{name}"), &[], &[], opts)?;
         if !resp.ok() {
             anyhow::bail!("describe {name} on {addr}: {}", resp.status);
         }
@@ -528,7 +565,24 @@ pub mod client {
         name: &str,
         payload: &[u8],
     ) -> anyhow::Result<(crate::util::bytes::Bytes, f64)> {
-        let resp = http::post_bytes(addr, &format!("/function/{name}"), payload)?;
+        invoke_with(addr, name, payload, RequestOptions::default())
+    }
+
+    /// [`invoke`] under an explicit request budget.
+    pub fn invoke_with(
+        addr: &str,
+        name: &str,
+        payload: &[u8],
+        opts: RequestOptions,
+    ) -> anyhow::Result<(crate::util::bytes::Bytes, f64)> {
+        let resp = http::request_with(
+            addr,
+            "POST",
+            &format!("/function/{name}"),
+            &[("Content-Type", "application/octet-stream")],
+            payload,
+            opts,
+        )?;
         if !resp.ok() {
             anyhow::bail!(
                 "invoke {name} on {addr}: {} {}",
@@ -565,12 +619,22 @@ pub mod client {
         addr: &str,
         calls: &[crate::cluster::faas::BatchCall],
     ) -> anyhow::Result<BatchAttempt> {
-        let resp = http::request(
+        invoke_batch_binary_with(addr, calls, RequestOptions::default())
+    }
+
+    /// [`invoke_batch_binary`] under an explicit request budget.
+    pub fn invoke_batch_binary_with(
+        addr: &str,
+        calls: &[crate::cluster::faas::BatchCall],
+        opts: RequestOptions,
+    ) -> anyhow::Result<BatchAttempt> {
+        let resp = http::request_with(
             addr,
             "POST",
             "/function/_batch",
             &[("Content-Type", super::BATCH_BINARY_CONTENT_TYPE)],
             &super::encode_binary_calls(calls),
+            opts,
         )?;
         if resp.ok() {
             return Ok(BatchAttempt::Ran(super::decode_binary_results(
@@ -597,6 +661,15 @@ pub mod client {
         addr: &str,
         calls: &[crate::cluster::faas::BatchCall],
     ) -> anyhow::Result<BatchAttempt> {
+        invoke_batch_json_with(addr, calls, RequestOptions::default())
+    }
+
+    /// [`invoke_batch_json`] under an explicit request budget.
+    pub fn invoke_batch_json_with(
+        addr: &str,
+        calls: &[crate::cluster::faas::BatchCall],
+        opts: RequestOptions,
+    ) -> anyhow::Result<BatchAttempt> {
         if !calls.iter().all(|c| std::str::from_utf8(&c.payload).is_ok()) {
             return Ok(BatchAttempt::Refused);
         }
@@ -614,12 +687,13 @@ pub mod client {
         }
         let mut body = Json::obj();
         body.set("calls", Json::Arr(entries));
-        let resp = http::request(
+        let resp = http::request_with(
             addr,
             "POST",
             "/function/_batch",
             &[("Content-Type", "application/json")],
             body.to_string().as_bytes(),
+            opts,
         )?;
         if resp.status == 404 || resp.status == 400 {
             // Refused before execution: the verb is unknown to this
@@ -691,7 +765,12 @@ pub mod client {
 
     /// List deployed functions.
     pub fn list(addr: &str) -> anyhow::Result<Vec<String>> {
-        let resp = http::get(addr, "/system/functions")?;
+        list_with(addr, RequestOptions::default())
+    }
+
+    /// [`list`] under an explicit request budget.
+    pub fn list_with(addr: &str, opts: RequestOptions) -> anyhow::Result<Vec<String>> {
+        let resp = http::request_with(addr, "GET", "/system/functions", &[], &[], opts)?;
         if !resp.ok() {
             anyhow::bail!("list on {addr}: {}", resp.status);
         }
@@ -856,6 +935,7 @@ mod tests {
             name: "f".into(),
             payload: Bytes::copy_from(&[0u8, 159, 146, 150]),
             attempt: 42,
+            budget: None,
         }];
         let encoded = encode_binary_calls(&calls);
         // Wire cost: 8 header bytes plus 16 framing bytes per call (8 of
@@ -953,8 +1033,12 @@ mod tests {
         let server = FaasGateway::serve(Arc::clone(&backend), 2).unwrap();
         let addr = server.addr();
         client::deploy(&addr, "edgepwd", "echo", "img/echo", 1 << 20, 0, &[]).unwrap();
-        let calls =
-            vec![BatchCall { name: "echo".into(), payload: Bytes::from("hi"), attempt: 11 }];
+        let calls = vec![BatchCall {
+            name: "echo".into(),
+            payload: Bytes::from("hi"),
+            attempt: 11,
+            budget: None,
+        }];
         // Binary leg, twice with the same attempt id: one execution.
         for _ in 0..2 {
             match client::invoke_batch_binary(&addr, &calls).unwrap() {

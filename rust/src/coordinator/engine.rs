@@ -655,6 +655,13 @@ pub(super) struct EngineCore {
     max_pending_runs: AtomicUsize,
     /// Backpressure: queued instances allowed per resource.
     max_queued_per_resource: AtomicUsize,
+    /// Lease-aware backpressure: registered resources and the subset whose
+    /// lease is schedulable, maintained by the monitoring plane after each
+    /// snapshot publish. While part of the fleet is Suspect/Dead, the
+    /// pending-run bound scales down proportionally (0/0 = no lease
+    /// information yet: the static bound applies unscaled).
+    fleet_total: AtomicUsize,
+    fleet_schedulable: AtomicUsize,
     /// Active shard prefix (1..=ENGINE_SHARDS).
     active_shards: AtomicUsize,
     /// Pending (admitted, not yet finished) runs — the pending-run
@@ -735,6 +742,8 @@ impl EngineCore {
             batch_window_ns: AtomicU64::new(0),
             max_pending_runs: AtomicUsize::new(DEFAULT_MAX_PENDING_RUNS),
             max_queued_per_resource: AtomicUsize::new(DEFAULT_MAX_QUEUED_PER_RESOURCE),
+            fleet_total: AtomicUsize::new(0),
+            fleet_schedulable: AtomicUsize::new(0),
             active_shards: AtomicUsize::new(ENGINE_SHARDS),
             pending_runs: AtomicUsize::new(0),
             queued_instances: AtomicUsize::new(0),
@@ -760,6 +769,14 @@ impl EngineCore {
 
     fn active(&self) -> usize {
         self.active_shards.load(Ordering::Relaxed).clamp(1, ENGINE_SHARDS)
+    }
+
+    /// Publish the fleet census for lease-aware admission (called by the
+    /// monitoring plane after every snapshot publish, and by
+    /// register/unregister).
+    pub(super) fn set_fleet(&self, total: usize, schedulable: usize) {
+        self.fleet_total.store(total, Ordering::Relaxed);
+        self.fleet_schedulable.store(schedulable.min(total), Ordering::Relaxed);
     }
 
     fn dispatch_shard_of(&self, rid: ResourceId) -> usize {
@@ -945,6 +962,19 @@ fn patch_envelope_resource(envelope: &Bytes, target: ResourceId) -> Bytes {
     }
 }
 
+/// Remaining deadline budget of a task at `now` (engine-clock seconds), as
+/// a client-side request budget for remote handles. `u64::MAX` (no run
+/// deadline) carries `None` — the handle's default invoke budget applies.
+/// Expired-but-dispatched tasks clamp to 1ns so the wire call fails fast
+/// rather than inheriting a 60s default.
+fn remaining_budget(deadline_ns: u64, now_s: f64) -> Option<std::time::Duration> {
+    if deadline_ns == u64::MAX {
+        return None;
+    }
+    let now_ns = (now_s.max(0.0) * 1e9) as u64;
+    Some(std::time::Duration::from_nanos(deadline_ns.saturating_sub(now_ns).max(1)))
+}
+
 /// Execute one placement instance: call the resource gateway with the
 /// prebuilt envelope and parse the outputs (the invoker's wire format).
 ///
@@ -965,6 +995,7 @@ fn run_instance(faas: &EdgeFaaS, t: &InstanceTask) -> anyhow::Result<InstanceRes
                 name: qname,
                 payload: t.envelope.clone(),
                 attempt: t.attempt,
+                budget: remaining_budget(t.deadline_ns, faas.clock.now()),
             }];
             let mut results = reg.handle.invoke_batch(&calls);
             anyhow::ensure!(
@@ -1282,7 +1313,21 @@ impl EdgeFaaS {
                 *demand.entry(rid).or_insert(0) += 1;
             }
         }
-        let max_runs = eng.max_pending_runs.load(Ordering::Relaxed).max(1);
+        // Lease-aware backpressure: while part of the fleet is
+        // unschedulable (Suspect/Dead/Recovering leases), the pending-run
+        // bound scales with the surviving fraction — the shrunken fleet
+        // cannot absorb the full bound, so shedding (Batch first, via the
+        // loop below) engages early instead of queues deepening toward
+        // partitioned resources. 0/0 means the monitoring plane has not
+        // published a census yet; the static bound applies unscaled.
+        let base_max_runs = eng.max_pending_runs.load(Ordering::Relaxed).max(1);
+        let fleet_total = eng.fleet_total.load(Ordering::Relaxed);
+        let fleet_sched = eng.fleet_schedulable.load(Ordering::Relaxed);
+        let max_runs = if fleet_total > 0 && fleet_sched < fleet_total {
+            (base_max_runs * fleet_sched / fleet_total).max(1)
+        } else {
+            base_max_runs
+        };
         let max_queued = eng.max_queued_per_resource.load(Ordering::Relaxed).max(1);
         let mut events = Vec::new();
         let mut notify_shards: Vec<usize> = Vec::new();
@@ -2011,6 +2056,7 @@ impl EdgeFaaS {
                                 name: EdgeFaaS::qualified(&t.app, &t.function),
                                 payload: t.envelope.clone(),
                                 attempt: t.attempt,
+                                budget: remaining_budget(t.deadline_ns, now),
                             }
                         })
                         .collect();
@@ -2094,6 +2140,19 @@ impl EdgeFaaS {
             (0..tasks.len()).any(|i| matches!(&outcomes[i], Some(Err(_))));
         if !any_failed {
             return Vec::new();
+        }
+        // Data-path liveness: a connectivity-class failure (connect
+        // refused/timed out, deadline, reset, truncation — never an
+        // application error or HTTP status) on the invoke path is itself
+        // lease evidence. Report it as a missed lease *before* reading the
+        // snapshot, so a partitioned resource turns Suspect from live
+        // traffic — between detector sweeps — and the infra gate below sees
+        // the degraded lease immediately.
+        let conn_failed = (0..tasks.len()).any(|i| {
+            matches!(&outcomes[i], Some(Err(e)) if super::handle::is_connectivity_error(e))
+        });
+        if conn_failed {
+            self.report_data_path_miss(rid);
         }
         let snap = self.monitor_snapshot();
         let lease_bad =
@@ -3069,6 +3128,47 @@ dag:
             cv.notify_all();
         }
         for id in [b0, b1, rt] {
+            b.faas.wait_workflow(id, 30.0).unwrap();
+        }
+    }
+
+    #[test]
+    fn admission_bound_scales_with_the_schedulable_fleet() {
+        let b = chain_bed(Arc::new(RealClock::new()));
+        b.faas.set_backpressure(4, 1024);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        {
+            let gate = Arc::clone(&gate);
+            b.executor.register("img/gen", move |_: &[u8]| {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                Ok(br#"{"outputs":[]}"#.to_vec())
+            });
+        }
+        b.executor.register("img/sum", |_: &[u8]| Ok(br#"{"outputs":[]}"#.to_vec()));
+        // Half the fleet unschedulable: the bound of 4 scales to 4*2/4 = 2.
+        b.faas.engine.set_fleet(4, 2);
+        let batch_qos = QoS::class(Priority::Batch);
+        let b0 = b.faas.submit_workflow_qos("chain", &entry_for("b0"), batch_qos).unwrap();
+        let b1 = b.faas.submit_workflow_qos("chain", &entry_for("b1"), batch_qos).unwrap();
+        match b.faas.submit_workflow_qos("chain", &entry_for("b2"), batch_qos) {
+            Err(EngineError::Saturated { pending_runs, max_pending_runs, .. }) => {
+                assert_eq!((pending_runs, max_pending_runs), (2, 2));
+            }
+            other => panic!("expected lease-scaled Saturated, got {other:?}"),
+        }
+        // Full fleet again: the same submission is admitted.
+        b.faas.engine.set_fleet(4, 4);
+        let b2 = b.faas.submit_workflow_qos("chain", &entry_for("b2"), batch_qos).unwrap();
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        for id in [b0, b1, b2] {
             b.faas.wait_workflow(id, 30.0).unwrap();
         }
     }

@@ -10,17 +10,34 @@
 //!   simulated hot loop) and by tests.
 //! * [`HttpHandle`] — real loopback HTTP against the per-resource gateways,
 //!   exactly the wire path the paper describes. Used by the examples.
+//!
+//! # Budgets and retries (the edge-link contract)
+//!
+//! Every [`HttpHandle`] verb runs under a per-verb deadline from its
+//! [`VerbBudgets`]: control verbs get seconds, the `/metrics` liveness
+//! probe a tight budget, object transfers more, and invokes derive their
+//! deadline from the run's QoS deadline when one rides the
+//! [`BatchCall::budget`] field. **Idempotent** verbs (deploy, list,
+//! describe, usage, get_object, list_objects, stored_bytes) retry
+//! connection-level failures ([`HttpError::is_connectivity`]) with bounded
+//! exponential backoff + jitter. Invokes never blindly retry: the batch
+//! path re-sends **at most once**, and only when every call carries a
+//! nonzero attempt id — the backend's attempt-dedup cache then replays any
+//! entry that already executed, preserving at-most-once execution.
 
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::cluster::faas::{FaasBackend, FunctionSpec};
 pub use crate::cluster::faas::BatchCall;
 use crate::cluster::gateway::client as faas_client;
 use crate::monitor::metrics::ResourceUsage;
+use crate::monitor::scrape::ScrapeFailure;
 use crate::objstore::gateway::client as store_client;
 use crate::objstore::ObjectStore;
 use crate::util::bytes::Bytes;
+use crate::util::http::{HttpError, RequestOptions};
 
 /// Abstract per-resource operations the coordinator needs.
 ///
@@ -170,11 +187,67 @@ impl ResourceHandle for LocalHandle {
     }
 }
 
+/// Per-verb deadline and retry budgets for an [`HttpHandle`] (see the
+/// module docs for the contract). Defaults suit a healthy LAN; chaos tests
+/// and edge deployments tighten them.
+#[derive(Debug, Clone)]
+pub struct VerbBudgets {
+    /// Budget for establishing any new connection.
+    pub connect: Duration,
+    /// Control-plane verbs: deploy, remove, list, describe, bucket admin.
+    pub control: Duration,
+    /// The `/metrics` usage scrape — the liveness probe, kept tight so a
+    /// partitioned resource costs one short budget per probe.
+    pub usage: Duration,
+    /// Object-store transfers (put/get/remove/list objects).
+    pub object: Duration,
+    /// Invoke and batch invoke, when no QoS deadline rides the call.
+    pub invoke: Duration,
+    /// Extra attempts for idempotent verbs after a connectivity failure.
+    pub retries: u32,
+    /// First backoff; doubles per retry up to [`VerbBudgets::backoff_cap`],
+    /// then multiplied by a jitter factor in `[0.5, 1.5)`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Master switch: `false` disables every handle-level retry (the
+    /// fault bench's "retries off" arm).
+    pub retry: bool,
+}
+
+impl Default for VerbBudgets {
+    fn default() -> VerbBudgets {
+        VerbBudgets {
+            connect: Duration::from_secs(2),
+            control: Duration::from_secs(10),
+            usage: Duration::from_secs(3),
+            object: Duration::from_secs(30),
+            invoke: Duration::from_secs(60),
+            retries: 2,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(1),
+            retry: true,
+        }
+    }
+}
+
+/// Connection-level evidence the peer or path is unhealthy — the only
+/// failures idempotent retries (and the data-path liveness reporter) act
+/// on. Application-level failures (HTTP status, malformed body) mean the
+/// peer is alive and are never retried here.
+pub fn is_connectivity_error(e: &anyhow::Error) -> bool {
+    if let Some(h) = HttpError::of(e) {
+        return h.is_connectivity();
+    }
+    matches!(e.downcast_ref::<ScrapeFailure>(), Some(ScrapeFailure::Unreachable { .. }))
+}
+
 /// Loopback-HTTP handle: the full REST wire path.
 ///
 /// Construct with [`HttpHandle::new`]: the handle carries a private peer
 /// capability cache alongside the address fields, so struct-literal
-/// construction (possible in older revisions) no longer compiles.
+/// construction (possible in older revisions) no longer compiles. Budgets
+/// default to [`VerbBudgets::default`]; override with
+/// [`HttpHandle::with_budgets`].
 pub struct HttpHandle {
     /// OpenFaaS-style gateway address (host:port).
     pub faas_addr: String,
@@ -185,6 +258,8 @@ pub struct HttpHandle {
     pub secret_key: String,
     /// Prometheus endpoint ("" = no monitoring; usage() returns default).
     pub prometheus_addr: String,
+    /// Per-verb deadline/retry budgets.
+    budgets: VerbBudgets,
     /// Peer capability cache: cleared the first time the gateway refuses
     /// the binary `_batch` frame format pre-execution (a JSON-only peer),
     /// so later batches skip the doomed binary round trip instead of
@@ -208,7 +283,80 @@ impl HttpHandle {
             access_key: access_key.into(),
             secret_key: secret_key.into(),
             prometheus_addr: prometheus_addr.into(),
+            budgets: VerbBudgets::default(),
             binary_batch_ok: std::sync::atomic::AtomicBool::new(true),
+        }
+    }
+
+    /// Replace the per-verb budgets (builder style).
+    pub fn with_budgets(mut self, budgets: VerbBudgets) -> HttpHandle {
+        self.budgets = budgets;
+        self
+    }
+
+    /// The configured budgets.
+    pub fn budgets(&self) -> &VerbBudgets {
+        &self.budgets
+    }
+
+    fn opts(&self, deadline: Duration) -> RequestOptions {
+        RequestOptions::budget(self.budgets.connect, deadline)
+    }
+
+    /// Exponential backoff for retry `attempt` (0-based), jittered by a
+    /// factor in `[0.5, 1.5)` so synchronized retry storms decorrelate.
+    /// Timing-only: jitter never feeds outcome determinism.
+    fn backoff(&self, attempt: u32) -> Duration {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static NONCE: AtomicU64 = AtomicU64::new(0);
+        let exp = self
+            .budgets
+            .backoff_base
+            .saturating_mul(1u32 << attempt.min(10))
+            .min(self.budgets.backoff_cap);
+        let mut rng = crate::util::rng::SplitMix64::seeded(
+            NONCE.fetch_add(1, Ordering::Relaxed) ^ 0x5bf0_3635,
+        );
+        Duration::from_nanos((exp.as_nanos() as f64 * (0.5 + rng.next_f64())) as u64)
+    }
+
+    /// Run an idempotent verb, retrying up to `budgets.retries` extra
+    /// times on connectivity failures (only — an HTTP error status means
+    /// the peer answered and is returned as-is).
+    fn retry_idempotent<T>(&self, f: impl Fn() -> anyhow::Result<T>) -> anyhow::Result<T> {
+        let mut attempt = 0u32;
+        loop {
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if !self.budgets.retry
+                        || attempt >= self.budgets.retries
+                        || !is_connectivity_error(&e)
+                    {
+                        return Err(e);
+                    }
+                    std::thread::sleep(self.backoff(attempt));
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    /// Run one `_batch` wire leg with the at-most-once retry: a single
+    /// re-send after a connectivity failure, and only when `dedup_safe`
+    /// (every call carries a nonzero attempt id, so the backend's attempt
+    /// cache replays anything that already executed).
+    fn batch_leg(
+        &self,
+        dedup_safe: bool,
+        f: impl Fn() -> anyhow::Result<faas_client::BatchAttempt>,
+    ) -> anyhow::Result<faas_client::BatchAttempt> {
+        match f() {
+            Err(e) if self.budgets.retry && dedup_safe && is_connectivity_error(&e) => {
+                std::thread::sleep(self.backoff(0));
+                f()
+            }
+            r => r,
         }
     }
 }
@@ -222,17 +370,31 @@ impl ResourceHandle for HttpHandle {
         gpus: u32,
         labels: &[(String, String)],
     ) -> anyhow::Result<()> {
-        faas_client::deploy(&self.faas_addr, &self.pwd, name, image, memory, gpus, labels)
+        // Idempotent: re-deploying the same spec converges, so a lost
+        // reply is safely re-sent.
+        self.retry_idempotent(|| {
+            faas_client::deploy_with(
+                &self.faas_addr,
+                &self.pwd,
+                name,
+                image,
+                memory,
+                gpus,
+                labels,
+                self.opts(self.budgets.control),
+            )
+        })
     }
 
     fn remove(&self, name: &str) -> anyhow::Result<()> {
-        faas_client::remove(&self.faas_addr, &self.pwd, name)
+        faas_client::remove_with(&self.faas_addr, &self.pwd, name, self.opts(self.budgets.control))
     }
 
     fn invoke(&self, name: &str, payload: &Bytes) -> anyhow::Result<(Bytes, f64)> {
         // The client already returns a shared buffer (a window into the
-        // HTTP response); no re-wrap copy.
-        faas_client::invoke(&self.faas_addr, name, payload)
+        // HTTP response); no re-wrap copy. Never retried: the single-call
+        // verb carries no attempt id, so a re-send could double-execute.
+        faas_client::invoke_with(&self.faas_addr, name, payload, self.opts(self.budgets.invoke))
     }
 
     fn invoke_batch(&self, calls: &[BatchCall]) -> Vec<anyhow::Result<(Bytes, f64)>> {
@@ -249,15 +411,33 @@ impl ResourceHandle for HttpHandle {
         // handlers never run twice.
         use crate::cluster::gateway::client::BatchAttempt;
         use std::sync::atomic::Ordering;
+        // The batch deadline is the tightest per-call budget (the engine
+        // derives those from run QoS deadlines); without one, the handle's
+        // invoke budget applies.
+        let batch_budget =
+            calls.iter().filter_map(|c| c.budget).min().unwrap_or(self.budgets.invoke);
+        let opts = self.opts(batch_budget);
+        // At-most-once re-send is only safe when every call is covered by
+        // the backend's attempt-dedup cache (attempt 0 = no dedup).
+        let dedup_safe = !calls.is_empty() && calls.iter().all(|c| c.attempt != 0);
+        // Fan a batch-wide failure out to every entry, keeping the typed
+        // [`HttpError`] payload downcastable per entry — the engine's
+        // data-path liveness reporter classifies these.
         let fail_all = |e: anyhow::Error| -> Vec<anyhow::Result<(Bytes, f64)>> {
+            let typed = crate::util::http::HttpError::of(&e).cloned();
             let msg = e.to_string();
             calls
                 .iter()
-                .map(|_| Err(anyhow::anyhow!("batch invoke failed: {}", msg.clone())))
+                .map(|_| match typed.clone() {
+                    Some(he) => Err(anyhow::Error::new(he).context("batch invoke failed")),
+                    None => Err(anyhow::anyhow!("batch invoke failed: {}", msg.clone())),
+                })
                 .collect()
         };
         if self.binary_batch_ok.load(Ordering::Relaxed) {
-            match faas_client::invoke_batch_binary(&self.faas_addr, calls) {
+            match self.batch_leg(dedup_safe, || {
+                faas_client::invoke_batch_binary_with(&self.faas_addr, calls, opts)
+            }) {
                 Ok(BatchAttempt::Ran(results)) => return results,
                 Ok(BatchAttempt::Refused) => {
                     self.binary_batch_ok.store(false, Ordering::Relaxed);
@@ -265,7 +445,9 @@ impl ResourceHandle for HttpHandle {
                 Err(e) => return fail_all(e),
             }
         }
-        match faas_client::invoke_batch_json(&self.faas_addr, calls) {
+        match self.batch_leg(dedup_safe, || {
+            faas_client::invoke_batch_json_with(&self.faas_addr, calls, opts)
+        }) {
             Ok(BatchAttempt::Ran(results)) => results,
             // Both legs refused pre-execution (e.g. binary payloads
             // against a JSON-only peer): per-call invokes. The single-call
@@ -279,74 +461,114 @@ impl ResourceHandle for HttpHandle {
     }
 
     fn list(&self) -> anyhow::Result<Vec<String>> {
-        faas_client::list(&self.faas_addr)
+        self.retry_idempotent(|| {
+            faas_client::list_with(&self.faas_addr, self.opts(self.budgets.control))
+        })
     }
 
     fn describe(&self, name: &str) -> anyhow::Result<crate::util::json::Json> {
-        faas_client::describe(&self.faas_addr, name)
+        self.retry_idempotent(|| {
+            faas_client::describe_with(&self.faas_addr, name, self.opts(self.budgets.control))
+        })
     }
 
     fn usage(&self) -> anyhow::Result<ResourceUsage> {
         if self.prometheus_addr.is_empty() {
             return Ok(ResourceUsage::default());
         }
-        crate::monitor::scrape::scrape(&self.prometheus_addr)
+        // The liveness probe: tight budget, bounded retries — so one
+        // glitched scrape doesn't mark a resource Suspect, but a
+        // partitioned one fails within a few short budgets.
+        self.retry_idempotent(|| {
+            crate::monitor::scrape::scrape_with(
+                &self.prometheus_addr,
+                self.opts(self.budgets.usage),
+            )
+        })
     }
 
     fn make_bucket(&self, bucket: &str) -> anyhow::Result<()> {
-        store_client::make_bucket(&self.minio_addr, &self.access_key, &self.secret_key, bucket)
+        store_client::make_bucket_with(
+            &self.minio_addr,
+            &self.access_key,
+            &self.secret_key,
+            bucket,
+            self.opts(self.budgets.control),
+        )
     }
 
     fn remove_bucket(&self, bucket: &str) -> anyhow::Result<()> {
-        store_client::remove_bucket(&self.minio_addr, &self.access_key, &self.secret_key, bucket)
+        store_client::remove_bucket_with(
+            &self.minio_addr,
+            &self.access_key,
+            &self.secret_key,
+            bucket,
+            self.opts(self.budgets.control),
+        )
     }
 
     fn put_object(&self, bucket: &str, object: &str, data: Bytes) -> anyhow::Result<()> {
-        store_client::put_object(
+        store_client::put_object_with(
             &self.minio_addr,
             &self.access_key,
             &self.secret_key,
             bucket,
             object,
             &data,
+            self.opts(self.budgets.object),
         )
     }
 
     fn get_object(&self, bucket: &str, object: &str) -> anyhow::Result<Bytes> {
-        store_client::get_object(
-            &self.minio_addr,
-            &self.access_key,
-            &self.secret_key,
-            bucket,
-            object,
-        )
+        self.retry_idempotent(|| {
+            store_client::get_object_with(
+                &self.minio_addr,
+                &self.access_key,
+                &self.secret_key,
+                bucket,
+                object,
+                self.opts(self.budgets.object),
+            )
+        })
     }
 
     fn remove_object(&self, bucket: &str, object: &str) -> anyhow::Result<()> {
-        store_client::remove_object(
+        store_client::remove_object_with(
             &self.minio_addr,
             &self.access_key,
             &self.secret_key,
             bucket,
             object,
+            self.opts(self.budgets.object),
         )
     }
 
     fn list_objects(&self, bucket: &str) -> anyhow::Result<Vec<String>> {
-        store_client::list_objects(&self.minio_addr, &self.access_key, &self.secret_key, bucket)
+        self.retry_idempotent(|| {
+            store_client::list_objects_with(
+                &self.minio_addr,
+                &self.access_key,
+                &self.secret_key,
+                bucket,
+                self.opts(self.budgets.object),
+            )
+        })
     }
 
     fn stored_bytes(&self) -> anyhow::Result<u64> {
         // Sum object sizes across buckets via the REST interface (rides a
         // pooled keep-alive connection like every other client call).
         let mut total = 0u64;
-        let resp = crate::util::http::request(
-            &self.minio_addr,
-            "GET",
-            "/buckets",
-            &[("X-Access-Key", &self.access_key), ("X-Secret-Key", &self.secret_key)],
-            &[],
-        )?;
+        let resp = self.retry_idempotent(|| {
+            crate::util::http::request_with(
+                &self.minio_addr,
+                "GET",
+                "/buckets",
+                &[("X-Access-Key", &self.access_key), ("X-Secret-Key", &self.secret_key)],
+                &[],
+                self.opts(self.budgets.object),
+            )
+        })?;
         if !resp.ok() {
             anyhow::bail!("list buckets: {}", resp.status);
         }
@@ -436,5 +658,89 @@ mod tests {
             "recycled pooled connection must not re-pay the binary probe"
         );
         assert!(server.connections_accepted() >= 2, "the first connection was retired");
+    }
+
+    fn echo_gateway() -> (Server, Arc<FaasBackend>) {
+        let exec = Arc::new(NativeExecutor::new());
+        exec.register("img/echo", |p: &[u8]| Ok(p.to_vec()));
+        let backend = Arc::new(FaasBackend::new(
+            ResourceSpec::paper_edge("unused"),
+            exec as Arc<dyn crate::cluster::faas::Executor>,
+            Arc::new(RealClock::new()),
+        ));
+        let server = FaasGateway::serve(Arc::clone(&backend), 2).unwrap();
+        (server, backend)
+    }
+
+    #[test]
+    fn idempotent_verbs_retry_through_a_transient_refusal() {
+        use crate::util::faults;
+        let _g = faults::test_guard();
+        let (server, backend) = echo_gateway();
+        let addr = server.addr();
+        faults::injector().install(21);
+        faults::injector()
+            .add_rule(faults::FaultRule::new(&addr, faults::FaultKind::ConnectRefused));
+
+        // With retries off, the first refusal is final and typed.
+        let no_retry = HttpHandle::new(addr.clone(), "edgepwd", "", "", "", "").with_budgets(
+            VerbBudgets { retry: false, ..VerbBudgets::default() },
+        );
+        let err = no_retry.deploy("echo", "img/echo", 1 << 20, 0, &[]).unwrap_err();
+        assert!(is_connectivity_error(&err), "refusal is connectivity evidence: {err:#}");
+        assert_eq!(backend.list().len(), 0, "nothing deployed through the fault");
+
+        // With retries on, the link heals mid-backoff and the verb lands.
+        let handle = HttpHandle::new(addr.clone(), "edgepwd", "", "", "", "").with_budgets(
+            VerbBudgets {
+                retries: 20,
+                backoff_base: Duration::from_millis(20),
+                backoff_cap: Duration::from_millis(100),
+                ..VerbBudgets::default()
+            },
+        );
+        let healer = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(250));
+                faults::injector().heal(&addr);
+            })
+        };
+        handle.deploy("echo", "img/echo", 1 << 20, 0, &[]).expect("deploy after heal");
+        healer.join().unwrap();
+        faults::injector().clear();
+        assert_eq!(backend.list(), vec!["echo".to_string()]);
+    }
+
+    #[test]
+    fn batch_budget_derives_from_the_tightest_call_and_fails_fast() {
+        use crate::util::faults;
+        let _g = faults::test_guard();
+        let (server, _backend) = echo_gateway();
+        let addr = server.addr();
+        faas_client::deploy(&addr, "edgepwd", "echo", "img/echo", 1 << 20, 0, &[]).unwrap();
+        faults::injector().install(23);
+        faults::injector().add_rule(faults::FaultRule::new(&addr, faults::FaultKind::BlackHole));
+
+        let handle = HttpHandle::new(addr.clone(), "edgepwd", "", "", "", "").with_budgets(
+            VerbBudgets {
+                backoff_base: Duration::from_millis(10),
+                backoff_cap: Duration::from_millis(20),
+                ..VerbBudgets::default()
+            },
+        );
+        let calls = vec![BatchCall {
+            name: "echo".into(),
+            payload: Bytes::from("hi"),
+            attempt: 41,
+            budget: Some(Duration::from_millis(200)),
+        }];
+        let t0 = std::time::Instant::now();
+        let results = handle.invoke_batch(&calls);
+        faults::injector().clear();
+        assert!(results[0].is_err(), "black-holed batch fails");
+        // Two 200 ms budgets (the at-most-once re-send) plus backoff —
+        // nowhere near the 60 s default the per-call budget replaced.
+        assert!(t0.elapsed() < Duration::from_secs(5), "failed at the budget: {:?}", t0.elapsed());
     }
 }

@@ -71,7 +71,7 @@ pub use engine::{
     EngineError, EngineEvent, EngineStats, Priority, QoS, ResourceBusy, RunId, RunStatus,
     WaitError, ENGINE_SHARDS,
 };
-pub use handle::{LocalHandle, ResourceHandle};
+pub use handle::{LocalHandle, ResourceHandle, VerbBudgets};
 pub use invoker::{InstanceResult, WorkflowResult};
 pub use resource::{EdgeFaaS, ResourceId};
 pub use scheduler::{FunctionCreation, LocalityScheduler, Schedule};

@@ -207,6 +207,7 @@ impl EdgeFaaS {
         self.resources.write().unwrap().insert(id, reg);
         // A new resource can change any placement decision: drop the cache.
         self.invalidate_schedule_cache();
+        self.publish_fleet_census();
         log::info!("registered resource {id} ({})", self.describe_resource(id));
         Ok(id)
     }
@@ -261,6 +262,7 @@ impl EdgeFaaS {
         self.dead_memberships.lock().unwrap().remove(&id);
         // Cached decisions may name the departed resource: drop the cache.
         self.invalidate_schedule_cache();
+        self.publish_fleet_census();
         log::info!("unregistered resource {id}");
         Ok(())
     }
@@ -421,6 +423,7 @@ impl EdgeFaaS {
         }
         let now = self.clock.now();
         let epoch = self.monitor.publish(usage, leases, prev.latencies_arc(), now);
+        self.publish_fleet_census();
         // Transition side effects run after the publish so drain and
         // relocation decisions read the epoch that declared the new state.
         for id in died {
@@ -430,6 +433,67 @@ impl EdgeFaaS {
             self.on_resource_recovered(id);
         }
         epoch
+    }
+
+    /// Data-path liveness evidence: a connectivity-class failure (connect
+    /// refused/timed out, request deadline, reset, truncation — never an
+    /// application error) on live traffic to `id`. Steps that one
+    /// resource's lease exactly as a missed detector sweep would — under
+    /// the same sweep lock, with every other resource's lease and usage
+    /// sample carried forward — and publishes a new snapshot epoch. A
+    /// partitioned resource thus turns Suspect (and, after
+    /// `dead_after` misses, Dead) from the traffic that hit the partition,
+    /// between sweeps, instead of waiting for the detector's next pass.
+    /// `ok = false` can never readmit, so at worst this accelerates what
+    /// the next sweep would conclude; a recovered resource still
+    /// re-admits through the sweep-driven quarantine path.
+    pub fn report_data_path_miss(self: &Arc<Self>, id: ResourceId) {
+        let _sweep = self.sweep_lock.lock().unwrap();
+        // Departed resources carry no lease; nothing to report.
+        if !self.resources.read().unwrap().contains_key(&id) {
+            return;
+        }
+        let cfg = self.liveness_config();
+        let prev = self.monitor.snapshot();
+        let now = self.clock.now();
+        let (lease, transition) = liveness::step(&cfg, prev.lease_of(id), false, now);
+        let mut usage = BTreeMap::new();
+        let mut leases = BTreeMap::new();
+        for (rid, sample) in prev.samples() {
+            usage.insert(rid, sample.clone());
+        }
+        for (rid, l) in prev.leases() {
+            leases.insert(rid, l.clone());
+        }
+        if let Some(sample) = usage.get_mut(&id) {
+            // The miss is visible on the sample too, like a failed scrape.
+            sample.consecutive_failures += 1;
+            sample.last_error = Some("data-path connectivity failure".to_string());
+        }
+        let died = matches!(transition, Some(Transition::Died));
+        leases.insert(id, lease);
+        self.monitor.publish(usage, leases, prev.latencies_arc(), now);
+        self.publish_fleet_census();
+        if died {
+            self.on_resource_dead(id);
+        }
+    }
+
+    /// Recompute the engine's fleet census — registered resources vs the
+    /// subset whose lease is schedulable — feeding lease-aware admission
+    /// ([`super::engine`]'s pending-run bound scales with the schedulable
+    /// fraction). Resources the detector has not seen yet count as
+    /// schedulable.
+    fn publish_fleet_census(&self) {
+        let snap = self.monitor.snapshot();
+        let res = self.resources.read().unwrap();
+        let total = res.len();
+        let schedulable = res
+            .keys()
+            .filter(|id| snap.lease_of(**id).map(|l| l.state.schedulable()).unwrap_or(true))
+            .count();
+        drop(res);
+        self.engine.set_fleet(total, schedulable);
     }
 
     /// Lease transition hook: `id` was just declared Dead by the detector.

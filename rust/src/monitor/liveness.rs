@@ -36,11 +36,25 @@
 //!   candidate memberships restored. A miss during quarantine sends it
 //!   straight back to Dead (no second drain — it was never re-admitted).
 //!
+//! # Evidence sources
+//!
+//! Sweeps are not the only heartbeat. Live traffic reports too: a
+//! connectivity-class failure (connect refused/timed out, request
+//! deadline, reset, truncation — see `util::http::HttpError`) on an
+//! invoke, object transfer, or scrape is fed back as a **data-path miss**
+//! (`EdgeFaaS::report_data_path_miss`), stepping the same state machine
+//! between sweeps. A fully partitioned resource therefore turns Suspect
+//! from the first request that hits the partition — before the detector's
+//! next pass — and repeated data-path misses can mark it Dead outright.
+//! Only sweeps renew a lease (`ok = false` evidence can never readmit),
+//! so data-path reports only ever accelerate detection.
+//!
 //! The state machine itself ([`step`]) is a pure function of (config,
 //! previous lease, sweep outcome, now) so chaos tests can drive it
 //! deterministically under `VirtualClock`; the side effects (drain,
 //! candidate exclusion, relocation, re-admission) live in the coordinator
-//! (`EdgeFaaS::refresh_monitor_snapshot`), keyed off the [`Transition`]s
+//! (`EdgeFaaS::refresh_monitor_snapshot` and
+//! `EdgeFaaS::report_data_path_miss`), keyed off the [`Transition`]s
 //! this module reports.
 
 /// Configuration of the failure detector.

@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::util::http::{get, Handler, Request, Response, Server};
+use crate::util::http::{request_with, Handler, Request, RequestOptions, Response, Server};
 
 use super::metrics::{MetricsRegistry, ResourceUsage};
 
@@ -101,9 +101,15 @@ impl std::error::Error for ScrapeFailure {}
 /// `anyhow::Error`), so the liveness plane's `last_error` distinguishes a
 /// dead box from a confused exporter.
 pub fn scrape(addr: &str) -> anyhow::Result<ResourceUsage> {
-    let resp = get(addr, "/metrics").map_err(|e| ScrapeFailure::Unreachable {
-        addr: addr.to_string(),
-        cause: e.to_string(),
+    scrape_with(addr, RequestOptions::default())
+}
+
+/// [`scrape`] under an explicit request budget — the liveness plane probes
+/// with a tight deadline so a partitioned exporter costs one budget, not a
+/// socket default.
+pub fn scrape_with(addr: &str, opts: RequestOptions) -> anyhow::Result<ResourceUsage> {
+    let resp = request_with(addr, "GET", "/metrics", &[], &[], opts).map_err(|e| {
+        ScrapeFailure::Unreachable { addr: addr.to_string(), cause: e.to_string() }
     })?;
     if !resp.ok() {
         anyhow::bail!(ScrapeFailure::Bad {

@@ -95,15 +95,36 @@ impl Handler for StoreGateway {
 }
 
 /// Client helpers (used by the coordinator's storage virtualization).
+/// Every verb has a `_with` variant taking an explicit
+/// [`RequestOptions`](crate::util::http::RequestOptions) budget; the plain
+/// form runs under the client defaults.
 pub mod client {
-    use crate::util::http;
+    use crate::util::http::{self, RequestOptions};
 
     fn auth<'a>(ak: &'a str, sk: &'a str) -> [(&'a str, &'a str); 2] {
         [("X-Access-Key", ak), ("X-Secret-Key", sk)]
     }
 
     pub fn make_bucket(addr: &str, ak: &str, sk: &str, bucket: &str) -> anyhow::Result<()> {
-        let resp = http::request(addr, "PUT", &format!("/bucket/{bucket}"), &auth(ak, sk), &[])?;
+        make_bucket_with(addr, ak, sk, bucket, RequestOptions::default())
+    }
+
+    /// [`make_bucket`] under an explicit request budget.
+    pub fn make_bucket_with(
+        addr: &str,
+        ak: &str,
+        sk: &str,
+        bucket: &str,
+        opts: RequestOptions,
+    ) -> anyhow::Result<()> {
+        let resp = http::request_with(
+            addr,
+            "PUT",
+            &format!("/bucket/{bucket}"),
+            &auth(ak, sk),
+            &[],
+            opts,
+        )?;
         if !resp.ok() {
             anyhow::bail!("make_bucket {bucket}: {} {}", resp.status, resp.body_str().unwrap_or(""));
         }
@@ -111,7 +132,25 @@ pub mod client {
     }
 
     pub fn remove_bucket(addr: &str, ak: &str, sk: &str, bucket: &str) -> anyhow::Result<()> {
-        let resp = http::request(addr, "DELETE", &format!("/bucket/{bucket}"), &auth(ak, sk), &[])?;
+        remove_bucket_with(addr, ak, sk, bucket, RequestOptions::default())
+    }
+
+    /// [`remove_bucket`] under an explicit request budget.
+    pub fn remove_bucket_with(
+        addr: &str,
+        ak: &str,
+        sk: &str,
+        bucket: &str,
+        opts: RequestOptions,
+    ) -> anyhow::Result<()> {
+        let resp = http::request_with(
+            addr,
+            "DELETE",
+            &format!("/bucket/{bucket}"),
+            &auth(ak, sk),
+            &[],
+            opts,
+        )?;
         if !resp.ok() {
             anyhow::bail!("remove_bucket {bucket}: {} {}", resp.status, resp.body_str().unwrap_or(""));
         }
@@ -126,8 +165,28 @@ pub mod client {
         object: &str,
         data: &[u8],
     ) -> anyhow::Result<()> {
-        let resp =
-            http::request(addr, "PUT", &format!("/object/{bucket}/{object}"), &auth(ak, sk), data)?;
+        put_object_with(addr, ak, sk, bucket, object, data, RequestOptions::default())
+    }
+
+    /// [`put_object`] under an explicit request budget.
+    #[allow(clippy::too_many_arguments)]
+    pub fn put_object_with(
+        addr: &str,
+        ak: &str,
+        sk: &str,
+        bucket: &str,
+        object: &str,
+        data: &[u8],
+        opts: RequestOptions,
+    ) -> anyhow::Result<()> {
+        let resp = http::request_with(
+            addr,
+            "PUT",
+            &format!("/object/{bucket}/{object}"),
+            &auth(ak, sk),
+            data,
+            opts,
+        )?;
         if !resp.ok() {
             anyhow::bail!("put_object {bucket}/{object}: {}", resp.status);
         }
@@ -143,8 +202,26 @@ pub mod client {
         bucket: &str,
         object: &str,
     ) -> anyhow::Result<crate::util::bytes::Bytes> {
-        let resp =
-            http::request(addr, "GET", &format!("/object/{bucket}/{object}"), &auth(ak, sk), &[])?;
+        get_object_with(addr, ak, sk, bucket, object, RequestOptions::default())
+    }
+
+    /// [`get_object`] under an explicit request budget.
+    pub fn get_object_with(
+        addr: &str,
+        ak: &str,
+        sk: &str,
+        bucket: &str,
+        object: &str,
+        opts: RequestOptions,
+    ) -> anyhow::Result<crate::util::bytes::Bytes> {
+        let resp = http::request_with(
+            addr,
+            "GET",
+            &format!("/object/{bucket}/{object}"),
+            &auth(ak, sk),
+            &[],
+            opts,
+        )?;
         if !resp.ok() {
             anyhow::bail!("get_object {bucket}/{object}: {}", resp.status);
         }
@@ -158,12 +235,25 @@ pub mod client {
         bucket: &str,
         object: &str,
     ) -> anyhow::Result<()> {
-        let resp = http::request(
+        remove_object_with(addr, ak, sk, bucket, object, RequestOptions::default())
+    }
+
+    /// [`remove_object`] under an explicit request budget.
+    pub fn remove_object_with(
+        addr: &str,
+        ak: &str,
+        sk: &str,
+        bucket: &str,
+        object: &str,
+        opts: RequestOptions,
+    ) -> anyhow::Result<()> {
+        let resp = http::request_with(
             addr,
             "DELETE",
             &format!("/object/{bucket}/{object}"),
             &auth(ak, sk),
             &[],
+            opts,
         )?;
         if !resp.ok() {
             anyhow::bail!("remove_object {bucket}/{object}: {}", resp.status);
@@ -177,7 +267,25 @@ pub mod client {
         sk: &str,
         bucket: &str,
     ) -> anyhow::Result<Vec<String>> {
-        let resp = http::request(addr, "GET", &format!("/objects/{bucket}"), &auth(ak, sk), &[])?;
+        list_objects_with(addr, ak, sk, bucket, RequestOptions::default())
+    }
+
+    /// [`list_objects`] under an explicit request budget.
+    pub fn list_objects_with(
+        addr: &str,
+        ak: &str,
+        sk: &str,
+        bucket: &str,
+        opts: RequestOptions,
+    ) -> anyhow::Result<Vec<String>> {
+        let resp = http::request_with(
+            addr,
+            "GET",
+            &format!("/objects/{bucket}"),
+            &auth(ak, sk),
+            &[],
+            opts,
+        )?;
         if !resp.ok() {
             anyhow::bail!("list_objects {bucket}: {}", resp.status);
         }

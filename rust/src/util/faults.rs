@@ -1,0 +1,482 @@
+//! Deterministic, seeded network fault injection for the HTTP client.
+//!
+//! Edge links are the defining constraint of edge FaaS: partitions,
+//! half-open paths, tail latency, resets. This module is the **fault
+//! plane's substrate** — a process-wide injector the client side of
+//! [`super::http`] consults at its connect and exchange hooks, so every
+//! coordinator verb, `_batch` invoke, object transfer, and `/metrics`
+//! scrape can be faulted *without touching a single call site*. The
+//! server side is never involved: faults model the wire, not the peer.
+//!
+//! # Rules
+//!
+//! A [`FaultRule`] matches a destination address (and optionally the
+//! current *source label*, see [`set_source`]) and carries one
+//! [`FaultKind`]:
+//!
+//! * [`FaultKind::ConnectRefused`] — new connections to the peer fail
+//!   immediately, the way a crashed process's OS refuses a SYN.
+//! * [`FaultKind::BlackHole`] — a partition: connects hang until the
+//!   caller's connect budget, established-connection exchanges hang until
+//!   the request deadline. Pair two asymmetric rules (or rely on the
+//!   source label) to model one-way partitions.
+//! * [`FaultKind::Latency`] — adds `base ± jitter` to every matching
+//!   exchange (jitter drawn deterministically, see below).
+//! * [`FaultKind::TruncateBody`] — the response is cut mid-body: the
+//!   client sees the status line arrive and then the connection die
+//!   ([`super::http::HttpError::Truncated`]).
+//! * [`FaultKind::ErrorRate`] — each matching request independently
+//!   fails with probability `rate`, surfaced as a connection reset
+//!   *after* the request may have reached the peer
+//!   ([`super::http::HttpError::Reset`] — ambiguous, so only budgeted
+//!   retry policies recover it, never the transport's silent
+//!   before-response retry).
+//!
+//! # Determinism
+//!
+//! Probabilistic draws (error rates, latency jitter) must be
+//! **interleaving-independent**: the same fault seed must produce the
+//! same verdict for the same logical request whether the engine runs 1
+//! dispatch shard or 16, and whether a test bed's ephemeral ports came
+//! out 40001 or 55317. Draws are therefore keyed by a *stateless request
+//! identity*: an FNV-1a hash of `(rule tag, source label, method, path,
+//! body)` mixed with the seed — never the raw address, never arrival
+//! order. A per-identity occurrence counter (the only mutable state)
+//! gives a *re-sent identical request* (a retry) a fresh draw while
+//! keeping every draw independent of thread timing. The `tag` defaults
+//! to the rule's address but tests give logical names ("res3") so beds
+//! rebuilt on new ports replay identically.
+//!
+//! Disabled by default: [`active`] is a single relaxed atomic load, so
+//! the production hot path pays one predictable branch.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, RwLock};
+use std::time::Duration;
+
+use super::rng::SplitMix64;
+
+/// What a rule injects (see the module docs for each kind's semantics).
+#[derive(Debug, Clone)]
+pub enum FaultKind {
+    /// Connects to the peer fail immediately (crashed process).
+    ConnectRefused,
+    /// Partition: connects and exchanges hang until the caller's budget.
+    BlackHole,
+    /// Add `base ± jitter` to every matching exchange.
+    Latency { base: Duration, jitter: Duration },
+    /// Cut the response mid-body.
+    TruncateBody,
+    /// Fail each matching request independently with this probability,
+    /// as a mid-exchange connection reset.
+    ErrorRate { rate: f64 },
+}
+
+/// One fault rule: destination to match, optional source label to match,
+/// logical tag for deterministic draws, and the fault to inject.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    /// Exact destination address (`host:port`) this rule applies to.
+    pub dst: String,
+    /// Match only when the process's source label ([`set_source`]) equals
+    /// this; `None` matches any source. This is how *asymmetric*
+    /// partitions are modeled in a single process: a rule scoped to the
+    /// coordinator's label black-holes its traffic while a differently
+    /// labelled prober still gets through.
+    pub src: Option<String>,
+    /// Logical name used in deterministic draws instead of `dst`, so
+    /// rebuilding a bed on fresh ephemeral ports replays identically.
+    /// Defaults to `dst`.
+    pub tag: String,
+    pub kind: FaultKind,
+}
+
+impl FaultRule {
+    /// A rule matching any source, tagged by its address.
+    pub fn new(dst: impl Into<String>, kind: FaultKind) -> FaultRule {
+        let dst = dst.into();
+        FaultRule { tag: dst.clone(), dst, src: None, kind }
+    }
+
+    /// Use a logical tag (port-independent) for deterministic draws.
+    pub fn tagged(mut self, tag: impl Into<String>) -> FaultRule {
+        self.tag = tag.into();
+        self
+    }
+
+    /// Match only traffic sent under this source label.
+    pub fn from_src(mut self, src: impl Into<String>) -> FaultRule {
+        self.src = Some(src.into());
+        self
+    }
+}
+
+/// Verdict for a connection attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnectFault {
+    /// Fail the connect immediately (ECONNREFUSED).
+    Refused,
+    /// Sleep the caller's connect budget, then time out.
+    BlackHole,
+}
+
+/// Verdict for one request on an (assumed) established connection.
+#[derive(Debug, Clone, Default)]
+pub struct RequestFault {
+    /// Added latency (already jittered) to sleep before the exchange.
+    pub extra_latency: Option<Duration>,
+    /// Partition: stall the remaining deadline budget, then fail.
+    pub black_hole: bool,
+    /// Probabilistic per-request failure fired for this request: surface
+    /// a mid-exchange connection reset.
+    pub reset: bool,
+    /// Cut the response mid-body.
+    pub truncate: bool,
+}
+
+impl RequestFault {
+    /// True when nothing is injected (the common case).
+    pub fn is_clean(&self) -> bool {
+        self.extra_latency.is_none() && !self.black_hole && !self.reset && !self.truncate
+    }
+}
+
+/// The process-wide injector (see module docs). All state is behind the
+/// `enabled` flag; when disabled every query is one atomic load.
+pub struct FaultInjector {
+    enabled: AtomicBool,
+    seed: AtomicU64,
+    src: RwLock<String>,
+    rules: RwLock<Vec<FaultRule>>,
+    /// Per-request-identity occurrence counters: how many times this exact
+    /// logical request has been seen. Bounded by distinct identities that
+    /// matched a probabilistic rule; [`FaultInjector::install`] clears it.
+    occurrences: Mutex<HashMap<u64, u64>>,
+}
+
+static INJECTOR: OnceLock<FaultInjector> = OnceLock::new();
+
+/// The process-wide injector instance.
+pub fn injector() -> &'static FaultInjector {
+    INJECTOR.get_or_init(|| FaultInjector {
+        enabled: AtomicBool::new(false),
+        seed: AtomicU64::new(0),
+        src: RwLock::new(String::new()),
+        rules: RwLock::new(Vec::new()),
+        occurrences: Mutex::new(HashMap::new()),
+    })
+}
+
+/// Whether any faults are active (one relaxed load — the hot-path guard).
+pub fn active() -> bool {
+    INJECTOR.get().map(|i| i.enabled.load(Ordering::Relaxed)).unwrap_or(false)
+}
+
+/// Serialize tests that touch the process-wide injector. Every test (or
+/// bench section) that installs rules must hold this guard for its whole
+/// faulted region, so concurrently running tests never see each other's
+/// rules.
+pub fn test_guard() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl FaultInjector {
+    /// Arm the injector under `seed`: clears all rules, occurrence
+    /// counters and the source label, then enables fault evaluation.
+    pub fn install(&self, seed: u64) {
+        self.rules.write().unwrap().clear();
+        self.occurrences.lock().unwrap().clear();
+        self.src.write().unwrap().clear();
+        self.seed.store(seed, Ordering::Relaxed);
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Disarm and drop all rules (the default state).
+    pub fn clear(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+        self.rules.write().unwrap().clear();
+        self.occurrences.lock().unwrap().clear();
+        self.src.write().unwrap().clear();
+    }
+
+    /// Add a rule (kept in insertion order; for a given destination the
+    /// first matching rule of the relevant kind wins).
+    pub fn add_rule(&self, rule: FaultRule) {
+        self.rules.write().unwrap().push(rule);
+    }
+
+    /// Drop every rule matching `dst` (heal one peer's link).
+    pub fn heal(&self, dst: &str) {
+        self.rules.write().unwrap().retain(|r| r.dst != dst);
+    }
+
+    /// Set the process's source label (matched against [`FaultRule::src`]).
+    pub fn set_source(&self, label: impl Into<String>) {
+        *self.src.write().unwrap() = label.into();
+    }
+
+    /// Evaluate the connect-time rules for `dst`. `None` = connect normally.
+    pub fn connect_fault(&self, dst: &str) -> Option<ConnectFault> {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return None;
+        }
+        let src = self.src.read().unwrap();
+        for rule in self.rules.read().unwrap().iter() {
+            if rule.dst != dst || !src_matches(&rule.src, &src) {
+                continue;
+            }
+            match rule.kind {
+                FaultKind::ConnectRefused => return Some(ConnectFault::Refused),
+                FaultKind::BlackHole => return Some(ConnectFault::BlackHole),
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// Evaluate the exchange-time rules for one request. Probabilistic
+    /// draws are keyed by the stateless request identity (see module
+    /// docs), so the verdict is a pure function of (seed, rule tags,
+    /// source label, request bytes, occurrence).
+    pub fn request_fault(
+        &self,
+        dst: &str,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> RequestFault {
+        let mut out = RequestFault::default();
+        if !self.enabled.load(Ordering::Relaxed) {
+            return out;
+        }
+        let src = self.src.read().unwrap();
+        let rules = self.rules.read().unwrap();
+        for rule in rules.iter() {
+            if rule.dst != dst || !src_matches(&rule.src, &src) {
+                continue;
+            }
+            match &rule.kind {
+                FaultKind::BlackHole => out.black_hole = true,
+                FaultKind::TruncateBody => out.truncate = true,
+                FaultKind::Latency { base, jitter } => {
+                    let mut rng = self.draw_stream(&rule.tag, &src, method, path, body);
+                    let j = if jitter.is_zero() {
+                        Duration::ZERO
+                    } else {
+                        Duration::from_nanos(
+                            (rng.next_f64() * 2.0 * jitter.as_nanos() as f64) as u64,
+                        )
+                    };
+                    // base - jitter .. base + jitter, floored at zero.
+                    let lat = (*base + j).saturating_sub(*jitter);
+                    out.extra_latency =
+                        Some(out.extra_latency.map_or(lat, |prev| prev + lat));
+                }
+                FaultKind::ErrorRate { rate } => {
+                    let mut rng = self.draw_stream(&rule.tag, &src, method, path, body);
+                    if rng.next_f64() < *rate {
+                        out.reset = true;
+                    }
+                }
+                FaultKind::ConnectRefused => {}
+            }
+        }
+        out
+    }
+
+    /// Derive the deterministic RNG for one (rule, request) pair: seed ⊕
+    /// identity hash, split by this identity's occurrence count so a
+    /// retried identical request draws fresh.
+    fn draw_stream(
+        &self,
+        tag: &str,
+        src: &str,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> SplitMix64 {
+        let identity = fnv1a(&[tag.as_bytes(), src.as_bytes(), method.as_bytes(),
+            path.as_bytes(), body]);
+        let occurrence = {
+            let mut occ = self.occurrences.lock().unwrap();
+            let slot = occ.entry(identity).or_insert(0);
+            *slot += 1;
+            *slot
+        };
+        let seed = self.seed.load(Ordering::Relaxed);
+        SplitMix64::seeded(seed ^ identity).split(occurrence)
+    }
+}
+
+fn src_matches(rule_src: &Option<String>, current: &str) -> bool {
+    match rule_src {
+        None => true,
+        Some(s) => s == current,
+    }
+}
+
+/// FNV-1a over the concatenation of the given byte fields, with a length
+/// byte between fields so `("ab","c")` and `("a","bc")` hash apart.
+fn fnv1a(fields: &[&[u8]]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for field in fields {
+        for &b in *field {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h ^= 0xff;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_injector_is_inert() {
+        let _g = test_guard();
+        injector().clear();
+        assert!(!active());
+        assert!(injector().connect_fault("1.2.3.4:80").is_none());
+        assert!(injector().request_fault("1.2.3.4:80", "GET", "/", b"").is_clean());
+    }
+
+    #[test]
+    fn connect_rules_match_destination_exactly() {
+        let _g = test_guard();
+        let inj = injector();
+        inj.install(1);
+        inj.add_rule(FaultRule::new("10.0.0.1:80", FaultKind::ConnectRefused));
+        inj.add_rule(FaultRule::new("10.0.0.2:80", FaultKind::BlackHole));
+        assert_eq!(inj.connect_fault("10.0.0.1:80"), Some(ConnectFault::Refused));
+        assert_eq!(inj.connect_fault("10.0.0.2:80"), Some(ConnectFault::BlackHole));
+        assert_eq!(inj.connect_fault("10.0.0.3:80"), None);
+        inj.heal("10.0.0.1:80");
+        assert_eq!(inj.connect_fault("10.0.0.1:80"), None, "healed link connects again");
+        inj.clear();
+    }
+
+    #[test]
+    fn error_rate_draws_are_seed_deterministic_and_tag_keyed() {
+        let _g = test_guard();
+        let inj = injector();
+        let verdicts = |seed: u64| -> Vec<bool> {
+            inj.install(seed);
+            // Two different ports, same logical tag: draws must agree.
+            inj.add_rule(
+                FaultRule::new("127.0.0.1:40001", FaultKind::ErrorRate { rate: 0.5 })
+                    .tagged("res0"),
+            );
+            (0..64)
+                .map(|i| {
+                    let body = format!("req-{i}");
+                    inj.request_fault("127.0.0.1:40001", "POST", "/f", body.as_bytes()).reset
+                })
+                .collect()
+        };
+        let a = verdicts(42);
+        let b = verdicts(42);
+        assert_eq!(a, b, "same seed, same identities: same verdicts");
+        assert!(a.iter().any(|&v| v) && a.iter().any(|&v| !v), "rate 0.5 mixes outcomes");
+        let c = verdicts(43);
+        assert_ne!(a, c, "a different seed redraws");
+
+        // The same identities against a *different port* with the same tag
+        // replay identically — port-independence is what makes bed rebuilds
+        // deterministic.
+        inj.install(42);
+        inj.add_rule(
+            FaultRule::new("127.0.0.1:55317", FaultKind::ErrorRate { rate: 0.5 }).tagged("res0"),
+        );
+        let d: Vec<bool> = (0..64)
+            .map(|i| {
+                let body = format!("req-{i}");
+                inj.request_fault("127.0.0.1:55317", "POST", "/f", body.as_bytes()).reset
+            })
+            .collect();
+        assert_eq!(a, d, "draws key on the tag, not the ephemeral port");
+        inj.clear();
+    }
+
+    #[test]
+    fn retried_identical_request_gets_a_fresh_draw() {
+        let _g = test_guard();
+        let inj = injector();
+        inj.install(7);
+        inj.add_rule(FaultRule::new("h:1", FaultKind::ErrorRate { rate: 0.5 }).tagged("t"));
+        // The same logical request drawn many times walks an occurrence
+        // sequence — deterministic, but not constant.
+        let draws: Vec<bool> =
+            (0..64).map(|_| inj.request_fault("h:1", "GET", "/x", b"same").reset).collect();
+        assert!(draws.iter().any(|&v| v) && draws.iter().any(|&v| !v));
+        // Reinstall resets occurrences: the sequence replays exactly.
+        inj.install(7);
+        inj.add_rule(FaultRule::new("h:1", FaultKind::ErrorRate { rate: 0.5 }).tagged("t"));
+        let again: Vec<bool> =
+            (0..64).map(|_| inj.request_fault("h:1", "GET", "/x", b"same").reset).collect();
+        assert_eq!(draws, again);
+        inj.clear();
+    }
+
+    #[test]
+    fn source_label_scopes_rules_for_asymmetric_partitions() {
+        let _g = test_guard();
+        let inj = injector();
+        inj.install(3);
+        inj.add_rule(
+            FaultRule::new("victim:1", FaultKind::BlackHole).from_src("coordinator"),
+        );
+        inj.set_source("coordinator");
+        assert_eq!(inj.connect_fault("victim:1"), Some(ConnectFault::BlackHole));
+        assert!(inj.request_fault("victim:1", "GET", "/", b"").black_hole);
+        // The reverse direction (a different source) is untouched.
+        inj.set_source("prober");
+        assert_eq!(inj.connect_fault("victim:1"), None);
+        assert!(inj.request_fault("victim:1", "GET", "/", b"").is_clean());
+        inj.clear();
+    }
+
+    #[test]
+    fn latency_jitter_is_bounded_and_deterministic() {
+        let _g = test_guard();
+        let inj = injector();
+        inj.install(11);
+        inj.add_rule(FaultRule::new("slow:1", FaultKind::Latency {
+            base: Duration::from_millis(20),
+            jitter: Duration::from_millis(10),
+        }));
+        let mut first = Vec::new();
+        for i in 0..32 {
+            let body = format!("{i}");
+            let f = inj.request_fault("slow:1", "GET", "/", body.as_bytes());
+            let lat = f.extra_latency.expect("latency rule always adds delay");
+            assert!(
+                lat >= Duration::from_millis(10) && lat <= Duration::from_millis(30),
+                "base 20 ± 10: got {lat:?}"
+            );
+            first.push(lat);
+        }
+        inj.install(11);
+        inj.add_rule(FaultRule::new("slow:1", FaultKind::Latency {
+            base: Duration::from_millis(20),
+            jitter: Duration::from_millis(10),
+        }));
+        for (i, want) in first.iter().enumerate() {
+            let body = format!("{i}");
+            let got =
+                inj.request_fault("slow:1", "GET", "/", body.as_bytes()).extra_latency.unwrap();
+            assert_eq!(got, *want, "jitter replays under the same seed");
+        }
+        inj.clear();
+    }
+
+    #[test]
+    fn fnv_field_boundaries_matter() {
+        assert_ne!(fnv1a(&[b"ab", b"c"]), fnv1a(&[b"a", b"bc"]));
+        assert_ne!(fnv1a(&[b"", b"x"]), fnv1a(&[b"x", b""]));
+    }
+}

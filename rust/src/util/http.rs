@@ -25,6 +25,17 @@
 //!   [`Bytes`](super::bytes::Bytes); parsed request bodies are windows into
 //!   the connection's read buffer, and responses go out with one vectored
 //!   write (head + body) instead of per-header `format!` appends.
+//! * **Deadline budgets + typed errors.** Every client call runs under a
+//!   [`RequestOptions`] budget: a connect timeout and a total per-request
+//!   deadline enforced with slice-granular reads, so a stalled peer fails
+//!   at the budget instead of a socket default. Failures are typed
+//!   [`HttpError`]s (downcastable from the returned `anyhow::Error`), so
+//!   retry gating and liveness reporting branch on variants, not message
+//!   text.
+//! * **Fault plane.** Both client paths (pooled and fresh) consult the
+//!   process-wide [`faults`](super::faults) injector at connect and
+//!   exchange time, so chaos tests and the fault bench can partition,
+//!   delay, truncate or reset any peer without touching call sites.
 //!
 //! Chunked transfer and TLS remain out of scope.
 
@@ -37,6 +48,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use super::bytes::Bytes;
+use super::faults;
 #[cfg(target_os = "linux")]
 use super::threadpool::ThreadPool;
 
@@ -127,6 +139,16 @@ impl Response {
 
     pub fn ok(&self) -> bool {
         (200..300).contains(&self.status)
+    }
+
+    /// Consume the response, failing non-2xx statuses as a typed
+    /// [`HttpError::Status`] (downcastable from the `anyhow::Error`).
+    pub fn require_ok(self) -> anyhow::Result<Response> {
+        if self.ok() {
+            Ok(self)
+        } else {
+            Err(HttpError::Status(self.status).into())
+        }
     }
 
     pub fn body_str(&self) -> anyhow::Result<&str> {
@@ -1093,20 +1115,201 @@ fn stream_is_healthy(stream: &TcpStream) -> bool {
     stream.set_nonblocking(false).is_ok() && healthy
 }
 
-fn connect_fresh(addr: &str) -> anyhow::Result<TcpStream> {
-    let stream = TcpStream::connect(addr)?;
-    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(60)))?;
+/// Typed client-side failure taxonomy. Every error returned by the client
+/// free functions carries one of these as its source (downcast with
+/// [`HttpError::of`]), so retry gating and liveness reporting branch on
+/// variants instead of message text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HttpError {
+    /// The peer's OS refused the connection (nothing is listening — the
+    /// classic crashed-process signal).
+    ConnectRefused(String),
+    /// No connection within the caller's connect budget (a black-holed
+    /// SYN: partition or silently dropped traffic).
+    ConnectTimeout(String),
+    /// The per-request deadline budget expired mid-exchange (a stalled or
+    /// partitioned peer on an established connection).
+    Deadline(String),
+    /// The connection died mid-exchange (reset/aborted/broken pipe). The
+    /// request *may* have executed — never blindly retried for
+    /// non-idempotent verbs.
+    Reset(String),
+    /// The response was cut short (EOF inside headers or body).
+    Truncated(String),
+    /// The peer answered, but not with parseable HTTP.
+    Malformed(String),
+    /// The peer answered with a non-2xx status (only produced by callers
+    /// that require success, e.g. [`Response::require_ok`]).
+    Status(u16),
+}
+
+impl HttpError {
+    /// Connection-level evidence the *peer or path* is unhealthy — the
+    /// gate for both idempotent-verb retries and data-path liveness
+    /// misses. `Malformed`/`Status` are application-level: the peer is
+    /// alive and talking, just not saying what we wanted.
+    pub fn is_connectivity(&self) -> bool {
+        !matches!(self, HttpError::Malformed(_) | HttpError::Status(_))
+    }
+
+    /// Downcast an `anyhow::Error` from any client function back to the
+    /// typed taxonomy.
+    pub fn of(err: &anyhow::Error) -> Option<&HttpError> {
+        err.downcast_ref::<HttpError>()
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::ConnectRefused(m) => write!(f, "connection refused: {m}"),
+            HttpError::ConnectTimeout(m) => write!(f, "connect timed out: {m}"),
+            HttpError::Deadline(m) => write!(f, "deadline budget exhausted: {m}"),
+            HttpError::Reset(m) => write!(f, "connection reset: {m}"),
+            HttpError::Truncated(m) => write!(f, "response truncated: {m}"),
+            HttpError::Malformed(m) => write!(f, "malformed response: {m}"),
+            HttpError::Status(s) => write!(f, "http status {s}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// Classify an I/O failure into the typed taxonomy. `phase` names the
+/// exchange stage for the error message.
+fn classify_io(e: std::io::Error, addr: &str, phase: &str) -> HttpError {
+    use std::io::ErrorKind;
+    let msg = format!("{phase} ({addr}): {e}");
+    match e.kind() {
+        ErrorKind::ConnectionRefused => HttpError::ConnectRefused(msg),
+        ErrorKind::TimedOut | ErrorKind::WouldBlock => HttpError::Deadline(msg),
+        ErrorKind::UnexpectedEof => HttpError::Truncated(msg),
+        _ => HttpError::Reset(msg),
+    }
+}
+
+/// Classify an `anyhow::Error` whose source may be an `io::Error`
+/// (transport) or a parse failure (malformed peer).
+fn classify_anyhow(e: anyhow::Error, addr: &str, phase: &str) -> HttpError {
+    match e.downcast::<std::io::Error>() {
+        Ok(io) => classify_io(io, addr, phase),
+        Err(e) => HttpError::Malformed(format!("{phase} ({addr}): {e}")),
+    }
+}
+
+/// Per-request budget for the client free functions.
+///
+/// `deadline` is the **total** wall budget for one request/response
+/// exchange (write + read), enforced with [`SLICE`]-granular socket reads
+/// so a peer that stalls mid-body fails at the budget — never at a
+/// hard-coded socket default. The previous fixed 60 s read/write socket
+/// timeouts are exactly `RequestOptions::default()`, so callers that never
+/// opt in keep the old effective cap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestOptions {
+    /// Budget for establishing a new connection (ignored when a pooled
+    /// connection is reused).
+    pub connect_timeout: Duration,
+    /// Total budget for the exchange on the established connection.
+    pub deadline: Duration,
+}
+
+impl Default for RequestOptions {
+    fn default() -> RequestOptions {
+        RequestOptions {
+            connect_timeout: Duration::from_secs(10),
+            deadline: Duration::from_secs(60),
+        }
+    }
+}
+
+impl RequestOptions {
+    /// Default connect budget with the given total deadline.
+    pub fn with_deadline(deadline: Duration) -> RequestOptions {
+        RequestOptions { deadline, ..RequestOptions::default() }
+    }
+
+    /// Both budgets explicit.
+    pub fn budget(connect_timeout: Duration, deadline: Duration) -> RequestOptions {
+        RequestOptions { connect_timeout, deadline }
+    }
+}
+
+/// A [`Read`] view over a `TcpStream` that enforces an absolute deadline
+/// with slice-granular socket timeouts: each syscall waits at most
+/// [`SLICE`] (or the remaining budget, whichever is smaller), so a peer
+/// stalling mid-body surfaces as `TimedOut` within one slice of the
+/// budget instead of a 60 s socket default.
+struct BudgetReader<'a> {
+    stream: &'a TcpStream,
+    deadline: Instant,
+}
+
+impl Read for BudgetReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            let remaining = self.deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "deadline budget exhausted",
+                ));
+            }
+            self.stream.set_read_timeout(Some(remaining.min(SLICE)))?;
+            match self.stream.read(buf) {
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    continue
+                }
+                r => return r,
+            }
+        }
+    }
+}
+
+fn connect_fresh(addr: &str, opts: &RequestOptions) -> Result<TcpStream, HttpError> {
+    if faults::active() {
+        match faults::injector().connect_fault(addr) {
+            Some(faults::ConnectFault::Refused) => {
+                return Err(HttpError::ConnectRefused(format!("{addr}: injected fault")));
+            }
+            Some(faults::ConnectFault::BlackHole) => {
+                // A partitioned SYN gets no answer at all: burn the whole
+                // connect budget, then time out.
+                std::thread::sleep(opts.connect_timeout);
+                return Err(HttpError::ConnectTimeout(format!(
+                    "{addr}: injected black hole, no answer in {:?}",
+                    opts.connect_timeout
+                )));
+            }
+            None => {}
+        }
+    }
+    use std::net::ToSocketAddrs;
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| HttpError::Malformed(format!("resolving {addr}: {e}")))?
+        .next()
+        .ok_or_else(|| HttpError::Malformed(format!("{addr} resolves to no address")))?;
+    let stream = TcpStream::connect_timeout(&sock, opts.connect_timeout).map_err(|e| {
+        match e.kind() {
+            std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock => {
+                HttpError::ConnectTimeout(format!("{addr}: {e}"))
+            }
+            _ => classify_io(e, addr, "connecting"),
+        }
+    })?;
     let _ = stream.set_nodelay(true);
     Ok(stream)
 }
 
 /// Issue a blocking HTTP request to `addr` (`host:port`), reusing a pooled
-/// keep-alive connection when one is available.
-///
-/// A pooled connection can go stale between health check and use (the
-/// server closes it as we write); when that happens before any response
-/// byte arrives, the request is retried once on a fresh connection.
+/// keep-alive connection when one is available. Runs under
+/// [`RequestOptions::default`]; see [`request_with`] for explicit budgets.
 pub fn request(
     addr: &str,
     method: &str,
@@ -1114,8 +1317,28 @@ pub fn request(
     headers: &[(&str, &str)],
     body: &[u8],
 ) -> anyhow::Result<Response> {
+    request_with(addr, method, path, headers, body, RequestOptions::default())
+}
+
+/// [`request`] with an explicit per-request budget.
+///
+/// A pooled connection can go stale between health check and use (the
+/// server closes it as we write); when that happens before any response
+/// byte arrives, the request is retried once on a fresh connection. Any
+/// failure after response bytes started (or any injected mid-exchange
+/// fault) is returned as-is — the request may have executed, and only a
+/// caller that knows the verb's idempotency may retry it.
+pub fn request_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+    opts: RequestOptions,
+) -> anyhow::Result<Response> {
+    let deadline = Instant::now() + opts.deadline;
     if let Some(stream) = pool().checkout(addr) {
-        match exchange(stream, addr, method, path, headers, body, true) {
+        match exchange(stream, addr, method, path, headers, body, true, deadline) {
             Ok(resp) => return Ok(resp),
             // Nothing of the response arrived: the server never processed
             // (or never saw) the request, so a retry is safe.
@@ -1123,8 +1346,9 @@ pub fn request(
             Err(ExchangeError::MidResponse(e)) => return Err(e),
         }
     }
-    let stream = connect_fresh(addr)?;
-    exchange(stream, addr, method, path, headers, body, true).map_err(ExchangeError::into_inner)
+    let stream = connect_fresh(addr, &opts).map_err(anyhow::Error::new)?;
+    exchange(stream, addr, method, path, headers, body, true, deadline)
+        .map_err(ExchangeError::into_inner)
 }
 
 /// One-shot `Connection: close` request on a fresh connection (the
@@ -1136,8 +1360,24 @@ pub fn request_fresh(
     headers: &[(&str, &str)],
     body: &[u8],
 ) -> anyhow::Result<Response> {
-    let stream = connect_fresh(addr)?;
-    exchange(stream, addr, method, path, headers, body, false).map_err(ExchangeError::into_inner)
+    request_fresh_with(addr, method, path, headers, body, RequestOptions::default())
+}
+
+/// [`request_fresh`] with an explicit per-request budget — the same
+/// [`RequestOptions`] contract as the pooled path, so bench baselines
+/// stay comparable under identical budgets.
+pub fn request_fresh_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+    opts: RequestOptions,
+) -> anyhow::Result<Response> {
+    let deadline = Instant::now() + opts.deadline;
+    let stream = connect_fresh(addr, &opts).map_err(anyhow::Error::new)?;
+    exchange(stream, addr, method, path, headers, body, false, deadline)
+        .map_err(ExchangeError::into_inner)
 }
 
 /// Failure side of [`exchange`], split on whether any response bytes had
@@ -1155,9 +1395,19 @@ impl ExchangeError {
     }
 }
 
-/// Send one request and read one response on `stream`. With `keep_alive`,
-/// a fully-read response on a connection the server left open goes back to
-/// the pool.
+/// Send one request and read one response on `stream`, failing typed (as
+/// [`HttpError`]) when the absolute `deadline` expires at any point of the
+/// exchange. With `keep_alive`, a fully-read response on a connection the
+/// server left open goes back to the pool.
+///
+/// When the fault injector is armed, this is also where mid-exchange
+/// faults land: injected latency sleeps against the remaining budget,
+/// black holes burn it entirely (→ `Deadline`), probabilistic error rates
+/// surface as `Reset`, and truncation cuts the response after its status
+/// line (→ `Truncated`). All injected failures are `MidResponse`, so the
+/// pooled path's stale-connection retry never silently heals them — only
+/// a caller-level retry budget can.
+#[allow(clippy::too_many_arguments)]
 fn exchange(
     stream: TcpStream,
     addr: &str,
@@ -1166,7 +1416,38 @@ fn exchange(
     headers: &[(&str, &str)],
     body: &[u8],
     keep_alive: bool,
+    deadline: Instant,
 ) -> Result<Response, ExchangeError> {
+    let fault = if faults::active() {
+        Some(faults::injector().request_fault(addr, method, path, body))
+    } else {
+        None
+    };
+    if let Some(f) = &fault {
+        if let Some(extra) = f.extra_latency {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if extra >= remaining {
+                std::thread::sleep(remaining);
+                return Err(ExchangeError::MidResponse(
+                    HttpError::Deadline(format!("{addr}: injected latency exceeded budget")).into(),
+                ));
+            }
+            std::thread::sleep(extra);
+        }
+        if f.black_hole {
+            // An established connection into a partition: bytes vanish,
+            // nothing ever answers. Burn the remaining budget, then fail.
+            std::thread::sleep(deadline.saturating_duration_since(Instant::now()));
+            return Err(ExchangeError::MidResponse(
+                HttpError::Deadline(format!("{addr}: injected black hole ate the request")).into(),
+            ));
+        }
+        if f.reset {
+            return Err(ExchangeError::MidResponse(
+                HttpError::Reset(format!("{addr}: injected connection reset")).into(),
+            ));
+        }
+    }
     let mut head = String::with_capacity(192);
     let _ = write!(head, "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n");
     for (k, v) in headers {
@@ -1182,25 +1463,50 @@ fn exchange(
         "Connection: close\r\n\r\n"
     });
     {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(ExchangeError::BeforeResponse(
+                HttpError::Deadline(format!("{addr}: budget exhausted before write")).into(),
+            ));
+        }
+        let _ = stream.set_write_timeout(Some(remaining));
         let mut w = &stream;
-        write_all_vectored(&mut w, head.as_bytes(), body)
-            .map_err(|e| ExchangeError::BeforeResponse(e.into()))?;
+        write_all_vectored(&mut w, head.as_bytes(), body).map_err(|e| {
+            ExchangeError::BeforeResponse(classify_io(e, addr, "writing request").into())
+        })?;
     }
 
-    // Read exactly one response. `BufReader` over `&TcpStream` leaves the
-    // stream free to return to the pool; over-buffering cannot eat a later
-    // response because the server sends one response per request.
-    let mut reader = BufReader::new(&stream);
+    // Read exactly one response. `BufReader` over the budgeted stream view
+    // leaves the stream free to return to the pool; over-buffering cannot
+    // eat a later response because the server sends one response per
+    // request. `BudgetReader` turns a stalled peer into a typed `Deadline`
+    // failure within one read slice of the budget.
+    let mut reader = BufReader::new(BudgetReader { stream: &stream, deadline });
     let mut status_line = String::new();
     match reader.read_line(&mut status_line) {
         Ok(0) => {
-            return Err(ExchangeError::BeforeResponse(anyhow::anyhow!(
-                "connection closed before response"
-            )))
+            return Err(ExchangeError::BeforeResponse(
+                HttpError::Reset(format!("{addr}: connection closed before response")).into(),
+            ))
         }
         Ok(_) => {}
-        Err(e) if status_line.is_empty() => return Err(ExchangeError::BeforeResponse(e.into())),
-        Err(e) => return Err(ExchangeError::MidResponse(e.into())),
+        Err(e) if status_line.is_empty() => {
+            return Err(ExchangeError::BeforeResponse(
+                classify_io(e, addr, "awaiting response").into(),
+            ))
+        }
+        Err(e) => {
+            return Err(ExchangeError::MidResponse(
+                classify_io(e, addr, "reading status line").into(),
+            ))
+        }
+    }
+    if fault.as_ref().is_some_and(|f| f.truncate) {
+        // The response died mid-body; the connection is poisoned — never
+        // pooled.
+        return Err(ExchangeError::MidResponse(
+            HttpError::Truncated(format!("{addr}: injected mid-body truncation")).into(),
+        ));
     }
     let parse = || -> anyhow::Result<Response> {
         let status: u16 = status_line
@@ -1212,7 +1518,8 @@ fn exchange(
         let body = Bytes::from_vec(read_body(&mut reader, &headers)?);
         Ok(Response { status, headers, body })
     };
-    let resp = parse().map_err(ExchangeError::MidResponse)?;
+    let resp = parse()
+        .map_err(|e| ExchangeError::MidResponse(classify_anyhow(e, addr, "reading response").into()))?;
     let server_keeps = resp
         .headers
         .get("connection")
@@ -1230,7 +1537,12 @@ fn read_headers(reader: &mut impl BufRead) -> anyhow::Result<BTreeMap<String, St
     loop {
         let mut line = String::new();
         if reader.read_line(&mut line)? == 0 {
-            anyhow::bail!("connection closed mid-headers");
+            // io-typed so the client classifies it as `Truncated`.
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-headers",
+            )
+            .into());
         }
         let line = line.trim_end();
         if line.is_empty() {
@@ -1569,5 +1881,168 @@ mod tests {
         assert!(!try_parse(&mut buf).unwrap().unwrap().keep_alive);
         let mut buf = b"GET / HTT".to_vec();
         assert!(try_parse(&mut buf).unwrap().is_none(), "incomplete head");
+    }
+
+    // ------------------------------------------- typed error taxonomy --
+
+    /// Expect `err` to carry the given `HttpError` variant (by
+    /// discriminant, ignoring the message payload).
+    fn expect_variant(err: &anyhow::Error, want: &str) {
+        let got = HttpError::of(err).unwrap_or_else(|| panic!("untyped error: {err:#}"));
+        let name = match got {
+            HttpError::ConnectRefused(_) => "ConnectRefused",
+            HttpError::ConnectTimeout(_) => "ConnectTimeout",
+            HttpError::Deadline(_) => "Deadline",
+            HttpError::Reset(_) => "Reset",
+            HttpError::Truncated(_) => "Truncated",
+            HttpError::Malformed(_) => "Malformed",
+            HttpError::Status(_) => "Status",
+        };
+        assert_eq!(name, want, "wrong variant: {got}");
+    }
+
+    /// One-shot raw peer: accept one connection, read the request head,
+    /// then run `after` with the stream. Returns its address.
+    fn one_shot_peer(
+        after: impl FnOnce(TcpStream) + Send + 'static,
+    ) -> (String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 4096];
+            let _ = stream.read(&mut buf);
+            after(stream);
+        });
+        (addr, handle)
+    }
+
+    #[test]
+    fn refused_connect_is_typed() {
+        // Bind then immediately free a port: nothing listens on it.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = request_fresh(&addr, "GET", "/", &[], &[]).unwrap_err();
+        expect_variant(&err, "ConnectRefused");
+        assert!(HttpError::of(&err).unwrap().is_connectivity());
+    }
+
+    #[test]
+    fn black_holed_connect_times_out_at_budget() {
+        let _g = faults::test_guard();
+        faults::injector().install(5);
+        faults::injector().add_rule(faults::FaultRule::new(
+            "10.88.0.1:7000",
+            faults::FaultKind::BlackHole,
+        ));
+        let opts = RequestOptions::budget(Duration::from_millis(60), Duration::from_secs(5));
+        let t0 = Instant::now();
+        let err = request_fresh_with("10.88.0.1:7000", "GET", "/", &[], &[], opts).unwrap_err();
+        faults::injector().clear();
+        expect_variant(&err, "ConnectTimeout");
+        let dt = t0.elapsed();
+        assert!(
+            dt >= Duration::from_millis(60) && dt < Duration::from_secs(2),
+            "connect budget, not a socket default: {dt:?}"
+        );
+    }
+
+    #[test]
+    fn stalled_peer_fails_at_deadline_not_socket_default() {
+        // The peer accepts and reads the request but never answers: the
+        // pre-budget client would sit on its 60 s socket timeout here.
+        let (addr, peer) = one_shot_peer(|stream| {
+            std::thread::sleep(Duration::from_secs(3));
+            drop(stream);
+        });
+        let opts = RequestOptions::with_deadline(Duration::from_millis(300));
+        let t0 = Instant::now();
+        let err = request_fresh_with(&addr, "GET", "/stall", &[], &[], opts).unwrap_err();
+        expect_variant(&err, "Deadline");
+        let dt = t0.elapsed();
+        assert!(dt < Duration::from_secs(2), "failed at the budget: {dt:?}");
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn injected_error_rate_surfaces_as_reset() {
+        let _g = faults::test_guard();
+        let server = echo_server();
+        let addr = server.addr();
+        faults::injector().install(9);
+        faults::injector()
+            .add_rule(faults::FaultRule::new(&addr, faults::FaultKind::ErrorRate { rate: 1.0 }));
+        let err = get(&addr, "/flaky").unwrap_err();
+        faults::injector().clear();
+        expect_variant(&err, "Reset");
+        // Healed, the same request succeeds.
+        assert_eq!(get(&addr, "/flaky").unwrap().status, 200);
+    }
+
+    #[test]
+    fn injected_truncation_is_typed_and_not_pooled() {
+        let _g = faults::test_guard();
+        let server = echo_server();
+        let addr = server.addr();
+        faults::injector().install(13);
+        faults::injector()
+            .add_rule(faults::FaultRule::new(&addr, faults::FaultKind::TruncateBody));
+        let err = get(&addr, "/cut").unwrap_err();
+        faults::injector().clear();
+        expect_variant(&err, "Truncated");
+    }
+
+    #[test]
+    fn real_mid_body_eof_is_truncated() {
+        let (addr, peer) = one_shot_peer(|mut stream| {
+            // Promise 100 body bytes, deliver 2, hang up.
+            let _ = stream.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 100\r\n\r\nhi");
+            let _ = stream.shutdown(Shutdown::Both);
+        });
+        let err = request_fresh(&addr, "GET", "/", &[], &[]).unwrap_err();
+        expect_variant(&err, "Truncated");
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn garbage_peer_is_malformed_not_connectivity() {
+        let (addr, peer) = one_shot_peer(|mut stream| {
+            let _ = stream.write_all(b"not http at all\r\n\r\n");
+            let _ = stream.shutdown(Shutdown::Both);
+        });
+        let err = request_fresh(&addr, "GET", "/", &[], &[]).unwrap_err();
+        expect_variant(&err, "Malformed");
+        assert!(!HttpError::of(&err).unwrap().is_connectivity(), "peer is alive, just wrong");
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn require_ok_types_non_2xx_statuses() {
+        let server = Server::bind(0, 2, Arc::new(|_req: Request| Response::not_found())).unwrap();
+        let err = get(&server.addr(), "/x").unwrap().require_ok().unwrap_err();
+        assert_eq!(HttpError::of(&err), Some(&HttpError::Status(404)));
+        assert!(!HttpError::of(&err).unwrap().is_connectivity());
+    }
+
+    #[test]
+    fn injected_latency_delays_but_succeeds_within_budget() {
+        let _g = faults::test_guard();
+        let server = echo_server();
+        let addr = server.addr();
+        faults::injector().install(17);
+        faults::injector().add_rule(faults::FaultRule::new(
+            &addr,
+            faults::FaultKind::Latency {
+                base: Duration::from_millis(80),
+                jitter: Duration::ZERO,
+            },
+        ));
+        let t0 = Instant::now();
+        let resp = get(&addr, "/slow");
+        faults::injector().clear();
+        assert_eq!(resp.unwrap().status, 200);
+        assert!(t0.elapsed() >= Duration::from_millis(80), "latency rule applied");
     }
 }

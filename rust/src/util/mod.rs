@@ -7,6 +7,7 @@
 pub mod yaml;
 pub mod json;
 pub mod http;
+pub mod faults;
 pub mod threadpool;
 pub mod rng;
 pub mod logging;

@@ -9,25 +9,38 @@
 //! asserting detection (`Alive -> Suspect -> Dead`), queued-work drain,
 //! at-most-once retry via attempt-id dedup, quarantine re-admission, and
 //! that no `wait_workflow` caller ever hangs.
+//!
+//! The final section swaps the in-process handles for real sockets: every
+//! resource is an HTTP triplet (FaaS gateway, Prometheus exporter, object
+//! store) behind an [`HttpHandle`], and partitions are injected at the
+//! wire by the seeded fault plane (`util::faults`) — symmetric and
+//! asymmetric black holes, plus probabilistic resets whose outcomes must
+//! be identical per fault seed across engine shard counts.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use edgefaas::backup::DurableKv;
 use edgefaas::cluster::faas::{Executor, FaasBackend, NativeExecutor};
+use edgefaas::cluster::gateway::FaasGateway;
 use edgefaas::cluster::spec::ResourceSpec;
 use edgefaas::coordinator::engine::{EngineEvent, ResourceBusy, RunId, WaitError};
 use edgefaas::coordinator::functions::FunctionPackage;
-use edgefaas::coordinator::handle::{LocalHandle, ResourceHandle};
+use edgefaas::coordinator::handle::{HttpHandle, LocalHandle, ResourceHandle, VerbBudgets};
 use edgefaas::coordinator::resource::{EdgeFaaS, ResourceId};
-use edgefaas::monitor::metrics::ResourceUsage;
+use edgefaas::monitor::metrics::{MetricsRegistry, ResourceUsage};
+use edgefaas::monitor::scrape::{scrape_with, MetricsGateway};
 use edgefaas::monitor::LeaseState;
+use edgefaas::objstore::gateway::StoreGateway;
 use edgefaas::objstore::ObjectStore;
 use edgefaas::simnet::topology::mbps;
 use edgefaas::simnet::{Clock, RealClock, Tier, Topology, VirtualClock};
 use edgefaas::testbed::paper_testbed;
 use edgefaas::util::bytes::Bytes;
+use edgefaas::util::faults::{self, FaultKind, FaultRule};
+use edgefaas::util::http::{Handler, RequestOptions, Server};
 use edgefaas::util::json::Json;
 
 /// A handle wrapper that can be told to fail specific verbs.
@@ -819,4 +832,303 @@ fn unregister_of_a_busy_resource_is_refused_with_live_runs() {
     // through.
     reg.handle.remove("solo.f").unwrap();
     bed.faas.unregister(victim).unwrap();
+}
+
+// ==================== wire-fault partition suite =========================
+
+/// A bed where every resource really is three sockets: a [`FaasGateway`],
+/// a [`MetricsGateway`] exporter, and a [`StoreGateway`], driven through an
+/// [`HttpHandle`] — so the seeded fault plane can partition a node at the
+/// wire without any test-double handle in the path.
+struct WireBed {
+    faas: Arc<EdgeFaaS>,
+    executor: Arc<NativeExecutor>,
+    resources: Vec<ResourceId>,
+    faas_addrs: Vec<String>,
+    metrics_addrs: Vec<String>,
+    /// Listeners stay alive for the bed's lifetime.
+    _servers: Vec<Server>,
+}
+
+/// Tight per-verb budgets so a black-holed peer costs hundreds of
+/// milliseconds, not the 60 s production defaults.
+fn wire_budgets() -> VerbBudgets {
+    VerbBudgets {
+        connect: Duration::from_millis(250),
+        control: Duration::from_secs(5),
+        usage: Duration::from_millis(200),
+        object: Duration::from_secs(5),
+        invoke: Duration::from_millis(400),
+        retries: 1,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(5),
+        retry: true,
+    }
+}
+
+fn wire_bed(n: usize) -> WireBed {
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    let mut topo = Topology::new();
+    let hub = topo.add_node("hub", Tier::Edge);
+    let nodes: Vec<usize> = (0..n)
+        .map(|i| {
+            let node = topo.add_node(format!("wire-{i}"), Tier::Iot);
+            topo.add_link(node, hub, 0.001, mbps(100.0));
+            node
+        })
+        .collect();
+    let executor = Arc::new(NativeExecutor::new());
+    let faas =
+        Arc::new(EdgeFaaS::with_parts(topo, DurableKv::ephemeral(), Arc::clone(&clock)));
+    let mut resources = Vec::new();
+    let (mut faas_addrs, mut metrics_addrs) = (Vec::new(), Vec::new());
+    let mut servers = Vec::new();
+    for (i, &node) in nodes.iter().enumerate() {
+        let spec = ResourceSpec::paper_iot(&format!("wire{i}:8080"));
+        let backend = Arc::new(FaasBackend::new(
+            spec.clone(),
+            Arc::clone(&executor) as Arc<dyn Executor>,
+            Arc::clone(&clock),
+        ));
+        let gw =
+            Server::bind(0, 4, Arc::new(FaasGateway::new(backend)) as Arc<dyn Handler>).unwrap();
+        let registry = Arc::new(MetricsRegistry::new());
+        registry.record_usage(&ResourceUsage {
+            mem_total: spec.total_memory(),
+            gpus_total: spec.total_gpus(),
+            ..ResourceUsage::default()
+        });
+        let metrics = MetricsGateway::serve(registry).unwrap();
+        let store = Arc::new(ObjectStore::new(
+            spec.storage * spec.nodes as u64,
+            &spec.minio_access_key,
+            &spec.minio_secret_key,
+        ));
+        let minio =
+            Server::bind(0, 2, Arc::new(StoreGateway::new(store)) as Arc<dyn Handler>).unwrap();
+        let handle = HttpHandle::new(
+            gw.addr(),
+            spec.pwd.as_str(),
+            minio.addr(),
+            spec.minio_access_key.as_str(),
+            spec.minio_secret_key.as_str(),
+            metrics.addr(),
+        )
+        .with_budgets(wire_budgets());
+        let id = faas
+            .register(spec, Arc::new(handle) as Arc<dyn ResourceHandle>, node)
+            .unwrap();
+        resources.push(id);
+        faas_addrs.push(gw.addr());
+        metrics_addrs.push(metrics.addr());
+        servers.extend([gw, metrics, minio]);
+    }
+    WireBed { faas, executor, resources, faas_addrs, metrics_addrs, _servers: servers }
+}
+
+/// Configure + deploy (over the real sockets) a single-function app
+/// fanning one instance onto each anchor.
+fn wire_app(bed: &WireBed, app: &str, anchors: &[ResourceId]) {
+    let img = format!("img/{app}");
+    bed.executor.register(&img, |_: &[u8]| Ok(br#"{"outputs":[]}"#.to_vec()));
+    let yaml = format!(
+        "\
+application: {app}
+entrypoint: f
+dag:
+  - name: f
+    affinity:
+      nodetype: iot
+      affinitytype: data
+    reduce: auto
+"
+    );
+    let mut data = HashMap::new();
+    data.insert("f".to_string(), anchors.to_vec());
+    bed.faas.configure_application(&yaml, &data).unwrap();
+    bed.faas.deploy_function(app, "f", &FunctionPackage { code: img }).unwrap();
+}
+
+/// The acceptance arc for a full partition: the victim turns Suspect from
+/// *live traffic* strictly before any detector sweep has run, the faulted
+/// run still completes (relocated off the victim), sweeps then walk the
+/// lease to Dead and drain, and healing the wire re-admits the node.
+#[test]
+fn fully_partitioned_resource_goes_suspect_from_live_traffic_before_any_sweep() {
+    let _guard = faults::test_guard();
+    let bed = wire_bed(4);
+    let victim = bed.resources[2];
+    wire_app(&bed, "part", &bed.resources);
+    let dead_events = Arc::new(Mutex::new(Vec::new()));
+    {
+        let dead_events = Arc::clone(&dead_events);
+        bed.faas.on_engine_event(move |_, ev| {
+            if let EngineEvent::ResourceDead { resource, .. } = ev {
+                dead_events.lock().unwrap().push(*resource);
+            }
+        });
+    }
+    // Partition the victim in both planes: invokes and scrapes black-hole.
+    // Rules are tagged logically so draws don't depend on the OS-assigned
+    // ports.
+    faults::injector().install(41);
+    faults::injector().add_rule(
+        FaultRule::new(&bed.faas_addrs[2], FaultKind::BlackHole).tagged("victim-faas"),
+    );
+    faults::injector().add_rule(
+        FaultRule::new(&bed.metrics_addrs[2], FaultKind::BlackHole).tagged("victim-metrics"),
+    );
+    assert!(
+        bed.faas.monitor_snapshot().lease_of(victim).is_none(),
+        "precondition: no sweep has ever run"
+    );
+
+    // The victim's instance rides its budget into the black hole, the
+    // engine reports the miss, probes, and relocates: the run completes.
+    let run = bed.faas.submit_workflow("part", &HashMap::new()).unwrap();
+    let result = bed.faas.wait_workflow(run, 60.0).unwrap();
+    assert_eq!(result.functions["f"].len(), 4);
+    assert!(
+        result.functions["f"].iter().all(|i| i.resource != victim),
+        "the partitioned instance must have relocated to a survivor"
+    );
+
+    // Data-path evidence alone created the Suspect lease — strictly before
+    // the first sweep: the survivors have no leases at all, so no sweep
+    // can have run.
+    let snap = bed.faas.monitor_snapshot();
+    let lease = snap.lease_of(victim).expect("lease born from data-path evidence");
+    assert_eq!(lease.state, LeaseState::Suspect);
+    assert!(lease.misses >= 1);
+    for &other in &bed.resources {
+        if other != victim {
+            assert!(snap.lease_of(other).is_none(), "no sweep ran yet");
+        }
+    }
+    assert!(dead_events.lock().unwrap().is_empty(), "Suspect must not drain");
+
+    // Sweeps take over: the data-path miss already counts, so two sweep
+    // misses (not dead_after = 3) reach Dead — live traffic bought the
+    // detector a whole sweep period.
+    bed.faas.refresh_monitor_snapshot();
+    assert_eq!(bed.faas.monitor_snapshot().lease_of(victim).unwrap().state, LeaseState::Suspect);
+    bed.faas.refresh_monitor_snapshot();
+    assert_eq!(bed.faas.monitor_snapshot().lease_of(victim).unwrap().state, LeaseState::Dead);
+    assert_eq!(*dead_events.lock().unwrap(), vec![victim]);
+    let cands = bed.faas.candidates_of("part", "f").unwrap();
+    assert_eq!(cands.len(), 3, "dead resource stripped from candidates");
+    assert!(!cands.contains(&victim));
+    let run = bed.faas.submit_workflow("part", &HashMap::new()).unwrap();
+    let result = bed.faas.wait_workflow(run, 60.0).unwrap();
+    assert_eq!(result.functions["f"].len(), 3, "survivors carry the run during the partition");
+
+    // Heal the wire: two clean sweeps re-admit the node.
+    faults::injector().heal(&bed.faas_addrs[2]);
+    faults::injector().heal(&bed.metrics_addrs[2]);
+    bed.faas.refresh_monitor_snapshot();
+    assert_eq!(
+        bed.faas.monitor_snapshot().lease_of(victim).unwrap().state,
+        LeaseState::Recovering
+    );
+    bed.faas.refresh_monitor_snapshot();
+    assert_eq!(bed.faas.monitor_snapshot().lease_of(victim).unwrap().state, LeaseState::Alive);
+    let cands = bed.faas.candidates_of("part", "f").unwrap();
+    assert_eq!(cands.len(), 4, "membership restored after the partition heals");
+    let run = bed.faas.submit_workflow("part", &HashMap::new()).unwrap();
+    let result = bed.faas.wait_workflow(run, 60.0).unwrap();
+    assert_eq!(result.functions["f"].len(), 4, "healed resource serves again");
+    faults::injector().clear();
+}
+
+/// An asymmetric partition: the coordinator's traffic to the victim is
+/// black-holed while any other vantage point still reaches it. The
+/// coordinator must treat its own view as authoritative (Suspect +
+/// relocation), yet a differently-labelled prober proves the node is up.
+#[test]
+fn asymmetric_partition_is_detected_by_the_coordinator_but_not_the_prober() {
+    let _guard = faults::test_guard();
+    let bed = wire_bed(2);
+    let victim = bed.resources[1];
+    wire_app(&bed, "asym", &bed.resources);
+    faults::injector().install(59);
+    faults::injector().set_source("coordinator");
+    faults::injector().add_rule(
+        FaultRule::new(&bed.faas_addrs[1], FaultKind::BlackHole)
+            .from_src("coordinator")
+            .tagged("asym-faas"),
+    );
+    faults::injector().add_rule(
+        FaultRule::new(&bed.metrics_addrs[1], FaultKind::BlackHole)
+            .from_src("coordinator")
+            .tagged("asym-metrics"),
+    );
+
+    let run = bed.faas.submit_workflow("asym", &HashMap::new()).unwrap();
+    let result = bed.faas.wait_workflow(run, 60.0).unwrap();
+    assert_eq!(result.functions["f"].len(), 2);
+    assert!(result.functions["f"].iter().all(|i| i.resource != victim));
+    let snap = bed.faas.monitor_snapshot();
+    assert_eq!(snap.lease_of(victim).map(|l| l.state), Some(LeaseState::Suspect));
+    assert!(snap.lease_of(bed.resources[0]).is_none(), "evidence is data-path only");
+
+    // Same endpoint, other side of the cut: the prober's scrape succeeds
+    // where the coordinator's black-holes.
+    let opts = || RequestOptions::budget(Duration::from_millis(250), Duration::from_millis(300));
+    faults::injector().set_source("prober");
+    assert!(
+        scrape_with(&bed.metrics_addrs[1], opts()).is_ok(),
+        "the node is alive and reachable from outside the cut"
+    );
+    faults::injector().set_source("coordinator");
+    assert!(scrape_with(&bed.metrics_addrs[1], opts()).is_err(), "the cut still holds");
+    faults::injector().clear();
+}
+
+/// One seeded pass over a flaky wire: 6 sequential runs against a sole
+/// anchor behind a probabilistic reset rule. Returns a printable digest of
+/// every run outcome plus the victim's final lease and candidacy.
+fn wire_fault_digest(seed: u64, shards: usize) -> String {
+    let bed = wire_bed(3);
+    bed.faas.set_engine_shards(shards);
+    let victim = bed.resources[1];
+    wire_app(&bed, "det", &[victim]);
+    faults::injector().install(seed);
+    faults::injector().add_rule(
+        FaultRule::new(&bed.faas_addrs[1], FaultKind::ErrorRate { rate: 0.35 })
+            .tagged("det-flaky"),
+    );
+    let mut outcomes = Vec::new();
+    for _ in 0..6 {
+        match bed.faas.submit_workflow("det", &HashMap::new()) {
+            Err(_) => outcomes.push("rejected".to_string()),
+            Ok(run) => match bed.faas.wait_workflow(run, 60.0) {
+                Ok(r) => outcomes.push(format!("ok:{}", r.functions["f"].len())),
+                Err(_) => outcomes.push("failed".to_string()),
+            },
+        }
+    }
+    let lease = bed
+        .faas
+        .monitor_snapshot()
+        .lease_of(victim)
+        .map(|l| format!("{:?}/{}", l.state, l.misses))
+        .unwrap_or_else(|| "none".to_string());
+    let cands = bed.faas.candidates_of("det", "f").unwrap_or_default();
+    faults::injector().clear();
+    format!("runs={outcomes:?} lease={lease} cands={cands:?}")
+}
+
+/// The fault plane's determinism contract at the acceptance boundary:
+/// for a fixed fault seed the full outcome digest — per-run results, the
+/// victim's lease trajectory, candidate stripping — is byte-identical
+/// whether the engine runs 1 shard or 16. (Draws are keyed by logical rule
+/// tag + request identity, never by port, thread, or wall clock.)
+#[test]
+fn wire_fault_outcomes_are_identical_per_seed_across_shard_counts() {
+    let _guard = faults::test_guard();
+    for seed in [11u64, 1213] {
+        let one = wire_fault_digest(seed, 1);
+        let sixteen = wire_fault_digest(seed, 16);
+        assert_eq!(one, sixteen, "seed {seed}: outcome must not depend on shard count");
+    }
 }

@@ -9,15 +9,19 @@
 //! requests onto few TCP connections.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use edgefaas::cluster::faas::{BatchCall, Executor, FaasBackend, NativeExecutor};
 use edgefaas::cluster::gateway::{client as faas_client, FaasGateway};
 use edgefaas::cluster::spec::ResourceSpec;
+use edgefaas::coordinator::handle::HttpHandle;
+use edgefaas::coordinator::{ResourceHandle, VerbBudgets};
 use edgefaas::objstore::gateway::{client as store_client, StoreGateway};
 use edgefaas::objstore::ObjectStore;
 use edgefaas::simnet::RealClock;
 use edgefaas::util::bytes::Bytes;
-use edgefaas::util::http::{self, Handler, Server, ServerOptions};
+use edgefaas::util::faults::{self, FaultKind, FaultRule};
+use edgefaas::util::http::{self, Handler, HttpError, RequestOptions, Server, ServerOptions};
 
 fn faas_backend() -> Arc<FaasBackend> {
     let exec = Arc::new(NativeExecutor::new());
@@ -142,5 +146,115 @@ fn sixteen_concurrent_clients_through_the_faas_gateway() {
         server.connections_accepted() <= 20,
         "expected ~16 pooled connections, got {}",
         server.connections_accepted()
+    );
+}
+
+/// A raw TCP peer that answers its first request completely (keep-alive)
+/// and then, on the second request over the *same* connection, writes the
+/// status line plus 2 of 100 promised body bytes and stalls. The client's
+/// per-request deadline — not any socket default — must bound the loss.
+#[test]
+fn mid_body_stall_on_a_pooled_connection_fails_at_the_deadline() {
+    use std::io::{Read, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let peer = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        let mut read_request = |conn: &mut std::net::TcpStream| {
+            let mut buf = Vec::new();
+            let mut byte = [0u8; 1];
+            while !buf.ends_with(b"\r\n\r\n") {
+                if conn.read(&mut byte).unwrap_or(0) == 0 {
+                    break;
+                }
+                buf.push(byte[0]);
+            }
+        };
+        read_request(&mut conn);
+        conn.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nok").unwrap();
+        read_request(&mut conn);
+        conn.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 100\r\n\r\nab").unwrap();
+        conn.flush().unwrap();
+        // Stall mid-body, connection held open, far past the deadline.
+        std::thread::sleep(Duration::from_secs(3));
+    });
+    // First request completes and parks the connection in the pool.
+    let resp = http::request_with(
+        &addr,
+        "GET",
+        "/warm",
+        &[],
+        &[],
+        RequestOptions::budget(Duration::from_secs(2), Duration::from_secs(5)),
+    )
+    .unwrap();
+    assert_eq!(resp.body, b"ok");
+    // Second request rides the pooled connection into the stall.
+    let start = Instant::now();
+    let err = http::request_with(
+        &addr,
+        "GET",
+        "/stall",
+        &[],
+        &[],
+        RequestOptions::budget(Duration::from_secs(2), Duration::from_millis(300)),
+    )
+    .unwrap_err();
+    let dt = start.elapsed();
+    assert!(
+        matches!(HttpError::of(&err), Some(HttpError::Deadline(_))),
+        "mid-body stall is a typed Deadline: {err}"
+    );
+    assert!(dt >= Duration::from_millis(250), "failed before the budget: {dt:?}");
+    assert!(dt < Duration::from_secs(2), "budget did not bound the stall: {dt:?}");
+    peer.join().unwrap();
+}
+
+/// A 10% injected error rate on the wire: idempotent verbs through an
+/// [`HttpHandle`] with retries recover nearly all goodput; the same verbs
+/// with retries disabled eat the raw fault rate. Deterministic per fault
+/// seed.
+#[test]
+fn flaky_wire_goodput_recovers_with_retries_and_drops_without() {
+    let _guard = faults::test_guard();
+    let gw = Arc::new(FaasGateway::new(faas_backend())) as Arc<dyn Handler>;
+    let server = Server::bind(0, 4, gw).unwrap();
+    let addr = server.addr();
+    faas_client::deploy(&addr, "edgepwd", "echo", "img/echo", 128 << 20, 0, &[]).unwrap();
+
+    faults::injector().install(97);
+    faults::injector().add_rule(
+        FaultRule::new(&addr, FaultKind::ErrorRate { rate: 0.10 }).tagged("flaky-gw"),
+    );
+    let tight = |retry: bool| VerbBudgets {
+        connect: Duration::from_secs(2),
+        control: Duration::from_secs(5),
+        retries: 3,
+        backoff_base: Duration::from_millis(2),
+        backoff_cap: Duration::from_millis(10),
+        retry,
+        ..VerbBudgets::default()
+    };
+    let with_retries =
+        HttpHandle::new(addr.clone(), "edgepwd", "", "", "", "").with_budgets(tight(true));
+    let without_retries =
+        HttpHandle::new(addr.clone(), "edgepwd", "", "", "", "").with_budgets(tight(false));
+
+    const CALLS: usize = 200;
+    let ok_with = (0..CALLS).filter(|_| with_retries.list().is_ok()).count();
+    let ok_without = (0..CALLS).filter(|_| without_retries.list().is_ok()).count();
+    faults::injector().clear();
+
+    assert!(
+        ok_with >= CALLS * 9 / 10,
+        "retries should hold >=90% goodput at a 10% fault rate: {ok_with}/{CALLS}"
+    );
+    assert!(
+        ok_without < CALLS,
+        "a 10% fault rate over {CALLS} calls cannot leave retry-less goodput unscathed"
+    );
+    assert!(
+        ok_with > ok_without,
+        "retries must beat no-retries: {ok_with} vs {ok_without}"
     );
 }

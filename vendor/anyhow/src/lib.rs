@@ -1,24 +1,60 @@
 //! Offline stand-in for the `anyhow` crate.
 //!
 //! The build environment has no crates.io access, so this workspace vendors
-//! the small slice of anyhow's surface it actually uses: a dynamic string
-//! backed [`Error`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, the
-//! [`Result`] alias, and the [`Context`] extension trait for `Option` and
-//! `Result`. Semantics match upstream for that slice; error sources are
-//! flattened into the message at conversion time instead of being kept as a
-//! cause chain.
+//! the small slice of anyhow's surface it actually uses: a dynamic [`Error`]
+//! carrying a pre-rendered message plus (when built from a typed error) the
+//! original value for [`Error::downcast_ref`], the [`anyhow!`] / [`bail!`] /
+//! [`ensure!`] macros, the [`Result`] alias, and the [`Context`] extension
+//! trait for `Option` and `Result`. Semantics match upstream for that
+//! slice: `?`-lifting a `std::error::Error` and `anyhow!(err)` both keep
+//! the typed value downcastable; string contexts flatten into the message
+//! without disturbing the payload.
 
 use std::fmt;
 
-/// A type-erased error: the formatted message of whatever was thrown.
+/// A type-erased error: a rendered message, plus the originating typed
+/// error (when there was one) for downcasting.
 pub struct Error {
     msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
 impl Error {
-    /// Build an error directly from a displayable message.
+    /// Build an error directly from a displayable message (no payload).
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msg: message.to_string() }
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Build an error from a typed `std::error::Error`, keeping the value
+    /// for [`Error::downcast_ref`].
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Prefix the rendered message, keeping the typed payload (the method
+    /// form of [`Context::context`], like upstream's `Error::context`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// Borrow the typed payload, if this error was built from one of type
+    /// `T`.
+    pub fn downcast_ref<T: std::error::Error + 'static>(&self) -> Option<&T> {
+        self.source.as_deref().and_then(|s| s.downcast_ref::<T>())
+    }
+
+    /// Take back the typed payload, or return `self` unchanged.
+    pub fn downcast<T: std::error::Error + Send + Sync + 'static>(
+        self,
+    ) -> std::result::Result<T, Error> {
+        let Error { msg, source } = self;
+        match source {
+            Some(boxed) => match boxed.downcast::<T>() {
+                Ok(t) => Ok(*t),
+                Err(boxed) => Err(Error { msg, source: Some(boxed) }),
+            },
+            None => Err(Error { msg, source: None }),
+        }
     }
 }
 
@@ -39,7 +75,7 @@ impl fmt::Debug for Error {
 // and lets `?` lift any std error into an `anyhow::Error`.
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        Error { msg: e.to_string() }
+        Error::new(e)
     }
 }
 
@@ -64,23 +100,65 @@ impl<T> Context<T> for Option<T> {
 
 impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
     fn context<C: fmt::Display>(self, context: C) -> Result<T> {
-        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+        self.map_err(|e| Error { msg: format!("{context}: {e}"), source: None })
     }
 
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
-        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()), source: None })
+    }
+}
+
+/// Implementation detail of [`anyhow!`]: upstream's autoref-specialization
+/// trick, so `anyhow!(typed_error)` keeps the payload downcastable while
+/// `anyhow!(displayable)` still works for plain messages.
+#[doc(hidden)]
+pub mod private {
+    use super::Error;
+    use std::fmt::{Debug, Display};
+
+    pub struct Adhoc;
+    pub trait AdhocKind: Sized {
+        fn anyhow_kind(&self) -> Adhoc {
+            Adhoc
+        }
+    }
+    impl<T: ?Sized + Display + Debug + Send + Sync + 'static> AdhocKind for &T {}
+
+    pub struct Trait;
+    pub trait TraitKind: Sized {
+        fn anyhow_kind(&self) -> Trait {
+            Trait
+        }
+    }
+    impl<E: std::error::Error + Send + Sync + 'static> TraitKind for E {}
+
+    impl Adhoc {
+        pub fn new<M: Display + Debug + Send + Sync + 'static>(self, message: M) -> Error {
+            Error::msg(message)
+        }
+    }
+    impl Trait {
+        pub fn new<E: std::error::Error + Send + Sync + 'static>(self, error: E) -> Error {
+            Error::new(error)
+        }
     }
 }
 
 /// Construct an [`Error`] from a format string or any displayable value.
+/// A value that implements `std::error::Error` keeps its typed payload
+/// (downcastable); anything else becomes a plain message.
 #[macro_export]
 macro_rules! anyhow {
     ($msg:literal $(,)?) => {
         $crate::Error::msg(::std::format!($msg))
     };
-    ($err:expr $(,)?) => {
-        $crate::Error::msg($err)
-    };
+    ($err:expr $(,)?) => {{
+        #[allow(unused_imports)]
+        use $crate::private::{AdhocKind, TraitKind};
+        match $err {
+            error => (&error).anyhow_kind().new(error),
+        }
+    }};
     ($fmt:expr, $($arg:tt)*) => {
         $crate::Error::msg(::std::format!($fmt, $($arg)*))
     };
@@ -165,5 +243,43 @@ mod tests {
     fn error_is_send_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Error>();
+    }
+
+    #[test]
+    fn typed_payload_survives_lifting_and_downcasts() {
+        // `?`-lifted.
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.downcast_ref::<std::io::Error>().unwrap().kind(), std::io::ErrorKind::Other);
+        // anyhow!(typed) and bail!(typed).
+        let e = anyhow!(io_err());
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        fn bails() -> Result<()> {
+            bail!(io_err());
+        }
+        assert!(bails().unwrap_err().downcast_ref::<std::io::Error>().is_some());
+        // anyhow!(plain displayable) has no payload.
+        let e = anyhow!("just text".to_string());
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+    }
+
+    #[test]
+    fn error_context_keeps_payload_and_prefixes_message() {
+        let e = Error::new(io_err()).context("while flushing");
+        assert_eq!(e.to_string(), "while flushing: disk on fire");
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+    }
+
+    #[test]
+    fn downcast_by_value_roundtrips() {
+        let e = Error::new(io_err());
+        let io = e.downcast::<std::io::Error>().unwrap();
+        assert_eq!(io.to_string(), "disk on fire");
+        let e = Error::msg("plain");
+        let e = e.downcast::<std::io::Error>().unwrap_err();
+        assert_eq!(e.to_string(), "plain");
     }
 }
