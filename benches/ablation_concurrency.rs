@@ -1,7 +1,7 @@
 //! Ablation — workflow concurrency and dispatch overhead through the
 //! execution engine.
 //!
-//! Nine sections:
+//! Ten sections:
 //!
 //! 1. **Wall clock**: throughput of 1 / 4 / 16 / 64 concurrent runs of a
 //!    two-stage workflow (2 IoT generators -> 1 edge reducer) whose stages
@@ -82,13 +82,30 @@
 //!    Non-smoke asserts >= 90% goodput at a 5% fault rate with retries on,
 //!    and that data-path detection beats the sweep interval.
 //!
+//! 10. **Federation plane (multi-coordinator scaling)**: 1/2/4 coordinators
+//!    jointly serving one shared 64-resource fleet (9 cells x 6 boxes +
+//!    hubs + cloud), every coordinator behind a real REST gateway and
+//!    reaching its peers only through those sockets. Sustained synchronous
+//!    Realtime submissions are routed to each app's hash-owner while
+//!    background drivers gossip snapshots and poll for steals; reports
+//!    submissions/sec, per-run p50/p99, and gossip staleness per member
+//!    count, then a skewed-load round where every submission is forwarded
+//!    through an idle coordinator to a one-worker owner, whose queue the
+//!    idle peer must steal over the wire (steal hit rate, loan settlement).
+//!    Execution-counting handlers on the shared backends make duplicate or
+//!    lost executions observable no matter which coordinator dispatched.
+//!    Written to `BENCH_federation.json` (override with
+//!    `BENCH_FEDERATION_OUT`). Non-smoke asserts >= 1.8x submissions/sec at
+//!    4 coordinators vs 1, stolen instances > 0 under skewed load, and
+//!    exactly-expected execution counts everywhere (zero duplicates).
+//!
 //! `ABLATION_SMOKE=1` runs a tiny-N smoke pass (CI): only the hot-path,
-//! mixed-QoS, contention, control-plane, network, liveness and fault-plane
-//! sections, no throughput assertions, but all seven JSON artifacts are
-//! still produced.
+//! mixed-QoS, contention, control-plane, network, liveness, fault-plane
+//! and federation sections, no throughput assertions, but all eight JSON
+//! artifacts are still produced.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -98,11 +115,13 @@ use edgefaas::cluster::faas::{BatchCall, Executor, FaasBackend, NativeExecutor};
 use edgefaas::cluster::gateway::FaasGateway;
 use edgefaas::cluster::spec::ResourceSpec;
 use edgefaas::coordinator::functions::FunctionPackage;
+use edgefaas::coordinator::gateway::EdgeFaasGateway;
 use edgefaas::coordinator::handle::HttpHandle;
 use edgefaas::coordinator::scheduler::FunctionCreation;
 use edgefaas::coordinator::{
-    Affinity, AffinityType, EdgeFaaS, FunctionConfig, LocalHandle, Priority, QoS, Reduce,
-    Requirements, ResourceHandle, ResourceId, RunId, VerbBudgets, ENGINE_SHARDS,
+    Affinity, AffinityType, EdgeFaaS, Federation, FederationConfig, FunctionConfig, LocalHandle,
+    Priority, QoS, Reduce, Requirements, ResourceHandle, ResourceId, RunId, VerbBudgets,
+    ENGINE_SHARDS,
 };
 use edgefaas::monitor::scrape::MetricsGateway;
 use edgefaas::monitor::{LeaseState, MetricsRegistry, ResourceUsage};
@@ -110,7 +129,7 @@ use edgefaas::objstore::gateway::{client as store_client, StoreGateway};
 use edgefaas::objstore::ObjectStore;
 use edgefaas::simnet::topology::mbps;
 use edgefaas::simnet::{Clock, RealClock, Tier, Topology, VirtualClock};
-use edgefaas::testbed::{paper_testbed, TestBed};
+use edgefaas::testbed::{federated_testbed, paper_testbed, FederatedBed, TestBed};
 use edgefaas::util::bytes::Bytes;
 use edgefaas::util::faults::{self, FaultKind, FaultRule};
 use edgefaas::util::http::{
@@ -587,6 +606,7 @@ fn faults_wire_bed(
         usage: Duration::from_millis(300),
         object: Duration::from_secs(5),
         invoke: Duration::from_millis(800),
+        federation: Duration::from_millis(800),
         retries: 2,
         backoff_base: Duration::from_millis(1),
         backoff_cap: Duration::from_millis(5),
@@ -723,6 +743,180 @@ fn p99_of(samples: &[f64]) -> f64 {
     let mut v = samples.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     v[((v.len() - 1) as f64 * 0.99).round() as usize]
+}
+
+/// Section 10: per-instance modeled compute on the federated wire bed.
+const FED_STAGE_S: f64 = 0.005;
+
+/// Section 10: `n` coordinators federated over one shared `cells x boxes`
+/// fleet. Every coordinator serves a real REST gateway and reaches its
+/// peers only through those sockets (gossip, forwarding, stealing);
+/// `napps` single-stage fan-out apps (`fedbench{i}`, anchored on cell
+/// `i % cells`'s boxes) are configured and deployed only on their
+/// hash-owner. Handlers sleep [`FED_STAGE_S`] and count executions on the
+/// *shared* backends, so a duplicate or lost execution is observable no
+/// matter which coordinator dispatched it. Returns (bed, gateway addrs,
+/// federations, app names, app owner indices, per-app execution counters,
+/// servers — kept alive by the caller).
+#[allow(clippy::type_complexity)]
+fn federation_wire_bed(
+    n: usize,
+    cells: usize,
+    boxes: usize,
+    napps: usize,
+    steal_threshold: usize,
+) -> (
+    FederatedBed,
+    Vec<String>,
+    Vec<Arc<Federation>>,
+    Vec<String>,
+    Vec<usize>,
+    Vec<Arc<AtomicUsize>>,
+    Vec<HttpServer>,
+) {
+    let bed = federated_testbed(Arc::new(RealClock::new()), n, cells, boxes);
+    let servers: Vec<HttpServer> = bed
+        .coordinators
+        .iter()
+        .map(|c| EdgeFaasGateway::serve(Arc::clone(c), 32).expect("bind coordinator gateway"))
+        .collect();
+    let addrs: Vec<String> = servers.iter().map(|s| s.addr()).collect();
+    let feds: Vec<Arc<Federation>> = (0..n)
+        .map(|k| {
+            let mut cfg = FederationConfig::new(k as u32, n as u32);
+            cfg.steal_threshold = steal_threshold;
+            for (j, addr) in addrs.iter().enumerate() {
+                if j != k {
+                    cfg = cfg.peer(j as u32, addr.clone());
+                }
+            }
+            Federation::enable(&bed.coordinators[k], cfg).expect("enable federation")
+        })
+        .collect();
+    let (mut apps, mut owners, mut counts) = (Vec::new(), Vec::new(), Vec::new());
+    for i in 0..napps {
+        let app = format!("fedbench{i}");
+        let count = Arc::new(AtomicUsize::new(0));
+        {
+            let count = Arc::clone(&count);
+            let clock = Arc::clone(bed.coordinators[0].clock());
+            bed.executor.register(&format!("img/{app}"), move |_: &[u8]| {
+                clock.sleep(FED_STAGE_S);
+                count.fetch_add(1, Ordering::SeqCst);
+                Ok(br#"{"outputs":[]}"#.to_vec())
+            });
+        }
+        let owner = feds[0].owner_of_app(&app) as usize;
+        let yaml = format!(
+            "application: {app}\nentrypoint: f\ndag:\n  - name: f\n    affinity:\n      \
+             nodetype: iot\n      affinitytype: data\n    reduce: auto\n"
+        );
+        let mut data = HashMap::new();
+        data.insert("f".to_string(), bed.cell_boxes[i % cells].clone());
+        bed.coordinators[owner].configure_application(&yaml, &data).unwrap();
+        bed.coordinators[owner]
+            .deploy_function(&app, "f", &FunctionPackage { code: format!("img/{app}") })
+            .unwrap();
+        apps.push(app);
+        owners.push(owner);
+        counts.push(count);
+    }
+    // Seed every snapshot: each member sweeps its owned slice, then
+    // gossips it to the peers over the wire — after this, every
+    // coordinator can schedule onto the whole fleet.
+    for fed in &feds {
+        fed.sweep_owned();
+    }
+    for fed in &feds {
+        fed.push_gossip();
+    }
+    (bed, addrs, feds, apps, owners, counts, servers)
+}
+
+/// One sustained-submission series: `clients` threads each POST `reqs`
+/// synchronous Realtime runs, cycling over the apps and routing every
+/// submission to its owner's gateway. Returns (wall seconds,
+/// submissions/sec, per-run latency stats, p99).
+fn federation_series(
+    addrs: &[String],
+    apps: &[String],
+    owners: &[usize],
+    clients: usize,
+    reqs: usize,
+) -> (f64, f64, Stats, f64) {
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let addrs = addrs.to_vec();
+            let apps = apps.to_vec();
+            let owners = owners.to_vec();
+            std::thread::spawn(move || {
+                let mut lat = Vec::with_capacity(reqs);
+                for j in 0..reqs {
+                    let i = (c + j) % apps.len();
+                    let path = format!("/apps/{}/run?priority=realtime", apps[i]);
+                    let t = std::time::Instant::now();
+                    let resp = http::post_json(&addrs[owners[i]], &path, &Json::obj()).unwrap();
+                    assert_eq!(resp.status, 200, "{}", resp.body_str().unwrap_or(""));
+                    lat.push(t.elapsed().as_secs_f64());
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let p99 = p99_of(&all);
+    (wall, (clients * reqs) as f64 / wall, Stats::of(all), p99)
+}
+
+/// One federation round at `n` coordinators on a fresh shared fleet: an
+/// untimed warm pass (pays every box's cold start and spins up its one
+/// replica per function), then the timed Realtime series, with background
+/// federation drivers gossiping and polling for steals throughout.
+/// Returns (submissions/sec, latency stats, p99, max gossip staleness
+/// across members — `None` with a single coordinator — executions
+/// observed, executions expected).
+fn federation_round(
+    n: usize,
+    cells: usize,
+    boxes: usize,
+    napps: usize,
+    clients: usize,
+    reqs: usize,
+) -> (f64, Stats, f64, Option<f64>, usize, usize) {
+    let (bed, addrs, feds, apps, owners, counts, _servers) =
+        federation_wire_bed(n, cells, boxes, napps, 8);
+    for c in &bed.coordinators {
+        // A fixed worker budget per coordinator (the scaling lever under
+        // test) and one admission slot per box: each box keeps exactly
+        // one warm replica per function, so the 1.8 s IoT cold start is
+        // paid once per (function, box), in the warm pass, never in the
+        // timed series.
+        c.set_engine_limits(8, 1);
+    }
+    for fed in &feds {
+        fed.start(0.2);
+    }
+    // Warm pass at full client concurrency; every app is hit because the
+    // clients' app cycles start at distinct offsets.
+    let _ = federation_series(&addrs, &apps, &owners, clients, 1);
+    let (_, rate, lat, p99) = federation_series(&addrs, &apps, &owners, clients, reqs);
+    let stale = feds
+        .iter()
+        .filter_map(|f| f.gossip_staleness())
+        .fold(None, |a: Option<f64>, s| Some(a.map_or(s, |a| a.max(s))));
+    for fed in &feds {
+        fed.stop();
+    }
+    // Synchronous runs: every execution landed before its POST returned,
+    // so the counters must equal (warm + timed) submissions x fan-out.
+    let executed: usize = counts.iter().map(|c| c.load(Ordering::SeqCst)).sum();
+    let expected = clients * (1 + reqs) * boxes;
+    (rate, lat, p99, stale, executed, expected)
 }
 
 /// Section 7: `clients` threads each issue `reqs` echo requests against
@@ -1403,6 +1597,185 @@ fn main() {
         "wrote {faults_path} (goodput at 5% faults with retries: {:.1}%)",
         goodput_5pct_retries * 100.0
     );
+
+    // --- Section 10: federation plane -------------------------------------
+    // N coordinators jointly serving one shared fleet over real sockets:
+    // sustained synchronous Realtime submissions routed to each app's
+    // hash-owner while gossip/steal drivers tick, at 1/2/4 coordinators;
+    // then a skewed-load round where an idle coordinator must steal a
+    // saturated peer's queue over the wire.
+    println!("\nfederation plane: sustained submissions vs coordinator count (real sockets)");
+    let (fed_cells, fed_boxes) = if smoke { (2, 2) } else { (9, 6) };
+    let fed_napps = if smoke { 4 } else { 8 };
+    let fed_clients = if smoke { 4 } else { 48 };
+    let fed_reqs = if smoke { 4 } else { 32 };
+    let member_counts: Vec<usize> = if smoke { vec![1, 2] } else { vec![1, 2, 4] };
+    // (coordinators, submissions/s, latency, p99, staleness, executed, expected)
+    let mut fed_rows: Vec<(usize, f64, Stats, f64, Option<f64>, usize, usize)> = Vec::new();
+    for &n in &member_counts {
+        let (rate, lat, p99, stale, executed, expected) =
+            federation_round(n, fed_cells, fed_boxes, fed_napps, fed_clients, fed_reqs);
+        fed_rows.push((n, rate, lat, p99, stale, executed, expected));
+    }
+    let fed_base_rate = fed_rows[0].1;
+    let mut tfed = Table::new(
+        "Federation: sustained Realtime submissions, owner-routed over the shared wire bed",
+        &["coordinators", "submissions/s", "p50", "p99", "gossip staleness", "speedup vs 1"],
+    );
+    for &(n, rate, ref lat, p99, stale, _, _) in &fed_rows {
+        tfed.row(&[
+            n.to_string(),
+            format!("{rate:.0}"),
+            Stats::fmt(lat.p50),
+            Stats::fmt(p99),
+            stale.map(Stats::fmt).unwrap_or_else(|| "-".into()),
+            format!("{:.2}x", rate / fed_base_rate),
+        ]);
+    }
+    tfed.print();
+
+    // Skewed load: every submission enters through the idle thief and is
+    // forwarded to the single app's owner, whose one-worker engine is
+    // pinned by the first cold start — the thief must steal the queued
+    // instances over the wire and execute them on the shared backends.
+    let (sbed, saddrs, sfeds, sapps, sowners, scounts, _sservers) =
+        federation_wire_bed(2, 1, fed_boxes.min(4), 1, 2);
+    let victim = sowners[0];
+    let thief = 1 - victim;
+    sbed.coordinators[victim].set_engine_shards(1);
+    sbed.coordinators[victim].set_engine_limits(1, 8);
+    sbed.coordinators[thief].set_engine_limits(8, 8);
+    let skew_runs = if smoke { 6 } else { 16 };
+    let skew_boxes = sbed.cell_boxes[0].len();
+    for _ in 0..skew_runs {
+        let resp = http::post_json(
+            &saddrs[thief],
+            &format!("/apps/{}/run?async=true", sapps[0]),
+            &Json::obj(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 202, "{}", resp.body_str().unwrap_or(""));
+    }
+    let skew_expected = skew_runs * skew_boxes;
+    let t0 = std::time::Instant::now();
+    while scounts[0].load(Ordering::SeqCst) < skew_expected {
+        sfeds[thief].steal_once();
+        assert!(
+            t0.elapsed().as_secs_f64() < 120.0,
+            "skewed fleet failed to drain: {}/{skew_expected} executions",
+            scounts[0].load(Ordering::SeqCst)
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // Loan settlement (the thief's completion reports) trails the last
+    // execution — and a duplicate execution would land in this window.
+    let t1 = std::time::Instant::now();
+    while sbed.coordinators[victim].federation_loans().4 != 0 && t1.elapsed().as_secs_f64() < 30.0
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    let skew_executed = scounts[0].load(Ordering::SeqCst);
+    let (spolls, shits, sstolen, sexecuted, sreturned) = sfeds[thief].steal_counters();
+    let (lent, loan_completed, loan_requeued, loan_reclaimed, loan_outstanding) =
+        sbed.coordinators[victim].federation_loans();
+    let (sforwards, sforward_failures) = sfeds[thief].forward_counters();
+    let steal_hit_rate = if spolls > 0 { shits as f64 / spolls as f64 } else { 0.0 };
+    println!(
+        "skewed load: {skew_runs} forwarded runs, {sstolen} instances stolen over the wire \
+         (hit rate {:.0}%), {skew_executed}/{skew_expected} executions, {loan_outstanding} \
+         loans outstanding",
+        steal_hit_rate * 100.0
+    );
+
+    let top_members = *member_counts.last().unwrap();
+    let fed_speedup = fed_rows.last().unwrap().1 / fed_base_rate;
+    let mut feddoc = Json::obj();
+    let mut fed_series = Vec::new();
+    for &(n, rate, ref lat, p99, stale, executed, expected) in &fed_rows {
+        let mut l = stats_json(lat);
+        l.set("p99", p99.into());
+        let mut o = Json::obj();
+        o.set("coordinators", (n as u64).into())
+            .set("submissions_per_s", rate.into())
+            .set("latency_s", l)
+            .set("executed", (executed as u64).into())
+            .set("expected", (expected as u64).into());
+        if let Some(s) = stale {
+            o.set("gossip_staleness_s", s.into());
+        }
+        fed_series.push(o);
+    }
+    let mut loans = Json::obj();
+    loans
+        .set("lent", lent.into())
+        .set("completed", loan_completed.into())
+        .set("requeued", loan_requeued.into())
+        .set("reclaimed", loan_reclaimed.into())
+        .set("outstanding", (loan_outstanding as u64).into());
+    let mut steal = Json::obj();
+    steal
+        .set("polls", spolls.into())
+        .set("hits", shits.into())
+        .set("hit_rate", steal_hit_rate.into())
+        .set("instances_stolen", sstolen.into())
+        .set("executed_by_thief", sexecuted.into())
+        .set("returned", sreturned.into())
+        .set("forwards", sforwards.into())
+        .set("forward_failures", sforward_failures.into())
+        .set("runs", (skew_runs as u64).into())
+        .set("executed", (skew_executed as u64).into())
+        .set("expected", (skew_expected as u64).into())
+        .set("loans", loans);
+    feddoc
+        .set("bench", "federation".into())
+        .set("clock", "real".into())
+        .set("smoke", smoke.into())
+        .set("cells", (fed_cells as u64).into())
+        .set("boxes_per_cell", (fed_boxes as u64).into())
+        .set("apps", (fed_napps as u64).into())
+        .set("clients", (fed_clients as u64).into())
+        .set("requests_per_client", (fed_reqs as u64).into())
+        .set(
+            "member_counts",
+            Json::Arr(member_counts.iter().map(|&n| Json::Num(n as f64)).collect()),
+        )
+        .set("series", Json::Arr(fed_series))
+        .set("skewed_steal", steal)
+        .set("speedup_level_members", (top_members as u64).into())
+        .set("speedup_vs_single_coordinator", fed_speedup.into());
+    let federation_path = std::env::var("BENCH_FEDERATION_OUT")
+        .unwrap_or_else(|_| "BENCH_federation.json".to_string());
+    std::fs::write(&federation_path, feddoc.to_string()).expect("write federation bench json");
+    println!(
+        "wrote {federation_path} (speedup at {top_members} coordinators: {fed_speedup:.2}x)"
+    );
+
+    if !smoke {
+        assert!(
+            fed_speedup >= 1.8,
+            "{top_members} coordinators must sustain >= 1.8x the single-coordinator \
+             submission rate over the shared fleet: {:.0}/s vs {fed_base_rate:.0}/s \
+             ({fed_speedup:.2}x < 1.8x)",
+            fed_rows.last().unwrap().1
+        );
+        assert!(
+            sstolen > 0,
+            "an idle coordinator facing a saturated peer must steal over the wire"
+        );
+        for &(n, _, _, _, _, executed, expected) in &fed_rows {
+            assert_eq!(
+                executed, expected,
+                "duplicate or lost executions at {n} coordinator(s)"
+            );
+        }
+        assert_eq!(
+            skew_executed, skew_expected,
+            "duplicate or lost executions under skewed load"
+        );
+        assert_eq!(loan_outstanding, 0, "every loan must settle after the skewed drain");
+        assert_eq!(sforward_failures, 0, "forwarding through a healthy fleet must not fail");
+    }
 
     if !smoke && cfg!(target_os = "linux") {
         assert!(

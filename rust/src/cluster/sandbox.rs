@@ -49,7 +49,7 @@ pub struct SandboxManager {
     pub idle_timeout: f64,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum SandboxError {
     NotDeployed(String),
     Exhausted { need_mem: u64, need_gpu: u32, free_mem: u64, free_gpu: u32 },
@@ -127,6 +127,20 @@ impl SandboxManager {
         self.gpus_used += demand.gpus;
         pool.busy += 1;
         Ok(Admission::Cold)
+    }
+
+    /// Admit one request for each of `functions` in a single call — the
+    /// batch entry behind `FaasBackend::invoke_batch`'s one-lock-pass
+    /// admission. Results line up with `functions`; each element has
+    /// exactly the semantics of calling [`SandboxManager::admit`] in that
+    /// order (earlier admissions in the batch consume capacity seen by
+    /// later ones), and a failed admission leaves the others untouched.
+    pub fn admit_batch(
+        &mut self,
+        functions: &[&str],
+        now: f64,
+    ) -> Vec<Result<Admission, SandboxError>> {
+        functions.iter().map(|f| self.admit(f, now)).collect()
     }
 
     /// Complete one request: the sandbox returns to the warm pool.
@@ -222,6 +236,26 @@ mod tests {
         assert!(m.admit("g", 0.0).is_err(), "only 2 GPUs");
         m.unregister("g");
         assert_eq!(m.gpus_used(), 0);
+    }
+
+    #[test]
+    fn batch_admission_matches_sequential_order() {
+        let mut m = SandboxManager::new(640 * MB, 2);
+        m.register("f", SandboxDemand { memory: 256 * MB, gpus: 0 });
+        m.register("g", SandboxDemand { memory: 256 * MB, gpus: 0 });
+        // Warm one `f` sandbox so the batch sees a mixed warm/cold pool.
+        m.admit("f", 0.0).unwrap();
+        m.release("f", 0.0);
+        let out = m.admit_batch(&["f", "g", "f", "missing"], 1.0);
+        assert_eq!(out[0], Ok(Admission::Warm), "reuses the warm sandbox");
+        assert_eq!(out[1], Ok(Admission::Cold));
+        assert_eq!(out[2], Ok(Admission::Cold), "second f cold-starts");
+        assert!(matches!(out[3], Err(SandboxError::NotDeployed(_))));
+        // Capacity drained by the batch exactly as sequential admits would:
+        // 3 × 256 MB busy, 640 MB cap → the next admit is refused.
+        assert!(matches!(m.admit("g", 1.0), Err(SandboxError::Exhausted { .. })));
+        assert_eq!(m.replicas("f"), 2);
+        assert_eq!(m.replicas("g"), 1);
     }
 
     #[test]

@@ -252,6 +252,15 @@ pub struct AutoRescheduleConfig {
     /// holding its last value forever, so a deadline miss hours later
     /// does not migrate a long-cold former hot spot.
     pub idle_half_life_s: f64,
+    /// Sliding-window migration budget per *application*: at most this
+    /// many migration attempts (across all of the app's functions) within
+    /// any `migration_window_s` span. The per-function gates above stop
+    /// one function from thrashing; this stops an app whose functions
+    /// take turns being hot from churning its deployments continuously.
+    /// `usize::MAX` (the default) disables the budget.
+    pub max_migrations_per_app: usize,
+    /// Length (seconds) of the `max_migrations_per_app` sliding window.
+    pub migration_window_s: f64,
 }
 
 impl Default for AutoRescheduleConfig {
@@ -263,6 +272,8 @@ impl Default for AutoRescheduleConfig {
             cooldown_s: 60.0,
             improvement_factor: 0.9,
             idle_half_life_s: 300.0,
+            max_migrations_per_app: usize::MAX,
+            migration_window_s: 60.0,
         }
     }
 }
@@ -281,6 +292,10 @@ pub struct AutoRescheduler {
     outcomes: Mutex<HashMap<String, (f64, f64)>>,
     /// Last migration-attempt clock time per qualified function.
     last_attempt: Mutex<HashMap<String, f64>>,
+    /// Admitted-attempt clock times per application, pruned to the
+    /// sliding `migration_window_s` — the `max_migrations_per_app`
+    /// budget's evidence.
+    app_attempts: Mutex<HashMap<String, Vec<f64>>>,
     /// Functions with a migration job currently queued/running.
     inflight: Mutex<HashSet<String>>,
     /// Migration attempts dispatched (rate limit and in-flight gate
@@ -362,9 +377,10 @@ impl AutoRescheduler {
     /// The in-flight lock is held across check *and* insert: engine events
     /// fire on concurrent worker threads, and a check-then-reacquire gap
     /// would let two events both dispatch a migration for one function.
-    /// (Lock order inflight → outcomes → last_attempt; this is the only
-    /// place they nest. The ewma lock is taken *before* inflight and
-    /// released first — `max_effective` never nests inside the others.)
+    /// (Lock order inflight → outcomes → last_attempt → app_attempts;
+    /// this is the only place they nest. The ewma lock is taken *before*
+    /// inflight and released first — `max_effective` never nests inside
+    /// the others.)
     fn admit_attempt(&self, qname: &str, now: f64) -> bool {
         let hotness = self.max_effective(qname, now);
         let mut inflight = self.inflight.lock().unwrap();
@@ -389,6 +405,18 @@ impl AutoRescheduler {
                 return false;
             }
         }
+        // Per-app sliding-window budget, checked last so a refusal leaves
+        // every earlier gate's state untouched (a budget-refused attempt
+        // must not reset the rate limit or enter the cooldown).
+        let app = qname.split_once('.').map(|(a, _)| a).unwrap_or(qname);
+        let mut per_app = self.app_attempts.lock().unwrap();
+        let window = per_app.entry(app.to_string()).or_default();
+        window.retain(|&t| now - t < self.cfg.migration_window_s);
+        if window.len() >= self.cfg.max_migrations_per_app {
+            return false;
+        }
+        window.push(now);
+        drop(per_app);
         last.insert(qname.to_string(), now);
         inflight.insert(qname.to_string());
         // No samples yet → pre-hotness ∞, so the next trigger inside the
@@ -428,6 +456,7 @@ impl EdgeFaaS {
             ewma: Mutex::new(HashMap::new()),
             outcomes: Mutex::new(HashMap::new()),
             last_attempt: Mutex::new(HashMap::new()),
+            app_attempts: Mutex::new(HashMap::new()),
             inflight: Mutex::new(HashSet::new()),
             attempts: AtomicU64::new(0),
             moved: AtomicU64::new(0),
@@ -733,6 +762,7 @@ dag:
             ewma: Mutex::new(HashMap::new()),
             outcomes: Mutex::new(HashMap::new()),
             last_attempt: Mutex::new(HashMap::new()),
+            app_attempts: Mutex::new(HashMap::new()),
             inflight: Mutex::new(HashSet::new()),
             attempts: AtomicU64::new(0),
             moved: AtomicU64::new(0),
@@ -789,5 +819,33 @@ dag:
         assert!(!policy.admit_attempt("a.f", 7.0));
         // …until the cooldown itself lapses.
         assert!(policy.admit_attempt("a.f", 200.0), "cooldown expiry re-admits");
+    }
+
+    #[test]
+    fn per_app_migration_budget_is_a_sliding_window() {
+        let policy = bare_policy(AutoRescheduleConfig {
+            min_interval_s: 0.0,
+            cooldown_s: 0.0,
+            max_migrations_per_app: 2,
+            migration_window_s: 10.0,
+            ..AutoRescheduleConfig::default()
+        });
+        // Two different functions of one app drain the shared app budget…
+        assert!(policy.admit_attempt("a.f", 0.0));
+        policy.inflight.lock().unwrap().remove("a.f");
+        assert!(policy.admit_attempt("a.g", 1.0));
+        policy.inflight.lock().unwrap().remove("a.g");
+        // …refusing a third function inside the window, while another
+        // app's budget is untouched.
+        assert!(!policy.admit_attempt("a.h", 2.0), "app budget exhausted");
+        assert!(policy.admit_attempt("b.f", 2.0), "budget is per app");
+        // A budget refusal leaves the per-function gates untouched (no
+        // rate-limit timestamp, no cooldown entry), so once the t=0
+        // attempt slides out of the 10 s window, a.h admits normally.
+        assert!(policy.admit_attempt("a.h", 10.5), "window slid: t=0 attempt expired");
+        // The budget counts *admitted* attempts only — the t=2 refusal
+        // left no trace. In-window now: a.g (t=1) and a.h (t=10.5), so
+        // the window is full again.
+        assert!(!policy.admit_attempt("a.f", 10.6), "window refilled by the t=10.5 admit");
     }
 }

@@ -508,6 +508,43 @@ struct InstanceTask {
     retried: bool,
 }
 
+/// One queued instance lent to a federated thief coordinator
+/// (`POST /federation/steal`): the original task kept for bookkeeping —
+/// the thief reports the outcome back and [`EdgeFaaS::complete_remote_instance`]
+/// finishes the run exactly as a local completion would — plus the reclaim
+/// deadline after which an unacknowledged loan is re-enqueued locally.
+/// The attempt id travels with the loan, so a reclaim racing a slow thief
+/// is deduplicated at the backend's attempt cache (at-most-once).
+struct LentInstance {
+    task: InstanceTask,
+    /// Engine-clock time after which the loan is reclaimed.
+    reclaim_at: f64,
+}
+
+/// A queued instance exported to a thief coordinator — the
+/// `POST /federation/steal` wire payload (see [`super::federation`]).
+/// Deadlines travel as *remaining* seconds, not absolute clock times, so
+/// coordinators need not share a clock origin.
+#[derive(Debug, Clone)]
+pub struct StolenInstance {
+    pub run: RunId,
+    pub app: String,
+    pub function: String,
+    /// Index into the node's placement list (loan identity on the victim).
+    pub instance: usize,
+    /// The resource the victim had anchored the instance on.
+    pub resource: ResourceId,
+    pub class: Priority,
+    /// Remaining deadline budget at export, seconds (`None` = no deadline).
+    pub remaining_s: Option<f64>,
+    /// The fire-time invocation envelope, verbatim.
+    pub envelope: Bytes,
+    /// The victim's attempt id, preserved so the backend's dedup cache
+    /// covers thief execution racing a reclaim.
+    pub attempt: u64,
+    pub retried: bool,
+}
+
 /// Priority-queue key: strict class first, earliest deadline within the
 /// class (`u64::MAX` = none, sorts last), then submission sequence for a
 /// deterministic FIFO tie-break. Derived `Ord` is lexicographic over the
@@ -681,6 +718,15 @@ pub(super) struct EngineCore {
     /// instances dispatched.
     batch_dispatches: AtomicU64,
     instances_dispatched: AtomicU64,
+    /// Instances lent to federated thief coordinators, awaiting their
+    /// completion report, keyed `(run, function, instance)`.
+    lent: Mutex<HashMap<(RunId, String, usize), LentInstance>>,
+    /// Loan counters: exported / completed remotely / returned unexecuted
+    /// (requeued) / reclaimed after the loan deadline.
+    instances_lent: AtomicU64,
+    lent_completed: AtomicU64,
+    lent_requeued: AtomicU64,
+    lent_reclaimed: AtomicU64,
     dispatch: Vec<DispatchShard>,
     runs: Vec<RunShard>,
     coord: Coord,
@@ -752,6 +798,11 @@ impl EngineCore {
             since_batch: AtomicU64::new(0),
             batch_dispatches: AtomicU64::new(0),
             instances_dispatched: AtomicU64::new(0),
+            lent: Mutex::new(HashMap::new()),
+            instances_lent: AtomicU64::new(0),
+            lent_completed: AtomicU64::new(0),
+            lent_requeued: AtomicU64::new(0),
+            lent_reclaimed: AtomicU64::new(0),
             dispatch,
             runs,
             coord: Coord {
@@ -947,7 +998,7 @@ fn pop_best(q: &mut DispatchState, limit: usize, lo: QKey) -> Option<Task> {
 /// serialization) is rewritten in place of re-serializing the whole JSON
 /// tree. Falls back to the original envelope if the marker is missing
 /// (malformed envelopes fail downstream either way).
-fn patch_envelope_resource(envelope: &Bytes, target: ResourceId) -> Bytes {
+pub(super) fn patch_envelope_resource(envelope: &Bytes, target: ResourceId) -> Bytes {
     let Ok(s) = std::str::from_utf8(envelope) else { return envelope.clone() };
     match s.rfind(",\"resource\":") {
         Some(pos) => {
@@ -1807,6 +1858,183 @@ impl EdgeFaaS {
             batch_dispatches: eng.batch_dispatches.load(Ordering::Relaxed),
             instances_dispatched: eng.instances_dispatched.load(Ordering::Relaxed),
         }
+    }
+
+    /// Queued instances (ready + admission-deferred; jobs excluded) per
+    /// active dispatch shard — the overload signal `GET /engine/stats`
+    /// serves and federated work stealing polls for. Index = shard id.
+    pub fn shard_queue_depths(&self) -> Vec<usize> {
+        let eng = &self.engine;
+        (0..eng.active())
+            .map(|sid| {
+                let st = eng.dispatch[sid].state.lock().unwrap();
+                let ready =
+                    st.ready.values().filter(|t| matches!(t, Task::Instance(_))).count();
+                ready + st.deferred.len()
+            })
+            .collect()
+    }
+
+    /// Federation loan counters:
+    /// `(lent, completed, requeued, reclaimed, outstanding)`.
+    pub fn federation_loans(&self) -> (u64, u64, u64, u64, usize) {
+        let eng = &self.engine;
+        (
+            eng.instances_lent.load(Ordering::Relaxed),
+            eng.lent_completed.load(Ordering::Relaxed),
+            eng.lent_requeued.load(Ordering::Relaxed),
+            eng.lent_reclaimed.load(Ordering::Relaxed),
+            eng.lent.lock().unwrap().len(),
+        )
+    }
+
+    /// Export up to `max` queued instances from the deepest dispatch shard
+    /// to a federated thief (`POST /federation/steal`, victim side). Tasks
+    /// are popped from the *back* of the QoS order (lowest-urgency first,
+    /// admission-deferred work first) — the shard's most imminent work
+    /// keeps its local dispatch slot, classic steal semantics. Each
+    /// exported task is recorded as a loan with deadline `now +
+    /// reclaim_s`; the thief acknowledges through
+    /// [`Self::complete_remote_instance`], and [`Self::reclaim_lent`]
+    /// re-enqueues expired loans locally (same attempt id, so a reclaim
+    /// racing a slow thief stays at-most-once at the backend). Only
+    /// *queued* work is exported — run bookkeeping (`open_tasks`,
+    /// admission slots) is untouched until the completion report.
+    pub(super) fn export_stealable(
+        self: &Arc<Self>,
+        max: usize,
+        reclaim_s: f64,
+    ) -> Vec<StolenInstance> {
+        let eng = &self.engine;
+        if max == 0 {
+            return Vec::new();
+        }
+        let depths = self.shard_queue_depths();
+        let Some((sid, _)) =
+            depths.iter().enumerate().filter(|(_, d)| **d > 0).max_by_key(|(_, d)| **d)
+        else {
+            return Vec::new();
+        };
+        let now = self.clock.now();
+        let taken: Vec<InstanceTask> = {
+            let mut st = eng.dispatch[sid].state.lock().unwrap();
+            let mut out = Vec::new();
+            let deferred_keys: Vec<QKey> =
+                st.deferred.keys().rev().take(max).copied().collect();
+            for k in deferred_keys {
+                if let Some(t) = st.deferred.remove(&k) {
+                    out.push(t);
+                }
+            }
+            if out.len() < max {
+                let ready_keys: Vec<QKey> = st
+                    .ready
+                    .iter()
+                    .rev()
+                    .filter(|(_, t)| matches!(t, Task::Instance(_)))
+                    .take(max - out.len())
+                    .map(|(k, _)| *k)
+                    .collect();
+                for k in ready_keys {
+                    if let Some(Task::Instance(t)) = st.ready.remove(&k) {
+                        out.push(t);
+                    }
+                }
+            }
+            if !out.is_empty() {
+                eng.queued_instances.fetch_sub(out.len(), Ordering::SeqCst);
+                let batch = out.iter().filter(|t| t.class == Priority::Batch).count();
+                if batch > 0 {
+                    eng.queued_batch_class.fetch_sub(batch, Ordering::SeqCst);
+                }
+            }
+            out
+        };
+        if taken.is_empty() {
+            return Vec::new();
+        }
+        let mut exported = Vec::with_capacity(taken.len());
+        {
+            let mut lent = eng.lent.lock().unwrap();
+            for t in taken {
+                exported.push(StolenInstance {
+                    run: t.run,
+                    app: t.app.clone(),
+                    function: t.function.clone(),
+                    instance: t.instance,
+                    resource: t.resource,
+                    class: t.class,
+                    remaining_s: (t.deadline_ns != u64::MAX)
+                        .then(|| (t.deadline_ns as f64 / 1e9 - now).max(0.0)),
+                    envelope: t.envelope.clone(),
+                    attempt: t.attempt,
+                    retried: t.retried,
+                });
+                eng.instances_lent.fetch_add(1, Ordering::Relaxed);
+                lent.insert(
+                    (t.run, t.function.clone(), t.instance),
+                    LentInstance { task: t, reclaim_at: now + reclaim_s.max(0.0) },
+                );
+            }
+        }
+        // Queued work vanished without a dispatch: parked workers must
+        // re-evaluate (the shard may now be empty).
+        eng.coord.cv.notify_all();
+        exported
+    }
+
+    /// Settle a loan from its thief's completion report
+    /// (`POST /federation/complete`, victim side). `requeue = true` hands
+    /// the instance back unexecuted (the thief found no schedulable
+    /// target) — it re-enters the local queue with its attempt id intact;
+    /// otherwise the outcome flows through the normal completion
+    /// bookkeeping exactly like a local dispatch. Returns `false` when no
+    /// such loan is outstanding (already reclaimed or double-reported —
+    /// the report is dropped, preserving at-most-once bookkeeping).
+    pub(super) fn complete_remote_instance(
+        self: &Arc<Self>,
+        run: RunId,
+        function: &str,
+        instance: usize,
+        outcome: anyhow::Result<InstanceResult>,
+        requeue: bool,
+    ) -> bool {
+        let eng = &self.engine;
+        let loan = eng.lent.lock().unwrap().remove(&(run, function.to_string(), instance));
+        let Some(loan) = loan else { return false };
+        if requeue {
+            eng.lent_requeued.fetch_add(1, Ordering::Relaxed);
+            self.enqueue(vec![Task::Instance(loan.task)]);
+        } else {
+            eng.lent_completed.fetch_add(1, Ordering::Relaxed);
+            self.complete_batch(std::slice::from_ref(&loan.task), vec![Some(outcome)]);
+        }
+        true
+    }
+
+    /// Re-enqueue every loan past its reclaim deadline (the thief died or
+    /// partitioned mid-steal). Attempt ids are preserved, so if the thief
+    /// did execute before vanishing, the backend's attempt cache replays
+    /// the recorded outcome instead of re-executing. Returns the number
+    /// reclaimed.
+    pub(super) fn reclaim_lent(self: &Arc<Self>) -> usize {
+        let now = self.clock.now();
+        let expired: Vec<InstanceTask> = {
+            let mut lent = self.engine.lent.lock().unwrap();
+            let keys: Vec<(RunId, String, usize)> = lent
+                .iter()
+                .filter(|(_, l)| now >= l.reclaim_at)
+                .map(|(k, _)| k.clone())
+                .collect();
+            keys.into_iter().filter_map(|k| lent.remove(&k)).map(|l| l.task).collect()
+        };
+        if expired.is_empty() {
+            return 0;
+        }
+        let n = expired.len();
+        self.engine.lent_reclaimed.fetch_add(n as u64, Ordering::Relaxed);
+        self.enqueue(expired.into_iter().map(Task::Instance).collect());
+        n
     }
 
     // ------------------------------------------------------------ internal --

@@ -1,0 +1,1154 @@
+//! Multi-coordinator federation: N coordinators jointly serving one
+//! logical fleet, each *owning* a slice of the resource map.
+//!
+//! The engine is shard-structured and scheduling reads are snapshot-local,
+//! so one coordinator scales a long way *up* — this module scales the
+//! control plane *out*, mirroring EDGELESS's two-level ε-CON (across
+//! orchestration domains) / ε-ORC (within a domain) split. Every member
+//! registers the *same* resources in the same order (identical resource
+//! ids fleet-wide); membership assigns each coordinator the slices it is
+//! responsible for:
+//!
+//! * resource `r` is owned by member `r % members` — its owner scrapes and
+//!   lease-steps it ([`EdgeFaaS::refresh_monitor_snapshot`]'s scoped
+//!   variant), and only the owner's detector can declare it `Dead`
+//!   fleet-wide;
+//! * application `a` is owned by member `fnv1a(a) % members` — apps are
+//!   configured and deployed on their owner, and submissions arriving
+//!   elsewhere are forwarded there (one hop max; see the gateway's
+//!   `POST /apps/{app}/run`).
+//!
+//! Three mechanisms connect the members, all over the pooled keep-alive
+//! HTTP client with the short [`VerbBudgets::federation`] budget:
+//!
+//! 1. **Epoch-merged snapshot gossip.** Each tick a coordinator sweeps its
+//!    owned slice, then pushes its `MonitorSnapshot` view (usage samples +
+//!    leases, restricted to its owned resources plus any non-owned lease
+//!    it holds adverse evidence about) to every peer
+//!    (`POST /federation/gossip`). Receivers gate by `(sender, epoch)` —
+//!    stale or replayed pushes are skipped — and merge through
+//!    [`EdgeFaaS::merge_federated_view`]: usage adopts the newer sample,
+//!    leases are owner-authoritative, and a non-owner's worse opinion caps
+//!    at `Suspect` (pessimistic, but hearsay never drains). Phase-1
+//!    placement onto a peer's resources then needs *zero* remote scrapes,
+//!    and a merge that changed no lease state re-keys the placement
+//!    decision cache instead of invalidating it, so cached decisions stay
+//!    valid across merged epochs.
+//!
+//! 2. **Submission forwarding.** A gateway receiving `POST
+//!    /apps/{app}/run` for an app it does not own relays it to the owner,
+//!    preserving QoS class and the *remaining* deadline budget. The relay
+//!    carries a one-hop marker so a misconfigured fleet degrades to a
+//!    typed error, never a forwarding loop; a connectivity failure
+//!    surfaces as a typed 502 with the `HttpError` chain.
+//!
+//! 3. **Work stealing.** An idle coordinator polls peers' `GET
+//!    /engine/stats` for per-shard queue depths; finding one overloaded,
+//!    it pulls up to a shard's worth of *queued* instances via `POST
+//!    /federation/steal`. The victim records each exported instance as a
+//!    **loan** and the thief executes it on its own schedulable resources
+//!    (preferring the original anchor, which it also has registered),
+//!    reporting the outcome back (`POST /federation/complete`) so the
+//!    victim's run bookkeeping completes exactly as if it had dispatched
+//!    locally. Attempt ids travel with the loan: if the thief dies or
+//!    partitions mid-steal, the victim reclaims the loan after
+//!    [`FederationConfig::reclaim_s`] and re-enqueues it with the *same*
+//!    attempt id, so the backend's attempt cache keeps the
+//!    execute-vs-reclaim race at-most-once.
+//!
+//! Partition behaviour: gossip pushes and steal polls fail fast on their
+//! federation budget and count failures; submissions keep flowing on every
+//! member for the apps it owns (owner-local degradation). Healing needs no
+//! protocol — the next successful push re-merges, and outstanding loans
+//! either complete late (dropped: the loan was already reclaimed, and the
+//! dedup cache absorbed any double execution) or reclaim.
+//!
+//! Everything here is driven by [`Federation::tick`] — call it directly
+//! under virtual clocks (deterministic tests), or let
+//! [`Federation::start`] run it on a background thread (wire benches,
+//! real deployments).
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::monitor::liveness::{LeaseState, ResourceLease};
+use crate::monitor::metrics::ResourceUsage;
+use crate::monitor::snapshot::UsageSample;
+use crate::util::bytes::Bytes;
+use crate::util::http::{self, RequestOptions};
+use crate::util::json::{self, Json};
+
+use super::engine::{patch_envelope_resource, Priority, QoS, RunId, StolenInstance};
+use super::handle::VerbBudgets;
+use super::invoker::{parse_outputs, InstanceResult};
+use super::resource::{EdgeFaaS, ResourceId};
+use crate::cluster::faas::BatchCall;
+
+/// One peer coordinator: member id + gateway address (`host:port`).
+#[derive(Debug, Clone)]
+pub struct PeerSpec {
+    pub id: u32,
+    pub addr: String,
+}
+
+/// Federation membership + tuning for one coordinator.
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    /// This coordinator's member id (`0..members`).
+    pub self_id: u32,
+    /// Total member count (including self). Resource `r` is owned by
+    /// member `r % members`; app `a` by `fnv1a(a) % members`.
+    pub members: u32,
+    /// The other members' gateway addresses. May be incomplete (a member
+    /// without a known address is simply never pushed to or stolen from).
+    pub peers: Vec<PeerSpec>,
+    /// Deepest-shard queue depth at which a peer counts as overloaded
+    /// (steal trigger).
+    pub steal_threshold: usize,
+    /// Most instances pulled per steal (also the victim-side export cap).
+    pub steal_max: usize,
+    /// Most *local* queued instances a coordinator may have and still
+    /// consider itself idle enough to steal.
+    pub steal_idle_max: usize,
+    /// Seconds before an unacknowledged loan is reclaimed and re-enqueued
+    /// locally. Generous by default: a reclaim racing a slow thief is
+    /// deduplicated at the backend, but only when the anchor backend is
+    /// shared — keep this above the worst-case steal round trip.
+    pub reclaim_s: f64,
+}
+
+impl FederationConfig {
+    /// Defaults for a `members`-coordinator fleet, no peer addresses yet.
+    pub fn new(self_id: u32, members: u32) -> FederationConfig {
+        FederationConfig {
+            self_id,
+            members,
+            peers: Vec::new(),
+            steal_threshold: 8,
+            steal_max: 16,
+            steal_idle_max: 1,
+            reclaim_s: 30.0,
+        }
+    }
+
+    /// Add a peer address (builder style).
+    pub fn peer(mut self, id: u32, addr: impl Into<String>) -> FederationConfig {
+        self.peers.push(PeerSpec { id, addr: addr.into() });
+        self
+    }
+}
+
+/// FNV-1a over the app name — the consistent app→owner mapping every
+/// member computes identically (same constants as the population digests).
+fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// One coordinator's federation runtime: membership, gossip/steal
+/// counters, and the per-peer merge gate. Attached to the coordinator by
+/// [`Federation::enable`]; holds only a `Weak` back-reference, so dropping
+/// the coordinator also retires its federation driver.
+pub struct Federation {
+    cfg: FederationConfig,
+    faas: Weak<EdgeFaaS>,
+    /// Last merged snapshot epoch per sender — the gossip replay gate.
+    merged_epoch: Mutex<HashMap<u32, u64>>,
+    gossip_pushed: AtomicU64,
+    gossip_push_failures: AtomicU64,
+    gossip_merged: AtomicU64,
+    gossip_skipped: AtomicU64,
+    forwards: AtomicU64,
+    forward_failures: AtomicU64,
+    steal_polls: AtomicU64,
+    steal_hits: AtomicU64,
+    instances_stolen: AtomicU64,
+    stolen_executed: AtomicU64,
+    stolen_returned: AtomicU64,
+    complete_push_failures: AtomicU64,
+    driver_stop: AtomicBool,
+    driver_running: AtomicBool,
+}
+
+impl Federation {
+    /// Validate `cfg` and attach a federation runtime to `faas`
+    /// (reachable afterwards through `EdgeFaaS::federation`). Does not
+    /// start the background driver — call [`Federation::start`], or drive
+    /// [`Federation::tick`] manually under a virtual clock.
+    pub fn enable(faas: &Arc<EdgeFaaS>, cfg: FederationConfig) -> anyhow::Result<Arc<Federation>> {
+        anyhow::ensure!(cfg.members >= 1, "federation needs at least one member");
+        anyhow::ensure!(
+            cfg.self_id < cfg.members,
+            "self_id {} out of range for {} member(s)",
+            cfg.self_id,
+            cfg.members
+        );
+        let mut seen = BTreeSet::new();
+        for p in &cfg.peers {
+            anyhow::ensure!(p.id != cfg.self_id, "peer id {} is self", p.id);
+            anyhow::ensure!(
+                p.id < cfg.members,
+                "peer id {} out of range for {} member(s)",
+                p.id,
+                cfg.members
+            );
+            anyhow::ensure!(seen.insert(p.id), "duplicate peer id {}", p.id);
+        }
+        let fed = Arc::new(Federation {
+            cfg,
+            faas: Arc::downgrade(faas),
+            merged_epoch: Mutex::new(HashMap::new()),
+            gossip_pushed: AtomicU64::new(0),
+            gossip_push_failures: AtomicU64::new(0),
+            gossip_merged: AtomicU64::new(0),
+            gossip_skipped: AtomicU64::new(0),
+            forwards: AtomicU64::new(0),
+            forward_failures: AtomicU64::new(0),
+            steal_polls: AtomicU64::new(0),
+            steal_hits: AtomicU64::new(0),
+            instances_stolen: AtomicU64::new(0),
+            stolen_executed: AtomicU64::new(0),
+            stolen_returned: AtomicU64::new(0),
+            complete_push_failures: AtomicU64::new(0),
+            driver_stop: AtomicBool::new(false),
+            driver_running: AtomicBool::new(false),
+        });
+        *faas.federation.write().unwrap() = Some(Arc::clone(&fed));
+        Ok(fed)
+    }
+
+    pub fn config(&self) -> &FederationConfig {
+        &self.cfg
+    }
+
+    // -------------------------------------------------------- ownership --
+
+    /// The member owning application `app` (consistent across members).
+    pub fn owner_of_app(&self, app: &str) -> u32 {
+        (fnv1a64(app) % self.cfg.members.max(1) as u64) as u32
+    }
+
+    pub fn owns_app(&self, app: &str) -> bool {
+        self.owner_of_app(app) == self.cfg.self_id
+    }
+
+    /// The member owning resource `rid` (consistent because every member
+    /// registers the same resources in the same order).
+    pub fn owner_of_resource(&self, rid: ResourceId) -> u32 {
+        rid % self.cfg.members.max(1)
+    }
+
+    pub fn owns_resource(&self, rid: ResourceId) -> bool {
+        self.owner_of_resource(rid) == self.cfg.self_id
+    }
+
+    /// The registered resources this coordinator owns.
+    pub fn owned_resources(&self, faas: &EdgeFaaS) -> BTreeSet<ResourceId> {
+        faas.resource_ids().into_iter().filter(|&r| self.owns_resource(r)).collect()
+    }
+
+    /// A peer's gateway address, when known.
+    pub fn peer_addr(&self, id: u32) -> Option<&str> {
+        self.cfg.peers.iter().find(|p| p.id == id).map(|p| p.addr.as_str())
+    }
+
+    /// Where `POST /apps/{app}/run` must forward: the owner's address, or
+    /// `None` when this coordinator owns the app (or the owner's address
+    /// is unknown — serve locally rather than black-hole).
+    pub fn forward_target(&self, app: &str) -> Option<&str> {
+        let owner = self.owner_of_app(app);
+        if owner == self.cfg.self_id {
+            return None;
+        }
+        self.peer_addr(owner)
+    }
+
+    /// Count a forward attempt (gateway-side bookkeeping).
+    pub fn note_forward(&self, ok: bool) {
+        if ok {
+            self.forwards.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.forward_failures.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    // ----------------------------------------------------------- gossip --
+
+    /// Sweep (scrape + lease-step) only the owned slice, carrying peers'
+    /// entries forward untouched. Returns the published epoch (0 when the
+    /// coordinator is gone).
+    pub fn sweep_owned(&self) -> u64 {
+        let Some(faas) = self.faas.upgrade() else { return 0 };
+        let owned = self.owned_resources(&faas);
+        faas.refresh_monitor_snapshot_scoped(Some(&owned))
+    }
+
+    /// This coordinator's gossip payload: its snapshot view restricted to
+    /// the resources it owns (authoritative), plus any non-owned lease it
+    /// holds adverse (non-`Alive`) evidence about — the warning channel
+    /// behind the receiver's pessimistic `Suspect` cap.
+    pub fn export_view(&self) -> anyhow::Result<Json> {
+        let faas = self.faas.upgrade().ok_or_else(|| anyhow::anyhow!("coordinator gone"))?;
+        let snap = faas.monitor_snapshot();
+        let owned = self.owned_resources(&faas);
+        let mut usage = Json::obj();
+        for (rid, sample) in snap.samples() {
+            if owned.contains(&rid) {
+                usage.set(&rid.to_string(), usage_to_json(sample));
+            }
+        }
+        let mut leases = Json::obj();
+        for (rid, lease) in snap.leases() {
+            if owned.contains(&rid) || lease.state != LeaseState::Alive {
+                leases.set(&rid.to_string(), lease_to_json(lease));
+            }
+        }
+        let mut v = Json::obj();
+        v.set("from", (self.cfg.self_id as u64).into())
+            .set("epoch", snap.epoch.into())
+            .set("taken_at", snap.taken_at.into())
+            .set("owned", Json::Arr(owned.iter().map(|&r| (r as u64).into()).collect()))
+            .set("usage", usage)
+            .set("leases", leases);
+        Ok(v)
+    }
+
+    /// Push the current view to every known peer. Returns
+    /// `(delivered, failed)`; failures are counted, logged and otherwise
+    /// ignored (the next tick pushes a fresher epoch anyway).
+    pub fn push_gossip(&self) -> (usize, usize) {
+        let Ok(view) = self.export_view() else { return (0, 0) };
+        let body = view.to_string();
+        let (mut delivered, mut failed) = (0usize, 0usize);
+        for peer in &self.cfg.peers {
+            match self.peer_post_raw(&peer.addr, "/federation/gossip", body.as_bytes()) {
+                Ok(()) => {
+                    self.gossip_pushed.fetch_add(1, Ordering::Relaxed);
+                    delivered += 1;
+                }
+                Err(e) => {
+                    self.gossip_push_failures.fetch_add(1, Ordering::Relaxed);
+                    failed += 1;
+                    log::debug!(
+                        "federation {}: gossip push to {} failed: {e}",
+                        self.cfg.self_id,
+                        peer.addr
+                    );
+                }
+            }
+        }
+        (delivered, failed)
+    }
+
+    /// Receive a peer's gossip push (`POST /federation/gossip`). Returns
+    /// `Ok(None)` when the push was skipped as stale (the sender's epoch
+    /// was already merged), `Ok(Some(local_epoch))` after a merge.
+    pub fn receive_gossip(&self, body: &Json) -> anyhow::Result<Option<u64>> {
+        let faas = self.faas.upgrade().ok_or_else(|| anyhow::anyhow!("coordinator gone"))?;
+        let from = body
+            .get("from")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("gossip: missing `from`"))? as u32;
+        anyhow::ensure!(from != self.cfg.self_id, "gossip: from self");
+        let epoch = body.get("epoch").and_then(Json::as_u64).unwrap_or(0);
+        {
+            // Replay/staleness gate, per sender: snapshot epochs are
+            // strictly increasing on each coordinator.
+            let mut merged = self.merged_epoch.lock().unwrap();
+            if merged.get(&from).is_some_and(|&last| epoch <= last) {
+                self.gossip_skipped.fetch_add(1, Ordering::Relaxed);
+                return Ok(None);
+            }
+            merged.insert(from, epoch);
+        }
+        let mut authoritative = BTreeSet::new();
+        if let Some(owned) = body.get("owned").and_then(Json::as_arr) {
+            for v in owned {
+                if let Some(r) = v.as_u64() {
+                    authoritative.insert(r as ResourceId);
+                }
+            }
+        }
+        let mut usage = BTreeMap::new();
+        if let Some(Json::Obj(m)) = body.get("usage") {
+            for (k, v) in m {
+                if let (Ok(rid), Some(s)) = (k.parse::<ResourceId>(), usage_from_json(v)) {
+                    usage.insert(rid, s);
+                }
+            }
+        }
+        let mut leases = BTreeMap::new();
+        if let Some(Json::Obj(m)) = body.get("leases") {
+            for (k, v) in m {
+                if let (Ok(rid), Some(l)) = (k.parse::<ResourceId>(), lease_from_json(v)) {
+                    leases.insert(rid, l);
+                }
+            }
+        }
+        let local = faas.merge_federated_view(&authoritative, &usage, &leases);
+        self.gossip_merged.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(local))
+    }
+
+    /// Mean age (seconds) of the non-owned usage samples in the local
+    /// snapshot — how stale the gossiped view of peers' slices is. `None`
+    /// until a merge delivered at least one non-owned sample.
+    pub fn gossip_staleness(&self) -> Option<f64> {
+        let faas = self.faas.upgrade()?;
+        let snap = faas.monitor_snapshot();
+        let owned = self.owned_resources(&faas);
+        let now = faas.clock().now();
+        let (mut sum, mut n) = (0.0f64, 0usize);
+        for (rid, s) in snap.samples() {
+            if !owned.contains(&rid) {
+                sum += (now - s.collected_at).max(0.0);
+                n += 1;
+            }
+        }
+        (n > 0).then(|| sum / n as f64)
+    }
+
+    // ----------------------------------------------------- work stealing --
+
+    /// Victim side of `POST /federation/steal`: export up to
+    /// `min(requested, steal_max)` queued instances from the deepest
+    /// dispatch shard as loans.
+    pub fn serve_steal(&self, requested: usize) -> anyhow::Result<Json> {
+        let faas = self.faas.upgrade().ok_or_else(|| anyhow::anyhow!("coordinator gone"))?;
+        let exported =
+            faas.export_stealable(requested.min(self.cfg.steal_max), self.cfg.reclaim_s);
+        let mut v = Json::obj();
+        v.set("instances", Json::Arr(exported.iter().map(stolen_to_json).collect()));
+        Ok(v)
+    }
+
+    /// Thief side: if locally idle, poll peers for overload (deepest-shard
+    /// queue depth ≥ `steal_threshold`) and pull one batch of instances
+    /// from the first overloaded peer. Returns the number absorbed.
+    pub fn steal_once(self: &Arc<Self>) -> usize {
+        let Some(faas) = self.faas.upgrade() else { return 0 };
+        let local: usize = faas.shard_queue_depths().iter().sum();
+        if local > self.cfg.steal_idle_max {
+            return 0;
+        }
+        for peer in &self.cfg.peers {
+            self.steal_polls.fetch_add(1, Ordering::Relaxed);
+            let Ok(depth) = self.peer_queue_depth(&peer.addr) else { continue };
+            if depth < self.cfg.steal_threshold.max(1) {
+                continue;
+            }
+            match self.steal_from(&faas, &peer.addr) {
+                Ok(n) if n > 0 => {
+                    self.steal_hits.fetch_add(1, Ordering::Relaxed);
+                    return n;
+                }
+                Ok(_) => {}
+                Err(e) => log::debug!(
+                    "federation {}: steal from {} failed: {e}",
+                    self.cfg.self_id,
+                    peer.addr
+                ),
+            }
+        }
+        0
+    }
+
+    /// A peer's deepest-shard queued-instance depth (falls back to the
+    /// global counter for pre-federation gateways).
+    fn peer_queue_depth(&self, addr: &str) -> anyhow::Result<usize> {
+        let resp = http::request_with(
+            addr,
+            "GET",
+            "/engine/stats",
+            &[],
+            &[],
+            RequestOptions::with_deadline(VerbBudgets::default().federation),
+        )?;
+        anyhow::ensure!(resp.status == 200, "GET {addr}/engine/stats: status {}", resp.status);
+        let v = json::parse(std::str::from_utf8(&resp.body)?)?;
+        if let Some(depths) = v.get("queue_depths").and_then(Json::as_arr) {
+            return Ok(depths.iter().filter_map(Json::as_u64).max().unwrap_or(0) as usize);
+        }
+        Ok(v.get("queued_instances").and_then(Json::as_u64).unwrap_or(0) as usize)
+    }
+
+    fn steal_from(self: &Arc<Self>, faas: &Arc<EdgeFaaS>, victim: &str) -> anyhow::Result<usize> {
+        let mut req = Json::obj();
+        req.set("thief", (self.cfg.self_id as u64).into())
+            .set("max", self.cfg.steal_max.into());
+        let resp = http::request_with(
+            victim,
+            "POST",
+            "/federation/steal",
+            &[("Content-Type", "application/json")],
+            req.to_string().as_bytes(),
+            RequestOptions::with_deadline(VerbBudgets::default().federation),
+        )?;
+        anyhow::ensure!(resp.status == 200, "POST {victim}/federation/steal: status {}", resp.status);
+        let v = json::parse(std::str::from_utf8(&resp.body)?)?;
+        let instances = v.get("instances").and_then(Json::as_arr).unwrap_or(&[]);
+        let mut absorbed = 0usize;
+        for item in instances {
+            let st = match stolen_from_json(item) {
+                Ok(s) => s,
+                Err(e) => {
+                    // Dropped, not lost: the victim's loan reclaim covers it.
+                    log::warn!("federation: dropping malformed stolen instance: {e}");
+                    continue;
+                }
+            };
+            self.instances_stolen.fetch_add(1, Ordering::Relaxed);
+            let fed = Arc::clone(self);
+            let victim = victim.to_string();
+            let qos = QoS { priority: st.class, deadline_s: st.remaining_s };
+            faas.spawn_job_qos(qos, move |faas| fed.execute_stolen(faas, &victim, st));
+            absorbed += 1;
+        }
+        Ok(absorbed)
+    }
+
+    /// Execute one stolen instance on this coordinator's resources and
+    /// report the outcome to the victim. Target preference: the original
+    /// anchor (registered here too — same backend, so the shared attempt
+    /// cache covers any reclaim race), else the first schedulable
+    /// candidate this coordinator knows, else return the instance
+    /// unexecuted (`requeue`).
+    fn execute_stolen(self: &Arc<Self>, faas: &Arc<EdgeFaaS>, victim: &str, st: StolenInstance) {
+        let snap = faas.monitor_snapshot();
+        let schedulable = |rid: ResourceId| {
+            faas.resource(rid).is_ok()
+                && snap.lease_of(rid).map(|l| l.state.schedulable()).unwrap_or(true)
+        };
+        let target = if schedulable(st.resource) {
+            Some(st.resource)
+        } else {
+            faas.candidates_of(&st.app, &st.function)
+                .unwrap_or_default()
+                .into_iter()
+                .find(|&r| schedulable(r))
+        };
+        let mut report = Json::obj();
+        report
+            .set("run", st.run.into())
+            .set("function", st.function.as_str().into())
+            .set("instance", st.instance.into());
+        match target {
+            None => {
+                self.stolen_returned.fetch_add(1, Ordering::Relaxed);
+                report.set("requeue", true.into());
+            }
+            Some(rid) => {
+                self.stolen_executed.fetch_add(1, Ordering::Relaxed);
+                match Self::invoke_stolen(faas, rid, &st) {
+                    Ok(res) => {
+                        report
+                            .set("ok", true.into())
+                            .set("resource", (res.resource as u64).into())
+                            .set("latency", res.latency.into())
+                            .set(
+                                "outputs",
+                                Json::Arr(
+                                    res.outputs.iter().map(|o| o.as_str().into()).collect(),
+                                ),
+                            );
+                    }
+                    Err(e) => {
+                        report
+                            .set("ok", false.into())
+                            .set("resource", (rid as u64).into())
+                            .set("error", e.to_string().into());
+                    }
+                }
+            }
+        }
+        if let Err(e) =
+            self.peer_post_raw(victim, "/federation/complete", report.to_string().as_bytes())
+        {
+            // The victim reclaims the loan by timeout; if we executed, the
+            // attempt cache absorbs its re-execution.
+            self.complete_push_failures.fetch_add(1, Ordering::Relaxed);
+            log::warn!(
+                "federation {}: completion report to {victim} failed: {e}",
+                self.cfg.self_id
+            );
+        }
+    }
+
+    fn invoke_stolen(
+        faas: &Arc<EdgeFaaS>,
+        rid: ResourceId,
+        st: &StolenInstance,
+    ) -> anyhow::Result<InstanceResult> {
+        let reg = faas.resource(rid)?;
+        let qname = EdgeFaaS::qualified(&st.app, &st.function);
+        let envelope = if rid == st.resource {
+            st.envelope.clone()
+        } else {
+            patch_envelope_resource(&st.envelope, rid)
+        };
+        let calls = [BatchCall {
+            name: qname,
+            payload: envelope,
+            attempt: st.attempt,
+            budget: st
+                .remaining_s
+                .map(|s| std::time::Duration::from_secs_f64(s.max(1e-9))),
+        }];
+        let mut results = reg.handle.invoke_batch(&calls);
+        anyhow::ensure!(results.len() == 1, "backend returned {} results for 1 call", results.len());
+        let (out, latency) = results.pop().expect("length checked")?;
+        let outputs = parse_outputs(&out)?;
+        Ok(InstanceResult { resource: rid, outputs, latency })
+    }
+
+    /// Victim side of `POST /federation/complete`: settle the loan.
+    /// Returns whether a matching loan was outstanding (a `false` means
+    /// the report arrived after a reclaim and was dropped).
+    pub fn receive_complete(&self, v: &Json) -> anyhow::Result<bool> {
+        let faas = self.faas.upgrade().ok_or_else(|| anyhow::anyhow!("coordinator gone"))?;
+        let run: RunId = v
+            .get("run")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("complete: missing `run`"))?;
+        let function = v
+            .get("function")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("complete: missing `function`"))?;
+        let instance = v
+            .get("instance")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("complete: missing `instance`"))?
+            as usize;
+        if v.get("requeue").and_then(Json::as_bool).unwrap_or(false) {
+            let outcome = Err(anyhow::anyhow!("returned unexecuted by thief"));
+            return Ok(faas.complete_remote_instance(run, function, instance, outcome, true));
+        }
+        let outcome = if v.get("ok").and_then(Json::as_bool).unwrap_or(false) {
+            Ok(InstanceResult {
+                resource: v.get("resource").and_then(Json::as_u64).unwrap_or(0) as ResourceId,
+                latency: v.get("latency").and_then(Json::as_f64).unwrap_or(0.0),
+                outputs: v
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+                    .unwrap_or_default(),
+            })
+        } else {
+            Err(anyhow::anyhow!(
+                "remote execution failed: {}",
+                v.get("error").and_then(Json::as_str).unwrap_or("unknown error")
+            ))
+        };
+        Ok(faas.complete_remote_instance(run, function, instance, outcome, false))
+    }
+
+    /// Re-enqueue loans past their reclaim deadline (thief died or
+    /// partitioned mid-steal). Returns the number reclaimed.
+    pub fn reclaim(&self) -> usize {
+        match self.faas.upgrade() {
+            Some(faas) => faas.reclaim_lent(),
+            None => 0,
+        }
+    }
+
+    // ----------------------------------------------------------- driver --
+
+    /// One federation cycle: sweep the owned slice, push gossip, reclaim
+    /// expired loans, then steal if idle. Deterministic tests call this
+    /// directly; [`Federation::start`] runs it on an interval.
+    pub fn tick(self: &Arc<Self>) {
+        self.sweep_owned();
+        self.push_gossip();
+        self.reclaim();
+        self.steal_once();
+    }
+
+    /// Run [`Federation::tick`] every `interval_s` on a background thread
+    /// (clock-generic, like the monitor collector). Returns `false` if a
+    /// driver is already running or the thread could not spawn. The
+    /// thread holds only a `Weak` coordinator reference.
+    pub fn start(self: &Arc<Self>, interval_s: f64) -> bool {
+        if self.driver_running.swap(true, Ordering::SeqCst) {
+            return false;
+        }
+        self.driver_stop.store(false, Ordering::SeqCst);
+        let Some(faas) = self.faas.upgrade() else {
+            self.driver_running.store(false, Ordering::SeqCst);
+            return false;
+        };
+        let clock = Arc::clone(faas.clock());
+        drop(faas);
+        let weak: Weak<Federation> = Arc::downgrade(self);
+        let interval = interval_s.max(0.0);
+        let spawned = std::thread::Builder::new()
+            .name(format!("federation-{}", self.cfg.self_id))
+            .spawn(move || loop {
+                let Some(fed) = weak.upgrade() else { break };
+                if fed.driver_stop.load(Ordering::SeqCst) {
+                    fed.driver_running.store(false, Ordering::SeqCst);
+                    break;
+                }
+                fed.tick();
+                drop(fed);
+                clock.sleep(interval);
+            });
+        if spawned.is_err() {
+            self.driver_running.store(false, Ordering::SeqCst);
+            return false;
+        }
+        true
+    }
+
+    /// Signal the driver to stop after its current cycle.
+    pub fn stop(&self) {
+        self.driver_stop.store(true, Ordering::SeqCst);
+    }
+
+    // ------------------------------------------------------------- stats --
+
+    /// `(pushed, push_failures, merged, skipped)` gossip counters.
+    pub fn gossip_counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.gossip_pushed.load(Ordering::Relaxed),
+            self.gossip_push_failures.load(Ordering::Relaxed),
+            self.gossip_merged.load(Ordering::Relaxed),
+            self.gossip_skipped.load(Ordering::Relaxed),
+        )
+    }
+
+    /// `(polls, hits, instances_stolen, executed, returned)` thief-side
+    /// steal counters.
+    pub fn steal_counters(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.steal_polls.load(Ordering::Relaxed),
+            self.steal_hits.load(Ordering::Relaxed),
+            self.instances_stolen.load(Ordering::Relaxed),
+            self.stolen_executed.load(Ordering::Relaxed),
+            self.stolen_returned.load(Ordering::Relaxed),
+        )
+    }
+
+    /// `(forwards, forward_failures)` gateway forwarding counters.
+    pub fn forward_counters(&self) -> (u64, u64) {
+        (self.forwards.load(Ordering::Relaxed), self.forward_failures.load(Ordering::Relaxed))
+    }
+
+    /// The full counter set as JSON (`GET /federation/stats`).
+    pub fn stats_json(&self) -> Json {
+        let (pushed, push_failed, merged, skipped) = self.gossip_counters();
+        let (polls, hits, stolen, executed, returned) = self.steal_counters();
+        let (forwards, forward_failures) = self.forward_counters();
+        let mut v = Json::obj();
+        v.set("self_id", (self.cfg.self_id as u64).into())
+            .set("members", (self.cfg.members as u64).into())
+            .set("gossip_pushed", pushed.into())
+            .set("gossip_push_failures", push_failed.into())
+            .set("gossip_merged", merged.into())
+            .set("gossip_skipped", skipped.into())
+            .set("forwards", forwards.into())
+            .set("forward_failures", forward_failures.into())
+            .set("steal_polls", polls.into())
+            .set("steal_hits", hits.into())
+            .set("instances_stolen", stolen.into())
+            .set("stolen_executed", executed.into())
+            .set("stolen_returned", returned.into())
+            .set(
+                "complete_push_failures",
+                self.complete_push_failures.load(Ordering::Relaxed).into(),
+            );
+        if let Some(staleness) = self.gossip_staleness() {
+            v.set("gossip_staleness_s", staleness.into());
+        }
+        if let Some(faas) = self.faas.upgrade() {
+            let (lent, completed, requeued, reclaimed, outstanding) = faas.federation_loans();
+            v.set("instances_lent", lent.into())
+                .set("lent_completed", completed.into())
+                .set("lent_requeued", requeued.into())
+                .set("lent_reclaimed", reclaimed.into())
+                .set("loans_outstanding", outstanding.into());
+        }
+        v
+    }
+
+    // ------------------------------------------------------------- wire --
+
+    fn peer_post_raw(&self, addr: &str, path: &str, body: &[u8]) -> anyhow::Result<()> {
+        let resp = http::request_with(
+            addr,
+            "POST",
+            path,
+            &[("Content-Type", "application/json")],
+            body,
+            RequestOptions::with_deadline(VerbBudgets::default().federation),
+        )?;
+        anyhow::ensure!(resp.status == 200, "POST {addr}{path}: status {}", resp.status);
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------ wire (de)coding --
+
+fn usage_to_json(s: &UsageSample) -> Json {
+    let mut v = Json::obj();
+    v.set("cpu_frac", s.usage.cpu_frac.into())
+        .set("mem_used", s.usage.mem_used.into())
+        .set("mem_total", s.usage.mem_total.into())
+        .set("io_bytes_per_s", s.usage.io_bytes_per_s.into())
+        .set("gpu_frac", s.usage.gpu_frac.into())
+        .set("gpus_used", (s.usage.gpus_used as u64).into())
+        .set("gpus_total", (s.usage.gpus_total as u64).into())
+        .set("collected_at", s.collected_at.into())
+        .set("consecutive_failures", (s.consecutive_failures as u64).into());
+    if let Some(e) = &s.last_error {
+        v.set("last_error", e.as_str().into());
+    }
+    v
+}
+
+fn usage_from_json(v: &Json) -> Option<UsageSample> {
+    let f = |k: &str| v.get(k).and_then(Json::as_f64);
+    let u = |k: &str| v.get(k).and_then(Json::as_u64);
+    Some(UsageSample {
+        usage: ResourceUsage {
+            cpu_frac: f("cpu_frac")?,
+            mem_used: u("mem_used")?,
+            mem_total: u("mem_total")?,
+            io_bytes_per_s: f("io_bytes_per_s").unwrap_or(0.0),
+            gpu_frac: f("gpu_frac").unwrap_or(0.0),
+            gpus_used: u("gpus_used").unwrap_or(0) as u32,
+            gpus_total: u("gpus_total").unwrap_or(0) as u32,
+        },
+        collected_at: f("collected_at")?,
+        consecutive_failures: u("consecutive_failures").unwrap_or(0) as u32,
+        last_error: v.get("last_error").and_then(Json::as_str).map(str::to_string),
+    })
+}
+
+fn lease_to_json(l: &ResourceLease) -> Json {
+    let mut v = Json::obj();
+    v.set("state", l.state.as_str().into())
+        .set("misses", (l.misses as u64).into())
+        .set("clean_sweeps", (l.clean_sweeps as u64).into())
+        .set("since", l.since.into());
+    if let Some(seen) = l.last_seen {
+        v.set("last_seen", seen.into());
+    }
+    v
+}
+
+fn lease_from_json(v: &Json) -> Option<ResourceLease> {
+    Some(ResourceLease {
+        state: LeaseState::parse(v.get("state").and_then(Json::as_str)?)?,
+        misses: v.get("misses").and_then(Json::as_u64).unwrap_or(0) as u32,
+        clean_sweeps: v.get("clean_sweeps").and_then(Json::as_u64).unwrap_or(0) as u32,
+        since: v.get("since").and_then(Json::as_f64).unwrap_or(0.0),
+        last_seen: v.get("last_seen").and_then(Json::as_f64),
+    })
+}
+
+/// Encode one exported loan for the steal response wire.
+fn stolen_to_json(s: &StolenInstance) -> Json {
+    let mut v = Json::obj();
+    v.set("run", s.run.into())
+        .set("app", s.app.as_str().into())
+        .set("function", s.function.as_str().into())
+        .set("instance", s.instance.into())
+        .set("resource", (s.resource as u64).into())
+        .set("class", s.class.as_str().into())
+        .set("envelope", String::from_utf8_lossy(&s.envelope).into_owned().into())
+        .set("attempt", s.attempt.into())
+        .set("retried", s.retried.into());
+    if let Some(r) = s.remaining_s {
+        v.set("remaining_s", r.into());
+    }
+    v
+}
+
+fn stolen_from_json(v: &Json) -> anyhow::Result<StolenInstance> {
+    let need_str = |k: &str| {
+        v.get(k)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("stolen instance: missing `{k}`"))
+    };
+    let need_u64 = |k: &str| {
+        v.get(k)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("stolen instance: missing `{k}`"))
+    };
+    Ok(StolenInstance {
+        run: need_u64("run")?,
+        app: need_str("app")?.to_string(),
+        function: need_str("function")?.to_string(),
+        instance: need_u64("instance")? as usize,
+        resource: need_u64("resource")? as ResourceId,
+        class: need_str("class")?.parse::<Priority>().unwrap_or_default(),
+        remaining_s: v.get("remaining_s").and_then(Json::as_f64),
+        envelope: Bytes::from(need_str("envelope")?.to_string()),
+        attempt: need_u64("attempt")?,
+        retried: v.get("retried").and_then(Json::as_bool).unwrap_or(false),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::VirtualClock;
+    use crate::testbed::paper_testbed;
+
+    fn fed_on(bed: &crate::testbed::TestBed, self_id: u32, members: u32) -> Arc<Federation> {
+        Federation::enable(&bed.faas, FederationConfig::new(self_id, members))
+            .expect("valid config")
+    }
+
+    #[test]
+    fn ownership_is_consistent_and_total() {
+        let clock: Arc<dyn crate::simnet::Clock> = Arc::new(VirtualClock::new());
+        let bed = paper_testbed(Arc::clone(&clock));
+        let fed = fed_on(&bed, 1, 4);
+        // Every resource/app has exactly one owner, and the mapping only
+        // depends on (name, members) — what every member computes.
+        for rid in bed.faas.resource_ids() {
+            assert_eq!(fed.owner_of_resource(rid), rid % 4);
+        }
+        let other = Federation::enable(&bed.faas, FederationConfig::new(3, 4)).unwrap();
+        for app in ["videoanalysis", "federatedlearning", "popvideo7"] {
+            assert_eq!(fed.owner_of_app(app), other.owner_of_app(app));
+            assert!(fed.owner_of_app(app) < 4);
+        }
+        assert!(Federation::enable(&bed.faas, FederationConfig::new(4, 4)).is_err());
+        assert!(
+            Federation::enable(&bed.faas, FederationConfig::new(0, 2).peer(0, "x:1")).is_err(),
+            "peer id == self refused"
+        );
+    }
+
+    #[test]
+    fn stolen_instance_wire_roundtrip() {
+        let s = StolenInstance {
+            run: 42,
+            app: "video".into(),
+            function: "extract".into(),
+            instance: 3,
+            resource: 7,
+            class: Priority::Realtime,
+            remaining_s: Some(1.25),
+            envelope: Bytes::from(r#"{"name":"x","resource":7}"#),
+            attempt: 99,
+            retried: true,
+        };
+        let v = json::parse(&stolen_to_json(&s).to_string()).unwrap();
+        let d = stolen_from_json(&v).unwrap();
+        assert_eq!(
+            (d.run, d.instance, d.resource, d.attempt, d.retried),
+            (42, 3, 7, 99, true)
+        );
+        assert_eq!((d.app.as_str(), d.function.as_str()), ("video", "extract"));
+        assert_eq!(d.class, Priority::Realtime);
+        assert_eq!(d.remaining_s, Some(1.25));
+        assert_eq!(&d.envelope[..], s.envelope.as_ref());
+        assert!(stolen_from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn usage_and_lease_wire_roundtrip() {
+        let sample = UsageSample {
+            usage: ResourceUsage {
+                cpu_frac: 0.25,
+                mem_used: 1 << 20,
+                mem_total: 1 << 30,
+                io_bytes_per_s: 123.0,
+                gpu_frac: 0.5,
+                gpus_used: 1,
+                gpus_total: 2,
+            },
+            collected_at: 9.5,
+            consecutive_failures: 2,
+            last_error: Some("scrape timed out".into()),
+        };
+        let v = json::parse(&usage_to_json(&sample).to_string()).unwrap();
+        assert_eq!(usage_from_json(&v), Some(sample));
+        let lease = ResourceLease {
+            state: LeaseState::Recovering,
+            misses: 0,
+            clean_sweeps: 1,
+            since: 4.0,
+            last_seen: Some(4.0),
+        };
+        let v = json::parse(&lease_to_json(&lease).to_string()).unwrap();
+        assert_eq!(lease_from_json(&v), Some(lease));
+        assert!(lease_from_json(&Json::obj()).is_none());
+    }
+
+    #[test]
+    fn merge_is_owner_authoritative_and_pessimistically_capped() {
+        let clock = Arc::new(VirtualClock::new());
+        let bed = paper_testbed(clock);
+        let faas = &bed.faas;
+        faas.refresh_monitor_snapshot();
+        let ids = faas.resource_ids();
+        let (victim, hearsay) = (ids[0], ids[1]);
+        let dead = ResourceLease {
+            state: LeaseState::Dead,
+            misses: 3,
+            clean_sweeps: 0,
+            since: 1.0,
+            last_seen: None,
+        };
+        // Owner-authoritative: the owner's Dead is adopted and drains.
+        let auth: BTreeSet<ResourceId> = [victim].into_iter().collect();
+        let mut leases = BTreeMap::new();
+        leases.insert(victim, dead.clone());
+        faas.merge_federated_view(&auth, &BTreeMap::new(), &leases);
+        let snap = faas.monitor_snapshot();
+        assert_eq!(snap.lease_of(victim).unwrap().state, LeaseState::Dead);
+        // Non-owner hearsay about another resource caps at Suspect.
+        let mut leases = BTreeMap::new();
+        leases.insert(hearsay, dead.clone());
+        faas.merge_federated_view(&BTreeSet::new(), &BTreeMap::new(), &leases);
+        let snap = faas.monitor_snapshot();
+        let l = snap.lease_of(hearsay).unwrap();
+        assert_eq!(l.state, LeaseState::Suspect, "hearsay never kills");
+        assert!(l.misses < faas.liveness_config().dead_after);
+        // The owner re-admitting (schedulable state) restores the victim.
+        let mut leases = BTreeMap::new();
+        leases.insert(victim, ResourceLease::alive(2.0));
+        faas.merge_federated_view(&auth, &BTreeMap::new(), &leases);
+        let snap = faas.monitor_snapshot();
+        assert_eq!(snap.lease_of(victim).unwrap().state, LeaseState::Alive);
+        // Unknown resource ids in a push are ignored.
+        let mut leases = BTreeMap::new();
+        leases.insert(9999, dead);
+        faas.merge_federated_view(&BTreeSet::new(), &BTreeMap::new(), &leases);
+        assert!(faas.monitor_snapshot().lease_of(9999).is_none());
+    }
+
+    #[test]
+    fn usage_only_merge_rekeys_the_decision_cache() {
+        let clock = Arc::new(VirtualClock::new());
+        let bed = paper_testbed(clock);
+        let faas = &bed.faas;
+        let epoch0 = faas.refresh_monitor_snapshot();
+        let rid = faas.resource_ids()[0];
+        // Plant a cached decision keyed to the current epoch.
+        {
+            let mut cache = faas.sched_cache.lock().unwrap();
+            cache.epoch = epoch0;
+            cache
+                .map
+                .insert(("app".into(), "f".into(), vec![], vec![]), vec![rid]);
+        }
+        // A fresher usage sample, same lease state: entries survive.
+        let snap = faas.monitor_snapshot();
+        let mut usage = BTreeMap::new();
+        let mut newer = snap.usage_of(rid).unwrap().clone();
+        newer.collected_at += 1.0;
+        usage.insert(rid, newer);
+        let mut leases = BTreeMap::new();
+        leases.insert(rid, snap.lease_of(rid).unwrap().clone());
+        let auth: BTreeSet<ResourceId> = [rid].into_iter().collect();
+        let e1 = faas.merge_federated_view(&auth, &usage, &leases);
+        assert!(e1 > epoch0);
+        {
+            let cache = faas.sched_cache.lock().unwrap();
+            assert_eq!(cache.epoch, e1, "cache re-keyed to the merged epoch");
+            assert_eq!(cache.map.len(), 1, "usage-only merge keeps entries");
+        }
+        // A lease-state change invalidates.
+        let mut leases = BTreeMap::new();
+        leases.insert(
+            rid,
+            ResourceLease {
+                state: LeaseState::Suspect,
+                misses: 1,
+                clean_sweeps: 0,
+                since: 2.0,
+                last_seen: None,
+            },
+        );
+        faas.merge_federated_view(&auth, &BTreeMap::new(), &leases);
+        assert!(faas.sched_cache.lock().unwrap().map.is_empty(), "lease change invalidates");
+    }
+
+    #[test]
+    fn gossip_receive_gates_by_sender_epoch() {
+        let clock = Arc::new(VirtualClock::new());
+        let bed = paper_testbed(clock);
+        bed.faas.refresh_monitor_snapshot();
+        let fed = fed_on(&bed, 0, 2);
+        let mut push = Json::obj();
+        push.set("from", 1u64.into())
+            .set("epoch", 5u64.into())
+            .set("owned", Json::Arr(vec![]))
+            .set("usage", Json::obj())
+            .set("leases", Json::obj());
+        assert!(fed.receive_gossip(&push).unwrap().is_some(), "first push merges");
+        assert!(fed.receive_gossip(&push).unwrap().is_none(), "replay skipped");
+        let mut older = Json::obj();
+        older
+            .set("from", 1u64.into())
+            .set("epoch", 4u64.into())
+            .set("owned", Json::Arr(vec![]))
+            .set("usage", Json::obj())
+            .set("leases", Json::obj());
+        assert!(fed.receive_gossip(&older).unwrap().is_none(), "stale push skipped");
+        let (_, _, merged, skipped) = fed.gossip_counters();
+        assert_eq!((merged, skipped), (1, 2));
+        let mut own = Json::obj();
+        own.set("from", 0u64.into()).set("epoch", 9u64.into());
+        assert!(fed.receive_gossip(&own).is_err(), "own pushes refused");
+    }
+
+    #[test]
+    fn export_view_restricts_to_owned_plus_adverse_evidence() {
+        let clock = Arc::new(VirtualClock::new());
+        let bed = paper_testbed(clock);
+        let faas = &bed.faas;
+        faas.refresh_monitor_snapshot();
+        let fed = fed_on(&bed, 0, 2);
+        let ids = faas.resource_ids();
+        let not_owned: Vec<ResourceId> = ids.iter().copied().filter(|r| r % 2 != 0).collect();
+        let view = fed.export_view().unwrap();
+        let usage = view.get("usage").unwrap();
+        for rid in &ids {
+            let present = usage.get(&rid.to_string()).is_some();
+            assert_eq!(present, rid % 2 == 0, "usage restricted to owned (rid {rid})");
+        }
+        // Mark a non-owned resource Suspect locally: it joins the lease
+        // export as adverse evidence (the warning channel), with the
+        // owned set unchanged.
+        let hearsay = not_owned[0];
+        faas.report_data_path_miss(hearsay);
+        let view = fed.export_view().unwrap();
+        assert!(view.get("leases").unwrap().get(&hearsay.to_string()).is_some());
+        let owned = view.get("owned").unwrap().as_arr().unwrap();
+        assert!(owned
+            .iter()
+            .all(|v| v.as_u64().unwrap() as ResourceId % 2 == 0));
+    }
+
+    #[test]
+    fn loan_settling_handles_unknown_and_duplicate_reports() {
+        let clock = Arc::new(VirtualClock::new());
+        let bed = paper_testbed(clock);
+        let fed = fed_on(&bed, 0, 2);
+        // No loan outstanding: the report is dropped, not an error.
+        let mut report = Json::obj();
+        report
+            .set("run", 7u64.into())
+            .set("function", "extract".into())
+            .set("instance", 0usize.into())
+            .set("ok", true.into())
+            .set("resource", 0u64.into())
+            .set("latency", 0.01.into())
+            .set("outputs", Json::Arr(vec![]));
+        assert_eq!(fed.receive_complete(&report).unwrap(), false);
+        // Nothing queued: stealing exports nothing, reclaim is a no-op.
+        assert_eq!(fed.serve_steal(8).unwrap().get("instances").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(fed.reclaim(), 0);
+    }
+}

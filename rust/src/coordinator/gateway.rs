@@ -19,7 +19,12 @@
 //!                                       ?priority=realtime|interactive|batch
 //!                                       and ?deadline_s=<f64> set the QoS;
 //!                                       a saturated engine answers 429 with
-//!                                       a Retry-After header)
+//!                                       a Retry-After header; under
+//!                                       federation a non-owner relays to the
+//!                                       app's owner — one hop max, QoS query
+//!                                       preserved, 502 when the owner is
+//!                                       unreachable; async polls go to the
+//!                                       coordinator that served the 202)
 //! GET    /runs/{id}                     run status incl. QoS class +
 //!                                       deadline state; a finished run is
 //!                                       returned once, then forgotten
@@ -32,8 +37,10 @@
 //! GET    /apps/{app}/objects/{bucket}   list_objects
 //! GET    /resources                     resource ids
 //! GET    /engine/stats                  engine counters: shards, pending
-//!                                       runs, queue depth, worker pool,
-//!                                       dispatch statistics
+//!                                       runs, queue depth (global + the
+//!                                       queue_depths per-shard array the
+//!                                       federation steal poll reads), worker
+//!                                       pool, dispatch statistics
 //! GET    /monitor/snapshot              the monitoring snapshot plane:
 //!                                       epoch, staleness bound, per-resource
 //!                                       usage samples with ages, scrape
@@ -44,19 +51,30 @@
 //!                                       lease state machine (alive/suspect/
 //!                                       dead/recovering), miss counters,
 //!                                       detector config, summary counts
+//! POST   /federation/gossip             peer snapshot push (epoch-gated
+//!                                       merge into the local plane)
+//! POST   /federation/steal              export queued instances as loans
+//!                                       {thief, max} -> {instances}
+//! POST   /federation/complete           thief's outcome report, settles
+//!                                       the loan -> {settled}
+//! GET    /federation/stats              gossip/forward/steal/loan counters
+//!                                       (503 when federation is off)
 //! GET    /healthz
 //! ```
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::monitor::LeaseState;
 use crate::simnet::Clock as _;
-use crate::util::http::{Handler, Request, Response, Server};
+use crate::util::http::{self, Handler, HttpError, Request, RequestOptions, Response, Server};
 use crate::util::json::Json;
 
 use super::engine::{EngineError, Priority, QoS, RunStatus, WaitError};
+use super::federation::Federation;
 use super::functions::FunctionPackage;
+use super::handle::VerbBudgets;
 use super::invoker::WorkflowResult;
 use super::resource::EdgeFaaS;
 use super::storage::ObjectUrl;
@@ -185,6 +203,67 @@ impl EdgeFaasGateway {
         o.set("functions", fns);
         o
     }
+
+    /// Relay `POST /apps/{app}/run` to the app's owner coordinator
+    /// (federation submission forwarding). The original query string rides
+    /// along — QoS class and deadline budget included — plus a one-hop
+    /// marker so a misconfigured fleet can never loop. The relay's own
+    /// HTTP budget tracks the submission's deadline when it has one; a
+    /// connectivity failure maps to a typed 502 (owner unreachable, with
+    /// the `HttpError` chain) rather than a generic 500.
+    fn forward_run(&self, req: &Request, app: &str, fed: &Federation, target: &str) -> Response {
+        let mut path = format!("/apps/{}/run", http::url_encode(app));
+        let mut sep = '?';
+        for (k, v) in &req.query {
+            if k == "forwarded" {
+                continue;
+            }
+            path.push(sep);
+            path.push_str(&http::url_encode(k));
+            path.push('=');
+            path.push_str(&http::url_encode(v));
+            sep = '&';
+        }
+        path.push(sep);
+        path.push_str("forwarded=1");
+        let budgets = VerbBudgets::default();
+        let deadline = req
+            .query
+            .get("deadline_s")
+            .and_then(|d| d.parse::<f64>().ok())
+            .map(|d| Duration::from_secs_f64(d.max(0.0)) + budgets.federation)
+            .unwrap_or(budgets.invoke);
+        match http::request_with(
+            target,
+            "POST",
+            &path,
+            &[("Content-Type", "application/json")],
+            &req.body,
+            RequestOptions::with_deadline(deadline),
+        ) {
+            Ok(resp) => {
+                fed.note_forward(true);
+                let mut out = Response::new(resp.status);
+                out.headers.insert("Content-Type".into(), "application/json".into());
+                if let Some(ra) = resp.headers.get("Retry-After") {
+                    out.headers.insert("Retry-After".into(), ra.clone());
+                }
+                out.body = resp.body;
+                out
+            }
+            Err(e) => {
+                fed.note_forward(false);
+                let connectivity =
+                    HttpError::of(&e).map(|h| h.is_connectivity()).unwrap_or(false);
+                let mut o = Json::obj();
+                o.set("error", format!("forward to owner failed: {e:#}").as_str().into())
+                    .set("owner", (fed.owner_of_app(app) as u64).into())
+                    .set("owner_addr", target.into())
+                    .set("connectivity", connectivity.into());
+                Response::json(502, &o)
+            }
+        }
+    }
 }
 
 impl Handler for EdgeFaasGateway {
@@ -204,7 +283,17 @@ impl Handler for EdgeFaasGateway {
                     .set("batch_dispatches", s.batch_dispatches.into())
                     .set("instances_dispatched", s.instances_dispatched.into())
                     .set("batching", self.faas.batching_enabled().into())
-                    .set("batch_window_s", self.faas.batch_window().into());
+                    .set("batch_window_s", self.faas.batch_window().into())
+                    .set(
+                        "queue_depths",
+                        Json::Arr(
+                            self.faas
+                                .shard_queue_depths()
+                                .into_iter()
+                                .map(|d| (d as u64).into())
+                                .collect(),
+                        ),
+                    );
                 Response::json(200, &o)
             }
             ("GET", ["monitor", "snapshot"]) => {
@@ -298,6 +387,39 @@ impl Handler for EdgeFaasGateway {
                 o.set("summary", summary);
                 Response::json(200, &o)
             }
+            ("POST", ["federation", "gossip"]) => match self.faas.federation() {
+                None => Response::text(503, "federation not enabled"),
+                Some(fed) => Self::ok_or_500((|| {
+                    let merged = fed.receive_gossip(&req.json()?)?;
+                    let mut o = Json::obj();
+                    o.set("merged", merged.is_some().into());
+                    if let Some(epoch) = merged {
+                        o.set("epoch", epoch.into());
+                    }
+                    Ok(Response::json(200, &o))
+                })()),
+            },
+            ("POST", ["federation", "steal"]) => match self.faas.federation() {
+                None => Response::text(503, "federation not enabled"),
+                Some(fed) => Self::ok_or_500((|| {
+                    let body = if req.body.is_empty() { Json::obj() } else { req.json()? };
+                    let max = body.get("max").and_then(Json::as_u64).unwrap_or(1) as usize;
+                    Ok(Response::json(200, &fed.serve_steal(max)?))
+                })()),
+            },
+            ("POST", ["federation", "complete"]) => match self.faas.federation() {
+                None => Response::text(503, "federation not enabled"),
+                Some(fed) => Self::ok_or_500((|| {
+                    let settled = fed.receive_complete(&req.json()?)?;
+                    let mut o = Json::obj();
+                    o.set("settled", settled.into());
+                    Ok(Response::json(200, &o))
+                })()),
+            },
+            ("GET", ["federation", "stats"]) => match self.faas.federation() {
+                None => Response::text(503, "federation not enabled"),
+                Some(fed) => Response::json(200, &fed.stats_json()),
+            },
             ("GET", ["resources"]) => {
                 let ids = self.faas.resource_ids();
                 Response::json(
@@ -336,6 +458,29 @@ impl Handler for EdgeFaasGateway {
                 Ok(Response::json(200, &Json::Arr(arr)))
             })()),
             ("POST", ["apps", app, "run"]) => Self::ok_or_500((|| {
+                // Federation: submissions land on the app's owner. A relay
+                // carries the one-hop marker; a marked request landing on a
+                // non-owner is a typed misroute, never a second hop.
+                if let Some(fed) = self.faas.federation() {
+                    let forwarded =
+                        req.query.get("forwarded").map(|v| v == "1").unwrap_or(false);
+                    if forwarded && !fed.owns_app(app) {
+                        return Ok(Response::text(
+                            421,
+                            format!(
+                                "misrouted forward: app `{app}` is owned by member {}, not {}",
+                                fed.owner_of_app(app),
+                                fed.config().self_id
+                            ),
+                        ));
+                    }
+                    if !forwarded {
+                        if let Some(target) = fed.forward_target(app) {
+                            let target = target.to_string();
+                            return Ok(self.forward_run(&req, app, &fed, &target));
+                        }
+                    }
+                }
                 let mut entry_inputs: HashMap<String, Vec<String>> = HashMap::new();
                 if !req.body.is_empty() {
                     let body = req.json()?;
@@ -521,6 +666,11 @@ mod tests {
         assert_eq!(v.get("pending_runs").unwrap().as_u64(), Some(0));
         assert_eq!(v.get("batching").unwrap().as_bool(), Some(true));
         assert_eq!(v.get("batch_window_s").unwrap().as_f64(), Some(0.0));
+        // Per-shard queue depths (the federation steal poll's overload
+        // signal) ride along with the legacy global counters.
+        let depths = v.get("queue_depths").unwrap().as_arr().unwrap();
+        assert_eq!(depths.len(), bed.faas.engine_shards());
+        assert!(depths.iter().all(|d| d.as_u64() == Some(0)));
     }
 
     #[test]
@@ -681,6 +831,146 @@ dag:
         assert_eq!(qos.req_str("deadline_state").unwrap(), "met");
         assert_eq!(qos.get("deadline_s").unwrap().as_f64().unwrap(), 30.0);
         assert_eq!(http::get(&addr, &format!("/runs/{run}")).unwrap().status, 404);
+    }
+
+    #[test]
+    fn federation_verbs_over_rest() {
+        let (server, bed) = served();
+        let addr = server.addr();
+        // Federation off: the verbs answer 503, not 404.
+        assert_eq!(http::get(&addr, "/federation/stats").unwrap().status, 503);
+        let fed = crate::coordinator::federation::Federation::enable(
+            &bed.faas,
+            crate::coordinator::federation::FederationConfig::new(0, 2),
+        )
+        .unwrap();
+        let v = http::get(&addr, "/federation/stats").unwrap().json_body().unwrap();
+        assert_eq!(v.get("self_id").unwrap().as_u64(), Some(0));
+        assert_eq!(v.get("members").unwrap().as_u64(), Some(2));
+        // A peer's gossip push merges once; the replay is skipped.
+        bed.faas.refresh_monitor_snapshot();
+        let mut push = Json::obj();
+        push.set("from", 1u64.into())
+            .set("epoch", 3u64.into())
+            .set("owned", Json::Arr(vec![]))
+            .set("usage", Json::obj())
+            .set("leases", Json::obj());
+        let resp = http::post_json(&addr, "/federation/gossip", &push).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.json_body().unwrap().get("merged").unwrap().as_bool(), Some(true));
+        let resp = http::post_json(&addr, "/federation/gossip", &push).unwrap();
+        assert_eq!(resp.json_body().unwrap().get("merged").unwrap().as_bool(), Some(false));
+        // Nothing queued: a steal request exports no instances.
+        let mut steal = Json::obj();
+        steal.set("thief", 1u64.into()).set("max", 4u64.into());
+        let resp = http::post_json(&addr, "/federation/steal", &steal).unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(resp
+            .json_body()
+            .unwrap()
+            .get("instances")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .is_empty());
+        // A completion report with no matching loan is dropped (settled
+        // false), not an error.
+        let mut done = Json::obj();
+        done.set("run", 9u64.into())
+            .set("function", "f".into())
+            .set("instance", 0u64.into())
+            .set("requeue", true.into());
+        let resp = http::post_json(&addr, "/federation/complete", &done).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.json_body().unwrap().get("settled").unwrap().as_bool(), Some(false));
+        let (_, _, merged, skipped) = fed.gossip_counters();
+        assert_eq!((merged, skipped), (1, 1));
+    }
+
+    /// `fedapp` hashes to member 1 of 2 (see `Federation::owner_of_app`);
+    /// `asyncdemo` to member 0. The fixture deploys a single-function app
+    /// under either name.
+    fn deploy_echo_app(bed: &crate::coordinator::resource::testkit::TestBed, app: &str) {
+        bed.executor.register("img/echo-fed", |_: &[u8]| Ok(br#"{"outputs":[]}"#.to_vec()));
+        let yaml = format!(
+            "application: {app}\nentrypoint: f\ndag:\n  - name: f\n    affinity:\n      \
+             nodetype: edge\n      affinitytype: data\n    reduce: 1\n"
+        );
+        let mut data = HashMap::new();
+        data.insert("f".to_string(), vec![bed.iot[0]]);
+        bed.faas.configure_application(&yaml, &data).unwrap();
+        bed.faas
+            .deploy_function(app, "f", &FunctionPackage { code: "img/echo-fed".into() })
+            .unwrap();
+    }
+
+    #[test]
+    fn federated_run_forwards_to_the_owner() {
+        // Member 1 owns `fedapp` and hosts it; member 0 relays.
+        let (owner_server, owner_bed) = served();
+        Federation::enable(
+            &owner_bed.faas,
+            crate::coordinator::federation::FederationConfig::new(1, 2),
+        )
+        .unwrap();
+        deploy_echo_app(&owner_bed, "fedapp");
+        let (relay_server, relay_bed) = served();
+        let relay_fed = Federation::enable(
+            &relay_bed.faas,
+            crate::coordinator::federation::FederationConfig::new(0, 2)
+                .peer(1, owner_server.addr()),
+        )
+        .unwrap();
+        let resp = http::post_json(
+            &relay_server.addr(),
+            "/apps/fedapp/run?priority=realtime",
+            &Json::obj(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body_str().unwrap_or(""));
+        let v = resp.json_body().unwrap();
+        assert!(v.get("functions").unwrap().get("f").is_some());
+        assert_eq!(relay_fed.forward_counters(), (1, 0));
+        // One hop max: a marked relay landing on a non-owner is a typed
+        // misroute.
+        let resp = http::request(
+            &relay_server.addr(),
+            "POST",
+            "/apps/fedapp/run?forwarded=1",
+            &[],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(resp.status, 421);
+    }
+
+    #[test]
+    fn federated_run_degrades_to_local_service() {
+        let (server, bed) = served();
+        // Member 0 does not own `fedapp`, but with the owner's address
+        // unknown the submission is served locally rather than dropped.
+        let fed = Federation::enable(
+            &bed.faas,
+            crate::coordinator::federation::FederationConfig::new(0, 2),
+        )
+        .unwrap();
+        assert!(fed.forward_target("fedapp").is_none());
+        deploy_echo_app(&bed, "fedapp");
+        let resp = http::post_json(&server.addr(), "/apps/fedapp/run", &Json::obj()).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body_str().unwrap_or(""));
+        // An unreachable owner is a typed 502, counted as a failed forward.
+        let fed = Federation::enable(
+            &bed.faas,
+            crate::coordinator::federation::FederationConfig::new(0, 2)
+                .peer(1, "127.0.0.1:1"),
+        )
+        .unwrap();
+        let resp = http::post_json(&server.addr(), "/apps/fedapp/run", &Json::obj()).unwrap();
+        assert_eq!(resp.status, 502, "{}", resp.body_str().unwrap_or(""));
+        let v = resp.json_body().unwrap();
+        assert_eq!(v.get("connectivity").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("owner").unwrap().as_u64(), Some(1));
+        assert_eq!(fed.forward_counters(), (0, 1));
     }
 
     #[test]

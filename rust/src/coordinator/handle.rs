@@ -203,6 +203,11 @@ pub struct VerbBudgets {
     pub object: Duration,
     /// Invoke and batch invoke, when no QoS deadline rides the call.
     pub invoke: Duration,
+    /// Coordinator-to-coordinator federation verbs (gossip push, steal,
+    /// completion reports, forwarded stats polls) — kept short: a
+    /// partitioned peer must cost one small budget per tick, not wedge the
+    /// federation driver (see [`super::federation`]).
+    pub federation: Duration,
     /// Extra attempts for idempotent verbs after a connectivity failure.
     pub retries: u32,
     /// First backoff; doubles per retry up to [`VerbBudgets::backoff_cap`],
@@ -222,6 +227,7 @@ impl Default for VerbBudgets {
             usage: Duration::from_secs(3),
             object: Duration::from_secs(30),
             invoke: Duration::from_secs(60),
+            federation: Duration::from_secs(5),
             retries: 2,
             backoff_base: Duration::from_millis(50),
             backoff_cap: Duration::from_secs(1),

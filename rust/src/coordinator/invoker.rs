@@ -177,6 +177,10 @@ impl EdgeFaaS {
 }
 
 /// Parse a function's response envelope: `{"outputs": ["url", ...]}`.
+///
+/// Shared by the engine's local dispatch path and the federation plane's
+/// stolen-instance execution ([`super::federation`]), so a thief's view of
+/// an invocation outcome is byte-for-byte the victim's.
 pub(super) fn parse_outputs(raw: &[u8]) -> anyhow::Result<Vec<String>> {
     if raw.is_empty() {
         return Ok(Vec::new());

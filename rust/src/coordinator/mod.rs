@@ -21,6 +21,7 @@
 //! | sync workflow front-end      | [`invoker`] (`run_workflow` = submit + await) |
 //! | async front-end              | [`asyncinvoke`] (`invoke_async` = job + tracker id; auto-reschedule policy) |
 //! | unified REST gateway         | [`gateway`]   |
+//! | multi-coordinator federation | [`federation`] (epoch-merged gossip, submission forwarding, work stealing) |
 //!
 //! Every invocation path — synchronous workflow runs, asynchronous function
 //! calls, and the REST gateway's `run`/`runs` endpoints — submits through
@@ -54,6 +55,7 @@ pub mod appconfig;
 pub mod asyncinvoke;
 pub mod dag;
 pub mod engine;
+pub mod federation;
 pub mod functions;
 pub mod gateway;
 pub mod handle;
@@ -69,8 +71,9 @@ pub use asyncinvoke::{
 pub use appconfig::{Affinity, AffinityType, AppConfig, FunctionConfig, Reduce, Requirements};
 pub use engine::{
     EngineError, EngineEvent, EngineStats, Priority, QoS, ResourceBusy, RunId, RunStatus,
-    WaitError, ENGINE_SHARDS,
+    StolenInstance, WaitError, ENGINE_SHARDS,
 };
+pub use federation::{Federation, FederationConfig, PeerSpec};
 pub use handle::{LocalHandle, ResourceHandle, VerbBudgets};
 pub use invoker::{InstanceResult, WorkflowResult};
 pub use resource::{EdgeFaaS, ResourceId};

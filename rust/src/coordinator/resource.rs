@@ -15,7 +15,7 @@ use std::sync::{Arc, Mutex, RwLock, Weak};
 
 use crate::backup::DurableKv;
 use crate::cluster::spec::ResourceSpec;
-use crate::monitor::liveness::{self, LivenessConfig, Transition};
+use crate::monitor::liveness::{self, LeaseState, LivenessConfig, ResourceLease, Transition};
 use crate::monitor::snapshot::{LatencyMatrix, MonitorSnapshot, SnapshotPlane, UsageSample};
 use crate::simnet::{Clock, NodeId, RealClock, Tier, Topology, TransferModel};
 use crate::util::json::Json;
@@ -95,6 +95,9 @@ pub struct EdgeFaaS {
     /// dead (qualified function names), kept so quarantine re-admission can
     /// restore them.
     dead_memberships: Mutex<HashMap<ResourceId, Vec<String>>>,
+    /// This coordinator's membership in a multi-coordinator fleet, when
+    /// federation is enabled (see [`super::federation::Federation::enable`]).
+    pub(super) federation: RwLock<Option<Arc<super::federation::Federation>>>,
 }
 
 impl EdgeFaaS {
@@ -131,7 +134,13 @@ impl EdgeFaaS {
             liveness_cfg: Mutex::new(LivenessConfig::default()),
             sweep_lock: Mutex::new(()),
             dead_memberships: Mutex::new(HashMap::new()),
+            federation: RwLock::new(None),
         }
+    }
+
+    /// This coordinator's federation membership, if enabled.
+    pub fn federation(&self) -> Option<Arc<super::federation::Federation>> {
+        self.federation.read().unwrap().clone()
     }
 
     /// Swap in a user scheduling policy ("EdgeFaaS also offers easy to use
@@ -373,6 +382,20 @@ impl EdgeFaaS {
     /// step, also callable directly (virtual-time tests, benches, or a
     /// scrape-now REST hook).
     pub fn refresh_monitor_snapshot(self: &Arc<Self>) -> u64 {
+        self.refresh_monitor_snapshot_scoped(None)
+    }
+
+    /// [`Self::refresh_monitor_snapshot`] restricted to a slice of the
+    /// fleet: scrape and lease-step only the `owned` resources, carrying
+    /// every other registered resource's sample and lease forward
+    /// untouched. This is a federated coordinator's sweep — it heartbeats
+    /// the resources it owns, while peers' slices are refreshed by gossip
+    /// merges from their owners ([`Self::merge_federated_view`]) instead
+    /// of duplicate scrapes. `None` sweeps everything.
+    pub(super) fn refresh_monitor_snapshot_scoped(
+        self: &Arc<Self>,
+        owned: Option<&std::collections::BTreeSet<ResourceId>>,
+    ) -> u64 {
         // One sweep at a time: lease stepping is a read-modify-write of the
         // previous snapshot's lease table, and each Died/Readmitted
         // transition must fire its side effects exactly once.
@@ -380,11 +403,30 @@ impl EdgeFaaS {
         let cfg = self.liveness_config();
         let targets: Vec<(ResourceId, Arc<dyn ResourceHandle>)> = {
             let res = self.resources.read().unwrap();
-            res.values().map(|r| (r.id, Arc::clone(&r.handle))).collect()
+            res.values()
+                .filter(|r| owned.map(|o| o.contains(&r.id)).unwrap_or(true))
+                .map(|r| (r.id, Arc::clone(&r.handle)))
+                .collect()
         };
         let prev = self.monitor.snapshot();
         let mut usage = BTreeMap::new();
         let mut leases = BTreeMap::new();
+        if let Some(owned) = owned {
+            // Carry non-owned (but still registered) entries forward
+            // verbatim; departed resources drop out here exactly as they
+            // do from a full sweep.
+            let res = self.resources.read().unwrap();
+            for (rid, sample) in prev.samples() {
+                if !owned.contains(&rid) && res.contains_key(&rid) {
+                    usage.insert(rid, sample.clone());
+                }
+            }
+            for (rid, lease) in prev.leases() {
+                if !owned.contains(&rid) && res.contains_key(&rid) {
+                    leases.insert(rid, lease.clone());
+                }
+            }
+        }
         let mut died = Vec::new();
         let mut readmitted = Vec::new();
         for (id, handle) in targets {
@@ -477,6 +519,116 @@ impl EdgeFaaS {
         if died {
             self.on_resource_dead(id);
         }
+    }
+
+    /// Merge a peer coordinator's gossiped view into the local snapshot
+    /// plane (see [`super::federation`] for the wire format and the push
+    /// loop). `authoritative` names the resources the *sender owns* — its
+    /// detector is the fleet-wide source of truth for them. Runs under the
+    /// sweep lock: a merge is a read-modify-write of the lease table,
+    /// exactly like a sweep. Merge rules:
+    ///
+    /// * **Usage** — a peer's sample replaces the local one iff it was
+    ///   collected later (or the resource has no local sample), so phase-1
+    ///   can place onto a peer's slice with zero remote scrapes while the
+    ///   staleness bound still applies unchanged.
+    /// * **Leases, owner-authoritative** — for `authoritative` resources
+    ///   the peer's lease is adopted verbatim. Adopting schedulable→`Dead`
+    ///   drains and relocates exactly like a local `Died` transition;
+    ///   adopting unschedulable→schedulable re-admits. Only this path can
+    ///   mark a resource `Dead` fleet-wide.
+    /// * **Leases, pessimistic cap** — a non-owner's worse opinion can at
+    ///   most raise a locally-`Alive` resource to `Suspect` (merged views
+    ///   take the pessimistic state, but hearsay never drains); existing
+    ///   local non-`Alive` evidence is kept as-is.
+    ///
+    /// Publishes a new epoch and returns it. When no lease *state* changed,
+    /// the placement decision cache is re-keyed to the new epoch instead of
+    /// invalidated — cached decisions stay valid across usage-only merges.
+    pub(super) fn merge_federated_view(
+        self: &Arc<Self>,
+        authoritative: &std::collections::BTreeSet<ResourceId>,
+        peer_usage: &BTreeMap<ResourceId, UsageSample>,
+        peer_leases: &BTreeMap<ResourceId, ResourceLease>,
+    ) -> u64 {
+        let _sweep = self.sweep_lock.lock().unwrap();
+        let prev = self.monitor.snapshot();
+        let (mut usage, mut leases) = prev.clone_tables();
+        let registered: std::collections::BTreeSet<ResourceId> =
+            self.resource_ids().into_iter().collect();
+        for (rid, sample) in peer_usage {
+            if !registered.contains(rid) {
+                continue;
+            }
+            let newer = usage
+                .get(rid)
+                .map(|local| sample.collected_at > local.collected_at)
+                .unwrap_or(true);
+            if newer {
+                usage.insert(*rid, sample.clone());
+            }
+        }
+        let mut died = Vec::new();
+        let mut readmitted = Vec::new();
+        let mut lease_changed = false;
+        for (rid, peer) in peer_leases {
+            if !registered.contains(rid) {
+                continue;
+            }
+            let local_state = leases.get(rid).map(|l| l.state);
+            if authoritative.contains(rid) {
+                // A missing local lease means the detector has no opinion
+                // yet — treated as schedulable everywhere else, so an
+                // adopted Dead must still drain.
+                let was_schedulable = local_state.map(|s| s.schedulable()).unwrap_or(true);
+                if local_state != Some(peer.state) {
+                    lease_changed = true;
+                }
+                if was_schedulable && peer.state == LeaseState::Dead {
+                    died.push(*rid);
+                }
+                if local_state.is_some() && !was_schedulable && peer.state.schedulable() {
+                    readmitted.push(*rid);
+                }
+                leases.insert(*rid, peer.clone());
+            } else if local_state.unwrap_or(LeaseState::Alive) == LeaseState::Alive
+                && peer.state.severity() > LeaseState::Alive.severity()
+            {
+                let cfg = self.liveness_config();
+                let now = self.clock.now();
+                // Cap the inherited miss count below dead_after: local
+                // misses may still escalate, but the cap alone never kills.
+                let max_misses = cfg.dead_after.max(1).saturating_sub(1).max(1);
+                leases.insert(
+                    *rid,
+                    ResourceLease {
+                        state: LeaseState::Suspect,
+                        misses: peer.misses.clamp(1, max_misses),
+                        clean_sweeps: 0,
+                        since: now,
+                        last_seen: leases.get(rid).and_then(|l| l.last_seen),
+                    },
+                );
+                lease_changed = true;
+            }
+        }
+        let now = self.clock.now();
+        let epoch = self.monitor.publish(usage, leases, prev.latencies_arc(), now);
+        if lease_changed {
+            self.invalidate_schedule_cache();
+        } else {
+            self.sched_cache.lock().unwrap().rekey(epoch);
+        }
+        self.publish_fleet_census();
+        // Side effects after the publish, like a sweep's: drains and
+        // relocations read the epoch that declared the new state.
+        for id in died {
+            self.on_resource_dead(id);
+        }
+        for id in readmitted {
+            self.on_resource_recovered(id);
+        }
+        epoch
     }
 
     /// Recompute the engine's fleet census — registered resources vs the

@@ -140,6 +140,21 @@ impl Default for SchedCache {
     }
 }
 
+impl SchedCache {
+    /// Adopt `epoch` as the cache's generation *without* dropping entries.
+    /// A federation gossip merge that changed no lease state publishes a
+    /// new snapshot epoch, but every cached placement's inputs are still
+    /// inside the staleness contract the cache already tolerates — so the
+    /// entries stay live across merged epochs instead of cold-starting on
+    /// every push (see `EdgeFaaS::merge_federated_view`). Never regresses
+    /// to an older epoch.
+    pub(super) fn rekey(&mut self, epoch: u64) {
+        if epoch > self.epoch {
+            self.epoch = epoch;
+        }
+    }
+}
+
 /// A phase-2 scheduling policy. "Schedule() is the interface to implement
 /// the scheduling policy... The returned array is an array of resource IDs
 /// that gets the function created."

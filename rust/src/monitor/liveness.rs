@@ -99,6 +99,31 @@ impl LeaseState {
     pub fn schedulable(&self) -> bool {
         matches!(self, LeaseState::Alive | LeaseState::Suspect)
     }
+
+    /// Parse the lowercase wire name (inverse of [`Self::as_str`]) — the
+    /// decoder for lease states carried over federation gossip.
+    pub fn parse(s: &str) -> Option<LeaseState> {
+        match s {
+            "alive" => Some(LeaseState::Alive),
+            "suspect" => Some(LeaseState::Suspect),
+            "dead" => Some(LeaseState::Dead),
+            "recovering" => Some(LeaseState::Recovering),
+            _ => None,
+        }
+    }
+
+    /// Pessimism rank for merging two opinions about the same resource:
+    /// `Alive < Suspect < Recovering < Dead`. A merged fleet view takes the
+    /// higher rank, except that only the owning coordinator's opinion may
+    /// push a resource to `Dead` fleet-wide (see `coordinator::federation`).
+    pub fn severity(&self) -> u8 {
+        match self {
+            LeaseState::Alive => 0,
+            LeaseState::Suspect => 1,
+            LeaseState::Recovering => 2,
+            LeaseState::Dead => 3,
+        }
+    }
 }
 
 /// One resource's lease: state plus the counters that drive transitions.
@@ -356,6 +381,22 @@ mod tests {
         let (l, t) = drive(&c, &[false, true]);
         assert_eq!(l.state, LeaseState::Alive, "quarantine of 1 re-admits on first clean sweep");
         assert_eq!(t, vec![Transition::Died, Transition::Readmitted]);
+    }
+
+    #[test]
+    fn parse_inverts_as_str_and_severity_orders_pessimism() {
+        for s in [
+            LeaseState::Alive,
+            LeaseState::Suspect,
+            LeaseState::Recovering,
+            LeaseState::Dead,
+        ] {
+            assert_eq!(LeaseState::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(LeaseState::parse("zombie"), None);
+        assert!(LeaseState::Alive.severity() < LeaseState::Suspect.severity());
+        assert!(LeaseState::Suspect.severity() < LeaseState::Recovering.severity());
+        assert!(LeaseState::Recovering.severity() < LeaseState::Dead.severity());
     }
 
     #[test]

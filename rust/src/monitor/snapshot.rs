@@ -210,6 +210,13 @@ impl MonitorSnapshot {
     pub fn latencies_arc(&self) -> Arc<LatencyMatrix> {
         Arc::clone(&self.latency)
     }
+
+    /// Owned copies of the usage and lease tables — the scratch state for
+    /// publishers that edit a few entries and re-publish (data-path miss
+    /// reports, federation gossip merges).
+    pub fn clone_tables(&self) -> (BTreeMap<u32, UsageSample>, BTreeMap<u32, ResourceLease>) {
+        (self.usage.clone(), self.leases.clone())
+    }
 }
 
 /// The publication point: the current snapshot, its epoch, the staleness

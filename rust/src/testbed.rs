@@ -137,14 +137,15 @@ impl ScaleBed {
     }
 }
 
-/// Build the scale-harness topology: `cells` edge cells, each one hub
-/// fronting `boxes_per_cell` IoT boxes (2 ms LAN), hubs uplinked to one
-/// cloud (30 ms WAN). The registered fleet is
-/// `cells * boxes_per_cell + cells + 1` resources; populations of any
-/// device count run on top of it (`workloads::population`).
-pub fn scale_testbed(clock: Arc<dyn Clock>, cells: usize, boxes_per_cell: usize) -> ScaleBed {
-    assert!(cells > 0 && boxes_per_cell > 0, "scale_testbed needs a non-empty fleet");
-    let executor = Arc::new(NativeExecutor::new());
+/// Build the scale-harness topology graph alone: `cells` edge cells, each
+/// one hub fronting `boxes_per_cell` IoT boxes (2 ms LAN), hubs uplinked to
+/// one cloud (30 ms WAN). Deterministic: repeated calls produce identical
+/// node ids, which is what lets [`federated_testbed`] give every
+/// coordinator its own copy of the same graph.
+pub fn scale_topology(
+    cells: usize,
+    boxes_per_cell: usize,
+) -> (Topology, Vec<Vec<usize>>, Vec<usize>, usize) {
     let mut topo = Topology::new();
     let mut box_nodes = Vec::new();
     let mut hub_nodes = Vec::new();
@@ -163,6 +164,17 @@ pub fn scale_testbed(clock: Arc<dyn Clock>, cells: usize, boxes_per_cell: usize)
     for &hub in &hub_nodes {
         topo.add_link(hub, cloud_node, 0.03, mbps(50.0));
     }
+    (topo, box_nodes, hub_nodes, cloud_node)
+}
+
+/// Build the scale-harness fleet: the [`scale_topology`] graph with the
+/// full substrate stack on every node. The registered fleet is
+/// `cells * boxes_per_cell + cells + 1` resources; populations of any
+/// device count run on top of it (`workloads::population`).
+pub fn scale_testbed(clock: Arc<dyn Clock>, cells: usize, boxes_per_cell: usize) -> ScaleBed {
+    assert!(cells > 0 && boxes_per_cell > 0, "scale_testbed needs a non-empty fleet");
+    let executor = Arc::new(NativeExecutor::new());
+    let (topo, box_nodes, hub_nodes, cloud_node) = scale_topology(cells, boxes_per_cell);
 
     let faas = EdgeFaaS::with_parts(topo, DurableKv::ephemeral(), Arc::clone(&clock));
     let mk_handle = |spec: &ResourceSpec| -> Arc<dyn ResourceHandle> {
@@ -200,6 +212,122 @@ pub fn scale_testbed(clock: Arc<dyn Clock>, cells: usize, boxes_per_cell: usize)
     let cloud = faas.register(spec, h, cloud_node).unwrap();
 
     ScaleBed { faas: Arc::new(faas), executor, cell_boxes, hubs, cloud }
+}
+
+/// A federated fleet: `n` coordinators over ONE shared substrate (see
+/// [`federated_testbed`]).
+pub struct FederatedBed {
+    /// The coordinators, in member-id order (`coordinators[k]` is
+    /// federation member `k`). Every coordinator sees the same resource
+    /// ids for the same physical boxes.
+    pub coordinators: Vec<Arc<EdgeFaaS>>,
+    /// Shared executor: register handler images here (once — the backends
+    /// are shared, so handlers serve every coordinator).
+    pub executor: Arc<NativeExecutor>,
+    /// Registered boxes per cell, same ids on every coordinator.
+    pub cell_boxes: Vec<Vec<ResourceId>>,
+    pub hubs: Vec<ResourceId>,
+    pub cloud: ResourceId,
+}
+
+impl FederatedBed {
+    /// Every resource id: boxes cell by cell, then hubs, then cloud.
+    pub fn all_resources(&self) -> Vec<ResourceId> {
+        let mut v: Vec<ResourceId> = self.cell_boxes.iter().flatten().copied().collect();
+        v.extend(&self.hubs);
+        v.push(self.cloud);
+        v
+    }
+}
+
+/// Build `n` coordinators jointly serving one [`scale_topology`] fleet —
+/// the in-process bed for the federation plane.
+///
+/// The *substrate* is built once: one [`FaasBackend`] + object store per
+/// resource, shared by every coordinator. Each coordinator then registers
+/// the same handles in the same order against its own copy of the topology
+/// graph, so resource ids are identical fleet-wide — exactly the invariant
+/// [`crate::coordinator::federation`] assumes. Sharing the backends also
+/// means the attempt-id dedup cache is per *box*, not per coordinator:
+/// a stolen instance retried through a different coordinator still hits
+/// the same cache, which is what makes work stealing at-most-once.
+pub fn federated_testbed(
+    clock: Arc<dyn Clock>,
+    n: usize,
+    cells: usize,
+    boxes_per_cell: usize,
+) -> FederatedBed {
+    assert!(n > 0, "federated_testbed needs at least one coordinator");
+    assert!(cells > 0 && boxes_per_cell > 0, "federated_testbed needs a non-empty fleet");
+    let executor = Arc::new(NativeExecutor::new());
+    let mk_handle = |spec: &ResourceSpec| -> Arc<dyn ResourceHandle> {
+        let backend = Arc::new(FaasBackend::new(
+            spec.clone(),
+            Arc::clone(&executor) as Arc<dyn Executor>,
+            Arc::clone(&clock),
+        ));
+        let store = Arc::new(ObjectStore::new(
+            spec.storage * spec.nodes as u64,
+            &spec.minio_access_key,
+            &spec.minio_secret_key,
+        ));
+        Arc::new(LocalHandle::new(backend, store))
+    };
+
+    // One substrate stack per resource, in registration order.
+    let mut box_handles: Vec<Vec<(ResourceSpec, Arc<dyn ResourceHandle>)>> = Vec::new();
+    for c in 0..cells {
+        let mut row = Vec::new();
+        for b in 0..boxes_per_cell {
+            let spec = ResourceSpec::paper_iot(&format!("box{c}x{b}:8080"));
+            let h = mk_handle(&spec);
+            row.push((spec, h));
+        }
+        box_handles.push(row);
+    }
+    let mut hub_handles: Vec<(ResourceSpec, Arc<dyn ResourceHandle>)> = Vec::new();
+    for c in 0..cells {
+        let spec = ResourceSpec::paper_edge(&format!("hub{c}:8080"));
+        let h = mk_handle(&spec);
+        hub_handles.push((spec, h));
+    }
+    let cloud_spec = ResourceSpec::paper_cloud("cloud:8080");
+    let cloud_handle = mk_handle(&cloud_spec);
+
+    let mut coordinators = Vec::new();
+    let mut cell_boxes: Vec<Vec<ResourceId>> = Vec::new();
+    let mut hubs: Vec<ResourceId> = Vec::new();
+    let mut cloud = ResourceId::default();
+    for k in 0..n {
+        let (topo, box_nodes, hub_nodes, cloud_node) = scale_topology(cells, boxes_per_cell);
+        let faas = EdgeFaaS::with_parts(topo, DurableKv::ephemeral(), Arc::clone(&clock));
+        let mut my_cells = Vec::new();
+        for (c, row) in box_handles.iter().enumerate() {
+            let mut ids = Vec::new();
+            for (b, (spec, h)) in row.iter().enumerate() {
+                ids.push(faas.register(spec.clone(), Arc::clone(h), box_nodes[c][b]).unwrap());
+            }
+            my_cells.push(ids);
+        }
+        let mut my_hubs = Vec::new();
+        for (c, (spec, h)) in hub_handles.iter().enumerate() {
+            my_hubs.push(faas.register(spec.clone(), Arc::clone(h), hub_nodes[c]).unwrap());
+        }
+        let my_cloud =
+            faas.register(cloud_spec.clone(), Arc::clone(&cloud_handle), cloud_node).unwrap();
+        if k == 0 {
+            cell_boxes = my_cells;
+            hubs = my_hubs;
+            cloud = my_cloud;
+        } else {
+            debug_assert_eq!(cell_boxes, my_cells, "resource ids must match across members");
+            debug_assert_eq!(hubs, my_hubs);
+            debug_assert_eq!(cloud, my_cloud);
+        }
+        coordinators.push(Arc::new(faas));
+    }
+
+    FederatedBed { coordinators, executor, cell_boxes, hubs, cloud }
 }
 
 /// Locate the AOT artifact directory (`artifacts/` at the crate root).

@@ -16,6 +16,7 @@
 pub mod population;
 
 pub use population::{
-    generate, install_population, run_population, schedule_digest, Archetype, ArchetypeLoad,
-    Arrival, ClassReport, PopulationApps, PopulationReport, PopulationSpec, RunConfig, Submission,
+    generate, install_population, install_population_federated, run_population,
+    run_population_federated, schedule_digest, Archetype, ArchetypeLoad, Arrival, ClassReport,
+    PopulationApps, PopulationReport, PopulationSpec, RunConfig, Submission,
 };

@@ -390,6 +390,65 @@ pub fn install_population(
     Ok(PopulationApps { cells: cell_boxes.len() })
 }
 
+/// Which federation member owns `app` (0 when federation is off or the
+/// fleet has a single coordinator).
+fn owner_index(coordinators: &[Arc<EdgeFaaS>], app: &str) -> usize {
+    match coordinators[0].federation() {
+        Some(fed) if coordinators.len() > 1 => {
+            (fed.owner_of_app(app) as usize).min(coordinators.len() - 1)
+        }
+        _ => 0,
+    }
+}
+
+/// [`install_population`] for a federated fleet: handlers are registered
+/// once on the shared executor (the backends are shared, so every
+/// coordinator's dispatches reach them), but each `(archetype, cell)` app
+/// is configured + deployed **only on its owner** — federation partitions
+/// application state by the app→owner mapping, and a non-owner reaches the
+/// app by forwarding, not by holding its config.
+pub fn install_population_federated(
+    coordinators: &[Arc<EdgeFaaS>],
+    executor: &Arc<NativeExecutor>,
+    cell_boxes: &[Vec<ResourceId>],
+) -> anyhow::Result<PopulationApps> {
+    anyhow::ensure!(!coordinators.is_empty(), "need at least one coordinator");
+    for archetype in Archetype::ALL {
+        for (stage, _, service_s) in archetype.stages() {
+            let clock = Arc::clone(coordinators[0].clock());
+            let s = *service_s;
+            executor.register(&format!("img/pop-{}-{stage}", archetype.name()), move |_: &[u8]| {
+                clock.sleep(s);
+                Ok(br#"{"outputs":[]}"#.to_vec())
+            });
+        }
+        for (cell, boxes) in cell_boxes.iter().enumerate() {
+            anyhow::ensure!(!boxes.is_empty(), "cell {cell} has no device boxes");
+            let cell = cell as u32;
+            let app = PopulationApps::app_name(archetype, cell);
+            let owner = &coordinators[owner_index(coordinators, &app)];
+            let anchors: Vec<ResourceId> =
+                boxes.iter().copied().take(archetype.anchor_width()).collect();
+            let entry = archetype.stages()[0].0;
+            let mut data = HashMap::new();
+            data.insert(entry.to_string(), anchors);
+            owner.configure_application(&app_yaml(archetype, cell), &data)?;
+            let packages: HashMap<String, FunctionPackage> = archetype
+                .stages()
+                .iter()
+                .map(|(s, _, _)| {
+                    (
+                        s.to_string(),
+                        FunctionPackage { code: format!("img/pop-{}-{s}", archetype.name()) },
+                    )
+                })
+                .collect();
+            owner.deploy_application(&app, &packages)?;
+        }
+    }
+    Ok(PopulationApps { cells: cell_boxes.len() })
+}
+
 // ------------------------------------------------------------------- running
 
 /// How to replay a schedule.
@@ -506,14 +565,37 @@ pub fn run_population(
     schedule: &[Submission],
     cfg: RunConfig,
 ) -> PopulationReport {
-    let clock = Arc::clone(faas.clock());
-    // Completed runs stream into this queue from an engine-event
-    // subscriber that consumes (`take_run`) each record the moment its
-    // `RunCompleted` fires — the engine's finished-run retention is
-    // bounded, so deferring collection to the end would lose early runs.
-    type Collected = Arc<Mutex<Vec<(RunId, RunStatus)>>>;
+    run_population_federated(std::slice::from_ref(faas), schedule, cfg)
+}
+
+/// Replay `schedule` against a federated fleet ([`run_population`] is the
+/// single-coordinator special case). Each submission is routed to its
+/// app's **owner** coordinator — the one
+/// [`install_population_federated`] deployed the app on — and outcomes
+/// fold into one report in submission order, so a healthy federated
+/// replay of a schedule digests byte-identically at any member count.
+///
+/// With `sweep_every_s > 0` and federation enabled on every member, each
+/// sweep point runs an owner-scoped monitor sweep on every coordinator
+/// followed by a full in-process gossip exchange (every member merges
+/// every peer's view) — the wire path does exactly this over HTTP, the
+/// in-process form keeps benches free of socket jitter.
+pub fn run_population_federated(
+    coordinators: &[Arc<EdgeFaaS>],
+    schedule: &[Submission],
+    cfg: RunConfig,
+) -> PopulationReport {
+    assert!(!coordinators.is_empty(), "need at least one coordinator");
+    let clock = Arc::clone(coordinators[0].clock());
+    // Completed runs stream into this queue from per-coordinator
+    // engine-event subscribers that consume (`take_run`) each record the
+    // moment its `RunCompleted` fires — the engine's finished-run
+    // retention is bounded, so deferring collection to the end would lose
+    // early runs. Run ids are per-coordinator counters, so entries carry
+    // the member index.
+    type Collected = Arc<Mutex<Vec<(usize, RunId, RunStatus)>>>;
     let collected: Collected = Arc::new(Mutex::new(Vec::new()));
-    {
+    for (k, faas) in coordinators.iter().enumerate() {
         let collected = Arc::clone(&collected);
         faas.on_engine_event(move |faas, ev| {
             if let EngineEvent::RunCompleted { run, .. } = ev {
@@ -523,7 +605,7 @@ pub fn run_population(
                     // (impossible after RunCompleted, but harmless): only
                     // terminal statuses are collected.
                     None | Some(RunStatus::Running) => {}
-                    Some(st) => collected.lock().unwrap().push((*run, st)),
+                    Some(st) => collected.lock().unwrap().push((k, *run, st)),
                 }
             }
         });
@@ -532,8 +614,8 @@ pub fn run_population(
     let wall0 = Instant::now();
     let v0 = clock.now();
     let mut outcomes: Vec<Outcome> = vec![Outcome::Pending; schedule.len()];
-    let mut run_of: Vec<Option<RunId>> = vec![None; schedule.len()];
-    let mut index_of: HashMap<RunId, usize> = HashMap::new();
+    let mut run_of: Vec<Option<(usize, RunId)>> = vec![None; schedule.len()];
+    let mut index_of: HashMap<(usize, RunId), usize> = HashMap::new();
     let mut next_sweep =
         if cfg.sweep_every_s > 0.0 { Some(v0 + cfg.sweep_every_s) } else { None };
 
@@ -546,10 +628,32 @@ pub fn run_population(
             }
         }
     };
-    let drain = |outcomes: &mut Vec<Outcome>, index_of: &HashMap<RunId, usize>| {
-        let batch: Vec<(RunId, RunStatus)> = std::mem::take(&mut *collected.lock().unwrap());
-        for (run, st) in batch {
-            let Some(&i) = index_of.get(&run) else { continue };
+    let sweep_all = || {
+        let feds: Vec<_> = coordinators.iter().filter_map(|c| c.federation()).collect();
+        if feds.len() == coordinators.len() && feds.len() > 1 {
+            for f in &feds {
+                f.sweep_owned();
+            }
+            for (i, fi) in feds.iter().enumerate() {
+                if let Ok(view) = fi.export_view() {
+                    for (j, fj) in feds.iter().enumerate() {
+                        if i != j {
+                            let _ = fj.receive_gossip(&view);
+                        }
+                    }
+                }
+            }
+        } else {
+            for c in coordinators.iter() {
+                c.refresh_monitor_snapshot();
+            }
+        }
+    };
+    let drain = |outcomes: &mut Vec<Outcome>, index_of: &HashMap<(usize, RunId), usize>| {
+        let batch: Vec<(usize, RunId, RunStatus)> =
+            std::mem::take(&mut *collected.lock().unwrap());
+        for (k, run, st) in batch {
+            let Some(&i) = index_of.get(&(k, run)) else { continue };
             if !matches!(outcomes[i], Outcome::Pending) {
                 continue;
             }
@@ -578,19 +682,20 @@ pub fn run_population(
                 break;
             }
             pace_to(sweep_at);
-            faas.refresh_monitor_snapshot();
+            sweep_all();
             next_sweep = Some(sweep_at + cfg.sweep_every_s);
         }
         pace_to(at);
         let app = PopulationApps::app_name(sub.archetype, sub.cell);
-        match faas.submit_workflow_qos(
+        let k = owner_index(coordinators, &app);
+        match coordinators[k].submit_workflow_qos(
             &app,
             &HashMap::new(),
             sub.archetype.qos(cfg.strip_deadlines),
         ) {
             Ok(run) => {
-                run_of[i] = Some(run);
-                index_of.insert(run, i);
+                run_of[i] = Some((k, run));
+                index_of.insert((k, run), i);
             }
             Err(EngineError::Saturated { .. }) => outcomes[i] = Outcome::Saturated,
             Err(EngineError::Rejected(msg)) => outcomes[i] = Outcome::Rejected(msg),
@@ -620,8 +725,8 @@ pub fn run_population(
             }
             break;
         }
-        let run = run_of[i].expect("filtered above");
-        match faas.wait_workflow(run, 0.25) {
+        let (k, run) = run_of[i].expect("filtered above");
+        match coordinators[k].wait_workflow(run, 0.25) {
             Ok(res) => {
                 outcomes[i] =
                     Outcome::Done { duration: res.duration, firing: res.firing_order }

@@ -859,6 +859,7 @@ fn wire_budgets() -> VerbBudgets {
         usage: Duration::from_millis(200),
         object: Duration::from_secs(5),
         invoke: Duration::from_millis(400),
+        federation: Duration::from_millis(400),
         retries: 1,
         backoff_base: Duration::from_millis(1),
         backoff_cap: Duration::from_millis(5),

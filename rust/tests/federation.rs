@@ -1,0 +1,259 @@
+//! Federation plane integration suite (ISSUE 10).
+//!
+//! Three contracts:
+//!
+//! 1. **Member-count invariance** — a seeded population replayed through
+//!    1, 2, and 4 coordinators over one shared fleet must fold to
+//!    byte-identical outcome/firing digests: federation partitions *who
+//!    serves a submission*, never *what the submission does*.
+//! 2. **Partition degradation** — with the app owner's address
+//!    black-holed at the wire (`util::faults`), a relayed submission
+//!    fails typed (502, no execution anywhere) while owner-local apps
+//!    keep serving; healing the fault restores forwarding, and no
+//!    submission ever executes twice.
+//! 3. **Work stealing at-most-once** — an idle coordinator pulls queued
+//!    instances from an overloaded peer over real sockets and executes
+//!    them on the shared backends; every run completes and every
+//!    instance executes exactly once.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use edgefaas::coordinator::functions::FunctionPackage;
+use edgefaas::coordinator::gateway::EdgeFaasGateway;
+use edgefaas::coordinator::{Federation, FederationConfig};
+use edgefaas::simnet::{RealClock, VirtualClock};
+use edgefaas::testbed::{federated_testbed, paper_testbed, FederatedBed, TestBed};
+use edgefaas::util::faults::{self, FaultKind, FaultRule};
+use edgefaas::util::http;
+use edgefaas::util::json::Json;
+use edgefaas::workloads::{
+    generate, install_population_federated, run_population_federated, PopulationReport,
+    PopulationSpec, RunConfig,
+};
+
+// ------------------------------------------------- member-count invariance
+
+const SEED: u64 = 0xFED_5EED;
+const DEVICES: usize = 192;
+const CELLS: usize = 4;
+const DURATION_S: f64 = 15.0;
+
+/// One determinism-mode federated replay of `SEED` on a fresh shared
+/// fleet served by `n` coordinators.
+fn federated_replay(n: usize) -> PopulationReport {
+    let bed = federated_testbed(Arc::new(VirtualClock::new()), n, CELLS, 4);
+    for (k, c) in bed.coordinators.iter().enumerate() {
+        c.set_backpressure(1_000_000, 1_000_000);
+        Federation::enable(c, FederationConfig::new(k as u32, n as u32)).unwrap();
+    }
+    install_population_federated(&bed.coordinators, &bed.executor, &bed.cell_boxes)
+        .expect("install federated population");
+    let schedule = generate(&PopulationSpec::standard(SEED, DEVICES, CELLS, DURATION_S));
+    assert!(!schedule.is_empty(), "population generated no submissions");
+    let report =
+        run_population_federated(&bed.coordinators, &schedule, RunConfig::determinism(None));
+    assert_eq!(report.hung, 0, "replay hung at {n} coordinator(s)");
+    assert_eq!(report.lost, 0, "replay lost run records at {n} coordinator(s)");
+    assert_eq!(
+        report.completed(),
+        report.submitted(),
+        "determinism mode must complete every submission at {n} coordinator(s)"
+    );
+    report
+}
+
+#[test]
+fn federated_replay_is_member_count_invariant() {
+    let single = federated_replay(1);
+    let two = federated_replay(2);
+    assert_eq!(single.schedule_digest, two.schedule_digest);
+    assert_eq!(
+        single.firing_digest, two.firing_digest,
+        "splitting the fleet across 2 coordinators changed replay outcomes"
+    );
+    let again = federated_replay(2);
+    assert_eq!(two.firing_digest, again.firing_digest, "2-coordinator replay not repeatable");
+    let four = federated_replay(4);
+    assert_eq!(
+        single.firing_digest, four.firing_digest,
+        "splitting the fleet across 4 coordinators changed replay outcomes"
+    );
+}
+
+// ---------------------------------------------------- partition degradation
+
+/// Deploy a single-function app under `app` on `bed`, with an
+/// execution-counting handler registered under its own image name.
+fn deploy_counting_app(bed: &TestBed, app: &str) -> Arc<AtomicUsize> {
+    let count = Arc::new(AtomicUsize::new(0));
+    {
+        let count = Arc::clone(&count);
+        bed.executor.register(&format!("img/count-{app}"), move |_: &[u8]| {
+            count.fetch_add(1, Ordering::SeqCst);
+            Ok(br#"{"outputs":[]}"#.to_vec())
+        });
+    }
+    let yaml = format!(
+        "application: {app}\nentrypoint: f\ndag:\n  - name: f\n    affinity:\n      \
+         nodetype: edge\n      affinitytype: data\n    reduce: 1\n"
+    );
+    let mut data = HashMap::new();
+    data.insert("f".to_string(), vec![bed.iot[0]]);
+    bed.faas.configure_application(&yaml, &data).unwrap();
+    bed.faas
+        .deploy_function(app, "f", &FunctionPackage { code: format!("img/count-{app}") })
+        .unwrap();
+    count
+}
+
+/// `fedapp` hashes to member 1 of 2, `asyncdemo` to member 0 (see
+/// `Federation::owner_of_app`). Member 0 relays `fedapp` to member 1 and
+/// serves `asyncdemo` itself; a wire partition toward member 1 must
+/// degrade `fedapp` to a typed 502 without touching `asyncdemo`, and heal
+/// cleanly with zero duplicate executions.
+#[test]
+fn partition_degrades_to_owner_local_and_heals_without_double_execution() {
+    let _guard = faults::test_guard();
+    let owner_bed = paper_testbed(Arc::new(RealClock::new()));
+    let owner_server = EdgeFaasGateway::serve(Arc::clone(&owner_bed.faas), 4).unwrap();
+    let owner_addr = owner_server.addr();
+    Federation::enable(&owner_bed.faas, FederationConfig::new(1, 2)).unwrap();
+    let fedapp_count = deploy_counting_app(&owner_bed, "fedapp");
+
+    let relay_bed = paper_testbed(Arc::new(RealClock::new()));
+    let relay_server = EdgeFaasGateway::serve(Arc::clone(&relay_bed.faas), 4).unwrap();
+    let relay_fed = Federation::enable(
+        &relay_bed.faas,
+        FederationConfig::new(0, 2).peer(1, owner_addr.clone()),
+    )
+    .unwrap();
+    let async_count = deploy_counting_app(&relay_bed, "asyncdemo");
+    let relay = relay_server.addr();
+
+    // Healthy: the relay forwards to the owner, which executes once.
+    let resp = http::post_json(&relay, "/apps/fedapp/run", &Json::obj()).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str().unwrap_or(""));
+    assert_eq!(fedapp_count.load(Ordering::SeqCst), 1);
+
+    // Partition the wire toward the owner.
+    faults::injector().install(17);
+    faults::injector().add_rule(FaultRule::new(owner_addr.clone(), FaultKind::ConnectRefused));
+    let resp = http::post_json(&relay, "/apps/fedapp/run", &Json::obj()).unwrap();
+    assert_eq!(resp.status, 502, "partitioned forward must fail typed");
+    let v = resp.json_body().unwrap();
+    assert_eq!(v.get("owner").unwrap().as_u64(), Some(1));
+    assert_eq!(
+        fedapp_count.load(Ordering::SeqCst),
+        1,
+        "a refused forward must not execute anywhere"
+    );
+    // Owner-local service is unaffected by the partition.
+    let resp = http::post_json(&relay, "/apps/asyncdemo/run", &Json::obj()).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str().unwrap_or(""));
+    assert_eq!(async_count.load(Ordering::SeqCst), 1);
+
+    // Heal: forwarding resumes, and the healthy + healed submissions add
+    // up to exactly one execution each — nothing ran twice.
+    faults::injector().heal(&owner_addr);
+    let resp = http::post_json(&relay, "/apps/fedapp/run", &Json::obj()).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body_str().unwrap_or(""));
+    assert_eq!(fedapp_count.load(Ordering::SeqCst), 2);
+    assert_eq!(relay_fed.forward_counters(), (2, 1));
+    faults::injector().clear();
+}
+
+// ------------------------------------------------- wire steal at-most-once
+
+/// Deploy a single-instance app on `victim` whose handler blocks on a
+/// gate and counts executions.
+fn deploy_gated_app(
+    bed: &FederatedBed,
+    victim: usize,
+    app: &str,
+) -> (Arc<(Mutex<bool>, Condvar)>, Arc<AtomicUsize>) {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let count = Arc::new(AtomicUsize::new(0));
+    {
+        let gate = Arc::clone(&gate);
+        let count = Arc::clone(&count);
+        bed.executor.register(&format!("img/gated-{app}"), move |_: &[u8]| {
+            let (lock, cv) = &*gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            drop(open);
+            count.fetch_add(1, Ordering::SeqCst);
+            Ok(br#"{"outputs":[]}"#.to_vec())
+        });
+    }
+    let yaml = format!(
+        "application: {app}\nentrypoint: f\ndag:\n  - name: f\n    affinity:\n      \
+         nodetype: iot\n      affinitytype: data\n    reduce: 1\n"
+    );
+    let mut data = HashMap::new();
+    data.insert("f".to_string(), vec![bed.cell_boxes[0][0]]);
+    bed.coordinators[victim].configure_application(&yaml, &data).unwrap();
+    bed.coordinators[victim]
+        .deploy_function(app, "f", &FunctionPackage { code: format!("img/gated-{app}") })
+        .unwrap();
+    (gate, count)
+}
+
+#[test]
+fn wire_steal_executes_every_instance_exactly_once() {
+    // Two coordinators over one shared 6-resource fleet, real sockets.
+    let bed = federated_testbed(Arc::new(RealClock::new()), 2, 1, 4);
+    let victim = Arc::clone(&bed.coordinators[0]);
+    let thief = Arc::clone(&bed.coordinators[1]);
+    let victim_server = EdgeFaasGateway::serve(Arc::clone(&victim), 4).unwrap();
+    let _thief_server = EdgeFaasGateway::serve(Arc::clone(&thief), 4).unwrap();
+    Federation::enable(&victim, FederationConfig::new(0, 2)).unwrap();
+    let mut thief_cfg = FederationConfig::new(1, 2).peer(0, victim_server.addr());
+    thief_cfg.steal_threshold = 2;
+    let thief_fed = Federation::enable(&thief, thief_cfg).unwrap();
+
+    // One dispatch shard and one worker on the victim: the first
+    // submission blocks in the gated handler, the rest pile up in a
+    // single queue the thief's depth poll can see.
+    victim.set_engine_shards(1);
+    victim.set_engine_limits(1, 8);
+    let (gate, count) = deploy_gated_app(&bed, 0, "stealapp");
+
+    const RUNS: usize = 8;
+    let ids: Vec<_> = (0..RUNS)
+        .map(|_| victim.submit_workflow("stealapp", &HashMap::new()).unwrap())
+        .collect();
+
+    // The thief polls the victim over the wire, pulls the queued
+    // instances, and re-anchors them — the shared backends make the
+    // attempt cache fleet-wide, so nothing can run twice even if the
+    // victim later reclaimed a loan.
+    let stolen = thief_fed.steal_once();
+    assert!(stolen > 0, "an idle thief facing a deep peer queue must steal");
+    let (_, hits, stolen_total, _, _) = thief_fed.steal_counters();
+    assert_eq!(hits, 1);
+    assert_eq!(stolen_total as usize, stolen);
+
+    // Open the gate: the victim's in-flight work and the thief's stolen
+    // jobs all drain; every run completes on the victim.
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    for id in ids {
+        victim.wait_workflow(id, 120.0).unwrap();
+    }
+    assert_eq!(
+        count.load(Ordering::SeqCst),
+        RUNS,
+        "every instance must execute exactly once across both coordinators"
+    );
+    let (lent, completed, _requeued, _reclaimed, outstanding) = victim.federation_loans();
+    assert_eq!(lent as usize, stolen);
+    assert_eq!(completed, lent, "every loan settled by a thief report");
+    assert_eq!(outstanding, 0);
+}
